@@ -1,0 +1,59 @@
+//! Quickstart: load the AOT artifacts, compare fp16 vs ABQ-quantized
+//! perplexity, and generate a few tokens through the serving scheduler.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::path::Path;
+use std::sync::Arc;
+
+use abq_llm::coordinator::{Request, Server, ServerConfig};
+use abq_llm::eval;
+use abq_llm::model::{Backend, Transformer};
+use abq_llm::quant::WAConfig;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("no artifacts found — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // 1. load the same trained weights on two backends
+    println!("== loading tiny-llama on fp32 and ABQ w2*a8 backends ==");
+    let fp = Transformer::load_artifacts(dir, Backend::Fp32)?;
+    let cfg: WAConfig = "w2*a8".parse().unwrap();
+    let q = Transformer::load_artifacts(dir, Backend::Abq(cfg))?;
+    println!(
+        "block weights: fp32 {:.2} MB -> {cfg} {:.2} MB ({:.1}x compression)",
+        fp.weight_bytes() as f64 / 1e6,
+        q.weight_bytes() as f64 / 1e6,
+        fp.weight_bytes() as f64 / q.weight_bytes() as f64,
+    );
+
+    // 2. held-out perplexity, fp vs quantized (the paper's Table 2 axis)
+    let ppl_fp = eval::perplexity(&fp, 8, 128, eval::corpus::EVAL_SEED)?;
+    let ppl_q = eval::perplexity(&q, 8, 128, eval::corpus::EVAL_SEED)?;
+    println!("held-out PPL: fp {ppl_fp:.3}  |  {cfg} {ppl_q:.3}");
+
+    // 3. serve a generation request through the coordinator
+    println!("== serving one request through the coordinator ==");
+    let server = Server::start(
+        vec![(cfg.tag(), Arc::new(q))],
+        ServerConfig { default_tag: cfg.tag(), ..Default::default() },
+    )?;
+    let table = eval::corpus::build_transition_table(eval::corpus::TABLE_SEED);
+    let prompt = eval::corpus::generate_tokens(&table, 16, 7);
+    let rx = server.submit(Request::new(0, prompt.clone(), 16));
+    let resp = rx.recv()?;
+    println!("prompt ({} tokens): {:?}", prompt.len(), prompt);
+    println!("generated {} tokens: {:?}", resp.tokens.len(), resp.tokens);
+    println!(
+        "timing: queue {}us prefill {}us decode {}us",
+        resp.timing.queue_us, resp.timing.prefill_us, resp.timing.decode_us
+    );
+    server.shutdown();
+    println!("quickstart OK");
+    Ok(())
+}

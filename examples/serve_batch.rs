@@ -1,0 +1,121 @@
+//! End-to-end serving driver (the system-prompt-mandated full-stack
+//! example): loads the trained tiny-llama, serves a synthetic batched
+//! workload through the coordinator on two precision replicas (ABQ w2*a8
+//! and fp16), and reports latency/throughput — the serving analogue of the
+//! paper's Fig. 6 FastTransformer experiment. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_batch [-- --requests 32]
+//! ```
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use abq_llm::coordinator::{Request, Server, ServerConfig};
+use abq_llm::eval;
+use abq_llm::model::{Backend, Transformer};
+use abq_llm::quant::WAConfig;
+use abq_llm::util::cli::Args;
+use abq_llm::util::json::{self, Json};
+use abq_llm::util::rng::SplitMix;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("no artifacts — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let n_requests = args.get_usize("requests", 32);
+    let max_new = args.get_usize("max-new", 24);
+
+    let cfg: WAConfig = args.get_or("config", "w2*a8").parse().unwrap();
+    let q_model = Arc::new(Transformer::load_artifacts(dir, Backend::Abq(cfg))?);
+    let fp_model = Arc::new(Transformer::load_artifacts(dir, Backend::Fp32)?);
+    println!(
+        "replicas: {} ({:.2} MB weights), fp16 ({:.2} MB weights)",
+        cfg.tag(),
+        q_model.weight_bytes() as f64 / 1e6,
+        fp_model.weight_bytes() as f64 / 1e6
+    );
+
+    let server = Server::start(
+        vec![(cfg.tag(), q_model), ("fp16".to_string(), fp_model)],
+        ServerConfig { default_tag: cfg.tag(), ..Default::default() },
+    )?;
+
+    // synthetic workload: corpus prompts, 80% routed to the quantized
+    // replica, 20% to fp16 (mixed-precision serving — "quantization
+    // freedom" in deployment)
+    let table = eval::corpus::build_transition_table(eval::corpus::TABLE_SEED);
+    let mut rng = SplitMix::new(2024);
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..n_requests {
+        let plen = 8 + rng.next_below(24) as usize;
+        let prompt = eval::corpus::generate_tokens(&table, plen, 1000 + i as u64);
+        let mut req = Request::new(0, prompt, max_new);
+        req.config =
+            if rng.next_f64() < 0.8 { cfg.tag() } else { "fp16".to_string() };
+        rxs.push((req.config.clone(), server.submit(req)));
+    }
+    let mut lat_q = Vec::new();
+    let mut lat_fp = Vec::new();
+    let mut total_tokens = 0usize;
+    for (tag, rx) in rxs {
+        let resp = rx.recv()?;
+        total_tokens += resp.tokens.len();
+        if tag == "fp16" {
+            lat_fp.push(resp.timing.total_us());
+        } else {
+            lat_q.push(resp.timing.total_us());
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let stats = |v: &mut Vec<u64>| -> (f64, u64, u64) {
+        if v.is_empty() {
+            return (0.0, 0, 0);
+        }
+        v.sort();
+        let mean = v.iter().sum::<u64>() as f64 / v.len() as f64;
+        (mean, v[v.len() / 2], v[(v.len() * 95 / 100).min(v.len() - 1)])
+    };
+    let (mq, p50q, p95q) = stats(&mut lat_q);
+    let (mf, p50f, p95f) = stats(&mut lat_fp);
+    println!("== workload complete ==");
+    println!("requests: {n_requests} ({} on {}, {} on fp16)", lat_q.len(), cfg.tag(), lat_fp.len());
+    println!("wall time: {wall:.2}s  throughput: {:.1} tok/s", total_tokens as f64 / wall);
+    println!(
+        "latency {}: mean {:.1}ms p50 {:.1}ms p95 {:.1}ms",
+        cfg.tag(), mq / 1e3, p50q as f64 / 1e3, p95q as f64 / 1e3
+    );
+    if !lat_fp.is_empty() {
+        println!(
+            "latency fp16  : mean {:.1}ms p50 {:.1}ms p95 {:.1}ms",
+            mf / 1e3, p50f as f64 / 1e3, p95f as f64 / 1e3
+        );
+    }
+    println!("\nserver metrics:\n{}", server.metrics.snapshot());
+
+    abq_llm::util::bench::write_results(
+        "serve_batch",
+        &json::obj(vec![
+            ("requests", json::num(n_requests as f64)),
+            ("max_new", json::num(max_new as f64)),
+            ("wall_s", json::num(wall)),
+            ("throughput_tok_s", json::num(total_tokens as f64 / wall)),
+            ("quant_mean_ms", json::num(mq / 1e3)),
+            ("fp16_mean_ms", json::num(mf / 1e3)),
+            ("config", json::s(&cfg.to_string())),
+        ]),
+    );
+    server.shutdown();
+    Ok(())
+}
+
+// silence unused-import lint paths when Json isn't directly named
+#[allow(unused)]
+fn _t(_: &Json) {}

@@ -1,0 +1,61 @@
+//! Zero-shot task suite across quantization configs — the paper's
+//! Tables 3 / 8-11 reproduced on the synthetic task suite (DESIGN.md §4).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example zeroshot_eval [-- --items 50]
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use abq_llm::eval::{self, ALL_TASKS};
+use abq_llm::model::{Backend, Transformer};
+use abq_llm::util::bench::write_results;
+use abq_llm::util::cli::Args;
+use abq_llm::util::json::{num, Json};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("no artifacts — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let items = args.get_usize("items", 50);
+
+    let configs: Vec<(&str, Backend)> = vec![
+        ("fp16", Backend::Fp32),
+        ("w8a8", Backend::Abq("w8a8".parse().unwrap())),
+        ("w4a4", Backend::Abq("w4a4".parse().unwrap())),
+        ("w2a8", Backend::Abq("w2a8".parse().unwrap())),
+        ("w2*a8", Backend::Abq("w2*a8".parse().unwrap())),
+    ];
+
+    println!("zero-shot accuracy (%), {items} items/task — paper Tables 3/8-11 shape");
+    print!("{:<8}", "config");
+    for t in ALL_TASKS {
+        print!("{:>18}", eval::task_name(t));
+    }
+    println!("{:>8}", "avg");
+
+    let mut results: BTreeMap<String, Json> = BTreeMap::new();
+    for (name, backend) in configs {
+        let model = Transformer::load_artifacts(dir, backend)?;
+        print!("{name:<8}");
+        let mut accs = BTreeMap::new();
+        let mut total = 0.0;
+        for task in ALL_TASKS {
+            let acc = eval::accuracy(&model, task, items, 11)?;
+            total += acc;
+            print!("{:>17.1}%", acc * 100.0);
+            accs.insert(eval::task_name(task).to_string(), num(acc * 100.0));
+        }
+        let avg = total / ALL_TASKS.len() as f64 * 100.0;
+        println!("{avg:>7.1}%");
+        accs.insert("avg".to_string(), num(avg));
+        results.insert(name.to_string(), Json::Obj(accs));
+    }
+    write_results("table3_zeroshot", &Json::Obj(results));
+    println!("\npaper shape check: fp16 ≥ w8a8 ≥ w4a4, and w2*a8 > w2a8 (bit balance)");
+    Ok(())
+}

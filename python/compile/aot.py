@@ -1,0 +1,312 @@
+"""AOT compile path (`make artifacts`): python runs ONCE here, never at serve
+time.
+
+Produces, under artifacts/:
+  tiny_llama.npz              — trained fp params (python-side reuse)
+  weights.abqw                — binary weight pack for the rust native engine
+                                (fp weights + per-config integer codes/scales
+                                + balance vectors), format documented below
+  model_<cfg>_prefill.hlo.txt — L2 jax forward lowered to HLO TEXT
+  model_<cfg>_decode.hlo.txt  — single-step decode with KV cache params
+  manifest.json               — model config, artifact inventory, parameter
+                                flattening order, calibration summary
+
+HLO *text* is the interchange format (NOT proto serialize()): jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+.abqw binary format (rust/src/model/weights.rs parses this):
+  magic  b"ABQW1\0"
+  u32    n_tensors
+  repeat n_tensors:
+    u16   name_len, name (utf-8)
+    u8    dtype: 0=f32 1=i32 2=u8
+    u8    ndim
+    u32×ndim dims
+    data  (little-endian, C order)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data
+from . import quantizers as Q
+from .calibrate import CalibConfig, calibrate
+from .model import (TINY, ModelConfig, forward, forward_decode,
+                    init_kv_caches, load_params, perplexity,
+                    prepare_weight_qstate, LINEARS)
+
+QUANT_CONFIGS = ["w8a8", "w4a4", "w2*a8"]  # + fp16 implicit
+PREFILL_SEQ = 128
+DECODE_BATCH = 1
+
+
+# ---------------------------------------------------------------------------
+# HLO text lowering
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    """Lower to HLO *text* with constants printed in full.
+
+    Two hard-won gotchas (validated by the python↔rust logit-parity test
+    in rust/tests/integration_artifacts.rs):
+      * `print_large_constants=True` is REQUIRED: the default printer
+        elides big constant arrays as `constant({...})`, which the
+        xla_extension 0.5.1 text parser silently turns into garbage —
+        the trace-time-folded RoPE cos/sin tables were being destroyed;
+      * `compiler_ir("hlo")` (jax's own conversion) is used rather than
+        `mlir_module_to_xla_computation`, keeping parameter order and
+        tuple-ness identical to what jax.jit traced.
+    """
+    comp = lowered.compiler_ir("hlo")
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def flatten_with_names(tree):
+    """Deterministic (name, leaf) list matching jax's tracing order."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    names = []
+    for path, _ in paths:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        names.append(".".join(parts))
+    return names, leaves, treedef
+
+
+# ---------------------------------------------------------------------------
+# .abqw writer
+# ---------------------------------------------------------------------------
+
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1,
+           np.dtype(np.uint8): 2}
+
+
+def write_abqw(path: str, tensors: dict[str, np.ndarray]):
+    with open(path, "wb") as f:
+        f.write(b"ABQW1\0")
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            code = _DTYPES[arr.dtype]
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+# ---------------------------------------------------------------------------
+# main export
+# ---------------------------------------------------------------------------
+
+def ensure_trained(art: str, steps: int) -> dict:
+    npz = os.path.join(art, "tiny_llama.npz")
+    if not os.path.exists(npz):
+        from .train_tiny import train
+        print("[aot] training tiny_llama ...", flush=True)
+        train(steps=steps, out=npz)
+    return load_params(npz, TINY)
+
+
+def calibrated_qstates(params, art: str):
+    """ABQ-calibrate each exported quant config (cached as npz)."""
+    calib = data.generate_tokens(16 * 64, seed=7).reshape(16, 64)
+    out = {}
+    for cfgname in QUANT_CONFIGS:
+        wa = Q.WAConfig.parse(cfgname)
+        print(f"[aot] calibrating {cfgname} ...", flush=True)
+        qs = calibrate(params, TINY, wa, calib, method="abq",
+                       cal=CalibConfig(epochs=6), verbose=True)
+        out[cfgname] = qs
+    return out
+
+
+def prepared_for_kernel(params, qstates):
+    """Bake calibrated states into integer codes per config."""
+    prepared = {}
+    for cfgname, qs in qstates.items():
+        wa = Q.WAConfig.parse(cfgname)
+        blocks = []
+        for blk, bqs in zip(params["blocks"], qs):
+            entry = {}
+            for name in LINEARS:
+                entry[name] = prepare_weight_qstate(
+                    blk[name], wa, bqs.get(name) if bqs else None)
+            blocks.append(entry)
+        prepared[cfgname] = blocks
+    return prepared
+
+
+def export_weights(art, params, prepared, qstates):
+    tensors: dict[str, np.ndarray] = {}
+    tensors["tok_emb"] = np.asarray(params["tok_emb"], np.float32)
+    tensors["ln_f"] = np.asarray(params["ln_f"], np.float32)
+    tensors["head"] = np.asarray(params["head"], np.float32)
+    for i, blk in enumerate(params["blocks"]):
+        for k in ("ln1", "ln2", *LINEARS):
+            tensors[f"blocks.{i}.{k}"] = np.asarray(blk[k], np.float32)
+    for cfgname, blocks in prepared.items():
+        tag = cfgname.replace("*", "s")
+        for i, entry in enumerate(blocks):
+            for name, st in entry.items():
+                base = f"q.{tag}.{i}.{name}"
+                tensors[f"{base}.wq"] = np.asarray(st["wq"], np.int32).astype(np.uint8)
+                tensors[f"{base}.zw"] = np.asarray(st["zw"], np.int32)
+                tensors[f"{base}.dw"] = np.asarray(st["dw"], np.float32)
+                if "s" in st:
+                    tensors[f"{base}.s"] = np.asarray(st["s"], np.float32)
+    path = os.path.join(art, "weights.abqw")
+    write_abqw(path, tensors)
+    print(f"[aot] wrote {path} ({os.path.getsize(path)/1e6:.1f} MB, "
+          f"{len(tensors)} tensors)")
+    return sorted(tensors)
+
+
+def lower_artifacts(art, params, prepared):
+    manifest_art = []
+
+    def dump(name, lowered, in_names):
+        text = to_hlo_text(lowered)
+        path = os.path.join(art, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_art.append({
+            "name": name, "path": os.path.basename(path),
+            "inputs": in_names,
+        })
+        print(f"[aot] lowered {name} ({len(text)/1e6:.2f} MB text)")
+
+    tok_spec = jax.ShapeDtypeStruct((1, PREFILL_SEQ), jnp.int32)
+    tok1_spec = jax.ShapeDtypeStruct((DECODE_BATCH, 1), jnp.int32)
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    params_spec = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+    kv_spec = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+        init_kv_caches(TINY, DECODE_BATCH))
+
+    # ---- fp16 (f32 on this testbed) ----
+    def fp_prefill(p, toks):
+        return (forward(p, toks, TINY),)
+
+    def fp_decode(p, toks, kv, pos):
+        logits, kvn = forward_decode(p, toks, kv, pos, TINY)
+        return (logits, kvn)
+
+    names_p, _, _ = flatten_with_names(params)
+    dump("model_fp16_prefill",
+         jax.jit(fp_prefill).lower(params_spec, tok_spec),
+         ["params:" + n for n in names_p] + ["tokens"])
+    names_kv, _, _ = flatten_with_names(init_kv_caches(TINY, DECODE_BATCH))
+    dump("model_fp16_decode",
+         jax.jit(fp_decode).lower(params_spec, tok1_spec, kv_spec, pos_spec),
+         ["params:" + n for n in names_p] + ["tokens"]
+         + ["kv:" + n for n in names_kv] + ["pos"])
+
+    # ---- quantized configs: kernel path (L1 pallas inside) ----
+    # NOTE: in kernel mode the fp projection weights are unused, and jax
+    # drops unused arguments from the lowered HLO signature. The manifest
+    # must list the *kept* parameters only (sorted-key flatten order):
+    # per block ln1+ln2, then head, ln_f, tok_emb.
+    names_p_used = (
+        [f"blocks.{i}.{k}" for i in range(TINY.n_layers) for k in ("ln1", "ln2")]
+        + ["head", "ln_f", "tok_emb"]
+    )
+    for cfgname, blocks in prepared.items():
+        wa = Q.WAConfig.parse(cfgname)
+        tag = cfgname.replace("*", "s")
+        qspec = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), blocks)
+
+        def q_prefill(p, qs, toks, wa=wa):
+            return (forward(p, toks, TINY, mode="kernel", wa=wa, qstate=qs),)
+
+        def q_decode(p, qs, toks, kv, pos, wa=wa):
+            logits, kvn = forward_decode(p, toks, kv, pos, TINY,
+                                         mode="kernel", wa=wa, qstate=qs)
+            return (logits, kvn)
+
+        names_q, _, _ = flatten_with_names(blocks)
+        dump(f"model_{tag}_prefill",
+             jax.jit(q_prefill).lower(params_spec, qspec, tok_spec),
+             ["params:" + n for n in names_p_used]
+             + ["qstate:" + n for n in names_q] + ["tokens"])
+        dump(f"model_{tag}_decode",
+             jax.jit(q_decode).lower(params_spec, qspec, tok1_spec,
+                                     kv_spec, pos_spec),
+             ["params:" + n for n in names_p_used]
+             + ["qstate:" + n for n in names_q] + ["tokens"]
+             + ["kv:" + n for n in names_kv] + ["pos"])
+    return manifest_art
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", type=str, default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=400)
+    ap.add_argument("--skip-hlo", action="store_true",
+                    help="only weights + calibration (fast iteration)")
+    args = ap.parse_args()
+    art = os.path.abspath(args.out)
+    os.makedirs(art, exist_ok=True)
+    t0 = time.time()
+
+    params = ensure_trained(art, args.train_steps)
+    eval_b = data.batches(data.generate_tokens(8 * 8 * 129, seed=999), 8, 128)
+    fp_ppl = perplexity(params, eval_b, TINY)
+    print(f"[aot] fp model held-out PPL {fp_ppl:.3f}")
+
+    qstates = calibrated_qstates(params, art)
+    prepared = prepared_for_kernel(params, qstates)
+    tensor_names = export_weights(art, params, prepared, qstates)
+
+    arts = [] if args.skip_hlo else lower_artifacts(art, params, prepared)
+
+    manifest = {
+        "model": {
+            "vocab": TINY.vocab, "d_model": TINY.d_model,
+            "n_layers": TINY.n_layers, "n_heads": TINY.n_heads,
+            "d_ff": TINY.d_ff, "max_seq": TINY.max_seq,
+            "rope_base": TINY.rope_base,
+            "param_count": TINY.param_count(),
+        },
+        "fp_ppl": fp_ppl,
+        "quant_configs": [
+            {"name": c, "tag": c.replace("*", "s"),
+             "w_bits": Q.WAConfig.parse(c).weight.bits,
+             "w_planes": Q.WAConfig.parse(c).weight.planes,
+             "a_bits": Q.WAConfig.parse(c).act.bits,
+             "balanced": Q.WAConfig.parse(c).weight.balanced}
+            for c in QUANT_CONFIGS],
+        "prefill_seq": PREFILL_SEQ,
+        "decode_batch": DECODE_BATCH,
+        "artifacts": arts,
+        "corpus": {"vocab": data.VOCAB, "table_seed": 0xAB9,
+                   "eval_seed": 999, "branch": data.BRANCH},
+        "weights": tensor_names,
+    }
+    with open(os.path.join(art, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] done in {time.time()-t0:.0f}s -> {art}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,208 @@
+"""ABQ-LLM block-wise calibration (paper §3.1-§3.3, Eq. 1-5).
+
+For every transformer block, sequentially:
+
+  1. collect the block's fp input stream  X_fp  (clean)   and the quantized
+     input stream X_q (output of already-calibrated quantized blocks);
+  2. learn, with AdamW:
+       * per-linear balance vectors  s   (init = SmoothQuant rule)
+       * per-linear clipping params  α, β (init = 1)
+       * distribution-compensation vectors a, b for `down` of the first and
+         last block (init a=1, b=0 → a·bᵀ = 0), per Eq. (3)
+     against   L = L_DLC + L_AKL            (Eq. 5)
+       L_DLC = -log cos(d_q, d_fp) - log cos(d_q, d_fp*)        (Eq. 2)
+       L_AKL = KL(attn_q ‖ attn_fp) + KL(attn_fp ‖ attn_q)      (Eq. 4)
+  3. advance both streams.
+
+Baselines implemented on the same scaffolding (same data, same quantizers):
+  * rtn         — no smoothing, no learning (round-to-nearest)
+  * smoothquant — closed-form s (migration 0.5), no learning
+  * omniquant   — learnable s + α/β but plain MSE block loss (no DLC/AKL,
+                  no compensation): isolates the contribution of our losses
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quantizers as Q
+from .model import (ModelConfig, block_forward, causal_mask, rope_tables,
+                    rmsnorm, LINEARS)
+from .optim import adamw_init, adamw_update
+
+CALIB_SEED = 42
+
+
+@dataclass
+class CalibConfig:
+    epochs: int = 8
+    lr_s: float = 5e-3        # balance vectors (paper: 5e-3)
+    lr_ab: float = 1e-2       # clipping + compensation (paper: 1e-2)
+    samples: int = 16         # calibration sequences (paper: 128 × 2048)
+    seq: int = 64
+    migration: float = 0.5    # smoothquant init exponent
+    use_dlc: bool = True
+    use_akl: bool = True
+    use_comp: bool = True     # compensation vectors on first/last blocks
+    quant_attn: bool = False
+
+
+def _embed(params, tokens):
+    return params["tok_emb"][tokens]
+
+
+def collect_act_stats(blk, x, cos, sin, cfg, mask):
+    """Per-linear input abs-max over the calibration stream (for s init)."""
+    cap: dict = {}
+    block_forward(blk, x, cos, sin, cfg, mode="fp", mask=mask, capture=cap)
+    return {name: jnp.max(jnp.abs(v.reshape(-1, v.shape[-1])), axis=0)
+            for name, v in cap.items()}
+
+
+def init_qstate_for_block(blk, stats, wa: Q.WAConfig, cal: CalibConfig,
+                          with_comp: bool):
+    """Learnable parameter pytree for one block."""
+    qs = {}
+    for name in LINEARS:
+        w = blk[name]
+        w_absmax = jnp.max(jnp.abs(w), axis=0)  # per input channel
+        s = Q.smooth_scales(stats[name], w_absmax, cal.migration)
+        entry = {"s": s, "alpha": jnp.array(1.0), "beta": jnp.array(1.0)}
+        if with_comp and name == "down":
+            entry["comp_a"] = jnp.ones(w.shape[0], jnp.float32) * 1e-4
+            entry["comp_b"] = jnp.zeros(w.shape[1], jnp.float32)
+        qs[name] = entry
+    return qs
+
+
+def dlc_loss(d_q, d_fp, d_fp_star):
+    """Eq. (2): double log-cosine distribution-correction loss (per token)."""
+    def logcos(a, b):
+        a2 = a.reshape(-1, a.shape[-1])
+        b2 = b.reshape(-1, b.shape[-1])
+        num = jnp.sum(a2 * b2, axis=-1)
+        den = jnp.linalg.norm(a2, axis=-1) * jnp.linalg.norm(b2, axis=-1)
+        cos = jnp.clip(num / jnp.maximum(den, 1e-8), 1e-4, 1.0)
+        return -jnp.mean(jnp.log(cos))
+    return logcos(d_q, d_fp) + logcos(d_q, d_fp_star)
+
+
+def akl_loss(attn_q, attn_fp, eps=1e-8):
+    """Eq. (4): symmetric attention-map KL."""
+    p = attn_fp + eps
+    q = attn_q + eps
+    kl_pq = jnp.sum(p * (jnp.log(p) - jnp.log(q)), axis=-1)
+    kl_qp = jnp.sum(q * (jnp.log(q) - jnp.log(p)), axis=-1)
+    return jnp.mean(kl_pq + kl_qp)
+
+
+def mse_loss(d_q, d_fp):
+    return jnp.mean((d_q - d_fp) ** 2)
+
+
+def calibrate(params, cfg: ModelConfig, wa: Q.WAConfig, calib_tokens,
+              method: str = "abq", cal: CalibConfig | None = None,
+              verbose: bool = True):
+    """Run block-wise calibration.
+
+    calib_tokens: [num_samples, seq] int array.
+    Returns qstate: list per block of per-linear dicts (jnp arrays), ready
+    for model.forward(mode='fake') or prepare_weight_qstate -> kernel path.
+    """
+    cal = cal or CalibConfig()
+    tokens = jnp.array(np.asarray(calib_tokens)[: cal.samples, : cal.seq])
+    S = tokens.shape[1]
+    cos, sin = rope_tables(cfg, jnp.arange(S))
+    mask = causal_mask(S)
+
+    x_fp = _embed(params, tokens)
+    x_q = x_fp
+    qstate_out = []
+    t0 = time.time()
+
+    for i, blk in enumerate(params["blocks"]):
+        if method == "rtn":
+            qstate_out.append(None)
+            x_fp, _, _ = block_forward(blk, x_fp, cos, sin, cfg, mode="fp",
+                                       mask=mask)
+            x_q, _, _ = block_forward(blk, x_q, cos, sin, cfg, mode="fake",
+                                      wa=wa, qstate=None, mask=mask)
+            continue
+
+        stats = collect_act_stats(blk, x_q, cos, sin, cfg, mask)
+        with_comp = (cal.use_comp and method == "abq"
+                     and i in (0, cfg.n_layers - 1))
+        qs = init_qstate_for_block(blk, stats, wa, cal, with_comp)
+
+        if method == "smoothquant":
+            # closed-form s only; drop learnables
+            qs = {name: {"s": qs[name]["s"]} for name in LINEARS}
+            qstate_out.append(qs)
+            x_fp, _, _ = block_forward(blk, x_fp, cos, sin, cfg, mode="fp",
+                                       mask=mask)
+            x_q, _, _ = block_forward(blk, x_q, cos, sin, cfg, mode="fake",
+                                      wa=wa, qstate=qs, mask=mask)
+            continue
+
+        # targets (constant w.r.t. the learnables)
+        d_fp, attn_fp, _ = block_forward(blk, x_fp, cos, sin, cfg, mode="fp",
+                                         mask=mask, want_attn=True)
+        d_fp_star, _, _ = block_forward(blk, x_q, cos, sin, cfg, mode="fp",
+                                        mask=mask)
+
+        def loss_fn(qs_, blk_=blk, x_q_=x_q, d_fp_=d_fp,
+                    d_fp_star_=d_fp_star, attn_fp_=attn_fp):
+            d_q, attn_q, _ = block_forward(blk_, x_q_, cos, sin, cfg,
+                                           mode="fake", wa=wa, qstate=qs_,
+                                           mask=mask, want_attn=True)
+            if method == "omniquant":
+                return mse_loss(d_q, d_fp_)
+            loss = 0.0
+            if cal.use_dlc:
+                loss = loss + dlc_loss(d_q, d_fp_, d_fp_star_)
+            else:
+                loss = loss + mse_loss(d_q, d_fp_)
+            if cal.use_akl:
+                loss = loss + akl_loss(attn_q, attn_fp_)
+            return loss
+
+        # two AdamW groups: s at lr_s; alpha/beta/comp at lr_ab
+        opt = adamw_init(qs)
+        grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+        def lr_tree(qs_):
+            return jax.tree_util.tree_map_with_path(
+                lambda path, _: cal.lr_s
+                if any(getattr(p, "key", None) == "s" for p in path)
+                else cal.lr_ab, qs_)
+
+        lrs = lr_tree(qs)
+        last = None
+        for ep in range(cal.epochs):
+            loss, grads = grad_fn(qs)
+            # per-group lr: scale grads so a single adamw lr works
+            qs_new, opt = adamw_update(grads, opt, qs, 1.0)
+            # adamw_update applied lr=1; rescale step by the group lr
+            qs = jax.tree_util.tree_map(
+                lambda old, new, lr: old + (new - old) * lr, qs, qs_new, lrs)
+            last = float(loss)
+        qstate_out.append(qs)
+        if verbose:
+            print(f"  [calibrate/{method}] block {i}: loss {last:.5f} "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+
+        x_fp, _, _ = block_forward(blk, x_fp, cos, sin, cfg, mode="fp",
+                                   mask=mask)
+        x_q, _, _ = block_forward(blk, x_q, cos, sin, cfg, mode="fake",
+                                  wa=wa, qstate=qs, mask=mask)
+
+    return qstate_out
+
+
+def qstate_stop_gradients(qstate):
+    """Detach all learned tensors (post-calibration)."""
+    return jax.tree_util.tree_map(jax.lax.stop_gradient, qstate)

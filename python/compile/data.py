@@ -1,0 +1,153 @@
+"""Synthetic language-like corpus shared between python (training/calibration)
+and rust (`eval::corpus` mirrors the same construction and seed).
+
+WikiText2/C4 are not available in this environment; the corpus below is the
+documented substitution (DESIGN.md §4). It is a two-level Markov process:
+
+  * a Zipfian unigram backbone (rank-frequency ~ 1/rank), which gives the
+    vocabulary the heavy-tailed shape real text has;
+  * a sparse first-order transition structure (each token strongly predicts
+    a small successor set), which gives a trained model something real to
+    learn, so that quantization-induced damage is measurable as a PPL gap;
+  * sentence templates (BOS ... EOS) so attention has an anchor token —
+    needed to reproduce the paper's attention-sink observation (Fig. 2).
+
+The generator is a deterministic function of (seed, vocab); rust re-implements
+it bit-for-bit (splitmix64 + the same construction) so both sides evaluate
+perplexity on the same distribution.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+BOS = 0  # attention-sink anchor, also sentence separator
+VOCAB = 512
+BRANCH = 4      # successors per token in the sparse transition structure
+FOLLOW = 0.92   # probability of following the sparse transition
+RESTART_POOL = 64  # sentence-start tokens are drawn from a small pool
+
+
+def _splitmix64(state: int) -> tuple[int, int]:
+    """Deterministic PRNG mirrored in rust/src/eval/corpus.rs."""
+    state = (state + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    z = z ^ (z >> 31)
+    return state, z
+
+
+class SplitMix:
+    def __init__(self, seed: int):
+        self.state = seed & 0xFFFFFFFFFFFFFFFF
+
+    def next_u64(self) -> int:
+        self.state, z = _splitmix64(self.state)
+        return z
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_below(self, n: int) -> int:
+        return self.next_u64() % n
+
+
+def build_transition_table(seed: int = 0xAB9, vocab: int = VOCAB,
+                           branch: int = BRANCH) -> tuple[np.ndarray, np.ndarray]:
+    """Per-token successor sets and their (normalised cumulative) probabilities.
+
+    Successors are drawn Zipf-weighted, so frequent tokens are frequent
+    successors too. Returns (succ[vocab, branch] int32, cum[vocab, branch] f64).
+    """
+    rng = SplitMix(seed)
+    zipf = 1.0 / np.arange(1, vocab + 1, dtype=np.float64)
+    zipf /= zipf.sum()
+    succ = np.zeros((vocab, branch), dtype=np.int32)
+    cum = np.zeros((vocab, branch), dtype=np.float64)
+    for t in range(vocab):
+        probs = np.zeros(branch, dtype=np.float64)
+        for b in range(branch):
+            # inverse-cdf sample from the zipf backbone, deterministic
+            u = rng.next_f64()
+            # cheap inverse: zipf cdf ~ log; do linear scan over a coarse grid
+            # (vocab is small so exact scan is fine)
+            c = 0.0
+            pick = vocab - 1
+            for v in range(vocab):
+                c += zipf[v]
+                if u <= c:
+                    pick = v
+                    break
+            succ[t, b] = max(pick, 1)  # successors never BOS
+            # heavily skewed successor probabilities (rank^-1.5): keeps the
+            # per-token entropy low so a trained model is *sharp* and
+            # quantization damage is measurable (DESIGN.md §4)
+            probs[b] = (b + 1.0) ** -1.5
+        probs /= probs.sum()
+        cum[t] = np.cumsum(probs)
+    return succ, cum
+
+
+_TABLE_CACHE: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+
+
+def _table(seed: int) -> tuple[np.ndarray, np.ndarray]:
+    if seed not in _TABLE_CACHE:
+        _TABLE_CACHE[seed] = build_transition_table(seed)
+    return _TABLE_CACHE[seed]
+
+
+def generate_tokens(n_tokens: int, seed: int = 1, table_seed: int = 0xAB9,
+                    sentence_len: int = 32, vocab: int = VOCAB) -> np.ndarray:
+    """Generate a token stream: BOS-anchored sentences over the Markov table.
+
+    Transitions are *topic-conditioned*: the effective table row is
+    `1 + (cur-1 + topic-1) mod (vocab-1)` where `topic` is the sentence's
+    first token (right after BOS). A bigram model cannot predict this —
+    the transformer must attend back to the sentence start, which (a) makes
+    the learned function depend on working attention (so quantization
+    damage is measurable, unlike a pure-bigram corpus) and (b) reproduces
+    the paper's first-token attention-sink structure (Fig. 2).
+    """
+    succ, cum = _table(table_seed)
+    rng = SplitMix(seed)
+    out = np.zeros(n_tokens, dtype=np.int32)
+    cur = BOS
+    topic = 1
+    pos_in_sent = 0
+    for i in range(n_tokens):
+        if pos_in_sent == 0:
+            out[i] = BOS
+            topic = 1 + rng.next_below(RESTART_POOL)  # sentence topic token
+            cur = topic
+            pos_in_sent = 1
+            continue
+        out[i] = cur
+        # FOLLOW: sparse topic-conditioned transition; else random restart
+        if rng.next_f64() < FOLLOW:
+            state = 1 + ((cur - 1) + (topic - 1)) % (vocab - 1)
+            u = rng.next_f64()
+            row = cum[state]
+            b = int(np.searchsorted(row, u))
+            b = min(b, row.shape[0] - 1)
+            cur = int(succ[state, b])
+        else:
+            cur = 1 + rng.next_below(vocab - 1)
+        pos_in_sent += 1
+        if pos_in_sent >= sentence_len:
+            pos_in_sent = 0
+    return out
+
+
+def batches(tokens: np.ndarray, batch: int, seq: int) -> np.ndarray:
+    """Chop a stream into [num, batch, seq+1] (inputs+targets) blocks."""
+    per = batch * (seq + 1)
+    num = len(tokens) // per
+    return tokens[: num * per].reshape(num, batch, seq + 1)
+
+
+def train_eval_split(n_train: int, n_eval: int, seq: int, batch: int):
+    """The canonical corpus split used by trainer, calibrator and evaluators."""
+    train = generate_tokens(n_train, seed=1)
+    evalt = generate_tokens(n_eval, seed=999)  # held out stream
+    return batches(train, batch, seq), batches(evalt, batch, seq)

@@ -1,0 +1,153 @@
+"""L1 Pallas kernel: arbitrary-bit quantized matmul via bit-plane decomposition.
+
+This is the paper's ABQKernel (§3.4, Appendix B) re-thought for TPU:
+
+  * the GPU version packs bit-planes into global memory ([p, M, K] layout)
+    and feeds Binary TensorCore BMMA (m8n8k128 AND+popc) per (s, t) plane
+    pair, then does Bit Reduction `Y = Σ 2^{s+t} Y^{s,t}` in shared memory;
+  * on TPU there is no 1-bit MAC, but the MXU eats int/fp matmuls of {0,1}
+    planes at full rate, so the same decomposition maps each (s, t) plane
+    pair to one MXU pass over a VMEM-resident tile. BlockSpec expresses the
+    HBM→VMEM schedule that threadblock tiling expressed on the GPU; the
+    plane loop is unrolled inside the kernel so the Bit Reduction accumulator
+    lives in registers/VMEM, exactly like the GPU's c-fragment epilogue.
+
+The kernel is exact integer arithmetic (accumulates in int32), so pytest
+asserts bit-identical equality with kernels/ref.py.
+
+Pallas runs with interpret=True: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO that both the python
+tests and the rust runtime execute. Real-TPU perf is *estimated* in
+DESIGN.md §9 from the VMEM footprint / MXU pass count.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: the "thread block tile" of the paper. On TPU these would be
+# MXU-aligned (128); in interpret mode they just bound the VMEM working set.
+DEFAULT_BM = 64
+DEFAULT_BN = 64
+
+
+def _abq_kernel(xq_ref, wq_ref, zx_ref, zw_ref, out_ref, *, p_bits, q_bits):
+    """One (BM, BN) output tile. K is kept whole per tile (fits VMEM for the
+    layer shapes we lower; the BlockSpec index_map streams M/N).
+
+    xq_ref: [BM, K] unsigned activation codes (int32)
+    wq_ref: [BN, K] unsigned weight codes (int32)
+    zx_ref: [BM, 1] per-token zero points (int32)
+    zw_ref: [BN, 1] per-channel zero points (int32)
+    out_ref:[BM, BN] int32 integer product
+    """
+    xq = xq_ref[...]
+    wq = wq_ref[...]
+    k = xq.shape[-1]
+
+    acc = jnp.zeros(out_ref.shape, dtype=jnp.int32)
+    # --- the p×q BMMA superposition (unrolled: p_bits/q_bits are static) ---
+    for s in range(p_bits):
+        xs = ((xq >> s) & 1).astype(jnp.int32)
+        for t in range(q_bits):
+            wt = ((wq >> t) & 1).astype(jnp.int32)
+            # BMMA(Xs, Wt): {0,1}×{0,1} matmul == popcount(AND) per (m, n).
+            bmma = jax.lax.dot_general(
+                xs, wt,
+                dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+            # --- Bit Reduction: scale by 2^(s+t) while accumulating ---
+            acc = acc + (bmma << (s + t))
+
+    # --- zero-point correction (the engine's epilogue) ---
+    zx = zx_ref[...]            # [BM, 1]
+    zw = zw_ref[...]            # [BN, 1]
+    xsum = jnp.sum(xq, axis=1, keepdims=True, dtype=jnp.int32)   # [BM, 1]
+    wsum = jnp.sum(wq, axis=1, keepdims=True, dtype=jnp.int32)   # [BN, 1]
+    acc = acc - zx * wsum.T - xsum * zw.T + jnp.int32(k) * zx * zw.T
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("p_bits", "q_bits", "bm", "bn"))
+def abq_matmul_int(xq, wq, zx, zw, *, p_bits, q_bits,
+                   bm=DEFAULT_BM, bn=DEFAULT_BN):
+    """Integer ABQ matmul: codes -> int32 product with zero-point correction.
+
+    xq: [M, K] int32 unsigned codes (p_bits wide)
+    wq: [N, K] int32 unsigned codes (q_bits wide)
+    zx: [M] int32, zw: [N] int32
+    returns [M, N] int32
+    """
+    m, k = xq.shape
+    n, _ = wq.shape
+    bm = min(bm, m)
+    bn = min(bn, n)
+    # pad M/N to tile multiples (K stays whole)
+    mp = (m + bm - 1) // bm * bm
+    np_ = (n + bn - 1) // bn * bn
+    xq_p = jnp.pad(xq, ((0, mp - m), (0, 0)))
+    wq_p = jnp.pad(wq, ((0, np_ - n), (0, 0)))
+    zx_p = jnp.pad(zx.reshape(-1, 1), ((0, mp - m), (0, 0)))
+    zw_p = jnp.pad(zw.reshape(-1, 1), ((0, np_ - n), (0, 0)))
+
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        functools.partial(_abq_kernel, p_bits=p_bits, q_bits=q_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(xq_p.astype(jnp.int32), wq_p.astype(jnp.int32),
+      zx_p.astype(jnp.int32), zw_p.astype(jnp.int32))
+    return out[:m, :n]
+
+
+def abq_matmul_fp(xq, wq, zx, zw, dx, dw, *, p_bits, q_bits,
+                  bm=DEFAULT_BM, bn=DEFAULT_BN):
+    """Dequantized ABQ matmul: Y = dx ⊙ Y_int ⊙ dw (per-token × per-channel)."""
+    yint = abq_matmul_int(xq, wq, zx, zw, p_bits=p_bits, q_bits=q_bits,
+                          bm=bm, bn=bn)
+    return yint.astype(jnp.float32) * dx[:, None] * dw[None, :]
+
+
+def quantize_act_per_token(x, bits):
+    """Dynamic per-token activation quantization to unsigned codes.
+
+    Matches quantizers.fake_quant_act but returns the integer pieces the
+    kernel consumes: (codes int32 [M,K], zp int32 [M], delta f32 [M]).
+    """
+    lo = jnp.minimum(jnp.min(x, axis=-1), 0.0)
+    hi = jnp.maximum(jnp.max(x, axis=-1), 0.0)
+    n = (1 << bits) - 1
+    delta = jnp.maximum((hi - lo) / n, 1e-8)
+    zp = jnp.clip(jnp.round(-lo / delta), 0, n).astype(jnp.int32)
+    q = jnp.clip(jnp.round(x / delta[:, None]) + zp[:, None], 0, n)
+    return q.astype(jnp.int32), zp, delta
+
+
+def quantized_linear(x, wq, zw, dw, *, w_bits, a_bits,
+                     balance=None, w_planes=None):
+    """Full quantized linear on the artifact path: dynamic per-token act
+    quant -> pallas integer kernel -> dequant.
+
+    x: [M, K] f32 activations; wq/zw/dw: prepared weight codes/zps/scales
+    balance: optional per-channel balance vector s (activations divided by s
+             *before* quantization — the calibrated Eq. (1) rewrite).
+    w_planes: stored plane count for balanced weights (3 for w2*).
+    """
+    if balance is not None:
+        x = x / balance[None, :]
+    xq, zx, dx = quantize_act_per_token(x, a_bits)
+    q_bits = w_planes if w_planes is not None else w_bits
+    return abq_matmul_fp(xq, wq, zx, zw, dx, dw,
+                         p_bits=a_bits, q_bits=q_bits)

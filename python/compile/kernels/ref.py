@@ -1,0 +1,66 @@
+"""Pure-jnp oracle for the arbitrary-bit quantized matmul.
+
+The ABQ contract (paper Appendix B, Eq. 8-10): given unsigned activation
+codes Xq [M, K] (p-bit, zero point zx per token) and unsigned weight codes
+Wq [N, K] (q-bit, zero point zw per channel),
+
+    Y_int[m, n] = sum_k (Xq[m,k] - zx[m]) * (Wq[n,k] - zw[n])
+    Y_fp  [m,n] = dx[m] * dw[n] * Y_int[m,n]
+
+The engine computes Y_int as a superposition of 1-bit matmuls:
+
+    Y_int = sum_{s<p} sum_{t<q} 2^{s+t} BMMA(Xs, Wt)
+            - zx * rowsum(Wq) - zw * rowsum(Xq) + K * zx * zw
+
+This module provides both the *direct* integer reference (used as the
+correctness oracle for the Pallas kernel and the rust engine) and the
+*decomposed* reference (used to validate the decomposition algebra itself).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quant_matmul_int(xq, wq, zx, zw):
+    """Direct integer oracle.
+
+    xq: [M, K] unsigned codes (int32); wq: [N, K] unsigned codes (int32)
+    zx: [M] per-token zero points;     zw: [N] per-channel zero points
+    returns Y_int [M, N] int32
+    """
+    xq = xq.astype(jnp.int32)
+    wq = wq.astype(jnp.int32)
+    xc = xq - zx.astype(jnp.int32)[:, None]
+    wc = wq - zw.astype(jnp.int32)[:, None]
+    return xc @ wc.T
+
+
+def quant_matmul_decomposed(xq, wq, zx, zw, p_bits, q_bits):
+    """Bit-plane decomposed reference — Eq. (8)-(10) executed literally.
+
+    Every plane matmul BMMA(Xs, Wt) is an AND-accumulate over {0,1} planes,
+    exactly what a Binary TensorCore computes.
+    """
+    xq = xq.astype(jnp.int32)
+    wq = wq.astype(jnp.int32)
+    m, k = xq.shape
+    n, _ = wq.shape
+    acc = jnp.zeros((m, n), dtype=jnp.int32)
+    for s in range(p_bits):
+        xs = (xq >> s) & 1
+        for t in range(q_bits):
+            wt = (wq >> t) & 1
+            bmma = xs @ wt.T  # popcount(AND) == dot of {0,1} vectors
+            acc = acc + (bmma << (s + t))
+    k_ = jnp.int32(k)
+    zx_i = zx.astype(jnp.int32)[:, None]
+    zw_i = zw.astype(jnp.int32)[None, :]
+    xsum = jnp.sum(xq, axis=1, dtype=jnp.int32)[:, None]
+    wsum = jnp.sum(wq, axis=1, dtype=jnp.int32)[None, :]
+    return acc - zx_i * wsum - zw_i * xsum + k_ * zx_i * zw_i
+
+
+def quant_matmul_fp(xq, wq, zx, zw, dx, dw):
+    """Dequantized output: dx per token [M], dw per channel [N]."""
+    yint = quant_matmul_int(xq, wq, zx, zw)
+    return yint.astype(jnp.float32) * dx[:, None] * dw[None, :]

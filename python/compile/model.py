@@ -1,0 +1,362 @@
+"""L2: tiny-LLaMA in JAX — the paper's model substrate.
+
+Architecturally a faithful LLaMA block (RMSNorm → MHA with RoPE → residual →
+RMSNorm → SwiGLU MLP → residual), scaled down (DESIGN.md §4) so it can be
+trained from scratch here and quantized with measurable damage.
+
+Three execution modes per linear layer:
+  * 'fp'     — float path
+  * 'fake'   — fake-quant (straight-through), used by the calibrator; fully
+               differentiable w.r.t. balance vector s, clipping α/β and the
+               compensation vectors a, b (paper Eq. 1-3)
+  * 'kernel' — integer path through the L1 Pallas kernel (bit-plane BMMA
+               superposition); this is what the AOT artifacts contain
+
+The *same* quantization state (per-linear s/α/β/comp + W codes) drives both
+the 'fake' and 'kernel' paths, and rust/src/model re-implements 'kernel'
+bit-for-bit on the native engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quantizers as Q
+from .kernels import abq_matmul as K
+
+LINEARS = ("wq", "wk", "wv", "wo", "gate", "up", "down")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_ff: int = 704          # ~ 8/3 * d, multiple of 64
+    max_seq: int = 256
+    rope_base: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        per_block = 4 * d * d + 3 * d * f + 2 * d
+        return v * d + self.n_layers * per_block + d + d * v
+
+
+TINY = ModelConfig()
+
+
+# ---------------------------------------------------------------------------
+# init / params
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, cfg.n_layers * 8 + 3)
+    i = 0
+
+    def dense(k, shape, scale=None):
+        scale = scale or (1.0 / math.sqrt(shape[1]))
+        return (jax.random.normal(k, shape) * scale).astype(jnp.float32)
+
+    params: dict[str, Any] = {
+        "tok_emb": dense(ks[i], (cfg.vocab, cfg.d_model), 0.02),
+        "blocks": [],
+        "ln_f": jnp.ones(cfg.d_model, jnp.float32),
+    }
+    i += 1
+    for _ in range(cfg.n_layers):
+        d, f = cfg.d_model, cfg.d_ff
+        blk = {
+            "ln1": jnp.ones(d, jnp.float32),
+            "ln2": jnp.ones(d, jnp.float32),
+            "wq": dense(ks[i + 0], (d, d)),
+            "wk": dense(ks[i + 1], (d, d)),
+            "wv": dense(ks[i + 2], (d, d)),
+            "wo": dense(ks[i + 3], (d, d)),
+            "gate": dense(ks[i + 4], (f, d)),
+            "up": dense(ks[i + 5], (f, d)),
+            "down": dense(ks[i + 6], (d, f)),
+        }
+        i += 7
+        params["blocks"].append(blk)
+    params["head"] = dense(ks[i], (cfg.vocab, cfg.d_model), 0.02)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, g, eps=1e-5):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def rope_tables(cfg: ModelConfig, positions):
+    """positions: [S] -> (cos, sin) [S, head_dim/2]."""
+    hd = cfg.head_dim
+    inv = 1.0 / (cfg.rope_base ** (jnp.arange(0, hd, 2) / hd))
+    ang = positions[:, None].astype(jnp.float32) * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [B, S, H, hd]; rotate pairs."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    out = jnp.stack([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# quantized linear (all three modes)
+# ---------------------------------------------------------------------------
+
+def _qstate_for(qstate, name):
+    return None if qstate is None else qstate.get(name)
+
+
+def linear(x, w, *, mode="fp", wa: Q.WAConfig | None = None, qs=None):
+    """x: [..., K] @ w[N, K].T -> [..., N].
+
+    qs: per-linear calibration state dict with optional keys
+        's' [K], 'alpha' [], 'beta' [], 'comp' ([N,K] rank-1 product),
+        and (kernel mode, prepared) 'wq', 'zw', 'dw', 'planes'.
+    """
+    if mode == "fp" or wa is None or (wa.weight.is_fp and wa.act.is_fp):
+        return x @ w.T
+    lead = x.shape[:-1]
+    kdim = x.shape[-1]
+    x2 = x.reshape(-1, kdim)
+
+    if mode == "fake":
+        s = qs.get("s") if qs else None
+        alpha = qs.get("alpha", 1.0) if qs else 1.0
+        beta = qs.get("beta", 1.0) if qs else 1.0
+        comp = None
+        if qs and "comp_a" in qs:
+            comp = qs["comp_a"][:, None] * qs["comp_b"][None, :]
+        wb, x2b = (w, x2) if s is None else Q.apply_balance(w, x2, s)
+        wdq, *_ = Q.fake_quant_weight(wb, wa.weight, alpha=alpha, beta=beta,
+                                      comp=comp)
+        xdq, *_ = Q.fake_quant_act(x2b, wa.act)
+        y = xdq @ wdq.T
+        return y.reshape(*lead, -1)
+
+    if mode == "kernel":
+        # prepared integer path (artifact path); plane count is static
+        # (from the spec), never a traced value — required for jax.jit
+        y = K.quantized_linear(
+            x2, qs["wq"], qs["zw"], qs["dw"],
+            w_bits=wa.weight.bits, a_bits=wa.act.bits,
+            balance=qs.get("s"), w_planes=wa.weight.planes,
+        )
+        return y.reshape(*lead, -1)
+
+    raise ValueError(f"unknown mode {mode}")
+
+
+def prepare_weight_qstate(w, wa: Q.WAConfig, qs=None):
+    """Bake calibrated fake-quant state into integer codes for the kernel
+    path / rust export. Returns dict(wq, zw, dw, planes, s?)."""
+    qs = qs or {}
+    s = qs.get("s")
+    alpha = qs.get("alpha", 1.0)
+    beta = qs.get("beta", 1.0)
+    comp = None
+    if "comp_a" in qs:
+        comp = qs["comp_a"][:, None] * qs["comp_b"][None, :]
+    wb = w if s is None else w * s[None, :]
+    if comp is not None:
+        wb = wb + comp
+    lo = jnp.minimum(beta * jnp.min(wb, axis=1, keepdims=True), 0.0)
+    hi = jnp.maximum(alpha * jnp.max(wb, axis=1, keepdims=True), 0.0)
+    delta, zp = Q.qparams_minmax(lo, hi, wa.weight)
+    codes = Q.quantize_codes(wb, delta, zp, wa.weight)
+    # NOTE: no 'planes' entry — the plane count is static (spec-derived);
+    # a traced leaf here would break jax.jit lowering of the kernel path.
+    out = {
+        "wq": codes.astype(jnp.int32),
+        "zw": jnp.round(zp[:, 0]).astype(jnp.int32),
+        "dw": delta[:, 0].astype(jnp.float32),
+    }
+    if s is not None:
+        out["s"] = s.astype(jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# block / model forward
+# ---------------------------------------------------------------------------
+
+def block_forward(blk, x, cos, sin, cfg: ModelConfig, *, mode="fp",
+                  wa: Q.WAConfig | None = None, qstate=None,
+                  mask=None, want_attn=False, kv=None, capture=None):
+    """One transformer block.
+
+    x: [B, S, D]. kv: optional (k_cache, v_cache, pos) for decode.
+    capture: optional dict; when given, each linear's *input* activations are
+    recorded under its name (used by the calibrator for smoothing stats).
+    Returns (y, attn_map or None, new_kv).
+    """
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+
+    def lin(name, inp):
+        if capture is not None:
+            capture[name] = inp
+        return linear(inp, blk[name], mode=mode, wa=wa,
+                      qs=_qstate_for(qstate, name))
+
+    h = rmsnorm(x, blk["ln1"])
+    q = lin("wq", h).reshape(B, S, H, hd)
+    k = lin("wk", h).reshape(B, S, H, hd)
+    v = lin("wv", h).reshape(B, S, H, hd)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if kv is not None:
+        k_cache, v_cache, pos = kv
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, pos, 0, 0))
+        k_all, v_all = k_cache, v_cache
+        new_kv = (k_cache, v_cache)
+    else:
+        k_all, v_all = k, v
+        new_kv = None
+
+    scores = jnp.einsum("bshd,bthd->bhst", q, k_all) / math.sqrt(hd)
+    if mask is not None:
+        scores = scores + mask
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,bthd->bshd", attn, v_all).reshape(B, S, D)
+    x = x + lin("wo", ctx)
+
+    h2 = rmsnorm(x, blk["ln2"])
+    gate = lin("gate", h2)
+    up = lin("up", h2)
+    act = jax.nn.silu(gate) * up
+    x = x + lin("down", act)
+    return x, (attn if want_attn else None), new_kv
+
+
+def causal_mask(S):
+    m = jnp.tril(jnp.ones((S, S), dtype=bool))
+    return jnp.where(m, 0.0, -1e9)[None, None, :, :]
+
+
+def forward(params, tokens, cfg: ModelConfig, *, mode="fp",
+            wa: Q.WAConfig | None = None, qstate=None, want_attn=False):
+    """tokens: [B, S] -> logits [B, S, V].
+
+    qstate: list (per block) of dicts (per linear) of calibration state.
+    """
+    B, S = tokens.shape
+    x = params["tok_emb"][tokens]
+    cos, sin = rope_tables(cfg, jnp.arange(S))
+    mask = causal_mask(S)
+    attns = []
+    for i, blk in enumerate(params["blocks"]):
+        qs = qstate[i] if qstate is not None else None
+        x, attn, _ = block_forward(blk, x, cos, sin, cfg, mode=mode, wa=wa,
+                                   qstate=qs, mask=mask, want_attn=want_attn)
+        if want_attn:
+            attns.append(attn)
+    x = rmsnorm(x, params["ln_f"])
+    logits = x @ params["head"].T
+    return (logits, attns) if want_attn else logits
+
+
+def forward_decode(params, tokens, kv_caches, pos, cfg: ModelConfig, *,
+                   mode="fp", wa=None, qstate=None):
+    """Single-step decode: tokens [B, 1], kv_caches [L] of ([B,Smax,H,hd]×2).
+
+    Returns (logits [B, V], new_kv_caches). `pos` is a traced scalar.
+    """
+    B = tokens.shape[0]
+    x = params["tok_emb"][tokens]          # [B, 1, D]
+    positions = jnp.array([0])[None] + pos  # [1,1]
+    cos, sin = rope_tables(cfg, positions.reshape(-1))
+    # decode attends to cache positions <= pos
+    Smax = kv_caches[0][0].shape[1]
+    key_pos = jnp.arange(Smax)
+    mask = jnp.where(key_pos[None, None, None, :] <= pos, 0.0, -1e9)
+    new_caches = []
+    for i, blk in enumerate(params["blocks"]):
+        qs = qstate[i] if qstate is not None else None
+        x, _, new_kv = block_forward(
+            blk, x, cos, sin, cfg, mode=mode, wa=wa, qstate=qs,
+            mask=mask, kv=(kv_caches[i][0], kv_caches[i][1], pos))
+        new_caches.append(new_kv)
+    x = rmsnorm(x, params["ln_f"])
+    logits = (x @ params["head"].T)[:, 0, :]
+    return logits, new_caches
+
+
+def init_kv_caches(cfg: ModelConfig, batch: int):
+    shape = (batch, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+    return [(jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32))
+            for _ in range(cfg.n_layers)]
+
+
+# ---------------------------------------------------------------------------
+# loss / perplexity
+# ---------------------------------------------------------------------------
+
+def nll(params, batch_tokens, cfg: ModelConfig, **fw):
+    """batch_tokens: [B, S+1]; returns mean token NLL."""
+    inp = batch_tokens[:, :-1]
+    tgt = batch_tokens[:, 1:]
+    logits = forward(params, inp, cfg, **fw)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def perplexity(params, eval_batches, cfg: ModelConfig, **fw) -> float:
+    """eval_batches: [num, B, S+1] numpy array."""
+    total, count = 0.0, 0
+    f = jax.jit(lambda p, b: nll(p, b, cfg, **fw)) if not fw else None
+    for b in np.asarray(eval_batches):
+        loss = nll(params, jnp.array(b), cfg, **fw) if f is None else f(params, jnp.array(b))
+        total += float(loss) * b.shape[0] * (b.shape[1] - 1)
+        count += b.shape[0] * (b.shape[1] - 1)
+    return math.exp(total / max(count, 1))
+
+
+def save_params(params, path: str):
+    flat = {}
+    flat["tok_emb"] = np.asarray(params["tok_emb"])
+    flat["ln_f"] = np.asarray(params["ln_f"])
+    flat["head"] = np.asarray(params["head"])
+    for i, blk in enumerate(params["blocks"]):
+        for k, v in blk.items():
+            flat[f"blocks.{i}.{k}"] = np.asarray(v)
+    np.savez(path, **flat)
+
+
+def load_params(path: str, cfg: ModelConfig) -> dict:
+    z = np.load(path)
+    params = {
+        "tok_emb": jnp.array(z["tok_emb"]),
+        "ln_f": jnp.array(z["ln_f"]),
+        "head": jnp.array(z["head"]),
+        "blocks": [],
+    }
+    for i in range(cfg.n_layers):
+        blk = {}
+        for k in ("ln1", "ln2", *LINEARS):
+            blk[k] = jnp.array(z[f"blocks.{i}.{k}"])
+        params["blocks"].append(blk)
+    return params

@@ -1,0 +1,193 @@
+"""Quantizers for ABQ-LLM (python side; rust/src/quant mirrors the semantics).
+
+Conventions (match the paper, §3 / Eq. 3):
+
+  * weights:     per-output-channel asymmetric quantization
+                 Wq = clamp(round(W/Δ) + z, 0, 2^n - 1)          (codes u8)
+  * activations: per-token asymmetric quantization (dynamic)
+  * bit-balance (W2*, §3.3): symmetric 5-level set {-2,-1,0,1,2}; codes are
+    stored as unsigned 0..4 with z = 2, which needs 3 bit-planes in the
+    engine (the paper's "minimal cost" for the balance strategy).
+  * clipping (Eq. 1): W_max = α·max(W), W_min = β·min(W), α/β learnable.
+  * compensation (Eq. 3): quantize (W + γ·a·bᵀ) instead of W.
+
+All functions are jax-differentiable via the straight-through estimator so
+the calibrator (calibrate.py) can learn s, α, β, a, b.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+
+
+def ste_round(x):
+    """Round with straight-through gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    """One side (W or A) of a WqAp configuration."""
+    bits: int                 # nominal bit width (16 = keep fp)
+    balanced: bool = False    # bit-balance strategy (only meaningful at 2 bits)
+    symmetric: bool = False   # symmetric (z fixed at midpoint) vs asymmetric
+    group: int = 0            # per-group size along K (0 = per-channel/token)
+
+    @property
+    def is_fp(self) -> bool:
+        return self.bits >= 16
+
+    @property
+    def n_levels(self) -> int:
+        # balanced 2-bit = {-2..2} -> 5 levels; otherwise 2^bits
+        if self.balanced and self.bits == 2:
+            return 5
+        return 2 ** self.bits
+
+    @property
+    def planes(self) -> int:
+        """Bit planes needed to store unsigned codes 0..n_levels-1."""
+        n = self.n_levels - 1
+        p = 0
+        while n > 0:
+            p += 1
+            n >>= 1
+        return max(p, 1)
+
+
+@dataclass(frozen=True)
+class WAConfig:
+    """Full WqAp quantization configuration (e.g. w2*a8)."""
+    weight: QuantSpec
+    act: QuantSpec
+
+    @staticmethod
+    def parse(s: str) -> "WAConfig":
+        """Parse 'w2a8', 'w2*a8', 'w4a4g128', 'fp16' style strings."""
+        s = s.strip().lower()
+        if s in ("fp16", "fp32", "fp"):
+            return WAConfig(QuantSpec(16), QuantSpec(16))
+        assert s.startswith("w"), s
+        a_at = s.index("a")
+        wpart, apart = s[1:a_at], s[a_at + 1:]
+        balanced = wpart.endswith("*")
+        if balanced:
+            wpart = wpart[:-1]
+        group = 0
+        if "g" in apart:
+            apart, g = apart.split("g")
+            group = int(g)
+        return WAConfig(
+            QuantSpec(int(wpart), balanced=balanced, group=group),
+            QuantSpec(int(apart)),
+        )
+
+    def name(self) -> str:
+        if self.weight.is_fp and self.act.is_fp:
+            return "fp16"
+        star = "*" if self.weight.balanced else ""
+        g = f"g{self.weight.group}" if self.weight.group else ""
+        return f"w{self.weight.bits}{star}a{self.act.bits}{g}"
+
+
+# ---------------------------------------------------------------------------
+# core quantize/dequantize
+# ---------------------------------------------------------------------------
+
+def qparams_minmax(lo, hi, spec: QuantSpec):
+    """Scale and zero point from (possibly clipped) min/max.
+
+    Returns (delta, zp) with zp float (kept differentiable; rounded for codes).
+    """
+    n = spec.n_levels
+    if spec.balanced and spec.bits == 2:
+        # symmetric 5-level grid centred at 0: delta = max(|lo|,|hi|)/2
+        absmax = jnp.maximum(jnp.abs(lo), jnp.abs(hi))
+        delta = jnp.maximum(absmax / 2.0, 1e-8)
+        zp = jnp.full_like(delta, 2.0)
+        return delta, zp
+    if spec.symmetric:
+        absmax = jnp.maximum(jnp.abs(lo), jnp.abs(hi))
+        delta = jnp.maximum(2.0 * absmax / (n - 1), 1e-8)
+        zp = jnp.full_like(delta, (n - 1) / 2.0)
+        return delta, zp
+    delta = jnp.maximum((hi - lo) / (n - 1), 1e-8)
+    zp = ste_round(-lo / delta)
+    zp = jnp.clip(zp, 0, n - 1)
+    return delta, zp
+
+
+def quantize_codes(x, delta, zp, spec: QuantSpec):
+    """x -> unsigned integer codes (float dtype carrying integers, STE-grad)."""
+    q = ste_round(x / delta + zp)
+    return jnp.clip(q, 0, spec.n_levels - 1)
+
+
+def dequantize(q, delta, zp):
+    return (q - zp) * delta
+
+
+def fake_quant_weight(w, spec: QuantSpec, alpha=1.0, beta=1.0, comp=None):
+    """Per-output-channel fake quantization of W [out, in] with learnable
+    clipping (alpha, beta) and optional compensation matrix a·bᵀ (Eq. 3).
+
+    Returns (w_dq, codes, delta, zp); codes/delta/zp have out-channel axis 0.
+    """
+    if spec.is_fp:
+        return w, None, None, None
+    if comp is not None:
+        w = w + comp
+    # keep 0 inside the range (degenerate-row safety; mirrored in rust)
+    lo = jnp.minimum(beta * jnp.min(w, axis=1, keepdims=True), 0.0)
+    hi = jnp.maximum(alpha * jnp.max(w, axis=1, keepdims=True), 0.0)
+    if spec.group and spec.group > 0:
+        out, inn = w.shape
+        g = spec.group
+        assert inn % g == 0, (inn, g)
+        wg = w.reshape(out, inn // g, g)
+        lo = jnp.minimum(beta * jnp.min(wg, axis=2, keepdims=True), 0.0)
+        hi = jnp.maximum(alpha * jnp.max(wg, axis=2, keepdims=True), 0.0)
+        delta, zp = qparams_minmax(lo, hi, spec)
+        q = quantize_codes(wg, delta, zp, spec)
+        wdq = dequantize(q, delta, zp).reshape(out, inn)
+        return wdq, q.reshape(out, inn), delta, zp
+    delta, zp = qparams_minmax(lo, hi, spec)
+    q = quantize_codes(w, delta, zp, spec)
+    return dequantize(q, delta, zp), q, delta, zp
+
+
+def fake_quant_act(x, spec: QuantSpec):
+    """Per-token (last-axis dynamic) fake quantization of activations.
+
+    x: [..., features]; statistics are computed over the feature axis,
+    giving one (delta, zp) per token, as in the paper.
+    """
+    if spec.is_fp:
+        return x, None, None, None
+    lo = jnp.min(x, axis=-1, keepdims=True)
+    hi = jnp.max(x, axis=-1, keepdims=True)
+    lo = jnp.minimum(lo, 0.0)  # keep 0 representable (post-SiLU etc.)
+    hi = jnp.maximum(hi, 0.0)
+    delta, zp = qparams_minmax(lo, hi, spec)
+    q = quantize_codes(x, delta, zp, spec)
+    return dequantize(q, delta, zp), q, delta, zp
+
+
+# ---------------------------------------------------------------------------
+# smoothing / balance vectors
+# ---------------------------------------------------------------------------
+
+def smooth_scales(act_absmax, w_absmax, migration=0.5):
+    """SmoothQuant-style balance vector s (per input-channel):
+    s = act^m / w^(1-m). Activations are divided by s, weights multiplied."""
+    s = jnp.power(jnp.maximum(act_absmax, 1e-5), migration) / jnp.power(
+        jnp.maximum(w_absmax, 1e-5), 1.0 - migration
+    )
+    return jnp.maximum(s, 1e-5)
+
+
+def apply_balance(w, x, s):
+    """W·X == (W·diag(s)) · (diag(s)^-1·X) — Eq. (1) rewrite."""
+    return w * s[None, :], x / s

@@ -1,0 +1,88 @@
+"""Calibration tests: losses behave, calibration improves over RTN on a
+micro model (smoke-scale), compensation vectors only on first/last blocks."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import data
+from compile.calibrate import (CalibConfig, akl_loss, calibrate, dlc_loss,
+                               mse_loss)
+from compile.model import ModelConfig, init_params, perplexity, LINEARS
+from compile.quantizers import WAConfig
+
+MICRO = ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=4, d_ff=64,
+                    max_seq=32)
+
+
+def test_dlc_loss_zero_when_identical():
+    rng = np.random.default_rng(0)
+    d = jnp.array(rng.normal(size=(2, 8, 16)).astype(np.float32))
+    assert float(dlc_loss(d, d, d)) < 1e-4
+
+
+def test_dlc_loss_positive_when_different():
+    rng = np.random.default_rng(1)
+    a = jnp.array(rng.normal(size=(2, 8, 16)).astype(np.float32))
+    b = jnp.array(rng.normal(size=(2, 8, 16)).astype(np.float32))
+    assert float(dlc_loss(a, b, b)) > 0.1
+
+
+def test_akl_loss_zero_for_same_attention():
+    rng = np.random.default_rng(2)
+    logits = rng.normal(size=(2, 4, 8, 8))
+    attn = jnp.array(np.exp(logits) / np.exp(logits).sum(-1, keepdims=True))
+    assert float(akl_loss(attn, attn)) < 1e-5
+    # and positive for different maps
+    attn2 = jnp.roll(attn, 1, axis=-1)
+    assert float(akl_loss(attn, attn2)) > 0.01
+
+
+def test_mse_loss_basic():
+    a = jnp.ones((2, 3))
+    b = jnp.zeros((2, 3))
+    assert float(mse_loss(a, b)) == pytest.approx(1.0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init_params(MICRO, seed=9)
+    calib = data.generate_tokens(8 * 32, seed=7) % 64
+    return params, calib.reshape(8, 32)
+
+
+def test_calibrate_structures(setup):
+    params, calib = setup
+    wa = WAConfig.parse("w4a4")
+    qs = calibrate(params, MICRO, wa, calib, method="abq",
+                   cal=CalibConfig(epochs=2, samples=4, seq=16),
+                   verbose=False)
+    assert len(qs) == MICRO.n_layers
+    for i, block_qs in enumerate(qs):
+        for name in LINEARS:
+            assert "s" in block_qs[name]
+            assert "alpha" in block_qs[name]
+            # compensation only on down of first/last blocks
+            has_comp = "comp_a" in block_qs[name]
+            should = name == "down" and i in (0, MICRO.n_layers - 1)
+            assert has_comp == should, (i, name)
+        # balance vectors positive and finite
+        for name in LINEARS:
+            s = np.asarray(block_qs[name]["s"])
+            assert (s > 0).all() and np.isfinite(s).all()
+
+
+def test_smoothquant_method_closed_form(setup):
+    params, calib = setup
+    wa = WAConfig.parse("w4a4")
+    qs = calibrate(params, MICRO, wa, calib, method="smoothquant",
+                   cal=CalibConfig(samples=4, seq=16), verbose=False)
+    for block_qs in qs:
+        for name in LINEARS:
+            assert set(block_qs[name].keys()) == {"s"}
+
+
+def test_rtn_method_returns_none_states(setup):
+    params, calib = setup
+    wa = WAConfig.parse("w4a4")
+    qs = calibrate(params, MICRO, wa, calib, method="rtn", verbose=False)
+    assert all(q is None for q in qs)

@@ -1,0 +1,54 @@
+"""Corpus generator tests (and the rust-mirror contract)."""
+import numpy as np
+
+from compile import data
+
+
+def test_splitmix_reference_values():
+    """These exact values are asserted in rust/src/util/rng.rs — the
+    cross-language determinism contract."""
+    r = data.SplitMix(42)
+    assert r.next_u64() == 13679457532755275413
+    assert r.next_u64() == 2949826092126892291
+    assert r.next_u64() == 5139283748462763858
+
+
+def test_generation_deterministic():
+    a = data.generate_tokens(300, seed=5)
+    b = data.generate_tokens(300, seed=5)
+    np.testing.assert_array_equal(a, b)
+    c = data.generate_tokens(300, seed=6)
+    assert (a != c).any()
+
+
+def test_bos_anchoring_and_range():
+    toks = data.generate_tokens(200, seed=1)
+    assert toks[0] == data.BOS
+    assert toks[32] == data.BOS  # sentence boundary every 32
+    assert toks.min() >= 0 and toks.max() < data.VOCAB
+
+
+def test_topic_conditioning_changes_distribution():
+    """Same current token, different topic → different successor stats
+    (the long-range dependency that makes attention necessary)."""
+    succ, cum = data.build_transition_table(0xAB9)
+    # state for (cur=5, topic=1) vs (cur=5, topic=9)
+    s1 = 1 + ((5 - 1) + (1 - 1)) % (data.VOCAB - 1)
+    s2 = 1 + ((5 - 1) + (9 - 1)) % (data.VOCAB - 1)
+    assert s1 != s2
+    assert (succ[s1] != succ[s2]).any()
+
+
+def test_batches_shape_and_content():
+    toks = data.generate_tokens(2 * 3 * 9, seed=2)
+    b = data.batches(toks, batch=3, seq=8)
+    assert b.shape == (2, 3, 9)
+    np.testing.assert_array_equal(b.reshape(-1), toks[: 2 * 3 * 9])
+
+
+def test_zipfian_unigram_shape():
+    """Frequent tokens should be much more frequent than rare ones."""
+    toks = data.generate_tokens(20000, seed=3)
+    counts = np.bincount(toks, minlength=data.VOCAB)
+    top50 = np.sort(counts)[-50:].sum()
+    assert top50 > 0.35 * counts.sum(), "heavy-tailed unigram expected"

@@ -1,0 +1,126 @@
+"""L1 correctness: Pallas ABQ kernel vs pure-jnp oracle.
+
+The integer path must match *exactly* (both are exact int32 arithmetic);
+hypothesis sweeps shapes and bit-width combinations.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.abq_matmul import (
+    abq_matmul_fp,
+    abq_matmul_int,
+    quantize_act_per_token,
+    quantized_linear,
+)
+
+
+def _random_case(rng, m, n, k, p_bits, q_bits):
+    xq = rng.integers(0, 2 ** p_bits, size=(m, k), dtype=np.int32)
+    wq = rng.integers(0, 2 ** q_bits, size=(n, k), dtype=np.int32)
+    zx = rng.integers(0, 2 ** p_bits, size=(m,), dtype=np.int32)
+    zw = rng.integers(0, 2 ** q_bits, size=(n,), dtype=np.int32)
+    return xq, wq, zx, zw
+
+
+def test_decomposition_algebra_matches_direct():
+    """Eq. (8)-(10): the BMMA superposition equals the direct product."""
+    rng = np.random.default_rng(0)
+    for p, q in [(8, 8), (8, 2), (4, 4), (2, 2), (3, 5), (8, 3)]:
+        xq, wq, zx, zw = _random_case(rng, 9, 11, 64, p, q)
+        direct = ref.quant_matmul_int(jnp.array(xq), jnp.array(wq),
+                                      jnp.array(zx), jnp.array(zw))
+        decomp = ref.quant_matmul_decomposed(jnp.array(xq), jnp.array(wq),
+                                             jnp.array(zx), jnp.array(zw), p, q)
+        np.testing.assert_array_equal(np.asarray(direct), np.asarray(decomp))
+
+
+@pytest.mark.parametrize("p,q", [(8, 8), (8, 2), (8, 3), (4, 4), (6, 6),
+                                 (2, 2), (2, 4), (5, 5), (8, 4), (3, 3)])
+def test_kernel_matches_oracle_bit_combos(p, q):
+    rng = np.random.default_rng(p * 100 + q)
+    xq, wq, zx, zw = _random_case(rng, 17, 33, 128, p, q)
+    got = abq_matmul_int(jnp.array(xq), jnp.array(wq), jnp.array(zx),
+                         jnp.array(zw), p_bits=p, q_bits=q)
+    want = ref.quant_matmul_int(jnp.array(xq), jnp.array(wq),
+                                jnp.array(zx), jnp.array(zw))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    n=st.integers(1, 40),
+    k=st.sampled_from([8, 32, 100, 128]),
+    p=st.integers(1, 8),
+    q=st.integers(1, 8),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_kernel_matches_oracle_hypothesis(m, n, k, p, q, seed):
+    rng = np.random.default_rng(seed)
+    xq, wq, zx, zw = _random_case(rng, m, n, k, p, q)
+    got = abq_matmul_int(jnp.array(xq), jnp.array(wq), jnp.array(zx),
+                         jnp.array(zw), p_bits=p, q_bits=q)
+    want = ref.quant_matmul_int(jnp.array(xq), jnp.array(wq),
+                                jnp.array(zx), jnp.array(zw))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 64]),
+    bn=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 100),
+)
+def test_kernel_tile_size_invariance(bm, bn, seed):
+    """Output is independent of the BlockSpec tiling (auto-search safety)."""
+    rng = np.random.default_rng(seed)
+    xq, wq, zx, zw = _random_case(rng, 23, 31, 64, 8, 2)
+    a = abq_matmul_int(jnp.array(xq), jnp.array(wq), jnp.array(zx),
+                       jnp.array(zw), p_bits=8, q_bits=2, bm=bm, bn=bn)
+    b = ref.quant_matmul_int(jnp.array(xq), jnp.array(wq),
+                             jnp.array(zx), jnp.array(zw))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fp_dequant_path():
+    rng = np.random.default_rng(7)
+    xq, wq, zx, zw = _random_case(rng, 5, 9, 32, 8, 4)
+    dx = rng.random(5).astype(np.float32) * 0.1
+    dw = rng.random(9).astype(np.float32) * 0.01
+    got = abq_matmul_fp(jnp.array(xq), jnp.array(wq), jnp.array(zx),
+                        jnp.array(zw), jnp.array(dx), jnp.array(dw),
+                        p_bits=8, q_bits=4)
+    want = ref.quant_matmul_fp(jnp.array(xq), jnp.array(wq), jnp.array(zx),
+                               jnp.array(zw), jnp.array(dx), jnp.array(dw))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_act_quantizer_range_and_reconstruction():
+    rng = np.random.default_rng(3)
+    x = jnp.array(rng.normal(size=(12, 64)).astype(np.float32)) * 3.0
+    for bits in (8, 6, 4, 2):
+        q, zp, delta = quantize_act_per_token(x, bits)
+        assert int(q.min()) >= 0 and int(q.max()) <= (1 << bits) - 1
+        xr = (np.asarray(q) - np.asarray(zp)[:, None]) * np.asarray(delta)[:, None]
+        err = np.abs(xr - np.asarray(x)).max()
+        assert err <= np.asarray(delta).max() * 0.5 + 1e-6
+
+
+def test_quantized_linear_close_to_fp_at_8bit():
+    """W8A8 quantized linear should track the fp matmul closely."""
+    rng = np.random.default_rng(11)
+    x = jnp.array(rng.normal(size=(4, 64)).astype(np.float32))
+    w = jnp.array(rng.normal(size=(32, 64)).astype(np.float32) * 0.05)
+    # prepare per-channel weight codes
+    lo = jnp.min(w, axis=1)
+    hi = jnp.max(w, axis=1)
+    delta = (hi - lo) / 255.0
+    zw = jnp.clip(jnp.round(-lo / delta), 0, 255).astype(jnp.int32)
+    wq = jnp.clip(jnp.round(w / delta[:, None]) + zw[:, None], 0, 255).astype(jnp.int32)
+    y = quantized_linear(x, wq, zw, delta, w_bits=8, a_bits=8)
+    y_fp = x @ w.T
+    rel = np.abs(np.asarray(y) - np.asarray(y_fp)).max() / np.abs(np.asarray(y_fp)).max()
+    assert rel < 0.02, rel

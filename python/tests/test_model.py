@@ -1,0 +1,100 @@
+"""Model forward tests: shapes, decode parity, quantized modes."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.model import (TINY, ModelConfig, forward, forward_decode,
+                           init_kv_caches, init_params, nll,
+                           prepare_weight_qstate, LINEARS)
+from compile.quantizers import WAConfig
+
+MICRO = ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=4, d_ff=64,
+                    max_seq=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(MICRO, seed=3)
+
+
+def test_forward_shapes(params):
+    toks = jnp.array(np.random.default_rng(0).integers(0, 64, (3, 10)))
+    logits = forward(params, toks, MICRO)
+    assert logits.shape == (3, 10, 64)
+
+
+def test_attention_maps_are_distributions(params):
+    toks = jnp.array(np.random.default_rng(1).integers(0, 64, (2, 8)))
+    _, attns = forward(params, toks, MICRO, want_attn=True)
+    assert len(attns) == MICRO.n_layers
+    for a in attns:
+        assert a.shape == (2, MICRO.n_heads, 8, 8)
+        np.testing.assert_allclose(np.asarray(a.sum(-1)), 1.0, rtol=1e-4)
+        # causal: upper triangle zero
+        up = np.triu(np.asarray(a[0, 0]), k=1)
+        assert np.abs(up).max() < 1e-6
+
+
+def test_decode_matches_prefill(params):
+    """Teacher-forcing parity: step-by-step decode == full prefill."""
+    rng = np.random.default_rng(2)
+    toks = jnp.array(rng.integers(0, 64, (1, 6)))
+    full = forward(params, toks, MICRO)
+    kv = init_kv_caches(MICRO, 1)
+    outs = []
+    for t in range(6):
+        logits, kv = forward_decode(params, toks[:, t:t + 1], kv,
+                                    jnp.int32(t), MICRO)
+        outs.append(logits)
+    for t in range(6):
+        np.testing.assert_allclose(np.asarray(full[0, t]),
+                                   np.asarray(outs[t][0]), rtol=2e-3,
+                                   atol=2e-3)
+
+
+def test_fake_quant_mode_close_at_8bit(params):
+    toks = jnp.array(np.random.default_rng(3).integers(0, 64, (2, 8)))
+    fp = forward(params, toks, MICRO)
+    q = forward(params, toks, MICRO, mode="fake", wa=WAConfig.parse("w8a8"))
+    rel = float(jnp.abs(fp - q).max() / jnp.abs(fp).max())
+    assert rel < 0.12, rel  # micro model (d=32): relative quant noise is larger
+
+
+def test_kernel_mode_matches_fake_mode(params):
+    """The pallas integer path must agree with the STE fake-quant path
+    when driven by the same baked weight state (same codes)."""
+    wa = WAConfig.parse("w4a8")
+    qstate = []
+    for blk in params["blocks"]:
+        qstate.append({n: prepare_weight_qstate(blk[n], wa, None)
+                       for n in LINEARS})
+    toks = jnp.array(np.random.default_rng(4).integers(0, 64, (1, 8)))
+    k = forward(params, toks, MICRO, mode="kernel", wa=wa, qstate=qstate)
+    f = forward(params, toks, MICRO, mode="fake", wa=wa, qstate=None)
+    # same weight codes; act quant differs only in clamping details
+    rel = float(jnp.abs(k - f).max() / jnp.abs(f).max())
+    assert rel < 0.15, rel
+
+
+def test_nll_decreases_with_better_params():
+    rng = np.random.default_rng(5)
+    toks = jnp.array(rng.integers(0, 64, (4, 12)))
+    p0 = init_params(MICRO, seed=0)
+    loss0 = float(nll(p0, toks, MICRO))
+    assert np.isfinite(loss0)
+    # one SGD step on this batch should reduce its loss
+    g = jax.grad(nll)(p0, toks, MICRO)
+    p1 = jax.tree_util.tree_map(lambda a, b: a - 0.5 * b, p0, g)
+    loss1 = float(nll(p1, toks, MICRO))
+    assert loss1 < loss0
+
+
+def test_save_load_roundtrip(tmp_path, params):
+    from compile.model import load_params, save_params
+    path = str(tmp_path / "m.npz")
+    save_params(params, path)
+    loaded = load_params(path, MICRO)
+    toks = jnp.array([[1, 2, 3]])
+    np.testing.assert_allclose(np.asarray(forward(params, toks, MICRO)),
+                               np.asarray(forward(loaded, toks, MICRO)))

@@ -1,0 +1,102 @@
+"""Quantizer unit + property tests (python side)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantizers as Q
+
+
+def test_waconfig_parse_roundtrip():
+    for s in ["w2a8", "w2*a8", "w4a4", "w8a8", "w4a4g128", "fp16", "w6a6"]:
+        cfg = Q.WAConfig.parse(s)
+        assert cfg.name() == s
+
+
+def test_waconfig_planes_and_levels():
+    cfg = Q.WAConfig.parse("w2*a8")
+    assert cfg.weight.n_levels == 5
+    assert cfg.weight.planes == 3
+    assert cfg.act.planes == 8
+    assert Q.WAConfig.parse("w2a8").weight.planes == 2
+    assert Q.WAConfig.parse("w3a16").weight.planes == 3
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.integers(1, 6),
+    cols=st.integers(2, 48),
+    bits=st.integers(2, 8),
+    seed=st.integers(0, 1000),
+)
+def test_weight_fake_quant_error_bounded(rows, cols, bits, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.array(rng.normal(size=(rows, cols)).astype(np.float32))
+    spec = Q.QuantSpec(bits)
+    wdq, codes, delta, zp = Q.fake_quant_weight(w, spec)
+    assert codes.min() >= 0 and codes.max() <= spec.n_levels - 1
+    err = np.abs(np.asarray(wdq - w))
+    bound = np.asarray(delta) * 1.5 + 1e-5
+    assert (err <= bound).all()
+
+
+def test_balanced_w2_grid_symmetric():
+    spec = Q.QuantSpec(2, balanced=True)
+    w = jnp.array(np.linspace(-1, 1, 32, dtype=np.float32)[None, :])
+    wdq, codes, delta, zp = Q.fake_quant_weight(w, spec)
+    lvls = np.asarray(wdq) / np.asarray(delta)
+    assert np.allclose(lvls, np.round(lvls), atol=1e-4)
+    assert np.abs(lvls).max() <= 2.0 + 1e-4
+    assert float(zp[0, 0]) == 2.0
+    # symmetric: -2..2 reachable on symmetric input
+    assert lvls.min() <= -1.9 and lvls.max() >= 1.9
+
+
+def test_plain_w2_grid_asymmetric_on_symmetric_data():
+    """The asymmetry the bit-balance strategy fixes (paper §3.3/Fig. 7)."""
+    spec = Q.QuantSpec(2)
+    w = jnp.array(np.linspace(-1, 1, 64, dtype=np.float32)[None, :])
+    wdq, *_ = Q.fake_quant_weight(w, spec)
+    dq = np.asarray(wdq)
+    skew = abs(dq.max() + dq.min())  # 0 for a symmetric grid
+    spec_b = Q.QuantSpec(2, balanced=True)
+    wdq_b, *_ = Q.fake_quant_weight(w, spec_b)
+    dq_b = np.asarray(wdq_b)
+    skew_b = abs(dq_b.max() + dq_b.min())
+    assert skew_b < skew, (skew, skew_b)
+
+
+def test_per_group_quantization_improves_fit():
+    rng = np.random.default_rng(0)
+    # two groups with very different scales in one row
+    w = np.concatenate([rng.normal(size=32) * 0.01, rng.normal(size=32) * 1.0])
+    w = jnp.array(w.astype(np.float32)[None, :])
+    flat_err = float(jnp.abs(Q.fake_quant_weight(w, Q.QuantSpec(4))[0] - w).mean())
+    g_err = float(jnp.abs(Q.fake_quant_weight(w, Q.QuantSpec(4, group=32))[0] - w).mean())
+    assert g_err < flat_err
+
+
+def test_act_quant_per_token_stats():
+    rng = np.random.default_rng(1)
+    x = jnp.array(rng.normal(size=(5, 64)).astype(np.float32) * 3)
+    xdq, q, delta, zp = Q.fake_quant_act(x, Q.QuantSpec(8))
+    assert q.shape == x.shape
+    assert delta.shape == (5, 1)  # per token
+    err = np.abs(np.asarray(xdq - x))
+    assert (err <= np.asarray(delta) * 0.75 + 1e-6).all()
+
+
+def test_smooth_scales_balance_identity():
+    rng = np.random.default_rng(2)
+    w = jnp.array(rng.normal(size=(8, 16)).astype(np.float32))
+    x = jnp.array(rng.normal(size=(4, 16)).astype(np.float32))
+    s = Q.smooth_scales(jnp.abs(x).max(0), jnp.abs(w).max(0), 0.5)
+    wb, xb = Q.apply_balance(w, x, s)
+    np.testing.assert_allclose(np.asarray(x @ w.T), np.asarray(xb @ wb.T),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ste_round_gradient_passthrough():
+    import jax
+    g = jax.grad(lambda x: Q.ste_round(x * 3.0))(1.234)
+    assert abs(g - 3.0) < 1e-6

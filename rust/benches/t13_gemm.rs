@@ -1,0 +1,82 @@
+//! Tables 13/14 reproduction: GEMM TOPS across WqAp combos × layer shapes
+//! (LLaMA-7B/13B dims, M ∈ {1, 4, 8}), ABQ engine vs CUTLASS/cuBLAS
+//! stand-ins.
+//!
+//! Default runs a representative subset; set `ABQ_BENCH_FULL=1` for the
+//! full 12-combo × 8-shape sweep of the paper's appendix tables.
+//!
+//! Expected shape (paper Tables 13/14): ABQ TOPS grow as bits shrink
+//! (w2a2 highest), beat the baselines at every combo the baselines can't
+//! run natively (w2aX, w3aX, w5+, w6a6...), and the gap narrows toward
+//! w8a8 where the padded INT8 unit is at its native precision.
+
+use abq_llm::abq::{gemm_int, BitPlanes, OptLevel};
+use abq_llm::baselines::{Int4Gemm, Int8Gemm};
+use abq_llm::util::bench::{write_results, Bencher};
+use abq_llm::util::json::{num, obj, s, Json};
+use abq_llm::util::rng::SplitMix;
+
+fn main() {
+    let full = std::env::var("ABQ_BENCH_FULL").is_ok();
+    let bencher = Bencher::default();
+    let mut rng = SplitMix::new(13);
+
+    // (M, K, N): LLaMA-7B attention + MLP and 13B attention shapes
+    let shapes: Vec<(usize, usize, usize)> = if full {
+        vec![
+            (1, 4096, 4096), (1, 1024, 8192), (1, 11008, 4096), (1, 5120, 5120),
+            (1, 4096, 11008), (8, 4096, 4096), (8, 1024, 8192), (8, 11008, 4096),
+            (8, 5120, 5120), (8, 4096, 11008), (4, 4096, 4096), (4, 5120, 5120),
+        ]
+    } else {
+        vec![(1, 4096, 4096), (8, 4096, 4096), (1, 4096, 11008), (4, 5120, 5120)]
+    };
+    let combos: Vec<(usize, usize)> = if full {
+        vec![(2, 2), (2, 4), (2, 6), (2, 8), (3, 3), (3, 8), (4, 4), (4, 8), (5, 5), (6, 6), (7, 7), (8, 8)]
+    } else {
+        vec![(2, 2), (2, 8), (3, 8), (4, 4), (6, 6), (8, 8)]
+    };
+
+    let mut out = Vec::new();
+    for &(m, k, n) in &shapes {
+        println!("\n=== shape ({m},{k})x({k},{n}) ===");
+        let wf: Vec<f32> = (0..n * k).map(|_| rng.next_f32_centered() * 0.1).collect();
+        let xf: Vec<f32> = (0..m * k).map(|_| rng.next_f32_centered() * 4.0).collect();
+        let int8 = Int8Gemm::from_weights(&wf, n, k);
+        let int4 = Int4Gemm::from_weights(&wf, n, k);
+        let m8 = bencher.run("int8", || {
+            std::hint::black_box(int8.forward(&xf, m));
+        });
+        let m4 = bencher.run("int4", || {
+            std::hint::black_box(int4.forward(&xf, m));
+        });
+        println!("  {:<10} {:>8.3} TOPS   {:<10} {:>8.3} TOPS",
+                 "CUTLASS8:", m8.tops(m, n, k), "CUTLASS4:", m4.tops(m, n, k));
+
+        print!("  ABQ: ");
+        for &(wb, ab) in &combos {
+            let xc: Vec<u8> = (0..m * k).map(|_| rng.next_below(1 << ab) as u8).collect();
+            let wc: Vec<u8> = (0..n * k).map(|_| rng.next_below(1 << wb) as u8).collect();
+            let x = BitPlanes::pack(&xc, m, k, ab);
+            let w = BitPlanes::pack(&wc, n, k, wb);
+            let zx = vec![1 << (ab - 1); m];
+            let zw = vec![1 << (wb - 1); n];
+            let meas = bencher.run("abq", || {
+                std::hint::black_box(gemm_int(&x, &w, &zx, &zw, OptLevel::Auto, None));
+            });
+            print!("w{wb}a{ab}={:.3} ", meas.tops(m, n, k));
+            out.push(obj(vec![
+                ("m", num(m as f64)),
+                ("k", num(k as f64)),
+                ("n", num(n as f64)),
+                ("combo", s(&format!("w{wb}a{ab}"))),
+                ("abq_tops", num(meas.tops(m, n, k))),
+                ("int8_tops", num(m8.tops(m, n, k))),
+                ("int4_tops", num(m4.tops(m, n, k))),
+            ]));
+        }
+        println!();
+    }
+    write_results("t13_gemm", &Json::Arr(out));
+    println!("\n(ABQ_BENCH_FULL=1 for the complete appendix sweep)");
+}

@@ -1,0 +1,124 @@
+//! BitPacking (paper §3.4 step ❶): decompose a p-bit code tensor into p
+//! binary matrices laid out plane-major, `[M, K, p] → [p, M, K]`.
+//!
+//! On the GPU this layout change makes global-memory reads of each 1-bit
+//! tile contiguous for the BMMA pipeline; here it makes each plane row a
+//! dense `u64` slice so the AND+POPCNT inner loop streams sequentially —
+//! the same memory-continuity argument, one level down the hierarchy.
+//!
+//! The packer also precomputes per-row code sums, which the Bit Reduction
+//! epilogue needs for the zero-point correction
+//! `Y -= zx·rowsum(Wq) + zw·rowsum(Xq) - K·zx·zw`.
+
+/// A p-bit unsigned code matrix packed as p bit-planes of `u64` words.
+///
+/// `data` layout: `[plane][row][kword]`, i.e. plane-major then row-major —
+/// the direct analogue of the paper's `[p, M, K]` BitPacking layout.
+#[derive(Clone, Debug)]
+pub struct BitPlanes {
+    pub rows: usize,
+    pub k: usize,
+    pub planes: usize,
+    pub kwords: usize,
+    pub data: Vec<u64>,
+    /// per-row sum of the original codes (for zero-point correction)
+    pub rowsum: Vec<i64>,
+}
+
+impl BitPlanes {
+    /// Pack `codes` (row-major `[rows, k]`, values < 2^planes) into planes.
+    pub fn pack(codes: &[u8], rows: usize, k: usize, planes: usize) -> Self {
+        assert_eq!(codes.len(), rows * k, "codes shape mismatch");
+        assert!(planes >= 1 && planes <= 8);
+        let kwords = k.div_ceil(64);
+        let mut data = vec![0u64; planes * rows * kwords];
+        let mut rowsum = vec![0i64; rows];
+        for r in 0..rows {
+            let mut sum = 0i64;
+            let row = &codes[r * k..(r + 1) * k];
+            for (i, &c) in row.iter().enumerate() {
+                debug_assert!((c as u32) < (1u32 << planes), "code out of range");
+                sum += c as i64;
+                let (w, b) = (i / 64, i % 64);
+                for p in 0..planes {
+                    if (c >> p) & 1 == 1 {
+                        data[(p * rows + r) * kwords + w] |= 1u64 << b;
+                    }
+                }
+            }
+            rowsum[r] = sum;
+        }
+        BitPlanes { rows, k, planes, kwords, data, rowsum }
+    }
+
+    /// Slice of one plane-row (the unit the BMMA loop consumes).
+    #[inline(always)]
+    pub fn plane_row(&self, plane: usize, row: usize) -> &[u64] {
+        let off = (plane * self.rows + row) * self.kwords;
+        &self.data[off..off + self.kwords]
+    }
+
+    /// Contiguous block of all rows of one plane.
+    #[inline(always)]
+    pub fn plane(&self, plane: usize) -> &[u64] {
+        let off = plane * self.rows * self.kwords;
+        &self.data[off..off + self.rows * self.kwords]
+    }
+
+    /// Reconstruct the original codes (test / debugging aid).
+    pub fn unpack(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.rows * self.k];
+        for p in 0..self.planes {
+            for r in 0..self.rows {
+                let pr = self.plane_row(p, r);
+                for i in 0..self.k {
+                    if (pr[i / 64] >> (i % 64)) & 1 == 1 {
+                        out[r * self.k + i] |= 1 << p;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Bytes of packed storage (memory-compression accounting).
+    pub fn packed_bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let codes: Vec<u8> = (0..7 * 100).map(|i| (i % 16) as u8).collect();
+        let bp = BitPlanes::pack(&codes, 7, 100, 4);
+        assert_eq!(bp.unpack(), codes);
+    }
+
+    #[test]
+    fn rowsums() {
+        let codes = vec![1u8, 2, 3, 0, 0, 7];
+        let bp = BitPlanes::pack(&codes, 2, 3, 3);
+        assert_eq!(bp.rowsum, vec![6, 7]);
+    }
+
+    #[test]
+    fn plane_contents_single_bit() {
+        // code 2 = plane 1 only
+        let codes = vec![2u8; 64];
+        let bp = BitPlanes::pack(&codes, 1, 64, 2);
+        assert_eq!(bp.plane_row(0, 0), &[0u64]);
+        assert_eq!(bp.plane_row(1, 0), &[u64::MAX]);
+    }
+
+    #[test]
+    fn ragged_k_tail_is_zero_padded() {
+        let codes = vec![1u8; 65];
+        let bp = BitPlanes::pack(&codes, 1, 65, 1);
+        assert_eq!(bp.kwords, 2);
+        assert_eq!(bp.plane_row(0, 0)[1], 1u64); // only bit 0 of word 1
+    }
+}

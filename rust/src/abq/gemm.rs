@@ -1,0 +1,279 @@
+//! ABQKernel: arbitrary-bit quantized GEMM as a superposition of 1-bit
+//! matmuls (paper §3.4, Appendix B), with the optimisation ladder of
+//! Table 4 reproduced as explicit variants:
+//!
+//!   `Naive`      — the unoptimised kernel: plain triple loop, word-wise
+//!                  popcount (the paper's "Native_kernel" row)
+//!   `Pipelined`  — + computational pipeline optimisation: unrolled,
+//!                  multi-accumulator inner loop (register double-buffer
+//!                  analogue, Fig. 9)
+//!   `GemvElim`   — + GEMV elimination: the p activation planes are treated
+//!                  as extra M rows, each weight plane-row is streamed once
+//!                  and reused across every (m, s) pair, so M=1 runs as a
+//!                  p×(q·N) binary GEMM instead of a padded MMA (Fig. 8)
+//!   `Auto`       — + auto kernel search: tile config (n-block, fanout,
+//!                  parallelism) picked by micro-benchmark per shape
+//!
+//! All variants produce bit-identical integer results (asserted by unit
+//! and property tests); they differ only in schedule.
+
+use crate::util::par;
+
+use super::bitplane::BitPlanes;
+use super::bmma::{bdot2, bdot4, bdot_scalar, bdot_unrolled};
+use super::reduction::correct_tile;
+use super::tile::TileConfig;
+
+/// Kernel optimisation level (Table 4 ablation axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OptLevel {
+    Naive,
+    Pipelined,
+    GemvElim,
+    Auto,
+}
+
+/// Integer ABQ GEMM: packed X (p planes, M rows) × packed W (q planes,
+/// N rows) → `[M, N]` i64 accumulators *including* zero-point correction.
+pub fn gemm_int(
+    x: &BitPlanes,
+    w: &BitPlanes,
+    zx: &[i32],
+    zw: &[i32],
+    opt: OptLevel,
+    cfg: Option<TileConfig>,
+) -> Vec<i64> {
+    assert_eq!(x.k, w.k, "K mismatch");
+    assert_eq!(zx.len(), x.rows);
+    assert_eq!(zw.len(), w.rows);
+    let mut acc = match opt {
+        OptLevel::Naive => kernel_naive(x, w),
+        OptLevel::Pipelined => kernel_pipelined(x, w),
+        OptLevel::GemvElim => kernel_gemv_elim(x, w, TileConfig::new(64, 0, 4, false)),
+        OptLevel::Auto => {
+            let cfg = cfg.unwrap_or_default();
+            if cfg.parallel {
+                kernel_parallel(x, w, cfg)
+            } else {
+                kernel_gemv_elim(x, w, cfg)
+            }
+        }
+    };
+    correct_tile(&mut acc, x.rows, w.rows, x.k, zx, zw, &x.rowsum, &w.rowsum);
+    acc
+}
+
+/// ❶ Native kernel: nothing but the decomposition itself.
+fn kernel_naive(x: &BitPlanes, w: &BitPlanes) -> Vec<i64> {
+    let (m, n) = (x.rows, w.rows);
+    let mut acc = vec![0i64; m * n];
+    for mi in 0..m {
+        for ni in 0..n {
+            let mut a = 0i64;
+            for s in 0..x.planes {
+                let xr = x.plane_row(s, mi);
+                for t in 0..w.planes {
+                    let d = bdot_scalar(xr, w.plane_row(t, ni)) as i64;
+                    a += d << (s + t);
+                }
+            }
+            acc[mi * n + ni] = a;
+        }
+    }
+    acc
+}
+
+/// ❷ + pipeline optimisation: unrolled inner loop, 4 accumulator chains.
+fn kernel_pipelined(x: &BitPlanes, w: &BitPlanes) -> Vec<i64> {
+    let (m, n) = (x.rows, w.rows);
+    let mut acc = vec![0i64; m * n];
+    for mi in 0..m {
+        for ni in 0..n {
+            let mut a = 0i64;
+            for s in 0..x.planes {
+                let xr = x.plane_row(s, mi);
+                for t in 0..w.planes {
+                    let d = bdot_unrolled(xr, w.plane_row(t, ni)) as i64;
+                    a += d << (s + t);
+                }
+            }
+            acc[mi * n + ni] = a;
+        }
+    }
+    acc
+}
+
+/// ❸ + GEMV elimination: stream each weight plane-row once, fan it out
+/// across all (m, s) activation plane-rows. For M=1 the activation planes
+/// (p·K bits) live in L1, so the sweep is weight-bandwidth-bound with zero
+/// padding waste — the Fig. 8 effect.
+fn kernel_gemv_elim(x: &BitPlanes, w: &BitPlanes, cfg: TileConfig) -> Vec<i64> {
+    let (m, n) = (x.rows, w.rows);
+    let mut acc = vec![0i64; m * n];
+    gemv_elim_into(x, w, cfg, 0, n, &mut acc);
+    acc
+}
+
+/// Compute weight rows `[n0, n1)` into `acc` (full `[M, N]` layout).
+fn gemv_elim_into(
+    x: &BitPlanes,
+    w: &BitPlanes,
+    cfg: TileConfig,
+    n0: usize,
+    n1: usize,
+    acc: &mut [i64],
+) {
+    let (m, n) = (x.rows, w.rows);
+    let p = x.planes;
+    let nb = cfg.nb.max(1);
+    let mut tile_start = n0;
+    while tile_start < n1 {
+        let tile_end = (tile_start + nb).min(n1);
+        for ni in tile_start..tile_end {
+            for t in 0..w.planes {
+                let wrow = w.plane_row(t, ni);
+                for mi in 0..m {
+                    let mut a = 0i64;
+                    let mut s = 0usize;
+                    match cfg.fanout {
+                        4 => {
+                            while s + 4 <= p {
+                                let (d0, d1, d2, d3) = bdot4(
+                                    wrow,
+                                    x.plane_row(s, mi),
+                                    x.plane_row(s + 1, mi),
+                                    x.plane_row(s + 2, mi),
+                                    x.plane_row(s + 3, mi),
+                                );
+                                a += ((d0 as i64) << s)
+                                    + ((d1 as i64) << (s + 1))
+                                    + ((d2 as i64) << (s + 2))
+                                    + ((d3 as i64) << (s + 3));
+                                s += 4;
+                            }
+                        }
+                        2 => {
+                            while s + 2 <= p {
+                                let (d0, d1) =
+                                    bdot2(wrow, x.plane_row(s, mi), x.plane_row(s + 1, mi));
+                                a += ((d0 as i64) << s) + ((d1 as i64) << (s + 1));
+                                s += 2;
+                            }
+                        }
+                        _ => {}
+                    }
+                    while s < p {
+                        a += (bdot_unrolled(wrow, x.plane_row(s, mi)) as i64) << s;
+                        s += 1;
+                    }
+                    acc[mi * n + ni] += a << t;
+                }
+            }
+        }
+        tile_start = tile_end;
+    }
+}
+
+/// ❹ + auto kernel search config, parallel over weight-row tiles.
+fn kernel_parallel(x: &BitPlanes, w: &BitPlanes, cfg: TileConfig) -> Vec<i64> {
+    let (m, n) = (x.rows, w.rows);
+    let nb = cfg.nb.max(1);
+    let n_tiles = n.div_ceil(nb);
+    // compute per-tile into column strips, then scatter — avoids sharing
+    // the accumulator across threads (no locks on the hot path)
+    let strips: Vec<(usize, usize, Vec<i64>)> = par::par_map_indexed(n_tiles, |tidx| {
+        let n0 = tidx * nb;
+        let n1 = ((tidx + 1) * nb).min(n);
+        let mut strip = vec![0i64; m * n];
+        gemv_elim_into(x, w, TileConfig { parallel: false, ..cfg }, n0, n1, &mut strip);
+        (n0, n1, strip)
+    });
+    let mut acc = vec![0i64; m * n];
+    for (n0, n1, strip) in strips {
+        for mi in 0..m {
+            acc[mi * n + n0..mi * n + n1].copy_from_slice(&strip[mi * n + n0..mi * n + n1]);
+        }
+    }
+    acc
+}
+
+/// Reference integer GEMM on raw codes (oracle for tests/benches).
+pub fn gemm_int_reference(
+    x_codes: &[u8],
+    w_codes: &[u8],
+    m: usize,
+    n: usize,
+    k: usize,
+    zx: &[i32],
+    zw: &[i32],
+) -> Vec<i64> {
+    let mut out = vec![0i64; m * n];
+    for mi in 0..m {
+        for ni in 0..n {
+            let mut a = 0i64;
+            for ki in 0..k {
+                let xv = x_codes[mi * k + ki] as i64 - zx[mi] as i64;
+                let wv = w_codes[ni * k + ki] as i64 - zw[ni] as i64;
+                a += xv * wv;
+            }
+            out[mi * n + ni] = a;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn case(m: usize, n: usize, k: usize, p: usize, q: usize, seed: u64) -> (Vec<u8>, Vec<u8>, Vec<i32>, Vec<i32>) {
+        let mut st = seed;
+        let mut next = move || {
+            st = st.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (st >> 33) as u32
+        };
+        let x: Vec<u8> = (0..m * k).map(|_| (next() % (1 << p)) as u8).collect();
+        let w: Vec<u8> = (0..n * k).map(|_| (next() % (1 << q)) as u8).collect();
+        let zx: Vec<i32> = (0..m).map(|_| (next() % (1 << p)) as i32).collect();
+        let zw: Vec<i32> = (0..n).map(|_| (next() % (1 << q)) as i32).collect();
+        (x, w, zx, zw)
+    }
+
+    #[test]
+    fn all_variants_match_reference() {
+        for &(m, n, k, p, q) in &[
+            (1usize, 16usize, 128usize, 8usize, 2usize),
+            (4, 33, 100, 4, 4),
+            (7, 8, 64, 2, 8),
+            (3, 5, 200, 3, 5),
+            (1, 1, 64, 1, 1),
+            (2, 9, 65, 5, 3),
+        ] {
+            let (xc, wc, zx, zw) = case(m, n, k, p, q, (m * n * k) as u64);
+            let x = BitPlanes::pack(&xc, m, k, p);
+            let w = BitPlanes::pack(&wc, n, k, q);
+            let want = gemm_int_reference(&xc, &wc, m, n, k, &zx, &zw);
+            for opt in [OptLevel::Naive, OptLevel::Pipelined, OptLevel::GemvElim, OptLevel::Auto] {
+                let got = gemm_int(&x, &w, &zx, &zw, opt, None);
+                assert_eq!(got, want, "variant {opt:?} m{m} n{n} k{k} p{p} q{q}");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_with_explicit_configs_matches() {
+        let (xc, wc, zx, zw) = case(5, 47, 192, 6, 3, 99);
+        let x = BitPlanes::pack(&xc, 5, 192, 6);
+        let w = BitPlanes::pack(&wc, 47, 192, 3);
+        let want = gemm_int_reference(&xc, &wc, 5, 47, 192, &zx, &zw);
+        for nb in [1usize, 7, 16, 64] {
+            for fanout in [1usize, 2, 4] {
+                for parallel in [false, true] {
+                    let cfg = TileConfig::new(nb, 0, fanout, parallel);
+                    let got = gemm_int(&x, &w, &zx, &zw, OptLevel::Auto, Some(cfg));
+                    assert_eq!(got, want, "cfg {cfg:?}");
+                }
+            }
+        }
+    }
+}

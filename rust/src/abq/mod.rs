@@ -1,0 +1,158 @@
+//! The ABQ engine: arbitrary-bit quantized GEMM via 1-bit decomposition
+//! (paper §3.4 + Appendices B/D). See DESIGN.md §3 for the GPU→CPU mapping.
+//!
+//! Submodules follow the paper's kernel structure:
+//! * [`bitplane`] — BitPacking (`[M,K,p] → [p,M,K]`)
+//! * [`bmma`]     — the 1-bit MAC primitive (AND+POPCNT)
+//! * [`gemm`]     — the p×q superposition with the Table-4 variant ladder
+//! * [`reduction`]— Bit Reduction + zero-point correction + dequant
+//! * [`tile`]/[`search`] — auto kernel search
+//! * [`pipeline`] — staged/pipelined multi-token GEMM
+
+pub mod bitplane;
+pub mod bmma;
+pub mod gemm;
+pub mod pipeline;
+pub mod reduction;
+pub mod search;
+pub mod tile;
+
+pub use bitplane::BitPlanes;
+pub use gemm::{gemm_int, gemm_int_reference, OptLevel};
+pub use tile::TileConfig;
+
+use crate::quant::{quantize_act_per_token, QuantSpec, WAConfig};
+
+/// A prepared quantized linear layer: packed weight planes + per-channel
+/// scales/zero-points + optional balance vector. This is the runtime form
+/// of one `nn.Linear` in the served model; `model::transformer` holds one
+/// per projection.
+#[derive(Clone)]
+pub struct QuantizedLinear {
+    /// packed weight bit-planes `[out, in]`
+    pub w: BitPlanes,
+    pub zw: Vec<i32>,
+    pub dw: Vec<f32>,
+    /// learned balance vector s (activations are divided by it)
+    pub balance: Option<Vec<f32>>,
+    pub cfg: WAConfig,
+    pub out_features: usize,
+    pub in_features: usize,
+}
+
+impl QuantizedLinear {
+    /// Build from exported integer codes (the `.abqw` form).
+    pub fn from_codes(
+        codes: &[u8],
+        out_features: usize,
+        in_features: usize,
+        zw: Vec<i32>,
+        dw: Vec<f32>,
+        balance: Option<Vec<f32>>,
+        cfg: WAConfig,
+    ) -> Self {
+        let planes = cfg.weight.planes();
+        let w = BitPlanes::pack(codes, out_features, in_features, planes);
+        QuantizedLinear { w, zw, dw, balance, cfg, out_features, in_features }
+    }
+
+    /// Build by quantizing float weights round-to-nearest (baseline path).
+    pub fn from_weights_rtn(wf: &[f32], out_features: usize, in_features: usize, cfg: WAConfig) -> Self {
+        let q = crate::quant::quantize_weight_rows(
+            wf, out_features, in_features, &cfg.weight, 1.0, 1.0);
+        Self::from_codes(&q.codes, out_features, in_features, q.zps(), q.deltas(), None, cfg)
+    }
+
+    /// Forward: `x` `[tokens, in]` f32 → `[tokens, out]` f32.
+    ///
+    /// Dynamic per-token activation quantization → bit-plane GEMM →
+    /// dequant epilogue. `opt` selects the Table-4 kernel variant;
+    /// serving uses `OptLevel::Auto`.
+    pub fn forward(&self, x: &[f32], tokens: usize, opt: OptLevel) -> Vec<f32> {
+        assert_eq!(x.len(), tokens * self.in_features);
+        let mut xb;
+        let x = if let Some(s) = &self.balance {
+            xb = x.to_vec();
+            crate::quant::apply_balance_act(&mut xb, self.in_features, s);
+            &xb[..]
+        } else {
+            x
+        };
+        let spec = QuantSpec::new(self.cfg.act.bits);
+        let qa = quantize_act_per_token(x, tokens, self.in_features, &spec);
+        let xp = BitPlanes::pack(&qa.codes, tokens, self.in_features, spec.planes());
+        let zx = qa.zps();
+        let dx = qa.deltas();
+        let acc = if tokens > 8 && opt == OptLevel::Auto {
+            pipeline::gemm_staged(&xp, &self.w, &zx, &self.zw)
+        } else if opt == OptLevel::Auto {
+            search::gemm_int_auto(&xp, &self.w, &zx, &self.zw)
+        } else {
+            gemm::gemm_int(&xp, &self.w, &zx, &self.zw, opt, None)
+        };
+        let mut out = vec![0f32; tokens * self.out_features];
+        reduction::dequantize(&acc, tokens, self.out_features, &dx, &self.dw, &mut out);
+        out
+    }
+
+    /// Packed weight footprint in bytes (memory accounting, Table 12).
+    pub fn weight_bytes(&self) -> usize {
+        self.w.packed_bytes() + self.zw.len() * 4 + self.dw.len() * 4
+            + self.balance.as_ref().map_or(0, |b| b.len() * 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantized_linear_tracks_fp_at_8bit() {
+        let (out_f, in_f, tokens) = (32usize, 64usize, 4usize);
+        let mut st = 9u64;
+        let mut nextf = move || {
+            st = st.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((st >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+        };
+        let w: Vec<f32> = (0..out_f * in_f).map(|_| nextf() * 0.1).collect();
+        let x: Vec<f32> = (0..tokens * in_f).map(|_| nextf() * 2.0).collect();
+        let lin = QuantizedLinear::from_weights_rtn(&w, out_f, in_f, WAConfig::new(8, 8));
+        let y = lin.forward(&x, tokens, OptLevel::Auto);
+        // fp reference
+        let mut maxerr = 0f32;
+        let mut maxval = 0f32;
+        for t in 0..tokens {
+            for o in 0..out_f {
+                let mut acc = 0f32;
+                for i in 0..in_f {
+                    acc += x[t * in_f + i] * w[o * in_f + i];
+                }
+                maxerr = maxerr.max((acc - y[t * out_f + o]).abs());
+                maxval = maxval.max(acc.abs());
+            }
+        }
+        assert!(maxerr / maxval < 0.02, "rel err {}", maxerr / maxval);
+    }
+
+    #[test]
+    fn w2_star_uses_three_planes() {
+        let w = vec![0.1f32; 8 * 64];
+        let lin = QuantizedLinear::from_weights_rtn(&w, 8, 64, WAConfig::balanced(2, 8));
+        assert_eq!(lin.w.planes, 3);
+    }
+
+    #[test]
+    fn opt_levels_agree_on_linear() {
+        let (out_f, in_f, tokens) = (16usize, 96usize, 2usize);
+        let w: Vec<f32> = (0..out_f * in_f).map(|i| ((i % 17) as f32 - 8.0) / 40.0).collect();
+        let x: Vec<f32> = (0..tokens * in_f).map(|i| ((i % 13) as f32 - 6.0) / 3.0).collect();
+        let lin = QuantizedLinear::from_weights_rtn(&w, out_f, in_f, WAConfig::new(4, 8));
+        let a = lin.forward(&x, tokens, OptLevel::Naive);
+        let b = lin.forward(&x, tokens, OptLevel::Pipelined);
+        let c = lin.forward(&x, tokens, OptLevel::GemvElim);
+        let d = lin.forward(&x, tokens, OptLevel::Auto);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+        assert_eq!(a, d);
+    }
+}

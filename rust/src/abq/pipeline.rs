@@ -1,0 +1,96 @@
+//! Computational-pipeline optimisation (paper Appendix D, Fig. 9).
+//!
+//! The GPU kernel hides memory latency by staging the next K tile into
+//! shared memory with `cp.async` while BMMA consumes the current one, and
+//! by double-buffering fragments in registers. The CPU analogue:
+//!
+//!  * **operand staging** — for the prefill (large-M) case, the activation
+//!    plane-rows of one M tile are copied into one dense, (m,s)-interleaved
+//!    buffer before the weight sweep, so the inner loop reads both operands
+//!    strictly sequentially (hardware prefetchers then do the cp.async job);
+//!  * **ILP double-buffering** — the unrolled multi-accumulator popcount
+//!    chains in `bmma.rs` keep 4 independent dependency chains in flight,
+//!    the register double-buffer analogue.
+//!
+//! `gemm_staged` is bit-identical to the other variants (tested) and is
+//! what `model::transformer` uses for prefill GEMMs.
+
+use crate::util::par;
+
+use super::bitplane::BitPlanes;
+use super::bmma::bdot_unrolled;
+use super::reduction::correct_tile;
+
+/// M-tile size for operand staging (fits p·MB·kwords·8 bytes in L2).
+const MB: usize = 16;
+
+/// Staged ABQ GEMM for the multi-token case.
+///
+/// Stages each M-tile's activation planes as `[mi][s][kwords]` contiguous
+/// rows, then sweeps all weight plane-rows once per tile, parallel over N.
+pub fn gemm_staged(x: &BitPlanes, w: &BitPlanes, zx: &[i32], zw: &[i32]) -> Vec<i64> {
+    let (m, n) = (x.rows, w.rows);
+    let (p, q) = (x.planes, w.planes);
+    let kw = x.kwords;
+    assert_eq!(x.k, w.k);
+    let mut acc = vec![0i64; m * n];
+
+    let mut m0 = 0usize;
+    while m0 < m {
+        let m1 = (m0 + MB).min(m);
+        let mt = m1 - m0;
+        // ---- stage: contiguous [mi][s] plane buffer for this M tile ----
+        let mut staged = vec![0u64; mt * p * kw];
+        for mi in 0..mt {
+            for s in 0..p {
+                let src = x.plane_row(s, m0 + mi);
+                staged[(mi * p + s) * kw..(mi * p + s + 1) * kw].copy_from_slice(src);
+            }
+        }
+        // ---- sweep: each weight plane-row streams once per tile ----
+        let rows: Vec<Vec<i64>> = par::par_map_indexed(n, |ni| {
+                let mut col = vec![0i64; mt];
+                for t in 0..q {
+                    let wrow = w.plane_row(t, ni);
+                    for mi in 0..mt {
+                        let base = (mi * p) * kw;
+                        let mut a = 0i64;
+                        for s in 0..p {
+                            let xr = &staged[base + s * kw..base + (s + 1) * kw];
+                            a += (bdot_unrolled(xr, wrow) as i64) << s;
+                        }
+                        col[mi] += a << t;
+                    }
+                }
+                col
+        });
+        for (ni, col) in rows.iter().enumerate() {
+            for mi in 0..mt {
+                acc[(m0 + mi) * n + ni] = col[mi];
+            }
+        }
+        m0 = m1;
+    }
+    correct_tile(&mut acc, m, n, x.k, zx, zw, &x.rowsum, &w.rowsum);
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abq::gemm::gemm_int_reference;
+
+    #[test]
+    fn staged_matches_reference() {
+        let (m, n, k, p, q) = (37usize, 29usize, 130usize, 6usize, 3usize);
+        let xc: Vec<u8> = (0..m * k).map(|i| ((i * 7 + 3) % (1 << p)) as u8).collect();
+        let wc: Vec<u8> = (0..n * k).map(|i| ((i * 5 + 1) % (1 << q)) as u8).collect();
+        let zx: Vec<i32> = (0..m).map(|i| (i % (1 << p)) as i32).collect();
+        let zw: Vec<i32> = (0..n).map(|i| (i % (1 << q)) as i32).collect();
+        let x = BitPlanes::pack(&xc, m, k, p);
+        let w = BitPlanes::pack(&wc, n, k, q);
+        let got = gemm_staged(&x, &w, &zx, &zw);
+        let want = gemm_int_reference(&xc, &wc, m, n, k, &zx, &zw);
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,78 @@
+//! Bit Reduction (paper §3.4 step ❺, Eq. 10): combine the p×q BMMA partial
+//! products into the integer GEMM result, then apply the zero-point
+//! correction and the dequantization epilogue.
+//!
+//!   Y_int = Σ_{s,t} 2^{s+t} · BMMA(Xˢ, Wᵗ)
+//!           − zx·rowsum(Wq) − zw·rowsum(Xq) + K·zx·zw
+//!   Y_fp  = dx[m] · dw[n] · Y_int[m,n]
+
+/// Zero-point / cross-term correction for one output element.
+#[inline(always)]
+pub fn zp_correction(k: usize, zx: i32, zw: i32, xsum: i64, wsum: i64) -> i64 {
+    -(zx as i64) * wsum - (zw as i64) * xsum + (k as i64) * (zx as i64) * (zw as i64)
+}
+
+/// Apply the correction to a full `[m, n]` i64 accumulator tile in place.
+pub fn correct_tile(
+    acc: &mut [i64],
+    m: usize,
+    n: usize,
+    k: usize,
+    zx: &[i32],
+    zw: &[i32],
+    xsum: &[i64],
+    wsum: &[i64],
+) {
+    for mi in 0..m {
+        let c_row = &mut acc[mi * n..(mi + 1) * n];
+        let zxm = zx[mi] as i64;
+        let xsm = xsum[mi];
+        for ni in 0..n {
+            c_row[ni] += -zxm * wsum[ni] - (zw[ni] as i64) * xsm
+                + (k as i64) * zxm * (zw[ni] as i64);
+        }
+    }
+}
+
+/// Dequantize: per-token scale `dx[m]` × per-channel scale `dw[n]`.
+pub fn dequantize(acc: &[i64], m: usize, n: usize, dx: &[f32], dw: &[f32], out: &mut [f32]) {
+    assert_eq!(acc.len(), m * n);
+    assert_eq!(out.len(), m * n);
+    for mi in 0..m {
+        let dxm = dx[mi];
+        for ni in 0..n {
+            out[mi * n + ni] = acc[mi * n + ni] as f32 * dxm * dw[ni];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn correction_matches_expansion() {
+        // (x - zx)·(w - zw) = x·w - zx·w - zw·x + zx·zw, summed over k
+        let k = 5usize;
+        let x = [3i64, 1, 4, 1, 5];
+        let w = [2i64, 7, 1, 8, 2];
+        let (zx, zw) = (2i32, 3i32);
+        let raw: i64 = x.iter().zip(&w).map(|(a, b)| a * b).sum();
+        let want: i64 = x
+            .iter()
+            .zip(&w)
+            .map(|(a, b)| (a - zx as i64) * (b - zw as i64))
+            .sum();
+        let xsum: i64 = x.iter().sum();
+        let wsum: i64 = w.iter().sum();
+        assert_eq!(raw + zp_correction(k, zx, zw, xsum, wsum), want);
+    }
+
+    #[test]
+    fn dequant_scales() {
+        let acc = vec![2i64, 4, 6, 8];
+        let mut out = vec![0f32; 4];
+        dequantize(&acc, 2, 2, &[0.5, 2.0], &[1.0, 10.0], &mut out);
+        assert_eq!(out, vec![1.0, 20.0, 12.0, 160.0]);
+    }
+}

@@ -1,0 +1,92 @@
+//! Auto Kernel Search (paper Appendix D): before launching an
+//! arbitrary-precision operator on a new shape, micro-benchmark the
+//! candidate tile configs and cache the winner.
+//!
+//! The GPU search space is (BM, BN, BK, WM, WN) under shared-memory and
+//! register budgets; ours is (n-block, fanout, parallelism) under an L1/L2
+//! budget (`tile::candidates`). The search runs each candidate a few times
+//! on the real operands and keeps the fastest — exactly the paper's
+//! "test the operators at various chunk sizes and adopt the speed-optimised
+//! implementation".
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::bitplane::BitPlanes;
+use super::gemm::{gemm_int, OptLevel};
+use super::tile::{candidates, ShapeKey, TileConfig};
+
+/// Process-wide search cache: shape → best config.
+static CACHE: Mutex<Option<HashMap<ShapeKey, TileConfig>>> = Mutex::new(None);
+
+/// Number of timed repetitions per candidate (median taken).
+const REPS: usize = 3;
+
+pub fn lookup(key: &ShapeKey) -> Option<TileConfig> {
+    CACHE.lock().unwrap().as_ref().and_then(|m| m.get(key).copied())
+}
+
+fn insert(key: ShapeKey, cfg: TileConfig) {
+    let mut g = CACHE.lock().unwrap();
+    g.get_or_insert_with(HashMap::new).insert(key, cfg);
+}
+
+/// Find (or recall) the best tile config for this operand pair.
+pub fn best_config(x: &BitPlanes, w: &BitPlanes) -> TileConfig {
+    let key = ShapeKey { m: x.rows, n: w.rows, k: x.k, p_bits: x.planes, q_bits: w.planes };
+    if let Some(hit) = lookup(&key) {
+        return hit;
+    }
+    let zx = vec![0i32; x.rows];
+    let zw = vec![0i32; w.rows];
+    let mut best = TileConfig::default();
+    let mut best_t = f64::INFINITY;
+    for cand in candidates(x.kwords, w.planes) {
+        let mut times = Vec::with_capacity(REPS);
+        for _ in 0..REPS {
+            let t0 = Instant::now();
+            let out = gemm_int(x, w, &zx, &zw, OptLevel::Auto, Some(cand));
+            std::hint::black_box(&out);
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let t = times[REPS / 2];
+        if t < best_t {
+            best_t = t;
+            best = cand;
+        }
+    }
+    insert(key, best);
+    best
+}
+
+/// Run with the searched config (searching on first use).
+pub fn gemm_int_auto(x: &BitPlanes, w: &BitPlanes, zx: &[i32], zw: &[i32]) -> Vec<i64> {
+    let cfg = best_config(x, w);
+    gemm_int(x, w, zx, zw, OptLevel::Auto, Some(cfg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abq::gemm::gemm_int_reference;
+
+    #[test]
+    fn search_returns_correct_kernel_and_caches() {
+        let m = 1;
+        let n = 64;
+        let k = 256;
+        let xc: Vec<u8> = (0..m * k).map(|i| (i % 256) as u8).collect();
+        let wc: Vec<u8> = (0..n * k).map(|i| (i % 4) as u8).collect();
+        let x = BitPlanes::pack(&xc, m, k, 8);
+        let w = BitPlanes::pack(&wc, n, k, 2);
+        let zx = vec![3i32; m];
+        let zw = vec![1i32; n];
+        let got = gemm_int_auto(&x, &w, &zx, &zw);
+        let want = gemm_int_reference(&xc, &wc, m, n, k, &zx, &zw);
+        assert_eq!(got, want);
+        let key = ShapeKey { m, n, k, p_bits: 8, q_bits: 2 };
+        assert!(lookup(&key).is_some(), "search result cached");
+    }
+}

@@ -1,0 +1,83 @@
+//! Tile configurations — the CPU analogue of the paper's Thread Block /
+//! Warp tile hierarchy (§3.4, Appendix D "Auto Kernel Search").
+//!
+//! On the GPU the search space is (BM, BN, BK, WM, WN) constrained by
+//! shared memory and register budget; here it is (n-block, k-panel,
+//! B-row fanout, thread count) constrained by L1/L2 capacity. `search.rs`
+//! micro-benchmarks candidates per (shape, bits) and caches the winner.
+
+/// One candidate kernel configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TileConfig {
+    /// weight rows processed per cache tile (BN analogue)
+    pub nb: usize,
+    /// K words per panel (BK analogue); 0 = whole K in one panel
+    pub kw_panel: usize,
+    /// B-row fanout of the inner kernel: 1, 2 or 4 rows per A-word load
+    pub fanout: usize,
+    /// parallelise over weight-row tiles (util::par workers)
+    pub parallel: bool,
+}
+
+impl TileConfig {
+    pub const fn new(nb: usize, kw_panel: usize, fanout: usize, parallel: bool) -> Self {
+        TileConfig { nb, kw_panel, fanout, parallel }
+    }
+}
+
+impl Default for TileConfig {
+    fn default() -> Self {
+        TileConfig { nb: 64, kw_panel: 0, fanout: 4, parallel: true }
+    }
+}
+
+/// The candidate set explored by auto kernel search. Mirrors the paper's
+/// staged design process: fix the MMA granularity (here the u64 word),
+/// enumerate block tiles, reject configs whose working set overflows the
+/// cache budget (we bound: nb plane-rows × kwords × 8B ≤ 1 MiB).
+pub fn candidates(kwords: usize, q_planes: usize) -> Vec<TileConfig> {
+    let mut out = Vec::new();
+    for &nb in &[16usize, 32, 64, 128, 256] {
+        let bytes = nb * q_planes * kwords * 8;
+        if bytes > (1 << 20) {
+            continue;
+        }
+        for &fanout in &[1usize, 2, 4] {
+            for &parallel in &[false, true] {
+                out.push(TileConfig::new(nb, 0, fanout, parallel));
+            }
+        }
+    }
+    if out.is_empty() {
+        out.push(TileConfig::default());
+    }
+    out
+}
+
+/// Shape key for the search cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ShapeKey {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub p_bits: usize,
+    pub q_bits: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidates_respect_cache_budget() {
+        let kwords = 4096 / 64;
+        for c in candidates(kwords, 8) {
+            assert!(c.nb * 8 * kwords * 8 <= 1 << 20);
+        }
+    }
+
+    #[test]
+    fn candidates_nonempty_even_for_huge_k() {
+        assert!(!candidates(1 << 20, 8).is_empty());
+    }
+}

@@ -1,0 +1,122 @@
+//! INT4 GEMM baseline — "CUTLASS W4A4" (m8n8k32 IMMA.S4): nibble-packed
+//! weights, i32 accumulation, pad-M-to-8 GEMV waste. The paper's point
+//! (§1, §4.4) is that configurations like W2A8 must be *up-converted* to
+//! W4A4/W8A8 to run on these units — the conversion cost and padding are
+//! what the ABQ engine eliminates.
+
+use crate::util::par;
+
+use super::padded_m;
+
+/// Nibble-packed INT4 weights `[n, k/2]` (two codes per byte).
+pub struct Int4Gemm {
+    pub w_packed: Vec<u8>,
+    pub zw: Vec<i32>,
+    pub dw: Vec<f32>,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl Int4Gemm {
+    pub fn from_weights(wf: &[f32], n: usize, k: usize) -> Self {
+        assert!(k % 2 == 0, "int4 pack needs even K");
+        let q = crate::quant::quantize_weight_rows(
+            wf, n, k, &crate::quant::QuantSpec::new(4), 1.0, 1.0);
+        let mut w_packed = vec![0u8; n * k / 2];
+        for i in 0..n * k / 2 {
+            w_packed[i] = (q.codes[2 * i] & 0xF) | (q.codes[2 * i + 1] << 4);
+        }
+        Int4Gemm { w_packed, zw: q.zps(), dw: q.deltas(), n, k }
+    }
+
+    /// Integer kernel on 4-bit activation codes (`x` unsigned 0..15).
+    pub fn gemm_int(&self, x: &[u8], m: usize, zx: &[i32]) -> Vec<i32> {
+        assert_eq!(x.len(), m * self.k);
+        let mp = padded_m(m);
+        let k = self.k;
+        let mut xp = vec![0u8; mp * k];
+        xp[..m * k].copy_from_slice(x);
+        let cols: Vec<Vec<i32>> = par::par_map_indexed(self.n, |ni| {
+                let wrow = &self.w_packed[ni * k / 2..(ni + 1) * k / 2];
+                let mut col = vec![0i32; mp];
+                for mi in 0..mp {
+                    let xrow = &xp[mi * k..(mi + 1) * k];
+                    let mut acc = 0i32;
+                    for b in 0..k / 2 {
+                        let w0 = (wrow[b] & 0xF) as i32;
+                        let w1 = (wrow[b] >> 4) as i32;
+                        acc += xrow[2 * b] as i32 * w0 + xrow[2 * b + 1] as i32 * w1;
+                    }
+                    col[mi] = acc;
+                }
+                col
+        });
+        let mut out = vec![0i32; m * self.n];
+        let wsums: Vec<i32> = (0..self.n)
+            .map(|ni| {
+                self.w_packed[ni * k / 2..(ni + 1) * k / 2]
+                    .iter()
+                    .map(|&b| (b & 0xF) as i32 + (b >> 4) as i32)
+                    .sum()
+            })
+            .collect();
+        let xsums: Vec<i32> = (0..m)
+            .map(|mi| x[mi * k..(mi + 1) * k].iter().map(|&v| v as i32).sum())
+            .collect();
+        for mi in 0..m {
+            for ni in 0..self.n {
+                out[mi * self.n + ni] = cols[ni][mi] - zx[mi] * wsums[ni]
+                    - self.zw[ni] * xsums[mi]
+                    + (k as i32) * zx[mi] * self.zw[ni];
+            }
+        }
+        out
+    }
+
+    /// Full forward from float activations (dynamic per-token 4-bit quant).
+    pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
+        let q = crate::quant::quantize_act_per_token(
+            x, m, self.k, &crate::quant::QuantSpec::new(4));
+        let zx = q.zps();
+        let yint = self.gemm_int(&q.codes, m, &zx);
+        let dx = q.deltas();
+        let mut out = vec![0f32; m * self.n];
+        for mi in 0..m {
+            for ni in 0..self.n {
+                out[mi * self.n + ni] = yint[mi * self.n + ni] as f32 * dx[mi] * self.dw[ni];
+            }
+        }
+        out
+    }
+
+    pub fn weight_bytes(&self) -> usize {
+        self.w_packed.len() + self.zw.len() * 4 + self.dw.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int4_int_kernel_matches_naive() {
+        let (n, k, m) = (5usize, 32usize, 2usize);
+        let wf: Vec<f32> = (0..n * k).map(|i| ((i % 15) as f32 - 7.0) / 20.0).collect();
+        let g = Int4Gemm::from_weights(&wf, n, k);
+        let x: Vec<u8> = (0..m * k).map(|i| (i % 16) as u8).collect();
+        let zx = vec![7i32, 3];
+        let got = g.gemm_int(&x, m, &zx);
+        // unpack codes and compute naively
+        for mi in 0..m {
+            for ni in 0..n {
+                let mut want = 0i32;
+                for ki in 0..k {
+                    let b = g.w_packed[ni * k / 2 + ki / 2];
+                    let wq = if ki % 2 == 0 { b & 0xF } else { b >> 4 } as i32;
+                    want += (x[mi * k + ki] as i32 - zx[mi]) * (wq - g.zw[ni]);
+                }
+                assert_eq!(got[mi * n + ni], want);
+            }
+        }
+    }
+}

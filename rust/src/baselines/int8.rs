@@ -1,0 +1,119 @@
+//! INT8 GEMM baseline — "cuBLAS / CUTLASS W8A8", the engine SmoothQuant
+//! deploys on. Computes with i8 operands and i32 accumulation like the
+//! m8n8k16 IMMA path, **including the pad-M-to-8 GEMV waste** (Fig. 8):
+//! when M < 8 the padded rows are physically computed, because that is
+//! what the TensorCore does.
+
+use crate::util::par;
+
+use super::padded_m;
+
+/// Prepared INT8 weight (codes + per-channel dequant), `[n, k]` row-major.
+pub struct Int8Gemm {
+    pub w: Vec<i8>,
+    pub zw: Vec<i32>,
+    pub dw: Vec<f32>,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl Int8Gemm {
+    pub fn from_weights(wf: &[f32], n: usize, k: usize) -> Self {
+        let q = crate::quant::quantize_weight_rows(
+            wf, n, k, &crate::quant::QuantSpec::new(8), 1.0, 1.0);
+        // shift unsigned codes to signed i8 (z - 128), standard IMMA form
+        let w: Vec<i8> = q.codes.iter().map(|&c| (c as i32 - 128) as i8).collect();
+        let zw: Vec<i32> = q.params.iter().map(|p| p.zp - 128).collect();
+        let dw: Vec<f32> = q.params.iter().map(|p| p.delta).collect();
+        Int8Gemm { w, zw, dw, n, k }
+    }
+
+    /// Integer kernel on already-quantized activations.
+    /// `x` `[m, k]` signed codes with per-token `zx`. Pads M to the MMA
+    /// granularity and computes the padded rows (the modelled waste).
+    pub fn gemm_int(&self, x: &[i8], m: usize, zx: &[i32]) -> Vec<i32> {
+        assert_eq!(x.len(), m * self.k);
+        let mp = padded_m(m);
+        let k = self.k;
+        // physical padded activation buffer (zeros) — the wasted rows
+        let mut xp = vec![0i8; mp * k];
+        xp[..m * k].copy_from_slice(x);
+        let cols: Vec<Vec<i32>> = par::par_map_indexed(self.n, |ni| {
+                let wrow = &self.w[ni * k..(ni + 1) * k];
+                let mut col = vec![0i32; mp];
+                for mi in 0..mp {
+                    let xrow = &xp[mi * k..(mi + 1) * k];
+                    let mut acc = 0i32;
+                    for ki in 0..k {
+                        acc += xrow[ki] as i32 * wrow[ki] as i32;
+                    }
+                    col[mi] = acc;
+                }
+                col
+        });
+        // correction + trim padding
+        let mut out = vec![0i32; m * self.n];
+        for (ni, col) in cols.iter().enumerate() {
+            for mi in 0..m {
+                out[mi * self.n + ni] = col[mi];
+            }
+        }
+        // zero-point correction: (x - zx)·(w - zw)
+        let wsums: Vec<i32> = (0..self.n)
+            .map(|ni| self.w[ni * k..(ni + 1) * k].iter().map(|&v| v as i32).sum())
+            .collect();
+        let xsums: Vec<i32> = (0..m)
+            .map(|mi| x[mi * k..(mi + 1) * k].iter().map(|&v| v as i32).sum())
+            .collect();
+        for mi in 0..m {
+            for ni in 0..self.n {
+                out[mi * self.n + ni] += -zx[mi] * wsums[ni] - self.zw[ni] * xsums[mi]
+                    + (k as i32) * zx[mi] * self.zw[ni];
+            }
+        }
+        out
+    }
+
+    /// Full forward from float activations (dynamic per-token quant).
+    pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
+        let q = crate::quant::quantize_act_per_token(
+            x, m, self.k, &crate::quant::QuantSpec::new(8));
+        let xs: Vec<i8> = q.codes.iter().map(|&c| (c as i32 - 128) as i8).collect();
+        let zx: Vec<i32> = q.params.iter().map(|p| p.zp - 128).collect();
+        let yint = self.gemm_int(&xs, m, &zx);
+        let dx: Vec<f32> = q.params.iter().map(|p| p.delta).collect();
+        let mut out = vec![0f32; m * self.n];
+        for mi in 0..m {
+            for ni in 0..self.n {
+                out[mi * self.n + ni] = yint[mi * self.n + ni] as f32 * dx[mi] * self.dw[ni];
+            }
+        }
+        out
+    }
+
+    pub fn weight_bytes(&self) -> usize {
+        self.w.len() + self.zw.len() * 4 + self.dw.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int8_tracks_fp() {
+        let (n, k, m) = (16usize, 64usize, 3usize);
+        let w: Vec<f32> = (0..n * k).map(|i| ((i % 23) as f32 - 11.0) / 50.0).collect();
+        let x: Vec<f32> = (0..m * k).map(|i| ((i % 19) as f32 - 9.0) / 3.0).collect();
+        let g = Int8Gemm::from_weights(&w, n, k);
+        let y = g.forward(&x, m);
+        for mi in 0..m {
+            for ni in 0..n {
+                let want: f32 = (0..k).map(|ki| x[mi * k + ki] * w[ni * k + ki]).sum();
+                let got = y[mi * n + ni];
+                assert!((got - want).abs() < 0.05 * want.abs().max(1.0),
+                        "m{mi} n{ni} got {got} want {want}");
+            }
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! Baseline GEMM engines standing in for the paper's comparators
+//! (DESIGN.md §3/§4): `fp32` ≙ FastTransformer FP16, `int8` ≙
+//! cuBLAS/CUTLASS W8A8 (SmoothQuant's engine), `int4` ≙ CUTLASS W4A4.
+//!
+//! The crucial *behavioural* property carried over from the GPU: integer
+//! TensorCore MMA has an M granularity of 8 (m8n8k16/m8n8k32), so a GEMV
+//! (M=1) pays for 8 rows — 87.5 % padding waste (paper Fig. 8). The
+//! baselines reproduce that by physically computing the padded rows, which
+//! is exactly what the GPU does. The ABQ engine avoids it via GEMV
+//! elimination; benches `fig5_gemv` / `t4_ablation` measure the gap.
+
+pub mod fp32;
+pub mod int4;
+pub mod int8;
+
+pub use fp32::gemm_fp32;
+pub use int4::Int4Gemm;
+pub use int8::Int8Gemm;
+
+/// MMA M-granularity all integer-TensorCore baselines pad to.
+pub const MMA_M: usize = 8;
+
+/// Pad M up to the MMA granularity (the padding the paper's Fig. 8 shows).
+pub fn padded_m(m: usize) -> usize {
+    m.div_ceil(MMA_M) * MMA_M
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn padding_rule() {
+        assert_eq!(super::padded_m(1), 8);
+        assert_eq!(super::padded_m(8), 8);
+        assert_eq!(super::padded_m(9), 16);
+    }
+}

@@ -1,0 +1,125 @@
+//! Dynamic batcher: groups queued requests into admission batches under a
+//! size cap and a wait deadline — the standard continuous-batching
+//! admission policy (vLLM/Orca-style), which is what the paper's engine
+//! plugs into (its FastTransformer integration batches the same way).
+//!
+//! Invariants (property-tested in rust/tests/proptest_coordinator.rs):
+//!   * a drained batch never exceeds `max_batch`
+//!   * FIFO order is preserved
+//!   * a request is never dropped or duplicated
+//!   * a non-empty queue always drains once the oldest entry passes the
+//!     deadline (no starvation)
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::QueuedRequest;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// max requests admitted per batch
+    pub max_batch: usize,
+    /// max time the oldest request may wait before forcing a drain
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) }
+    }
+}
+
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<QueuedRequest>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Batcher { cfg, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: QueuedRequest) {
+        self.queue.push_back(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should the queue be drained now? True when full batch is available
+    /// or the oldest entry has waited past the deadline.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.cfg.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some(front) => now.duration_since(front.arrived) >= self.cfg.max_wait,
+            None => false,
+        }
+    }
+
+    /// Remove up to `capacity.min(max_batch)` requests, FIFO.
+    pub fn drain(&mut self, capacity: usize) -> Vec<QueuedRequest> {
+        let take = capacity.min(self.cfg.max_batch).min(self.queue.len());
+        self.queue.drain(..take).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Request;
+
+    fn qr(id: u64) -> QueuedRequest {
+        QueuedRequest { req: Request::new(id, vec![1, 2], 4), arrived: Instant::now() }
+    }
+
+    #[test]
+    fn drains_fifo_up_to_cap() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 3, max_wait: Duration::ZERO });
+        for id in 0..5 {
+            b.push(qr(id));
+        }
+        assert!(b.ready(Instant::now()));
+        let batch = b.drain(10);
+        assert_eq!(batch.iter().map(|q| q.req.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn respects_capacity() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        for id in 0..5 {
+            b.push(qr(id));
+        }
+        assert_eq!(b.drain(2).len(), 2);
+    }
+
+    #[test]
+    fn not_ready_when_fresh_and_small() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_secs(10),
+        });
+        b.push(qr(0));
+        assert!(!b.ready(Instant::now()));
+    }
+
+    #[test]
+    fn deadline_forces_drain() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        });
+        b.push(QueuedRequest {
+            req: Request::new(0, vec![1], 1),
+            arrived: Instant::now() - Duration::from_millis(5),
+        });
+        assert!(b.ready(Instant::now()));
+    }
+}

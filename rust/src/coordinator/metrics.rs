@@ -1,0 +1,125 @@
+//! Serving metrics: counters + streaming latency histograms. Lock-light
+//! (one mutex, touched off the hot loop at batch granularity).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Fixed log-scale latency histogram (µs buckets, powers of two).
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    pub counts: Vec<u64>, // bucket i covers [2^i, 2^(i+1)) µs
+    pub total: u64,
+    pub sum_us: u64,
+    pub max_us: u64,
+}
+
+impl Histogram {
+    pub fn record(&mut self, us: u64) {
+        let bucket = 64 - us.max(1).leading_zeros() as usize;
+        if self.counts.len() <= bucket {
+            self.counts.resize(bucket + 1, 0);
+        }
+        self.counts[bucket] += 1;
+        self.total += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.total as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = (self.total as f64 * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << i;
+            }
+        }
+        self.max_us
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct MetricsInner {
+    pub counters: BTreeMap<String, u64>,
+    pub histograms: BTreeMap<String, Histogram>,
+}
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<MetricsInner>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn observe_us(&self, name: &str, us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.histograms.entry(name.to_string()).or_default().record(us);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn snapshot(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (k, v) in &g.counters {
+            out.push_str(&format!("{k}: {v}\n"));
+        }
+        for (k, h) in &g.histograms {
+            out.push_str(&format!(
+                "{k}: n={} mean={:.0}us p50={}us p95={}us max={}us\n",
+                h.total,
+                h.mean_us(),
+                h.quantile_us(0.5),
+                h.quantile_us(0.95),
+                h.max_us
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("req", 1);
+        m.incr("req", 2);
+        assert_eq!(m.counter("req"), 3);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = Histogram::default();
+        for us in [10u64, 20, 40, 80, 160, 1000, 5000] {
+            h.record(us);
+        }
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.95));
+        assert!(h.mean_us() > 0.0);
+        assert_eq!(h.total, 7);
+    }
+}

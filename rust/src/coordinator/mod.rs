@@ -1,0 +1,17 @@
+//! L3 serving coordinator (the paper's deployment context): request
+//! router, dynamic batcher, continuous-batching scheduler with KV-aware
+//! admission, metrics. See `server.rs` for the thread topology.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use request::{QueuedRequest, Request, Response, Timing};
+pub use router::Router;
+pub use scheduler::{Scheduler, SchedulerConfig};
+pub use server::{Server, ServerConfig};

@@ -1,0 +1,68 @@
+//! Request/response types for the serving coordinator.
+
+use std::time::Instant;
+
+use crate::model::Sampling;
+
+/// A generation request (the unit the router/batcher/scheduler move).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub sampling: Sampling,
+    /// quant config tag the client asked for ("" = router default)
+    pub config: String,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            sampling: Sampling::Greedy,
+            config: String::new(),
+        }
+    }
+}
+
+/// Per-request timing breakdown (the latency metrics of Fig. 6).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Timing {
+    pub queue_us: u64,
+    pub prefill_us: u64,
+    pub decode_us: u64,
+}
+
+impl Timing {
+    pub fn total_us(&self) -> u64 {
+        self.queue_us + self.prefill_us + self.decode_us
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<u32>,
+    pub timing: Timing,
+}
+
+/// Internal: a request with its arrival timestamp.
+#[derive(Debug)]
+pub struct QueuedRequest {
+    pub req: Request,
+    pub arrived: Instant,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_total() {
+        let t = Timing { queue_us: 10, prefill_us: 20, decode_us: 30 };
+        assert_eq!(t.total_us(), 60);
+    }
+}

@@ -1,0 +1,66 @@
+//! Request router: maps a requested quant config to the engine replica
+//! serving it (the multi-precision deployment the paper's "quantization
+//! freedom" enables — one binary serving fp16 and any WqAp side by side).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Routing table: config tag → replica indices (round-robin within a tag).
+#[derive(Debug, Default)]
+pub struct Router {
+    routes: BTreeMap<String, Vec<usize>>,
+    rr: BTreeMap<String, usize>,
+    default_tag: String,
+}
+
+impl Router {
+    pub fn new(default_tag: &str) -> Self {
+        Router { default_tag: default_tag.to_string(), ..Default::default() }
+    }
+
+    pub fn register(&mut self, tag: &str, replica: usize) {
+        self.routes.entry(tag.to_string()).or_default().push(replica);
+    }
+
+    pub fn tags(&self) -> Vec<&str> {
+        self.routes.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Resolve a request's config tag ("" = default) to a replica index.
+    pub fn route(&mut self, tag: &str) -> Result<usize> {
+        let tag = if tag.is_empty() { self.default_tag.as_str() } else { tag };
+        let replicas = match self.routes.get(tag) {
+            Some(r) if !r.is_empty() => r,
+            _ => bail!("no replica serves config '{tag}'"),
+        };
+        let cursor = self.rr.entry(tag.to_string()).or_insert(0);
+        let idx = replicas[*cursor % replicas.len()];
+        *cursor += 1;
+        Ok(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_default_and_named() {
+        let mut r = Router::new("w2sa8");
+        r.register("w2sa8", 0);
+        r.register("fp16", 1);
+        assert_eq!(r.route("").unwrap(), 0);
+        assert_eq!(r.route("fp16").unwrap(), 1);
+        assert!(r.route("w9a9").is_err());
+    }
+
+    #[test]
+    fn round_robin_within_tag() {
+        let mut r = Router::new("fp16");
+        r.register("fp16", 3);
+        r.register("fp16", 5);
+        let picks: Vec<usize> = (0..4).map(|_| r.route("fp16").unwrap()).collect();
+        assert_eq!(picks, vec![3, 5, 3, 5]);
+    }
+}

@@ -1,0 +1,291 @@
+//! The serving front end: dispatcher thread (router) + one worker thread
+//! per engine replica (batcher + continuous-batching scheduler). Rust owns
+//! the whole event loop; python never appears on this path.
+//!
+//! ```text
+//! client ──submit()──► dispatcher ──route──► worker[replica]
+//!                                             ├─ Batcher (size/deadline)
+//!                                             ├─ Scheduler (prefill+decode)
+//!                                             └─ responses ──► client rx
+//! ```
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::model::Transformer;
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::Metrics;
+use super::request::{QueuedRequest, Request, Response};
+use super::router::Router;
+use super::scheduler::{Scheduler, SchedulerConfig};
+
+enum WorkerMsg {
+    Req(QueuedRequest, Sender<Response>),
+    Shutdown,
+}
+
+enum FrontMsg {
+    Req(Request, Sender<Response>),
+    Shutdown,
+}
+
+pub struct ServerConfig {
+    pub batcher: BatcherConfig,
+    pub max_active: usize,
+    pub default_tag: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            batcher: BatcherConfig::default(),
+            max_active: 8,
+            default_tag: "fp16".to_string(),
+        }
+    }
+}
+
+/// A running server over one or more engine replicas.
+pub struct Server {
+    front_tx: Sender<FrontMsg>,
+    handles: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Server {
+    /// Start with `(tag, model)` replicas.
+    pub fn start(replicas: Vec<(String, Arc<Transformer>)>, cfg: ServerConfig) -> Result<Self> {
+        assert!(!replicas.is_empty());
+        let metrics = Arc::new(Metrics::new());
+        let mut router = Router::new(&cfg.default_tag);
+        let mut worker_txs = Vec::new();
+        let mut handles = Vec::new();
+
+        for (idx, (tag, model)) in replicas.into_iter().enumerate() {
+            router.register(&tag, idx);
+            let (tx, rx) = channel::<WorkerMsg>();
+            worker_txs.push(tx);
+            let m = metrics.clone();
+            let bcfg = cfg.batcher;
+            let max_active = cfg.max_active;
+            let tag_owned = tag.clone();
+            handles.push(std::thread::spawn(move || {
+                worker_loop(model, rx, bcfg, max_active, m, &tag_owned);
+            }));
+        }
+
+        // dispatcher
+        let (front_tx, front_rx) = channel::<FrontMsg>();
+        let m2 = metrics.clone();
+        handles.push(std::thread::spawn(move || {
+            dispatcher_loop(front_rx, router, worker_txs, m2);
+        }));
+
+        Ok(Server { front_tx, handles, next_id: AtomicU64::new(1), metrics })
+    }
+
+    /// Submit a request; returns a receiver for its response.
+    pub fn submit(&self, mut req: Request) -> Receiver<Response> {
+        if req.id == 0 {
+            req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        }
+        let (tx, rx) = channel();
+        let _ = self.front_tx.send(FrontMsg::Req(req, tx));
+        rx
+    }
+
+    /// Stop all threads (in-flight requests are dropped).
+    pub fn shutdown(self) {
+        let _ = self.front_tx.send(FrontMsg::Shutdown);
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn dispatcher_loop(
+    rx: Receiver<FrontMsg>,
+    mut router: Router,
+    worker_txs: Vec<Sender<WorkerMsg>>,
+    metrics: Arc<Metrics>,
+) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            FrontMsg::Req(req, resp_tx) => {
+                metrics.incr("router.requests", 1);
+                match router.route(&req.config) {
+                    Ok(idx) => {
+                        let qr = QueuedRequest { req, arrived: Instant::now() };
+                        let _ = worker_txs[idx].send(WorkerMsg::Req(qr, resp_tx));
+                    }
+                    Err(_) => {
+                        metrics.incr("router.unroutable", 1);
+                        // drop resp_tx: client sees a disconnected channel
+                    }
+                }
+            }
+            FrontMsg::Shutdown => break,
+        }
+    }
+    for tx in worker_txs {
+        let _ = tx.send(WorkerMsg::Shutdown);
+    }
+}
+
+fn worker_loop(
+    model: Arc<Transformer>,
+    rx: Receiver<WorkerMsg>,
+    bcfg: BatcherConfig,
+    max_active: usize,
+    metrics: Arc<Metrics>,
+    tag: &str,
+) {
+    let mut batcher = Batcher::new(bcfg);
+    let mut scheduler = Scheduler::new(&model, SchedulerConfig { max_active });
+    let mut pending: HashMap<u64, Sender<Response>> = HashMap::new();
+    let mut seed = 0xC0FFEEu64;
+    let mut shutdown = false;
+
+    loop {
+        // 1. pull new work (block briefly only when fully idle)
+        loop {
+            let msg = if scheduler.idle() && batcher.is_empty() {
+                match rx.recv_timeout(Duration::from_millis(20)) {
+                    Ok(m) => m,
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(_) => {
+                        shutdown = true;
+                        break;
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                    Err(_) => {
+                        shutdown = true;
+                        break;
+                    }
+                }
+            };
+            match msg {
+                WorkerMsg::Req(qr, resp_tx) => {
+                    pending.insert(qr.req.id, resp_tx);
+                    batcher.push(qr);
+                    metrics.incr(&format!("worker.{tag}.queued"), 1);
+                }
+                WorkerMsg::Shutdown => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+        if shutdown && scheduler.idle() && batcher.is_empty() {
+            break;
+        }
+
+        // 2. admit when the batcher says ready (or we're draining)
+        let now = Instant::now();
+        if (batcher.ready(now) || shutdown) && scheduler.has_capacity() {
+            let room = max_active - scheduler.n_active();
+            for qr in batcher.drain(room) {
+                seed = seed.wrapping_add(1);
+                let t0 = Instant::now();
+                if let Err(e) = scheduler.admit(qr, seed) {
+                    metrics.incr(&format!("worker.{tag}.admit_errors"), 1);
+                    eprintln!("admit error: {e}");
+                }
+                metrics.observe_us(
+                    &format!("worker.{tag}.prefill_us"),
+                    t0.elapsed().as_micros() as u64,
+                );
+            }
+        }
+
+        // 3. advance all active sequences one token
+        if !scheduler.idle() {
+            let t0 = Instant::now();
+            if let Err(e) = scheduler.step() {
+                eprintln!("step error: {e}");
+            }
+            metrics.observe_us(
+                &format!("worker.{tag}.step_us"),
+                t0.elapsed().as_micros() as u64,
+            );
+        }
+
+        // 4. deliver finished responses
+        for resp in scheduler.take_finished() {
+            metrics.incr(&format!("worker.{tag}.completed"), 1);
+            metrics.observe_us(
+                &format!("worker.{tag}.e2e_us"),
+                resp.timing.total_us(),
+            );
+            if let Some(tx) = pending.remove(&resp.id) {
+                let _ = tx.send(resp);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Backend, ModelConfig};
+
+    const MICRO: ModelConfig = ModelConfig {
+        name: "micro",
+        vocab: 64,
+        d_model: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 32,
+        max_seq: 32,
+        rope_base: 10000.0,
+    };
+
+    #[test]
+    fn end_to_end_serving() {
+        let model = Arc::new(Transformer::random(MICRO, Backend::Fp32, 5));
+        let server = Server::start(
+            vec![("fp16".to_string(), model)],
+            ServerConfig::default(),
+        )
+        .unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            let mut req = Request::new(0, vec![1, 2, (i % 30) as u32], 4);
+            req.config = "fp16".to_string();
+            rxs.push(server.submit(req));
+        }
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+            assert_eq!(resp.tokens.len(), 4);
+        }
+        assert_eq!(server.metrics.counter("worker.fp16.completed"), 6);
+        server.shutdown();
+    }
+
+    #[test]
+    fn unroutable_config_drops_channel() {
+        let model = Arc::new(Transformer::random(MICRO, Backend::Fp32, 5));
+        let server = Server::start(
+            vec![("fp16".to_string(), model)],
+            ServerConfig::default(),
+        )
+        .unwrap();
+        let mut req = Request::new(0, vec![1], 2);
+        req.config = "w99a99".to_string();
+        let rx = server.submit(req);
+        assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
+        server.shutdown();
+    }
+}

@@ -1,0 +1,146 @@
+//! Synthetic corpus generator — bit-for-bit mirror of python
+//! `compile/data.py` (same SplitMix64 stream, same table construction,
+//! same topic-conditioned Markov walk), so rust evaluates perplexity on
+//! exactly the distribution the model was trained on.
+
+use crate::util::rng::SplitMix;
+
+pub const BOS: u32 = 0;
+pub const VOCAB: usize = 512;
+pub const BRANCH: usize = 4;
+pub const FOLLOW: f64 = 0.92;
+pub const RESTART_POOL: u64 = 64;
+pub const TABLE_SEED: u64 = 0xAB9;
+pub const EVAL_SEED: u64 = 999;
+
+/// Per-token successor sets + cumulative probabilities.
+pub struct TransitionTable {
+    pub succ: Vec<u32>, // [vocab * branch]
+    pub cum: Vec<f64>,  // [vocab * branch]
+}
+
+pub fn build_transition_table(seed: u64) -> TransitionTable {
+    let vocab = VOCAB;
+    let branch = BRANCH;
+    let mut rng = SplitMix::new(seed);
+    // zipf backbone
+    let mut zipf: Vec<f64> = (1..=vocab).map(|r| 1.0 / r as f64).collect();
+    let total: f64 = zipf.iter().sum();
+    for z in zipf.iter_mut() {
+        *z /= total;
+    }
+    let mut succ = vec![0u32; vocab * branch];
+    let mut cum = vec![0f64; vocab * branch];
+    for t in 0..vocab {
+        let mut probs = [0f64; BRANCH];
+        for b in 0..branch {
+            let u = rng.next_f64();
+            let mut c = 0f64;
+            let mut pick = vocab - 1;
+            for (v, &z) in zipf.iter().enumerate() {
+                c += z;
+                if u <= c {
+                    pick = v;
+                    break;
+                }
+            }
+            succ[t * branch + b] = pick.max(1) as u32; // successors never BOS
+            probs[b] = ((b + 1) as f64).powf(-1.5);
+        }
+        let psum: f64 = probs.iter().sum();
+        let mut acc = 0f64;
+        for b in 0..branch {
+            acc += probs[b] / psum;
+            cum[t * branch + b] = acc;
+        }
+    }
+    TransitionTable { succ, cum }
+}
+
+/// Generate a token stream (mirror of `data.generate_tokens`).
+pub fn generate_tokens(table: &TransitionTable, n_tokens: usize, seed: u64) -> Vec<u32> {
+    let sentence_len = 32usize;
+    let vocab = VOCAB as u64;
+    let mut rng = SplitMix::new(seed);
+    let mut out = vec![0u32; n_tokens];
+    let mut cur: u32 = BOS;
+    let mut topic: u32 = 1;
+    let mut pos_in_sent = 0usize;
+    for o in out.iter_mut() {
+        if pos_in_sent == 0 {
+            *o = BOS;
+            topic = 1 + rng.next_below(RESTART_POOL) as u32;
+            cur = topic;
+            pos_in_sent = 1;
+            continue;
+        }
+        *o = cur;
+        if rng.next_f64() < FOLLOW {
+            let state =
+                1 + ((cur as u64 - 1) + (topic as u64 - 1)) % (vocab - 1);
+            let u = rng.next_f64();
+            let row = &table.cum[state as usize * BRANCH..(state as usize + 1) * BRANCH];
+            // searchsorted-left equivalent
+            let mut b = row.iter().position(|&c| u <= c).unwrap_or(BRANCH - 1);
+            if b >= BRANCH {
+                b = BRANCH - 1;
+            }
+            cur = table.succ[state as usize * BRANCH + b];
+        } else {
+            cur = 1 + rng.next_below(vocab - 1) as u32;
+        }
+        pos_in_sent += 1;
+        if pos_in_sent >= sentence_len {
+            pos_in_sent = 0;
+        }
+    }
+    out
+}
+
+/// Chop a stream into `[num][batch][seq+1]` blocks (mirror `data.batches`).
+pub fn batches(tokens: &[u32], batch: usize, seq: usize) -> Vec<Vec<Vec<u32>>> {
+    let per = batch * (seq + 1);
+    let num = tokens.len() / per;
+    (0..num)
+        .map(|n| {
+            (0..batch)
+                .map(|b| {
+                    let off = n * per + b * (seq + 1);
+                    tokens[off..off + seq + 1].to_vec()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_bos_anchored() {
+        let t = build_transition_table(TABLE_SEED);
+        let a = generate_tokens(&t, 200, 5);
+        let b = generate_tokens(&t, 200, 5);
+        assert_eq!(a, b);
+        assert_eq!(a[0], BOS);
+        assert_eq!(a[32], BOS); // sentence boundary
+        assert!(a.iter().all(|&x| (x as usize) < VOCAB));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let t = build_transition_table(TABLE_SEED);
+        assert_ne!(generate_tokens(&t, 100, 1), generate_tokens(&t, 100, 2));
+    }
+
+    #[test]
+    fn batches_shape() {
+        let t = build_transition_table(TABLE_SEED);
+        let toks = generate_tokens(&t, 2 * 3 * 9, 1);
+        let b = batches(&toks, 3, 8);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].len(), 3);
+        assert_eq!(b[0][0].len(), 9);
+    }
+}

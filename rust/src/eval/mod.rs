@@ -1,0 +1,9 @@
+//! Evaluation substrate: the synthetic corpus (WikiText2/C4 substitution),
+//! the perplexity harness, and the zero-shot task suite (DESIGN.md §4/§6).
+
+pub mod corpus;
+pub mod perplexity;
+pub mod tasks;
+
+pub use perplexity::{perplexity, sequence_nll};
+pub use tasks::{accuracy, task_name, Task, ALL_TASKS};

@@ -1,0 +1,66 @@
+//! Perplexity harness (the paper's WikiText2/C4 PPL metric, on the
+//! substituted corpus — DESIGN.md §4). Teacher-forced NLL over held-out
+//! token streams through the rust-native transformer.
+
+use anyhow::Result;
+
+use crate::model::{KvCache, Transformer};
+
+use super::corpus;
+
+/// Mean token NLL of `seq` (teacher-forced); `seq` includes the target
+/// shift, i.e. `len >= 2`.
+pub fn sequence_nll(model: &Transformer, seq: &[u32]) -> Result<f64> {
+    assert!(seq.len() >= 2);
+    let mut cache = KvCache::new(&model.cfg);
+    let inputs = &seq[..seq.len() - 1];
+    let logits = model.prefill(inputs, &mut cache)?;
+    let v = model.cfg.vocab;
+    let mut total = 0f64;
+    for t in 0..inputs.len() {
+        let row = &logits[t * v..(t + 1) * v];
+        let target = seq[t + 1] as usize;
+        total -= crate::model::log_prob(row, target) as f64;
+    }
+    Ok(total / inputs.len() as f64)
+}
+
+/// Perplexity over `n_seqs` held-out sequences of length `seq_len`.
+pub fn perplexity(model: &Transformer, n_seqs: usize, seq_len: usize, seed: u64) -> Result<f64> {
+    let table = corpus::build_transition_table(corpus::TABLE_SEED);
+    let tokens = corpus::generate_tokens(&table, n_seqs * (seq_len + 1), seed);
+    let mut total = 0f64;
+    let mut count = 0usize;
+    for s in 0..n_seqs {
+        let seq = &tokens[s * (seq_len + 1)..(s + 1) * (seq_len + 1)];
+        total += sequence_nll(model, seq)? * (seq_len as f64);
+        count += seq_len;
+    }
+    Ok((total / count as f64).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Backend, ModelConfig, Transformer};
+
+    const MICRO: ModelConfig = ModelConfig {
+        name: "micro",
+        vocab: 512,
+        d_model: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 32,
+        max_seq: 64,
+        rope_base: 10000.0,
+    };
+
+    #[test]
+    fn random_model_ppl_near_vocab() {
+        // an untrained model must be near the uniform bound (vocab=512);
+        // random-logit models land within a small factor of it
+        let m = Transformer::random(MICRO, Backend::Fp32, 9);
+        let ppl = perplexity(&m, 2, 32, 123).unwrap();
+        assert!(ppl > 150.0 && ppl < 1500.0, "ppl {ppl}");
+    }
+}

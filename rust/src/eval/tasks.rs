@@ -1,0 +1,261 @@
+//! Synthetic zero-shot task suite (the paper's PIQA/ARC/BoolQ/HellaSwag/
+//! Winogrande substitution — DESIGN.md §4). Same scoring mechanism as
+//! lm-evaluation-harness: per choice, the (length-normalised) logprob of
+//! the continuation given the context; accuracy = argmax matches gold.
+//!
+//! Tasks are built from the corpus ground truth (the transition table), so
+//! a model that learned the distribution scores far above chance and a
+//! quantization-damaged model drops toward chance — the same signal the
+//! paper's Tables 3/8-11 measure.
+
+use anyhow::Result;
+
+use crate::model::{KvCache, Transformer};
+use crate::util::rng::SplitMix;
+
+use super::corpus::{self, TransitionTable, BOS, BRANCH, RESTART_POOL, VOCAB};
+
+#[derive(Clone, Debug)]
+pub struct TaskItem {
+    pub context: Vec<u32>,
+    pub choices: Vec<Vec<u32>>,
+    pub gold: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// pick the true next token among 3 corpus-frequency distractors
+    NextToken,
+    /// pick the valid 2-token transition chain vs corrupted chains
+    ChainCompletion,
+    /// pick the continuation consistent with the sentence's topic token
+    TopicConsistency,
+    /// detect the sentence boundary (BOS) vs random tokens
+    BoundaryDetect,
+    /// rank the high-probability successor branch above the lowest one
+    FreqPlausibility,
+    /// NextToken with distractors drawn from a *different* state's
+    /// successors (near-miss distractors — the hard variant)
+    NearMiss,
+}
+
+pub const ALL_TASKS: [Task; 6] = [
+    Task::NextToken,
+    Task::ChainCompletion,
+    Task::TopicConsistency,
+    Task::BoundaryDetect,
+    Task::FreqPlausibility,
+    Task::NearMiss,
+];
+
+pub fn task_name(t: Task) -> &'static str {
+    match t {
+        Task::NextToken => "next_token",
+        Task::ChainCompletion => "chain_completion",
+        Task::TopicConsistency => "topic_consistency",
+        Task::BoundaryDetect => "boundary_detect",
+        Task::FreqPlausibility => "freq_plausibility",
+        Task::NearMiss => "near_miss",
+    }
+}
+
+fn state_of(cur: u32, topic: u32) -> usize {
+    (1 + ((cur as u64 - 1) + (topic as u64 - 1)) % (VOCAB as u64 - 1)) as usize
+}
+
+fn walk(table: &TransitionTable, topic: u32, start: u32, len: usize, rng: &mut SplitMix) -> Vec<u32> {
+    // deterministic most-likely walk with a bit of branch noise
+    let mut out = vec![BOS, topic];
+    let mut cur = start;
+    for _ in 0..len {
+        out.push(cur);
+        let st = state_of(cur, topic);
+        let b = if rng.next_f64() < 0.7 { 0 } else { rng.next_below(BRANCH as u64) as usize };
+        cur = table.succ[st * BRANCH + b];
+    }
+    out
+}
+
+fn succ_of(table: &TransitionTable, cur: u32, topic: u32, branch: usize) -> u32 {
+    table.succ[state_of(cur, topic) * BRANCH + branch]
+}
+
+/// Generate `n` items for a task (deterministic per seed).
+pub fn generate_items(table: &TransitionTable, task: Task, n: usize, seed: u64) -> Vec<TaskItem> {
+    let mut rng = SplitMix::new(seed ^ 0xD15C0);
+    let mut items = Vec::with_capacity(n);
+    while items.len() < n {
+        let topic = 1 + rng.next_below(RESTART_POOL) as u32;
+        let start = topic;
+        let ctx_len = 6 + rng.next_below(10) as usize;
+        let context = walk(table, topic, start, ctx_len, &mut rng);
+        let cur = *context.last().unwrap();
+        let gold_tok = succ_of(table, cur, topic, 0);
+        let item = match task {
+            Task::NextToken => {
+                let mut choices = vec![vec![gold_tok]];
+                while choices.len() < 4 {
+                    let d = 1 + rng.next_below(VOCAB as u64 - 1) as u32;
+                    if d != gold_tok {
+                        choices.push(vec![d]);
+                    }
+                }
+                shuffle_gold(choices, &mut rng)
+            }
+            Task::ChainCompletion => {
+                let second = succ_of(table, gold_tok, topic, 0);
+                let valid = vec![gold_tok, second];
+                let mut choices = vec![valid];
+                while choices.len() < 4 {
+                    let a = 1 + rng.next_below(VOCAB as u64 - 1) as u32;
+                    let b = 1 + rng.next_below(VOCAB as u64 - 1) as u32;
+                    if a != gold_tok {
+                        choices.push(vec![a, b]);
+                    }
+                }
+                shuffle_gold(choices, &mut rng)
+            }
+            Task::TopicConsistency => {
+                let mut wrong_topic = 1 + rng.next_below(RESTART_POOL) as u32;
+                while wrong_topic == topic {
+                    wrong_topic = 1 + rng.next_below(RESTART_POOL) as u32;
+                }
+                let wrong_tok = succ_of(table, cur, wrong_topic, 0);
+                if wrong_tok == gold_tok {
+                    continue; // degenerate, resample
+                }
+                shuffle_gold(vec![vec![gold_tok], vec![wrong_tok]], &mut rng)
+            }
+            Task::BoundaryDetect => {
+                // context runs to a sentence boundary: next true token is BOS
+                let mut ctx = walk(table, topic, start, 30, &mut rng);
+                ctx.truncate(32); // sentence_len boundary
+                let mut choices = vec![vec![BOS]];
+                while choices.len() < 4 {
+                    let d = 1 + rng.next_below(VOCAB as u64 - 1) as u32;
+                    choices.push(vec![d]);
+                }
+                let (choices, gold) = shuffle_gold_pair(choices, &mut rng);
+                items.push(TaskItem { context: ctx, choices, gold });
+                continue;
+            }
+            Task::FreqPlausibility => {
+                let lo = succ_of(table, cur, topic, BRANCH - 1);
+                if lo == gold_tok {
+                    continue;
+                }
+                shuffle_gold(vec![vec![gold_tok], vec![lo]], &mut rng)
+            }
+            Task::NearMiss => {
+                let mut choices = vec![vec![gold_tok]];
+                let mut tries = 0;
+                while choices.len() < 4 && tries < 32 {
+                    tries += 1;
+                    let other_cur = 1 + rng.next_below(VOCAB as u64 - 1) as u32;
+                    let d = succ_of(table, other_cur, topic, 0);
+                    if d != gold_tok && !choices.iter().any(|c| c[0] == d) {
+                        choices.push(vec![d]);
+                    }
+                }
+                if choices.len() < 4 {
+                    continue;
+                }
+                shuffle_gold(choices, &mut rng)
+            }
+        };
+        let (choices, gold) = item;
+        items.push(TaskItem { context, choices, gold });
+    }
+    items
+}
+
+fn shuffle_gold(mut choices: Vec<Vec<u32>>, rng: &mut SplitMix) -> (Vec<Vec<u32>>, usize) {
+    // gold starts at index 0; fisher-yates and track it
+    let mut gold = 0usize;
+    for i in (1..choices.len()).rev() {
+        let j = rng.next_below(i as u64 + 1) as usize;
+        choices.swap(i, j);
+        if gold == i {
+            gold = j;
+        } else if gold == j {
+            gold = i;
+        }
+    }
+    (choices, gold)
+}
+
+fn shuffle_gold_pair(choices: Vec<Vec<u32>>, rng: &mut SplitMix) -> (Vec<Vec<u32>>, usize) {
+    shuffle_gold(choices, rng)
+}
+
+/// Score one item: length-normalised continuation logprob per choice.
+pub fn score_item(model: &Transformer, item: &TaskItem) -> Result<usize> {
+    let mut cache = KvCache::new(&model.cfg);
+    let logits = model.prefill(&item.context, &mut cache)?;
+    let v = model.cfg.vocab;
+    let last = &logits[(item.context.len() - 1) * v..item.context.len() * v];
+    let mut best = (f64::NEG_INFINITY, 0usize);
+    for (ci, choice) in item.choices.iter().enumerate() {
+        let mut lp = crate::model::log_prob(last, choice[0] as usize) as f64;
+        if choice.len() > 1 {
+            // teacher-force the rest with a cloned cache
+            let mut c2 = cache.clone();
+            let mut prev = choice[0];
+            for &tok in &choice[1..] {
+                let mut refs = [&mut c2];
+                let step = model.decode_step(&[prev], &mut refs)?;
+                lp += crate::model::log_prob(&step, tok as usize) as f64;
+                prev = tok;
+            }
+        }
+        let norm = lp / choice.len() as f64;
+        if norm > best.0 {
+            best = (norm, ci);
+        }
+    }
+    Ok(best.1)
+}
+
+/// Accuracy of a model on one task.
+pub fn accuracy(model: &Transformer, task: Task, n: usize, seed: u64) -> Result<f64> {
+    let table = corpus::build_transition_table(corpus::TABLE_SEED);
+    let items = generate_items(&table, task, n, seed);
+    let mut correct = 0usize;
+    for item in &items {
+        if score_item(model, item)? == item.gold {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / items.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn items_have_valid_gold_and_unique_choices() {
+        let table = corpus::build_transition_table(corpus::TABLE_SEED);
+        for task in ALL_TASKS {
+            let items = generate_items(&table, task, 10, 7);
+            assert_eq!(items.len(), 10);
+            for it in items {
+                assert!(it.gold < it.choices.len());
+                assert!(!it.context.is_empty());
+                assert_eq!(it.context[0], BOS);
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let table = corpus::build_transition_table(corpus::TABLE_SEED);
+        let a = generate_items(&table, Task::NextToken, 5, 3);
+        let b = generate_items(&table, Task::NextToken, 5, 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.context, y.context);
+            assert_eq!(x.choices, y.choices);
+            assert_eq!(x.gold, y.gold);
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! # ABQ-LLM — Arbitrary-Bit Quantized LLM Inference (reproduction)
+//!
+//! Rust + JAX + Pallas three-layer reproduction of *ABQ-LLM: Arbitrary-Bit
+//! Quantized Inference Acceleration for Large Language Models* (AAAI 2025).
+//!
+//! * [`abq`] — the arbitrary-bit engine: every WqAp GEMM decomposed into
+//!   p×q 1-bit matmuls (BMMA ≙ AND+POPCNT) with Bit Reduction, GEMV
+//!   elimination, pipelining and auto kernel search (paper §3.4, App. B/D)
+//! * [`quant`] — quantizers, bit-balance strategy, balance vectors
+//! * [`baselines`] — FP16/W8A8/W4A4 comparator engines with MMA padding
+//! * [`model`] — LLaMA-family transformer on pluggable GEMM backends
+//! * [`coordinator`] — serving: router, dynamic batcher, scheduler, KV cache
+//! * [`runtime`] — PJRT executor for the AOT HLO artifacts (jax/pallas L2+L1)
+//! * [`eval`] — synthetic corpus, perplexity, zero-shot harness
+//! * [`util`] — offline substrates (thread pool, JSON, CLI, bench, proptest)
+pub mod abq;
+pub mod baselines;
+pub mod coordinator;
+pub mod eval;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod util;

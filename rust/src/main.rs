@@ -1,0 +1,289 @@
+//! abq-llm — CLI for the ABQ-LLM reproduction.
+//!
+//! Subcommands:
+//!   info                         artifact + engine health report
+//!   serve    [--addr HOST:PORT]  TCP line-protocol serving (JSON in/out)
+//!   eval     [--config w2*a8]    perplexity on the held-out corpus
+//!   zeroshot [--config w2*a8]    synthetic zero-shot task suite
+//!   gemm     [--m --n --k --w --a] one arbitrary-bit GEMM timing
+//!   pjrt     [--artifact NAME]   run a PJRT artifact end to end
+//!
+//! Backends: `--backend fp32|int8|int4|abq` (abq takes `--config`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use abq_llm::abq::{BitPlanes, OptLevel};
+use abq_llm::coordinator::{Request, Server, ServerConfig};
+use abq_llm::eval;
+use abq_llm::model::{Backend, Transformer, WeightPack};
+use abq_llm::quant::WAConfig;
+use abq_llm::util::cli::Args;
+use abq_llm::util::json::{self, Json};
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn backend_from(args: &Args) -> Result<Backend> {
+    Ok(match args.get_or("backend", "abq").as_str() {
+        "fp32" | "fp16" => Backend::Fp32,
+        "int8" => Backend::Int8,
+        "int4" => Backend::Int4,
+        "abq" => {
+            let cfg: WAConfig = args
+                .get_or("config", "w2*a8")
+                .parse()
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            Backend::Abq(cfg)
+        }
+        other => bail!("unknown backend '{other}'"),
+    })
+}
+
+fn load_model(args: &Args) -> Result<Transformer> {
+    let dir = artifacts_dir(args);
+    let backend = backend_from(args)?;
+    Transformer::load_artifacts(&dir, backend)
+        .with_context(|| format!("load artifacts from {dir:?} (run `make artifacts`)"))
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("zeroshot") => cmd_zeroshot(&args),
+        Some("gemm") => cmd_gemm(&args),
+        Some("pjrt") => cmd_pjrt(&args),
+        _ => {
+            eprintln!(
+                "usage: abq-llm <info|serve|eval|zeroshot|gemm|pjrt> [--artifacts DIR] \
+                 [--backend fp32|int8|int4|abq] [--config w2*a8] ..."
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    println!("abq-llm — arbitrary-bit quantized inference (ABQ-LLM reproduction)");
+    println!(
+        "pjrt cpu client: {}",
+        if abq_llm::runtime::pjrt_cpu_ok() { "ok" } else { "UNAVAILABLE" }
+    );
+    let dir = artifacts_dir(args);
+    match std::fs::read_to_string(dir.join("manifest.json")) {
+        Ok(text) => {
+            let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+            println!("artifacts dir: {dir:?}");
+            if let Some(p) = j.get("fp_ppl").and_then(|v| v.as_f64()) {
+                println!("fp model held-out PPL: {p:.3}");
+            }
+            if let Some(arr) = j.get("artifacts").and_then(|a| a.as_arr()) {
+                println!("compiled artifacts:");
+                for a in arr {
+                    println!("  - {}", a.get("name").and_then(|v| v.as_str()).unwrap_or("?"));
+                }
+            }
+            if let Some(arr) = j.get("quant_configs").and_then(|a| a.as_arr()) {
+                println!("calibrated quant configs:");
+                for a in arr {
+                    println!("  - {}", a.get("name").and_then(|v| v.as_str()).unwrap_or("?"));
+                }
+            }
+        }
+        Err(_) => println!("no artifacts at {dir:?} (run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let n = args.get_usize("seqs", 16);
+    let len = args.get_usize("seq-len", 128);
+    let ppl = eval::perplexity(&model, n, len, eval::corpus::EVAL_SEED)?;
+    println!(
+        "backend={:?} held-out perplexity over {n}x{len} tokens: {ppl:.3}",
+        model.backend
+    );
+    Ok(())
+}
+
+fn cmd_zeroshot(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let n = args.get_usize("items", 50);
+    println!("zero-shot suite, backend={:?}, {n} items/task", model.backend);
+    let mut total = 0.0;
+    for task in eval::ALL_TASKS {
+        let acc = eval::accuracy(&model, task, n, 11)?;
+        total += acc;
+        println!("  {:<18} {:5.1}%", eval::task_name(task), acc * 100.0);
+    }
+    println!(
+        "  {:<18} {:5.1}%",
+        "average",
+        total / eval::ALL_TASKS.len() as f64 * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_gemm(args: &Args) -> Result<()> {
+    let m = args.get_usize("m", 1);
+    let n = args.get_usize("n", 4096);
+    let k = args.get_usize("k", 4096);
+    let wb = args.get_usize("w", 2);
+    let ab = args.get_usize("a", 8);
+    let mut rng = abq_llm::util::rng::SplitMix::new(1);
+    let xc: Vec<u8> = (0..m * k).map(|_| rng.next_below(1 << ab) as u8).collect();
+    let wc: Vec<u8> = (0..n * k).map(|_| rng.next_below(1 << wb) as u8).collect();
+    let x = BitPlanes::pack(&xc, m, k, ab);
+    let w = BitPlanes::pack(&wc, n, k, wb);
+    let zx = vec![1 << (ab - 1); m];
+    let zw = vec![1 << (wb - 1); n];
+    let b = abq_llm::util::bench::Bencher::default();
+    for (label, opt) in [
+        ("naive", OptLevel::Naive),
+        ("pipelined", OptLevel::Pipelined),
+        ("gemv-elim", OptLevel::GemvElim),
+        ("auto", OptLevel::Auto),
+    ] {
+        let meas = b.run(label, || {
+            let out = abq_llm::abq::gemm_int(&x, &w, &zx, &zw, opt, None);
+            std::hint::black_box(&out);
+        });
+        println!(
+            "w{wb}a{ab} {m}x{n}x{k} {label:<10} {:10.1} us  {:6.3} TOPS",
+            meas.mean_us(),
+            meas.tops(m, n, k)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_pjrt(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let engine = abq_llm::runtime::PjrtEngine::load(&dir)?;
+    let pack = WeightPack::load(&dir.join("weights.abqw"))?;
+    let name = args.get_or("artifact", "model_fp16_prefill");
+    let prog = engine.program(&name, &pack)?;
+    println!("compiled artifact '{name}'");
+    if name.ends_with("prefill") {
+        let s = engine.manifest.prefill_seq;
+        let table = eval::corpus::build_transition_table(eval::corpus::TABLE_SEED);
+        let toks = eval::corpus::generate_tokens(&table, s, 42);
+        let toks_i32: Vec<i32> = toks.iter().map(|&t| t as i32).collect();
+        let t0 = std::time::Instant::now();
+        let logits = prog.prefill(&engine.client, &toks_i32)?;
+        println!(
+            "prefill [{s} tokens] -> {} logits in {:.1} ms",
+            logits.len(),
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    } else {
+        let mut kv = prog.init_kv(&engine.client)?;
+        let t0 = std::time::Instant::now();
+        let steps = args.get_usize("steps", 8);
+        let mut tok = vec![1i32; engine.manifest.decode_batch];
+        for _ in 0..steps {
+            let logits = prog.decode_step(&engine.client, &tok, &mut kv)?;
+            let v = engine.manifest.vocab;
+            for b in 0..engine.manifest.decode_batch {
+                tok[b] = abq_llm::model::argmax(&logits[b * v..(b + 1) * v]) as i32;
+            }
+        }
+        println!(
+            "{steps} decode steps in {:.1} ms ({:.1} ms/step)",
+            t0.elapsed().as_secs_f64() * 1e3,
+            t0.elapsed().as_secs_f64() * 1e3 / steps as f64
+        );
+    }
+    Ok(())
+}
+
+/// TCP line-protocol server: one JSON object per line.
+/// Request:  `{"prompt": [1,2,3], "max_new": 16, "config": "w2sa8"}`
+/// Response: `{"id": 1, "tokens": [...], "queue_us": .., "prefill_us": ..,
+///            "decode_us": ..}`
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7070");
+    let dir = artifacts_dir(args);
+    // load requested replicas: default = the ABQ config + fp16 for A/B
+    let mut replicas = Vec::new();
+    let abq_cfg: WAConfig =
+        args.get_or("config", "w2*a8").parse().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let abq_model = Transformer::load_artifacts(&dir, Backend::Abq(abq_cfg))?;
+    replicas.push((abq_cfg.tag(), Arc::new(abq_model)));
+    if !args.has_flag("no-fp16") {
+        let fp = Transformer::load_artifacts(&dir, Backend::Fp32)?;
+        replicas.push(("fp16".to_string(), Arc::new(fp)));
+    }
+    let default_tag = replicas[0].0.clone();
+    println!(
+        "serving {} on {addr} (default config {default_tag})",
+        replicas.iter().map(|(t, _)| t.as_str()).collect::<Vec<_>>().join(", ")
+    );
+    let server = Server::start(replicas, ServerConfig { default_tag, ..Default::default() })?;
+
+    let listener = TcpListener::bind(&addr)?;
+    for stream in listener.incoming() {
+        let mut stream = stream?;
+        let peer = stream.peer_addr()?;
+        let reader = BufReader::new(stream.try_clone()?);
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = match Json::parse(&line) {
+                Ok(j) => j,
+                Err(e) => {
+                    writeln!(stream, "{{\"error\": \"parse: {e}\"}}")?;
+                    continue;
+                }
+            };
+            let prompt: Vec<u32> = j
+                .get("prompt")
+                .and_then(|p| p.as_arr())
+                .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|v| v as u32).collect())
+                .unwrap_or_default();
+            if prompt.is_empty() {
+                writeln!(stream, "{{\"error\": \"empty prompt\"}}")?;
+                continue;
+            }
+            let max_new = j.get("max_new").and_then(|v| v.as_usize()).unwrap_or(16);
+            let mut req = Request::new(0, prompt, max_new);
+            if let Some(c) = j.get("config").and_then(|v| v.as_str()) {
+                req.config = c.to_string();
+            }
+            let rx = server.submit(req);
+            match rx.recv() {
+                Ok(resp) => {
+                    let out = json::obj(vec![
+                        ("id", json::num(resp.id as f64)),
+                        (
+                            "tokens",
+                            Json::Arr(
+                                resp.tokens.iter().map(|&t| json::num(t as f64)).collect(),
+                            ),
+                        ),
+                        ("queue_us", json::num(resp.timing.queue_us as f64)),
+                        ("prefill_us", json::num(resp.timing.prefill_us as f64)),
+                        ("decode_us", json::num(resp.timing.decode_us as f64)),
+                    ]);
+                    let mut text = out.to_string_pretty();
+                    text.retain(|c| c != '\n');
+                    writeln!(stream, "{text}")?;
+                }
+                Err(_) => writeln!(stream, "{{\"error\": \"unroutable config\"}}")?,
+            }
+        }
+        println!("client {peer} disconnected; metrics:\n{}", server.metrics.snapshot());
+    }
+    Ok(())
+}

@@ -1,0 +1,132 @@
+//! Model configurations: the tiny trained model (served end-to-end) and
+//! the real LLaMA-family dimensions (used *analytically* and for
+//! real-shape kernel benches — Tables 12/13/14 run GEMMs at these shapes).
+
+/// LLaMA-family architecture description.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_base: f32,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Parameters in the transformer blocks + embeddings.
+    pub fn param_count(&self) -> usize {
+        let per_block = 4 * self.d_model * self.d_model + 3 * self.d_model * self.d_ff
+            + 2 * self.d_model;
+        self.vocab * self.d_model + self.n_layers * per_block + self.d_model
+            + self.d_model * self.vocab
+    }
+
+    /// Per-layer GEMM shapes (N, K): q/k/v/o + gate/up/down — the shapes
+    /// the paper's kernel tables sweep.
+    pub fn layer_shapes(&self) -> Vec<(&'static str, usize, usize)> {
+        vec![
+            ("wq", self.d_model, self.d_model),
+            ("wk", self.d_model, self.d_model),
+            ("wv", self.d_model, self.d_model),
+            ("wo", self.d_model, self.d_model),
+            ("gate", self.d_ff, self.d_model),
+            ("up", self.d_ff, self.d_model),
+            ("down", self.d_model, self.d_ff),
+        ]
+    }
+
+    /// Weight bytes at `bits_per_weight` (planes for ABQ), for the Table 12
+    /// memory model. Embedding + head stay fp16 as in the paper's engine.
+    pub fn weight_bytes(&self, block_bits: f64) -> f64 {
+        let per_block: usize = self.layer_shapes().iter().map(|(_, n, k)| n * k).sum();
+        let block_bytes = self.n_layers as f64 * per_block as f64 * block_bits / 8.0;
+        let embed_bytes = (2 * self.vocab * self.d_model + self.d_model) as f64 * 2.0;
+        block_bytes + embed_bytes
+    }
+
+    /// KV cache bytes for one sequence of `seq` tokens (fp16 cache).
+    pub fn kv_bytes(&self, seq: usize) -> f64 {
+        (2 * self.n_layers * seq * self.d_model) as f64 * 2.0
+    }
+}
+
+/// The tiny model trained by `python/compile/train_tiny.py` (must match
+/// `compile/model.py::TINY` and the manifest).
+pub const TINY: ModelConfig = ModelConfig {
+    name: "tiny-llama",
+    vocab: 512,
+    d_model: 256,
+    n_layers: 4,
+    n_heads: 8,
+    d_ff: 704,
+    max_seq: 256,
+    rope_base: 10000.0,
+};
+
+/// Real LLaMA dims (analytic / bench shapes only — no checkpoints here).
+pub const LLAMA_7B: ModelConfig = ModelConfig {
+    name: "llama-7b",
+    vocab: 32000,
+    d_model: 4096,
+    n_layers: 32,
+    n_heads: 32,
+    d_ff: 11008,
+    max_seq: 2048,
+    rope_base: 10000.0,
+};
+
+pub const LLAMA_13B: ModelConfig = ModelConfig {
+    name: "llama-13b",
+    vocab: 32000,
+    d_model: 5120,
+    n_layers: 40,
+    n_heads: 40,
+    d_ff: 13824,
+    max_seq: 2048,
+    rope_base: 10000.0,
+};
+
+pub const LLAMA_30B: ModelConfig = ModelConfig {
+    name: "llama-30b",
+    vocab: 32000,
+    d_model: 6656,
+    n_layers: 60,
+    n_heads: 52,
+    d_ff: 17920,
+    max_seq: 2048,
+    rope_base: 10000.0,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_matches_python() {
+        assert_eq!(TINY.param_count(), 3_475_712); // compile/model.py TINY
+        assert_eq!(TINY.head_dim(), 32);
+    }
+
+    #[test]
+    fn llama7b_params_about_7b() {
+        let p = LLAMA_7B.param_count() as f64;
+        assert!(p > 6.2e9 && p < 7.5e9, "{p}");
+    }
+
+    #[test]
+    fn memory_model_orders() {
+        // fp16 weights of 7B ≈ 13.5 GB (paper Table 12: 13.47 GB total)
+        let fp16 = LLAMA_7B.weight_bytes(16.0) / 1e9;
+        assert!(fp16 > 12.0 && fp16 < 14.5, "{fp16}");
+        // w2 packed ≈ 1/8 of that for the blocks
+        let w2 = LLAMA_7B.weight_bytes(2.0);
+        assert!(w2 < LLAMA_7B.weight_bytes(16.0) / 6.0);
+    }
+}

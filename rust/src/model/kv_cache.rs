@@ -1,0 +1,90 @@
+//! Per-sequence KV cache. The coordinator owns a pool of these (one per
+//! active request); the transformer fills them at prefill and extends them
+//! one position per decode step.
+
+use super::config::ModelConfig;
+
+/// Contiguous K/V storage for one sequence: `[layer][pos][d_model]`.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub pos: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub d_model: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        let n = cfg.n_layers * cfg.max_seq * cfg.d_model;
+        KvCache {
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+            pos: 0,
+            n_layers: cfg.n_layers,
+            max_seq: cfg.max_seq,
+            d_model: cfg.d_model,
+        }
+    }
+
+    #[inline]
+    pub fn offset(&self, layer: usize, pos: usize) -> usize {
+        (layer * self.max_seq + pos) * self.d_model
+    }
+
+    /// Write one position's K/V row for a layer.
+    pub fn write(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert!(pos < self.max_seq, "kv overflow");
+        let off = self.offset(layer, pos);
+        self.k[off..off + self.d_model].copy_from_slice(k_row);
+        self.v[off..off + self.d_model].copy_from_slice(v_row);
+    }
+
+    pub fn k_row(&self, layer: usize, pos: usize) -> &[f32] {
+        let off = self.offset(layer, pos);
+        &self.k[off..off + self.d_model]
+    }
+
+    pub fn v_row(&self, layer: usize, pos: usize) -> &[f32] {
+        let off = self.offset(layer, pos);
+        &self.v[off..off + self.d_model]
+    }
+
+    pub fn reset(&mut self) {
+        self.pos = 0;
+    }
+
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.max_seq - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::TINY;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut c = KvCache::new(&TINY);
+        let k: Vec<f32> = (0..TINY.d_model).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..TINY.d_model).map(|i| -(i as f32)).collect();
+        c.write(2, 5, &k, &v);
+        assert_eq!(c.k_row(2, 5), &k[..]);
+        assert_eq!(c.v_row(2, 5), &v[..]);
+        assert_eq!(c.k_row(2, 4), vec![0.0; TINY.d_model].as_slice());
+    }
+
+    #[test]
+    fn capacity_accounting() {
+        let mut c = KvCache::new(&TINY);
+        assert_eq!(c.remaining(), TINY.max_seq);
+        c.pos = 10;
+        assert_eq!(c.remaining(), TINY.max_seq - 10);
+    }
+}

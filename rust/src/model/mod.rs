@@ -1,0 +1,15 @@
+//! Model substrate: LLaMA-family configs, weight loading, the rust-native
+//! transformer over pluggable GEMM backends, KV cache and sampling
+//! (DESIGN.md §5).
+
+pub mod config;
+pub mod kv_cache;
+pub mod sampler;
+pub mod transformer;
+pub mod weights;
+
+pub use config::{ModelConfig, LLAMA_13B, LLAMA_30B, LLAMA_7B, TINY};
+pub use kv_cache::KvCache;
+pub use sampler::{argmax, log_prob, Sampler, Sampling};
+pub use transformer::{Backend, LinearOp, Transformer};
+pub use weights::{Tensor, WeightPack};

@@ -1,0 +1,92 @@
+//! Token sampling for the serving path: greedy, temperature, top-k.
+
+use crate::util::rng::SplitMix;
+
+#[derive(Clone, Copy, Debug)]
+pub enum Sampling {
+    Greedy,
+    /// softmax temperature + top-k truncation
+    TopK { k: usize, temperature: f32 },
+}
+
+pub struct Sampler {
+    pub mode: Sampling,
+    rng: SplitMix,
+}
+
+impl Sampler {
+    pub fn new(mode: Sampling, seed: u64) -> Self {
+        Sampler { mode, rng: SplitMix::new(seed) }
+    }
+
+    /// Pick the next token from a logits row.
+    pub fn sample(&mut self, logits: &[f32]) -> u32 {
+        match self.mode {
+            Sampling::Greedy => argmax(logits) as u32,
+            Sampling::TopK { k, temperature } => {
+                let k = k.max(1).min(logits.len());
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+                idx.truncate(k);
+                let t = temperature.max(1e-3);
+                let mx = logits[idx[0]];
+                let probs: Vec<f32> =
+                    idx.iter().map(|&i| ((logits[i] - mx) / t).exp()).collect();
+                let total: f32 = probs.iter().sum();
+                let mut u = self.rng.next_f64() as f32 * total;
+                for (j, &p) in probs.iter().enumerate() {
+                    if u <= p {
+                        return idx[j] as u32;
+                    }
+                    u -= p;
+                }
+                idx[k - 1] as u32
+            }
+        }
+    }
+}
+
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// log-softmax probability of `target` under `logits` (zero-shot scoring).
+pub fn log_prob(logits: &[f32], target: usize) -> f32 {
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = mx + logits.iter().map(|v| (v - mx).exp()).sum::<f32>().ln();
+    logits[target] - lse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let mut s = Sampler::new(Sampling::Greedy, 0);
+        assert_eq!(s.sample(&[0.1, 2.0, -1.0, 1.9]), 1);
+    }
+
+    #[test]
+    fn topk_stays_in_topk() {
+        let mut s = Sampler::new(Sampling::TopK { k: 2, temperature: 1.0 }, 42);
+        let logits = [5.0f32, 4.8, -10.0, -10.0];
+        for _ in 0..50 {
+            let t = s.sample(&logits);
+            assert!(t == 0 || t == 1, "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn logprob_normalises() {
+        let logits = [1.0f32, 2.0, 3.0];
+        let total: f32 = (0..3).map(|i| log_prob(&logits, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+    }
+}

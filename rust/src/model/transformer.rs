@@ -1,0 +1,529 @@
+//! Rust-native LLaMA-family transformer forward over pluggable GEMM
+//! backends. Numerics mirror python `compile/model.py` exactly (RMSNorm
+//! eps, RoPE pairing, SwiGLU, causal softmax), so the fp32 path reproduces
+//! the jax model's perplexity and the ABQ path reproduces the calibrated
+//! quantized model (parity asserted in rust/tests/).
+//!
+//! Every projection is a [`LinearOp`]: fp32 baseline, padded INT8/INT4
+//! TensorCore stand-ins, or the ABQ bit-plane engine — the axis the
+//! end-to-end benches (Fig. 6 / Table 12) sweep.
+
+use anyhow::{bail, Context, Result};
+
+use crate::abq::{OptLevel, QuantizedLinear};
+use crate::baselines::{gemm_fp32, Int4Gemm, Int8Gemm};
+use crate::quant::WAConfig;
+
+use super::config::ModelConfig;
+use super::kv_cache::KvCache;
+use super::weights::WeightPack;
+
+pub const LINEAR_NAMES: [&str; 7] = ["wq", "wk", "wv", "wo", "gate", "up", "down"];
+
+/// Execution backend for the block linears.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Backend {
+    /// fp32 GEMM ("FP16" row of Fig. 6)
+    Fp32,
+    /// padded INT8 GEMM ("SmoothQuant W8A8" row)
+    Int8,
+    /// padded INT4 GEMM ("CUTLASS W4A4" row)
+    Int4,
+    /// the ABQ engine at an arbitrary WqAp config
+    Abq(WAConfig),
+}
+
+/// One projection, prepared for its backend.
+pub enum LinearOp {
+    Fp32 { w: Vec<f32>, out_f: usize, in_f: usize },
+    Int8(Int8Gemm),
+    Int4(Int4Gemm),
+    Abq(QuantizedLinear),
+}
+
+impl LinearOp {
+    pub fn forward(&self, x: &[f32], tokens: usize) -> Vec<f32> {
+        match self {
+            LinearOp::Fp32 { w, out_f, in_f } => gemm_fp32(x, w, tokens, *out_f, *in_f),
+            LinearOp::Int8(g) => g.forward(x, tokens),
+            LinearOp::Int4(g) => g.forward(x, tokens),
+            LinearOp::Abq(q) => q.forward(x, tokens, OptLevel::Auto),
+        }
+    }
+
+    pub fn weight_bytes(&self) -> usize {
+        match self {
+            LinearOp::Fp32 { w, .. } => w.len() * 4,
+            LinearOp::Int8(g) => g.weight_bytes(),
+            LinearOp::Int4(g) => g.weight_bytes(),
+            LinearOp::Abq(q) => q.weight_bytes(),
+        }
+    }
+}
+
+pub struct Block {
+    pub ln1: Vec<f32>,
+    pub ln2: Vec<f32>,
+    pub wq: LinearOp,
+    pub wk: LinearOp,
+    pub wv: LinearOp,
+    pub wo: LinearOp,
+    pub gate: LinearOp,
+    pub up: LinearOp,
+    pub down: LinearOp,
+}
+
+impl Block {
+    pub fn linear(&self, name: &str) -> &LinearOp {
+        match name {
+            "wq" => &self.wq,
+            "wk" => &self.wk,
+            "wv" => &self.wv,
+            "wo" => &self.wo,
+            "gate" => &self.gate,
+            "up" => &self.up,
+            "down" => &self.down,
+            _ => panic!("unknown linear {name}"),
+        }
+    }
+}
+
+pub struct Transformer {
+    pub cfg: ModelConfig,
+    pub backend: Backend,
+    pub tok_emb: Vec<f32>,
+    pub blocks: Vec<Block>,
+    pub ln_f: Vec<f32>,
+    /// unembedding stays fp (paper convention: embeddings not quantized)
+    pub head: Vec<f32>,
+}
+
+// ---------------------------------------------------------------------------
+// numerics (mirror compile/model.py)
+// ---------------------------------------------------------------------------
+
+pub fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32]) {
+    let d = g.len();
+    for (row, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (ms + 1e-5).sqrt();
+        for i in 0..d {
+            orow[i] = row[i] * r * g[i];
+        }
+    }
+}
+
+/// RoPE tables for positions `[pos0, pos0+len)`: (cos, sin) `[len, hd/2]`.
+pub fn rope_tables(cfg: &ModelConfig, pos0: usize, len: usize) -> (Vec<f32>, Vec<f32>) {
+    let hd = cfg.head_dim();
+    let half = hd / 2;
+    let mut cos = vec![0f32; len * half];
+    let mut sin = vec![0f32; len * half];
+    for p in 0..len {
+        for i in 0..half {
+            let inv = 1.0 / cfg.rope_base.powf(2.0 * i as f32 / hd as f32);
+            let ang = (pos0 + p) as f32 * inv;
+            cos[p * half + i] = ang.cos();
+            sin[p * half + i] = ang.sin();
+        }
+    }
+    (cos, sin)
+}
+
+/// Apply RoPE in place to `x` `[len, d_model]` seen as `[len, H, hd]`.
+pub fn apply_rope(x: &mut [f32], cfg: &ModelConfig, cos: &[f32], sin: &[f32], len: usize) {
+    let (d, hd) = (cfg.d_model, cfg.head_dim());
+    let half = hd / 2;
+    for p in 0..len {
+        for h in 0..cfg.n_heads {
+            let base = p * d + h * hd;
+            for i in 0..half {
+                let c = cos[p * half + i];
+                let s = sin[p * half + i];
+                let x1 = x[base + 2 * i];
+                let x2 = x[base + 2 * i + 1];
+                x[base + 2 * i] = x1 * c - x2 * s;
+                x[base + 2 * i + 1] = x1 * s + x2 * c;
+            }
+        }
+    }
+}
+
+fn silu(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+fn softmax_inplace(row: &mut [f32]) {
+    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0f32;
+    for v in row.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// construction
+// ---------------------------------------------------------------------------
+
+impl Transformer {
+    /// Build from a weight pack. For `Backend::Abq`, calibrated codes for
+    /// the config's tag are used when present in the pack (falling back to
+    /// RTN from the fp weights otherwise, e.g. for sweep configs that were
+    /// not calibrated offline).
+    pub fn from_pack(pack: &WeightPack, cfg: ModelConfig, backend: Backend) -> Result<Self> {
+        let tok_emb = pack.f32("tok_emb")?;
+        let ln_f = pack.f32("ln_f")?;
+        let head = pack.f32("head")?;
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let get_lin = |name: &str| -> Result<LinearOp> {
+                let wt = pack.get(&format!("blocks.{i}.{name}"))?;
+                let shape = wt.shape().to_vec();
+                if shape.len() != 2 {
+                    bail!("linear {name} must be 2-D");
+                }
+                let (out_f, in_f) = (shape[0], shape[1]);
+                let w = wt.as_f32()?.to_vec();
+                Ok(match backend {
+                    Backend::Fp32 => LinearOp::Fp32 { w, out_f, in_f },
+                    Backend::Int8 => LinearOp::Int8(Int8Gemm::from_weights(&w, out_f, in_f)),
+                    Backend::Int4 => LinearOp::Int4(Int4Gemm::from_weights(&w, out_f, in_f)),
+                    Backend::Abq(wa) => {
+                        let base = format!("q.{}.{i}.{name}", wa.tag());
+                        if let Ok(codes_t) = pack.get(&format!("{base}.wq")) {
+                            let codes = codes_t.as_u8()?;
+                            let zw = pack.get(&format!("{base}.zw"))?.as_i32()?.to_vec();
+                            let dw = pack.get(&format!("{base}.dw"))?.as_f32()?.to_vec();
+                            let balance = pack
+                                .get(&format!("{base}.s"))
+                                .ok()
+                                .and_then(|t| t.as_f32().ok().map(|v| v.to_vec()));
+                            LinearOp::Abq(QuantizedLinear::from_codes(
+                                codes, out_f, in_f, zw, dw, balance, wa,
+                            ))
+                        } else {
+                            LinearOp::Abq(QuantizedLinear::from_weights_rtn(&w, out_f, in_f, wa))
+                        }
+                    }
+                })
+            };
+            blocks.push(Block {
+                ln1: pack.f32(&format!("blocks.{i}.ln1"))?,
+                ln2: pack.f32(&format!("blocks.{i}.ln2"))?,
+                wq: get_lin("wq")?,
+                wk: get_lin("wk")?,
+                wv: get_lin("wv")?,
+                wo: get_lin("wo")?,
+                gate: get_lin("gate")?,
+                up: get_lin("up")?,
+                down: get_lin("down")?,
+            });
+        }
+        Ok(Transformer { cfg, backend, tok_emb, blocks, ln_f, head })
+    }
+
+    /// Random-weight model (benches at real LLaMA layer shapes).
+    pub fn random(cfg: ModelConfig, backend: Backend, seed: u64) -> Self {
+        let rng = std::cell::RefCell::new(crate::util::rng::SplitMix::new(seed));
+        let d = cfg.d_model;
+        let dense = |out_f: usize, in_f: usize| -> Vec<f32> {
+            let scale = 1.0 / (in_f as f32).sqrt();
+            let mut r = rng.borrow_mut();
+            (0..out_f * in_f).map(|_| r.next_f32_centered() * 2.0 * scale).collect()
+        };
+        let tok_emb: Vec<f32> = dense(cfg.vocab, d).iter().map(|v| v * 0.08).collect();
+        let head: Vec<f32> = dense(cfg.vocab, d).iter().map(|v| v * 0.08).collect();
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            let mk = |w: Vec<f32>, out_f: usize, in_f: usize| match backend {
+                Backend::Fp32 => LinearOp::Fp32 { w, out_f, in_f },
+                Backend::Int8 => LinearOp::Int8(Int8Gemm::from_weights(&w, out_f, in_f)),
+                Backend::Int4 => LinearOp::Int4(Int4Gemm::from_weights(&w, out_f, in_f)),
+                Backend::Abq(wa) => {
+                    LinearOp::Abq(QuantizedLinear::from_weights_rtn(&w, out_f, in_f, wa))
+                }
+            };
+            blocks.push(Block {
+                ln1: vec![1.0; d],
+                ln2: vec![1.0; d],
+                wq: mk(dense(d, d), d, d),
+                wk: mk(dense(d, d), d, d),
+                wv: mk(dense(d, d), d, d),
+                wo: mk(dense(d, d), d, d),
+                gate: mk(dense(cfg.d_ff, d), cfg.d_ff, d),
+                up: mk(dense(cfg.d_ff, d), cfg.d_ff, d),
+                down: mk(dense(d, cfg.d_ff), d, cfg.d_ff),
+            });
+        }
+        Transformer { cfg, backend, tok_emb, blocks, ln_f: vec![1.0; d], head }
+    }
+
+    // -----------------------------------------------------------------------
+    // forward
+    // -----------------------------------------------------------------------
+
+    fn embed(&self, tokens: &[u32]) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let mut x = vec![0f32; tokens.len() * d];
+        for (t, &tok) in tokens.iter().enumerate() {
+            let off = tok as usize * d;
+            x[t * d..(t + 1) * d].copy_from_slice(&self.tok_emb[off..off + d]);
+        }
+        x
+    }
+
+    /// Prefill one sequence, filling `cache` and returning logits `[S, V]`.
+    pub fn prefill(&self, tokens: &[u32], cache: &mut KvCache) -> Result<Vec<f32>> {
+        let s_len = tokens.len();
+        if s_len > cache.remaining() {
+            bail!("sequence longer than KV capacity");
+        }
+        let (d, hd, nh) = (self.cfg.d_model, self.cfg.head_dim(), self.cfg.n_heads);
+        let pos0 = cache.pos;
+        let (cos, sin) = rope_tables(&self.cfg, pos0, s_len);
+        let mut x = self.embed(tokens);
+        let mut h = vec![0f32; s_len * d];
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        for (li, blk) in self.blocks.iter().enumerate() {
+            rmsnorm(&x, &blk.ln1, &mut h);
+            let mut q = blk.wq.forward(&h, s_len);
+            let mut k = blk.wk.forward(&h, s_len);
+            let v = blk.wv.forward(&h, s_len);
+            apply_rope(&mut q, &self.cfg, &cos, &sin, s_len);
+            apply_rope(&mut k, &self.cfg, &cos, &sin, s_len);
+            for t in 0..s_len {
+                cache.write(li, pos0 + t, &k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+            }
+            // causal attention over cache [0, pos0+t]
+            let mut ctx = vec![0f32; s_len * d];
+            for t in 0..s_len {
+                let keys = pos0 + t + 1;
+                for hh in 0..nh {
+                    let qv = &q[t * d + hh * hd..t * d + (hh + 1) * hd];
+                    let mut scores = vec![0f32; keys];
+                    for kp in 0..keys {
+                        let kr = cache.k_row(li, kp);
+                        let kv = &kr[hh * hd..(hh + 1) * hd];
+                        scores[kp] = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
+                    }
+                    softmax_inplace(&mut scores);
+                    let crow = &mut ctx[t * d + hh * hd..t * d + (hh + 1) * hd];
+                    for kp in 0..keys {
+                        let vr = cache.v_row(li, kp);
+                        let vv = &vr[hh * hd..(hh + 1) * hd];
+                        let a = scores[kp];
+                        for i in 0..hd {
+                            crow[i] += a * vv[i];
+                        }
+                    }
+                }
+            }
+            let attn_out = blk.wo.forward(&ctx, s_len);
+            for i in 0..x.len() {
+                x[i] += attn_out[i];
+            }
+            rmsnorm(&x, &blk.ln2, &mut h);
+            let g = blk.gate.forward(&h, s_len);
+            let u = blk.up.forward(&h, s_len);
+            let act: Vec<f32> = g.iter().zip(&u).map(|(a, b)| silu(*a) * b).collect();
+            let mlp_out = blk.down.forward(&act, s_len);
+            for i in 0..x.len() {
+                x[i] += mlp_out[i];
+            }
+        }
+        cache.pos = pos0 + s_len;
+        rmsnorm(&x.clone(), &self.ln_f, &mut x);
+        Ok(gemm_fp32(&x, &self.head, s_len, self.cfg.vocab, d))
+    }
+
+    /// One decode step for a batch of sequences (linears batched over B —
+    /// the GEMM-vs-GEMV axis the engine benches sweep). `tokens[i]` extends
+    /// `caches[i]`. Returns logits `[B, V]`.
+    pub fn decode_step(&self, tokens: &[u32], caches: &mut [&mut KvCache]) -> Result<Vec<f32>> {
+        let b = tokens.len();
+        if b != caches.len() {
+            bail!("batch size mismatch");
+        }
+        let (d, hd, nh) = (self.cfg.d_model, self.cfg.head_dim(), self.cfg.n_heads);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut x = self.embed(tokens);
+        let mut h = vec![0f32; b * d];
+
+        for (li, blk) in self.blocks.iter().enumerate() {
+            rmsnorm(&x, &blk.ln1, &mut h);
+            let mut q = blk.wq.forward(&h, b);
+            let mut k = blk.wk.forward(&h, b);
+            let v = blk.wv.forward(&h, b);
+            // per-sequence rope at its own position
+            for (bi, cache) in caches.iter().enumerate() {
+                let (cos, sin) = rope_tables(&self.cfg, cache.pos, 1);
+                apply_rope(&mut q[bi * d..(bi + 1) * d], &self.cfg, &cos, &sin, 1);
+                apply_rope(&mut k[bi * d..(bi + 1) * d], &self.cfg, &cos, &sin, 1);
+            }
+            let mut ctx = vec![0f32; b * d];
+            for (bi, cache) in caches.iter_mut().enumerate() {
+                let pos = cache.pos;
+                cache.write(li, pos, &k[bi * d..(bi + 1) * d], &v[bi * d..(bi + 1) * d]);
+                let keys = pos + 1;
+                for hh in 0..nh {
+                    let qv = &q[bi * d + hh * hd..bi * d + (hh + 1) * hd];
+                    let mut scores = vec![0f32; keys];
+                    for kp in 0..keys {
+                        let kr = cache.k_row(li, kp);
+                        let kv = &kr[hh * hd..(hh + 1) * hd];
+                        scores[kp] = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
+                    }
+                    softmax_inplace(&mut scores);
+                    let crow = &mut ctx[bi * d + hh * hd..bi * d + (hh + 1) * hd];
+                    for kp in 0..keys {
+                        let vr = cache.v_row(li, kp);
+                        let vv = &vr[hh * hd..(hh + 1) * hd];
+                        let a = scores[kp];
+                        for i in 0..hd {
+                            crow[i] += a * vv[i];
+                        }
+                    }
+                }
+            }
+            let attn_out = blk.wo.forward(&ctx, b);
+            for i in 0..x.len() {
+                x[i] += attn_out[i];
+            }
+            rmsnorm(&x, &blk.ln2, &mut h);
+            let g = blk.gate.forward(&h, b);
+            let u = blk.up.forward(&h, b);
+            let act: Vec<f32> = g.iter().zip(&u).map(|(a, b)| silu(*a) * b).collect();
+            let mlp_out = blk.down.forward(&act, b);
+            for i in 0..x.len() {
+                x[i] += mlp_out[i];
+            }
+        }
+        for cache in caches.iter_mut() {
+            cache.pos += 1;
+        }
+        rmsnorm(&x.clone(), &self.ln_f, &mut x);
+        Ok(gemm_fp32(&x, &self.head, b, self.cfg.vocab, d))
+    }
+
+    /// Total block-weight bytes (Table 12 memory accounting).
+    pub fn weight_bytes(&self) -> usize {
+        let blocks: usize = self
+            .blocks
+            .iter()
+            .map(|b| {
+                LINEAR_NAMES.iter().map(|n| b.linear(n).weight_bytes()).sum::<usize>()
+                    + (b.ln1.len() + b.ln2.len()) * 4
+            })
+            .sum();
+        blocks + (self.tok_emb.len() + self.head.len() + self.ln_f.len()) * 4
+    }
+
+    /// Load the pack + manifest from an artifacts directory.
+    pub fn load_artifacts(dir: &std::path::Path, backend: Backend) -> Result<Self> {
+        let pack = WeightPack::load(&dir.join("weights.abqw"))?;
+        let manifest = std::fs::read_to_string(dir.join("manifest.json"))
+            .context("read manifest.json")?;
+        let j = crate::util::json::Json::parse(&manifest)
+            .map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let cfg = super::config::ModelConfig {
+            name: "tiny-llama",
+            vocab: j.at(&["model", "vocab"]).and_then(|v| v.as_usize()).context("vocab")?,
+            d_model: j.at(&["model", "d_model"]).and_then(|v| v.as_usize()).context("d_model")?,
+            n_layers: j.at(&["model", "n_layers"]).and_then(|v| v.as_usize()).context("n_layers")?,
+            n_heads: j.at(&["model", "n_heads"]).and_then(|v| v.as_usize()).context("n_heads")?,
+            d_ff: j.at(&["model", "d_ff"]).and_then(|v| v.as_usize()).context("d_ff")?,
+            max_seq: j.at(&["model", "max_seq"]).and_then(|v| v.as_usize()).context("max_seq")?,
+            rope_base: j.at(&["model", "rope_base"]).and_then(|v| v.as_f64()).context("rope_base")?
+                as f32,
+        };
+        Self::from_pack(&pack, cfg, backend)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    const MICRO: ModelConfig = ModelConfig {
+        name: "micro",
+        vocab: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        max_seq: 16,
+        rope_base: 10000.0,
+    };
+
+    #[test]
+    fn prefill_then_decode_matches_prefill_of_longer_seq() {
+        // teacher-forcing consistency: prefill(t0..t3) then decode(t4)
+        // must give the same final-position logits as prefill(t0..t4)
+        let m = Transformer::random(MICRO, Backend::Fp32, 7);
+        let toks = [1u32, 5, 9, 13, 21];
+        let mut c1 = KvCache::new(&MICRO);
+        let logits_full = m.prefill(&toks, &mut c1).unwrap();
+        let last_full = &logits_full[4 * MICRO.vocab..5 * MICRO.vocab];
+
+        let mut c2 = KvCache::new(&MICRO);
+        m.prefill(&toks[..4], &mut c2).unwrap();
+        let mut caches = [&mut c2];
+        let logits_step = m.decode_step(&[toks[4]], &mut caches).unwrap();
+        for (a, b) in last_full.iter().zip(&logits_step) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batched_decode_matches_individual() {
+        let m = Transformer::random(MICRO, Backend::Fp32, 3);
+        let seq_a = [2u32, 4, 6];
+        let seq_b = [1u32, 3];
+        let mut ca = KvCache::new(&MICRO);
+        let mut cb = KvCache::new(&MICRO);
+        m.prefill(&seq_a, &mut ca).unwrap();
+        m.prefill(&seq_b, &mut cb).unwrap();
+        // batched step
+        let mut ca2 = ca.clone();
+        let mut cb2 = cb.clone();
+        let mut batch = [&mut ca2, &mut cb2];
+        let batched = m.decode_step(&[7, 8], &mut batch).unwrap();
+        // individual steps
+        let mut one_a = [&mut ca];
+        let la = m.decode_step(&[7], &mut one_a).unwrap();
+        let mut one_b = [&mut cb];
+        let lb = m.decode_step(&[8], &mut one_b).unwrap();
+        for i in 0..MICRO.vocab {
+            assert!((batched[i] - la[i]).abs() < 1e-4);
+            assert!((batched[MICRO.vocab + i] - lb[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn abq_backend_runs_and_tracks_fp() {
+        let fp = Transformer::random(MICRO, Backend::Fp32, 11);
+        let q8 = Transformer::random(MICRO, Backend::Abq(WAConfig::new(8, 8)), 11);
+        let toks = [3u32, 7, 11, 2];
+        let mut c1 = KvCache::new(&MICRO);
+        let mut c2 = KvCache::new(&MICRO);
+        let lf = fp.prefill(&toks, &mut c1).unwrap();
+        let lq = q8.prefill(&toks, &mut c2).unwrap();
+        let max_abs = lf.iter().map(|v| v.abs()).fold(0f32, f32::max);
+        let max_err = lf.iter().zip(&lq).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+        assert!(max_err / max_abs < 0.25, "w8a8 rel err {}", max_err / max_abs);
+    }
+
+    #[test]
+    fn weight_bytes_compression() {
+        let fp = Transformer::random(MICRO, Backend::Fp32, 1);
+        let w2 = Transformer::random(MICRO, Backend::Abq(WAConfig::new(2, 8)), 1);
+        assert!(w2.weight_bytes() < fp.weight_bytes() / 2);
+    }
+}

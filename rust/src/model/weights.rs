@@ -1,0 +1,202 @@
+//! `.abqw` weight-pack parser (format written by python `compile/aot.py`):
+//!
+//! ```text
+//! magic  b"ABQW1\0"
+//! u32    n_tensors
+//! repeat n_tensors:
+//!   u16   name_len, name (utf-8)
+//!   u8    dtype: 0=f32 1=i32 2=u8
+//!   u8    ndim
+//!   u32×ndim dims
+//!   data  (little-endian, C order)
+//! ```
+//!
+//! Contains the fp weights (`tok_emb`, `blocks.i.*`, `ln_f`, `head`) plus,
+//! per exported quant config, the calibrated integer codes and scales
+//! (`q.<tag>.<block>.<linear>.{wq,zw,dw,s}`).
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    U8(Vec<u8>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::I32(_, s) | Tensor::U8(_, s) => s,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v, _) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v, _) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match self {
+            Tensor::U8(v, _) => Ok(v),
+            _ => bail!("tensor is not u8"),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The parsed weight pack.
+#[derive(Debug, Default)]
+pub struct WeightPack {
+    pub tensors: HashMap<String, Tensor>,
+}
+
+impl WeightPack {
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open weight pack {path:?}"))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::parse(&buf)
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > buf.len() {
+                bail!("truncated weight pack at byte {}", *pos);
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 6)? != b"ABQW1\0" {
+            bail!("bad magic");
+        }
+        let n_tensors = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+        let mut tensors = HashMap::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            let name_len = u16::from_le_bytes(take(&mut pos, 2)?.try_into()?) as usize;
+            let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())?;
+            let dtype = take(&mut pos, 1)?[0];
+            let ndim = take(&mut pos, 1)?[0] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize);
+            }
+            let count: usize = shape.iter().product();
+            let t = match dtype {
+                0 => {
+                    let raw = take(&mut pos, count * 4)?;
+                    let v = raw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    Tensor::F32(v, shape)
+                }
+                1 => {
+                    let raw = take(&mut pos, count * 4)?;
+                    let v = raw
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    Tensor::I32(v, shape)
+                }
+                2 => Tensor::U8(take(&mut pos, count)?.to_vec(), shape),
+                d => bail!("unknown dtype {d} for {name}"),
+            };
+            tensors.insert(name, t);
+        }
+        Ok(WeightPack { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("missing tensor '{name}'"))
+    }
+
+    pub fn f32(&self, name: &str) -> Result<Vec<f32>> {
+        Ok(self.get(name)?.as_f32()?.to_vec())
+    }
+
+    /// Names of quant configs present (tags like `w2sa8`).
+    pub fn quant_tags(&self) -> Vec<String> {
+        let mut tags: Vec<String> = self
+            .tensors
+            .keys()
+            .filter_map(|k| k.strip_prefix("q."))
+            .filter_map(|k| k.split('.').next())
+            .map(|s| s.to_string())
+            .collect();
+        tags.sort();
+        tags.dedup();
+        tags
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_pack() -> Vec<u8> {
+        let mut b: Vec<u8> = b"ABQW1\0".to_vec();
+        b.extend((2u32).to_le_bytes());
+        // f32 tensor "a" shape [2,2]
+        b.extend((1u16).to_le_bytes());
+        b.extend(b"a");
+        b.push(0);
+        b.push(2);
+        b.extend((2u32).to_le_bytes());
+        b.extend((2u32).to_le_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.5] {
+            b.extend(v.to_le_bytes());
+        }
+        // u8 tensor "q.w2sa8.0.wq" shape [3]
+        let name = b"q.w2sa8.0.wq";
+        b.extend((name.len() as u16).to_le_bytes());
+        b.extend(name);
+        b.push(2);
+        b.push(1);
+        b.extend((3u32).to_le_bytes());
+        b.extend([7u8, 8, 9]);
+        b
+    }
+
+    #[test]
+    fn parse_sample() {
+        let p = WeightPack::parse(&sample_pack()).unwrap();
+        assert_eq!(p.get("a").unwrap().as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.5]);
+        assert_eq!(p.get("a").unwrap().shape(), &[2, 2]);
+        assert_eq!(p.get("q.w2sa8.0.wq").unwrap().as_u8().unwrap(), &[7, 8, 9]);
+        assert_eq!(p.quant_tags(), vec!["w2sa8".to_string()]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(WeightPack::parse(b"NOPE").is_err());
+        let mut good = sample_pack();
+        good.truncate(good.len() - 2);
+        assert!(WeightPack::parse(&good).is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! WqAp quantization configurations (mirrors python `quantizers.QuantSpec` /
+//! `WAConfig`; the string grammar is identical: `w2*a8`, `w4a4g128`, `fp16`).
+
+use std::fmt;
+use std::str::FromStr;
+
+/// One side (weight or activation) of a quantization configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct QuantSpec {
+    /// nominal bit width (16 = keep float)
+    pub bits: u8,
+    /// bit-balance strategy (paper §3.3): symmetric {-2..2} at 2 bits
+    pub balanced: bool,
+    /// per-group size along K (0 = per-channel / per-token)
+    pub group: u32,
+}
+
+impl QuantSpec {
+    pub const fn fp() -> Self {
+        QuantSpec { bits: 16, balanced: false, group: 0 }
+    }
+
+    pub const fn new(bits: u8) -> Self {
+        QuantSpec { bits, balanced: false, group: 0 }
+    }
+
+    pub fn is_fp(&self) -> bool {
+        self.bits >= 16
+    }
+
+    /// Number of representable levels (bit balance: 5 at 2 bits).
+    pub fn n_levels(&self) -> u32 {
+        if self.balanced && self.bits == 2 {
+            5
+        } else {
+            1 << self.bits
+        }
+    }
+
+    /// Bit planes needed to store unsigned codes `0..n_levels-1`.
+    pub fn planes(&self) -> usize {
+        let max = self.n_levels() - 1;
+        (32 - max.leading_zeros()).max(1) as usize
+    }
+}
+
+/// Full WqAp configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct WAConfig {
+    pub weight: QuantSpec,
+    pub act: QuantSpec,
+}
+
+impl WAConfig {
+    pub const FP16: WAConfig = WAConfig { weight: QuantSpec::fp(), act: QuantSpec::fp() };
+
+    pub fn new(w_bits: u8, a_bits: u8) -> Self {
+        WAConfig { weight: QuantSpec::new(w_bits), act: QuantSpec::new(a_bits) }
+    }
+
+    pub fn balanced(w_bits: u8, a_bits: u8) -> Self {
+        WAConfig {
+            weight: QuantSpec { bits: w_bits, balanced: true, group: 0 },
+            act: QuantSpec::new(a_bits),
+        }
+    }
+
+    /// Artifact tag (`*` → `s`, filesystem-safe): `w2*a8` → `w2sa8`.
+    pub fn tag(&self) -> String {
+        self.to_string().replace('*', "s")
+    }
+
+    /// Weight bytes per element ratio vs fp16 (memory-compression model).
+    pub fn weight_compression_vs_fp16(&self) -> f64 {
+        if self.weight.is_fp() {
+            1.0
+        } else {
+            16.0 / self.weight.planes() as f64
+        }
+    }
+}
+
+impl fmt::Display for WAConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.weight.is_fp() && self.act.is_fp() {
+            return write!(f, "fp16");
+        }
+        let star = if self.weight.balanced { "*" } else { "" };
+        let group = if self.weight.group > 0 {
+            format!("g{}", self.weight.group)
+        } else {
+            String::new()
+        };
+        write!(f, "w{}{}a{}{}", self.weight.bits, star, self.act.bits, group)
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("invalid quant config: {0}")]
+pub struct ParseError(String);
+
+impl FromStr for WAConfig {
+    type Err = ParseError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let s = s.trim().to_lowercase();
+        if matches!(s.as_str(), "fp16" | "fp32" | "fp") {
+            return Ok(WAConfig::FP16);
+        }
+        let rest = s.strip_prefix('w').ok_or_else(|| ParseError(s.clone()))?;
+        let a_at = rest.find('a').ok_or_else(|| ParseError(s.clone()))?;
+        let (mut wpart, apart) = (&rest[..a_at], &rest[a_at + 1..]);
+        let balanced = wpart.ends_with('*') || wpart.ends_with('s');
+        if balanced {
+            wpart = &wpart[..wpart.len() - 1];
+        }
+        let (abits_str, group) = match apart.find('g') {
+            Some(i) => (
+                &apart[..i],
+                apart[i + 1..].parse::<u32>().map_err(|_| ParseError(s.clone()))?,
+            ),
+            None => (apart, 0),
+        };
+        let w_bits: u8 = wpart.parse().map_err(|_| ParseError(s.clone()))?;
+        let a_bits: u8 = abits_str.parse().map_err(|_| ParseError(s.clone()))?;
+        if w_bits == 0 || w_bits > 16 || a_bits == 0 || a_bits > 16 {
+            return Err(ParseError(s));
+        }
+        Ok(WAConfig {
+            weight: QuantSpec { bits: w_bits, balanced, group },
+            act: QuantSpec::new(a_bits),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["w2a8", "w2*a8", "w4a4", "w8a8", "w4a4g128", "fp16", "w6a6"] {
+            let cfg: WAConfig = s.parse().unwrap();
+            assert_eq!(cfg.to_string(), s, "roundtrip {s}");
+        }
+    }
+
+    #[test]
+    fn tag_is_fs_safe() {
+        let cfg: WAConfig = "w2*a8".parse().unwrap();
+        assert_eq!(cfg.tag(), "w2sa8");
+        let back: WAConfig = "w2sa8".parse().unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn balanced_levels_and_planes() {
+        let cfg: WAConfig = "w2*a8".parse().unwrap();
+        assert_eq!(cfg.weight.n_levels(), 5);
+        assert_eq!(cfg.weight.planes(), 3);
+        assert_eq!(cfg.act.planes(), 8);
+        let plain: WAConfig = "w2a8".parse().unwrap();
+        assert_eq!(plain.weight.n_levels(), 4);
+        assert_eq!(plain.weight.planes(), 2);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        for s in ["", "w", "wXa4", "w4", "a8", "w0a4", "w4a0", "w99a99"] {
+            assert!(s.parse::<WAConfig>().is_err(), "{s}");
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Quantization: WqAp configs, weight/activation quantizers, balance
+//! vectors (rust mirror of python `compile/quantizers.py`; DESIGN.md §5).
+
+pub mod config;
+pub mod quantizer;
+pub mod smooth;
+
+pub use config::{QuantSpec, WAConfig};
+pub use quantizer::{
+    dequantize_value, qparams_minmax, quantize_act_per_token, quantize_value,
+    quantize_weight_rows, QParams, QuantizedRows,
+};
+pub use smooth::{apply_balance_act, apply_balance_weight, smooth_scales};

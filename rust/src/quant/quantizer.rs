@@ -1,0 +1,210 @@
+//! Quantizers (rust mirror of python `compile/quantizers.py`).
+//!
+//! * weights: per-output-channel asymmetric min/max, optional clipping
+//!   (α, β) and per-group along K; bit-balance 5-level grid at w2*
+//! * activations: per-token dynamic asymmetric min/max (0 always
+//!   representable)
+//!
+//! Codes are unsigned (`u8`) with explicit zero points — the form the
+//! bit-plane engine consumes.
+
+use super::config::QuantSpec;
+
+/// Quantization parameters for one row (channel or token).
+#[derive(Clone, Copy, Debug)]
+pub struct QParams {
+    pub delta: f32,
+    pub zp: i32,
+}
+
+/// Compute (delta, zp) from clipped min/max for a spec.
+pub fn qparams_minmax(lo: f32, hi: f32, spec: &QuantSpec) -> QParams {
+    let n = spec.n_levels() as f32;
+    if spec.balanced && spec.bits == 2 {
+        // symmetric 5-level grid {-2Δ..2Δ}
+        let absmax = lo.abs().max(hi.abs());
+        let delta = (absmax / 2.0).max(1e-8);
+        return QParams { delta, zp: 2 };
+    }
+    let delta = ((hi - lo) / (n - 1.0)).max(1e-8);
+    let zp = (-lo / delta).round().clamp(0.0, n - 1.0) as i32;
+    QParams { delta, zp }
+}
+
+#[inline]
+pub fn quantize_value(x: f32, p: QParams, spec: &QuantSpec) -> u8 {
+    let n = spec.n_levels() as f32;
+    ((x / p.delta).round() + p.zp as f32).clamp(0.0, n - 1.0) as u8
+}
+
+#[inline]
+pub fn dequantize_value(q: u8, p: QParams) -> f32 {
+    (q as i32 - p.zp) as f32 * p.delta
+}
+
+/// Per-output-channel weight quantization.
+///
+/// `w`: row-major `[out, in]`. `alpha`/`beta` clip the per-row max/min
+/// (paper Eq. 1). Returns codes + per-row params.
+pub struct QuantizedRows {
+    pub codes: Vec<u8>,
+    pub params: Vec<QParams>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+pub fn quantize_weight_rows(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    spec: &QuantSpec,
+    alpha: f32,
+    beta: f32,
+) -> QuantizedRows {
+    assert_eq!(w.len(), rows * cols);
+    let mut codes = vec![0u8; rows * cols];
+    let mut params = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let row = &w[r * cols..(r + 1) * cols];
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &v in row {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        // keep 0 inside the range: avoids a degenerate Δ for (near-)
+        // constant rows and matches the python exporter's convention
+        let lo = (beta * lo).min(0.0);
+        let hi = (alpha * hi).max(0.0);
+        let p = qparams_minmax(lo, hi, spec);
+        for (c, &v) in row.iter().enumerate() {
+            codes[r * cols + c] = quantize_value(v, p, spec);
+        }
+        params.push(p);
+    }
+    QuantizedRows { codes, params, rows, cols }
+}
+
+/// Per-token activation quantization of `x` `[tokens, features]`.
+pub fn quantize_act_per_token(
+    x: &[f32],
+    tokens: usize,
+    features: usize,
+    spec: &QuantSpec,
+) -> QuantizedRows {
+    assert_eq!(x.len(), tokens * features);
+    let mut codes = vec![0u8; tokens * features];
+    let mut params = Vec::with_capacity(tokens);
+    for t in 0..tokens {
+        let row = &x[t * features..(t + 1) * features];
+        let (mut lo, mut hi) = (0f32, 0f32); // keep zero representable
+        for &v in row {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let p = qparams_minmax(lo, hi, spec);
+        for (c, &v) in row.iter().enumerate() {
+            codes[t * features + c] = quantize_value(v, p, spec);
+        }
+        params.push(p);
+    }
+    QuantizedRows { codes, params, rows: tokens, cols: features }
+}
+
+impl QuantizedRows {
+    pub fn zps(&self) -> Vec<i32> {
+        self.params.iter().map(|p| p.zp).collect()
+    }
+
+    pub fn deltas(&self) -> Vec<f32> {
+        self.params.iter().map(|p| p.delta).collect()
+    }
+
+    /// Dequantize back to floats (reference / tests).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.codes.len()];
+        for r in 0..self.rows {
+            let p = self.params[r];
+            for c in 0..self.cols {
+                out[r * self.cols + c] = dequantize_value(self.codes[r * self.cols + c], p);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::config::QuantSpec;
+
+    fn spec(bits: u8) -> QuantSpec {
+        QuantSpec::new(bits)
+    }
+
+    #[test]
+    fn codes_in_range_and_error_bounded() {
+        let w: Vec<f32> = (0..4 * 32).map(|i| ((i * 37 % 101) as f32 - 50.0) / 17.0).collect();
+        for bits in [2u8, 3, 4, 8] {
+            let s = spec(bits);
+            let q = quantize_weight_rows(&w, 4, 32, &s, 1.0, 1.0);
+            let maxcode = (s.n_levels() - 1) as u8;
+            assert!(q.codes.iter().all(|&c| c <= maxcode));
+            let dq = q.dequantize();
+            for r in 0..4 {
+                let d = q.params[r].delta;
+                for c in 0..32 {
+                    let err = (dq[r * 32 + c] - w[r * 32 + c]).abs();
+                    assert!(err <= d * 0.5 + 1e-6, "bits {bits} err {err} delta {d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_grid_is_symmetric() {
+        let s = QuantSpec { bits: 2, balanced: true, group: 0 };
+        let w = vec![-1.0f32, -0.5, 0.0, 0.5, 1.0, 0.77, -0.77, 0.1];
+        let q = quantize_weight_rows(&w, 1, 8, &s, 1.0, 1.0);
+        assert_eq!(q.params[0].zp, 2);
+        let dq = q.dequantize();
+        // level set must be symmetric around 0: {-2Δ, -Δ, 0, Δ, 2Δ}
+        let d = q.params[0].delta;
+        for v in dq {
+            let lvl = v / d;
+            assert!((lvl.round() - lvl).abs() < 1e-5 && lvl.abs() <= 2.0 + 1e-5);
+        }
+    }
+
+    #[test]
+    fn plain_int2_grid_is_asymmetric() {
+        // standard INT2 on symmetric data puts 4 levels over [-1, 1]:
+        // the grid cannot contain both -x and +x for the extremes —
+        // the asymmetry the bit-balance strategy fixes (paper Fig. 7).
+        let s = spec(2);
+        let w = vec![-1.0f32, -0.33, 0.33, 1.0];
+        let q = quantize_weight_rows(&w, 1, 4, &s, 1.0, 1.0);
+        let dq = q.dequantize();
+        let has = |x: f32| dq.iter().any(|v| (v - x).abs() < 1e-6);
+        assert!(has(-1.0) != has(1.0) || dq.iter().all(|v| (v.abs() - 1.0).abs() > 1e-6));
+    }
+
+    #[test]
+    fn act_quant_keeps_zero_exact() {
+        let s = spec(8);
+        let x = vec![0.5f32, 1.5, 3.0, 0.0, 2.0, 7.5, 0.0, 1.0];
+        let q = quantize_act_per_token(&x, 2, 4, &s);
+        let dq = q.dequantize();
+        assert!((dq[3]).abs() < 1e-6);
+        assert!((dq[6]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clipping_shrinks_range() {
+        let s = spec(4);
+        let mut w = vec![0.1f32; 64];
+        w[0] = 100.0; // outlier
+        let q_full = quantize_weight_rows(&w, 1, 64, &s, 1.0, 1.0);
+        let q_clip = quantize_weight_rows(&w, 1, 64, &s, 0.05, 1.0);
+        assert!(q_clip.params[0].delta < q_full.params[0].delta);
+    }
+}

@@ -1,0 +1,73 @@
+//! SmoothQuant-style balance vectors (baseline + the form in which ABQ's
+//! *learned* balance vectors are applied at inference).
+//!
+//! Eq. (1) rewrite: `W·X = (W·diag(s)) · (diag(s)⁻¹·X)`. The calibrator
+//! (python) learns `s`; at inference the engine divides the activations by
+//! `s` before per-token quantization and the exported weight codes already
+//! contain `W·diag(s)`.
+
+/// Closed-form SmoothQuant rule: `s_j = max|X_j|^m / max|W_j|^(1-m)`.
+pub fn smooth_scales(act_absmax: &[f32], w_absmax: &[f32], migration: f32) -> Vec<f32> {
+    assert_eq!(act_absmax.len(), w_absmax.len());
+    act_absmax
+        .iter()
+        .zip(w_absmax)
+        .map(|(&a, &w)| {
+            let s = a.max(1e-5).powf(migration) / w.max(1e-5).powf(1.0 - migration);
+            s.max(1e-5)
+        })
+        .collect()
+}
+
+/// Divide activations (row-major `[tokens, features]`) by `s` in place.
+pub fn apply_balance_act(x: &mut [f32], features: usize, s: &[f32]) {
+    assert_eq!(s.len(), features);
+    for row in x.chunks_exact_mut(features) {
+        for (v, &si) in row.iter_mut().zip(s) {
+            *v /= si;
+        }
+    }
+}
+
+/// Multiply weights (row-major `[out, in]`) by `s` per input channel.
+pub fn apply_balance_weight(w: &mut [f32], cols: usize, s: &[f32]) {
+    assert_eq!(s.len(), cols);
+    for row in w.chunks_exact_mut(cols) {
+        for (v, &si) in row.iter_mut().zip(s) {
+            *v *= si;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balance_preserves_product() {
+        let w = vec![1.0f32, 2.0, 3.0, 4.0]; // [2, 2]
+        let x = vec![5.0f32, 6.0];           // [1, 2]
+        let y0: Vec<f32> = (0..2)
+            .map(|r| w[r * 2] * x[0] + w[r * 2 + 1] * x[1])
+            .collect();
+        let s = smooth_scales(&[5.0, 6.0], &[3.0, 4.0], 0.5);
+        let mut wb = w.clone();
+        let mut xb = x.clone();
+        apply_balance_weight(&mut wb, 2, &s);
+        apply_balance_act(&mut xb, 2, &s);
+        let y1: Vec<f32> = (0..2)
+            .map(|r| wb[r * 2] * xb[0] + wb[r * 2 + 1] * xb[1])
+            .collect();
+        for (a, b) in y0.iter().zip(&y1) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn migration_extremes() {
+        let s0 = smooth_scales(&[8.0], &[2.0], 0.0); // all difficulty to act
+        let s1 = smooth_scales(&[8.0], &[2.0], 1.0); // all difficulty to weight
+        assert!((s0[0] - 0.5).abs() < 1e-6);
+        assert!((s1[0] - 8.0).abs() < 1e-6);
+    }
+}

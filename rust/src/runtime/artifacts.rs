@@ -1,0 +1,251 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`) and the input-name grammar mapping manifest
+//! input names to weight-pack tensors / runtime values:
+//!
+//!   `params:<pack name>`   — fp weight tensor (static)
+//!   `qstate:<i>.<lin>.<f>` — quantized code/scale tensor (static); maps to
+//!                            pack tensor `q.<tag>.<i>.<lin>.<f>`
+//!   `tokens`               — token ids (dynamic)
+//!   `kv:<layer>.<0|1>`     — KV cache array (dynamic, device-chained)
+//!   `pos`                  — decode position scalar (dynamic)
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct QuantConfigEntry {
+    pub name: String,
+    pub tag: String,
+    pub w_bits: u8,
+    pub w_planes: usize,
+    pub a_bits: u8,
+    pub balanced: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub prefill_seq: usize,
+    pub decode_batch: usize,
+    pub fp_ppl: f64,
+    pub quant_configs: Vec<QuantConfigEntry>,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl ArtifactManifest {
+    pub fn from_json(j: &Json, dir: &Path) -> Result<Self> {
+        let need = |path: &[&str]| -> Result<f64> {
+            j.at(path)
+                .and_then(|v| v.as_f64())
+                .with_context(|| format!("manifest missing {path:?}"))
+        };
+        let mut artifacts = Vec::new();
+        if let Some(arr) = j.get("artifacts").and_then(|a| a.as_arr()) {
+            for e in arr {
+                let name = e
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .context("artifact name")?
+                    .to_string();
+                let rel = e.get("path").and_then(|v| v.as_str()).context("artifact path")?;
+                let inputs = e
+                    .get("inputs")
+                    .and_then(|v| v.as_arr())
+                    .context("artifact inputs")?
+                    .iter()
+                    .map(|i| i.as_str().unwrap_or_default().to_string())
+                    .collect();
+                artifacts.push(ArtifactEntry { name, path: dir.join(rel), inputs });
+            }
+        }
+        let mut quant_configs = Vec::new();
+        if let Some(arr) = j.get("quant_configs").and_then(|a| a.as_arr()) {
+            for e in arr {
+                quant_configs.push(QuantConfigEntry {
+                    name: e.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                    tag: e.get("tag").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                    w_bits: e.get("w_bits").and_then(|v| v.as_f64()).unwrap_or(0.0) as u8,
+                    w_planes: e.get("w_planes").and_then(|v| v.as_usize()).unwrap_or(0),
+                    a_bits: e.get("a_bits").and_then(|v| v.as_f64()).unwrap_or(0.0) as u8,
+                    balanced: e.get("balanced").and_then(|v| v.as_bool()).unwrap_or(false),
+                });
+            }
+        }
+        Ok(ArtifactManifest {
+            vocab: need(&["model", "vocab"])? as usize,
+            d_model: need(&["model", "d_model"])? as usize,
+            n_layers: need(&["model", "n_layers"])? as usize,
+            n_heads: need(&["model", "n_heads"])? as usize,
+            d_ff: need(&["model", "d_ff"])? as usize,
+            max_seq: need(&["model", "max_seq"])? as usize,
+            prefill_seq: need(&["prefill_seq"])? as usize,
+            decode_batch: need(&["decode_batch"])? as usize,
+            fp_ppl: need(&["fp_ppl"]).unwrap_or(0.0),
+            quant_configs,
+            artifacts,
+        })
+    }
+
+    /// Which quant tag an artifact name refers to (e.g. `model_w2sa8_decode`
+    /// → `w2sa8`); fp16 artifacts return None.
+    pub fn tag_of_artifact(name: &str) -> Option<&str> {
+        let rest = name.strip_prefix("model_")?;
+        let tag = rest.split('_').next()?;
+        if tag == "fp16" {
+            None
+        } else {
+            Some(tag)
+        }
+    }
+}
+
+/// Classified artifact input.
+#[derive(Clone, Debug, PartialEq)]
+pub enum InputKind {
+    Param { pack_name: String },
+    QState { pack_name: String },
+    Tokens { shape: Vec<usize> },
+    Kv { shape: Vec<usize> },
+    Pos,
+}
+
+/// Classify one manifest input name for an artifact. The artifact's quant
+/// tag is inferred from the surrounding artifact name at program load, so
+/// `qstate:` names get resolved with `resolve_qstate_tag` first; here we
+/// thread the tag through the manifest-driven loader.
+pub fn input_spec_with_tag(
+    input: &str,
+    m: &ArtifactManifest,
+    tag: Option<&str>,
+    is_prefill: bool,
+) -> Result<InputKind> {
+    if let Some(rest) = input.strip_prefix("params:") {
+        return Ok(InputKind::Param { pack_name: rest.to_string() });
+    }
+    if let Some(rest) = input.strip_prefix("qstate:") {
+        let tag = tag.ok_or_else(|| anyhow!("qstate input in fp16 artifact: {input}"))?;
+        return Ok(InputKind::QState { pack_name: format!("q.{tag}.{rest}") });
+    }
+    match input {
+        "tokens" => {
+            let shape = if is_prefill {
+                vec![1, m.prefill_seq]
+            } else {
+                vec![m.decode_batch, 1]
+            };
+            Ok(InputKind::Tokens { shape })
+        }
+        "pos" => Ok(InputKind::Pos),
+        other => {
+            if other.strip_prefix("kv:").is_some() {
+                Ok(InputKind::Kv {
+                    shape: vec![
+                        m.decode_batch,
+                        m.max_seq,
+                        m.n_heads,
+                        m.d_model / m.n_heads,
+                    ],
+                })
+            } else {
+                bail!("unknown artifact input '{other}'")
+            }
+        }
+    }
+}
+
+/// Convenience used by `engine.rs`: infer tag/prefill-ness by scanning the
+/// manifest for the artifact that lists this exact input string. The
+/// engine resolves per-artifact, so this thin wrapper keeps its call sites
+/// simple — it requires the input string to be unambiguous, which holds
+/// for the artifacts aot.py emits (qstate names embed nothing fp16).
+pub fn input_spec(input: &str, m: &ArtifactManifest) -> Result<InputKind> {
+    for art in &m.artifacts {
+        if art.inputs.iter().any(|i| i == input) {
+            let tag = ArtifactManifest::tag_of_artifact(&art.name);
+            let is_prefill = art.name.ends_with("prefill");
+            return input_spec_with_tag(input, m, tag, is_prefill);
+        }
+    }
+    bail!("input '{input}' not found in any artifact")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> ArtifactManifest {
+        let j = Json::parse(
+            r#"{
+            "model": {"vocab": 512, "d_model": 256, "n_layers": 4,
+                      "n_heads": 8, "d_ff": 704, "max_seq": 256,
+                      "rope_base": 10000.0},
+            "prefill_seq": 128, "decode_batch": 1, "fp_ppl": 10.0,
+            "quant_configs": [{"name": "w2*a8", "tag": "w2sa8",
+                               "w_bits": 2, "w_planes": 3, "a_bits": 8,
+                               "balanced": true}],
+            "artifacts": [
+              {"name": "model_fp16_prefill", "path": "a.hlo.txt",
+               "inputs": ["params:tok_emb", "tokens"]},
+              {"name": "model_w2sa8_decode", "path": "b.hlo.txt",
+               "inputs": ["params:tok_emb", "qstate:0.down.wq",
+                          "tokens", "kv:0.0", "pos"]}
+            ]
+        }"#,
+        )
+        .unwrap();
+        ArtifactManifest::from_json(&j, Path::new("/tmp/art")).unwrap()
+    }
+
+    #[test]
+    fn parses_model_dims() {
+        let m = manifest();
+        assert_eq!(m.vocab, 512);
+        assert_eq!(m.n_layers, 4);
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.quant_configs[0].w_planes, 3);
+    }
+
+    #[test]
+    fn classifies_inputs() {
+        let m = manifest();
+        assert_eq!(
+            input_spec("params:tok_emb", &m).unwrap(),
+            InputKind::Param { pack_name: "tok_emb".into() }
+        );
+        assert_eq!(
+            input_spec("qstate:0.down.wq", &m).unwrap(),
+            InputKind::QState { pack_name: "q.w2sa8.0.down.wq".into() }
+        );
+        assert!(matches!(input_spec("kv:0.0", &m).unwrap(), InputKind::Kv { .. }));
+        assert_eq!(input_spec("pos", &m).unwrap(), InputKind::Pos);
+        // tokens in the fp16 prefill artifact → prefill shape
+        assert_eq!(
+            input_spec("tokens", &m).unwrap(),
+            InputKind::Tokens { shape: vec![1, 128] }
+        );
+    }
+
+    #[test]
+    fn tag_inference() {
+        assert_eq!(ArtifactManifest::tag_of_artifact("model_fp16_prefill"), None);
+        assert_eq!(
+            ArtifactManifest::tag_of_artifact("model_w2sa8_decode"),
+            Some("w2sa8")
+        );
+    }
+}

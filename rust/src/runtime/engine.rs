@@ -1,0 +1,279 @@
+//! PJRT executor for the AOT artifacts: loads the HLO *text* lowered by
+//! `python/compile/aot.py` (the L2 jax model with the L1 pallas kernel
+//! inlined), compiles it on the PJRT CPU client, and runs prefill/decode
+//! from the rust request path. Python is never involved here.
+//!
+//! Weights (and quantized code tensors) are uploaded to device buffers
+//! once at load; per step only tokens/position (and the KV chain, which
+//! stays device-resident as output→input buffers) move.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::model::WeightPack;
+use crate::util::json::Json;
+
+use super::artifacts::{input_spec_with_tag, ArtifactManifest, InputKind};
+
+pub struct PjrtEngine {
+    pub client: PjRtClient,
+    pub manifest: ArtifactManifest,
+}
+
+/// One compiled model program (prefill or decode) with its device-resident
+/// static inputs.
+pub struct Program {
+    exe: PjRtLoadedExecutable,
+    /// static (weight/qstate) buffers, in manifest input order prefix
+    static_bufs: Vec<PjRtBuffer>,
+    /// host literals backing `static_bufs` — PJRT host→device transfers
+    /// are asynchronous, so the source literal must outlive the buffer's
+    /// first use (dropping it early is a use-after-free)
+    _static_lits: Vec<Literal>,
+    /// kinds of the dynamic tail (tokens/kv/pos), in order
+    dynamic: Vec<InputKind>,
+    pub name: String,
+}
+
+impl PjrtEngine {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .context("read manifest.json")?;
+        let j = Json::parse(&manifest_text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let manifest = ArtifactManifest::from_json(&j, dir)?;
+        let client = PjRtClient::cpu()?;
+        Ok(PjrtEngine { client, manifest })
+    }
+
+    /// Compile one artifact by name (e.g. "model_fp16_prefill") and upload
+    /// its static inputs from the weight pack.
+    pub fn program(&self, name: &str, pack: &WeightPack) -> Result<Program> {
+        let art = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            art.path
+                .to_str()
+                .context("artifact path not utf-8")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+
+        let tag = ArtifactManifest::tag_of_artifact(&art.name);
+        let is_prefill = art.name.ends_with("prefill");
+        let mut static_bufs = Vec::new();
+        let mut static_lits = Vec::new();
+        let mut dynamic = Vec::new();
+        let mut seen_dynamic = false;
+        for input in &art.inputs {
+            let kind = input_spec_with_tag(input, &self.manifest, tag, is_prefill)?;
+            match kind {
+                InputKind::Param { .. } | InputKind::QState { .. } => {
+                    if seen_dynamic {
+                        bail!("static input '{input}' after dynamic inputs");
+                    }
+                    let lit = self.literal_for_static(&kind, pack)?;
+                    static_bufs.push(self.client.buffer_from_host_literal(None, &lit)?);
+                    static_lits.push(lit);
+                }
+                _ => {
+                    seen_dynamic = true;
+                    dynamic.push(kind);
+                }
+            }
+        }
+        Ok(Program {
+            exe,
+            static_bufs,
+            _static_lits: static_lits,
+            dynamic,
+            name: name.to_string(),
+        })
+    }
+
+    fn literal_for_static(&self, kind: &InputKind, pack: &WeightPack) -> Result<Literal> {
+        match kind {
+            InputKind::Param { pack_name } => {
+                let t = pack.get(pack_name)?;
+                let data = t.as_f32()?;
+                let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+                Ok(Literal::create_from_shape_and_untyped_data(
+                    ElementType::F32,
+                    t.shape(),
+                    &bytes,
+                )?)
+            }
+            InputKind::QState { pack_name } => {
+                let t = pack.get(pack_name)?;
+                match t {
+                    crate::model::Tensor::U8(v, shape) => {
+                        // codes stored u8 in the pack, i32 in the HLO
+                        let bytes: Vec<u8> =
+                            v.iter().flat_map(|&c| (c as i32).to_le_bytes()).collect();
+                        Ok(Literal::create_from_shape_and_untyped_data(
+                            ElementType::S32,
+                            shape,
+                            &bytes,
+                        )?)
+                    }
+                    crate::model::Tensor::I32(v, shape) => {
+                        let bytes: Vec<u8> =
+                            v.iter().flat_map(|x| x.to_le_bytes()).collect();
+                        Ok(Literal::create_from_shape_and_untyped_data(
+                            ElementType::S32,
+                            shape,
+                            &bytes,
+                        )?)
+                    }
+                    crate::model::Tensor::F32(v, shape) => {
+                        let bytes: Vec<u8> =
+                            v.iter().flat_map(|x| x.to_le_bytes()).collect();
+                        Ok(Literal::create_from_shape_and_untyped_data(
+                            ElementType::F32,
+                            shape,
+                            &bytes,
+                        )?)
+                    }
+                }
+            }
+            _ => bail!("not a static input"),
+        }
+    }
+}
+
+/// Device-resident KV state chained between decode steps. The backing
+/// host literals are kept alive alongside the buffers (async transfers).
+pub struct KvState {
+    pub bufs: Vec<PjRtBuffer>,
+    lits: Vec<Literal>,
+    pub pos: i32,
+}
+
+impl Program {
+    fn tokens_literal(&self, tokens: &[i32], shape: &[usize]) -> Result<Literal> {
+        let count: usize = shape.iter().product();
+        if tokens.len() != count {
+            bail!("tokens len {} != artifact shape {:?}", tokens.len(), shape);
+        }
+        let bytes: Vec<u8> = tokens.iter().flat_map(|v| v.to_le_bytes()).collect();
+        Ok(Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            shape,
+            &bytes,
+        )?)
+    }
+
+    /// Run prefill: `tokens` must match the artifact's [B, S]. Returns
+    /// logits as a flat f32 vec `[B*S*V]` (prefill has no KV outputs in the
+    /// exported graph — serving decode re-prefills through the decode
+    /// artifact's cache inputs).
+    pub fn prefill(&self, client: &PjRtClient, tokens: &[i32]) -> Result<Vec<f32>> {
+        let mut args: Vec<&PjRtBuffer> = self.static_bufs.iter().collect();
+        let (tok_shape,) = match &self.dynamic[..] {
+            [InputKind::Tokens { shape }] => (shape.clone(),),
+            other => bail!("prefill artifact has unexpected dynamic inputs: {other:?}"),
+        };
+        let tok_lit = self.tokens_literal(tokens, &tok_shape)?;
+        let tok_buf = client.buffer_from_host_literal(None, &tok_lit)?;
+        args.push(&tok_buf);
+        let out = self.exe.execute_b(&args)?;
+        // single-output programs lower to a bare array root (no tuple)
+        let result = out[0][0].to_literal_sync()?;
+        match result.to_tuple() {
+            Ok(mut parts) if !parts.is_empty() => Ok(parts.remove(0).to_vec::<f32>()?),
+            _ => Ok(out[0][0].to_literal_sync()?.to_vec::<f32>()?),
+        }
+    }
+
+    /// Initialise a zeroed device KV state matching the decode artifact.
+    pub fn init_kv(&self, client: &PjRtClient) -> Result<KvState> {
+        let mut bufs = Vec::new();
+        let mut lits = Vec::new();
+        for kind in &self.dynamic {
+            if let InputKind::Kv { shape } = kind {
+                let count: usize = shape.iter().product();
+                let lit = Literal::create_from_shape_and_untyped_data(
+                    ElementType::F32,
+                    shape,
+                    &vec![0u8; count * 4],
+                )?;
+                bufs.push(client.buffer_from_host_literal(None, &lit)?);
+                lits.push(lit);
+            }
+        }
+        if bufs.is_empty() {
+            bail!("decode artifact has no KV inputs");
+        }
+        Ok(KvState { bufs, lits, pos: 0 })
+    }
+
+    /// One decode step: feeds tokens + device KV + pos, returns logits
+    /// `[B*V]` and replaces the KV buffers with the step's outputs.
+    pub fn decode_step(
+        &self,
+        client: &PjRtClient,
+        tokens: &[i32],
+        kv: &mut KvState,
+    ) -> Result<Vec<f32>> {
+        let mut args: Vec<&PjRtBuffer> = self.static_bufs.iter().collect();
+        let mut kv_cursor = 0usize;
+        let mut tok_buf_holder = None;
+        let mut pos_buf_holder = None;
+        for kind in &self.dynamic {
+            match kind {
+                InputKind::Tokens { shape } => {
+                    let lit = self.tokens_literal(tokens, shape)?;
+                    tok_buf_holder = Some(client.buffer_from_host_literal(None, &lit)?);
+                }
+                InputKind::Kv { .. } => {
+                    kv_cursor += 1;
+                }
+                InputKind::Pos => {
+                    let lit = Literal::scalar(kv.pos);
+                    pos_buf_holder = Some(client.buffer_from_host_literal(None, &lit)?);
+                }
+                _ => bail!("unexpected dynamic input in decode artifact"),
+            }
+        }
+        if kv_cursor != kv.bufs.len() {
+            bail!("kv arity mismatch: artifact {kv_cursor}, state {}", kv.bufs.len());
+        }
+        // assemble in manifest order
+        let mut kv_iter = kv.bufs.iter();
+        for kind in &self.dynamic {
+            match kind {
+                InputKind::Tokens { .. } => args.push(tok_buf_holder.as_ref().unwrap()),
+                InputKind::Kv { .. } => args.push(kv_iter.next().unwrap()),
+                InputKind::Pos => args.push(pos_buf_holder.as_ref().unwrap()),
+                _ => unreachable!(),
+            }
+        }
+        let out = self.exe.execute_b(&args)?;
+        let row = &out[0][0];
+        let result = row.to_literal_sync()?;
+        let mut parts = result.to_tuple()?;
+        if parts.len() != 1 + kv.bufs.len() {
+            bail!("decode output arity {} != 1 + {}", parts.len(), kv.bufs.len());
+        }
+        let logits = parts.remove(0).to_vec::<f32>()?;
+        // re-upload KV outputs as next-step inputs (host hop; the compiled
+        // graph returns literals — buffer donation would remove this, see
+        // EXPERIMENTS.md §Perf). Literals stay alive in `kv.lits` until
+        // replaced: transfers are async.
+        let mut new_bufs = Vec::with_capacity(parts.len());
+        let mut new_lits = Vec::with_capacity(parts.len());
+        for lit in parts {
+            new_bufs.push(client.buffer_from_host_literal(None, &lit)?);
+            new_lits.push(lit);
+        }
+        kv.bufs = new_bufs;
+        kv.lits = new_lits;
+        kv.pos += 1;
+        Ok(logits)
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load + execute the AOT HLO artifacts (the jax L2 model
+//! with the pallas L1 kernel lowered in). See /opt/xla-example/README.md
+//! for the HLO-text interchange rationale.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactManifest, InputKind};
+pub use engine::{KvState, PjrtEngine, Program};
+
+/// Quick health check used by `abq-llm info`.
+pub fn pjrt_cpu_ok() -> bool {
+    xla::PjRtClient::cpu().is_ok()
+}

@@ -1,0 +1,120 @@
+//! Micro-benchmark harness (in-tree criterion substitute; offline build).
+//!
+//! Adaptive sampling: warm up, pick an iteration count targeting a fixed
+//! measurement window, report mean/median/p95. Benches print paper-style
+//! rows and also write results/<name>.json via `util::json`.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Measurement {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// Effective TOPS for an `m×n×k` MAC count (2 ops per MAC), the unit
+    /// of paper Tables 13/14.
+    pub fn tops(&self, m: usize, n: usize, k: usize) -> f64 {
+        let ops = 2.0 * m as f64 * n as f64 * k as f64;
+        ops / self.mean_ns
+    }
+}
+
+pub struct Bencher {
+    /// target measurement window per benchmark
+    pub window: Duration,
+    /// number of timed samples
+    pub samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // ABQ_BENCH_FAST=1 shrinks the window for CI-style smoke runs
+        let fast = std::env::var("ABQ_BENCH_FAST").is_ok();
+        Bencher {
+            window: if fast { Duration::from_millis(60) } else { Duration::from_millis(400) },
+            samples: if fast { 5 } else { 15 },
+        }
+    }
+}
+
+impl Bencher {
+    /// Time `f`, returning aggregate stats.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        // warmup + calibration: how many iters fit in window/samples?
+        f();
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(50));
+        let per_sample = self.window.as_nanos() as f64 / self.samples as f64;
+        let iters = ((per_sample / once.as_nanos() as f64).ceil() as usize).clamp(1, 1_000_000);
+
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            times.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        Measurement {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            median_ns: times[times.len() / 2],
+            p95_ns: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
+            min_ns: times[0],
+        }
+    }
+}
+
+/// Right-pad helper for table printing.
+pub fn pad(s: &str, w: usize) -> String {
+    format!("{s:<w$}")
+}
+
+/// Write a results JSON file under results/.
+pub fn write_results(name: &str, j: &crate::util::json::Json) {
+    let dir = std::path::Path::new("results");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(format!("{name}.json"));
+    if let Err(e) = std::fs::write(&path, j.to_string_pretty()) {
+        eprintln!("warn: could not write {path:?}: {e}");
+    } else {
+        println!("[saved] {}", path.display());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher { window: Duration::from_millis(20), samples: 3 };
+        let mut x = 0u64;
+        let m = b.run("spin", || {
+            for i in 0..1000u64 {
+                x = x.wrapping_add(i * i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(m.mean_ns > 0.0);
+        assert!(m.median_ns <= m.p95_ns + 1.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! In-tree substrates replacing unavailable third-party crates (the build
+//! is fully offline; DESIGN.md §5): thread pool, JSON, CLI, bench harness,
+//! property testing, deterministic RNG.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod par;
+pub mod prop;
+pub mod rng;

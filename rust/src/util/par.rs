@@ -1,0 +1,100 @@
+//! Minimal data-parallel helpers (in-tree rayon substitute; the build is
+//! offline — DESIGN.md §5). Scoped threads over contiguous index ranges:
+//! deterministic work assignment, no work stealing, no allocator churn in
+//! the hot loop.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads (overridable via `ABQ_THREADS`).
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let c = CACHED.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("ABQ_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&v| v >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Map `f` over `0..n` in parallel; results returned in index order.
+///
+/// Work is split into `num_threads()` contiguous ranges. `f` must be
+/// `Sync` (called concurrently from several threads).
+pub fn par_map_indexed<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let per = n.div_ceil(workers);
+    let mut parts: Vec<Vec<T>> = Vec::with_capacity(workers);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let lo = w * per;
+            let hi = ((w + 1) * per).min(n);
+            let f = &f;
+            handles.push(scope.spawn(move || (lo..hi).map(f).collect::<Vec<T>>()));
+        }
+        for h in handles {
+            parts.push(h.join().expect("par worker panicked"));
+        }
+    });
+    let mut out = Vec::with_capacity(n);
+    for p in parts {
+        out.extend(p);
+    }
+    out
+}
+
+/// Run `f(lo, hi)` over disjoint chunks of `0..n` in parallel, collecting
+/// per-chunk results in chunk order. `chunk` is the target chunk length.
+pub fn par_map_chunks<T, F>(n: usize, chunk: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, usize) -> T + Sync,
+{
+    let chunk = chunk.max(1);
+    let n_chunks = n.div_ceil(chunk);
+    par_map_indexed(n_chunks, |c| {
+        let lo = c * chunk;
+        let hi = ((c + 1) * chunk).min(n);
+        f(lo, hi)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordered_results() {
+        let out = par_map_indexed(1000, |i| i * 2);
+        assert_eq!(out, (0..1000).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chunked_covers_all() {
+        let out = par_map_chunks(103, 10, |lo, hi| (lo, hi));
+        assert_eq!(out.first(), Some(&(0, 10)));
+        assert_eq!(out.last(), Some(&(100, 103)));
+        let total: usize = out.iter().map(|(lo, hi)| hi - lo).sum();
+        assert_eq!(total, 103);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(par_map_indexed(0, |i| i).is_empty());
+        assert_eq!(par_map_indexed(1, |i| i + 5), vec![5]);
+    }
+}

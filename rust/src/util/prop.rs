@@ -1,0 +1,65 @@
+//! Minimal property-testing harness (in-tree proptest substitute; offline
+//! build). No shrinking — on failure it reports the failing case number and
+//! seed so the case can be replayed deterministically.
+
+use super::rng::SplitMix;
+
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `f(rng)` for `cases` deterministic cases; panic with seed on failure.
+pub fn check<F: FnMut(&mut SplitMix)>(name: &str, cases: usize, mut f: F) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 + case as u64;
+        let mut rng = SplitMix::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Generators.
+pub fn usize_in(rng: &mut SplitMix, lo: usize, hi: usize) -> usize {
+    lo + rng.next_below((hi - lo + 1) as u64) as usize
+}
+
+pub fn f32_in(rng: &mut SplitMix, lo: f32, hi: f32) -> f32 {
+    lo + rng.next_f64() as f32 * (hi - lo)
+}
+
+pub fn vec_f32(rng: &mut SplitMix, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..n).map(|_| f32_in(rng, lo, hi)).collect()
+}
+
+pub fn vec_codes(rng: &mut SplitMix, n: usize, bits: usize) -> Vec<u8> {
+    (0..n).map(|_| rng.next_below(1 << bits) as u8).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        check("gen", 3, |rng| first.push(rng.next_u64()));
+        let mut second = Vec::new();
+        check("gen", 3, |rng| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn ranges_respected() {
+        check("ranges", 20, |rng| {
+            let u = usize_in(rng, 3, 9);
+            assert!((3..=9).contains(&u));
+            let f = f32_in(rng, -1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&f));
+            let c = vec_codes(rng, 10, 3);
+            assert!(c.iter().all(|&v| v < 8));
+        });
+    }
+}

@@ -1,0 +1,107 @@
+//! Property tests for the coordinator: batcher FIFO/no-loss/no-dup,
+//! scheduler token-count and capacity invariants under random workloads.
+
+use std::time::{Duration, Instant};
+
+use abq_llm::coordinator::{Batcher, BatcherConfig, Request, Scheduler, SchedulerConfig};
+use abq_llm::coordinator::request::QueuedRequest;
+use abq_llm::model::{Backend, ModelConfig, Transformer};
+use abq_llm::util::prop::{check, usize_in};
+
+const MICRO: ModelConfig = ModelConfig {
+    name: "micro",
+    vocab: 64,
+    d_model: 16,
+    n_layers: 1,
+    n_heads: 2,
+    d_ff: 32,
+    max_seq: 48,
+    rope_base: 10000.0,
+};
+
+fn qr(id: u64, plen: usize, max_new: usize) -> QueuedRequest {
+    QueuedRequest {
+        req: Request::new(id, (0..plen).map(|i| (i % 60) as u32 + 1).collect(), max_new),
+        arrived: Instant::now(),
+    }
+}
+
+#[test]
+fn prop_batcher_never_loses_duplicates_or_reorders() {
+    check("batcher", 64, |rng| {
+        let max_batch = usize_in(rng, 1, 9);
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch,
+            max_wait: Duration::ZERO,
+        });
+        let total = usize_in(rng, 0, 40);
+        for id in 0..total as u64 {
+            b.push(qr(id, 3, 2));
+        }
+        let mut drained = Vec::new();
+        while !b.is_empty() {
+            let cap = usize_in(rng, 1, 12);
+            let batch = b.drain(cap);
+            assert!(batch.len() <= max_batch.min(cap));
+            drained.extend(batch.into_iter().map(|q| q.req.id));
+        }
+        // exactly the pushed ids, in FIFO order
+        assert_eq!(drained, (0..total as u64).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn prop_scheduler_completes_every_request_exactly() {
+    let model = Transformer::random(MICRO, Backend::Fp32, 77);
+    check("scheduler", 10, |rng| {
+        let max_active = usize_in(rng, 1, 5);
+        let mut sched = Scheduler::new(&model, SchedulerConfig { max_active });
+        let n_reqs = usize_in(rng, 1, 7);
+        let mut want: Vec<(u64, usize)> = Vec::new();
+        let mut backlog: Vec<QueuedRequest> = (0..n_reqs as u64)
+            .map(|id| {
+                let plen = usize_in(rng, 1, 10);
+                let max_new = usize_in(rng, 1, 6);
+                want.push((id, max_new));
+                qr(id, plen, max_new)
+            })
+            .collect();
+        backlog.reverse();
+        let mut guard = 0;
+        while (!backlog.is_empty() || !sched.idle()) && guard < 500 {
+            guard += 1;
+            while sched.has_capacity() && !backlog.is_empty() {
+                sched.admit(backlog.pop().unwrap(), guard as u64).unwrap();
+                assert!(sched.n_active() <= max_active, "capacity invariant");
+            }
+            sched.step().unwrap();
+        }
+        assert!(guard < 500, "scheduler did not converge");
+        let mut done = sched.take_finished();
+        done.sort_by_key(|r| r.id);
+        assert_eq!(done.len(), n_reqs, "every request completes once");
+        for (resp, (id, max_new)) in done.iter().zip(&want) {
+            assert_eq!(resp.id, *id);
+            assert_eq!(resp.tokens.len(), *max_new, "exact token count");
+            assert!(resp.tokens.iter().all(|&t| (t as usize) < MICRO.vocab));
+        }
+    });
+}
+
+#[test]
+fn prop_router_round_robin_is_fair() {
+    use abq_llm::coordinator::Router;
+    check("router", 32, |rng| {
+        let mut r = Router::new("a");
+        let n_replicas = usize_in(rng, 1, 5);
+        for i in 0..n_replicas {
+            r.register("a", i);
+        }
+        let rounds = usize_in(rng, 1, 8);
+        let mut counts = vec![0usize; n_replicas];
+        for _ in 0..rounds * n_replicas {
+            counts[r.route("a").unwrap()] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == rounds), "fair round robin {counts:?}");
+    });
+}

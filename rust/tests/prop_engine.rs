@@ -1,0 +1,85 @@
+//! Property tests for the ABQ engine: the bit-plane decomposition must be
+//! *exactly* the integer GEMM, for every shape/bit/tile combination.
+
+use abq_llm::abq::{gemm_int, gemm_int_reference, pipeline, BitPlanes, OptLevel, TileConfig};
+use abq_llm::util::prop::{self, check, usize_in, vec_codes};
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    check("pack_unpack", prop::DEFAULT_CASES, |rng| {
+        let rows = usize_in(rng, 1, 20);
+        let k = usize_in(rng, 1, 300);
+        let planes = usize_in(rng, 1, 8);
+        let codes = vec_codes(rng, rows * k, planes);
+        let bp = BitPlanes::pack(&codes, rows, k, planes);
+        assert_eq!(bp.unpack(), codes);
+        // rowsums consistent
+        for r in 0..rows {
+            let want: i64 = codes[r * k..(r + 1) * k].iter().map(|&c| c as i64).sum();
+            assert_eq!(bp.rowsum[r], want);
+        }
+    });
+}
+
+#[test]
+fn prop_all_variants_equal_reference() {
+    check("variants_vs_reference", 48, |rng| {
+        let m = usize_in(rng, 1, 12);
+        let n = usize_in(rng, 1, 40);
+        let k = usize_in(rng, 1, 260);
+        let p = usize_in(rng, 1, 8);
+        let q = usize_in(rng, 1, 8);
+        let xc = vec_codes(rng, m * k, p);
+        let wc = vec_codes(rng, n * k, q);
+        let zx: Vec<i32> = (0..m).map(|_| usize_in(rng, 0, (1 << p) - 1) as i32).collect();
+        let zw: Vec<i32> = (0..n).map(|_| usize_in(rng, 0, (1 << q) - 1) as i32).collect();
+        let x = BitPlanes::pack(&xc, m, k, p);
+        let w = BitPlanes::pack(&wc, n, k, q);
+        let want = gemm_int_reference(&xc, &wc, m, n, k, &zx, &zw);
+        for opt in [OptLevel::Naive, OptLevel::Pipelined, OptLevel::GemvElim, OptLevel::Auto] {
+            assert_eq!(gemm_int(&x, &w, &zx, &zw, opt, None), want, "{opt:?}");
+        }
+        assert_eq!(pipeline::gemm_staged(&x, &w, &zx, &zw), want, "staged");
+    });
+}
+
+#[test]
+fn prop_arbitrary_tile_configs_are_safe() {
+    check("tile_configs", 32, |rng| {
+        let m = usize_in(rng, 1, 6);
+        let n = usize_in(rng, 1, 64);
+        let k = usize_in(rng, 1, 200);
+        let xc = vec_codes(rng, m * k, 4);
+        let wc = vec_codes(rng, n * k, 3);
+        let zx = vec![3i32; m];
+        let zw = vec![1i32; n];
+        let x = BitPlanes::pack(&xc, m, k, 4);
+        let w = BitPlanes::pack(&wc, n, k, 3);
+        let want = gemm_int_reference(&xc, &wc, m, n, k, &zx, &zw);
+        let cfg = TileConfig::new(
+            usize_in(rng, 1, n + 4),
+            0,
+            [1usize, 2, 4][usize_in(rng, 0, 2)],
+            rng.next_f64() < 0.5,
+        );
+        assert_eq!(gemm_int(&x, &w, &zx, &zw, OptLevel::Auto, Some(cfg)), want, "{cfg:?}");
+    });
+}
+
+#[test]
+fn prop_extreme_codes() {
+    // all-zero and all-max codes exercise the zero-point correction edges
+    for (fill_x, fill_w) in [(0u8, 0u8), (255, 3), (0, 3), (255, 0)] {
+        let (m, n, k) = (3usize, 5usize, 130usize);
+        let xc = vec![fill_x; m * k];
+        let wc = vec![fill_w; n * k];
+        let zx = vec![200i32; m];
+        let zw = vec![3i32; n];
+        let x = BitPlanes::pack(&xc, m, k, 8);
+        let w = BitPlanes::pack(&wc, n, k, 2);
+        let want = gemm_int_reference(&xc, &wc, m, n, k, &zx, &zw);
+        for opt in [OptLevel::Naive, OptLevel::Auto] {
+            assert_eq!(gemm_int(&x, &w, &zx, &zw, opt, None), want);
+        }
+    }
+}
