@@ -1,17 +1,16 @@
-//! Quickstart: load the AOT artifacts, compare fp16 vs ABQ-quantized
-//! perplexity, and generate a few tokens through the serving scheduler.
+//! Quickstart: build engines through the unified `EngineBuilder`, compare
+//! fp vs ABQ-quantized perplexity, and generate a few tokens through the
+//! serving scheduler.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
 use std::path::Path;
-use std::sync::Arc;
 
 use abq_llm::coordinator::{Request, Server, ServerConfig};
+use abq_llm::engine::{backend_tag, EngineBuilder, InferenceEngine};
 use abq_llm::eval;
-use abq_llm::model::{Backend, Transformer};
-use abq_llm::quant::WAConfig;
 
 fn main() -> anyhow::Result<()> {
     let dir = Path::new("artifacts");
@@ -20,28 +19,30 @@ fn main() -> anyhow::Result<()> {
         std::process::exit(1);
     }
 
-    // 1. load the same trained weights on two backends
-    println!("== loading tiny-llama on fp32 and ABQ w2*a8 backends ==");
-    let fp = Transformer::load_artifacts(dir, Backend::Fp32)?;
-    let cfg: WAConfig = "w2*a8".parse().unwrap();
-    let q = Transformer::load_artifacts(dir, Backend::Abq(cfg))?;
+    // 1. one builder entry point, two precision backends
+    println!("== building engines: fp32 and ABQ w2*a8 ==");
+    let fp = EngineBuilder::new().weights(dir).backend("fp32").build()?;
+    let q = EngineBuilder::new().weights(dir).backend("abq:w2*a8").build_arc()?;
+    let (fp_mem, q_mem) = (fp.memory_report(), q.memory_report());
     println!(
-        "block weights: fp32 {:.2} MB -> {cfg} {:.2} MB ({:.1}x compression)",
-        fp.weight_bytes() as f64 / 1e6,
-        q.weight_bytes() as f64 / 1e6,
-        fp.weight_bytes() as f64 / q.weight_bytes() as f64,
+        "block weights: fp32 {:.2} MB -> {} {:.2} MB ({:.1}x compression)",
+        fp_mem.weight_bytes as f64 / 1e6,
+        q.spec().backend,
+        q_mem.weight_bytes as f64 / 1e6,
+        fp_mem.weight_bytes as f64 / q_mem.weight_bytes as f64,
     );
 
     // 2. held-out perplexity, fp vs quantized (the paper's Table 2 axis)
-    let ppl_fp = eval::perplexity(&fp, 8, 128, eval::corpus::EVAL_SEED)?;
-    let ppl_q = eval::perplexity(&q, 8, 128, eval::corpus::EVAL_SEED)?;
-    println!("held-out PPL: fp {ppl_fp:.3}  |  {cfg} {ppl_q:.3}");
+    let ppl_fp = eval::perplexity(fp.as_ref(), 8, 128, eval::corpus::EVAL_SEED)?;
+    let ppl_q = eval::perplexity(q.as_ref(), 8, 128, eval::corpus::EVAL_SEED)?;
+    println!("held-out PPL: fp {ppl_fp:.3}  |  {} {ppl_q:.3}", q.spec().backend);
 
     // 3. serve a generation request through the coordinator
     println!("== serving one request through the coordinator ==");
+    let tag = backend_tag("abq:w2*a8")?;
     let server = Server::start(
-        vec![(cfg.tag(), Arc::new(q))],
-        ServerConfig { default_tag: cfg.tag(), ..Default::default() },
+        vec![(tag.clone(), q)],
+        ServerConfig { default_tag: tag, ..Default::default() },
     )?;
     let table = eval::corpus::build_transition_table(eval::corpus::TABLE_SEED);
     let prompt = eval::corpus::generate_tokens(&table, 16, 7);

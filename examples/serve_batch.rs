@@ -1,8 +1,8 @@
 //! End-to-end serving driver (the system-prompt-mandated full-stack
-//! example): loads the trained tiny-llama, serves a synthetic batched
-//! workload through the coordinator on two precision replicas (ABQ w2*a8
-//! and fp16), and reports latency/throughput — the serving analogue of the
-//! paper's Fig. 6 FastTransformer experiment. Results are recorded in
+//! example): builds two precision replicas through `EngineBuilder` (ABQ
+//! w2*a8 and fp16), serves a synthetic batched workload through the
+//! coordinator, and reports latency/throughput — the serving analogue of
+//! the paper's Fig. 6 FastTransformer experiment. Results are recorded in
 //! EXPERIMENTS.md.
 //!
 //! ```bash
@@ -10,13 +10,11 @@
 //! ```
 
 use std::path::Path;
-use std::sync::Arc;
 use std::time::Instant;
 
 use abq_llm::coordinator::{Request, Server, ServerConfig};
+use abq_llm::engine::{backend_tag, EngineBuilder, InferenceEngine};
 use abq_llm::eval;
-use abq_llm::model::{Backend, Transformer};
-use abq_llm::quant::WAConfig;
 use abq_llm::util::cli::Args;
 use abq_llm::util::json::{self, Json};
 use abq_llm::util::rng::SplitMix;
@@ -31,19 +29,19 @@ fn main() -> anyhow::Result<()> {
     let n_requests = args.get_usize("requests", 32);
     let max_new = args.get_usize("max-new", 24);
 
-    let cfg: WAConfig = args.get_or("config", "w2*a8").parse().unwrap();
-    let q_model = Arc::new(Transformer::load_artifacts(dir, Backend::Abq(cfg))?);
-    let fp_model = Arc::new(Transformer::load_artifacts(dir, Backend::Fp32)?);
+    let spec = format!("abq:{}", args.get_or("config", "w2*a8"));
+    let tag = backend_tag(&spec)?;
+    let q_engine = EngineBuilder::new().weights(dir).backend(spec.as_str()).build_arc()?;
+    let fp_engine = EngineBuilder::new().weights(dir).backend("fp32").build_arc()?;
     println!(
-        "replicas: {} ({:.2} MB weights), fp16 ({:.2} MB weights)",
-        cfg.tag(),
-        q_model.weight_bytes() as f64 / 1e6,
-        fp_model.weight_bytes() as f64 / 1e6
+        "replicas: {tag} ({:.2} MB weights), fp16 ({:.2} MB weights)",
+        q_engine.memory_report().weight_bytes as f64 / 1e6,
+        fp_engine.memory_report().weight_bytes as f64 / 1e6
     );
 
     let server = Server::start(
-        vec![(cfg.tag(), q_model), ("fp16".to_string(), fp_model)],
-        ServerConfig { default_tag: cfg.tag(), ..Default::default() },
+        vec![(tag.clone(), q_engine), ("fp16".to_string(), fp_engine)],
+        ServerConfig { default_tag: tag.clone(), ..Default::default() },
     )?;
 
     // synthetic workload: corpus prompts, 80% routed to the quantized
@@ -57,17 +55,16 @@ fn main() -> anyhow::Result<()> {
         let plen = 8 + rng.next_below(24) as usize;
         let prompt = eval::corpus::generate_tokens(&table, plen, 1000 + i as u64);
         let mut req = Request::new(0, prompt, max_new);
-        req.config =
-            if rng.next_f64() < 0.8 { cfg.tag() } else { "fp16".to_string() };
+        req.config = if rng.next_f64() < 0.8 { tag.clone() } else { "fp16".to_string() };
         rxs.push((req.config.clone(), server.submit(req)));
     }
     let mut lat_q = Vec::new();
     let mut lat_fp = Vec::new();
     let mut total_tokens = 0usize;
-    for (tag, rx) in rxs {
+    for (rtag, rx) in rxs {
         let resp = rx.recv()?;
         total_tokens += resp.tokens.len();
-        if tag == "fp16" {
+        if rtag == "fp16" {
             lat_fp.push(resp.timing.total_us());
         } else {
             lat_q.push(resp.timing.total_us());
@@ -86,16 +83,20 @@ fn main() -> anyhow::Result<()> {
     let (mq, p50q, p95q) = stats(&mut lat_q);
     let (mf, p50f, p95f) = stats(&mut lat_fp);
     println!("== workload complete ==");
-    println!("requests: {n_requests} ({} on {}, {} on fp16)", lat_q.len(), cfg.tag(), lat_fp.len());
+    println!("requests: {n_requests} ({} on {tag}, {} on fp16)", lat_q.len(), lat_fp.len());
     println!("wall time: {wall:.2}s  throughput: {:.1} tok/s", total_tokens as f64 / wall);
     println!(
-        "latency {}: mean {:.1}ms p50 {:.1}ms p95 {:.1}ms",
-        cfg.tag(), mq / 1e3, p50q as f64 / 1e3, p95q as f64 / 1e3
+        "latency {tag}: mean {:.1}ms p50 {:.1}ms p95 {:.1}ms",
+        mq / 1e3,
+        p50q as f64 / 1e3,
+        p95q as f64 / 1e3
     );
     if !lat_fp.is_empty() {
         println!(
             "latency fp16  : mean {:.1}ms p50 {:.1}ms p95 {:.1}ms",
-            mf / 1e3, p50f as f64 / 1e3, p95f as f64 / 1e3
+            mf / 1e3,
+            p50f as f64 / 1e3,
+            p95f as f64 / 1e3
         );
     }
     println!("\nserver metrics:\n{}", server.metrics.snapshot());
@@ -109,7 +110,7 @@ fn main() -> anyhow::Result<()> {
             ("throughput_tok_s", json::num(total_tokens as f64 / wall)),
             ("quant_mean_ms", json::num(mq / 1e3)),
             ("fp16_mean_ms", json::num(mf / 1e3)),
-            ("config", json::s(&cfg.to_string())),
+            ("config", json::s(&spec)),
         ]),
     );
     server.shutdown();

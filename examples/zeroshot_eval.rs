@@ -1,5 +1,7 @@
 //! Zero-shot task suite across quantization configs — the paper's
 //! Tables 3 / 8-11 reproduced on the synthetic task suite (DESIGN.md §4).
+//! Every engine is built through the unified `EngineBuilder` from a
+//! registry backend spec.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example zeroshot_eval [-- --items 50]
@@ -8,8 +10,8 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
+use abq_llm::engine::EngineBuilder;
 use abq_llm::eval::{self, ALL_TASKS};
-use abq_llm::model::{Backend, Transformer};
 use abq_llm::util::bench::write_results;
 use abq_llm::util::cli::Args;
 use abq_llm::util::json::{num, Json};
@@ -23,12 +25,12 @@ fn main() -> anyhow::Result<()> {
     }
     let items = args.get_usize("items", 50);
 
-    let configs: Vec<(&str, Backend)> = vec![
-        ("fp16", Backend::Fp32),
-        ("w8a8", Backend::Abq("w8a8".parse().unwrap())),
-        ("w4a4", Backend::Abq("w4a4".parse().unwrap())),
-        ("w2a8", Backend::Abq("w2a8".parse().unwrap())),
-        ("w2*a8", Backend::Abq("w2*a8".parse().unwrap())),
+    let configs: Vec<(&str, &str)> = vec![
+        ("fp16", "fp32"),
+        ("w8a8", "abq:w8a8"),
+        ("w4a4", "abq:w4a4"),
+        ("w2a8", "abq:w2a8"),
+        ("w2*a8", "abq:w2*a8"),
     ];
 
     println!("zero-shot accuracy (%), {items} items/task — paper Tables 3/8-11 shape");
@@ -39,13 +41,13 @@ fn main() -> anyhow::Result<()> {
     println!("{:>8}", "avg");
 
     let mut results: BTreeMap<String, Json> = BTreeMap::new();
-    for (name, backend) in configs {
-        let model = Transformer::load_artifacts(dir, backend)?;
+    for (name, spec) in configs {
+        let engine = EngineBuilder::new().weights(dir).backend(spec).build()?;
         print!("{name:<8}");
         let mut accs = BTreeMap::new();
         let mut total = 0.0;
         for task in ALL_TASKS {
-            let acc = eval::accuracy(&model, task, items, 11)?;
+            let acc = eval::accuracy(engine.as_ref(), task, items, 11)?;
             total += acc;
             print!("{:>17.1}%", acc * 100.0);
             accs.insert(eval::task_name(task).to_string(), num(acc * 100.0));

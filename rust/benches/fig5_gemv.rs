@@ -8,13 +8,14 @@
 //! as bits shrink; the padded baselines waste 87.5% of their work at M=1.
 
 use abq_llm::abq::{gemm_int, BitPlanes, OptLevel};
-use abq_llm::baselines::{Int4Gemm, Int8Gemm};
+use abq_llm::engine::{BackendRegistry, LinearBackend, LinearOp, PrepareCtx};
 use abq_llm::util::bench::{write_results, Bencher};
 use abq_llm::util::json::{num, obj, Json};
 use abq_llm::util::rng::SplitMix;
 
 fn main() {
     let bencher = Bencher::default();
+    let registry = BackendRegistry::with_defaults();
     let mut rng = SplitMix::new(5);
     let shapes = [(4096usize, 4096usize), (4096, 11008), (11008, 4096)];
     let combos = [(2usize, 8usize), (2, 4), (4, 4), (8, 8)];
@@ -25,13 +26,26 @@ fn main() {
     for &(k, n) in &shapes {
         let wf: Vec<f32> = (0..n * k).map(|_| rng.next_f32_centered() * 0.1).collect();
         let xf: Vec<f32> = (0..m * k).map(|_| rng.next_f32_centered() * 4.0).collect();
-        let int8 = Int8Gemm::from_weights(&wf, n, k);
-        let int4 = Int4Gemm::from_weights(&wf, n, k);
+        // baseline engines prepared through the backend registry — the
+        // same ops the served model runs on
+        let int8 = registry
+            .resolve("int8")
+            .unwrap()
+            .prepare(&wf, n, k, &PrepareCtx::none())
+            .unwrap();
+        let int4 = registry
+            .resolve("int4")
+            .unwrap()
+            .prepare(&wf, n, k, &PrepareCtx::none())
+            .unwrap();
+        let mut y = vec![0f32; m * n];
         let m8 = bencher.run("w8a8-sim", || {
-            std::hint::black_box(int8.forward(&xf, m));
+            int8.forward(&xf, m, &mut y);
+            std::hint::black_box(&y);
         });
         let m4 = bencher.run("w4a4-sim", || {
-            std::hint::black_box(int4.forward(&xf, m));
+            int4.forward(&xf, m, &mut y);
+            std::hint::black_box(&y);
         });
         println!("\nshape (1,{k})x({k},{n}):");
         println!("  {:<14} {:>10.1} us  {:>7.3} TOPS", "cuBLAS W8A8", m8.mean_us(), m8.tops(m, n, k));

@@ -15,23 +15,16 @@
 
 use std::path::Path;
 
+use abq_llm::engine::{generate, EngineBuilder, InferenceEngine};
 use abq_llm::eval;
-use abq_llm::model::{Backend, KvCache, ModelConfig, Transformer, LLAMA_13B, LLAMA_30B, LLAMA_7B};
-use abq_llm::quant::WAConfig;
+use abq_llm::model::{ModelConfig, LLAMA_13B, LLAMA_30B, LLAMA_7B};
 use abq_llm::util::bench::write_results;
 use abq_llm::util::json::{num, obj, s, Json};
 
-fn measure_generate(model: &Transformer, prompt: &[u32], new_tokens: usize) -> f64 {
+fn measure_generate(engine: &dyn InferenceEngine, prompt: &[u32], new_tokens: usize) -> f64 {
     let t0 = std::time::Instant::now();
-    let mut cache = KvCache::new(&model.cfg);
-    let logits = model.prefill(prompt, &mut cache).unwrap();
-    let v = model.cfg.vocab;
-    let mut tok = abq_llm::model::argmax(&logits[(prompt.len() - 1) * v..prompt.len() * v]) as u32;
-    for _ in 0..new_tokens.min(cache.remaining().saturating_sub(1)) {
-        let mut refs = [&mut cache];
-        let step = model.decode_step(&[tok], &mut refs).unwrap();
-        tok = abq_llm::model::argmax(&step) as u32;
-    }
+    let out = generate(engine, prompt, new_tokens).unwrap();
+    std::hint::black_box(&out);
     t0.elapsed().as_secs_f64() * 1e3
 }
 
@@ -41,11 +34,11 @@ fn main() {
 
     if dir.join("manifest.json").exists() {
         println!("=== measured: tiny-llama end to end (prompt 15 tokens) ===");
-        let backends: Vec<(&str, Backend)> = vec![
-            ("FP16", Backend::Fp32),
-            ("W8A8(SmoothQuant)", Backend::Int8),
-            ("W2A8(ABQ)", Backend::Abq("w2a8".parse().unwrap())),
-            ("W2*A8(ABQ)", Backend::Abq("w2*a8".parse().unwrap())),
+        let backends: Vec<(&str, &str)> = vec![
+            ("FP16", "fp32"),
+            ("W8A8(SmoothQuant)", "int8"),
+            ("W2A8(ABQ)", "abq:w2a8"),
+            ("W2*A8(ABQ)", "abq:w2*a8"),
         ];
         let table = eval::corpus::build_transition_table(eval::corpus::TABLE_SEED);
         let prompt = eval::corpus::generate_tokens(&table, 15, 77);
@@ -53,13 +46,14 @@ fn main() {
             "{:<20} {:>10} {:>10} {:>10} {:>12}",
             "engine", "len=32", "len=64", "len=128", "weights(MB)"
         );
-        for (name, backend) in backends {
-            let model = Transformer::load_artifacts(dir, backend).unwrap();
+        for (name, spec) in backends {
+            let engine =
+                EngineBuilder::new().weights(dir).backend(spec).build().unwrap();
             let mut lat = Vec::new();
             for &len in &[32usize, 64, 128] {
-                lat.push(measure_generate(&model, &prompt, len));
+                lat.push(measure_generate(engine.as_ref(), &prompt, len));
             }
-            let wmb = model.weight_bytes() as f64 / 1e6;
+            let wmb = engine.memory_report().weight_bytes as f64 / 1e6;
             println!(
                 "{:<20} {:>8.1}ms {:>8.1}ms {:>8.1}ms {:>11.2}",
                 name, lat[0], lat[1], lat[2], wmb

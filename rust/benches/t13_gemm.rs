@@ -11,7 +11,7 @@
 //! w8a8 where the padded INT8 unit is at its native precision.
 
 use abq_llm::abq::{gemm_int, BitPlanes, OptLevel};
-use abq_llm::baselines::{Int4Gemm, Int8Gemm};
+use abq_llm::engine::{BackendRegistry, LinearBackend, LinearOp, PrepareCtx};
 use abq_llm::util::bench::{write_results, Bencher};
 use abq_llm::util::json::{num, obj, s, Json};
 use abq_llm::util::rng::SplitMix;
@@ -19,6 +19,7 @@ use abq_llm::util::rng::SplitMix;
 fn main() {
     let full = std::env::var("ABQ_BENCH_FULL").is_ok();
     let bencher = Bencher::default();
+    let registry = BackendRegistry::with_defaults();
     let mut rng = SplitMix::new(13);
 
     // (M, K, N): LLaMA-7B attention + MLP and 13B attention shapes
@@ -42,13 +43,24 @@ fn main() {
         println!("\n=== shape ({m},{k})x({k},{n}) ===");
         let wf: Vec<f32> = (0..n * k).map(|_| rng.next_f32_centered() * 0.1).collect();
         let xf: Vec<f32> = (0..m * k).map(|_| rng.next_f32_centered() * 4.0).collect();
-        let int8 = Int8Gemm::from_weights(&wf, n, k);
-        let int4 = Int4Gemm::from_weights(&wf, n, k);
+        let int8 = registry
+            .resolve("int8")
+            .unwrap()
+            .prepare(&wf, n, k, &PrepareCtx::none())
+            .unwrap();
+        let int4 = registry
+            .resolve("int4")
+            .unwrap()
+            .prepare(&wf, n, k, &PrepareCtx::none())
+            .unwrap();
+        let mut y = vec![0f32; m * n];
         let m8 = bencher.run("int8", || {
-            std::hint::black_box(int8.forward(&xf, m));
+            int8.forward(&xf, m, &mut y);
+            std::hint::black_box(&y);
         });
         let m4 = bencher.run("int4", || {
-            std::hint::black_box(int4.forward(&xf, m));
+            int4.forward(&xf, m, &mut y);
+            std::hint::black_box(&y);
         });
         println!("  {:<10} {:>8.3} TOPS   {:<10} {:>8.3} TOPS",
                  "CUTLASS8:", m8.tops(m, n, k), "CUTLASS4:", m4.tops(m, n, k));

@@ -8,7 +8,7 @@
 
 use abq_llm::abq::search::best_config;
 use abq_llm::abq::{gemm_int, BitPlanes, OptLevel};
-use abq_llm::baselines::Int8Gemm;
+use abq_llm::engine::{BackendRegistry, LinearBackend, LinearOp, PrepareCtx};
 use abq_llm::util::bench::{write_results, Bencher};
 use abq_llm::util::json::{num, obj, Json};
 use abq_llm::util::rng::SplitMix;
@@ -21,9 +21,15 @@ fn main() {
 
     let wf: Vec<f32> = (0..n * k).map(|_| rng.next_f32_centered() * 0.1).collect();
     let xf: Vec<f32> = (0..m * k).map(|_| rng.next_f32_centered() * 4.0).collect();
-    let int8 = Int8Gemm::from_weights(&wf, n, k);
+    let int8 = BackendRegistry::with_defaults()
+        .resolve("int8")
+        .unwrap()
+        .prepare(&wf, n, k, &PrepareCtx::none())
+        .unwrap();
+    let mut y = vec![0f32; m * n];
     let base = bencher.run("cutlass-sim", || {
-        std::hint::black_box(int8.forward(&xf, m));
+        int8.forward(&xf, m, &mut y);
+        std::hint::black_box(&y);
     });
 
     let xc: Vec<u8> = (0..m * k).map(|_| rng.next_below(1 << ab) as u8).collect();

@@ -69,7 +69,17 @@ impl QuantizedLinear {
     /// dequant epilogue. `opt` selects the Table-4 kernel variant;
     /// serving uses `OptLevel::Auto`.
     pub fn forward(&self, x: &[f32], tokens: usize, opt: OptLevel) -> Vec<f32> {
+        let mut out = vec![0f32; tokens * self.out_features];
+        self.forward_into(x, tokens, opt, &mut out);
+        out
+    }
+
+    /// [`QuantizedLinear::forward`] writing into a caller-provided scratch
+    /// buffer (the decode hot loop reuses one allocation across the block
+    /// projections).
+    pub fn forward_into(&self, x: &[f32], tokens: usize, opt: OptLevel, out: &mut [f32]) {
         assert_eq!(x.len(), tokens * self.in_features);
+        assert_eq!(out.len(), tokens * self.out_features);
         let mut xb;
         let x = if let Some(s) = &self.balance {
             xb = x.to_vec();
@@ -90,9 +100,7 @@ impl QuantizedLinear {
         } else {
             gemm::gemm_int(&xp, &self.w, &zx, &self.zw, opt, None)
         };
-        let mut out = vec![0f32; tokens * self.out_features];
-        reduction::dequantize(&acc, tokens, self.out_features, &dx, &self.dw, &mut out);
-        out
+        reduction::dequantize(&acc, tokens, self.out_features, &dx, &self.dw, out);
     }
 
     /// Packed weight footprint in bytes (memory accounting, Table 12).

@@ -8,9 +8,17 @@ use crate::util::par;
 /// `y[m,n] = Σ_k x[m,k] · w[n,k]` — x `[m,k]` row-major, w `[n,k]` row-major
 /// (weights stored transposed, as in the model).
 pub fn gemm_fp32(x: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    gemm_fp32_into(x, w, m, n, k, &mut out);
+    out
+}
+
+/// [`gemm_fp32`] writing into a caller-provided scratch buffer (the decode
+/// hot loop reuses one allocation across the block projections).
+pub fn gemm_fp32_into(x: &[f32], w: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
     assert_eq!(x.len(), m * k);
     assert_eq!(w.len(), n * k);
-    let mut out = vec![0f32; m * n];
+    assert_eq!(out.len(), m * n);
     // parallel over output rows of w (n dimension), blocked over k by 256
     let cols: Vec<Vec<f32>> = par::par_map_indexed(n, |ni| {
             let wrow = &w[ni * k..(ni + 1) * k];
@@ -40,7 +48,6 @@ pub fn gemm_fp32(x: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32>
             out[mi * n + ni] = col[mi];
         }
     }
-    out
 }
 
 #[cfg(test)]

@@ -75,18 +75,24 @@ impl Int4Gemm {
 
     /// Full forward from float activations (dynamic per-token 4-bit quant).
     pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
+        let mut out = vec![0f32; m * self.n];
+        self.forward_into(x, m, &mut out);
+        out
+    }
+
+    /// [`Int4Gemm::forward`] writing into a caller-provided scratch buffer.
+    pub fn forward_into(&self, x: &[f32], m: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), m * self.n);
         let q = crate::quant::quantize_act_per_token(
             x, m, self.k, &crate::quant::QuantSpec::new(4));
         let zx = q.zps();
         let yint = self.gemm_int(&q.codes, m, &zx);
         let dx = q.deltas();
-        let mut out = vec![0f32; m * self.n];
         for mi in 0..m {
             for ni in 0..self.n {
                 out[mi * self.n + ni] = yint[mi * self.n + ni] as f32 * dx[mi] * self.dw[ni];
             }
         }
-        out
     }
 
     pub fn weight_bytes(&self) -> usize {

@@ -76,19 +76,25 @@ impl Int8Gemm {
 
     /// Full forward from float activations (dynamic per-token quant).
     pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
+        let mut out = vec![0f32; m * self.n];
+        self.forward_into(x, m, &mut out);
+        out
+    }
+
+    /// [`Int8Gemm::forward`] writing into a caller-provided scratch buffer.
+    pub fn forward_into(&self, x: &[f32], m: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), m * self.n);
         let q = crate::quant::quantize_act_per_token(
             x, m, self.k, &crate::quant::QuantSpec::new(8));
         let xs: Vec<i8> = q.codes.iter().map(|&c| (c as i32 - 128) as i8).collect();
         let zx: Vec<i32> = q.params.iter().map(|p| p.zp - 128).collect();
         let yint = self.gemm_int(&xs, m, &zx);
         let dx: Vec<f32> = q.params.iter().map(|p| p.delta).collect();
-        let mut out = vec![0f32; m * self.n];
         for mi in 0..m {
             for ni in 0..self.n {
                 out[mi * self.n + ni] = yint[mi * self.n + ni] as f32 * dx[mi] * self.dw[ni];
             }
         }
-        out
     }
 
     pub fn weight_bytes(&self) -> usize {

@@ -13,7 +13,7 @@ pub mod fp32;
 pub mod int4;
 pub mod int8;
 
-pub use fp32::gemm_fp32;
+pub use fp32::{gemm_fp32, gemm_fp32_into};
 pub use int4::Int4Gemm;
 pub use int8::Int8Gemm;
 

@@ -1,5 +1,7 @@
 //! Continuous-batching scheduler: prefill-then-decode with KV-aware
 //! admission (the serving pattern the paper's engine integrates into).
+//! Runs against any [`InferenceEngine`] — native transformer or PJRT
+//! artifacts — through the unified engine API.
 //!
 //! Policy:
 //!   * new requests are admitted when a KV slot is free and the decode
@@ -15,11 +17,13 @@
 //! request completes with exactly `max_new_tokens` tokens (or capacity
 //! truncation); KV slots never leak.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::model::{KvCache, Sampler, Transformer};
+use crate::engine::{EngineSession, InferenceEngine};
+use crate::model::Sampler;
 
 use super::request::{QueuedRequest, Response, Timing};
 
@@ -29,7 +33,7 @@ struct Active {
     prompt_len: usize,
     generated: Vec<u32>,
     max_new: usize,
-    cache: KvCache,
+    session: Box<dyn EngineSession>,
     sampler: Sampler,
     last_token: u32,
     timing: Timing,
@@ -46,17 +50,17 @@ impl Default for SchedulerConfig {
     }
 }
 
-/// Synchronous continuous-batching engine around one model.
-pub struct Scheduler<'m> {
-    model: &'m Transformer,
+/// Synchronous continuous-batching loop around one engine.
+pub struct Scheduler {
+    engine: Arc<dyn InferenceEngine>,
     cfg: SchedulerConfig,
     active: Vec<Active>,
     finished: Vec<Response>,
 }
 
-impl<'m> Scheduler<'m> {
-    pub fn new(model: &'m Transformer, cfg: SchedulerConfig) -> Self {
-        Scheduler { model, cfg, active: Vec::new(), finished: Vec::new() }
+impl Scheduler {
+    pub fn new(engine: Arc<dyn InferenceEngine>, cfg: SchedulerConfig) -> Self {
+        Scheduler { engine, cfg, active: Vec::new(), finished: Vec::new() }
     }
 
     pub fn has_capacity(&self) -> bool {
@@ -72,16 +76,17 @@ impl<'m> Scheduler<'m> {
         assert!(self.has_capacity(), "admit called without capacity");
         let now = Instant::now();
         let queue_us = now.duration_since(qr.arrived).as_micros() as u64;
-        let mut cache = KvCache::new(&self.model.cfg);
+        let mut session = self.engine.new_session()?;
         // clamp generation to KV capacity
+        let max_seq = self.engine.spec().model.max_seq;
         let max_new = qr
             .req
             .max_new_tokens
-            .min(cache.max_seq.saturating_sub(qr.req.prompt.len() + 1));
+            .min(max_seq.saturating_sub(qr.req.prompt.len() + 1));
         let t0 = Instant::now();
-        let logits = self.model.prefill(&qr.req.prompt, &mut cache)?;
+        let logits = self.engine.prefill(&qr.req.prompt, session.as_mut())?;
         let prefill_us = t0.elapsed().as_micros() as u64;
-        let v = self.model.cfg.vocab;
+        let v = self.engine.spec().model.vocab;
         let last = &logits[(qr.req.prompt.len() - 1) * v..qr.req.prompt.len() * v];
         let mut sampler = Sampler::new(qr.req.sampling, seed);
         let first = sampler.sample(last);
@@ -90,7 +95,7 @@ impl<'m> Scheduler<'m> {
             prompt_len: qr.req.prompt.len(),
             generated: vec![first],
             max_new,
-            cache,
+            session,
             sampler,
             last_token: first,
             timing: Timing { queue_us, prefill_us, decode_us: 0 },
@@ -109,13 +114,15 @@ impl<'m> Scheduler<'m> {
         if self.active.is_empty() {
             return Ok(());
         }
+        let engine = self.engine.clone();
         let t0 = Instant::now();
         let tokens: Vec<u32> = self.active.iter().map(|a| a.last_token).collect();
-        let mut caches: Vec<&mut KvCache> =
-            self.active.iter_mut().map(|a| &mut a.cache).collect();
-        let logits = self.model.decode_step(&tokens, &mut caches)?;
+        let mut sessions: Vec<&mut dyn EngineSession> =
+            self.active.iter_mut().map(|a| a.session.as_mut()).collect();
+        let logits = engine.decode_step(&tokens, &mut sessions)?;
+        drop(sessions);
         let step_us = t0.elapsed().as_micros() as u64;
-        let v = self.model.cfg.vocab;
+        let v = engine.spec().model.vocab;
         let per_seq_us = step_us / self.active.len() as u64;
         for (bi, a) in self.active.iter_mut().enumerate() {
             let row = &logits[bi * v..(bi + 1) * v];
@@ -132,7 +139,7 @@ impl<'m> Scheduler<'m> {
         let mut i = 0;
         while i < self.active.len() {
             let done = self.active[i].generated.len() >= self.active[i].max_new
-                || self.active[i].cache.remaining() <= 1;
+                || self.active[i].session.remaining() <= 1;
             if done {
                 let a = self.active.swap_remove(i);
                 let _ = a.started;
@@ -161,7 +168,8 @@ impl<'m> Scheduler<'m> {
 mod tests {
     use super::*;
     use crate::coordinator::request::Request;
-    use crate::model::{Backend, ModelConfig, Transformer};
+    use crate::engine::EngineBuilder;
+    use crate::model::ModelConfig;
 
     const MICRO: ModelConfig = ModelConfig {
         name: "micro",
@@ -174,6 +182,10 @@ mod tests {
         rope_base: 10000.0,
     };
 
+    fn micro_engine(seed: u64) -> Arc<dyn InferenceEngine> {
+        EngineBuilder::new().random_weights(MICRO, seed).backend("fp32").build_arc().unwrap()
+    }
+
     fn run_all(s: &mut Scheduler) {
         for _ in 0..200 {
             if s.idle() {
@@ -185,8 +197,7 @@ mod tests {
 
     #[test]
     fn generates_exact_token_counts() {
-        let m = Transformer::random(MICRO, Backend::Fp32, 1);
-        let mut s = Scheduler::new(&m, SchedulerConfig { max_active: 4 });
+        let mut s = Scheduler::new(micro_engine(1), SchedulerConfig { max_active: 4 });
         for id in 0..3u64 {
             s.admit(
                 QueuedRequest {
@@ -209,8 +220,7 @@ mod tests {
 
     #[test]
     fn respects_kv_capacity() {
-        let m = Transformer::random(MICRO, Backend::Fp32, 2);
-        let mut s = Scheduler::new(&m, SchedulerConfig::default());
+        let mut s = Scheduler::new(micro_engine(2), SchedulerConfig::default());
         // prompt 20 + request 100 new > max_seq 32 → truncated
         s.admit(
             QueuedRequest {
@@ -229,8 +239,7 @@ mod tests {
 
     #[test]
     fn capacity_bound() {
-        let m = Transformer::random(MICRO, Backend::Fp32, 3);
-        let mut s = Scheduler::new(&m, SchedulerConfig { max_active: 2 });
+        let mut s = Scheduler::new(micro_engine(3), SchedulerConfig { max_active: 2 });
         for id in 0..2u64 {
             s.admit(
                 QueuedRequest {

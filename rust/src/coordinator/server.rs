@@ -18,7 +18,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::model::Transformer;
+use crate::engine::InferenceEngine;
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
@@ -61,8 +61,12 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start with `(tag, model)` replicas.
-    pub fn start(replicas: Vec<(String, Arc<Transformer>)>, cfg: ServerConfig) -> Result<Self> {
+    /// Start with `(tag, engine)` replicas — any [`InferenceEngine`]
+    /// (native or PJRT), built through `engine::EngineBuilder`.
+    pub fn start(
+        replicas: Vec<(String, Arc<dyn InferenceEngine>)>,
+        cfg: ServerConfig,
+    ) -> Result<Self> {
         assert!(!replicas.is_empty());
         let metrics = Arc::new(Metrics::new());
         let mut router = Router::new(&cfg.default_tag);
@@ -141,7 +145,7 @@ fn dispatcher_loop(
 }
 
 fn worker_loop(
-    model: Arc<Transformer>,
+    model: Arc<dyn InferenceEngine>,
     rx: Receiver<WorkerMsg>,
     bcfg: BatcherConfig,
     max_active: usize,
@@ -149,7 +153,7 @@ fn worker_loop(
     tag: &str,
 ) {
     let mut batcher = Batcher::new(bcfg);
-    let mut scheduler = Scheduler::new(&model, SchedulerConfig { max_active });
+    let mut scheduler = Scheduler::new(model, SchedulerConfig { max_active });
     let mut pending: HashMap<u64, Sender<Response>> = HashMap::new();
     let mut seed = 0xC0FFEEu64;
     let mut shutdown = false;
@@ -239,7 +243,8 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::{Backend, ModelConfig};
+    use crate::engine::EngineBuilder;
+    use crate::model::ModelConfig;
 
     const MICRO: ModelConfig = ModelConfig {
         name: "micro",
@@ -252,11 +257,14 @@ mod tests {
         rope_base: 10000.0,
     };
 
+    fn micro_engine(seed: u64) -> Arc<dyn InferenceEngine> {
+        EngineBuilder::new().random_weights(MICRO, seed).backend("fp32").build_arc().unwrap()
+    }
+
     #[test]
     fn end_to_end_serving() {
-        let model = Arc::new(Transformer::random(MICRO, Backend::Fp32, 5));
         let server = Server::start(
-            vec![("fp16".to_string(), model)],
+            vec![("fp16".to_string(), micro_engine(5))],
             ServerConfig::default(),
         )
         .unwrap();
@@ -276,9 +284,8 @@ mod tests {
 
     #[test]
     fn unroutable_config_drops_channel() {
-        let model = Arc::new(Transformer::random(MICRO, Backend::Fp32, 5));
         let server = Server::start(
-            vec![("fp16".to_string(), model)],
+            vec![("fp16".to_string(), micro_engine(5))],
             ServerConfig::default(),
         )
         .unwrap();

@@ -1,0 +1,121 @@
+//! The model-level abstraction of the unified engine API: one object-safe
+//! [`InferenceEngine`] interface consumed by the serving coordinator, the
+//! perplexity / zero-shot eval harnesses, and the end-to-end benches —
+//! regardless of whether the model executes on the rust-native transformer
+//! or through the PJRT artifact path.
+//!
+//! Sequence state (the KV cache, host- or device-resident) lives in an
+//! opaque [`EngineSession`]; engines downcast their own sessions
+//! internally, so callers never see the concrete cache type.
+
+use std::any::Any;
+
+use anyhow::Result;
+
+use crate::model::ModelConfig;
+
+/// Which execution path an engine runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Execution {
+    /// the rust-native transformer over pluggable GEMM backends
+    Native,
+    /// the AOT HLO artifacts on the PJRT CPU client
+    Pjrt,
+}
+
+/// Static description of a built engine.
+#[derive(Clone, Debug)]
+pub struct EngineSpec {
+    pub model: ModelConfig,
+    /// canonical backend spec string (`fp32`, `abq:w2*a8`, ...)
+    pub backend: String,
+    pub execution: Execution,
+}
+
+/// Resident-memory accounting (the Table 12 axis).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemoryReport {
+    /// packed weights (+ quant scales / zero points / balance vectors)
+    pub weight_bytes: usize,
+    /// KV cache bytes one session holds at full capacity
+    pub kv_bytes_per_session: usize,
+}
+
+impl MemoryReport {
+    pub fn total_bytes(&self, sessions: usize) -> usize {
+        self.weight_bytes + sessions * self.kv_bytes_per_session
+    }
+}
+
+/// Per-sequence state: position + KV storage, owned by the engine that
+/// created it. Sessions are not interchangeable across engines.
+pub trait EngineSession: Send {
+    /// Tokens consumed so far.
+    fn pos(&self) -> usize;
+
+    /// Positions left before KV capacity is exhausted.
+    fn remaining(&self) -> usize;
+
+    /// Resident KV bytes of this session.
+    fn kv_bytes(&self) -> usize;
+
+    /// Clone the sequence state (teacher-forced multi-choice scoring).
+    /// Engines whose state is device-resident may not support this.
+    fn fork(&self) -> Result<Box<dyn EngineSession>>;
+
+    /// Downcast hook for the owning engine.
+    fn as_any_mut(&mut self) -> &mut dyn Any;
+}
+
+/// A built inference engine: the only interface the coordinator, the eval
+/// harnesses, and the benches consume. Construct via
+/// [`super::EngineBuilder`].
+pub trait InferenceEngine: Send + Sync {
+    fn spec(&self) -> &EngineSpec;
+
+    /// Fresh sequence state (empty KV at position 0).
+    fn new_session(&self) -> Result<Box<dyn EngineSession>>;
+
+    /// Prefill one sequence, filling the session and returning logits
+    /// `[tokens, vocab]` (row t = next-token logits after `tokens[..=t]`).
+    fn prefill(&self, tokens: &[u32], session: &mut dyn EngineSession) -> Result<Vec<f32>>;
+
+    /// One decode step for a batch of sequences: `tokens[i]` extends
+    /// `sessions[i]`. Returns logits `[batch, vocab]`.
+    fn decode_step(
+        &self,
+        tokens: &[u32],
+        sessions: &mut [&mut dyn EngineSession],
+    ) -> Result<Vec<f32>>;
+
+    fn memory_report(&self) -> MemoryReport;
+}
+
+/// Greedy generation helper over any engine (examples / benches): prefill
+/// the prompt, then argmax-decode until `max_new` tokens are produced or
+/// the session runs out of KV capacity.
+pub fn generate(
+    engine: &dyn InferenceEngine,
+    prompt: &[u32],
+    max_new: usize,
+) -> Result<Vec<u32>> {
+    if prompt.is_empty() {
+        anyhow::bail!("generate needs a non-empty prompt");
+    }
+    if max_new == 0 {
+        return Ok(Vec::new());
+    }
+    let mut session = engine.new_session()?;
+    let v = engine.spec().model.vocab;
+    let logits = engine.prefill(prompt, session.as_mut())?;
+    let last = &logits[(prompt.len() - 1) * v..prompt.len() * v];
+    let mut tok = crate::model::argmax(last) as u32;
+    let mut out = vec![tok];
+    while out.len() < max_new && session.remaining() > 1 {
+        let mut refs: [&mut dyn EngineSession; 1] = [session.as_mut()];
+        let step = engine.decode_step(&[tok], &mut refs)?;
+        tok = crate::model::argmax(&step[..v]) as u32;
+        out.push(tok);
+    }
+    Ok(out)
+}

@@ -1,0 +1,253 @@
+//! [`EngineBuilder`] — the single construction entry point for inference
+//! engines. Used by `main.rs`, the serving examples, the benches and the
+//! test suites; nothing outside `engine/` constructs a model directly.
+//!
+//! ```
+//! use abq_llm::engine::{EngineBuilder, InferenceEngine};
+//! use abq_llm::model::ModelConfig;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! const MICRO: ModelConfig = ModelConfig {
+//!     name: "micro", vocab: 32, d_model: 16, n_layers: 1, n_heads: 2,
+//!     d_ff: 32, max_seq: 16, rope_base: 10000.0,
+//! };
+//! let engine = EngineBuilder::new()
+//!     .random_weights(MICRO, 7)   // or .weights("artifacts")
+//!     .backend("abq:w4a8")
+//!     .build()?;
+//! let mut session = engine.new_session()?;
+//! let logits = engine.prefill(&[1, 2, 3], session.as_mut())?;
+//! assert_eq!(logits.len(), 3 * engine.spec().model.vocab);
+//! # Ok(()) }
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::abq::OptLevel;
+use crate::model::{ModelConfig, Transformer, WeightPack};
+use crate::quant::WAConfig;
+use crate::util::json::Json;
+use crate::util::par;
+
+use super::api::{Execution, InferenceEngine};
+use super::native::NativeEngine;
+use super::registry::{BackendOptions, BackendRegistry};
+
+pub struct EngineBuilder {
+    weights: Option<PathBuf>,
+    backend: String,
+    opt_level: OptLevel,
+    threads: Option<usize>,
+    execution: Execution,
+    registry: BackendRegistry,
+    random: Option<(ModelConfig, u64)>,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EngineBuilder {
+    pub fn new() -> Self {
+        EngineBuilder {
+            weights: None,
+            backend: "fp32".to_string(),
+            opt_level: OptLevel::Auto,
+            threads: None,
+            execution: Execution::Native,
+            registry: BackendRegistry::with_defaults(),
+            random: None,
+        }
+    }
+
+    /// Artifacts directory holding `weights.abqw` + `manifest.json`.
+    pub fn weights(mut self, dir: impl AsRef<Path>) -> Self {
+        self.weights = Some(dir.as_ref().to_path_buf());
+        self
+    }
+
+    /// Backend spec (`fp32`, `int8`, `int4`, `abq:w2*a8`, or a bare WqAp
+    /// string), resolved through the registry at build time.
+    pub fn backend(mut self, spec: impl Into<String>) -> Self {
+        self.backend = spec.into();
+        self
+    }
+
+    /// Kernel-variant ladder position for backends that honour it.
+    pub fn opt_level(mut self, opt: OptLevel) -> Self {
+        self.opt_level = opt;
+        self
+    }
+
+    /// Worker-thread count for the data-parallel GEMM helpers.
+    ///
+    /// Note: the worker pool is **process-global** (it backs every engine
+    /// and the raw kernel API alike, like `ABQ_THREADS`); the last built
+    /// engine's setting wins for the whole process.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n);
+        self
+    }
+
+    /// Execution path: rust-native transformer (default) or PJRT artifacts.
+    pub fn execution(mut self, e: Execution) -> Self {
+        self.execution = e;
+        self
+    }
+
+    /// Replace the backend registry wholesale.
+    pub fn registry(mut self, r: BackendRegistry) -> Self {
+        self.registry = r;
+        self
+    }
+
+    /// Mutable access to the registry (register custom families in place).
+    pub fn registry_mut(&mut self) -> &mut BackendRegistry {
+        &mut self.registry
+    }
+
+    /// Register one custom backend family (builder-chaining form).
+    pub fn register_backend<F>(mut self, family: &str, f: F) -> Self
+    where
+        F: Fn(
+                Option<&str>,
+                &BackendOptions,
+            ) -> Result<Arc<dyn super::linear::LinearBackend>>
+            + Send
+            + Sync
+            + 'static,
+    {
+        self.registry.register(family, f);
+        self
+    }
+
+    /// Random-weight model at `cfg` (tests / benches at real layer shapes;
+    /// mutually exclusive with `.weights()`).
+    pub fn random_weights(mut self, cfg: ModelConfig, seed: u64) -> Self {
+        self.random = Some((cfg, seed));
+        self
+    }
+
+    pub fn build(self) -> Result<Box<dyn InferenceEngine>> {
+        if let Some(n) = self.threads {
+            par::set_threads(n);
+        }
+        match self.execution {
+            Execution::Native => self.build_native(),
+            Execution::Pjrt => self.build_pjrt(),
+        }
+    }
+
+    /// `build()` wrapped into an `Arc` (the form the serving layer holds).
+    pub fn build_arc(self) -> Result<Arc<dyn InferenceEngine>> {
+        Ok(Arc::from(self.build()?))
+    }
+
+    fn build_native(self) -> Result<Box<dyn InferenceEngine>> {
+        let opts = BackendOptions { opt_level: self.opt_level };
+        let backend = self
+            .registry
+            .resolve_with(&self.backend, &opts)
+            .with_context(|| format!("resolve backend '{}'", self.backend))?;
+        let model = if let Some((cfg, seed)) = self.random {
+            Transformer::random(cfg, backend.as_ref(), seed)?
+        } else {
+            let dir = self.weights.as_ref().ok_or_else(|| {
+                anyhow!("EngineBuilder: set .weights(dir) or .random_weights(cfg, seed)")
+            })?;
+            load_artifacts(dir, backend.as_ref())
+                .with_context(|| format!("load artifacts from {dir:?} (run `make artifacts`)"))?
+        };
+        Ok(Box::new(NativeEngine::new(model)))
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn build_pjrt(self) -> Result<Box<dyn InferenceEngine>> {
+        let dir = self.weights.ok_or_else(|| {
+            anyhow!("EngineBuilder: the PJRT path needs .weights(artifacts_dir)")
+        })?;
+        let tag = backend_tag(&self.backend)?;
+        Ok(Box::new(super::pjrt::PjrtInferenceEngine::load(&dir, &tag, &self.backend)?))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn build_pjrt(self) -> Result<Box<dyn InferenceEngine>> {
+        anyhow::bail!("this build has no PJRT support (rebuild with `--features pjrt`)")
+    }
+}
+
+/// Load pack + manifest from an artifacts directory and prepare every
+/// projection with `backend` (the native-path loading step, kept inside
+/// `engine/` so model construction has a single home).
+fn load_artifacts(dir: &Path, backend: &dyn super::linear::LinearBackend) -> Result<Transformer> {
+    let pack = WeightPack::load(&dir.join("weights.abqw"))?;
+    let manifest =
+        std::fs::read_to_string(dir.join("manifest.json")).context("read manifest.json")?;
+    let j = Json::parse(&manifest).map_err(|e| anyhow!("manifest parse: {e}"))?;
+    let cfg = ModelConfig::from_manifest(&j)?;
+    Transformer::from_pack(&pack, cfg, backend)
+}
+
+/// Map a backend spec to its artifact / routing tag: `fp32`/`fp16`/`fp` →
+/// `fp16`; `abq:w2*a8` (or a bare WqAp string) → the filesystem-safe
+/// config tag (`w2sa8`).
+pub fn backend_tag(spec: &str) -> Result<String> {
+    match spec.trim() {
+        "fp32" | "fp16" | "fp" => Ok("fp16".to_string()),
+        s => {
+            let cfg_str = s.strip_prefix("abq:").unwrap_or(s);
+            let cfg: WAConfig = cfg_str
+                .parse()
+                .map_err(|e| anyhow!("backend '{s}' has no artifact tag: {e}"))?;
+            Ok(cfg.tag())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_tags() {
+        assert_eq!(backend_tag("fp32").unwrap(), "fp16");
+        assert_eq!(backend_tag("abq:w2*a8").unwrap(), "w2sa8");
+        assert_eq!(backend_tag("w2sa8").unwrap(), "w2sa8");
+        assert!(backend_tag("int8").is_err());
+    }
+
+    #[test]
+    fn build_requires_a_weight_source() {
+        assert!(EngineBuilder::new().build().is_err());
+    }
+
+    #[test]
+    fn random_micro_builds_on_every_default_family() {
+        const MICRO: ModelConfig = ModelConfig {
+            name: "micro",
+            vocab: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 16,
+            rope_base: 10000.0,
+        };
+        for spec in ["fp32", "int8", "int4", "abq:w8a8"] {
+            let engine = EngineBuilder::new()
+                .random_weights(MICRO, 3)
+                .backend(spec)
+                .build()
+                .unwrap_or_else(|e| panic!("{spec}: {e}"));
+            let mut s = engine.new_session().unwrap();
+            let logits = engine.prefill(&[1, 2], s.as_mut()).unwrap();
+            assert_eq!(logits.len(), 2 * MICRO.vocab, "{spec}");
+            assert_eq!(s.pos(), 2);
+        }
+    }
+}

@@ -1,0 +1,324 @@
+//! The projection-level abstraction of the unified engine API.
+//!
+//! A [`LinearBackend`] turns float weights (plus, optionally, calibrated
+//! quantized codes from the weight pack) into a prepared [`LinearOp`] —
+//! the runtime form of one `nn.Linear` in the served model. The four
+//! in-tree backends mirror the paper's comparison set: `fp32`
+//! (FastTransformer FP16 stand-in), `int8` (cuBLAS/CUTLASS W8A8), `int4`
+//! (CUTLASS W4A4) and `abq:<WqAp>` (the arbitrary-bit bit-plane engine).
+//!
+//! New precision engines implement these two traits and register a
+//! factory in [`super::registry::BackendRegistry`] — no enum to extend,
+//! no call sites to edit (see `docs/ENGINE_API.md`).
+
+use anyhow::{bail, Result};
+
+use crate::abq::{OptLevel, QuantizedLinear};
+use crate::baselines::{gemm_fp32_into, Int4Gemm, Int8Gemm};
+use crate::model::WeightPack;
+use crate::quant::WAConfig;
+
+/// One projection, prepared for its backend.
+///
+/// `forward` writes into a caller-provided scratch buffer so the decode
+/// hot loop can reuse one allocation across the 7 block projections
+/// instead of allocating a fresh `Vec` per projection per step.
+pub trait LinearOp: Send + Sync {
+    /// `out[tokens, out_features] = x[tokens, in_features] · Wᵀ`.
+    ///
+    /// Must overwrite every element of `out[..tokens * out_features]`.
+    fn forward(&self, x: &[f32], tokens: usize, out: &mut [f32]);
+
+    fn out_features(&self) -> usize;
+
+    fn in_features(&self) -> usize;
+
+    /// Packed weight footprint in bytes (Table 12 memory accounting).
+    fn weight_bytes(&self) -> usize;
+
+    /// Allocating convenience wrapper around [`LinearOp::forward`].
+    fn forward_alloc(&self, x: &[f32], tokens: usize) -> Vec<f32> {
+        let mut out = vec![0f32; tokens * self.out_features()];
+        self.forward(x, tokens, &mut out);
+        out
+    }
+}
+
+/// Where a projection's weights come from: the float tensor is always
+/// available; backends that load offline-calibrated state (the ABQ
+/// engine's exported codes) additionally get the pack and the
+/// `blocks.<layer>.<name>` coordinates to look their tensors up.
+pub struct PrepareCtx<'a> {
+    /// weight pack holding calibrated quantized codes, when available
+    pub pack: Option<&'a WeightPack>,
+    /// block index of the projection being prepared
+    pub layer: usize,
+    /// projection name (`wq`, `wk`, `wv`, `wo`, `gate`, `up`, `down`)
+    pub name: &'a str,
+}
+
+impl PrepareCtx<'_> {
+    /// Context for weights with no pack behind them (random init, tests).
+    pub fn none() -> PrepareCtx<'static> {
+        PrepareCtx { pack: None, layer: 0, name: "" }
+    }
+}
+
+/// A precision engine: prepares projections for execution.
+pub trait LinearBackend: Send + Sync {
+    /// Canonical spec string (`fp32`, `int8`, `abq:w2*a8`, ...).
+    fn name(&self) -> String;
+
+    /// Prepare one projection from float weights `[out_features, in_features]`
+    /// (row-major, transposed storage as in the model).
+    fn prepare(
+        &self,
+        w: &[f32],
+        out_features: usize,
+        in_features: usize,
+        ctx: &PrepareCtx,
+    ) -> Result<Box<dyn LinearOp>>;
+}
+
+// ---------------------------------------------------------------------------
+// fp32 — the float comparator ("FP16" rows of Fig. 6 / Table 12)
+// ---------------------------------------------------------------------------
+
+pub struct Fp32Backend;
+
+struct Fp32Op {
+    w: Vec<f32>,
+    out_f: usize,
+    in_f: usize,
+}
+
+impl LinearOp for Fp32Op {
+    fn forward(&self, x: &[f32], tokens: usize, out: &mut [f32]) {
+        gemm_fp32_into(x, &self.w, tokens, self.out_f, self.in_f, out);
+    }
+
+    fn out_features(&self) -> usize {
+        self.out_f
+    }
+
+    fn in_features(&self) -> usize {
+        self.in_f
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.w.len() * 4
+    }
+}
+
+impl LinearBackend for Fp32Backend {
+    fn name(&self) -> String {
+        "fp32".to_string()
+    }
+
+    fn prepare(
+        &self,
+        w: &[f32],
+        out_features: usize,
+        in_features: usize,
+        _ctx: &PrepareCtx,
+    ) -> Result<Box<dyn LinearOp>> {
+        if w.len() != out_features * in_features {
+            bail!("fp32 prepare: weight len {} != {out_features}x{in_features}", w.len());
+        }
+        Ok(Box::new(Fp32Op { w: w.to_vec(), out_f: out_features, in_f: in_features }))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// int8 — padded IMMA stand-in (SmoothQuant's W8A8 engine)
+// ---------------------------------------------------------------------------
+
+pub struct Int8Backend;
+
+struct Int8Op(Int8Gemm);
+
+impl LinearOp for Int8Op {
+    fn forward(&self, x: &[f32], tokens: usize, out: &mut [f32]) {
+        self.0.forward_into(x, tokens, out);
+    }
+
+    fn out_features(&self) -> usize {
+        self.0.n
+    }
+
+    fn in_features(&self) -> usize {
+        self.0.k
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.0.weight_bytes()
+    }
+}
+
+impl LinearBackend for Int8Backend {
+    fn name(&self) -> String {
+        "int8".to_string()
+    }
+
+    fn prepare(
+        &self,
+        w: &[f32],
+        out_features: usize,
+        in_features: usize,
+        _ctx: &PrepareCtx,
+    ) -> Result<Box<dyn LinearOp>> {
+        Ok(Box::new(Int8Op(Int8Gemm::from_weights(w, out_features, in_features))))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// int4 — padded IMMA.S4 stand-in (CUTLASS W4A4)
+// ---------------------------------------------------------------------------
+
+pub struct Int4Backend;
+
+struct Int4Op(Int4Gemm);
+
+impl LinearOp for Int4Op {
+    fn forward(&self, x: &[f32], tokens: usize, out: &mut [f32]) {
+        self.0.forward_into(x, tokens, out);
+    }
+
+    fn out_features(&self) -> usize {
+        self.0.n
+    }
+
+    fn in_features(&self) -> usize {
+        self.0.k
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.0.weight_bytes()
+    }
+}
+
+impl LinearBackend for Int4Backend {
+    fn name(&self) -> String {
+        "int4".to_string()
+    }
+
+    fn prepare(
+        &self,
+        w: &[f32],
+        out_features: usize,
+        in_features: usize,
+        _ctx: &PrepareCtx,
+    ) -> Result<Box<dyn LinearOp>> {
+        if in_features % 2 != 0 {
+            bail!("int4 backend needs even in_features (nibble packing), got {in_features}");
+        }
+        Ok(Box::new(Int4Op(Int4Gemm::from_weights(w, out_features, in_features))))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// abq — the arbitrary-bit engine at a WqAp config
+// ---------------------------------------------------------------------------
+
+pub struct AbqBackend {
+    pub cfg: WAConfig,
+    /// Table-4 kernel variant; serving uses `OptLevel::Auto`.
+    pub opt: OptLevel,
+}
+
+impl AbqBackend {
+    pub fn new(cfg: WAConfig) -> Self {
+        AbqBackend { cfg, opt: OptLevel::Auto }
+    }
+}
+
+struct AbqOp {
+    lin: QuantizedLinear,
+    opt: OptLevel,
+}
+
+impl LinearOp for AbqOp {
+    fn forward(&self, x: &[f32], tokens: usize, out: &mut [f32]) {
+        self.lin.forward_into(x, tokens, self.opt, out);
+    }
+
+    fn out_features(&self) -> usize {
+        self.lin.out_features
+    }
+
+    fn in_features(&self) -> usize {
+        self.lin.in_features
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.lin.weight_bytes()
+    }
+}
+
+impl LinearBackend for AbqBackend {
+    fn name(&self) -> String {
+        format!("abq:{}", self.cfg)
+    }
+
+    /// Calibrated codes for the config's tag are used when present in the
+    /// pack (falling back to RTN from the fp weights otherwise, e.g. for
+    /// sweep configs that were not calibrated offline).
+    fn prepare(
+        &self,
+        w: &[f32],
+        out_features: usize,
+        in_features: usize,
+        ctx: &PrepareCtx,
+    ) -> Result<Box<dyn LinearOp>> {
+        if let Some(pack) = ctx.pack {
+            let base = format!("q.{}.{}.{}", self.cfg.tag(), ctx.layer, ctx.name);
+            if let Ok(codes_t) = pack.get(&format!("{base}.wq")) {
+                let codes = codes_t.as_u8()?;
+                let zw = pack.get(&format!("{base}.zw"))?.as_i32()?.to_vec();
+                let dw = pack.get(&format!("{base}.dw"))?.as_f32()?.to_vec();
+                let balance = pack
+                    .get(&format!("{base}.s"))
+                    .ok()
+                    .and_then(|t| t.as_f32().ok().map(|v| v.to_vec()));
+                let lin = QuantizedLinear::from_codes(
+                    codes, out_features, in_features, zw, dw, balance, self.cfg,
+                );
+                return Ok(Box::new(AbqOp { lin, opt: self.opt }));
+            }
+        }
+        let lin = QuantizedLinear::from_weights_rtn(w, out_features, in_features, self.cfg);
+        Ok(Box::new(AbqOp { lin, opt: self.opt }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp32_op_forward_matches_alloc() {
+        let (out_f, in_f, tokens) = (3usize, 8usize, 2usize);
+        let w: Vec<f32> = (0..out_f * in_f).map(|i| i as f32 * 0.1).collect();
+        let x: Vec<f32> = (0..tokens * in_f).map(|i| (i % 5) as f32 - 2.0).collect();
+        let op = Fp32Backend.prepare(&w, out_f, in_f, &PrepareCtx::none()).unwrap();
+        let mut out = vec![7f32; tokens * out_f];
+        op.forward(&x, tokens, &mut out);
+        assert_eq!(out, op.forward_alloc(&x, tokens));
+        assert_eq!(op.weight_bytes(), out_f * in_f * 4);
+    }
+
+    #[test]
+    fn backend_names_are_canonical() {
+        assert_eq!(Fp32Backend.name(), "fp32");
+        assert_eq!(Int8Backend.name(), "int8");
+        assert_eq!(Int4Backend.name(), "int4");
+        let abq = AbqBackend::new("w2*a8".parse().unwrap());
+        assert_eq!(abq.name(), "abq:w2*a8");
+    }
+
+    #[test]
+    fn int4_rejects_odd_k() {
+        let w = vec![0.0f32; 4 * 7];
+        assert!(Int4Backend.prepare(&w, 4, 7, &PrepareCtx::none()).is_err());
+    }
+}

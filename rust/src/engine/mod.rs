@@ -1,0 +1,50 @@
+//! The unified engine API (DESIGN: one reconstruction framework, many
+//! precision engines — the paper's core claim, surfaced as the crate's
+//! construction surface).
+//!
+//! Three abstractions:
+//!
+//! * [`LinearBackend`] / [`LinearOp`] — a precision engine at the
+//!   projection level. The in-tree set (`fp32`, `int8`, `int4`,
+//!   `abq:<WqAp>`) is registered in a string-keyed [`BackendRegistry`];
+//!   adding an engine is **one registration**, not an enum sweep.
+//! * [`InferenceEngine`] / [`EngineSession`] — a built model behind one
+//!   object-safe interface, implemented by both the rust-native
+//!   transformer path and the PJRT artifact path. The serving
+//!   coordinator, the eval harnesses and the benches all consume this.
+//! * [`EngineBuilder`] — the single construction entry point:
+//!
+//! ```no_run
+//! use abq_llm::engine::{EngineBuilder, OptLevel};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let engine = EngineBuilder::new()
+//!     .weights("artifacts")
+//!     .backend("abq:w2*a8")
+//!     .opt_level(OptLevel::Auto)
+//!     .threads(8)
+//!     .build()?;
+//! # Ok(()) }
+//! ```
+//!
+//! See `docs/ENGINE_API.md` for the migration table from the old
+//! `Backend` enum API and a worked "add your own backend" example.
+
+pub mod api;
+pub mod builder;
+pub mod linear;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod registry;
+
+pub use api::{generate, EngineSession, EngineSpec, Execution, InferenceEngine, MemoryReport};
+pub use builder::{backend_tag, EngineBuilder};
+pub use linear::{
+    AbqBackend, Fp32Backend, Int4Backend, Int8Backend, LinearBackend, LinearOp, PrepareCtx,
+};
+pub use native::NativeEngine;
+pub use registry::{BackendFactory, BackendOptions, BackendRegistry};
+
+// the kernel-variant ladder is part of the public construction surface
+pub use crate::abq::OptLevel;

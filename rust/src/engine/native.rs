@@ -1,0 +1,98 @@
+//! [`InferenceEngine`] over the rust-native [`Transformer`]: host-resident
+//! KV caches, batched decode across sessions in a single GEMM (the
+//! GEMM-vs-GEMV axis the ABQ engine optimises).
+
+use std::any::Any;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::{KvCache, Transformer};
+
+use super::api::{EngineSession, EngineSpec, Execution, InferenceEngine, MemoryReport};
+
+pub struct NativeEngine {
+    model: Transformer,
+    spec: EngineSpec,
+}
+
+impl NativeEngine {
+    pub fn new(model: Transformer) -> Self {
+        let spec = EngineSpec {
+            model: model.cfg,
+            backend: model.backend_name.clone(),
+            execution: Execution::Native,
+        };
+        NativeEngine { model, spec }
+    }
+
+    /// Escape hatch to the underlying transformer (engine-internal tools).
+    pub fn model(&self) -> &Transformer {
+        &self.model
+    }
+}
+
+struct NativeSession {
+    cache: KvCache,
+}
+
+impl EngineSession for NativeSession {
+    fn pos(&self) -> usize {
+        self.cache.pos
+    }
+
+    fn remaining(&self) -> usize {
+        self.cache.remaining()
+    }
+
+    fn kv_bytes(&self) -> usize {
+        self.cache.bytes()
+    }
+
+    fn fork(&self) -> Result<Box<dyn EngineSession>> {
+        Ok(Box::new(NativeSession { cache: self.cache.clone() }))
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+fn downcast<'a>(s: &'a mut dyn EngineSession) -> Result<&'a mut NativeSession> {
+    s.as_any_mut()
+        .downcast_mut::<NativeSession>()
+        .ok_or_else(|| anyhow!("session does not belong to a native engine"))
+}
+
+impl InferenceEngine for NativeEngine {
+    fn spec(&self) -> &EngineSpec {
+        &self.spec
+    }
+
+    fn new_session(&self) -> Result<Box<dyn EngineSession>> {
+        Ok(Box::new(NativeSession { cache: KvCache::new(&self.model.cfg) }))
+    }
+
+    fn prefill(&self, tokens: &[u32], session: &mut dyn EngineSession) -> Result<Vec<f32>> {
+        self.model.prefill(tokens, &mut downcast(session)?.cache)
+    }
+
+    fn decode_step(
+        &self,
+        tokens: &[u32],
+        sessions: &mut [&mut dyn EngineSession],
+    ) -> Result<Vec<f32>> {
+        let mut caches: Vec<&mut KvCache> = Vec::with_capacity(sessions.len());
+        for s in sessions.iter_mut() {
+            caches.push(&mut downcast(&mut **s)?.cache);
+        }
+        self.model.decode_step(tokens, &mut caches)
+    }
+
+    fn memory_report(&self) -> MemoryReport {
+        let c = &self.model.cfg;
+        MemoryReport {
+            weight_bytes: self.model.weight_bytes(),
+            kv_bytes_per_session: 2 * c.n_layers * c.max_seq * c.d_model * 4,
+        }
+    }
+}

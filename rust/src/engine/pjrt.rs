@@ -1,0 +1,275 @@
+//! [`InferenceEngine`] over the PJRT artifact path: the AOT HLO programs
+//! (jax L2 model with the pallas L1 kernel inlined) compiled on the PJRT
+//! CPU client, with device-resident KV chained between decode steps.
+//!
+//! Built with `--features pjrt`; the [`super::EngineBuilder`] selects this
+//! path via `.execution(Execution::Pjrt)`. The decode artifact has a fixed
+//! compiled batch, so sessions are stepped independently (each owns one
+//! device KV state) and prefill teacher-forces through the decode program
+//! so the session's KV is valid for subsequent decoding. Tags without a
+//! decode artifact (e.g. `model_fp16_prefill` only) still serve one-shot
+//! prefill logits through the prefill program.
+
+use std::any::Any;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::{ModelConfig, WeightPack};
+use crate::runtime::{KvState, PjrtEngine, Program};
+
+use super::api::{EngineSession, EngineSpec, Execution, InferenceEngine, MemoryReport};
+
+pub struct PjrtInferenceEngine {
+    engine: PjrtEngine,
+    prefill_prog: Option<Program>,
+    decode_prog: Option<Program>,
+    spec: EngineSpec,
+    weight_bytes: usize,
+    kv_bytes_per_session: usize,
+}
+
+impl PjrtInferenceEngine {
+    /// Load the artifacts for one quant `tag` (`fp16`, `w2sa8`, ...),
+    /// compiling whichever of `model_<tag>_prefill` / `model_<tag>_decode`
+    /// the manifest lists.
+    pub fn load(dir: &Path, tag: &str, backend_name: &str) -> Result<Self> {
+        let engine = PjrtEngine::load(dir)?;
+        let pack = WeightPack::load(&dir.join("weights.abqw"))?;
+        let prefill_name = format!("model_{tag}_prefill");
+        let decode_name = format!("model_{tag}_decode");
+        let has = |n: &str| engine.manifest.artifacts.iter().any(|a| a.name == n);
+        let decode_prog =
+            if has(&decode_name) { Some(engine.program(&decode_name, &pack)?) } else { None };
+        // prefill teacher-forces through the decode program when one
+        // exists (the KV must end up device-resident for decoding), so the
+        // one-shot prefill artifact is only compiled — and its weights
+        // only uploaded — when it is the sole execution path for the tag
+        let prefill_prog = if decode_prog.is_none() && has(&prefill_name) {
+            Some(engine.program(&prefill_name, &pack)?)
+        } else {
+            None
+        };
+        if prefill_prog.is_none() && decode_prog.is_none() {
+            bail!(
+                "no PJRT artifacts for tag '{tag}' in {dir:?} \
+                 (looked for {prefill_name} / {decode_name})"
+            );
+        }
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .context("read manifest.json")?;
+        let j = crate::util::json::Json::parse(&manifest_text)
+            .map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let model = ModelConfig::from_manifest(&j)?;
+        let m = &engine.manifest;
+        // KV state: one [B, S, H, hd] f32 buffer per kv input of the decode
+        // artifact (2 per layer: K and V)
+        let kv_inputs = engine
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == decode_name)
+            .map(|a| a.inputs.iter().filter(|i| i.starts_with("kv:")).count())
+            .unwrap_or(0);
+        let kv_buf_elems = m.decode_batch * m.max_seq * m.n_heads * (m.d_model / m.n_heads);
+        let weight_bytes = prefill_prog
+            .iter()
+            .chain(decode_prog.iter())
+            .map(|p| p.static_bytes())
+            .max()
+            .unwrap_or(0);
+        let spec = EngineSpec {
+            model,
+            backend: backend_name.to_string(),
+            execution: Execution::Pjrt,
+        };
+        Ok(PjrtInferenceEngine {
+            engine,
+            prefill_prog,
+            decode_prog,
+            spec,
+            weight_bytes,
+            kv_bytes_per_session: kv_inputs * kv_buf_elems * 4,
+        })
+    }
+}
+
+// SAFETY: the PJRT CPU client is documented thread-safe (PJRT's C API is
+// used behind locks), and the engine's compiled executables / device
+// buffers are opaque handles that the wrapper types never alias mutably.
+// The xla-rs newtypes don't derive Send/Sync, so we assert it here — the
+// same contract the serving layer relied on for the native path.
+unsafe impl Send for PjrtInferenceEngine {}
+unsafe impl Sync for PjrtInferenceEngine {}
+
+struct PjrtSession {
+    /// device KV (present when the tag has a decode artifact)
+    kv: Option<KvState>,
+    pos: usize,
+    max_seq: usize,
+    kv_bytes: usize,
+}
+
+// SAFETY: see PjrtInferenceEngine — device buffer handles are owned,
+// never shared, and only touched from one thread at a time through
+// `&mut self` methods.
+unsafe impl Send for PjrtSession {}
+
+impl EngineSession for PjrtSession {
+    fn pos(&self) -> usize {
+        self.pos
+    }
+
+    fn remaining(&self) -> usize {
+        self.max_seq.saturating_sub(self.pos)
+    }
+
+    fn kv_bytes(&self) -> usize {
+        self.kv_bytes
+    }
+
+    fn fork(&self) -> Result<Box<dyn EngineSession>> {
+        bail!("fork is not supported on the PJRT execution path (device-resident KV)")
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+fn downcast<'a>(s: &'a mut dyn EngineSession) -> Result<&'a mut PjrtSession> {
+    s.as_any_mut()
+        .downcast_mut::<PjrtSession>()
+        .ok_or_else(|| anyhow!("session does not belong to a PJRT engine"))
+}
+
+impl InferenceEngine for PjrtInferenceEngine {
+    fn spec(&self) -> &EngineSpec {
+        &self.spec
+    }
+
+    fn new_session(&self) -> Result<Box<dyn EngineSession>> {
+        let kv = match &self.decode_prog {
+            Some(p) => Some(p.init_kv(&self.engine.client)?),
+            None => None,
+        };
+        Ok(Box::new(PjrtSession {
+            kv,
+            pos: 0,
+            max_seq: self.spec.model.max_seq,
+            kv_bytes: self.kv_bytes_per_session,
+        }))
+    }
+
+    fn prefill(&self, tokens: &[u32], session: &mut dyn EngineSession) -> Result<Vec<f32>> {
+        let sess = downcast(session)?;
+        if sess.pos != 0 {
+            bail!("PJRT prefill requires a fresh session (pos {})", sess.pos);
+        }
+        let v = self.spec.model.vocab;
+        if let Some(dec) = &self.decode_prog {
+            // teacher-force through the decode program so the session's
+            // device KV is valid for subsequent decode_step calls; row t of
+            // the result is the next-token logits after tokens[..=t]
+            let batch = self.engine.manifest.decode_batch;
+            let kv = sess.kv.as_mut().ok_or_else(|| anyhow!("session missing device KV"))?;
+            let mut out = Vec::with_capacity(tokens.len() * v);
+            for &t in tokens {
+                let toks = vec![t as i32; batch];
+                let logits = dec.decode_step(&self.engine.client, &toks, kv)?;
+                out.extend_from_slice(&logits[..v]);
+            }
+            sess.pos = kv.pos as usize;
+            return Ok(out);
+        }
+        let prog = self
+            .prefill_prog
+            .as_ref()
+            .ok_or_else(|| anyhow!("engine has neither prefill nor decode program"))?;
+        let seq = self.engine.manifest.prefill_seq;
+        if tokens.len() > seq {
+            bail!("prefill length {} exceeds artifact sequence {seq}", tokens.len());
+        }
+        let mut padded: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        padded.resize(seq, 0); // causal: padding after the real tokens is inert
+        let logits = prog.prefill(&self.engine.client, &padded)?;
+        sess.pos = tokens.len();
+        Ok(logits[..tokens.len() * v].to_vec())
+    }
+
+    fn decode_step(
+        &self,
+        tokens: &[u32],
+        sessions: &mut [&mut dyn EngineSession],
+    ) -> Result<Vec<f32>> {
+        if tokens.len() != sessions.len() {
+            bail!("batch size mismatch: {} tokens, {} sessions", tokens.len(), sessions.len());
+        }
+        let dec = self
+            .decode_prog
+            .as_ref()
+            .ok_or_else(|| anyhow!("no decode artifact for this tag (prefill-only engine)"))?;
+        let v = self.spec.model.vocab;
+        let batch = self.engine.manifest.decode_batch;
+        let mut out = Vec::with_capacity(tokens.len() * v);
+        for (i, s) in sessions.iter_mut().enumerate() {
+            let sess = downcast(&mut **s)?;
+            let kv = sess
+                .kv
+                .as_mut()
+                .ok_or_else(|| anyhow!("session has no device KV (was prefilled one-shot)"))?;
+            let toks = vec![tokens[i] as i32; batch];
+            let logits = dec.decode_step(&self.engine.client, &toks, kv)?;
+            out.extend_from_slice(&logits[..v]);
+            sess.pos = kv.pos as usize;
+        }
+        Ok(out)
+    }
+
+    fn memory_report(&self) -> MemoryReport {
+        MemoryReport {
+            weight_bytes: self.weight_bytes,
+            kv_bytes_per_session: self.kv_bytes_per_session,
+        }
+    }
+}
+
+/// Run one named artifact end to end (the `abq-llm pjrt` subcommand) and
+/// return a human-readable summary. Lives here so the raw
+/// [`PjrtEngine::program`] API stays encapsulated inside `engine/`.
+pub fn run_artifact(dir: &Path, name: &str, steps: usize) -> Result<String> {
+    let engine = PjrtEngine::load(dir)?;
+    let pack = WeightPack::load(&dir.join("weights.abqw"))?;
+    let prog = engine.program(name, &pack)?;
+    let mut out = format!("compiled artifact '{name}'\n");
+    if name.ends_with("prefill") {
+        let s = engine.manifest.prefill_seq;
+        let table = crate::eval::corpus::build_transition_table(crate::eval::corpus::TABLE_SEED);
+        let toks = crate::eval::corpus::generate_tokens(&table, s, 42);
+        let toks_i32: Vec<i32> = toks.iter().map(|&t| t as i32).collect();
+        let t0 = std::time::Instant::now();
+        let logits = prog.prefill(&engine.client, &toks_i32)?;
+        out.push_str(&format!(
+            "prefill [{s} tokens] -> {} logits in {:.1} ms\n",
+            logits.len(),
+            t0.elapsed().as_secs_f64() * 1e3
+        ));
+    } else {
+        let mut kv = prog.init_kv(&engine.client)?;
+        let t0 = std::time::Instant::now();
+        let v = engine.manifest.vocab;
+        let mut tok = vec![1i32; engine.manifest.decode_batch];
+        for _ in 0..steps {
+            let logits = prog.decode_step(&engine.client, &tok, &mut kv)?;
+            for (b, t) in tok.iter_mut().enumerate() {
+                *t = crate::model::argmax(&logits[b * v..(b + 1) * v]) as i32;
+            }
+        }
+        out.push_str(&format!(
+            "{steps} decode steps in {:.1} ms ({:.1} ms/step)\n",
+            t0.elapsed().as_secs_f64() * 1e3,
+            t0.elapsed().as_secs_f64() * 1e3 / steps.max(1) as f64
+        ));
+    }
+    Ok(out)
+}

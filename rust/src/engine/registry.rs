@@ -1,0 +1,156 @@
+//! String-keyed backend registry: `"fp32"`, `"int8"`, `"int4"`,
+//! `"abq:w2*a8"` → a [`LinearBackend`] factory. A spec is
+//! `<family>[:<arg>]`; the arg (for `abq`, a WqAp string in the
+//! [`WAConfig`] grammar) is passed to the family's factory. Bare WqAp
+//! strings (`"w2*a8"`, `"w2sa8"`) are sugar for `abq:<spec>` so serving
+//! request tags resolve directly.
+//!
+//! Adding a precision engine is one registration:
+//!
+//! ```
+//! use std::sync::Arc;
+//! use abq_llm::engine::{BackendRegistry, Fp32Backend, LinearBackend};
+//!
+//! let mut reg = BackendRegistry::with_defaults();
+//! reg.register("my-engine", |_arg, _opts| {
+//!     Ok(Arc::new(Fp32Backend) as Arc<dyn LinearBackend>)
+//! });
+//! assert!(reg.resolve("my-engine").is_ok());
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::abq::OptLevel;
+use crate::quant::WAConfig;
+
+use super::linear::{AbqBackend, Fp32Backend, Int4Backend, Int8Backend, LinearBackend};
+
+/// Options threaded from the [`super::EngineBuilder`] into factories.
+#[derive(Clone, Copy, Debug)]
+pub struct BackendOptions {
+    /// Table-4 kernel variant for backends that honour it (the ABQ engine).
+    pub opt_level: OptLevel,
+}
+
+impl Default for BackendOptions {
+    fn default() -> Self {
+        BackendOptions { opt_level: OptLevel::Auto }
+    }
+}
+
+/// Factory for one backend family: `(arg-after-colon, options) → backend`.
+pub type BackendFactory =
+    Arc<dyn Fn(Option<&str>, &BackendOptions) -> Result<Arc<dyn LinearBackend>> + Send + Sync>;
+
+#[derive(Clone, Default)]
+pub struct BackendRegistry {
+    factories: BTreeMap<String, BackendFactory>,
+}
+
+impl BackendRegistry {
+    /// An empty registry (no families).
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// The in-tree families: `fp32` (aliases `fp16`, `fp`), `int8`,
+    /// `int4`, and `abq:<WqAp>`.
+    pub fn with_defaults() -> Self {
+        let mut r = Self::default();
+        let fp32: BackendFactory =
+            Arc::new(|_arg, _opts| Ok(Arc::new(Fp32Backend) as Arc<dyn LinearBackend>));
+        r.factories.insert("fp32".to_string(), fp32.clone());
+        r.factories.insert("fp16".to_string(), fp32.clone());
+        r.factories.insert("fp".to_string(), fp32);
+        r.register("int8", |_arg, _opts| Ok(Arc::new(Int8Backend) as Arc<dyn LinearBackend>));
+        r.register("int4", |_arg, _opts| Ok(Arc::new(Int4Backend) as Arc<dyn LinearBackend>));
+        r.register("abq", |arg, opts| {
+            let spec = arg
+                .ok_or_else(|| anyhow!("abq backend needs a config, e.g. `abq:w2*a8`"))?;
+            let cfg: WAConfig = spec.parse().map_err(|e| anyhow!("{e}"))?;
+            Ok(Arc::new(AbqBackend { cfg, opt: opts.opt_level }) as Arc<dyn LinearBackend>)
+        });
+        r
+    }
+
+    /// Register (or replace) a backend family.
+    pub fn register<F>(&mut self, family: &str, f: F)
+    where
+        F: Fn(Option<&str>, &BackendOptions) -> Result<Arc<dyn LinearBackend>>
+            + Send
+            + Sync
+            + 'static,
+    {
+        self.factories.insert(family.to_string(), Arc::new(f));
+    }
+
+    /// Registered family names.
+    pub fn families(&self) -> Vec<String> {
+        self.factories.keys().cloned().collect()
+    }
+
+    pub fn resolve(&self, spec: &str) -> Result<Arc<dyn LinearBackend>> {
+        self.resolve_with(spec, &BackendOptions::default())
+    }
+
+    /// Resolve `<family>[:<arg>]` to a prepared backend.
+    pub fn resolve_with(
+        &self,
+        spec: &str,
+        opts: &BackendOptions,
+    ) -> Result<Arc<dyn LinearBackend>> {
+        let spec = spec.trim();
+        let (family, arg) = match spec.split_once(':') {
+            Some((f, a)) => (f, Some(a)),
+            None => (spec, None),
+        };
+        if let Some(factory) = self.factories.get(family) {
+            return (factory.as_ref())(arg, opts);
+        }
+        // sugar: a bare WqAp string is an abq config ("w2sa8" request tags)
+        if arg.is_none() && spec.parse::<WAConfig>().is_ok() {
+            if let Some(factory) = self.factories.get("abq") {
+                return (factory.as_ref())(Some(spec), opts);
+            }
+        }
+        bail!(
+            "unknown backend '{spec}' (registered families: {})",
+            self.families().join(", ")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_resolve() {
+        let r = BackendRegistry::with_defaults();
+        for spec in ["fp32", "fp16", "int8", "int4", "abq:w2*a8", "abq:w2sa8", "w4a4"] {
+            assert!(r.resolve(spec).is_ok(), "{spec}");
+        }
+        assert_eq!(r.resolve("abq:w2*a8").unwrap().name(), "abq:w2*a8");
+        // bare WqAp sugar routes to the abq family
+        assert_eq!(r.resolve("w4a4").unwrap().name(), "abq:w4a4");
+    }
+
+    #[test]
+    fn unknown_and_malformed_specs_error() {
+        let r = BackendRegistry::with_defaults();
+        assert!(r.resolve("cuda").is_err());
+        assert!(r.resolve("abq").is_err()); // config required
+        assert!(r.resolve("abq:w99a99").is_err());
+    }
+
+    #[test]
+    fn custom_family_registers() {
+        let mut r = BackendRegistry::empty();
+        assert!(r.resolve("fp32").is_err());
+        r.register("fp32", |_a, _o| Ok(Arc::new(Fp32Backend) as Arc<dyn LinearBackend>));
+        assert!(r.resolve("fp32").is_ok());
+    }
+}

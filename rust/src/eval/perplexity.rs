@@ -1,21 +1,22 @@
 //! Perplexity harness (the paper's WikiText2/C4 PPL metric, on the
 //! substituted corpus — DESIGN.md §4). Teacher-forced NLL over held-out
-//! token streams through the rust-native transformer.
+//! token streams through any [`InferenceEngine`] — the native transformer
+//! or the PJRT artifact path, selected at engine build time.
 
 use anyhow::Result;
 
-use crate::model::{KvCache, Transformer};
+use crate::engine::InferenceEngine;
 
 use super::corpus;
 
 /// Mean token NLL of `seq` (teacher-forced); `seq` includes the target
 /// shift, i.e. `len >= 2`.
-pub fn sequence_nll(model: &Transformer, seq: &[u32]) -> Result<f64> {
+pub fn sequence_nll(engine: &dyn InferenceEngine, seq: &[u32]) -> Result<f64> {
     assert!(seq.len() >= 2);
-    let mut cache = KvCache::new(&model.cfg);
+    let mut session = engine.new_session()?;
     let inputs = &seq[..seq.len() - 1];
-    let logits = model.prefill(inputs, &mut cache)?;
-    let v = model.cfg.vocab;
+    let logits = engine.prefill(inputs, session.as_mut())?;
+    let v = engine.spec().model.vocab;
     let mut total = 0f64;
     for t in 0..inputs.len() {
         let row = &logits[t * v..(t + 1) * v];
@@ -26,14 +27,19 @@ pub fn sequence_nll(model: &Transformer, seq: &[u32]) -> Result<f64> {
 }
 
 /// Perplexity over `n_seqs` held-out sequences of length `seq_len`.
-pub fn perplexity(model: &Transformer, n_seqs: usize, seq_len: usize, seed: u64) -> Result<f64> {
+pub fn perplexity(
+    engine: &dyn InferenceEngine,
+    n_seqs: usize,
+    seq_len: usize,
+    seed: u64,
+) -> Result<f64> {
     let table = corpus::build_transition_table(corpus::TABLE_SEED);
     let tokens = corpus::generate_tokens(&table, n_seqs * (seq_len + 1), seed);
     let mut total = 0f64;
     let mut count = 0usize;
     for s in 0..n_seqs {
         let seq = &tokens[s * (seq_len + 1)..(s + 1) * (seq_len + 1)];
-        total += sequence_nll(model, seq)? * (seq_len as f64);
+        total += sequence_nll(engine, seq)? * (seq_len as f64);
         count += seq_len;
     }
     Ok((total / count as f64).exp())
@@ -42,7 +48,8 @@ pub fn perplexity(model: &Transformer, n_seqs: usize, seq_len: usize, seed: u64)
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::{Backend, ModelConfig, Transformer};
+    use crate::engine::EngineBuilder;
+    use crate::model::ModelConfig;
 
     const MICRO: ModelConfig = ModelConfig {
         name: "micro",
@@ -59,8 +66,9 @@ mod tests {
     fn random_model_ppl_near_vocab() {
         // an untrained model must be near the uniform bound (vocab=512);
         // random-logit models land within a small factor of it
-        let m = Transformer::random(MICRO, Backend::Fp32, 9);
-        let ppl = perplexity(&m, 2, 32, 123).unwrap();
+        let engine =
+            EngineBuilder::new().random_weights(MICRO, 9).backend("fp32").build().unwrap();
+        let ppl = perplexity(engine.as_ref(), 2, 32, 123).unwrap();
         assert!(ppl > 150.0 && ppl < 1500.0, "ppl {ppl}");
     }
 }

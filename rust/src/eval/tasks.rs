@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 
-use crate::model::{KvCache, Transformer};
+use crate::engine::{EngineSession, InferenceEngine};
 use crate::util::rng::SplitMix;
 
 use super::corpus::{self, TransitionTable, BOS, BRANCH, RESTART_POOL, VOCAB};
@@ -189,22 +189,23 @@ fn shuffle_gold_pair(choices: Vec<Vec<u32>>, rng: &mut SplitMix) -> (Vec<Vec<u32
 }
 
 /// Score one item: length-normalised continuation logprob per choice.
-pub fn score_item(model: &Transformer, item: &TaskItem) -> Result<usize> {
-    let mut cache = KvCache::new(&model.cfg);
-    let logits = model.prefill(&item.context, &mut cache)?;
-    let v = model.cfg.vocab;
+pub fn score_item(engine: &dyn InferenceEngine, item: &TaskItem) -> Result<usize> {
+    let mut session = engine.new_session()?;
+    let logits = engine.prefill(&item.context, session.as_mut())?;
+    let v = engine.spec().model.vocab;
     let last = &logits[(item.context.len() - 1) * v..item.context.len() * v];
     let mut best = (f64::NEG_INFINITY, 0usize);
     for (ci, choice) in item.choices.iter().enumerate() {
         let mut lp = crate::model::log_prob(last, choice[0] as usize) as f64;
         if choice.len() > 1 {
-            // teacher-force the rest with a cloned cache
-            let mut c2 = cache.clone();
+            // teacher-force the rest with a forked session (engines whose
+            // KV is device-resident may not support this — surface it)
+            let mut s2 = session.fork()?;
             let mut prev = choice[0];
             for &tok in &choice[1..] {
-                let mut refs = [&mut c2];
-                let step = model.decode_step(&[prev], &mut refs)?;
-                lp += crate::model::log_prob(&step, tok as usize) as f64;
+                let mut refs: [&mut dyn EngineSession; 1] = [s2.as_mut()];
+                let step = engine.decode_step(&[prev], &mut refs)?;
+                lp += crate::model::log_prob(&step[..v], tok as usize) as f64;
                 prev = tok;
             }
         }
@@ -216,13 +217,13 @@ pub fn score_item(model: &Transformer, item: &TaskItem) -> Result<usize> {
     Ok(best.1)
 }
 
-/// Accuracy of a model on one task.
-pub fn accuracy(model: &Transformer, task: Task, n: usize, seed: u64) -> Result<f64> {
+/// Accuracy of an engine on one task.
+pub fn accuracy(engine: &dyn InferenceEngine, task: Task, n: usize, seed: u64) -> Result<f64> {
     let table = corpus::build_transition_table(corpus::TABLE_SEED);
     let items = generate_items(&table, task, n, seed);
     let mut correct = 0usize;
     for item in &items {
-        if score_item(model, item)? == item.gold {
+        if score_item(engine, item)? == item.gold {
             correct += 1;
         }
     }

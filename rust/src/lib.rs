@@ -3,21 +3,59 @@
 //! Rust + JAX + Pallas three-layer reproduction of *ABQ-LLM: Arbitrary-Bit
 //! Quantized Inference Acceleration for Large Language Models* (AAAI 2025).
 //!
+//! ## The unified engine API
+//!
+//! Everything is constructed through [`engine::EngineBuilder`] and consumed
+//! through the object-safe [`engine::InferenceEngine`] trait — the serving
+//! coordinator, the eval harnesses and the benches never touch a concrete
+//! model type:
+//!
+//! ```no_run
+//! use abq_llm::engine::{EngineBuilder, InferenceEngine, OptLevel};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let engine = EngineBuilder::new()
+//!     .weights("artifacts")        // `make artifacts`
+//!     .backend("abq:w2*a8")        // or "fp32" / "int8" / "int4" / any WqAp
+//!     .opt_level(OptLevel::Auto)   // Table-4 kernel ladder position
+//!     .threads(8)
+//!     .build()?;
+//! let mut session = engine.new_session()?;
+//! let logits = engine.prefill(&[1, 2, 3], session.as_mut())?;
+//! # let _ = logits;
+//! # Ok(()) }
+//! ```
+//!
+//! Precision backends live in a string-keyed registry
+//! ([`engine::BackendRegistry`]); adding one is a single
+//! `registry.register(...)` call — see `docs/ENGINE_API.md` for the
+//! migration table from the old closed `Backend` enum and a worked
+//! "add your own backend" example.
+//!
+//! ## Module map
+//!
+//! * [`engine`] — the unified API: `LinearBackend` registry,
+//!   `InferenceEngine`/`EngineSession`, `EngineBuilder`; native and PJRT
+//!   execution paths
 //! * [`abq`] — the arbitrary-bit engine: every WqAp GEMM decomposed into
 //!   p×q 1-bit matmuls (BMMA ≙ AND+POPCNT) with Bit Reduction, GEMV
 //!   elimination, pipelining and auto kernel search (paper §3.4, App. B/D)
 //! * [`quant`] — quantizers, bit-balance strategy, balance vectors
 //! * [`baselines`] — FP16/W8A8/W4A4 comparator engines with MMA padding
-//! * [`model`] — LLaMA-family transformer on pluggable GEMM backends
+//! * [`model`] — LLaMA-family transformer over registry-prepared projections
 //! * [`coordinator`] — serving: router, dynamic batcher, scheduler, KV cache
-//! * [`runtime`] — PJRT executor for the AOT HLO artifacts (jax/pallas L2+L1)
+//! * [`runtime`] — PJRT executor for the AOT HLO artifacts (jax/pallas
+//!   L2+L1); compiled with `--features pjrt`
 //! * [`eval`] — synthetic corpus, perplexity, zero-shot harness
 //! * [`util`] — offline substrates (thread pool, JSON, CLI, bench, proptest)
+
 pub mod abq;
 pub mod baselines;
 pub mod coordinator;
+pub mod engine;
 pub mod eval;
 pub mod model;
 pub mod quant;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod util;

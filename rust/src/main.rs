@@ -8,20 +8,21 @@
 //!   gemm     [--m --n --k --w --a] one arbitrary-bit GEMM timing
 //!   pjrt     [--artifact NAME]   run a PJRT artifact end to end
 //!
-//! Backends: `--backend fp32|int8|int4|abq` (abq takes `--config`).
+//! Backends: `--backend fp32|int8|int4|abq` (abq takes `--config`), or a
+//! full registry spec directly: `--backend abq:w3a8`. All model
+//! construction goes through `engine::EngineBuilder`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 
 use abq_llm::abq::{BitPlanes, OptLevel};
 use abq_llm::coordinator::{Request, Server, ServerConfig};
+use abq_llm::engine::{backend_tag, EngineBuilder, InferenceEngine};
 use abq_llm::eval;
-use abq_llm::model::{Backend, Transformer, WeightPack};
-use abq_llm::quant::WAConfig;
 use abq_llm::util::cli::Args;
 use abq_llm::util::json::{self, Json};
 
@@ -29,27 +30,29 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or("artifacts", "artifacts"))
 }
 
-fn backend_from(args: &Args) -> Result<Backend> {
-    Ok(match args.get_or("backend", "abq").as_str() {
-        "fp32" | "fp16" => Backend::Fp32,
-        "int8" => Backend::Int8,
-        "int4" => Backend::Int4,
-        "abq" => {
-            let cfg: WAConfig = args
-                .get_or("config", "w2*a8")
-                .parse()
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
-            Backend::Abq(cfg)
-        }
-        other => bail!("unknown backend '{other}'"),
+/// `--backend`/`--config` → registry spec string (`fp32`, `abq:w2*a8`, ...).
+fn backend_spec(args: &Args) -> Result<String> {
+    let backend = args.get_or("backend", "abq");
+    Ok(match backend.as_str() {
+        "fp32" | "fp16" => "fp32".to_string(),
+        "int8" => "int8".to_string(),
+        "int4" => "int4".to_string(),
+        "abq" => format!("abq:{}", args.get_or("config", "w2*a8")),
+        // anything else is a full spec already ("abq:w3a8", "w2sa8", ...)
+        other => other.to_string(),
     })
 }
 
-fn load_model(args: &Args) -> Result<Transformer> {
-    let dir = artifacts_dir(args);
-    let backend = backend_from(args)?;
-    Transformer::load_artifacts(&dir, backend)
-        .with_context(|| format!("load artifacts from {dir:?} (run `make artifacts`)"))
+fn builder_from(args: &Args) -> Result<EngineBuilder> {
+    let mut b = EngineBuilder::new().weights(artifacts_dir(args)).backend(backend_spec(args)?);
+    if let Some(n) = args.get("threads").and_then(|v| v.parse::<usize>().ok()) {
+        b = b.threads(n);
+    }
+    Ok(b)
+}
+
+fn load_engine(args: &Args) -> Result<Box<dyn InferenceEngine>> {
+    builder_from(args)?.build()
 }
 
 fn main() -> Result<()> {
@@ -64,7 +67,7 @@ fn main() -> Result<()> {
         _ => {
             eprintln!(
                 "usage: abq-llm <info|serve|eval|zeroshot|gemm|pjrt> [--artifacts DIR] \
-                 [--backend fp32|int8|int4|abq] [--config w2*a8] ..."
+                 [--backend fp32|int8|int4|abq] [--config w2*a8] [--threads N] ..."
             );
             Ok(())
         }
@@ -73,9 +76,16 @@ fn main() -> Result<()> {
 
 fn cmd_info(args: &Args) -> Result<()> {
     println!("abq-llm — arbitrary-bit quantized inference (ABQ-LLM reproduction)");
+    #[cfg(feature = "pjrt")]
     println!(
         "pjrt cpu client: {}",
         if abq_llm::runtime::pjrt_cpu_ok() { "ok" } else { "UNAVAILABLE" }
+    );
+    #[cfg(not(feature = "pjrt"))]
+    println!("pjrt cpu client: disabled (rebuild with --features pjrt)");
+    println!(
+        "registered backends: {}",
+        abq_llm::engine::BackendRegistry::with_defaults().families().join(", ")
     );
     let dir = artifacts_dir(args);
     match std::fs::read_to_string(dir.join("manifest.json")) {
@@ -104,24 +114,24 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
-    let model = load_model(args)?;
+    let engine = load_engine(args)?;
     let n = args.get_usize("seqs", 16);
     let len = args.get_usize("seq-len", 128);
-    let ppl = eval::perplexity(&model, n, len, eval::corpus::EVAL_SEED)?;
+    let ppl = eval::perplexity(engine.as_ref(), n, len, eval::corpus::EVAL_SEED)?;
     println!(
-        "backend={:?} held-out perplexity over {n}x{len} tokens: {ppl:.3}",
-        model.backend
+        "backend={} held-out perplexity over {n}x{len} tokens: {ppl:.3}",
+        engine.spec().backend
     );
     Ok(())
 }
 
 fn cmd_zeroshot(args: &Args) -> Result<()> {
-    let model = load_model(args)?;
+    let engine = load_engine(args)?;
     let n = args.get_usize("items", 50);
-    println!("zero-shot suite, backend={:?}, {n} items/task", model.backend);
+    println!("zero-shot suite, backend={}, {n} items/task", engine.spec().backend);
     let mut total = 0.0;
     for task in eval::ALL_TASKS {
-        let acc = eval::accuracy(&model, task, n, 11)?;
+        let acc = eval::accuracy(engine.as_ref(), task, n, 11)?;
         total += acc;
         println!("  {:<18} {:5.1}%", eval::task_name(task), acc * 100.0);
     }
@@ -166,44 +176,21 @@ fn cmd_gemm(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_pjrt(args: &Args) -> Result<()> {
+    use anyhow::Context as _;
     let dir = artifacts_dir(args);
-    let engine = abq_llm::runtime::PjrtEngine::load(&dir)?;
-    let pack = WeightPack::load(&dir.join("weights.abqw"))?;
     let name = args.get_or("artifact", "model_fp16_prefill");
-    let prog = engine.program(&name, &pack)?;
-    println!("compiled artifact '{name}'");
-    if name.ends_with("prefill") {
-        let s = engine.manifest.prefill_seq;
-        let table = eval::corpus::build_transition_table(eval::corpus::TABLE_SEED);
-        let toks = eval::corpus::generate_tokens(&table, s, 42);
-        let toks_i32: Vec<i32> = toks.iter().map(|&t| t as i32).collect();
-        let t0 = std::time::Instant::now();
-        let logits = prog.prefill(&engine.client, &toks_i32)?;
-        println!(
-            "prefill [{s} tokens] -> {} logits in {:.1} ms",
-            logits.len(),
-            t0.elapsed().as_secs_f64() * 1e3
-        );
-    } else {
-        let mut kv = prog.init_kv(&engine.client)?;
-        let t0 = std::time::Instant::now();
-        let steps = args.get_usize("steps", 8);
-        let mut tok = vec![1i32; engine.manifest.decode_batch];
-        for _ in 0..steps {
-            let logits = prog.decode_step(&engine.client, &tok, &mut kv)?;
-            let v = engine.manifest.vocab;
-            for b in 0..engine.manifest.decode_batch {
-                tok[b] = abq_llm::model::argmax(&logits[b * v..(b + 1) * v]) as i32;
-            }
-        }
-        println!(
-            "{steps} decode steps in {:.1} ms ({:.1} ms/step)",
-            t0.elapsed().as_secs_f64() * 1e3,
-            t0.elapsed().as_secs_f64() * 1e3 / steps as f64
-        );
-    }
+    let steps = args.get_usize("steps", 8);
+    let summary = abq_llm::engine::pjrt::run_artifact(&dir, &name, steps)
+        .with_context(|| format!("run PJRT artifact '{name}'"))?;
+    print!("{summary}");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_pjrt(_args: &Args) -> Result<()> {
+    anyhow::bail!("this build has no PJRT support (rebuild with `--features pjrt`)")
 }
 
 /// TCP line-protocol server: one JSON object per line.
@@ -212,22 +199,31 @@ fn cmd_pjrt(args: &Args) -> Result<()> {
 ///            "decode_us": ..}`
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7070");
-    let dir = artifacts_dir(args);
-    // load requested replicas: default = the ABQ config + fp16 for A/B
-    let mut replicas = Vec::new();
-    let abq_cfg: WAConfig =
-        args.get_or("config", "w2*a8").parse().map_err(|e| anyhow::anyhow!("{e}"))?;
-    let abq_model = Transformer::load_artifacts(&dir, Backend::Abq(abq_cfg))?;
-    replicas.push((abq_cfg.tag(), Arc::new(abq_model)));
-    if !args.has_flag("no-fp16") {
-        let fp = Transformer::load_artifacts(&dir, Backend::Fp32)?;
-        replicas.push(("fp16".to_string(), Arc::new(fp)));
+    // load requested replicas: default = the requested backend + fp16 for
+    // A/B. Backends without a WqAp artifact tag (int8, int4) route under
+    // their spec string.
+    let mut replicas: Vec<(String, Arc<dyn InferenceEngine>)> = Vec::new();
+    let primary_spec = backend_spec(args)?;
+    let primary_tag = backend_tag(&primary_spec).unwrap_or_else(|_| primary_spec.clone());
+    let primary_engine = builder_from(args)?.build_arc()?;
+    replicas.push((primary_tag.clone(), primary_engine));
+    if !args.has_flag("no-fp16") && primary_tag != "fp16" {
+        let fp = builder_from(args)?.backend("fp32").build_arc()?;
+        replicas.push(("fp16".to_string(), fp));
     }
     let default_tag = replicas[0].0.clone();
     println!(
         "serving {} on {addr} (default config {default_tag})",
         replicas.iter().map(|(t, _)| t.as_str()).collect::<Vec<_>>().join(", ")
     );
+    for (tag, engine) in &replicas {
+        let mem = engine.memory_report();
+        println!(
+            "  replica {tag}: {:.2} MB weights, {:.2} MB KV/session",
+            mem.weight_bytes as f64 / 1e6,
+            mem.kv_bytes_per_session as f64 / 1e6
+        );
+    }
     let server = Server::start(replicas, ServerConfig { default_tag, ..Default::default() })?;
 
     let listener = TcpListener::bind(&addr)?;

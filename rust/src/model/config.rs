@@ -55,6 +55,28 @@ impl ModelConfig {
     pub fn kv_bytes(&self, seq: usize) -> f64 {
         (2 * self.n_layers * seq * self.d_model) as f64 * 2.0
     }
+
+    /// Parse the `model` block of an artifacts `manifest.json` (shared by
+    /// the native and PJRT loaders in `engine/`).
+    pub fn from_manifest(j: &crate::util::json::Json) -> anyhow::Result<Self> {
+        use anyhow::Context;
+        let need = |field: &'static str| {
+            j.at(&["model", field]).and_then(|v| v.as_usize()).context(field)
+        };
+        Ok(ModelConfig {
+            name: "tiny-llama",
+            vocab: need("vocab")?,
+            d_model: need("d_model")?,
+            n_layers: need("n_layers")?,
+            n_heads: need("n_heads")?,
+            d_ff: need("d_ff")?,
+            max_seq: need("max_seq")?,
+            rope_base: j
+                .at(&["model", "rope_base"])
+                .and_then(|v| v.as_f64())
+                .context("rope_base")? as f32,
+        })
+    }
 }
 
 /// The tiny model trained by `python/compile/train_tiny.py` (must match

@@ -4,15 +4,16 @@
 //! the jax model's perplexity and the ABQ path reproduces the calibrated
 //! quantized model (parity asserted in rust/tests/).
 //!
-//! Every projection is a [`LinearOp`]: fp32 baseline, padded INT8/INT4
-//! TensorCore stand-ins, or the ABQ bit-plane engine — the axis the
-//! end-to-end benches (Fig. 6 / Table 12) sweep.
+//! Every projection is a [`crate::engine::LinearOp`] prepared by a
+//! [`crate::engine::LinearBackend`] from the registry — the axis the
+//! end-to-end benches (Fig. 6 / Table 12) sweep. Construction happens
+//! through [`crate::engine::EngineBuilder`]; this type is the native
+//! execution substrate behind the `InferenceEngine` trait.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
-use crate::abq::{OptLevel, QuantizedLinear};
-use crate::baselines::{gemm_fp32, Int4Gemm, Int8Gemm};
-use crate::quant::WAConfig;
+use crate::baselines::gemm_fp32;
+use crate::engine::{LinearBackend, LinearOp, PrepareCtx};
 
 use super::config::ModelConfig;
 use super::kv_cache::KvCache;
@@ -20,69 +21,28 @@ use super::weights::WeightPack;
 
 pub const LINEAR_NAMES: [&str; 7] = ["wq", "wk", "wv", "wo", "gate", "up", "down"];
 
-/// Execution backend for the block linears.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum Backend {
-    /// fp32 GEMM ("FP16" row of Fig. 6)
-    Fp32,
-    /// padded INT8 GEMM ("SmoothQuant W8A8" row)
-    Int8,
-    /// padded INT4 GEMM ("CUTLASS W4A4" row)
-    Int4,
-    /// the ABQ engine at an arbitrary WqAp config
-    Abq(WAConfig),
-}
-
-/// One projection, prepared for its backend.
-pub enum LinearOp {
-    Fp32 { w: Vec<f32>, out_f: usize, in_f: usize },
-    Int8(Int8Gemm),
-    Int4(Int4Gemm),
-    Abq(QuantizedLinear),
-}
-
-impl LinearOp {
-    pub fn forward(&self, x: &[f32], tokens: usize) -> Vec<f32> {
-        match self {
-            LinearOp::Fp32 { w, out_f, in_f } => gemm_fp32(x, w, tokens, *out_f, *in_f),
-            LinearOp::Int8(g) => g.forward(x, tokens),
-            LinearOp::Int4(g) => g.forward(x, tokens),
-            LinearOp::Abq(q) => q.forward(x, tokens, OptLevel::Auto),
-        }
-    }
-
-    pub fn weight_bytes(&self) -> usize {
-        match self {
-            LinearOp::Fp32 { w, .. } => w.len() * 4,
-            LinearOp::Int8(g) => g.weight_bytes(),
-            LinearOp::Int4(g) => g.weight_bytes(),
-            LinearOp::Abq(q) => q.weight_bytes(),
-        }
-    }
-}
-
 pub struct Block {
     pub ln1: Vec<f32>,
     pub ln2: Vec<f32>,
-    pub wq: LinearOp,
-    pub wk: LinearOp,
-    pub wv: LinearOp,
-    pub wo: LinearOp,
-    pub gate: LinearOp,
-    pub up: LinearOp,
-    pub down: LinearOp,
+    pub wq: Box<dyn LinearOp>,
+    pub wk: Box<dyn LinearOp>,
+    pub wv: Box<dyn LinearOp>,
+    pub wo: Box<dyn LinearOp>,
+    pub gate: Box<dyn LinearOp>,
+    pub up: Box<dyn LinearOp>,
+    pub down: Box<dyn LinearOp>,
 }
 
 impl Block {
-    pub fn linear(&self, name: &str) -> &LinearOp {
+    pub fn linear(&self, name: &str) -> &dyn LinearOp {
         match name {
-            "wq" => &self.wq,
-            "wk" => &self.wk,
-            "wv" => &self.wv,
-            "wo" => &self.wo,
-            "gate" => &self.gate,
-            "up" => &self.up,
-            "down" => &self.down,
+            "wq" => self.wq.as_ref(),
+            "wk" => self.wk.as_ref(),
+            "wv" => self.wv.as_ref(),
+            "wo" => self.wo.as_ref(),
+            "gate" => self.gate.as_ref(),
+            "up" => self.up.as_ref(),
+            "down" => self.down.as_ref(),
             _ => panic!("unknown linear {name}"),
         }
     }
@@ -90,7 +50,8 @@ impl Block {
 
 pub struct Transformer {
     pub cfg: ModelConfig,
-    pub backend: Backend,
+    /// canonical spec of the backend the blocks were prepared with
+    pub backend_name: String,
     pub tok_emb: Vec<f32>,
     pub blocks: Vec<Block>,
     pub ln_f: Vec<f32>,
@@ -166,51 +127,68 @@ fn softmax_inplace(row: &mut [f32]) {
     }
 }
 
+/// Per-forward scratch: one buffer per projection role, reused across all
+/// layers (and, within a layer, across the 7 block projections) instead of
+/// allocating a fresh `Vec` per projection per step.
+struct Scratch {
+    h: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    ctx: Vec<f32>,
+    proj: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    act: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(tokens: usize, d: usize, d_ff: usize) -> Self {
+        Scratch {
+            h: vec![0f32; tokens * d],
+            q: vec![0f32; tokens * d],
+            k: vec![0f32; tokens * d],
+            v: vec![0f32; tokens * d],
+            ctx: vec![0f32; tokens * d],
+            proj: vec![0f32; tokens * d],
+            gate: vec![0f32; tokens * d_ff],
+            up: vec![0f32; tokens * d_ff],
+            act: vec![0f32; tokens * d_ff],
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // construction
 // ---------------------------------------------------------------------------
 
 impl Transformer {
-    /// Build from a weight pack. For `Backend::Abq`, calibrated codes for
-    /// the config's tag are used when present in the pack (falling back to
-    /// RTN from the fp weights otherwise, e.g. for sweep configs that were
-    /// not calibrated offline).
-    pub fn from_pack(pack: &WeightPack, cfg: ModelConfig, backend: Backend) -> Result<Self> {
+    /// Build from a weight pack, preparing every projection with
+    /// `backend`. Backends that load calibrated state (the ABQ engine)
+    /// receive the pack through the [`PrepareCtx`].
+    pub fn from_pack(
+        pack: &WeightPack,
+        cfg: ModelConfig,
+        backend: &dyn LinearBackend,
+    ) -> Result<Self> {
         let tok_emb = pack.f32("tok_emb")?;
         let ln_f = pack.f32("ln_f")?;
         let head = pack.f32("head")?;
         let mut blocks = Vec::with_capacity(cfg.n_layers);
         for i in 0..cfg.n_layers {
-            let get_lin = |name: &str| -> Result<LinearOp> {
+            let get_lin = |name: &str| -> Result<Box<dyn LinearOp>> {
                 let wt = pack.get(&format!("blocks.{i}.{name}"))?;
                 let shape = wt.shape().to_vec();
                 if shape.len() != 2 {
                     bail!("linear {name} must be 2-D");
                 }
                 let (out_f, in_f) = (shape[0], shape[1]);
-                let w = wt.as_f32()?.to_vec();
-                Ok(match backend {
-                    Backend::Fp32 => LinearOp::Fp32 { w, out_f, in_f },
-                    Backend::Int8 => LinearOp::Int8(Int8Gemm::from_weights(&w, out_f, in_f)),
-                    Backend::Int4 => LinearOp::Int4(Int4Gemm::from_weights(&w, out_f, in_f)),
-                    Backend::Abq(wa) => {
-                        let base = format!("q.{}.{i}.{name}", wa.tag());
-                        if let Ok(codes_t) = pack.get(&format!("{base}.wq")) {
-                            let codes = codes_t.as_u8()?;
-                            let zw = pack.get(&format!("{base}.zw"))?.as_i32()?.to_vec();
-                            let dw = pack.get(&format!("{base}.dw"))?.as_f32()?.to_vec();
-                            let balance = pack
-                                .get(&format!("{base}.s"))
-                                .ok()
-                                .and_then(|t| t.as_f32().ok().map(|v| v.to_vec()));
-                            LinearOp::Abq(QuantizedLinear::from_codes(
-                                codes, out_f, in_f, zw, dw, balance, wa,
-                            ))
-                        } else {
-                            LinearOp::Abq(QuantizedLinear::from_weights_rtn(&w, out_f, in_f, wa))
-                        }
-                    }
-                })
+                backend.prepare(
+                    wt.as_f32()?,
+                    out_f,
+                    in_f,
+                    &PrepareCtx { pack: Some(pack), layer: i, name },
+                )
             };
             blocks.push(Block {
                 ln1: pack.f32(&format!("blocks.{i}.ln1"))?,
@@ -224,11 +202,18 @@ impl Transformer {
                 down: get_lin("down")?,
             });
         }
-        Ok(Transformer { cfg, backend, tok_emb, blocks, ln_f, head })
+        Ok(Transformer {
+            cfg,
+            backend_name: backend.name(),
+            tok_emb,
+            blocks,
+            ln_f,
+            head,
+        })
     }
 
     /// Random-weight model (benches at real LLaMA layer shapes).
-    pub fn random(cfg: ModelConfig, backend: Backend, seed: u64) -> Self {
+    pub fn random(cfg: ModelConfig, backend: &dyn LinearBackend, seed: u64) -> Result<Self> {
         let rng = std::cell::RefCell::new(crate::util::rng::SplitMix::new(seed));
         let d = cfg.d_model;
         let dense = |out_f: usize, in_f: usize| -> Vec<f32> {
@@ -240,27 +225,29 @@ impl Transformer {
         let head: Vec<f32> = dense(cfg.vocab, d).iter().map(|v| v * 0.08).collect();
         let mut blocks = Vec::with_capacity(cfg.n_layers);
         for _ in 0..cfg.n_layers {
-            let mk = |w: Vec<f32>, out_f: usize, in_f: usize| match backend {
-                Backend::Fp32 => LinearOp::Fp32 { w, out_f, in_f },
-                Backend::Int8 => LinearOp::Int8(Int8Gemm::from_weights(&w, out_f, in_f)),
-                Backend::Int4 => LinearOp::Int4(Int4Gemm::from_weights(&w, out_f, in_f)),
-                Backend::Abq(wa) => {
-                    LinearOp::Abq(QuantizedLinear::from_weights_rtn(&w, out_f, in_f, wa))
-                }
+            let mk = |w: Vec<f32>, out_f: usize, in_f: usize| -> Result<Box<dyn LinearOp>> {
+                backend.prepare(&w, out_f, in_f, &PrepareCtx::none())
             };
             blocks.push(Block {
                 ln1: vec![1.0; d],
                 ln2: vec![1.0; d],
-                wq: mk(dense(d, d), d, d),
-                wk: mk(dense(d, d), d, d),
-                wv: mk(dense(d, d), d, d),
-                wo: mk(dense(d, d), d, d),
-                gate: mk(dense(cfg.d_ff, d), cfg.d_ff, d),
-                up: mk(dense(cfg.d_ff, d), cfg.d_ff, d),
-                down: mk(dense(d, cfg.d_ff), d, cfg.d_ff),
+                wq: mk(dense(d, d), d, d)?,
+                wk: mk(dense(d, d), d, d)?,
+                wv: mk(dense(d, d), d, d)?,
+                wo: mk(dense(d, d), d, d)?,
+                gate: mk(dense(cfg.d_ff, d), cfg.d_ff, d)?,
+                up: mk(dense(cfg.d_ff, d), cfg.d_ff, d)?,
+                down: mk(dense(d, cfg.d_ff), d, cfg.d_ff)?,
             });
         }
-        Transformer { cfg, backend, tok_emb, blocks, ln_f: vec![1.0; d], head }
+        Ok(Transformer {
+            cfg,
+            backend_name: backend.name(),
+            tok_emb,
+            blocks,
+            ln_f: vec![1.0; d],
+            head,
+        })
     }
 
     // -----------------------------------------------------------------------
@@ -287,25 +274,25 @@ impl Transformer {
         let pos0 = cache.pos;
         let (cos, sin) = rope_tables(&self.cfg, pos0, s_len);
         let mut x = self.embed(tokens);
-        let mut h = vec![0f32; s_len * d];
+        let mut s = Scratch::new(s_len, d, self.cfg.d_ff);
         let scale = 1.0 / (hd as f32).sqrt();
 
         for (li, blk) in self.blocks.iter().enumerate() {
-            rmsnorm(&x, &blk.ln1, &mut h);
-            let mut q = blk.wq.forward(&h, s_len);
-            let mut k = blk.wk.forward(&h, s_len);
-            let v = blk.wv.forward(&h, s_len);
-            apply_rope(&mut q, &self.cfg, &cos, &sin, s_len);
-            apply_rope(&mut k, &self.cfg, &cos, &sin, s_len);
+            rmsnorm(&x, &blk.ln1, &mut s.h);
+            blk.wq.forward(&s.h, s_len, &mut s.q);
+            blk.wk.forward(&s.h, s_len, &mut s.k);
+            blk.wv.forward(&s.h, s_len, &mut s.v);
+            apply_rope(&mut s.q, &self.cfg, &cos, &sin, s_len);
+            apply_rope(&mut s.k, &self.cfg, &cos, &sin, s_len);
             for t in 0..s_len {
-                cache.write(li, pos0 + t, &k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+                cache.write(li, pos0 + t, &s.k[t * d..(t + 1) * d], &s.v[t * d..(t + 1) * d]);
             }
             // causal attention over cache [0, pos0+t]
-            let mut ctx = vec![0f32; s_len * d];
+            s.ctx.fill(0.0);
             for t in 0..s_len {
                 let keys = pos0 + t + 1;
                 for hh in 0..nh {
-                    let qv = &q[t * d + hh * hd..t * d + (hh + 1) * hd];
+                    let qv = &s.q[t * d + hh * hd..t * d + (hh + 1) * hd];
                     let mut scores = vec![0f32; keys];
                     for kp in 0..keys {
                         let kr = cache.k_row(li, kp);
@@ -313,7 +300,7 @@ impl Transformer {
                         scores[kp] = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
                     }
                     softmax_inplace(&mut scores);
-                    let crow = &mut ctx[t * d + hh * hd..t * d + (hh + 1) * hd];
+                    let crow = &mut s.ctx[t * d + hh * hd..t * d + (hh + 1) * hd];
                     for kp in 0..keys {
                         let vr = cache.v_row(li, kp);
                         let vv = &vr[hh * hd..(hh + 1) * hd];
@@ -324,17 +311,19 @@ impl Transformer {
                     }
                 }
             }
-            let attn_out = blk.wo.forward(&ctx, s_len);
+            blk.wo.forward(&s.ctx, s_len, &mut s.proj);
             for i in 0..x.len() {
-                x[i] += attn_out[i];
+                x[i] += s.proj[i];
             }
-            rmsnorm(&x, &blk.ln2, &mut h);
-            let g = blk.gate.forward(&h, s_len);
-            let u = blk.up.forward(&h, s_len);
-            let act: Vec<f32> = g.iter().zip(&u).map(|(a, b)| silu(*a) * b).collect();
-            let mlp_out = blk.down.forward(&act, s_len);
+            rmsnorm(&x, &blk.ln2, &mut s.h);
+            blk.gate.forward(&s.h, s_len, &mut s.gate);
+            blk.up.forward(&s.h, s_len, &mut s.up);
+            for i in 0..s.act.len() {
+                s.act[i] = silu(s.gate[i]) * s.up[i];
+            }
+            blk.down.forward(&s.act, s_len, &mut s.proj);
             for i in 0..x.len() {
-                x[i] += mlp_out[i];
+                x[i] += s.proj[i];
             }
         }
         cache.pos = pos0 + s_len;
@@ -353,26 +342,26 @@ impl Transformer {
         let (d, hd, nh) = (self.cfg.d_model, self.cfg.head_dim(), self.cfg.n_heads);
         let scale = 1.0 / (hd as f32).sqrt();
         let mut x = self.embed(tokens);
-        let mut h = vec![0f32; b * d];
+        let mut s = Scratch::new(b, d, self.cfg.d_ff);
 
         for (li, blk) in self.blocks.iter().enumerate() {
-            rmsnorm(&x, &blk.ln1, &mut h);
-            let mut q = blk.wq.forward(&h, b);
-            let mut k = blk.wk.forward(&h, b);
-            let v = blk.wv.forward(&h, b);
+            rmsnorm(&x, &blk.ln1, &mut s.h);
+            blk.wq.forward(&s.h, b, &mut s.q);
+            blk.wk.forward(&s.h, b, &mut s.k);
+            blk.wv.forward(&s.h, b, &mut s.v);
             // per-sequence rope at its own position
             for (bi, cache) in caches.iter().enumerate() {
                 let (cos, sin) = rope_tables(&self.cfg, cache.pos, 1);
-                apply_rope(&mut q[bi * d..(bi + 1) * d], &self.cfg, &cos, &sin, 1);
-                apply_rope(&mut k[bi * d..(bi + 1) * d], &self.cfg, &cos, &sin, 1);
+                apply_rope(&mut s.q[bi * d..(bi + 1) * d], &self.cfg, &cos, &sin, 1);
+                apply_rope(&mut s.k[bi * d..(bi + 1) * d], &self.cfg, &cos, &sin, 1);
             }
-            let mut ctx = vec![0f32; b * d];
+            s.ctx.fill(0.0);
             for (bi, cache) in caches.iter_mut().enumerate() {
                 let pos = cache.pos;
-                cache.write(li, pos, &k[bi * d..(bi + 1) * d], &v[bi * d..(bi + 1) * d]);
+                cache.write(li, pos, &s.k[bi * d..(bi + 1) * d], &s.v[bi * d..(bi + 1) * d]);
                 let keys = pos + 1;
                 for hh in 0..nh {
-                    let qv = &q[bi * d + hh * hd..bi * d + (hh + 1) * hd];
+                    let qv = &s.q[bi * d + hh * hd..bi * d + (hh + 1) * hd];
                     let mut scores = vec![0f32; keys];
                     for kp in 0..keys {
                         let kr = cache.k_row(li, kp);
@@ -380,7 +369,7 @@ impl Transformer {
                         scores[kp] = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
                     }
                     softmax_inplace(&mut scores);
-                    let crow = &mut ctx[bi * d + hh * hd..bi * d + (hh + 1) * hd];
+                    let crow = &mut s.ctx[bi * d + hh * hd..bi * d + (hh + 1) * hd];
                     for kp in 0..keys {
                         let vr = cache.v_row(li, kp);
                         let vv = &vr[hh * hd..(hh + 1) * hd];
@@ -391,17 +380,19 @@ impl Transformer {
                     }
                 }
             }
-            let attn_out = blk.wo.forward(&ctx, b);
+            blk.wo.forward(&s.ctx, b, &mut s.proj);
             for i in 0..x.len() {
-                x[i] += attn_out[i];
+                x[i] += s.proj[i];
             }
-            rmsnorm(&x, &blk.ln2, &mut h);
-            let g = blk.gate.forward(&h, b);
-            let u = blk.up.forward(&h, b);
-            let act: Vec<f32> = g.iter().zip(&u).map(|(a, b)| silu(*a) * b).collect();
-            let mlp_out = blk.down.forward(&act, b);
+            rmsnorm(&x, &blk.ln2, &mut s.h);
+            blk.gate.forward(&s.h, b, &mut s.gate);
+            blk.up.forward(&s.h, b, &mut s.up);
+            for i in 0..s.act.len() {
+                s.act[i] = silu(s.gate[i]) * s.up[i];
+            }
+            blk.down.forward(&s.act, b, &mut s.proj);
             for i in 0..x.len() {
-                x[i] += mlp_out[i];
+                x[i] += s.proj[i];
             }
         }
         for cache in caches.iter_mut() {
@@ -423,33 +414,14 @@ impl Transformer {
             .sum();
         blocks + (self.tok_emb.len() + self.head.len() + self.ln_f.len()) * 4
     }
-
-    /// Load the pack + manifest from an artifacts directory.
-    pub fn load_artifacts(dir: &std::path::Path, backend: Backend) -> Result<Self> {
-        let pack = WeightPack::load(&dir.join("weights.abqw"))?;
-        let manifest = std::fs::read_to_string(dir.join("manifest.json"))
-            .context("read manifest.json")?;
-        let j = crate::util::json::Json::parse(&manifest)
-            .map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
-        let cfg = super::config::ModelConfig {
-            name: "tiny-llama",
-            vocab: j.at(&["model", "vocab"]).and_then(|v| v.as_usize()).context("vocab")?,
-            d_model: j.at(&["model", "d_model"]).and_then(|v| v.as_usize()).context("d_model")?,
-            n_layers: j.at(&["model", "n_layers"]).and_then(|v| v.as_usize()).context("n_layers")?,
-            n_heads: j.at(&["model", "n_heads"]).and_then(|v| v.as_usize()).context("n_heads")?,
-            d_ff: j.at(&["model", "d_ff"]).and_then(|v| v.as_usize()).context("d_ff")?,
-            max_seq: j.at(&["model", "max_seq"]).and_then(|v| v.as_usize()).context("max_seq")?,
-            rope_base: j.at(&["model", "rope_base"]).and_then(|v| v.as_f64()).context("rope_base")?
-                as f32,
-        };
-        Self::from_pack(&pack, cfg, backend)
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::{AbqBackend, Fp32Backend};
     use crate::model::config::ModelConfig;
+    use crate::quant::WAConfig;
 
     const MICRO: ModelConfig = ModelConfig {
         name: "micro",
@@ -466,7 +438,7 @@ mod tests {
     fn prefill_then_decode_matches_prefill_of_longer_seq() {
         // teacher-forcing consistency: prefill(t0..t3) then decode(t4)
         // must give the same final-position logits as prefill(t0..t4)
-        let m = Transformer::random(MICRO, Backend::Fp32, 7);
+        let m = Transformer::random(MICRO, &Fp32Backend, 7).unwrap();
         let toks = [1u32, 5, 9, 13, 21];
         let mut c1 = KvCache::new(&MICRO);
         let logits_full = m.prefill(&toks, &mut c1).unwrap();
@@ -483,7 +455,7 @@ mod tests {
 
     #[test]
     fn batched_decode_matches_individual() {
-        let m = Transformer::random(MICRO, Backend::Fp32, 3);
+        let m = Transformer::random(MICRO, &Fp32Backend, 3).unwrap();
         let seq_a = [2u32, 4, 6];
         let seq_b = [1u32, 3];
         let mut ca = KvCache::new(&MICRO);
@@ -508,8 +480,9 @@ mod tests {
 
     #[test]
     fn abq_backend_runs_and_tracks_fp() {
-        let fp = Transformer::random(MICRO, Backend::Fp32, 11);
-        let q8 = Transformer::random(MICRO, Backend::Abq(WAConfig::new(8, 8)), 11);
+        let fp = Transformer::random(MICRO, &Fp32Backend, 11).unwrap();
+        let q8 =
+            Transformer::random(MICRO, &AbqBackend::new(WAConfig::new(8, 8)), 11).unwrap();
         let toks = [3u32, 7, 11, 2];
         let mut c1 = KvCache::new(&MICRO);
         let mut c2 = KvCache::new(&MICRO);
@@ -522,8 +495,9 @@ mod tests {
 
     #[test]
     fn weight_bytes_compression() {
-        let fp = Transformer::random(MICRO, Backend::Fp32, 1);
-        let w2 = Transformer::random(MICRO, Backend::Abq(WAConfig::new(2, 8)), 1);
+        let fp = Transformer::random(MICRO, &Fp32Backend, 1).unwrap();
+        let w2 =
+            Transformer::random(MICRO, &AbqBackend::new(WAConfig::new(2, 8)), 1).unwrap();
         assert!(w2.weight_bytes() < fp.weight_bytes() / 2);
     }
 }

@@ -81,27 +81,52 @@ impl WAConfig {
 }
 
 impl fmt::Display for WAConfig {
+    /// Grammar: `w<bits>[*][g<N>]a<bits>[g<N>]`. A trailing `gN` with no
+    /// explicit weight group is the legacy compact form and means *both*
+    /// sides share the group (`w4a4g128`); `w4g128a4` is weight-only. The
+    /// degenerate act-only case prints an explicit `g0` on the weight side
+    /// (`w4g0a4g128`) so parse/print round-trip on every combination.
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         if self.weight.is_fp() && self.act.is_fp() {
             return write!(f, "fp16");
         }
         let star = if self.weight.balanced { "*" } else { "" };
-        let group = if self.weight.group > 0 {
-            format!("g{}", self.weight.group)
-        } else {
-            String::new()
-        };
-        write!(f, "w{}{}a{}{}", self.weight.bits, star, self.act.bits, group)
+        let (wg, ag) = (self.weight.group, self.act.group);
+        write!(f, "w{}{}", self.weight.bits, star)?;
+        if wg > 0 && wg != ag {
+            write!(f, "g{wg}")?;
+        } else if wg == 0 && ag > 0 {
+            write!(f, "g0")?;
+        }
+        write!(f, "a{}", self.act.bits)?;
+        if ag > 0 {
+            write!(f, "g{ag}")?;
+        }
+        Ok(())
     }
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("invalid quant config: {0}")]
+#[derive(Debug)]
 pub struct ParseError(String);
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "invalid quant config: {}", self.0)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl FromStr for WAConfig {
     type Err = ParseError;
 
+    /// Grammar: `w<bits>[*|s][g<N>]a<bits>[g<N>]` (the `s` form is the
+    /// filesystem-safe balance marker used in artifact tags).
+    ///
+    /// Group placement: `w4g128a4` sets the *weight* group only; a
+    /// trailing `gN` after the act bits sets the act group and — when the
+    /// weight part carries no explicit group marker — the weight group
+    /// too, so the legacy compact `w4a4g128` means weight+act group 128.
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         let s = s.trim().to_lowercase();
         if matches!(s.as_str(), "fp16" | "fp32" | "fp") {
@@ -109,26 +134,41 @@ impl FromStr for WAConfig {
         }
         let rest = s.strip_prefix('w').ok_or_else(|| ParseError(s.clone()))?;
         let a_at = rest.find('a').ok_or_else(|| ParseError(s.clone()))?;
-        let (mut wpart, apart) = (&rest[..a_at], &rest[a_at + 1..]);
-        let balanced = wpart.ends_with('*') || wpart.ends_with('s');
+        let (wpart, apart) = (&rest[..a_at], &rest[a_at + 1..]);
+        // weight part: bits [*|s] [gN]
+        let (mut wspec, wg_explicit) = match wpart.find('g') {
+            Some(i) => (
+                &wpart[..i],
+                Some(wpart[i + 1..].parse::<u32>().map_err(|_| ParseError(s.clone()))?),
+            ),
+            None => (wpart, None),
+        };
+        let balanced = wspec.ends_with('*') || wspec.ends_with('s');
         if balanced {
-            wpart = &wpart[..wpart.len() - 1];
+            wspec = &wspec[..wspec.len() - 1];
         }
-        let (abits_str, group) = match apart.find('g') {
+        // act part: bits [gN]
+        let (abits_str, ag_explicit) = match apart.find('g') {
             Some(i) => (
                 &apart[..i],
-                apart[i + 1..].parse::<u32>().map_err(|_| ParseError(s.clone()))?,
+                Some(apart[i + 1..].parse::<u32>().map_err(|_| ParseError(s.clone()))?),
             ),
-            None => (apart, 0),
+            None => (apart, None),
         };
-        let w_bits: u8 = wpart.parse().map_err(|_| ParseError(s.clone()))?;
+        let w_bits: u8 = wspec.parse().map_err(|_| ParseError(s.clone()))?;
         let a_bits: u8 = abits_str.parse().map_err(|_| ParseError(s.clone()))?;
         if w_bits == 0 || w_bits > 16 || a_bits == 0 || a_bits > 16 {
             return Err(ParseError(s));
         }
+        let (w_group, a_group) = match (wg_explicit, ag_explicit) {
+            (None, Some(g)) => (g, g), // legacy compact form: both sides
+            (Some(wg), Some(ag)) => (wg, ag),
+            (Some(wg), None) => (wg, 0), // weight-only form
+            (None, None) => (0, 0),
+        };
         Ok(WAConfig {
-            weight: QuantSpec { bits: w_bits, balanced, group },
-            act: QuantSpec::new(a_bits),
+            weight: QuantSpec { bits: w_bits, balanced, group: w_group },
+            act: QuantSpec { bits: a_bits, balanced: false, group: a_group },
         })
     }
 }
@@ -139,10 +179,45 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        for s in ["w2a8", "w2*a8", "w4a4", "w8a8", "w4a4g128", "fp16", "w6a6"] {
+        for s in [
+            "w2a8",
+            "w2*a8",
+            "w4a4",
+            "w8a8",
+            "w4a4g128",   // compact form: weight+act group
+            "w4g128a4",   // weight-only group
+            "w4g64a4g128",// explicit, different groups
+            "w2*g64a8",   // balance marker composes with a weight group
+            "w4g0a4g128", // act-only group (explicit g0 on the weight side)
+            "fp16",
+            "w6a6",
+        ] {
             let cfg: WAConfig = s.parse().unwrap();
             assert_eq!(cfg.to_string(), s, "roundtrip {s}");
+            // a printed config re-parses to an identical config
+            let back: WAConfig = cfg.to_string().parse().unwrap();
+            assert_eq!(back, cfg, "reparse {s}");
         }
+    }
+
+    #[test]
+    fn group_lands_on_both_sides_symmetrically() {
+        // trailing gN with no weight marker ≡ weight+act group
+        let both: WAConfig = "w4a4g128".parse().unwrap();
+        assert_eq!(both.weight.group, 128);
+        assert_eq!(both.act.group, 128);
+        // weight-only form
+        let wonly: WAConfig = "w4g128a4".parse().unwrap();
+        assert_eq!(wonly.weight.group, 128);
+        assert_eq!(wonly.act.group, 0);
+        // explicit both, different values
+        let mixed: WAConfig = "w4g64a4g128".parse().unwrap();
+        assert_eq!(mixed.weight.group, 64);
+        assert_eq!(mixed.act.group, 128);
+        // act-only via explicit g0
+        let aonly: WAConfig = "w4g0a4g128".parse().unwrap();
+        assert_eq!(aonly.weight.group, 0);
+        assert_eq!(aonly.act.group, 128);
     }
 
     #[test]
@@ -166,7 +241,10 @@ mod tests {
 
     #[test]
     fn rejects_garbage() {
-        for s in ["", "w", "wXa4", "w4", "a8", "w0a4", "w4a0", "w99a99"] {
+        for s in [
+            "", "w", "wXa4", "w4", "a8", "w0a4", "w4a0", "w99a99", "w4ga4", "w4a4g",
+            "w4gXa4", "w4a4gX",
+        ] {
             assert!(s.parse::<WAConfig>().is_err(), "{s}");
         }
     }

@@ -34,6 +34,8 @@ pub struct Program {
     _static_lits: Vec<Literal>,
     /// kinds of the dynamic tail (tokens/kv/pos), in order
     dynamic: Vec<InputKind>,
+    /// total bytes of the uploaded static (weight/qstate) buffers
+    static_bytes: usize,
     pub name: String,
 }
 
@@ -68,6 +70,7 @@ impl PjrtEngine {
         let is_prefill = art.name.ends_with("prefill");
         let mut static_bufs = Vec::new();
         let mut static_lits = Vec::new();
+        let mut static_bytes = 0usize;
         let mut dynamic = Vec::new();
         let mut seen_dynamic = false;
         for input in &art.inputs {
@@ -77,7 +80,8 @@ impl PjrtEngine {
                     if seen_dynamic {
                         bail!("static input '{input}' after dynamic inputs");
                     }
-                    let lit = self.literal_for_static(&kind, pack)?;
+                    let (lit, bytes) = self.literal_for_static(&kind, pack)?;
+                    static_bytes += bytes;
                     static_bufs.push(self.client.buffer_from_host_literal(None, &lit)?);
                     static_lits.push(lit);
                 }
@@ -92,21 +96,26 @@ impl PjrtEngine {
             static_bufs,
             _static_lits: static_lits,
             dynamic,
+            static_bytes,
             name: name.to_string(),
         })
     }
 
-    fn literal_for_static(&self, kind: &InputKind, pack: &WeightPack) -> Result<Literal> {
+    fn literal_for_static(&self, kind: &InputKind, pack: &WeightPack) -> Result<(Literal, usize)> {
         match kind {
             InputKind::Param { pack_name } => {
                 let t = pack.get(pack_name)?;
                 let data = t.as_f32()?;
                 let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
-                Ok(Literal::create_from_shape_and_untyped_data(
-                    ElementType::F32,
-                    t.shape(),
-                    &bytes,
-                )?)
+                let n = bytes.len();
+                Ok((
+                    Literal::create_from_shape_and_untyped_data(
+                        ElementType::F32,
+                        t.shape(),
+                        &bytes,
+                    )?,
+                    n,
+                ))
             }
             InputKind::QState { pack_name } => {
                 let t = pack.get(pack_name)?;
@@ -115,29 +124,41 @@ impl PjrtEngine {
                         // codes stored u8 in the pack, i32 in the HLO
                         let bytes: Vec<u8> =
                             v.iter().flat_map(|&c| (c as i32).to_le_bytes()).collect();
-                        Ok(Literal::create_from_shape_and_untyped_data(
-                            ElementType::S32,
-                            shape,
-                            &bytes,
-                        )?)
+                        let n = bytes.len();
+                        Ok((
+                            Literal::create_from_shape_and_untyped_data(
+                                ElementType::S32,
+                                shape,
+                                &bytes,
+                            )?,
+                            n,
+                        ))
                     }
                     crate::model::Tensor::I32(v, shape) => {
                         let bytes: Vec<u8> =
                             v.iter().flat_map(|x| x.to_le_bytes()).collect();
-                        Ok(Literal::create_from_shape_and_untyped_data(
-                            ElementType::S32,
-                            shape,
-                            &bytes,
-                        )?)
+                        let n = bytes.len();
+                        Ok((
+                            Literal::create_from_shape_and_untyped_data(
+                                ElementType::S32,
+                                shape,
+                                &bytes,
+                            )?,
+                            n,
+                        ))
                     }
                     crate::model::Tensor::F32(v, shape) => {
                         let bytes: Vec<u8> =
                             v.iter().flat_map(|x| x.to_le_bytes()).collect();
-                        Ok(Literal::create_from_shape_and_untyped_data(
-                            ElementType::F32,
-                            shape,
-                            &bytes,
-                        )?)
+                        let n = bytes.len();
+                        Ok((
+                            Literal::create_from_shape_and_untyped_data(
+                                ElementType::F32,
+                                shape,
+                                &bytes,
+                            )?,
+                            n,
+                        ))
                     }
                 }
             }
@@ -155,6 +176,12 @@ pub struct KvState {
 }
 
 impl Program {
+    /// Bytes of the device-resident static (weight/qstate) inputs — the
+    /// PJRT side of the Table 12 memory accounting.
+    pub fn static_bytes(&self) -> usize {
+        self.static_bytes
+    }
+
     fn tokens_literal(&self, tokens: &[i32], shape: &[usize]) -> Result<Literal> {
         let count: usize = shape.iter().product();
         if tokens.len() != count {

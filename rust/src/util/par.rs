@@ -5,9 +5,11 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Number of worker threads (overridable via `ABQ_THREADS`).
+static CACHED: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of worker threads (overridable via `ABQ_THREADS` or
+/// [`set_threads`]).
 pub fn num_threads() -> usize {
-    static CACHED: AtomicUsize = AtomicUsize::new(0);
     let c = CACHED.load(Ordering::Relaxed);
     if c != 0 {
         return c;
@@ -21,6 +23,14 @@ pub fn num_threads() -> usize {
         });
     CACHED.store(n, Ordering::Relaxed);
     n
+}
+
+/// Override the worker count (the `EngineBuilder::threads` hook). Wins
+/// over `ABQ_THREADS`; values < 1 are ignored.
+pub fn set_threads(n: usize) {
+    if n >= 1 {
+        CACHED.store(n, Ordering::Relaxed);
+    }
 }
 
 /// Map `f` over `0..n` in parallel; results returned in index order.

@@ -6,25 +6,15 @@
 //!  * PJRT fp16 prefill logits ≈ rust-native fp32 prefill logits
 //!  * quantized backends degrade PPL in the paper's order
 //!  * serving end-to-end on the calibrated quantized model
+//!
+//! All engines are built through `engine::EngineBuilder`; the PJRT tests
+//! additionally need the `pjrt` cargo feature.
 
 use std::path::Path;
-use std::sync::Arc;
 
 use abq_llm::coordinator::{Request, Server, ServerConfig};
+use abq_llm::engine::{EngineBuilder, InferenceEngine};
 use abq_llm::eval;
-use abq_llm::model::{Backend, KvCache, Transformer, WeightPack};
-use abq_llm::runtime::PjrtEngine;
-
-/// XLA compilation recurses deeply; the 2 MiB default test-thread stack
-/// overflows (SIGSEGV). Run PJRT-touching bodies on a 64 MiB stack.
-fn with_big_stack<F: FnOnce() + Send + 'static>(f: F) {
-    std::thread::Builder::new()
-        .stack_size(512 << 20)
-        .spawn(f)
-        .unwrap()
-        .join()
-        .unwrap()
-}
 
 fn artifacts() -> Option<&'static Path> {
     let p = Path::new("artifacts");
@@ -36,14 +26,18 @@ fn artifacts() -> Option<&'static Path> {
     }
 }
 
+fn engine_for(dir: &Path, spec: &str) -> Box<dyn InferenceEngine> {
+    EngineBuilder::new().weights(dir).backend(spec).build().unwrap()
+}
+
 #[test]
 fn native_fp_ppl_matches_manifest() {
     let Some(dir) = artifacts() else { return };
     let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
     let j = abq_llm::util::json::Json::parse(&manifest).unwrap();
     let jax_ppl = j.get("fp_ppl").and_then(|v| v.as_f64()).unwrap();
-    let model = Transformer::load_artifacts(dir, Backend::Fp32).unwrap();
-    let rust_ppl = eval::perplexity(&model, 8, 128, eval::corpus::EVAL_SEED).unwrap();
+    let engine = engine_for(dir, "fp32");
+    let rust_ppl = eval::perplexity(engine.as_ref(), 8, 128, eval::corpus::EVAL_SEED).unwrap();
     let rel = (rust_ppl - jax_ppl).abs() / jax_ppl;
     // different eval stream slices + fp noise; require same ballpark
     assert!(
@@ -55,93 +49,116 @@ fn native_fp_ppl_matches_manifest() {
 #[test]
 fn quant_ppl_ordering_matches_paper() {
     let Some(dir) = artifacts() else { return };
-    let fp = Transformer::load_artifacts(dir, Backend::Fp32).unwrap();
-    let w8 = Transformer::load_artifacts(dir, Backend::Abq("w8a8".parse().unwrap())).unwrap();
-    let w2s = Transformer::load_artifacts(dir, Backend::Abq("w2*a8".parse().unwrap())).unwrap();
-    let p_fp = eval::perplexity(&fp, 4, 96, 999).unwrap();
-    let p_w8 = eval::perplexity(&w8, 4, 96, 999).unwrap();
-    let p_w2s = eval::perplexity(&w2s, 4, 96, 999).unwrap();
+    let fp = engine_for(dir, "fp32");
+    let w8 = engine_for(dir, "abq:w8a8");
+    let w2s = engine_for(dir, "abq:w2*a8");
+    let p_fp = eval::perplexity(fp.as_ref(), 4, 96, 999).unwrap();
+    let p_w8 = eval::perplexity(w8.as_ref(), 4, 96, 999).unwrap();
+    let p_w2s = eval::perplexity(w2s.as_ref(), 4, 96, 999).unwrap();
     // paper ordering: fp ≤ w8a8 ≤ w2*a8 (within noise: w8a8 ~lossless)
     assert!(p_w8 < p_fp * 1.15, "w8a8 {p_w8} too far above fp {p_fp}");
     assert!(p_w2s < p_fp * 2.0, "w2*a8 {p_w2s} catastrophically off vs {p_fp}");
     assert!(p_fp <= p_w2s * 1.02, "fp should not be worse than 2-bit");
 }
 
-#[test]
-fn pjrt_prefill_matches_native_fp() {
-    with_big_stack(pjrt_prefill_matches_native_fp_inner);
-}
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use abq_llm::engine::Execution;
 
-fn pjrt_prefill_matches_native_fp_inner() {
-    let Some(dir) = artifacts() else { return };
-    let engine = match PjrtEngine::load(dir) {
-        Ok(e) => e,
-        Err(e) => {
-            eprintln!("SKIP: pjrt engine unavailable: {e}");
-            return;
+    /// XLA compilation recurses deeply; the 2 MiB default test-thread stack
+    /// overflows (SIGSEGV). Run PJRT-touching bodies on a big stack.
+    fn with_big_stack<F: FnOnce() + Send + 'static>(f: F) {
+        std::thread::Builder::new()
+            .stack_size(512 << 20)
+            .spawn(f)
+            .unwrap()
+            .join()
+            .unwrap()
+    }
+
+    #[test]
+    fn pjrt_prefill_matches_native_fp() {
+        with_big_stack(pjrt_prefill_matches_native_fp_inner);
+    }
+
+    fn pjrt_prefill_matches_native_fp_inner() {
+        let Some(dir) = artifacts() else { return };
+        let pjrt_engine = match EngineBuilder::new()
+            .weights(dir)
+            .backend("fp32")
+            .execution(Execution::Pjrt)
+            .build()
+        {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("SKIP: pjrt engine unavailable: {e}");
+                return;
+            }
+        };
+        let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let j = abq_llm::util::json::Json::parse(&manifest).unwrap();
+        let s = j.get("prefill_seq").and_then(|v| v.as_usize()).unwrap();
+        let table = eval::corpus::build_transition_table(eval::corpus::TABLE_SEED);
+        let toks = eval::corpus::generate_tokens(&table, s, 4242);
+
+        let mut pjrt_session = pjrt_engine.new_session().unwrap();
+        let pjrt_logits = pjrt_engine.prefill(&toks, pjrt_session.as_mut()).unwrap();
+
+        let native = engine_for(dir, "fp32");
+        let mut session = native.new_session().unwrap();
+        let native_logits = native.prefill(&toks, session.as_mut()).unwrap();
+
+        assert_eq!(pjrt_logits.len(), native_logits.len());
+        let mut max_err = 0f32;
+        let mut max_abs = 0f32;
+        for (a, b) in pjrt_logits.iter().zip(&native_logits) {
+            max_err = max_err.max((a - b).abs());
+            max_abs = max_abs.max(b.abs());
         }
-    };
-    if !engine.manifest.artifacts.iter().any(|a| a.name == "model_fp16_prefill") {
-        eprintln!("SKIP: no fp16 prefill artifact");
-        return;
+        assert!(
+            max_err / max_abs < 5e-3,
+            "pjrt vs native max rel err {}",
+            max_err / max_abs
+        );
     }
-    let pack = WeightPack::load(&dir.join("weights.abqw")).unwrap();
-    let prog = engine.program("model_fp16_prefill", &pack).unwrap();
 
-    let s = engine.manifest.prefill_seq;
-    let table = eval::corpus::build_transition_table(eval::corpus::TABLE_SEED);
-    let toks = eval::corpus::generate_tokens(&table, s, 4242);
-    let toks_i32: Vec<i32> = toks.iter().map(|&t| t as i32).collect();
-    let pjrt_logits = prog.prefill(&engine.client, &toks_i32).unwrap();
-
-    let native = Transformer::load_artifacts(dir, Backend::Fp32).unwrap();
-    let mut cache = KvCache::new(&native.cfg);
-    let native_logits = native.prefill(&toks, &mut cache).unwrap();
-
-    assert_eq!(pjrt_logits.len(), native_logits.len());
-    let mut max_err = 0f32;
-    let mut max_abs = 0f32;
-    for (a, b) in pjrt_logits.iter().zip(&native_logits) {
-        max_err = max_err.max((a - b).abs());
-        max_abs = max_abs.max(b.abs());
+    /// The w2sa8 decode graph (pallas-interpret while loops) compiles and
+    /// runs fine in standalone binaries but the XLA CPU compiler SIGSEGVs
+    /// when invoked from inside the libtest harness process, regardless of
+    /// stack size. Exercise it through the CLI as a subprocess instead —
+    /// same coverage (compile + 4 device-chained decode steps), stable
+    /// environment.
+    #[test]
+    fn pjrt_quantized_decode_runs() {
+        let Some(_) = artifacts() else { return };
+        let exe = env!("CARGO_BIN_EXE_abq-llm");
+        let out = std::process::Command::new(exe)
+            .args(["pjrt", "--artifact", "model_w2sa8_decode", "--steps", "4"])
+            .output()
+            .expect("spawn abq-llm");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(
+            out.status.success() && stdout.contains("decode steps"),
+            "pjrt decode failed: status {:?}\nstdout: {stdout}\nstderr: {}",
+            out.status,
+            String::from_utf8_lossy(&out.stderr)
+        );
     }
-    assert!(
-        max_err / max_abs < 5e-3,
-        "pjrt vs native max rel err {}",
-        max_err / max_abs
-    );
-}
-
-/// The w2sa8 decode graph (pallas-interpret while loops) compiles and runs
-/// fine in standalone binaries but the XLA CPU compiler SIGSEGVs when
-/// invoked from inside the libtest harness process, regardless of stack
-/// size. Exercise it through the CLI as a subprocess instead — same
-/// coverage (compile + 4 device-chained decode steps), stable environment.
-#[test]
-fn pjrt_quantized_decode_runs() {
-    let Some(_) = artifacts() else { return };
-    let exe = env!("CARGO_BIN_EXE_abq-llm");
-    let out = std::process::Command::new(exe)
-        .args(["pjrt", "--artifact", "model_w2sa8_decode", "--steps", "4"])
-        .output()
-        .expect("spawn abq-llm");
-    let stdout = String::from_utf8_lossy(&out.stdout);
-    assert!(
-        out.status.success() && stdout.contains("decode steps"),
-        "pjrt decode failed: status {:?}\nstdout: {stdout}\nstderr: {}",
-        out.status,
-        String::from_utf8_lossy(&out.stderr)
-    );
 }
 
 #[test]
 fn serving_on_calibrated_quant_model() {
     let Some(dir) = artifacts() else { return };
-    let cfg: abq_llm::quant::WAConfig = "w2*a8".parse().unwrap();
-    let model = Arc::new(Transformer::load_artifacts(dir, Backend::Abq(cfg)).unwrap());
+    let engine = EngineBuilder::new()
+        .weights(dir)
+        .backend("abq:w2*a8")
+        .build_arc()
+        .unwrap();
+    let tag = abq_llm::engine::backend_tag("abq:w2*a8").unwrap();
     let server = Server::start(
-        vec![(cfg.tag(), model)],
-        ServerConfig { default_tag: cfg.tag(), ..Default::default() },
+        vec![(tag.clone(), engine)],
+        ServerConfig { default_tag: tag, ..Default::default() },
     )
     .unwrap();
     let table = eval::corpus::build_transition_table(eval::corpus::TABLE_SEED);

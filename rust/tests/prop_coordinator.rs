@@ -3,9 +3,10 @@
 
 use std::time::{Duration, Instant};
 
-use abq_llm::coordinator::{Batcher, BatcherConfig, Request, Scheduler, SchedulerConfig};
 use abq_llm::coordinator::request::QueuedRequest;
-use abq_llm::model::{Backend, ModelConfig, Transformer};
+use abq_llm::coordinator::{Batcher, BatcherConfig, Request, Scheduler, SchedulerConfig};
+use abq_llm::engine::EngineBuilder;
+use abq_llm::model::ModelConfig;
 use abq_llm::util::prop::{check, usize_in};
 
 const MICRO: ModelConfig = ModelConfig {
@@ -52,10 +53,14 @@ fn prop_batcher_never_loses_duplicates_or_reorders() {
 
 #[test]
 fn prop_scheduler_completes_every_request_exactly() {
-    let model = Transformer::random(MICRO, Backend::Fp32, 77);
+    let engine = EngineBuilder::new()
+        .random_weights(MICRO, 77)
+        .backend("fp32")
+        .build_arc()
+        .unwrap();
     check("scheduler", 10, |rng| {
         let max_active = usize_in(rng, 1, 5);
-        let mut sched = Scheduler::new(&model, SchedulerConfig { max_active });
+        let mut sched = Scheduler::new(engine.clone(), SchedulerConfig { max_active });
         let n_reqs = usize_in(rng, 1, 7);
         let mut want: Vec<(u64, usize)> = Vec::new();
         let mut backlog: Vec<QueuedRequest> = (0..n_reqs as u64)
