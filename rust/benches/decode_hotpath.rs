@@ -1,0 +1,145 @@
+//! Decode hot-path benchmark: single-token end-to-end block steps on a
+//! small-but-real model, per backend. This is the workload the
+//! zero-allocation rework targets (persistent worker pool + scratch
+//! arenas + word-sliced packing + searched weight layout — docs/PERF.md):
+//! one engine session decoding greedily, measured in steady state (warm
+//! arena, warm auto-search cache, warm pool).
+//!
+//! Reports tokens/s and ns per projection (7 projections × n_layers per
+//! step). With `ABQ_RECORD=<label>` set, appends a run entry to
+//! `../BENCH_decode.json` so the perf trajectory is recorded in-repo —
+//! `scripts/record_decode_bench.sh pre|post` wraps this.
+
+use std::time::Instant;
+
+use abq_llm::engine::{EngineBuilder, EngineSession, InferenceEngine};
+use abq_llm::model::ModelConfig;
+use abq_llm::util::bench::write_results;
+use abq_llm::util::json::{num, obj, s, Json};
+
+const BENCH_MODEL: ModelConfig = ModelConfig {
+    name: "decode-bench-768d",
+    vocab: 2048,
+    d_model: 768,
+    n_layers: 2,
+    n_heads: 12,
+    d_ff: 2048,
+    max_seq: 256,
+    rope_base: 10000.0,
+};
+
+const PROMPT: [u32; 8] = [1, 2, 3, 5, 8, 13, 21, 34];
+
+struct Run {
+    tok_s: f64,
+    ns_per_projection: f64,
+    ms_per_step: f64,
+}
+
+fn drive(engine: &dyn InferenceEngine, sess: &mut Box<dyn EngineSession>, steps: usize) {
+    for i in 0..steps {
+        let tok = (i % (BENCH_MODEL.vocab - 1)) as u32;
+        let mut refs: [&mut dyn EngineSession; 1] = [sess.as_mut()];
+        let logits = engine.decode_step(&[tok], &mut refs).unwrap();
+        std::hint::black_box(&logits);
+    }
+}
+
+fn measure(engine: &dyn InferenceEngine, warm_steps: usize, steps: usize, samples: usize) -> Run {
+    let mut sess = engine.new_session().unwrap();
+    engine.prefill(&PROMPT, sess.as_mut()).unwrap();
+    // warm-up: arena growth, kernel search, worker-pool spin-up
+    drive(engine, &mut sess, warm_steps);
+    let mut best_secs = f64::INFINITY;
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        drive(engine, &mut sess, steps);
+        best_secs = best_secs.min(t0.elapsed().as_secs_f64());
+    }
+    let per_step = best_secs / steps as f64;
+    Run {
+        tok_s: 1.0 / per_step,
+        ns_per_projection: per_step * 1e9 / (7.0 * BENCH_MODEL.n_layers as f64),
+        ms_per_step: per_step * 1e3,
+    }
+}
+
+fn record(rows: &[Json], steps: usize) {
+    let Some(label) = std::env::var("ABQ_RECORD").ok().filter(|l| !l.is_empty()) else {
+        return;
+    };
+    let path = "../BENCH_decode.json";
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0);
+    let entry = obj(vec![
+        ("label", s(&label)),
+        ("unix_time", num(now)),
+        ("model", s(BENCH_MODEL.name)),
+        ("prompt_tokens", num(PROMPT.len() as f64)),
+        ("steps_per_sample", num(steps as f64)),
+        ("results", Json::Arr(rows.to_vec())),
+    ]);
+    let mut root = match std::fs::read_to_string(path).ok().and_then(|t| Json::parse(&t).ok()) {
+        Some(Json::Obj(m)) => m,
+        _ => std::collections::BTreeMap::new(),
+    };
+    let mut runs = match root.remove("runs") {
+        Some(Json::Arr(v)) => v,
+        _ => Vec::new(),
+    };
+    runs.push(entry);
+    root.insert("runs".to_string(), Json::Arr(runs));
+    root.entry("note".to_string()).or_insert_with(|| {
+        s("decode hot-path trajectory (tokens/s, single-token steps); see docs/PERF.md")
+    });
+    match std::fs::write(path, Json::Obj(root).to_string_pretty()) {
+        Ok(()) => println!("[recorded] {path} (label: {label})"),
+        Err(e) => eprintln!("warn: could not record {path}: {e}"),
+    }
+}
+
+fn main() {
+    let fast = std::env::var("ABQ_BENCH_FAST").is_ok();
+    let (warm_steps, steps, samples) = if fast { (4, 8, 2) } else { (16, 64, 3) };
+    let backends = ["abq:w2*a8", "abq:w4a4", "abq:w8a8", "int8", "fp32"];
+
+    println!("=== decode hot path: single-token steps, {} ===", BENCH_MODEL.name);
+    println!(
+        "{:<12} {:>10} {:>12} {:>16}",
+        "backend", "tok/s", "ms/step", "ns/projection"
+    );
+    let mut rows = Vec::new();
+    let mut w2_tok_s = None;
+    let mut int8_tok_s = None;
+    for spec in backends {
+        let engine = EngineBuilder::new()
+            .random_weights(BENCH_MODEL, 42)
+            .backend(spec)
+            .build()
+            .unwrap_or_else(|e| panic!("{spec}: {e}"));
+        let r = measure(engine.as_ref(), warm_steps, steps, samples);
+        println!(
+            "{:<12} {:>10.1} {:>12.3} {:>16.0}",
+            spec, r.tok_s, r.ms_per_step, r.ns_per_projection
+        );
+        if spec == "abq:w2*a8" {
+            w2_tok_s = Some(r.tok_s);
+        }
+        if spec == "int8" {
+            int8_tok_s = Some(r.tok_s);
+        }
+        rows.push(obj(vec![
+            ("backend", s(spec)),
+            ("tok_s", num(r.tok_s)),
+            ("ms_per_step", num(r.ms_per_step)),
+            ("ns_per_projection", num(r.ns_per_projection)),
+        ]));
+    }
+    if let (Some(w2), Some(i8t)) = (w2_tok_s, int8_tok_s) {
+        println!("\nabq:w2*a8 vs int8 (SmoothQuant engine): {:.2}x", w2 / i8t);
+    }
+    write_results("decode_hotpath", &Json::Arr(rows.clone()));
+    record(&rows, steps);
+}

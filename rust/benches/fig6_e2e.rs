@@ -49,6 +49,9 @@ fn main() {
         for (name, spec) in backends {
             let engine =
                 EngineBuilder::new().weights(dir).backend(spec).build().unwrap();
+            // warm-up generate: one-time costs (auto kernel search, worker
+            // pool spin-up, scratch-arena growth) stay out of the numbers
+            measure_generate(engine.as_ref(), &prompt, 8);
             let mut lat = Vec::new();
             for &len in &[32usize, 64, 128] {
                 lat.push(measure_generate(engine.as_ref(), &prompt, len));

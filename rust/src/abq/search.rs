@@ -3,52 +3,117 @@
 //! candidate tile configs and cache the winner.
 //!
 //! The GPU search space is (BM, BN, BK, WM, WN) under shared-memory and
-//! register budgets; ours is (n-block, fanout, parallelism) under an L1/L2
-//! budget (`tile::candidates`). The search runs each candidate a few times
-//! on the real operands and keeps the fastest — exactly the paper's
-//! "test the operators at various chunk sizes and adopt the speed-optimised
-//! implementation".
+//! register budgets; ours is (n-block, fanout, parallelism, weight plane
+//! layout) under an L1/L2 budget (`tile::candidates`). The search runs
+//! each candidate a few times on the real operands and keeps the fastest —
+//! exactly the paper's "test the operators at various chunk sizes and
+//! adopt the speed-optimised implementation".
+//!
+//! Two process-wide caches:
+//! * shape → best [`TileConfig`] (+ its measured time), consulted on every
+//!   `Auto` GEMM — a hit is a mutex-guarded map lookup, no allocation;
+//! * weight shape → preferred [`PlaneLayout`], consulted once per prepared
+//!   linear ([`choose_weight_layout`]) so the decode GEMV streams the
+//!   layout that measured fastest on this machine.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
-use super::bitplane::BitPlanes;
-use super::gemm::{gemm_int, OptLevel};
+use super::bitplane::{BitPlanes, PlaneLayout, PlanesRef};
+use super::gemm::{gemm_int_into, OptLevel};
 use super::tile::{candidates, ShapeKey, TileConfig};
 
-/// Process-wide search cache: shape → best config.
-static CACHE: Mutex<Option<HashMap<ShapeKey, TileConfig>>> = Mutex::new(None);
+/// Process-wide search cache: shape → (best config, its median seconds).
+static CACHE: Mutex<Option<HashMap<ShapeKey, (TileConfig, f64)>>> = Mutex::new(None);
+
+/// Process-wide layout cache: weight shape → preferred plane layout.
+static LAYOUT_CACHE: Mutex<Option<HashMap<LayoutKey, PlaneLayout>>> = Mutex::new(None);
 
 /// Number of timed repetitions per candidate (median taken).
 const REPS: usize = 3;
 
+/// Below these operand sizes the layout race is skipped (decode-irrelevant
+/// micro shapes; keeps unit-test model construction instant).
+const LAYOUT_MIN_K: usize = 256;
+const LAYOUT_MIN_N: usize = 64;
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct LayoutKey {
+    n: usize,
+    k: usize,
+    q_planes: usize,
+    p_planes: usize,
+}
+
+fn shape_key(x: &PlanesRef, w: &PlanesRef) -> ShapeKey {
+    ShapeKey {
+        m: x.rows,
+        n: w.rows,
+        k: x.k,
+        p_bits: x.planes,
+        q_bits: w.planes,
+        interleaved: w.layout == PlaneLayout::Interleaved,
+    }
+}
+
 pub fn lookup(key: &ShapeKey) -> Option<TileConfig> {
+    CACHE.lock().unwrap().as_ref().and_then(|m| m.get(key).map(|&(c, _)| c))
+}
+
+fn lookup_timed(key: &ShapeKey) -> Option<(TileConfig, f64)> {
     CACHE.lock().unwrap().as_ref().and_then(|m| m.get(key).copied())
 }
 
-fn insert(key: ShapeKey, cfg: TileConfig) {
+fn insert(key: ShapeKey, cfg: TileConfig, secs: f64) {
     let mut g = CACHE.lock().unwrap();
-    g.get_or_insert_with(HashMap::new).insert(key, cfg);
+    g.get_or_insert_with(HashMap::new).insert(key, (cfg, secs));
+}
+
+/// `ABQ_WLAYOUT` override: `plane` / `interleaved` force a weight layout,
+/// anything else (or unset) lets the search decide.
+fn forced_layout() -> Option<PlaneLayout> {
+    static FORCED: OnceLock<Option<PlaneLayout>> = OnceLock::new();
+    *FORCED.get_or_init(|| match std::env::var("ABQ_WLAYOUT").ok().as_deref() {
+        Some("plane") | Some("plane-major") | Some("planemajor") => Some(PlaneLayout::PlaneMajor),
+        Some("interleaved") | Some("inter") => Some(PlaneLayout::Interleaved),
+        _ => None,
+    })
 }
 
 /// Find (or recall) the best tile config for this operand pair.
 pub fn best_config(x: &BitPlanes, w: &BitPlanes) -> TileConfig {
-    let key = ShapeKey { m: x.rows, n: w.rows, k: x.k, p_bits: x.planes, q_bits: w.planes };
+    best_config_ref(x.view(), w.view())
+}
+
+/// [`best_config`] over borrowed plane views (cache hits allocate nothing).
+pub fn best_config_ref(x: PlanesRef, w: PlanesRef) -> TileConfig {
+    let key = shape_key(&x, &w);
     if let Some(hit) = lookup(&key) {
+        return hit;
+    }
+    search_best(x, w).0
+}
+
+/// Run the candidate sweep for this operand pair, cache and return the
+/// winner and its median time in seconds.
+fn search_best(x: PlanesRef, w: PlanesRef) -> (TileConfig, f64) {
+    let key = shape_key(&x, &w);
+    if let Some(hit) = lookup_timed(&key) {
         return hit;
     }
     let zx = vec![0i32; x.rows];
     let zw = vec![0i32; w.rows];
+    let mut acc = Vec::new();
     let mut best = TileConfig::default();
     let mut best_t = f64::INFINITY;
     for cand in candidates(x.kwords, w.planes) {
-        let mut times = Vec::with_capacity(REPS);
-        for _ in 0..REPS {
+        let mut times = [0f64; REPS];
+        for t in times.iter_mut() {
             let t0 = Instant::now();
-            let out = gemm_int(x, w, &zx, &zw, OptLevel::Auto, Some(cand));
-            std::hint::black_box(&out);
-            times.push(t0.elapsed().as_secs_f64());
+            gemm_int_into(x, w, &zx, &zw, OptLevel::Auto, Some(cand), &mut acc);
+            std::hint::black_box(&acc);
+            *t = t0.elapsed().as_secs_f64();
         }
         times.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let t = times[REPS / 2];
@@ -57,14 +122,75 @@ pub fn best_config(x: &BitPlanes, w: &BitPlanes) -> TileConfig {
             best = cand;
         }
     }
-    insert(key, best);
-    best
+    insert(key, best, best_t);
+    (best, best_t)
 }
 
 /// Run with the searched config (searching on first use).
 pub fn gemm_int_auto(x: &BitPlanes, w: &BitPlanes, zx: &[i32], zw: &[i32]) -> Vec<i64> {
-    let cfg = best_config(x, w);
-    gemm_int(x, w, zx, zw, OptLevel::Auto, Some(cfg))
+    let mut acc = Vec::new();
+    gemm_int_auto_into(x.view(), w.view(), zx, zw, &mut acc);
+    acc
+}
+
+/// [`gemm_int_auto`] writing into a caller-owned accumulator. After the
+/// one-time search for a shape, the whole call is allocation-free — the
+/// decode hot path's GEMM entry point.
+pub fn gemm_int_auto_into(
+    x: PlanesRef,
+    w: PlanesRef,
+    zx: &[i32],
+    zw: &[i32],
+    acc: &mut Vec<i64>,
+) {
+    let cfg = best_config_ref(x, w);
+    gemm_int_into(x, w, zx, zw, OptLevel::Auto, Some(cfg), acc);
+}
+
+fn layout_lookup(key: &LayoutKey) -> Option<PlaneLayout> {
+    LAYOUT_CACHE.lock().unwrap().as_ref().and_then(|m| m.get(key).copied())
+}
+
+fn layout_insert(key: LayoutKey, layout: PlaneLayout) {
+    let mut g = LAYOUT_CACHE.lock().unwrap();
+    g.get_or_insert_with(HashMap::new).insert(key, layout);
+}
+
+/// Pick the weight plane layout for a prepared linear: race the two
+/// layouts' searched best configs on a synthetic single-token GEMV (the
+/// decode shape) and keep the faster storage order. Decisions are cached
+/// per weight shape; `ABQ_WLAYOUT` forces one layout; micro shapes skip
+/// the race and keep what they have. Returns the (possibly re-packed)
+/// planes.
+pub fn choose_weight_layout(w: BitPlanes, act_planes: usize) -> BitPlanes {
+    if let Some(forced) = forced_layout() {
+        return if w.layout == forced { w } else { w.to_layout(forced) };
+    }
+    if w.k < LAYOUT_MIN_K || w.rows < LAYOUT_MIN_N || act_planes == 0 || act_planes > 8 {
+        return w;
+    }
+    let key = LayoutKey { n: w.rows, k: w.k, q_planes: w.planes, p_planes: act_planes };
+    if let Some(cached) = layout_lookup(&key) {
+        return if w.layout == cached { w } else { w.to_layout(cached) };
+    }
+    // synthetic m=1 activation at the decode shape
+    let codes: Vec<u8> = (0..w.k).map(|i| (i % (1usize << act_planes)) as u8).collect();
+    let x = BitPlanes::pack(&codes, 1, w.k, act_planes);
+    let wp = if w.layout == PlaneLayout::PlaneMajor {
+        w
+    } else {
+        w.to_layout(PlaneLayout::PlaneMajor)
+    };
+    let wi = wp.to_layout(PlaneLayout::Interleaved);
+    let (_, t_plane) = search_best(x.view(), wp.view());
+    let (_, t_inter) = search_best(x.view(), wi.view());
+    let chosen = if t_inter < t_plane { PlaneLayout::Interleaved } else { PlaneLayout::PlaneMajor };
+    layout_insert(key, chosen);
+    if chosen == PlaneLayout::Interleaved {
+        wi
+    } else {
+        wp
+    }
 }
 
 #[cfg(test)]
@@ -86,7 +212,51 @@ mod tests {
         let got = gemm_int_auto(&x, &w, &zx, &zw);
         let want = gemm_int_reference(&xc, &wc, m, n, k, &zx, &zw);
         assert_eq!(got, want);
-        let key = ShapeKey { m, n, k, p_bits: 8, q_bits: 2 };
+        let key = ShapeKey { m, n, k, p_bits: 8, q_bits: 2, interleaved: false };
         assert!(lookup(&key).is_some(), "search result cached");
+    }
+
+    #[test]
+    fn auto_into_reuses_accumulator_and_matches_reference() {
+        let (m, n, k) = (2usize, 48usize, 192usize);
+        let xc: Vec<u8> = (0..m * k).map(|i| (i % 16) as u8).collect();
+        let wc: Vec<u8> = (0..n * k).map(|i| (i % 8) as u8).collect();
+        let x = BitPlanes::pack(&xc, m, k, 4);
+        let w = BitPlanes::pack(&wc, n, k, 3);
+        let zx = vec![7i32; m];
+        let zw = vec![3i32; n];
+        let want = gemm_int_reference(&xc, &wc, m, n, k, &zx, &zw);
+        let mut acc = Vec::new();
+        for _ in 0..3 {
+            gemm_int_auto_into(x.view(), w.view(), &zx, &zw, &mut acc);
+            assert_eq!(acc, want);
+        }
+        // interleaved weights go through their own cache entry, same result
+        let wi = w.to_layout(PlaneLayout::Interleaved);
+        gemm_int_auto_into(x.view(), wi.view(), &zx, &zw, &mut acc);
+        assert_eq!(acc, want);
+    }
+
+    #[test]
+    fn layout_choice_is_cached_and_preserves_contents() {
+        let (n, k, q, p) = (LAYOUT_MIN_N, LAYOUT_MIN_K, 2usize, 4usize);
+        let wc: Vec<u8> = (0..n * k).map(|i| (i % 4) as u8).collect();
+        let w = BitPlanes::pack(&wc, n, k, q);
+        let chosen = choose_weight_layout(w, p);
+        assert_eq!(chosen.unpack(), wc);
+        let key = LayoutKey { n, k, q_planes: q, p_planes: p };
+        let cached = layout_lookup(&key).expect("layout decision cached");
+        assert_eq!(chosen.layout, cached);
+        // second call must return the cached layout without re-searching
+        let again = choose_weight_layout(BitPlanes::pack(&wc, n, k, q), p);
+        assert_eq!(again.layout, cached);
+    }
+
+    #[test]
+    fn tiny_shapes_skip_the_layout_race() {
+        let wc = vec![1u8; 8 * 32];
+        let w = BitPlanes::pack(&wc, 8, 32, 1);
+        let out = choose_weight_layout(w, 8);
+        assert_eq!(out.layout, PlaneLayout::PlaneMajor);
     }
 }

@@ -54,7 +54,9 @@ pub fn candidates(kwords: usize, q_planes: usize) -> Vec<TileConfig> {
     out
 }
 
-/// Shape key for the search cache.
+/// Shape key for the search cache. The weight plane layout is part of the
+/// key: the best (nb, fanout, parallel) config generally differs between
+/// the plane-major and interleaved storage orders.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ShapeKey {
     pub m: usize,
@@ -62,6 +64,9 @@ pub struct ShapeKey {
     pub k: usize,
     pub p_bits: usize,
     pub q_bits: usize,
+    /// true when the weight operand uses the interleaved `[row][plane]`
+    /// layout (see [`crate::abq::PlaneLayout`])
+    pub interleaved: bool,
 }
 
 #[cfg(test)]

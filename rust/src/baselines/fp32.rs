@@ -1,9 +1,12 @@
 //! FP32 GEMM — the "FastTransformer FP16" baseline of Fig. 6 / Table 12.
 //!
 //! Blocked + worker-parallel so the end-to-end comparison against the ABQ
-//! engine is against a *competent* float path, not a strawman.
+//! engine is against a *competent* float path, not a strawman. Pool
+//! workers write their column ranges straight into the output buffer, so
+//! `gemm_fp32_into` performs no heap allocation at all — it needs no
+//! scratch arena.
 
-use crate::util::par;
+use crate::util::par::{self, SendPtr};
 
 /// `y[m,n] = Σ_k x[m,k] · w[n,k]` — x `[m,k]` row-major, w `[n,k]` row-major
 /// (weights stored transposed, as in the model).
@@ -13,16 +16,16 @@ pub fn gemm_fp32(x: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32>
     out
 }
 
-/// [`gemm_fp32`] writing into a caller-provided scratch buffer (the decode
-/// hot loop reuses one allocation across the block projections).
+/// [`gemm_fp32`] writing into a caller-provided buffer; allocation-free.
 pub fn gemm_fp32_into(x: &[f32], w: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
     assert_eq!(x.len(), m * k);
     assert_eq!(w.len(), n * k);
     assert_eq!(out.len(), m * n);
-    // parallel over output rows of w (n dimension), blocked over k by 256
-    let cols: Vec<Vec<f32>> = par::par_map_indexed(n, |ni| {
+    let ptr = SendPtr(out.as_mut_ptr());
+    // parallel over output rows of w (n dimension)
+    par::par_for_ranges(n, |n0, n1| {
+        for ni in n0..n1 {
             let wrow = &w[ni * k..(ni + 1) * k];
-            let mut col = vec![0f32; m];
             for mi in 0..m {
                 let xrow = &x[mi * k..(mi + 1) * k];
                 // 4-way unrolled dot
@@ -39,15 +42,12 @@ pub fn gemm_fp32_into(x: &[f32], w: &[f32], m: usize, n: usize, k: usize, out: &
                 for j in chunks * 4..k {
                     acc += xrow[j] * wrow[j];
                 }
-                col[mi] = acc;
+                // Safety: column ni belongs exclusively to this worker's
+                // range; `out` outlives the parallel region.
+                unsafe { *ptr.0.add(mi * n + ni) = acc };
             }
-            col
-    });
-    for (ni, col) in cols.iter().enumerate() {
-        for mi in 0..m {
-            out[mi * n + ni] = col[mi];
         }
-    }
+    });
 }
 
 #[cfg(test)]

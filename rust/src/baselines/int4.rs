@@ -3,16 +3,41 @@
 //! (§1, §4.4) is that configurations like W2A8 must be *up-converted* to
 //! W4A4/W8A8 to run on these units — the conversion cost and padding are
 //! what the ABQ engine eliminates.
+//!
+//! Like the INT8 baseline, the `forward_scratch` path keeps all per-call
+//! working memory in a reusable [`Int4Scratch`] and lets pool workers
+//! write the accumulator in place (allocation-free once warm).
 
-use crate::util::par;
+use crate::util::par::{self, SendPtr};
 
 use super::padded_m;
+
+/// Reusable working memory for [`Int4Gemm::forward_scratch`].
+#[derive(Default)]
+pub struct Int4Scratch {
+    codes: Vec<u8>,
+    /// padded unsigned activation buffer `[padded_m, k]`
+    xp: Vec<u8>,
+    zx: Vec<i32>,
+    dx: Vec<f32>,
+    xsums: Vec<i32>,
+    yint: Vec<i32>,
+}
+
+impl Int4Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
 /// Nibble-packed INT4 weights `[n, k/2]` (two codes per byte).
 pub struct Int4Gemm {
     pub w_packed: Vec<u8>,
     pub zw: Vec<i32>,
     pub dw: Vec<f32>,
+    /// per-output-channel code sums (precomputed once for the zero-point
+    /// correction)
+    pub wsum: Vec<i32>,
     pub n: usize,
     pub k: usize,
 }
@@ -26,7 +51,15 @@ impl Int4Gemm {
         for i in 0..n * k / 2 {
             w_packed[i] = (q.codes[2 * i] & 0xF) | (q.codes[2 * i + 1] << 4);
         }
-        Int4Gemm { w_packed, zw: q.zps(), dw: q.deltas(), n, k }
+        let wsum: Vec<i32> = (0..n)
+            .map(|ni| {
+                w_packed[ni * k / 2..(ni + 1) * k / 2]
+                    .iter()
+                    .map(|&b| (b & 0xF) as i32 + (b >> 4) as i32)
+                    .sum()
+            })
+            .collect();
+        Int4Gemm { w_packed, zw: q.zps(), dw: q.deltas(), wsum, n, k }
     }
 
     /// Integer kernel on 4-bit activation codes (`x` unsigned 0..15).
@@ -36,41 +69,53 @@ impl Int4Gemm {
         let k = self.k;
         let mut xp = vec![0u8; mp * k];
         xp[..m * k].copy_from_slice(x);
-        let cols: Vec<Vec<i32>> = par::par_map_indexed(self.n, |ni| {
-                let wrow = &self.w_packed[ni * k / 2..(ni + 1) * k / 2];
-                let mut col = vec![0i32; mp];
-                for mi in 0..mp {
-                    let xrow = &xp[mi * k..(mi + 1) * k];
-                    let mut acc = 0i32;
-                    for b in 0..k / 2 {
-                        let w0 = (wrow[b] & 0xF) as i32;
-                        let w1 = (wrow[b] >> 4) as i32;
-                        acc += xrow[2 * b] as i32 * w0 + xrow[2 * b + 1] as i32 * w1;
-                    }
-                    col[mi] = acc;
-                }
-                col
-        });
         let mut out = vec![0i32; m * self.n];
-        let wsums: Vec<i32> = (0..self.n)
-            .map(|ni| {
-                self.w_packed[ni * k / 2..(ni + 1) * k / 2]
-                    .iter()
-                    .map(|&b| (b & 0xF) as i32 + (b >> 4) as i32)
-                    .sum()
-            })
-            .collect();
+        self.gemm_int_core(&xp, m, mp, &mut out);
         let xsums: Vec<i32> = (0..m)
             .map(|mi| x[mi * k..(mi + 1) * k].iter().map(|&v| v as i32).sum())
             .collect();
+        self.correct(&mut out, m, zx, &xsums);
+        out
+    }
+
+    /// Padded IMMA.S4 sweep: parallel over output channels, direct
+    /// accumulator writes; padded rows computed and discarded.
+    fn gemm_int_core(&self, xp: &[u8], m: usize, mp: usize, out: &mut [i32]) {
+        let k = self.k;
+        let n = self.n;
+        debug_assert_eq!(xp.len(), mp * k);
+        debug_assert_eq!(out.len(), m * n);
+        let ptr = SendPtr(out.as_mut_ptr());
+        par::par_for_ranges(n, |n0, n1| {
+            for ni in n0..n1 {
+                let wrow = &self.w_packed[ni * k / 2..(ni + 1) * k / 2];
+                for mi in 0..mp {
+                    let xrow = &xp[mi * k..(mi + 1) * k];
+                    let mut acc = 0i32;
+                    for (b, &packed) in wrow.iter().enumerate() {
+                        let w0 = (packed & 0xF) as i32;
+                        let w1 = (packed >> 4) as i32;
+                        acc += xrow[2 * b] as i32 * w0 + xrow[2 * b + 1] as i32 * w1;
+                    }
+                    if mi < m {
+                        // Safety: column ni belongs to this worker's range.
+                        unsafe { *ptr.0.add(mi * n + ni) = acc };
+                    } else {
+                        std::hint::black_box(acc);
+                    }
+                }
+            }
+        });
+    }
+
+    fn correct(&self, out: &mut [i32], m: usize, zx: &[i32], xsums: &[i32]) {
+        let (n, k) = (self.n, self.k);
         for mi in 0..m {
-            for ni in 0..self.n {
-                out[mi * self.n + ni] = cols[ni][mi] - zx[mi] * wsums[ni]
-                    - self.zw[ni] * xsums[mi]
+            for ni in 0..n {
+                out[mi * n + ni] += -zx[mi] * self.wsum[ni] - self.zw[ni] * xsums[mi]
                     + (k as i32) * zx[mi] * self.zw[ni];
             }
         }
-        out
     }
 
     /// Full forward from float activations (dynamic per-token 4-bit quant).
@@ -80,17 +125,37 @@ impl Int4Gemm {
         out
     }
 
-    /// [`Int4Gemm::forward`] writing into a caller-provided scratch buffer.
+    /// [`Int4Gemm::forward`] writing into a caller-provided buffer
+    /// (fresh scratch per call).
     pub fn forward_into(&self, x: &[f32], m: usize, out: &mut [f32]) {
+        let mut s = Int4Scratch::new();
+        self.forward_scratch(x, m, &mut s, out);
+    }
+
+    /// Arena-backed forward: allocation-free once `s` is warm.
+    pub fn forward_scratch(&self, x: &[f32], m: usize, s: &mut Int4Scratch, out: &mut [f32]) {
+        assert_eq!(x.len(), m * self.k);
         assert_eq!(out.len(), m * self.n);
-        let q = crate::quant::quantize_act_per_token(
-            x, m, self.k, &crate::quant::QuantSpec::new(4));
-        let zx = q.zps();
-        let yint = self.gemm_int(&q.codes, m, &zx);
-        let dx = q.deltas();
+        let (n, k) = (self.n, self.k);
+        crate::quant::quantize_act_per_token_into(
+            x, m, k, &crate::quant::QuantSpec::new(4), &mut s.codes, &mut s.zx, &mut s.dx,
+        );
+        let mp = padded_m(m);
+        s.xp.clear();
+        s.xp.resize(mp * k, 0);
+        s.xp[..m * k].copy_from_slice(&s.codes);
+        s.xsums.clear();
         for mi in 0..m {
-            for ni in 0..self.n {
-                out[mi * self.n + ni] = yint[mi * self.n + ni] as f32 * dx[mi] * self.dw[ni];
+            s.xsums.push(s.xp[mi * k..(mi + 1) * k].iter().map(|&v| v as i32).sum());
+        }
+        s.yint.clear();
+        s.yint.resize(m * n, 0);
+        self.gemm_int_core(&s.xp, m, mp, &mut s.yint);
+        self.correct(&mut s.yint, m, &s.zx, &s.xsums);
+        for mi in 0..m {
+            let dxm = s.dx[mi];
+            for ni in 0..n {
+                out[mi * n + ni] = s.yint[mi * n + ni] as f32 * dxm * self.dw[ni];
             }
         }
     }
@@ -123,6 +188,21 @@ mod tests {
                 }
                 assert_eq!(got[mi * n + ni], want);
             }
+        }
+    }
+
+    #[test]
+    fn scratch_forward_matches_fresh() {
+        let (n, k) = (9usize, 40usize);
+        let wf: Vec<f32> = (0..n * k).map(|i| ((i % 11) as f32 - 5.0) / 25.0).collect();
+        let g = Int4Gemm::from_weights(&wf, n, k);
+        let mut s = Int4Scratch::new();
+        for m in [1usize, 4, 10] {
+            let x: Vec<f32> = (0..m * k).map(|i| ((i % 7) as f32) / 2.0).collect();
+            let want = g.forward(&x, m);
+            let mut got = vec![0f32; m * n];
+            g.forward_scratch(&x, m, &mut s, &mut got);
+            assert_eq!(got, want, "m {m}");
         }
     }
 }

@@ -3,16 +3,46 @@
 //! m8n8k16 IMMA path, **including the pad-M-to-8 GEMV waste** (Fig. 8):
 //! when M < 8 the padded rows are physically computed, because that is
 //! what the TensorCore does.
+//!
+//! The `forward_scratch` path mirrors the ABQ engine's arena discipline:
+//! all per-call working memory lives in a reusable [`Int8Scratch`], and
+//! pool workers write the integer accumulator in place, so steady-state
+//! decode on this baseline allocates nothing either — the Fig. 6
+//! comparison measures kernel schedules, not allocator traffic.
 
-use crate::util::par;
+use crate::util::par::{self, SendPtr};
 
 use super::padded_m;
+
+/// Reusable working memory for [`Int8Gemm::forward_scratch`].
+#[derive(Default)]
+pub struct Int8Scratch {
+    /// unsigned per-token activation codes
+    codes: Vec<u8>,
+    /// signed, padded activation buffer `[padded_m, k]`
+    xp: Vec<i8>,
+    zx: Vec<i32>,
+    dx: Vec<f32>,
+    /// per-token signed code sums
+    xsums: Vec<i32>,
+    /// integer accumulator `[m, n]`
+    yint: Vec<i32>,
+}
+
+impl Int8Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
 /// Prepared INT8 weight (codes + per-channel dequant), `[n, k]` row-major.
 pub struct Int8Gemm {
     pub w: Vec<i8>,
     pub zw: Vec<i32>,
     pub dw: Vec<f32>,
+    /// per-output-channel signed code sums (precomputed once; the
+    /// zero-point correction needs them every call)
+    pub wsum: Vec<i32>,
     pub n: usize,
     pub k: usize,
 }
@@ -25,7 +55,10 @@ impl Int8Gemm {
         let w: Vec<i8> = q.codes.iter().map(|&c| (c as i32 - 128) as i8).collect();
         let zw: Vec<i32> = q.params.iter().map(|p| p.zp - 128).collect();
         let dw: Vec<f32> = q.params.iter().map(|p| p.delta).collect();
-        Int8Gemm { w, zw, dw, n, k }
+        let wsum: Vec<i32> = (0..n)
+            .map(|ni| w[ni * k..(ni + 1) * k].iter().map(|&v| v as i32).sum())
+            .collect();
+        Int8Gemm { w, zw, dw, wsum, n, k }
     }
 
     /// Integer kernel on already-quantized activations.
@@ -35,43 +68,58 @@ impl Int8Gemm {
         assert_eq!(x.len(), m * self.k);
         let mp = padded_m(m);
         let k = self.k;
+        let n = self.n;
         // physical padded activation buffer (zeros) — the wasted rows
         let mut xp = vec![0i8; mp * k];
         xp[..m * k].copy_from_slice(x);
-        let cols: Vec<Vec<i32>> = par::par_map_indexed(self.n, |ni| {
+        let mut out = vec![0i32; m * n];
+        self.gemm_int_core(&xp, m, mp, &mut out);
+        // zero-point correction: (x - zx)·(w - zw)
+        let xsums: Vec<i32> = (0..m)
+            .map(|mi| x[mi * k..(mi + 1) * k].iter().map(|&v| v as i32).sum())
+            .collect();
+        self.correct(&mut out, m, zx, &xsums);
+        out
+    }
+
+    /// Padded IMMA sweep: parallel over output channels, workers write
+    /// their column ranges of `out` `[m, n]` in place. Padded rows are
+    /// computed and discarded (the modelled TensorCore waste).
+    fn gemm_int_core(&self, xp: &[i8], m: usize, mp: usize, out: &mut [i32]) {
+        let k = self.k;
+        let n = self.n;
+        debug_assert_eq!(xp.len(), mp * k);
+        debug_assert_eq!(out.len(), m * n);
+        let ptr = SendPtr(out.as_mut_ptr());
+        par::par_for_ranges(n, |n0, n1| {
+            for ni in n0..n1 {
                 let wrow = &self.w[ni * k..(ni + 1) * k];
-                let mut col = vec![0i32; mp];
                 for mi in 0..mp {
                     let xrow = &xp[mi * k..(mi + 1) * k];
                     let mut acc = 0i32;
                     for ki in 0..k {
                         acc += xrow[ki] as i32 * wrow[ki] as i32;
                     }
-                    col[mi] = acc;
+                    if mi < m {
+                        // Safety: column ni belongs to this worker's range.
+                        unsafe { *ptr.0.add(mi * n + ni) = acc };
+                    } else {
+                        // padded row: physically computed, then discarded
+                        std::hint::black_box(acc);
+                    }
                 }
-                col
-        });
-        // correction + trim padding
-        let mut out = vec![0i32; m * self.n];
-        for (ni, col) in cols.iter().enumerate() {
-            for mi in 0..m {
-                out[mi * self.n + ni] = col[mi];
             }
-        }
-        // zero-point correction: (x - zx)·(w - zw)
-        let wsums: Vec<i32> = (0..self.n)
-            .map(|ni| self.w[ni * k..(ni + 1) * k].iter().map(|&v| v as i32).sum())
-            .collect();
-        let xsums: Vec<i32> = (0..m)
-            .map(|mi| x[mi * k..(mi + 1) * k].iter().map(|&v| v as i32).sum())
-            .collect();
+        });
+    }
+
+    fn correct(&self, out: &mut [i32], m: usize, zx: &[i32], xsums: &[i32]) {
+        let (n, k) = (self.n, self.k);
         for mi in 0..m {
-            for ni in 0..self.n {
-                out[mi * self.n + ni] += -zx[mi] * wsums[ni] - self.zw[ni] * xsums[mi]
+            for ni in 0..n {
+                out[mi * n + ni] += -zx[mi] * self.wsum[ni] - self.zw[ni] * xsums[mi]
                     + (k as i32) * zx[mi] * self.zw[ni];
             }
         }
-        out
     }
 
     /// Full forward from float activations (dynamic per-token quant).
@@ -81,18 +129,42 @@ impl Int8Gemm {
         out
     }
 
-    /// [`Int8Gemm::forward`] writing into a caller-provided scratch buffer.
+    /// [`Int8Gemm::forward`] writing into a caller-provided buffer
+    /// (fresh scratch per call).
     pub fn forward_into(&self, x: &[f32], m: usize, out: &mut [f32]) {
+        let mut s = Int8Scratch::new();
+        self.forward_scratch(x, m, &mut s, out);
+    }
+
+    /// Arena-backed forward: allocation-free once `s` is warm.
+    pub fn forward_scratch(&self, x: &[f32], m: usize, s: &mut Int8Scratch, out: &mut [f32]) {
+        assert_eq!(x.len(), m * self.k);
         assert_eq!(out.len(), m * self.n);
-        let q = crate::quant::quantize_act_per_token(
-            x, m, self.k, &crate::quant::QuantSpec::new(8));
-        let xs: Vec<i8> = q.codes.iter().map(|&c| (c as i32 - 128) as i8).collect();
-        let zx: Vec<i32> = q.params.iter().map(|p| p.zp - 128).collect();
-        let yint = self.gemm_int(&xs, m, &zx);
-        let dx: Vec<f32> = q.params.iter().map(|p| p.delta).collect();
+        let (n, k) = (self.n, self.k);
+        crate::quant::quantize_act_per_token_into(
+            x, m, k, &crate::quant::QuantSpec::new(8), &mut s.codes, &mut s.zx, &mut s.dx,
+        );
+        let mp = padded_m(m);
+        s.xp.clear();
+        s.xp.resize(mp * k, 0);
+        for (dst, &c) in s.xp[..m * k].iter_mut().zip(&s.codes) {
+            *dst = (c as i32 - 128) as i8;
+        }
+        for z in s.zx.iter_mut() {
+            *z -= 128;
+        }
+        s.xsums.clear();
         for mi in 0..m {
-            for ni in 0..self.n {
-                out[mi * self.n + ni] = yint[mi * self.n + ni] as f32 * dx[mi] * self.dw[ni];
+            s.xsums.push(s.xp[mi * k..(mi + 1) * k].iter().map(|&v| v as i32).sum());
+        }
+        s.yint.clear();
+        s.yint.resize(m * n, 0);
+        self.gemm_int_core(&s.xp, m, mp, &mut s.yint);
+        self.correct(&mut s.yint, m, &s.zx, &s.xsums);
+        for mi in 0..m {
+            let dxm = s.dx[mi];
+            for ni in 0..n {
+                out[mi * n + ni] = s.yint[mi * n + ni] as f32 * dxm * self.dw[ni];
             }
         }
     }
@@ -120,6 +192,21 @@ mod tests {
                 assert!((got - want).abs() < 0.05 * want.abs().max(1.0),
                         "m{mi} n{ni} got {got} want {want}");
             }
+        }
+    }
+
+    #[test]
+    fn scratch_forward_matches_fresh() {
+        let (n, k) = (12usize, 48usize);
+        let w: Vec<f32> = (0..n * k).map(|i| ((i % 13) as f32 - 6.0) / 30.0).collect();
+        let g = Int8Gemm::from_weights(&w, n, k);
+        let mut s = Int8Scratch::new();
+        for m in [1usize, 3, 9] {
+            let x: Vec<f32> = (0..m * k).map(|i| ((i % 17) as f32 - 8.0) / 4.0).collect();
+            let want = g.forward(&x, m);
+            let mut got = vec![0f32; m * n];
+            g.forward_scratch(&x, m, &mut s, &mut got);
+            assert_eq!(got, want, "m {m}");
         }
     }
 }

@@ -14,8 +14,8 @@ pub mod int4;
 pub mod int8;
 
 pub use fp32::{gemm_fp32, gemm_fp32_into};
-pub use int4::Int4Gemm;
-pub use int8::Int8Gemm;
+pub use int4::{Int4Gemm, Int4Scratch};
+pub use int8::{Int8Gemm, Int8Scratch};
 
 /// MMA M-granularity all integer-TensorCore baselines pad to.
 pub const MMA_M: usize = 8;

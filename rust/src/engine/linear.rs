@@ -13,16 +13,40 @@
 
 use anyhow::{bail, Result};
 
-use crate::abq::{OptLevel, QuantizedLinear};
-use crate::baselines::{gemm_fp32_into, Int4Gemm, Int8Gemm};
+use crate::abq::{AbqScratch, OptLevel, QuantizedLinear};
+use crate::baselines::{gemm_fp32_into, Int4Gemm, Int4Scratch, Int8Gemm, Int8Scratch};
 use crate::model::WeightPack;
 use crate::quant::WAConfig;
 
+/// Backend-agnostic scratch arena threaded through
+/// [`LinearOp::forward_scratch`]. One instance per engine session serves
+/// every projection of every layer and step: each backend family owns the
+/// sub-arena it needs and ignores the rest, so a model can even mix
+/// backends over a single arena. Buffers grow to the largest shape seen
+/// and are then reused allocation-free (see `docs/PERF.md`).
+#[derive(Default)]
+pub struct LinearScratch {
+    /// the ABQ engine's arena (codes, packed planes, i64 accumulator, …)
+    pub abq: AbqScratch,
+    /// INT8 baseline working set
+    pub int8: Int8Scratch,
+    /// INT4 baseline working set
+    pub int4: Int4Scratch,
+}
+
+impl LinearScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// One projection, prepared for its backend.
 ///
-/// `forward` writes into a caller-provided scratch buffer so the decode
+/// `forward` writes into a caller-provided output buffer so the decode
 /// hot loop can reuse one allocation across the 7 block projections
-/// instead of allocating a fresh `Vec` per projection per step.
+/// instead of allocating a fresh `Vec` per projection per step;
+/// `forward_scratch` extends that discipline to every *intermediate* the
+/// projection computes.
 pub trait LinearOp: Send + Sync {
     /// `out[tokens, out_features] = x[tokens, in_features] · Wᵀ`.
     ///
@@ -35,6 +59,25 @@ pub trait LinearOp: Send + Sync {
 
     /// Packed weight footprint in bytes (Table 12 memory accounting).
     fn weight_bytes(&self) -> usize;
+
+    /// [`LinearOp::forward`] with a caller-owned scratch arena for all
+    /// per-call working state (activation quantization, packing, integer
+    /// accumulators). The decode hot loop calls this with one arena per
+    /// session; implementations should be allocation-free once the arena
+    /// is warm. Backends whose `forward` needs no intermediate storage
+    /// (or that wrap an external runtime with its own memory manager)
+    /// simply inherit this default, which ignores the arena — see
+    /// `docs/ENGINE_API.md` for the implement-vs-inherit guidance.
+    fn forward_scratch(
+        &self,
+        x: &[f32],
+        tokens: usize,
+        scratch: &mut LinearScratch,
+        out: &mut [f32],
+    ) {
+        let _ = scratch;
+        self.forward(x, tokens, out);
+    }
 
     /// Allocating convenience wrapper around [`LinearOp::forward`].
     fn forward_alloc(&self, x: &[f32], tokens: usize) -> Vec<f32> {
@@ -142,6 +185,16 @@ impl LinearOp for Int8Op {
         self.0.forward_into(x, tokens, out);
     }
 
+    fn forward_scratch(
+        &self,
+        x: &[f32],
+        tokens: usize,
+        scratch: &mut LinearScratch,
+        out: &mut [f32],
+    ) {
+        self.0.forward_scratch(x, tokens, &mut scratch.int8, out);
+    }
+
     fn out_features(&self) -> usize {
         self.0.n
     }
@@ -182,6 +235,16 @@ struct Int4Op(Int4Gemm);
 impl LinearOp for Int4Op {
     fn forward(&self, x: &[f32], tokens: usize, out: &mut [f32]) {
         self.0.forward_into(x, tokens, out);
+    }
+
+    fn forward_scratch(
+        &self,
+        x: &[f32],
+        tokens: usize,
+        scratch: &mut LinearScratch,
+        out: &mut [f32],
+    ) {
+        self.0.forward_scratch(x, tokens, &mut scratch.int4, out);
     }
 
     fn out_features(&self) -> usize {
@@ -240,6 +303,16 @@ struct AbqOp {
 impl LinearOp for AbqOp {
     fn forward(&self, x: &[f32], tokens: usize, out: &mut [f32]) {
         self.lin.forward_into(x, tokens, self.opt, out);
+    }
+
+    fn forward_scratch(
+        &self,
+        x: &[f32],
+        tokens: usize,
+        scratch: &mut LinearScratch,
+        out: &mut [f32],
+    ) {
+        self.lin.forward_scratch(x, tokens, self.opt, &mut scratch.abq, out);
     }
 
     fn out_features(&self) -> usize {
@@ -320,5 +393,30 @@ mod tests {
     fn int4_rejects_odd_k() {
         let w = vec![0.0f32; 4 * 7];
         assert!(Int4Backend.prepare(&w, 4, 7, &PrepareCtx::none()).is_err());
+    }
+
+    #[test]
+    fn forward_scratch_matches_forward_on_every_default_backend() {
+        let (out_f, in_f) = (12usize, 32usize);
+        let w: Vec<f32> = (0..out_f * in_f).map(|i| ((i % 19) as f32 - 9.0) / 40.0).collect();
+        let backends: Vec<Box<dyn LinearBackend>> = vec![
+            Box::new(Fp32Backend),
+            Box::new(Int8Backend),
+            Box::new(Int4Backend),
+            Box::new(AbqBackend::new("w2*a8".parse().unwrap())),
+            Box::new(AbqBackend::new("w4a4".parse().unwrap())),
+        ];
+        let mut scratch = LinearScratch::new();
+        for be in &backends {
+            let op = be.prepare(&w, out_f, in_f, &PrepareCtx::none()).unwrap();
+            for tokens in [1usize, 3] {
+                let x: Vec<f32> =
+                    (0..tokens * in_f).map(|i| ((i % 7) as f32 - 3.0) / 2.0).collect();
+                let want = op.forward_alloc(&x, tokens);
+                let mut got = vec![0f32; tokens * out_f];
+                op.forward_scratch(&x, tokens, &mut scratch, &mut got);
+                assert_eq!(got, want, "backend {} tokens {tokens}", be.name());
+            }
+        }
     }
 }

@@ -41,7 +41,8 @@ pub mod registry;
 pub use api::{generate, EngineSession, EngineSpec, Execution, InferenceEngine, MemoryReport};
 pub use builder::{backend_tag, EngineBuilder};
 pub use linear::{
-    AbqBackend, Fp32Backend, Int4Backend, Int8Backend, LinearBackend, LinearOp, PrepareCtx,
+    AbqBackend, Fp32Backend, Int4Backend, Int8Backend, LinearBackend, LinearOp, LinearScratch,
+    PrepareCtx,
 };
 pub use native::NativeEngine;
 pub use registry::{BackendFactory, BackendOptions, BackendRegistry};

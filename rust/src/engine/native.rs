@@ -1,12 +1,18 @@
 //! [`InferenceEngine`] over the rust-native [`Transformer`]: host-resident
 //! KV caches, batched decode across sessions in a single GEMM (the
 //! GEMM-vs-GEMV axis the ABQ engine optimises).
+//!
+//! Each session owns a [`ForwardScratch`] arena alongside its KV cache;
+//! prefill and decode thread it into the model so the steady-state decode
+//! loop reuses one set of buffers across the 7 block projections, all
+//! layers, and all steps (`docs/PERF.md`). Batched decode borrows the
+//! first session's arena for the whole batch.
 
 use std::any::Any;
 
 use anyhow::{anyhow, Result};
 
-use crate::model::{KvCache, Transformer};
+use crate::model::{ForwardScratch, KvCache, Transformer};
 
 use super::api::{EngineSession, EngineSpec, Execution, InferenceEngine, MemoryReport};
 
@@ -33,6 +39,8 @@ impl NativeEngine {
 
 struct NativeSession {
     cache: KvCache,
+    /// per-session forward arena, reused across prefill and decode steps
+    scratch: ForwardScratch,
 }
 
 impl EngineSession for NativeSession {
@@ -49,7 +57,8 @@ impl EngineSession for NativeSession {
     }
 
     fn fork(&self) -> Result<Box<dyn EngineSession>> {
-        Ok(Box::new(NativeSession { cache: self.cache.clone() }))
+        // the fork gets its own (cold) arena; it warms on first use
+        Ok(Box::new(NativeSession { cache: self.cache.clone(), scratch: ForwardScratch::new() }))
     }
 
     fn as_any_mut(&mut self) -> &mut dyn Any {
@@ -69,11 +78,15 @@ impl InferenceEngine for NativeEngine {
     }
 
     fn new_session(&self) -> Result<Box<dyn EngineSession>> {
-        Ok(Box::new(NativeSession { cache: KvCache::new(&self.model.cfg) }))
+        Ok(Box::new(NativeSession {
+            cache: KvCache::new(&self.model.cfg),
+            scratch: ForwardScratch::new(),
+        }))
     }
 
     fn prefill(&self, tokens: &[u32], session: &mut dyn EngineSession) -> Result<Vec<f32>> {
-        self.model.prefill(tokens, &mut downcast(session)?.cache)
+        let NativeSession { cache, scratch } = downcast(session)?;
+        self.model.prefill_scratch(tokens, cache, scratch)
     }
 
     fn decode_step(
@@ -81,11 +94,21 @@ impl InferenceEngine for NativeEngine {
         tokens: &[u32],
         sessions: &mut [&mut dyn EngineSession],
     ) -> Result<Vec<f32>> {
+        // split each session into (cache, scratch); the batch runs on the
+        // first session's arena
         let mut caches: Vec<&mut KvCache> = Vec::with_capacity(sessions.len());
+        let mut scratch: Option<&mut ForwardScratch> = None;
         for s in sessions.iter_mut() {
-            caches.push(&mut downcast(&mut **s)?.cache);
+            let NativeSession { cache, scratch: sc } = downcast(&mut **s)?;
+            caches.push(cache);
+            if scratch.is_none() {
+                scratch = Some(sc);
+            }
         }
-        self.model.decode_step(tokens, &mut caches)
+        match scratch {
+            Some(sc) => self.model.decode_step_scratch(tokens, &mut caches, sc),
+            None => self.model.decode_step(tokens, &mut caches),
+        }
     }
 
     fn memory_report(&self) -> MemoryReport {

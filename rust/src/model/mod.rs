@@ -11,5 +11,5 @@ pub mod weights;
 pub use config::{ModelConfig, LLAMA_13B, LLAMA_30B, LLAMA_7B, TINY};
 pub use kv_cache::KvCache;
 pub use sampler::{argmax, log_prob, Sampler, Sampling};
-pub use transformer::{Block, Transformer, LINEAR_NAMES};
+pub use transformer::{Block, ForwardScratch, Transformer, LINEAR_NAMES};
 pub use weights::{Tensor, WeightPack};

@@ -9,11 +9,18 @@
 //! end-to-end benches (Fig. 6 / Table 12) sweep. Construction happens
 //! through [`crate::engine::EngineBuilder`]; this type is the native
 //! execution substrate behind the `InferenceEngine` trait.
+//!
+//! The forward passes are scratch-threaded: all intermediates (residual,
+//! projection outputs, attention scores, RoPE tables, and each backend's
+//! per-call working set) live in a [`ForwardScratch`] arena owned by the
+//! engine session and reused across layers, projections and steps. A
+//! steady-state single-token decode step performs no heap allocation
+//! beyond the returned logits (`docs/PERF.md`).
 
 use anyhow::{bail, Result};
 
-use crate::baselines::gemm_fp32;
-use crate::engine::{LinearBackend, LinearOp, PrepareCtx};
+use crate::baselines::gemm_fp32_into;
+use crate::engine::{LinearBackend, LinearOp, LinearScratch, PrepareCtx};
 
 use super::config::ModelConfig;
 use super::kv_cache::KvCache;
@@ -76,10 +83,26 @@ pub fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32]) {
 
 /// RoPE tables for positions `[pos0, pos0+len)`: (cos, sin) `[len, hd/2]`.
 pub fn rope_tables(cfg: &ModelConfig, pos0: usize, len: usize) -> (Vec<f32>, Vec<f32>) {
-    let hd = cfg.head_dim();
-    let half = hd / 2;
+    let half = cfg.head_dim() / 2;
     let mut cos = vec![0f32; len * half];
     let mut sin = vec![0f32; len * half];
+    rope_tables_into(cfg, pos0, len, &mut cos, &mut sin);
+    (cos, sin)
+}
+
+/// [`rope_tables`] writing the `[len, hd/2]` tables into caller-owned
+/// buffers (prefixes of `cos`/`sin`; the decode scratch reuses one pair
+/// across sequences and steps).
+pub fn rope_tables_into(
+    cfg: &ModelConfig,
+    pos0: usize,
+    len: usize,
+    cos: &mut [f32],
+    sin: &mut [f32],
+) {
+    let hd = cfg.head_dim();
+    let half = hd / 2;
+    debug_assert!(cos.len() >= len * half && sin.len() >= len * half);
     for p in 0..len {
         for i in 0..half {
             let inv = 1.0 / cfg.rope_base.powf(2.0 * i as f32 / hd as f32);
@@ -88,7 +111,6 @@ pub fn rope_tables(cfg: &ModelConfig, pos0: usize, len: usize) -> (Vec<f32>, Vec
             sin[p * half + i] = ang.sin();
         }
     }
-    (cos, sin)
 }
 
 /// Apply RoPE in place to `x` `[len, d_model]` seen as `[len, H, hd]`.
@@ -127,10 +149,16 @@ fn softmax_inplace(row: &mut [f32]) {
     }
 }
 
-/// Per-forward scratch: one buffer per projection role, reused across all
-/// layers (and, within a layer, across the 7 block projections) instead of
-/// allocating a fresh `Vec` per projection per step.
-struct Scratch {
+/// Per-forward working memory, owned by the engine session and reused
+/// across all layers (and, within a layer, across the 7 block
+/// projections), across decode steps, and across the linears' own
+/// intermediates (via the embedded [`LinearScratch`]). Buffers grow to
+/// the largest (tokens, model) shape seen and are then reused
+/// allocation-free.
+#[derive(Default)]
+pub struct ForwardScratch {
+    /// residual stream `[tokens, d]`
+    x: Vec<f32>,
     h: Vec<f32>,
     q: Vec<f32>,
     k: Vec<f32>,
@@ -140,21 +168,39 @@ struct Scratch {
     gate: Vec<f32>,
     up: Vec<f32>,
     act: Vec<f32>,
+    /// attention scores for one (token, head) pair, `[max_seq]`
+    scores: Vec<f32>,
+    /// RoPE tables `[tokens, hd/2]`
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+    /// backend scratch arena threaded through every projection
+    lin: LinearScratch,
 }
 
-impl Scratch {
-    fn new(tokens: usize, d: usize, d_ff: usize) -> Self {
-        Scratch {
-            h: vec![0f32; tokens * d],
-            q: vec![0f32; tokens * d],
-            k: vec![0f32; tokens * d],
-            v: vec![0f32; tokens * d],
-            ctx: vec![0f32; tokens * d],
-            proj: vec![0f32; tokens * d],
-            gate: vec![0f32; tokens * d_ff],
-            up: vec![0f32; tokens * d_ff],
-            act: vec![0f32; tokens * d_ff],
-        }
+impl ForwardScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size every buffer for a `tokens`-row forward of `cfg`. `resize`
+    /// sets exact logical lengths; capacity only ever grows, so once the
+    /// arena has seen the largest shape this allocates nothing.
+    fn ensure(&mut self, tokens: usize, cfg: &ModelConfig) {
+        let (d, d_ff) = (cfg.d_model, cfg.d_ff);
+        let half = cfg.head_dim() / 2;
+        self.x.resize(tokens * d, 0.0);
+        self.h.resize(tokens * d, 0.0);
+        self.q.resize(tokens * d, 0.0);
+        self.k.resize(tokens * d, 0.0);
+        self.v.resize(tokens * d, 0.0);
+        self.ctx.resize(tokens * d, 0.0);
+        self.proj.resize(tokens * d, 0.0);
+        self.gate.resize(tokens * d_ff, 0.0);
+        self.up.resize(tokens * d_ff, 0.0);
+        self.act.resize(tokens * d_ff, 0.0);
+        self.scores.resize(cfg.max_seq, 0.0);
+        self.cos.resize(tokens.max(1) * half, 0.0);
+        self.sin.resize(tokens.max(1) * half, 0.0);
     }
 }
 
@@ -254,36 +300,47 @@ impl Transformer {
     // forward
     // -----------------------------------------------------------------------
 
-    fn embed(&self, tokens: &[u32]) -> Vec<f32> {
+    fn embed_into(&self, tokens: &[u32], x: &mut [f32]) {
         let d = self.cfg.d_model;
-        let mut x = vec![0f32; tokens.len() * d];
+        debug_assert_eq!(x.len(), tokens.len() * d);
         for (t, &tok) in tokens.iter().enumerate() {
             let off = tok as usize * d;
             x[t * d..(t + 1) * d].copy_from_slice(&self.tok_emb[off..off + d]);
         }
-        x
     }
 
-    /// Prefill one sequence, filling `cache` and returning logits `[S, V]`.
+    /// Prefill one sequence, filling `cache` and returning logits `[S, V]`
+    /// (fresh scratch; sessions use [`Transformer::prefill_scratch`]).
     pub fn prefill(&self, tokens: &[u32], cache: &mut KvCache) -> Result<Vec<f32>> {
+        let mut scratch = ForwardScratch::new();
+        self.prefill_scratch(tokens, cache, &mut scratch)
+    }
+
+    /// [`Transformer::prefill`] over a caller-owned scratch arena.
+    pub fn prefill_scratch(
+        &self,
+        tokens: &[u32],
+        cache: &mut KvCache,
+        s: &mut ForwardScratch,
+    ) -> Result<Vec<f32>> {
         let s_len = tokens.len();
         if s_len > cache.remaining() {
             bail!("sequence longer than KV capacity");
         }
         let (d, hd, nh) = (self.cfg.d_model, self.cfg.head_dim(), self.cfg.n_heads);
         let pos0 = cache.pos;
-        let (cos, sin) = rope_tables(&self.cfg, pos0, s_len);
-        let mut x = self.embed(tokens);
-        let mut s = Scratch::new(s_len, d, self.cfg.d_ff);
+        s.ensure(s_len, &self.cfg);
+        rope_tables_into(&self.cfg, pos0, s_len, &mut s.cos, &mut s.sin);
+        self.embed_into(tokens, &mut s.x);
         let scale = 1.0 / (hd as f32).sqrt();
 
         for (li, blk) in self.blocks.iter().enumerate() {
-            rmsnorm(&x, &blk.ln1, &mut s.h);
-            blk.wq.forward(&s.h, s_len, &mut s.q);
-            blk.wk.forward(&s.h, s_len, &mut s.k);
-            blk.wv.forward(&s.h, s_len, &mut s.v);
-            apply_rope(&mut s.q, &self.cfg, &cos, &sin, s_len);
-            apply_rope(&mut s.k, &self.cfg, &cos, &sin, s_len);
+            rmsnorm(&s.x, &blk.ln1, &mut s.h);
+            blk.wq.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.q);
+            blk.wk.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.k);
+            blk.wv.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.v);
+            apply_rope(&mut s.q, &self.cfg, &s.cos, &s.sin, s_len);
+            apply_rope(&mut s.k, &self.cfg, &s.cos, &s.sin, s_len);
             for t in 0..s_len {
                 cache.write(li, pos0 + t, &s.k[t * d..(t + 1) * d], &s.v[t * d..(t + 1) * d]);
             }
@@ -293,67 +350,94 @@ impl Transformer {
                 let keys = pos0 + t + 1;
                 for hh in 0..nh {
                     let qv = &s.q[t * d + hh * hd..t * d + (hh + 1) * hd];
-                    let mut scores = vec![0f32; keys];
-                    for kp in 0..keys {
+                    let scores = &mut s.scores[..keys];
+                    for (kp, sc) in scores.iter_mut().enumerate() {
                         let kr = cache.k_row(li, kp);
                         let kv = &kr[hh * hd..(hh + 1) * hd];
-                        scores[kp] = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
+                        *sc = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
                     }
-                    softmax_inplace(&mut scores);
+                    softmax_inplace(scores);
                     let crow = &mut s.ctx[t * d + hh * hd..t * d + (hh + 1) * hd];
-                    for kp in 0..keys {
+                    for (kp, &a) in scores.iter().enumerate() {
                         let vr = cache.v_row(li, kp);
                         let vv = &vr[hh * hd..(hh + 1) * hd];
-                        let a = scores[kp];
                         for i in 0..hd {
                             crow[i] += a * vv[i];
                         }
                     }
                 }
             }
-            blk.wo.forward(&s.ctx, s_len, &mut s.proj);
-            for i in 0..x.len() {
-                x[i] += s.proj[i];
+            blk.wo.forward_scratch(&s.ctx, s_len, &mut s.lin, &mut s.proj);
+            for i in 0..s.x.len() {
+                s.x[i] += s.proj[i];
             }
-            rmsnorm(&x, &blk.ln2, &mut s.h);
-            blk.gate.forward(&s.h, s_len, &mut s.gate);
-            blk.up.forward(&s.h, s_len, &mut s.up);
+            rmsnorm(&s.x, &blk.ln2, &mut s.h);
+            blk.gate.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.gate);
+            blk.up.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.up);
             for i in 0..s.act.len() {
                 s.act[i] = silu(s.gate[i]) * s.up[i];
             }
-            blk.down.forward(&s.act, s_len, &mut s.proj);
-            for i in 0..x.len() {
-                x[i] += s.proj[i];
+            blk.down.forward_scratch(&s.act, s_len, &mut s.lin, &mut s.proj);
+            for i in 0..s.x.len() {
+                s.x[i] += s.proj[i];
             }
         }
         cache.pos = pos0 + s_len;
-        rmsnorm(&x.clone(), &self.ln_f, &mut x);
-        Ok(gemm_fp32(&x, &self.head, s_len, self.cfg.vocab, d))
+        rmsnorm(&s.x, &self.ln_f, &mut s.h);
+        let mut logits = vec![0f32; s_len * self.cfg.vocab];
+        gemm_fp32_into(&s.h, &self.head, s_len, self.cfg.vocab, d, &mut logits);
+        Ok(logits)
     }
 
-    /// One decode step for a batch of sequences (linears batched over B —
-    /// the GEMM-vs-GEMV axis the engine benches sweep). `tokens[i]` extends
+    /// One decode step for a batch of sequences (fresh scratch; sessions
+    /// use [`Transformer::decode_step_scratch`]). `tokens[i]` extends
     /// `caches[i]`. Returns logits `[B, V]`.
     pub fn decode_step(&self, tokens: &[u32], caches: &mut [&mut KvCache]) -> Result<Vec<f32>> {
+        let mut scratch = ForwardScratch::new();
+        self.decode_step_scratch(tokens, caches, &mut scratch)
+    }
+
+    /// One decode step over a caller-owned scratch arena — the hot path.
+    /// Linears are batched over B (the GEMM-vs-GEMV axis the engine
+    /// benches sweep). Steady state allocates only the returned logits.
+    pub fn decode_step_scratch(
+        &self,
+        tokens: &[u32],
+        caches: &mut [&mut KvCache],
+        s: &mut ForwardScratch,
+    ) -> Result<Vec<f32>> {
         let b = tokens.len();
         if b != caches.len() {
             bail!("batch size mismatch");
         }
         let (d, hd, nh) = (self.cfg.d_model, self.cfg.head_dim(), self.cfg.n_heads);
+        let half = hd / 2;
         let scale = 1.0 / (hd as f32).sqrt();
-        let mut x = self.embed(tokens);
-        let mut s = Scratch::new(b, d, self.cfg.d_ff);
+        s.ensure(b, &self.cfg);
+        self.embed_into(tokens, &mut s.x);
+        // per-sequence RoPE tables at each sequence's own position —
+        // positions are fixed for the whole step, so build once here, not
+        // once per layer
+        for (bi, cache) in caches.iter().enumerate() {
+            rope_tables_into(
+                &self.cfg,
+                cache.pos,
+                1,
+                &mut s.cos[bi * half..(bi + 1) * half],
+                &mut s.sin[bi * half..(bi + 1) * half],
+            );
+        }
 
         for (li, blk) in self.blocks.iter().enumerate() {
-            rmsnorm(&x, &blk.ln1, &mut s.h);
-            blk.wq.forward(&s.h, b, &mut s.q);
-            blk.wk.forward(&s.h, b, &mut s.k);
-            blk.wv.forward(&s.h, b, &mut s.v);
-            // per-sequence rope at its own position
-            for (bi, cache) in caches.iter().enumerate() {
-                let (cos, sin) = rope_tables(&self.cfg, cache.pos, 1);
-                apply_rope(&mut s.q[bi * d..(bi + 1) * d], &self.cfg, &cos, &sin, 1);
-                apply_rope(&mut s.k[bi * d..(bi + 1) * d], &self.cfg, &cos, &sin, 1);
+            rmsnorm(&s.x, &blk.ln1, &mut s.h);
+            blk.wq.forward_scratch(&s.h, b, &mut s.lin, &mut s.q);
+            blk.wk.forward_scratch(&s.h, b, &mut s.lin, &mut s.k);
+            blk.wv.forward_scratch(&s.h, b, &mut s.lin, &mut s.v);
+            for bi in 0..b {
+                let (cos, sin) =
+                    (&s.cos[bi * half..(bi + 1) * half], &s.sin[bi * half..(bi + 1) * half]);
+                apply_rope(&mut s.q[bi * d..(bi + 1) * d], &self.cfg, cos, sin, 1);
+                apply_rope(&mut s.k[bi * d..(bi + 1) * d], &self.cfg, cos, sin, 1);
             }
             s.ctx.fill(0.0);
             for (bi, cache) in caches.iter_mut().enumerate() {
@@ -362,44 +446,45 @@ impl Transformer {
                 let keys = pos + 1;
                 for hh in 0..nh {
                     let qv = &s.q[bi * d + hh * hd..bi * d + (hh + 1) * hd];
-                    let mut scores = vec![0f32; keys];
-                    for kp in 0..keys {
+                    let scores = &mut s.scores[..keys];
+                    for (kp, sc) in scores.iter_mut().enumerate() {
                         let kr = cache.k_row(li, kp);
                         let kv = &kr[hh * hd..(hh + 1) * hd];
-                        scores[kp] = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
+                        *sc = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
                     }
-                    softmax_inplace(&mut scores);
+                    softmax_inplace(scores);
                     let crow = &mut s.ctx[bi * d + hh * hd..bi * d + (hh + 1) * hd];
-                    for kp in 0..keys {
+                    for (kp, &a) in scores.iter().enumerate() {
                         let vr = cache.v_row(li, kp);
                         let vv = &vr[hh * hd..(hh + 1) * hd];
-                        let a = scores[kp];
                         for i in 0..hd {
                             crow[i] += a * vv[i];
                         }
                     }
                 }
             }
-            blk.wo.forward(&s.ctx, b, &mut s.proj);
-            for i in 0..x.len() {
-                x[i] += s.proj[i];
+            blk.wo.forward_scratch(&s.ctx, b, &mut s.lin, &mut s.proj);
+            for i in 0..s.x.len() {
+                s.x[i] += s.proj[i];
             }
-            rmsnorm(&x, &blk.ln2, &mut s.h);
-            blk.gate.forward(&s.h, b, &mut s.gate);
-            blk.up.forward(&s.h, b, &mut s.up);
+            rmsnorm(&s.x, &blk.ln2, &mut s.h);
+            blk.gate.forward_scratch(&s.h, b, &mut s.lin, &mut s.gate);
+            blk.up.forward_scratch(&s.h, b, &mut s.lin, &mut s.up);
             for i in 0..s.act.len() {
                 s.act[i] = silu(s.gate[i]) * s.up[i];
             }
-            blk.down.forward(&s.act, b, &mut s.proj);
-            for i in 0..x.len() {
-                x[i] += s.proj[i];
+            blk.down.forward_scratch(&s.act, b, &mut s.lin, &mut s.proj);
+            for i in 0..s.x.len() {
+                s.x[i] += s.proj[i];
             }
         }
         for cache in caches.iter_mut() {
             cache.pos += 1;
         }
-        rmsnorm(&x.clone(), &self.ln_f, &mut x);
-        Ok(gemm_fp32(&x, &self.head, b, self.cfg.vocab, d))
+        rmsnorm(&s.x, &self.ln_f, &mut s.h);
+        let mut logits = vec![0f32; b * self.cfg.vocab];
+        gemm_fp32_into(&s.h, &self.head, b, self.cfg.vocab, d, &mut logits);
+        Ok(logits)
     }
 
     /// Total block-weight bytes (Table 12 memory accounting).
@@ -475,6 +560,27 @@ mod tests {
         for i in 0..MICRO.vocab {
             assert!((batched[i] - la[i]).abs() < 1e-4);
             assert!((batched[MICRO.vocab + i] - lb[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn reused_scratch_matches_fresh_scratch() {
+        // one arena across prefill + many decode steps must be
+        // bit-identical to fresh scratch every call
+        let m = Transformer::random(MICRO, &Fp32Backend, 5).unwrap();
+        let toks = [3u32, 1, 4];
+        let mut shared = ForwardScratch::new();
+        let mut c1 = KvCache::new(&MICRO);
+        let mut c2 = KvCache::new(&MICRO);
+        let l1 = m.prefill_scratch(&toks, &mut c1, &mut shared).unwrap();
+        let l2 = m.prefill(&toks, &mut c2).unwrap();
+        assert_eq!(l1, l2);
+        for step in 0..4u32 {
+            let mut b1 = [&mut c1];
+            let s1 = m.decode_step_scratch(&[step + 7], &mut b1, &mut shared).unwrap();
+            let mut b2 = [&mut c2];
+            let s2 = m.decode_step(&[step + 7], &mut b2).unwrap();
+            assert_eq!(s1, s2, "step {step}");
         }
     }
 

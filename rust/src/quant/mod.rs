@@ -7,7 +7,7 @@ pub mod smooth;
 
 pub use config::{QuantSpec, WAConfig};
 pub use quantizer::{
-    dequantize_value, qparams_minmax, quantize_act_per_token, quantize_value,
-    quantize_weight_rows, QParams, QuantizedRows,
+    dequantize_value, qparams_minmax, quantize_act_per_token, quantize_act_per_token_into,
+    quantize_value, quantize_weight_rows, QParams, QuantizedRows,
 };
 pub use smooth::{apply_balance_act, apply_balance_weight, smooth_scales};

@@ -84,16 +84,25 @@ pub fn quantize_weight_rows(
     QuantizedRows { codes, params, rows, cols }
 }
 
-/// Per-token activation quantization of `x` `[tokens, features]`.
-pub fn quantize_act_per_token(
+/// Per-token activation quantization writing codes and per-token params
+/// into caller-owned buffers (cleared + resized; with warm capacity the
+/// call is allocation-free). The decode hot path
+/// ([`crate::abq::QuantizedLinear::forward_scratch`]) quantizes through
+/// this form so steady-state single-token decode never touches the heap.
+pub fn quantize_act_per_token_into(
     x: &[f32],
     tokens: usize,
     features: usize,
     spec: &QuantSpec,
-) -> QuantizedRows {
+    codes: &mut Vec<u8>,
+    zps: &mut Vec<i32>,
+    deltas: &mut Vec<f32>,
+) {
     assert_eq!(x.len(), tokens * features);
-    let mut codes = vec![0u8; tokens * features];
-    let mut params = Vec::with_capacity(tokens);
+    codes.clear();
+    codes.resize(tokens * features, 0);
+    zps.clear();
+    deltas.clear();
     for t in 0..tokens {
         let row = &x[t * features..(t + 1) * features];
         let (mut lo, mut hi) = (0f32, 0f32); // keep zero representable
@@ -105,8 +114,29 @@ pub fn quantize_act_per_token(
         for (c, &v) in row.iter().enumerate() {
             codes[t * features + c] = quantize_value(v, p, spec);
         }
-        params.push(p);
+        zps.push(p.zp);
+        deltas.push(p.delta);
     }
+}
+
+/// Per-token activation quantization of `x` `[tokens, features]`
+/// (allocating wrapper over [`quantize_act_per_token_into`] — one
+/// quantization loop, no drift between the two forms).
+pub fn quantize_act_per_token(
+    x: &[f32],
+    tokens: usize,
+    features: usize,
+    spec: &QuantSpec,
+) -> QuantizedRows {
+    let mut codes = Vec::new();
+    let mut zps = Vec::new();
+    let mut deltas = Vec::new();
+    quantize_act_per_token_into(x, tokens, features, spec, &mut codes, &mut zps, &mut deltas);
+    let params = zps
+        .iter()
+        .zip(&deltas)
+        .map(|(&zp, &delta)| QParams { delta, zp })
+        .collect();
     QuantizedRows { codes, params, rows: tokens, cols: features }
 }
 

@@ -1,9 +1,27 @@
 //! Minimal data-parallel helpers (in-tree rayon substitute; the build is
-//! offline — DESIGN.md §5). Scoped threads over contiguous index ranges:
-//! deterministic work assignment, no work stealing, no allocator churn in
-//! the hot loop.
+//! offline — DESIGN.md §5) backed by a **persistent worker pool**.
+//!
+//! The original implementation spawned fresh scoped threads on every
+//! invocation — a per-GEMM cost of several microseconds of thread setup
+//! plus one heap-allocated result `Vec` per worker, paid once per
+//! projection per decode step. The decode hot path (see `docs/PERF.md`)
+//! requires steady-state execution with **zero heap allocations and no
+//! thread churn**, so workers are now spawned once (lazily, on first use),
+//! parked on a condvar, and handed lifetime-erased range jobs:
+//!
+//! * deterministic work assignment — slot `s` always receives the
+//!   contiguous range `[s·per, (s+1)·per)`, as before; no work stealing;
+//! * dispatch allocates nothing: the job is a borrowed closure published
+//!   through a fixed slot under a mutex, and only the workers a job
+//!   actually needs are waited on;
+//! * one job owns the pool at a time; a concurrent dispatcher computes
+//!   its ranges inline on its own core instead of blocking idle, and a
+//!   worker that itself calls into `par` (nested parallelism) runs the
+//!   nested job inline, so the pool can never deadlock on itself.
 
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
 
 static CACHED: AtomicUsize = AtomicUsize::new(0);
 
@@ -27,44 +45,270 @@ pub fn num_threads() -> usize {
 
 /// Override the worker count (the `EngineBuilder::threads` hook). Wins
 /// over `ABQ_THREADS`; values < 1 are ignored.
+///
+/// The pool itself is sized from `num_threads()` at the moment of its
+/// first parallel call; raising the count afterwards is capped at the
+/// pool size, lowering it simply leaves the extra workers idle.
 pub fn set_threads(n: usize) {
     if n >= 1 {
         CACHED.store(n, Ordering::Relaxed);
     }
 }
 
+/// Raw-pointer wrapper that may cross thread boundaries. Used by the GEMM
+/// kernels to let pool workers write *disjoint* regions of one shared
+/// output buffer without per-worker result allocations. Safety is the
+/// caller's obligation: regions touched by different workers must not
+/// overlap for the duration of the parallel call.
+pub struct SendPtr<T>(pub *mut T);
+
+// manual impls: the pointer is Copy regardless of T (derive would bound T)
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<T> Copy for SendPtr<T> {}
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// A published job: lifetime-erased pointer to the dispatcher's closure.
+/// Workers call it with their slot index while the dispatcher is blocked
+/// inside [`run_job`], which is what keeps the borrow alive.
+#[derive(Clone, Copy)]
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+    /// number of participating slots (dispatcher is slot 0); workers with
+    /// `slot >= slots` skip the job and are not waited on
+    slots: usize,
+}
+
+unsafe impl Send for Job {}
+
+struct State {
+    epoch: u64,
+    job: Option<Job>,
+    remaining: usize,
+    panicked: bool,
+}
+
+struct Pool {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// serializes dispatchers (one job in flight at a time)
+    dispatch: Mutex<()>,
+    /// parked worker threads, excluding the dispatching thread (slot 0)
+    workers: usize,
+}
+
+static POOL: OnceLock<&'static Pool> = OnceLock::new();
+
+thread_local! {
+    /// True on pool workers, and on a dispatcher thread while it executes
+    /// its own slot of a job. Any nested `par` call made while set runs
+    /// inline — the pool never waits on itself.
+    static IN_PAR_REGION: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+fn in_par_region() -> bool {
+    IN_PAR_REGION.with(|f| f.get())
+}
+
+fn pool() -> &'static Pool {
+    *POOL.get_or_init(|| {
+        let workers = num_threads().saturating_sub(1);
+        let p: &'static Pool = Box::leak(Box::new(Pool {
+            state: Mutex::new(State { epoch: 0, job: None, remaining: 0, panicked: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            dispatch: Mutex::new(()),
+            workers,
+        }));
+        for slot in 1..=workers {
+            std::thread::Builder::new()
+                .name(format!("abq-par-{slot}"))
+                .spawn(move || worker_loop(p, slot))
+                .expect("spawn abq par worker");
+        }
+        p
+    })
+}
+
+fn worker_loop(p: &'static Pool, slot: usize) {
+    IN_PAR_REGION.with(|f| f.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut g = p.state.lock().unwrap();
+            loop {
+                if g.epoch != seen {
+                    if let Some(j) = g.job {
+                        seen = g.epoch;
+                        break j;
+                    }
+                }
+                g = p.work_cv.wait(g).unwrap();
+            }
+        };
+        if slot >= job.slots {
+            // not needed for this job; the dispatcher is not waiting on us
+            continue;
+        }
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| unsafe { (&*job.f)(slot) }));
+        let mut g = p.state.lock().unwrap();
+        if res.is_err() {
+            g.panicked = true;
+        }
+        g.remaining -= 1;
+        if g.remaining == 0 {
+            p.done_cv.notify_one();
+        }
+    }
+}
+
+/// Publish `f` to the pool, run slot 0 on the calling thread, wait for
+/// the `slots - 1` participating workers to finish. Allocation-free on
+/// the dispatch path. Returns false without running anything when another
+/// dispatcher currently owns the pool — the caller then computes inline
+/// on its own core instead of blocking idle (concurrent engine threads
+/// each make progress; the pool accelerates the uncontended case).
+fn run_job(f: &(dyn Fn(usize) + Sync), slots: usize) -> bool {
+    let p = pool();
+    let guard = match p.dispatch.try_lock() {
+        Ok(g) => g,
+        Err(_) => return false,
+    };
+    // Erase the borrow lifetime (fat pointer reinterpret): workers only
+    // dereference while this function is blocked below, so `f` strictly
+    // outlives every use.
+    let job = Job {
+        f: unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(f)
+        },
+        slots,
+    };
+    {
+        let mut g = p.state.lock().unwrap();
+        g.epoch = g.epoch.wrapping_add(1);
+        g.job = Some(job);
+        g.remaining = slots - 1;
+        g.panicked = false;
+        p.work_cv.notify_all();
+    }
+    IN_PAR_REGION.with(|c| c.set(true));
+    let caller = std::panic::catch_unwind(AssertUnwindSafe(|| f(0)));
+    IN_PAR_REGION.with(|c| c.set(false));
+    let worker_panicked = {
+        let mut g = p.state.lock().unwrap();
+        while g.remaining != 0 {
+            g = p.done_cv.wait(g).unwrap();
+        }
+        g.job = None;
+        g.panicked
+    };
+    drop(guard);
+    match caller {
+        Err(e) => std::panic::resume_unwind(e),
+        Ok(()) if worker_panicked => panic!("par worker panicked"),
+        Ok(()) => true,
+    }
+}
+
+/// Run `f(lo, hi)` over disjoint contiguous ranges covering `0..n`, in
+/// parallel on the persistent pool. The zero-allocation primitive every
+/// GEMM variant dispatches through: `f` writes its results straight into
+/// caller-owned storage (disjointness is the caller's contract).
+///
+/// Deterministic assignment: with `s` slots, slot `i` receives
+/// `[i·⌈n/s⌉, min((i+1)·⌈n/s⌉, n))`. Nested calls from inside a pool
+/// worker run `f(0, n)` inline.
+pub fn par_for_ranges<F>(n: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = num_threads();
+    if threads <= 1 || n == 1 || in_par_region() {
+        f(0, n);
+        return;
+    }
+    let p = pool();
+    let slots = (p.workers + 1).min(threads).min(n);
+    if slots <= 1 {
+        f(0, n);
+        return;
+    }
+    let per = n.div_ceil(slots);
+    let run = move |slot: usize| {
+        let lo = slot * per;
+        if lo >= n {
+            return;
+        }
+        let hi = (lo + per).min(n);
+        f(lo, hi);
+    };
+    if !run_job(&run, slots) {
+        // pool owned by a concurrent dispatcher: cover every range inline
+        for slot in 0..slots {
+            run(slot);
+        }
+    }
+}
+
 /// Map `f` over `0..n` in parallel; results returned in index order.
 ///
-/// Work is split into `num_threads()` contiguous ranges. `f` must be
-/// `Sync` (called concurrently from several threads).
+/// Work is split into contiguous ranges on the persistent pool. `f` must
+/// be `Sync` (called concurrently from several threads). One allocation:
+/// the result `Vec` itself — workers write elements in place, there are
+/// no per-worker partial vectors.
 pub fn par_map_indexed<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let workers = num_threads().min(n.max(1));
-    if workers <= 1 || n <= 1 {
-        return (0..n).map(f).collect();
+    use std::mem::{ManuallyDrop, MaybeUninit};
+    if n == 0 {
+        return Vec::new();
     }
-    let per = n.div_ceil(workers);
-    let mut parts: Vec<Vec<T>> = Vec::with_capacity(workers);
-    std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(workers);
-        for w in 0..workers {
-            let lo = w * per;
-            let hi = ((w + 1) * per).min(n);
-            let f = &f;
-            handles.push(scope.spawn(move || (lo..hi).map(f).collect::<Vec<T>>()));
+    let mut out: Vec<MaybeUninit<T>> = Vec::with_capacity(n);
+    // Safety: MaybeUninit elements need no initialization.
+    unsafe { out.set_len(n) };
+    let ptr = SendPtr(out.as_mut_ptr() as *mut T);
+    par_for_ranges(n, |lo, hi| {
+        // drop-guard: if `f` panics mid-range, destruct this range's
+        // already-written elements (elements of ranges that completed
+        // before the panic are abandoned undropped — the process is
+        // unwinding through `run_job`'s re-raise at that point)
+        struct Partial<U> {
+            base: SendPtr<U>,
+            lo: usize,
+            cur: usize,
         }
-        for h in handles {
-            parts.push(h.join().expect("par worker panicked"));
+        impl<U> Drop for Partial<U> {
+            fn drop(&mut self) {
+                for j in self.lo..self.cur {
+                    unsafe { std::ptr::drop_in_place(self.base.0.add(j)) };
+                }
+            }
         }
+        let mut part = Partial { base: ptr, lo, cur: lo };
+        for i in lo..hi {
+            // Safety: each index is written exactly once (ranges are
+            // disjoint and cover 0..n) within the Vec's capacity.
+            unsafe { part.base.0.add(i).write(f(i)) };
+            part.cur = i + 1;
+        }
+        std::mem::forget(part);
     });
-    let mut out = Vec::with_capacity(n);
-    for p in parts {
-        out.extend(p);
-    }
-    out
+    // Safety: every element was initialized above; reinterpret the
+    // storage as Vec<T> without dropping the MaybeUninit shell.
+    let mut shell = ManuallyDrop::new(out);
+    unsafe { Vec::from_raw_parts(shell.as_mut_ptr() as *mut T, n, shell.capacity()) }
 }
 
 /// Run `f(lo, hi)` over disjoint chunks of `0..n` in parallel, collecting
@@ -106,5 +350,57 @@ mod tests {
     fn empty_and_single() {
         assert!(par_map_indexed(0, |i| i).is_empty());
         assert_eq!(par_map_indexed(1, |i| i + 5), vec![5]);
+    }
+
+    #[test]
+    fn ranges_cover_exactly_once() {
+        use std::sync::atomic::AtomicU8;
+        let hits: Vec<AtomicU8> = (0..517).map(|_| AtomicU8::new(0)).collect();
+        par_for_ranges(517, |lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn pool_is_reused_across_many_calls() {
+        // steady-state dispatch must not spawn threads or lose results
+        for round in 0..200 {
+            let out = par_map_indexed(64, |i| i + round);
+            assert_eq!(out[63], 63 + round);
+        }
+    }
+
+    #[test]
+    fn nested_parallel_calls_run_inline() {
+        let out = par_map_indexed(8, |i| {
+            // nested: runs sequentially inside a pool worker, no deadlock
+            let inner: usize = par_map_indexed(16, |j| j).into_iter().sum();
+            inner + i
+        });
+        let want: usize = (0..16).sum();
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, want + i);
+        }
+    }
+
+    #[test]
+    fn concurrent_dispatchers_stay_correct() {
+        // whichever dispatcher owns the pool, the others fall back to
+        // inline execution — results must be identical either way
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let out = par_map_indexed(200, move |i| i * (t + 1));
+                    out.iter().sum::<usize>()
+                })
+            })
+            .collect();
+        let base: usize = (0..200).sum();
+        for (t, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap(), base * (t + 1));
+        }
     }
 }

@@ -1,0 +1,119 @@
+//! Counting-allocator proof of the zero-allocation decode hot path
+//! (ISSUE 2 tentpole): once the scratch arena, kernel-search cache and
+//! worker pool are warm, steady-state single-token `forward_scratch` must
+//! not touch the global allocator at all, and a full engine decode step
+//! must allocate only its unavoidable per-call outputs (the returned
+//! logits vector and the batch's cache list).
+//!
+//! This file is its own test binary (a `#[global_allocator]` is
+//! process-wide) and holds a single serial test so no concurrent test
+//! thread can perturb the counters.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use abq_llm::abq::{AbqScratch, OptLevel, QuantizedLinear};
+use abq_llm::engine::{EngineBuilder, EngineSession};
+use abq_llm::model::ModelConfig;
+use abq_llm::quant::WAConfig;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn steady_state_decode_does_not_allocate() {
+    // -- part 1: projection level ----------------------------------------
+    // a real decode-sized linear (large enough to engage the parallel
+    // kernels and the layout race)
+    let (out_f, in_f) = (256usize, 512usize);
+    let w: Vec<f32> = (0..out_f * in_f).map(|i| ((i % 37) as f32 - 18.0) / 70.0).collect();
+    let cfg: WAConfig = "w2*a8".parse().unwrap();
+    let lin = QuantizedLinear::from_weights_rtn(&w, out_f, in_f, cfg);
+    let x: Vec<f32> = (0..in_f).map(|i| ((i % 21) as f32 - 10.0) / 3.0).collect();
+    let mut out = vec![0f32; out_f];
+    let mut scratch = AbqScratch::new();
+    // warm: arena growth, auto-search, worker-pool spawn
+    for _ in 0..3 {
+        lin.forward_scratch(&x, 1, OptLevel::Auto, &mut scratch, &mut out);
+    }
+    let before = allocs();
+    for _ in 0..50 {
+        lin.forward_scratch(&x, 1, OptLevel::Auto, &mut scratch, &mut out);
+    }
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state forward_scratch must not allocate ({} allocations in 50 calls)",
+        after - before
+    );
+    std::hint::black_box(&out);
+
+    // -- part 2: engine level --------------------------------------------
+    // a full single-token decode step may allocate only the returned
+    // logits and the per-call session/cache lists — a small constant,
+    // independent of model size and step count
+    const MICRO: ModelConfig = ModelConfig {
+        name: "alloc-micro",
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 64,
+        max_seq: 128,
+        rope_base: 10000.0,
+    };
+    let engine = EngineBuilder::new()
+        .random_weights(MICRO, 9)
+        .backend("abq:w2*a8")
+        .build()
+        .unwrap();
+    let mut sess = engine.new_session().unwrap();
+    engine.prefill(&[1, 2, 3, 4], sess.as_mut()).unwrap();
+    for i in 0..8u32 {
+        let mut refs: [&mut dyn EngineSession; 1] = [sess.as_mut()];
+        engine.decode_step(&[i % 60], &mut refs).unwrap();
+    }
+    let steps = 32u32;
+    let before = allocs();
+    for i in 0..steps {
+        let mut refs: [&mut dyn EngineSession; 1] = [sess.as_mut()];
+        let logits = engine.decode_step(&[i % 60], &mut refs).unwrap();
+        std::hint::black_box(&logits);
+    }
+    let after = allocs();
+    let per_step = (after - before) as f64 / steps as f64;
+    assert!(
+        per_step <= 4.0,
+        "decode step should allocate only its outputs, got {per_step} allocations/step"
+    );
+}

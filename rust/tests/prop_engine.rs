@@ -6,7 +6,9 @@
 
 use std::sync::Arc;
 
-use abq_llm::abq::{gemm_int, gemm_int_reference, pipeline, BitPlanes, OptLevel, TileConfig};
+use abq_llm::abq::{
+    gemm_int, gemm_int_reference, pipeline, BitPlanes, OptLevel, PlaneLayout, TileConfig,
+};
 use abq_llm::engine::{
     EngineBuilder, EngineSession, InferenceEngine, LinearBackend, LinearOp, PrepareCtx,
 };
@@ -72,6 +74,30 @@ fn prop_arbitrary_tile_configs_are_safe() {
             rng.next_f64() < 0.5,
         );
         assert_eq!(gemm_int(&x, &w, &zx, &zw, OptLevel::Auto, Some(cfg)), want, "{cfg:?}");
+    });
+}
+
+#[test]
+fn prop_interleaved_weight_layout_is_bit_identical() {
+    // the auto-search may store weights `[row][plane][kword]`; every
+    // kernel variant must produce exactly the plane-major results
+    check("interleaved_layout", 32, |rng| {
+        let m = usize_in(rng, 1, 8);
+        let n = usize_in(rng, 1, 48);
+        let k = usize_in(rng, 1, 260);
+        let p = usize_in(rng, 1, 8);
+        let q = usize_in(rng, 1, 8);
+        let xc = vec_codes(rng, m * k, p);
+        let wc = vec_codes(rng, n * k, q);
+        let zx: Vec<i32> = (0..m).map(|_| usize_in(rng, 0, (1 << p) - 1) as i32).collect();
+        let zw: Vec<i32> = (0..n).map(|_| usize_in(rng, 0, (1 << q) - 1) as i32).collect();
+        let x = BitPlanes::pack(&xc, m, k, p);
+        let wi = BitPlanes::pack_with_layout(&wc, n, k, q, PlaneLayout::Interleaved);
+        let want = gemm_int_reference(&xc, &wc, m, n, k, &zx, &zw);
+        for opt in [OptLevel::Naive, OptLevel::Pipelined, OptLevel::GemvElim, OptLevel::Auto] {
+            assert_eq!(gemm_int(&x, &wi, &zx, &zw, opt, None), want, "{opt:?}");
+        }
+        assert_eq!(pipeline::gemm_staged(&x, &wi, &zx, &zw), want, "staged interleaved");
     });
 }
 

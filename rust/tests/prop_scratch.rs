@@ -1,0 +1,140 @@
+//! Scratch-path parity suite (ISSUE 2 satellite): `forward_scratch` over a
+//! long-lived arena must be **bit-identical** to the allocating forward,
+//! for every WAConfig shape, token count, and balance-vector setting —
+//! including when one arena is shared across differently-shaped
+//! projections, exactly as an engine session shares it across the 7 block
+//! projections.
+
+use abq_llm::abq::{AbqScratch, OptLevel, PlaneLayout, QuantizedLinear};
+use abq_llm::engine::{
+    AbqBackend, Fp32Backend, Int4Backend, Int8Backend, LinearBackend, LinearOp, LinearScratch,
+    PrepareCtx,
+};
+use abq_llm::quant::WAConfig;
+use abq_llm::util::prop::{check, vec_f32};
+
+const CONFIGS: [&str; 4] = ["w2*a8", "w4a4", "w8a8", "w3g64a6"];
+const TOKEN_COUNTS: [usize; 3] = [1, 7, 33];
+
+fn mk_linear(
+    cfg_str: &str,
+    out_f: usize,
+    in_f: usize,
+    seed: u64,
+    balance: bool,
+) -> QuantizedLinear {
+    let cfg: WAConfig = cfg_str.parse().unwrap();
+    let mut st = seed;
+    let mut nextf = move || {
+        st = st.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        ((st >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+    };
+    let w: Vec<f32> = (0..out_f * in_f).map(|_| nextf() * 0.2).collect();
+    let mut lin = QuantizedLinear::from_weights_rtn(&w, out_f, in_f, cfg);
+    if balance {
+        // a deterministic, strictly positive balance vector
+        lin.balance = Some((0..in_f).map(|i| 0.5 + ((i % 13) as f32) / 8.0).collect());
+    }
+    lin
+}
+
+#[test]
+fn scratch_is_bit_identical_across_configs_tokens_and_balance() {
+    // one arena for the whole sweep — shapes and configs interleave
+    let mut scratch = AbqScratch::new();
+    for (ci, cfg_str) in CONFIGS.iter().enumerate() {
+        for &tokens in &TOKEN_COUNTS {
+            for balance in [false, true] {
+                let (out_f, in_f) = (16 + 8 * ci, 64 + 32 * ci);
+                let lin = mk_linear(cfg_str, out_f, in_f, (ci * 31 + tokens) as u64, balance);
+                let x: Vec<f32> = (0..tokens * in_f)
+                    .map(|i| ((i % 29) as f32 - 14.0) / 5.0)
+                    .collect();
+                let want = lin.forward(&x, tokens, OptLevel::Auto);
+                let mut got = vec![0f32; tokens * out_f];
+                lin.forward_scratch(&x, tokens, OptLevel::Auto, &mut scratch, &mut got);
+                assert_eq!(
+                    got, want,
+                    "cfg {cfg_str} tokens {tokens} balance {balance}"
+                );
+                // f32 bit-level identity, not approximate equality
+                for (a, b) in got.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "cfg {cfg_str} bitwise");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_scratch_parity_random_shapes() {
+    check("scratch_parity", 24, |rng| {
+        let out_f = abq_llm::util::prop::usize_in(rng, 1, 40);
+        let in_f = abq_llm::util::prop::usize_in(rng, 1, 200);
+        let tokens = abq_llm::util::prop::usize_in(rng, 1, 12);
+        let cfg_str = CONFIGS[abq_llm::util::prop::usize_in(rng, 0, CONFIGS.len() - 1)];
+        let balance = rng.next_f64() < 0.5;
+        let lin = mk_linear(cfg_str, out_f, in_f, rng.next_u64(), balance);
+        let x = vec_f32(rng, tokens * in_f, -4.0, 4.0);
+        let want = lin.forward(&x, tokens, OptLevel::Auto);
+        let mut scratch = AbqScratch::new();
+        let mut got = vec![0f32; tokens * out_f];
+        // run twice over the same arena: the second call sees warm buffers
+        for round in 0..2 {
+            lin.forward_scratch(&x, tokens, OptLevel::Auto, &mut scratch, &mut got);
+            assert_eq!(got, want, "{cfg_str} t{tokens} balance {balance} round {round}");
+        }
+    });
+}
+
+#[test]
+fn scratch_parity_holds_for_interleaved_weights() {
+    // a linear whose planes were re-packed into the interleaved layout
+    // must produce bit-identical outputs through both forward paths
+    let lin = mk_linear("w2*a8", 24, 128, 77, true);
+    let mut il = lin.clone();
+    il.w = il.w.to_layout(PlaneLayout::Interleaved);
+    let mut scratch = AbqScratch::new();
+    for tokens in [1usize, 7] {
+        let x: Vec<f32> = (0..tokens * 128).map(|i| ((i % 17) as f32 - 8.0) / 3.0).collect();
+        let want = lin.forward(&x, tokens, OptLevel::Auto);
+        let got_plane = {
+            let mut out = vec![0f32; tokens * 24];
+            lin.forward_scratch(&x, tokens, OptLevel::Auto, &mut scratch, &mut out);
+            out
+        };
+        let got_il = {
+            let mut out = vec![0f32; tokens * 24];
+            il.forward_scratch(&x, tokens, OptLevel::Auto, &mut scratch, &mut out);
+            out
+        };
+        assert_eq!(got_plane, want, "plane-major tokens {tokens}");
+        assert_eq!(got_il, want, "interleaved tokens {tokens}");
+    }
+}
+
+#[test]
+fn engine_level_scratch_matches_alloc_for_all_backends() {
+    // through the LinearOp trait, arena shared across backend families
+    let (out_f, in_f) = (20usize, 48usize);
+    let w: Vec<f32> = (0..out_f * in_f).map(|i| ((i % 31) as f32 - 15.0) / 60.0).collect();
+    let backends: Vec<Box<dyn LinearBackend>> = vec![
+        Box::new(Fp32Backend),
+        Box::new(Int8Backend),
+        Box::new(Int4Backend),
+        Box::new(AbqBackend::new("w2*a8".parse().unwrap())),
+        Box::new(AbqBackend::new("w3g64a6".parse().unwrap())),
+    ];
+    let mut scratch = LinearScratch::new();
+    for be in &backends {
+        let op = be.prepare(&w, out_f, in_f, &PrepareCtx::none()).unwrap();
+        for &tokens in &TOKEN_COUNTS {
+            let x: Vec<f32> =
+                (0..tokens * in_f).map(|i| ((i % 23) as f32 - 11.0) / 4.0).collect();
+            let want = op.forward_alloc(&x, tokens);
+            let mut got = vec![0f32; tokens * out_f];
+            op.forward_scratch(&x, tokens, &mut scratch, &mut got);
+            assert_eq!(got, want, "backend {} tokens {tokens}", be.name());
+        }
+    }
+}

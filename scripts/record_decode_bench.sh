@@ -1,0 +1,14 @@
+#!/usr/bin/env sh
+# Record a decode hot-path benchmark run into BENCH_decode.json.
+#
+# Usage: scripts/record_decode_bench.sh <label>
+#   e.g.  scripts/record_decode_bench.sh pre    # before a perf change
+#         scripts/record_decode_bench.sh post   # after, same machine
+#
+# Runs the decode_hotpath bench in release mode with ABQ_RECORD set; the
+# bench appends a labelled entry (per-backend tok/s, ms/step,
+# ns/projection, unix timestamp) to BENCH_decode.json at the repo root.
+set -eu
+label="${1:?usage: record_decode_bench.sh <label (e.g. pre|post)>}"
+cd "$(dirname "$0")/../rust"
+ABQ_RECORD="$label" cargo bench --bench decode_hotpath
