@@ -12,7 +12,7 @@
 
 use std::time::Instant;
 
-use abq_llm::engine::{EngineBuilder, EngineSession, InferenceEngine};
+use abq_llm::engine::{EngineBuilder, EngineSession, InferenceEngine, KvCacheConfig};
 use abq_llm::model::ModelConfig;
 use abq_llm::util::bench::write_results;
 use abq_llm::util::json::{num, obj, s, Json};
@@ -64,7 +64,7 @@ fn measure(engine: &dyn InferenceEngine, warm_steps: usize, steps: usize, sample
     }
 }
 
-fn record(rows: &[Json], steps: usize) {
+fn record(rows: &[Json], steps: usize, kv_bits: u8) {
     let Some(label) = std::env::var("ABQ_RECORD").ok().filter(|l| !l.is_empty()) else {
         return;
     };
@@ -79,6 +79,7 @@ fn record(rows: &[Json], steps: usize) {
         ("model", s(BENCH_MODEL.name)),
         ("prompt_tokens", num(PROMPT.len() as f64)),
         ("steps_per_sample", num(steps as f64)),
+        ("kv_bits", num(kv_bits as f64)),
         ("results", Json::Arr(rows.to_vec())),
     ]);
     let mut root = match std::fs::read_to_string(path).ok().and_then(|t| Json::parse(&t).ok()) {
@@ -104,8 +105,17 @@ fn main() {
     let fast = std::env::var("ABQ_BENCH_FAST").is_ok();
     let (warm_steps, steps, samples) = if fast { (4, 8, 2) } else { (16, 64, 3) };
     let backends = ["abq:w2*a8", "abq:w4a4", "abq:w8a8", "int8", "fp32"];
+    // ABQ_KV_BITS=8|4 measures the quantized paged-KV read path
+    let kv_bits: u8 = std::env::var("ABQ_KV_BITS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(KvCacheConfig::FP32.bits);
+    let kv = KvCacheConfig { bits: kv_bits, ..KvCacheConfig::FP32 };
 
-    println!("=== decode hot path: single-token steps, {} ===", BENCH_MODEL.name);
+    println!(
+        "=== decode hot path: single-token steps, {} (kv {} bits) ===",
+        BENCH_MODEL.name, kv_bits
+    );
     println!(
         "{:<12} {:>10} {:>12} {:>16}",
         "backend", "tok/s", "ms/step", "ns/projection"
@@ -117,6 +127,7 @@ fn main() {
         let engine = EngineBuilder::new()
             .random_weights(BENCH_MODEL, 42)
             .backend(spec)
+            .kv_cache(kv)
             .build()
             .unwrap_or_else(|e| panic!("{spec}: {e}"));
         let r = measure(engine.as_ref(), warm_steps, steps, samples);
@@ -141,5 +152,5 @@ fn main() {
         println!("\nabq:w2*a8 vs int8 (SmoothQuant engine): {:.2}x", w2 / i8t);
     }
     write_results("decode_hotpath", &Json::Arr(rows.clone()));
-    record(&rows, steps);
+    record(&rows, steps, kv_bits);
 }

@@ -43,6 +43,12 @@ impl Batcher {
         self.queue.push_back(req);
     }
 
+    /// Put a drained-but-not-admitted request back at the head of the
+    /// queue (KV-pool deferral) so FIFO order is preserved.
+    pub fn requeue_front(&mut self, req: QueuedRequest) {
+        self.queue.push_front(req);
+    }
+
     pub fn len(&self) -> usize {
         self.queue.len()
     }

@@ -53,6 +53,7 @@ impl Histogram {
 #[derive(Debug, Default)]
 pub struct MetricsInner {
     pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, u64>,
     pub histograms: BTreeMap<String, Histogram>,
 }
 
@@ -76,8 +77,18 @@ impl Metrics {
         g.histograms.entry(name.to_string()).or_default().record(us);
     }
 
+    /// Set a point-in-time gauge (KV pool occupancy, queue depths).
+    pub fn set_gauge(&self, name: &str, value: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.gauges.insert(name.to_string(), value);
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().gauges.get(name).copied().unwrap_or(0)
     }
 
     pub fn snapshot(&self) -> String {
@@ -85,6 +96,9 @@ impl Metrics {
         let mut out = String::new();
         for (k, v) in &g.counters {
             out.push_str(&format!("{k}: {v}\n"));
+        }
+        for (k, v) in &g.gauges {
+            out.push_str(&format!("{k}: {v} (gauge)\n"));
         }
         for (k, h) in &g.histograms {
             out.push_str(&format!(
@@ -110,6 +124,16 @@ mod tests {
         m.incr("req", 1);
         m.incr("req", 2);
         assert_eq!(m.counter("req"), 3);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let m = Metrics::new();
+        m.set_gauge("kv_blocks_used", 5);
+        m.set_gauge("kv_blocks_used", 2);
+        assert_eq!(m.gauge("kv_blocks_used"), 2);
+        assert_eq!(m.gauge("missing"), 0);
+        assert!(m.snapshot().contains("kv_blocks_used: 2 (gauge)"));
     }
 
     #[test]

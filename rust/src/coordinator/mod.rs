@@ -13,5 +13,5 @@ pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::Metrics;
 pub use request::{QueuedRequest, Request, Response, Timing};
 pub use router::Router;
-pub use scheduler::{Scheduler, SchedulerConfig};
+pub use scheduler::{Admission, Scheduler, SchedulerConfig};
 pub use server::{Server, ServerConfig};

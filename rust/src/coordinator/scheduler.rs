@@ -1,26 +1,37 @@
-//! Continuous-batching scheduler: prefill-then-decode with KV-aware
-//! admission (the serving pattern the paper's engine integrates into).
-//! Runs against any [`InferenceEngine`] — native transformer or PJRT
-//! artifacts — through the unified engine API.
+//! Continuous-batching scheduler: prefill-then-decode with **block-aware**
+//! KV admission against the engine's paged KV pool (the serving pattern
+//! the paper's engine integrates into). Runs against any
+//! [`InferenceEngine`] — native transformer or PJRT artifacts — through
+//! the unified engine API; engines without a pool
+//! ([`InferenceEngine::kv_pool_status`] `= None`) fall back to slot-only
+//! admission.
 //!
 //! Policy:
-//!   * new requests are admitted when a KV slot is free and the decode
-//!     batch has room (`max_active`);
+//!   * new requests are admitted when a decode slot is free
+//!     (`max_active`) **and** the pool can cover the prompt plus one
+//!     decode step of headroom; otherwise [`Scheduler::admit`] hands the
+//!     request back as [`Admission::Deferred`] (no panic — the server
+//!     requeues it);
 //!   * admitted requests are prefilled immediately (prefill priority —
 //!     keeps the decode batch full, the same reasoning as Orca/vLLM);
 //!   * all active sequences then advance one token per engine step in a
 //!     single batched GEMM (M = active batch — exactly the GEMM/GEMV
 //!     regime the ABQ engine optimises);
-//!   * finished sequences release their KV slot to the pool.
+//!   * when the pool cannot cover the blocks the next step needs, the
+//!     **youngest** sequence is preempted: its session (and blocks) are
+//!     released and the sequence is requeued internally, to be resumed by
+//!     re-prefilling `prompt ++ generated` once blocks free up;
+//!   * finished sequences release their blocks back to the pool.
 //!
 //! Invariants (property-tested): active ≤ max_active; every admitted
 //! request completes with exactly `max_new_tokens` tokens (or capacity
-//! truncation); KV slots never leak.
+//! truncation) even across preemption churn; pool blocks never leak.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::engine::{EngineSession, InferenceEngine};
 use crate::model::Sampler;
@@ -30,6 +41,7 @@ use super::request::{QueuedRequest, Response, Timing};
 /// One active sequence.
 struct Active {
     id: u64,
+    prompt: Vec<u32>,
     prompt_len: usize,
     generated: Vec<u32>,
     max_new: usize,
@@ -38,6 +50,39 @@ struct Active {
     last_token: u32,
     timing: Timing,
     started: Instant,
+    /// monotone admission stamp — preemption picks the youngest (highest)
+    admitted_seq: u64,
+}
+
+/// A sequence evicted from the pool mid-generation, waiting to resume.
+struct Preempted {
+    id: u64,
+    prompt: Vec<u32>,
+    prompt_len: usize,
+    generated: Vec<u32>,
+    max_new: usize,
+    sampler: Sampler,
+    timing: Timing,
+    started: Instant,
+    /// original admission stamp, restored on resume so a resumed veteran
+    /// does not become the preferred preemption victim
+    admitted_seq: u64,
+}
+
+/// Outcome of [`Scheduler::admit`].
+pub enum Admission {
+    Admitted,
+    /// No slot or not enough free KV blocks right now; the request is
+    /// handed back untouched for the caller to requeue.
+    Deferred(QueuedRequest),
+}
+
+/// Sequence `i`'s share of a batched step's `total` µs: the integer
+/// division plus one distributed-remainder microsecond for the first
+/// `total % n` sequences, so the shares always sum to exactly `total`
+/// (the old `total / n` for everyone dropped up to `n − 1` µs per step).
+fn decode_share_us(total: u64, n: u64, i: usize) -> u64 {
+    total / n + u64::from((i as u64) < total % n)
 }
 
 pub struct SchedulerConfig {
@@ -55,14 +100,27 @@ pub struct Scheduler {
     engine: Arc<dyn InferenceEngine>,
     cfg: SchedulerConfig,
     active: Vec<Active>,
+    preempted: VecDeque<Preempted>,
     finished: Vec<Response>,
+    admit_counter: u64,
+    preemptions: u64,
 }
 
 impl Scheduler {
     pub fn new(engine: Arc<dyn InferenceEngine>, cfg: SchedulerConfig) -> Self {
-        Scheduler { engine, cfg, active: Vec::new(), finished: Vec::new() }
+        Scheduler {
+            engine,
+            cfg,
+            active: Vec::new(),
+            preempted: VecDeque::new(),
+            finished: Vec::new(),
+            admit_counter: 0,
+            preemptions: 0,
+        }
     }
 
+    /// A decode slot is free. (Block availability is checked per-request
+    /// in [`Scheduler::admit`], since it depends on the prompt length.)
     pub fn has_capacity(&self) -> bool {
         self.active.len() < self.cfg.max_active
     }
@@ -71,46 +129,132 @@ impl Scheduler {
         self.active.len()
     }
 
-    /// Admit + prefill one request.
-    pub fn admit(&mut self, qr: QueuedRequest, seed: u64) -> Result<()> {
-        assert!(self.has_capacity(), "admit called without capacity");
+    /// Sequences evicted from the pool and waiting to resume.
+    pub fn n_preempted(&self) -> usize {
+        self.preempted.len()
+    }
+
+    /// Total preemption events so far (serving metrics).
+    pub fn preemption_count(&self) -> u64 {
+        self.preemptions
+    }
+
+    /// Blocks the pool must have free to start a sequence of `tokens`
+    /// positions: the prompt plus one decode step of headroom.
+    fn blocks_needed(&self, tokens: usize) -> Option<(usize, usize, usize)> {
+        let st = self.engine.kv_pool_status()?;
+        Some((st.blocks_for(tokens + 1), st.free_blocks, st.total_blocks))
+    }
+
+    /// Admit + prefill one request, or hand it back as
+    /// [`Admission::Deferred`] when a slot or the pool cannot cover it
+    /// right now. Errors are reserved for requests that can *never* run
+    /// (prompt alone exceeds the whole pool) and real engine failures.
+    pub fn admit(&mut self, qr: QueuedRequest, seed: u64) -> Result<Admission> {
+        if !self.has_capacity() {
+            return Ok(Admission::Deferred(qr));
+        }
+        // preempted sequences have first claim on freed blocks: admitting
+        // fresh work past them would burn a prefill just to be evicted
+        // again (and starve the resume queue)
+        if !self.preempted.is_empty() {
+            return Ok(Admission::Deferred(qr));
+        }
+        if let Some((needed, free, total)) = self.blocks_needed(qr.req.prompt.len()) {
+            if needed > total {
+                bail!(
+                    "request {} needs {needed} KV blocks but the pool holds only {total}",
+                    qr.req.id
+                );
+            }
+            if needed > free {
+                return Ok(Admission::Deferred(qr));
+            }
+        }
         let now = Instant::now();
         let queue_us = now.duration_since(qr.arrived).as_micros() as u64;
-        let mut session = self.engine.new_session()?;
         // clamp generation to KV capacity
         let max_seq = self.engine.spec().model.max_seq;
         let max_new = qr
             .req
             .max_new_tokens
             .min(max_seq.saturating_sub(qr.req.prompt.len() + 1));
+        let prompt_len = qr.req.prompt.len();
+        self.admit_counter += 1;
+        let stamp = self.admit_counter;
+        self.activate(
+            qr.req.id,
+            qr.req.prompt,
+            prompt_len,
+            Vec::new(),
+            max_new,
+            Sampler::new(qr.req.sampling, seed),
+            Timing { queue_us, prefill_us: 0, decode_us: 0 },
+            now,
+            stamp,
+        )?;
+        Ok(Admission::Admitted)
+    }
+
+    /// Shared activation path for fresh admissions (`generated` empty) and
+    /// preemption resumes (`generated` carried): prefill
+    /// `prompt ++ generated` into a fresh session, sample the next token,
+    /// and push the sequence onto the active batch.
+    #[allow(clippy::too_many_arguments)]
+    fn activate(
+        &mut self,
+        id: u64,
+        prompt: Vec<u32>,
+        prompt_len: usize,
+        mut generated: Vec<u32>,
+        max_new: usize,
+        mut sampler: Sampler,
+        mut timing: Timing,
+        started: Instant,
+        admitted_seq: u64,
+    ) -> Result<()> {
+        let mut session = self.engine.new_session()?;
         let t0 = Instant::now();
-        let logits = self.engine.prefill(&qr.req.prompt, session.as_mut())?;
-        let prefill_us = t0.elapsed().as_micros() as u64;
+        let logits = if generated.is_empty() {
+            self.engine.prefill(&prompt, session.as_mut())?
+        } else {
+            let mut replay = prompt.clone();
+            replay.extend_from_slice(&generated);
+            self.engine.prefill(&replay, session.as_mut())?
+        };
+        timing.prefill_us += t0.elapsed().as_micros() as u64;
         let v = self.engine.spec().model.vocab;
-        let last = &logits[(qr.req.prompt.len() - 1) * v..qr.req.prompt.len() * v];
-        let mut sampler = Sampler::new(qr.req.sampling, seed);
-        let first = sampler.sample(last);
+        let fed = prompt.len() + generated.len();
+        let last = &logits[(fed - 1) * v..fed * v];
+        let tok = sampler.sample(last);
+        generated.push(tok);
         self.active.push(Active {
-            id: qr.req.id,
-            prompt_len: qr.req.prompt.len(),
-            generated: vec![first],
+            id,
+            prompt,
+            prompt_len,
+            generated,
             max_new,
             session,
             sampler,
-            last_token: first,
-            timing: Timing { queue_us, prefill_us, decode_us: 0 },
-            started: now,
+            last_token: tok,
+            timing,
+            started,
+            admitted_seq,
         });
         Ok(())
     }
 
-    /// One batched decode step over all active sequences.
+    /// One batched decode step over all active sequences (resuming
+    /// preempted ones first when blocks allow, preempting when they
+    /// don't).
     pub fn step(&mut self) -> Result<()> {
+        self.resume_preempted()?;
         if self.active.is_empty() {
             return Ok(());
         }
         // retire sequences that already have enough tokens
         self.retire();
+        self.ensure_step_headroom();
         if self.active.is_empty() {
             return Ok(());
         }
@@ -123,16 +267,114 @@ impl Scheduler {
         drop(sessions);
         let step_us = t0.elapsed().as_micros() as u64;
         let v = engine.spec().model.vocab;
-        let per_seq_us = step_us / self.active.len() as u64;
+        let n = self.active.len() as u64;
         for (bi, a) in self.active.iter_mut().enumerate() {
             let row = &logits[bi * v..(bi + 1) * v];
             let tok = a.sampler.sample(row);
             a.generated.push(tok);
             a.last_token = tok;
-            a.timing.decode_us += per_seq_us;
+            a.timing.decode_us += decode_share_us(step_us, n, bi);
         }
         self.retire();
         Ok(())
+    }
+
+    /// Resume preempted sequences (oldest first) while a slot and enough
+    /// free blocks exist: re-prefill `prompt ++ generated` into a fresh
+    /// session, then continue decoding. A preempted sequence whose
+    /// replayed length can no longer fit the pool at all is finished with
+    /// the tokens it has (capacity truncation).
+    fn resume_preempted(&mut self) -> Result<()> {
+        while let Some(front) = self.preempted.front() {
+            if self.active.len() >= self.cfg.max_active {
+                break;
+            }
+            let replay_len = front.prompt.len() + front.generated.len();
+            if let Some((needed, free, total)) = self.blocks_needed(replay_len) {
+                if needed > total {
+                    let p = self.preempted.pop_front().unwrap();
+                    self.finished.push(Response {
+                        id: p.id,
+                        prompt_len: p.prompt_len,
+                        tokens: p.generated,
+                        timing: p.timing,
+                    });
+                    continue;
+                }
+                if needed > free {
+                    break;
+                }
+            }
+            let p = self.preempted.pop_front().unwrap();
+            self.activate(
+                p.id,
+                p.prompt,
+                p.prompt_len,
+                p.generated,
+                p.max_new,
+                p.sampler,
+                p.timing,
+                p.started,
+                p.admitted_seq,
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Make sure the pool can hand a block to every active sequence whose
+    /// next write crosses a block boundary; preempt the youngest sequence
+    /// (releasing its blocks) until it can. A sole sequence that still
+    /// cannot get a block is finished with what it has.
+    fn ensure_step_headroom(&mut self) {
+        if self.engine.kv_pool_status().is_none() {
+            return;
+        }
+        loop {
+            // one status read per iteration (free_blocks changes as
+            // preempted sessions drop their blocks)
+            let Some(st) = self.engine.kv_pool_status() else { return };
+            let needed = self
+                .active
+                .iter()
+                .filter(|a| a.session.pos() % st.block_size == 0)
+                .count();
+            if needed <= st.free_blocks {
+                return;
+            }
+            if self.active.len() <= 1 {
+                // nothing left to evict: finish the lone sequence early
+                if let Some(a) = self.active.pop() {
+                    self.finished.push(Response {
+                        id: a.id,
+                        prompt_len: a.prompt_len,
+                        tokens: a.generated,
+                        timing: a.timing,
+                    });
+                }
+                return;
+            }
+            let youngest = self
+                .active
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, a)| a.admitted_seq)
+                .map(|(i, _)| i)
+                .expect("active is non-empty");
+            let a = self.active.swap_remove(youngest);
+            // dropping the session releases its leased blocks to the pool
+            self.preemptions += 1;
+            self.preempted.push_back(Preempted {
+                admitted_seq: a.admitted_seq,
+                id: a.id,
+                prompt: a.prompt,
+                prompt_len: a.prompt_len,
+                generated: a.generated,
+                max_new: a.max_new,
+                sampler: a.sampler,
+                timing: a.timing,
+                started: a.started,
+            });
+        }
     }
 
     fn retire(&mut self) {
@@ -160,7 +402,7 @@ impl Scheduler {
     }
 
     pub fn idle(&self) -> bool {
-        self.active.is_empty()
+        self.active.is_empty() && self.preempted.is_empty()
     }
 }
 
@@ -169,7 +411,7 @@ mod tests {
     use super::*;
     use crate::coordinator::request::Request;
     use crate::engine::EngineBuilder;
-    use crate::model::ModelConfig;
+    use crate::model::{KvCacheConfig, ModelConfig};
 
     const MICRO: ModelConfig = ModelConfig {
         name: "micro",
@@ -199,14 +441,16 @@ mod tests {
     fn generates_exact_token_counts() {
         let mut s = Scheduler::new(micro_engine(1), SchedulerConfig { max_active: 4 });
         for id in 0..3u64 {
-            s.admit(
-                QueuedRequest {
-                    req: Request::new(id, vec![1, 2, 3], 5),
-                    arrived: Instant::now(),
-                },
-                id,
-            )
-            .unwrap();
+            let adm = s
+                .admit(
+                    QueuedRequest {
+                        req: Request::new(id, vec![1, 2, 3], 5),
+                        arrived: Instant::now(),
+                    },
+                    id,
+                )
+                .unwrap();
+            assert!(matches!(adm, Admission::Admitted));
         }
         run_all(&mut s);
         let mut done = s.take_finished();
@@ -251,5 +495,67 @@ mod tests {
             .unwrap();
         }
         assert!(!s.has_capacity());
+    }
+
+    #[test]
+    fn admit_without_capacity_defers_instead_of_panicking() {
+        let mut s = Scheduler::new(micro_engine(4), SchedulerConfig { max_active: 1 });
+        s.admit(
+            QueuedRequest { req: Request::new(0, vec![1], 2), arrived: Instant::now() },
+            0,
+        )
+        .unwrap();
+        // second admit: no slot — the request must come back intact
+        let adm = s
+            .admit(
+                QueuedRequest { req: Request::new(7, vec![1, 2], 2), arrived: Instant::now() },
+                1,
+            )
+            .unwrap();
+        match adm {
+            Admission::Deferred(qr) => {
+                assert_eq!(qr.req.id, 7);
+                assert_eq!(qr.req.prompt, vec![1, 2]);
+            }
+            Admission::Admitted => panic!("must defer when at max_active"),
+        }
+    }
+
+    #[test]
+    fn unadmittable_prompt_is_an_error() {
+        // pool of 1 block (8 positions) can never hold a 20-token prompt
+        let engine = EngineBuilder::new()
+            .random_weights(MICRO, 5)
+            .backend("fp32")
+            .kv_cache(KvCacheConfig { bits: 32, block_size: 8 })
+            .kv_pool_bytes(1)
+            .build_arc()
+            .unwrap();
+        assert_eq!(engine.kv_pool_status().unwrap().total_blocks, 1);
+        let mut s = Scheduler::new(engine, SchedulerConfig::default());
+        let r = s.admit(
+            QueuedRequest {
+                req: Request::new(0, (0..20).map(|i| i % 60).collect(), 4),
+                arrived: Instant::now(),
+            },
+            0,
+        );
+        assert!(r.is_err(), "a prompt larger than the whole pool can never run");
+    }
+
+    #[test]
+    fn decode_timing_keeps_the_remainder() {
+        // the per-sequence shares of a step's wall time must sum to it
+        // exactly — the old `step_us / n` for everyone dropped up to
+        // n−1 µs per step
+        for (total, n) in [(0u64, 1u64), (7, 1), (7, 3), (9, 3), (100, 7), (5, 8)] {
+            let sum: u64 = (0..n as usize).map(|i| decode_share_us(total, n, i)).sum();
+            assert_eq!(sum, total, "shares of {total}µs across {n} must sum back");
+            // and the split is fair to within 1µs
+            let shares: Vec<u64> =
+                (0..n as usize).map(|i| decode_share_us(total, n, i)).collect();
+            let (mn, mx) = (shares.iter().min().unwrap(), shares.iter().max().unwrap());
+            assert!(mx - mn <= 1, "unfair split {shares:?}");
+        }
     }
 }

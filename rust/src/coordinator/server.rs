@@ -24,7 +24,7 @@ use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::request::{QueuedRequest, Request, Response};
 use super::router::Router;
-use super::scheduler::{Scheduler, SchedulerConfig};
+use super::scheduler::{Admission, Scheduler, SchedulerConfig};
 
 enum WorkerMsg {
     Req(QueuedRequest, Sender<Response>),
@@ -153,7 +153,8 @@ fn worker_loop(
     tag: &str,
 ) {
     let mut batcher = Batcher::new(bcfg);
-    let mut scheduler = Scheduler::new(model, SchedulerConfig { max_active });
+    // the worker keeps its own handle for pool-occupancy gauges (3b)
+    let mut scheduler = Scheduler::new(model.clone(), SchedulerConfig { max_active });
     let mut pending: HashMap<u64, Sender<Response>> = HashMap::new();
     let mut seed = 0xC0FFEEu64;
     let mut shutdown = false;
@@ -196,21 +197,44 @@ fn worker_loop(
             break;
         }
 
-        // 2. admit when the batcher says ready (or we're draining)
+        // 2. admit when the batcher says ready (or we're draining);
+        // requests deferred by block-aware admission go back to the head
+        // of the queue and we stop admitting until blocks free up
         let now = Instant::now();
         if (batcher.ready(now) || shutdown) && scheduler.has_capacity() {
             let room = max_active - scheduler.n_active();
-            for qr in batcher.drain(room) {
+            let mut drained = batcher.drain(room);
+            let mut deferred: Vec<_> = Vec::new();
+            let mut drained_iter = drained.drain(..);
+            for qr in drained_iter.by_ref() {
                 seed = seed.wrapping_add(1);
+                let qid = qr.req.id;
                 let t0 = Instant::now();
-                if let Err(e) = scheduler.admit(qr, seed) {
-                    metrics.incr(&format!("worker.{tag}.admit_errors"), 1);
-                    eprintln!("admit error: {e}");
+                match scheduler.admit(qr, seed) {
+                    Ok(Admission::Admitted) => {
+                        metrics.observe_us(
+                            &format!("worker.{tag}.prefill_us"),
+                            t0.elapsed().as_micros() as u64,
+                        );
+                    }
+                    Ok(Admission::Deferred(qr)) => {
+                        metrics.incr(&format!("worker.{tag}.admit_deferred"), 1);
+                        deferred.push(qr);
+                        break;
+                    }
+                    Err(e) => {
+                        // unadmittable (e.g. prompt larger than the whole
+                        // pool): drop its channel so the client sees a
+                        // disconnect instead of hanging
+                        metrics.incr(&format!("worker.{tag}.admit_errors"), 1);
+                        pending.remove(&qid);
+                        eprintln!("admit error: {e}");
+                    }
                 }
-                metrics.observe_us(
-                    &format!("worker.{tag}.prefill_us"),
-                    t0.elapsed().as_micros() as u64,
-                );
+            }
+            deferred.extend(drained_iter);
+            for qr in deferred.into_iter().rev() {
+                batcher.requeue_front(qr);
             }
         }
 
@@ -224,6 +248,17 @@ fn worker_loop(
                 &format!("worker.{tag}.step_us"),
                 t0.elapsed().as_micros() as u64,
             );
+        }
+
+        // 3b. export KV pool occupancy + preemption state
+        if let Some(st) = model.kv_pool_status() {
+            metrics.set_gauge(&format!("worker.{tag}.kv_blocks_used"), st.used_blocks() as u64);
+            metrics.set_gauge(&format!("worker.{tag}.kv_blocks_total"), st.total_blocks as u64);
+            metrics.set_gauge(
+                &format!("worker.{tag}.kv_preempted_waiting"),
+                scheduler.n_preempted() as u64,
+            );
+            metrics.set_gauge(&format!("worker.{tag}.preemptions"), scheduler.preemption_count());
         }
 
         // 4. deliver finished responses
@@ -279,6 +314,9 @@ mod tests {
             assert_eq!(resp.tokens.len(), 4);
         }
         assert_eq!(server.metrics.counter("worker.fp16.completed"), 6);
+        // the native engine has a KV pool, so occupancy gauges must exist
+        assert!(server.metrics.gauge("worker.fp16.kv_blocks_total") > 0);
+        assert_eq!(server.metrics.gauge("worker.fp16.kv_blocks_used"), 0);
         server.shutdown();
     }
 

@@ -12,7 +12,7 @@ use std::any::Any;
 
 use anyhow::Result;
 
-use crate::model::ModelConfig;
+use crate::model::{KvCacheConfig, KvPoolStatus, ModelConfig};
 
 /// Which execution path an engine runs on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -30,6 +30,9 @@ pub struct EngineSpec {
     /// canonical backend spec string (`fp32`, `abq:w2*a8`, ...)
     pub backend: String,
     pub execution: Execution,
+    /// KV storage configuration (paged native path; PJRT reports the
+    /// fp32 default)
+    pub kv: KvCacheConfig,
 }
 
 /// Resident-memory accounting (the Table 12 axis).
@@ -39,6 +42,10 @@ pub struct MemoryReport {
     pub weight_bytes: usize,
     /// KV cache bytes one session holds at full capacity
     pub kv_bytes_per_session: usize,
+    /// total KV pool budget (0 when the engine has no block pool)
+    pub kv_pool_bytes: usize,
+    /// KV pool bytes currently leased by live sessions
+    pub kv_pool_used_bytes: usize,
 }
 
 impl MemoryReport {
@@ -89,6 +96,14 @@ pub trait InferenceEngine: Send + Sync {
     ) -> Result<Vec<f32>>;
 
     fn memory_report(&self) -> MemoryReport;
+
+    /// Occupancy of the engine's shared KV block pool, when it has one.
+    /// The scheduler's block-aware admission and preemption consult this;
+    /// engines without a host-side pool (PJRT) return `None` and the
+    /// coordinator falls back to slot-only admission.
+    fn kv_pool_status(&self) -> Option<KvPoolStatus> {
+        None
+    }
 }
 
 /// Greedy generation helper over any engine (examples / benches): prefill

@@ -27,7 +27,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Context, Result};
 
 use crate::abq::OptLevel;
-use crate::model::{ModelConfig, Transformer, WeightPack};
+use crate::model::{KvCacheConfig, ModelConfig, Transformer, WeightPack};
 use crate::quant::WAConfig;
 use crate::util::json::Json;
 use crate::util::par;
@@ -44,6 +44,8 @@ pub struct EngineBuilder {
     execution: Execution,
     registry: BackendRegistry,
     random: Option<(ModelConfig, u64)>,
+    kv: KvCacheConfig,
+    kv_pool_bytes: Option<usize>,
 }
 
 impl Default for EngineBuilder {
@@ -62,7 +64,24 @@ impl EngineBuilder {
             execution: Execution::Native,
             registry: BackendRegistry::with_defaults(),
             random: None,
+            kv: KvCacheConfig::default(),
+            kv_pool_bytes: None,
         }
+    }
+
+    /// KV page storage: bit width (32/8/4) + positions per pool block
+    /// (native path; see `docs/SERVING.md` for the bits-vs-capacity math).
+    pub fn kv_cache(mut self, kv: KvCacheConfig) -> Self {
+        self.kv = kv;
+        self
+    }
+
+    /// Byte budget of the shared KV block pool (defaults to a generous
+    /// multiple of `max_seq`; the serving deployment sets this to the
+    /// machine's KV memory budget).
+    pub fn kv_pool_bytes(mut self, bytes: usize) -> Self {
+        self.kv_pool_bytes = Some(bytes);
+        self
     }
 
     /// Artifacts directory holding `weights.abqw` + `manifest.json`.
@@ -163,7 +182,7 @@ impl EngineBuilder {
             load_artifacts(dir, backend.as_ref())
                 .with_context(|| format!("load artifacts from {dir:?} (run `make artifacts`)"))?
         };
-        Ok(Box::new(NativeEngine::new(model)))
+        Ok(Box::new(NativeEngine::with_kv(model, self.kv, self.kv_pool_bytes)?))
     }
 
     #[cfg(feature = "pjrt")]

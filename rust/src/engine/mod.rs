@@ -40,6 +40,8 @@ pub mod registry;
 
 pub use api::{generate, EngineSession, EngineSpec, Execution, InferenceEngine, MemoryReport};
 pub use builder::{backend_tag, EngineBuilder};
+// KV paging configuration is part of the construction surface
+pub use crate::model::{KvCacheConfig, KvPoolStatus};
 pub use linear::{
     AbqBackend, Fp32Backend, Int4Backend, Int8Backend, LinearBackend, LinearOp, LinearScratch,
     PrepareCtx,

@@ -1,34 +1,55 @@
-//! [`InferenceEngine`] over the rust-native [`Transformer`]: host-resident
-//! KV caches, batched decode across sessions in a single GEMM (the
+//! [`InferenceEngine`] over the rust-native [`Transformer`]: paged,
+//! optionally quantized host-resident KV (one shared block pool per
+//! engine), batched decode across sessions in a single GEMM (the
 //! GEMM-vs-GEMV axis the ABQ engine optimises).
 //!
-//! Each session owns a [`ForwardScratch`] arena alongside its KV cache;
-//! prefill and decode thread it into the model so the steady-state decode
-//! loop reuses one set of buffers across the 7 block projections, all
-//! layers, and all steps (`docs/PERF.md`). Batched decode borrows the
-//! first session's arena for the whole batch.
+//! Each session owns a [`PagedKvCache`] leased from the engine's
+//! [`KvPool`] plus a [`ForwardScratch`] arena; prefill and decode thread
+//! both into the model so the steady-state decode loop reuses one set of
+//! buffers across the 7 block projections, all layers, and all steps
+//! (`docs/PERF.md`). Batched decode borrows the first session's arena for
+//! the whole batch. `kv_bytes`/`memory_report` report *real* pooled
+//! usage — blocks actually leased, not the dense `max_seq` reservation
+//! (`docs/SERVING.md`).
 
 use std::any::Any;
 
 use anyhow::{anyhow, Result};
 
-use crate::model::{ForwardScratch, KvCache, Transformer};
+use crate::model::{
+    ForwardScratch, KvCacheConfig, KvPool, KvPoolStatus, PagedKvCache, Transformer,
+};
 
 use super::api::{EngineSession, EngineSpec, Execution, InferenceEngine, MemoryReport};
 
 pub struct NativeEngine {
     model: Transformer,
     spec: EngineSpec,
+    pool: KvPool,
 }
 
 impl NativeEngine {
+    /// Engine with the default KV configuration (fp32 passthrough pages).
     pub fn new(model: Transformer) -> Self {
+        Self::with_kv(model, KvCacheConfig::default(), None)
+            .expect("default KV configuration is valid")
+    }
+
+    /// Engine with an explicit KV configuration and optional pool budget
+    /// in bytes (`None` = a generous default; see [`KvPool::new`]).
+    pub fn with_kv(
+        model: Transformer,
+        kv: KvCacheConfig,
+        pool_budget_bytes: Option<usize>,
+    ) -> Result<Self> {
+        let pool = KvPool::new(&model.cfg, &kv, pool_budget_bytes)?;
         let spec = EngineSpec {
             model: model.cfg,
             backend: model.backend_name.clone(),
             execution: Execution::Native,
+            kv,
         };
-        NativeEngine { model, spec }
+        Ok(NativeEngine { model, spec, pool })
     }
 
     /// Escape hatch to the underlying transformer (engine-internal tools).
@@ -38,14 +59,14 @@ impl NativeEngine {
 }
 
 struct NativeSession {
-    cache: KvCache,
+    cache: PagedKvCache,
     /// per-session forward arena, reused across prefill and decode steps
     scratch: ForwardScratch,
 }
 
 impl EngineSession for NativeSession {
     fn pos(&self) -> usize {
-        self.cache.pos
+        self.cache.pos()
     }
 
     fn remaining(&self) -> usize {
@@ -57,8 +78,12 @@ impl EngineSession for NativeSession {
     }
 
     fn fork(&self) -> Result<Box<dyn EngineSession>> {
-        // the fork gets its own (cold) arena; it warms on first use
-        Ok(Box::new(NativeSession { cache: self.cache.clone(), scratch: ForwardScratch::new() }))
+        // the fork gets copies of the leased blocks and its own (cold)
+        // arena; it warms on first use
+        Ok(Box::new(NativeSession {
+            cache: self.cache.try_clone()?,
+            scratch: ForwardScratch::new(),
+        }))
     }
 
     fn as_any_mut(&mut self) -> &mut dyn Any {
@@ -79,7 +104,7 @@ impl InferenceEngine for NativeEngine {
 
     fn new_session(&self) -> Result<Box<dyn EngineSession>> {
         Ok(Box::new(NativeSession {
-            cache: KvCache::new(&self.model.cfg),
+            cache: self.pool.new_cache(),
             scratch: ForwardScratch::new(),
         }))
     }
@@ -96,7 +121,7 @@ impl InferenceEngine for NativeEngine {
     ) -> Result<Vec<f32>> {
         // split each session into (cache, scratch); the batch runs on the
         // first session's arena
-        let mut caches: Vec<&mut KvCache> = Vec::with_capacity(sessions.len());
+        let mut caches: Vec<&mut PagedKvCache> = Vec::with_capacity(sessions.len());
         let mut scratch: Option<&mut ForwardScratch> = None;
         for s in sessions.iter_mut() {
             let NativeSession { cache, scratch: sc } = downcast(&mut **s)?;
@@ -112,10 +137,16 @@ impl InferenceEngine for NativeEngine {
     }
 
     fn memory_report(&self) -> MemoryReport {
-        let c = &self.model.cfg;
+        let st = self.pool.status();
         MemoryReport {
             weight_bytes: self.model.weight_bytes(),
-            kv_bytes_per_session: 2 * c.n_layers * c.max_seq * c.d_model * 4,
+            kv_bytes_per_session: self.pool.blocks_for(self.model.cfg.max_seq) * st.block_bytes,
+            kv_pool_bytes: st.total_blocks * st.block_bytes,
+            kv_pool_used_bytes: st.used_blocks() * st.block_bytes,
         }
+    }
+
+    fn kv_pool_status(&self) -> Option<KvPoolStatus> {
+        Some(self.pool.status())
     }
 }

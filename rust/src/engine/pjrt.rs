@@ -15,7 +15,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::model::{ModelConfig, WeightPack};
+use crate::model::{KvCacheConfig, ModelConfig, WeightPack};
 use crate::runtime::{KvState, PjrtEngine, Program};
 
 use super::api::{EngineSession, EngineSpec, Execution, InferenceEngine, MemoryReport};
@@ -82,6 +82,8 @@ impl PjrtInferenceEngine {
             model,
             backend: backend_name.to_string(),
             execution: Execution::Pjrt,
+            // device KV is fp32 and unpaged; no host pool on this path
+            kv: KvCacheConfig::FP32,
         };
         Ok(PjrtInferenceEngine {
             engine,
@@ -230,6 +232,7 @@ impl InferenceEngine for PjrtInferenceEngine {
         MemoryReport {
             weight_bytes: self.weight_bytes,
             kv_bytes_per_session: self.kv_bytes_per_session,
+            ..Default::default()
         }
     }
 }

@@ -42,8 +42,11 @@
 //!   elimination, pipelining and auto kernel search (paper §3.4, App. B/D)
 //! * [`quant`] — quantizers, bit-balance strategy, balance vectors
 //! * [`baselines`] — FP16/W8A8/W4A4 comparator engines with MMA padding
-//! * [`model`] — LLaMA-family transformer over registry-prepared projections
-//! * [`coordinator`] — serving: router, dynamic batcher, scheduler, KV cache
+//! * [`model`] — LLaMA-family transformer over registry-prepared
+//!   projections, with a paged arbitrary-bit KV block pool
+//!   (`docs/SERVING.md`)
+//! * [`coordinator`] — serving: router, dynamic batcher, block-aware
+//!   continuous-batching scheduler with preemption
 //! * [`runtime`] — PJRT executor for the AOT HLO artifacts (jax/pallas
 //!   L2+L1); compiled with `--features pjrt`
 //! * [`eval`] — synthetic corpus, perplexity, zero-shot harness

@@ -21,7 +21,7 @@ use anyhow::Result;
 
 use abq_llm::abq::{BitPlanes, OptLevel};
 use abq_llm::coordinator::{Request, Server, ServerConfig};
-use abq_llm::engine::{backend_tag, EngineBuilder, InferenceEngine};
+use abq_llm::engine::{backend_tag, EngineBuilder, InferenceEngine, KvCacheConfig};
 use abq_llm::eval;
 use abq_llm::util::cli::Args;
 use abq_llm::util::json::{self, Json};
@@ -47,6 +47,17 @@ fn builder_from(args: &Args) -> Result<EngineBuilder> {
     let mut b = EngineBuilder::new().weights(artifacts_dir(args)).backend(backend_spec(args)?);
     if let Some(n) = args.get("threads").and_then(|v| v.parse::<usize>().ok()) {
         b = b.threads(n);
+    }
+    // paged KV storage: --kv-bits 32|8|4 [--kv-block N] [--kv-pool-mb M]
+    if let Some(bits) = args.get("kv-bits").and_then(|v| v.parse::<u8>().ok()) {
+        let block_size = args
+            .get("kv-block")
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(KvCacheConfig::FP32.block_size);
+        b = b.kv_cache(KvCacheConfig { bits, block_size });
+    }
+    if let Some(mb) = args.get("kv-pool-mb").and_then(|v| v.parse::<usize>().ok()) {
+        b = b.kv_pool_bytes(mb * 1024 * 1024);
     }
     Ok(b)
 }
@@ -219,10 +230,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for (tag, engine) in &replicas {
         let mem = engine.memory_report();
         println!(
-            "  replica {tag}: {:.2} MB weights, {:.2} MB KV/session",
+            "  replica {tag}: {:.2} MB weights, {:.2} MB KV/session (full)",
             mem.weight_bytes as f64 / 1e6,
             mem.kv_bytes_per_session as f64 / 1e6
         );
+        if let Some(st) = engine.kv_pool_status() {
+            println!(
+                "    KV pool: {} blocks × {} positions @ {} bits ({:.2} MB budget)",
+                st.total_blocks,
+                st.block_size,
+                st.bits,
+                (st.total_blocks * st.block_bytes) as f64 / 1e6
+            );
+        }
     }
     let server = Server::start(replicas, ServerConfig { default_tag, ..Default::default() })?;
 

@@ -1,8 +1,42 @@
-//! Per-sequence KV cache. The coordinator owns a pool of these (one per
-//! active request); the transformer fills them at prefill and extends them
-//! one position per decode step.
+//! Sequence-level KV storage abstraction. The transformer is generic over
+//! [`KvStore`]: the engine serves through the pool-leased, optionally
+//! quantized [`super::kv_pool::PagedKvCache`], while the dense [`KvCache`]
+//! here remains the unpaged fp32 reference implementation — tests assert
+//! the paged `bits: 32` path is bit-identical to it
+//! (`rust/tests/prop_kv.rs`).
+
+use anyhow::{bail, Result};
 
 use super::config::ModelConfig;
+
+/// What the transformer needs from KV storage. Writes happen strictly in
+/// position order per layer; reads go through a gather (dequant-into-
+/// scratch for quantized pages, plain copy for fp32) so the attention
+/// inner loops always run over contiguous rows.
+pub trait KvStore {
+    /// Tokens stored so far (positions `[0, pos)` are valid).
+    fn pos(&self) -> usize;
+
+    /// Advance/rewind the valid-position watermark.
+    fn set_pos(&mut self, pos: usize);
+
+    /// Positions left before sequence capacity is exhausted.
+    fn remaining(&self) -> usize;
+
+    /// Ensure storage for `additional` more positions (paged stores lease
+    /// blocks here; fails on pool exhaustion or `max_seq` overflow).
+    fn reserve(&mut self, additional: usize) -> Result<()>;
+
+    /// Write one position's K/V row for a layer (storage must have been
+    /// reserved).
+    fn write_row(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]);
+
+    /// Materialize K rows `[0, upto)` of `layer` into `out` `[upto, d_model]`.
+    fn gather_k(&self, layer: usize, upto: usize, out: &mut [f32]);
+
+    /// Materialize V rows `[0, upto)` of `layer` into `out` `[upto, d_model]`.
+    fn gather_v(&self, layer: usize, upto: usize, out: &mut [f32]);
+}
 
 /// Contiguous K/V storage for one sequence: `[layer][pos][d_model]`.
 #[derive(Clone, Debug)]
@@ -61,6 +95,46 @@ impl KvCache {
 
     pub fn remaining(&self) -> usize {
         self.max_seq - self.pos
+    }
+}
+
+impl KvStore for KvCache {
+    fn pos(&self) -> usize {
+        self.pos
+    }
+
+    fn set_pos(&mut self, pos: usize) {
+        debug_assert!(pos <= self.max_seq);
+        self.pos = pos;
+    }
+
+    fn remaining(&self) -> usize {
+        self.max_seq - self.pos
+    }
+
+    fn reserve(&mut self, additional: usize) -> Result<()> {
+        if self.pos + additional > self.max_seq {
+            bail!(
+                "sequence would exceed KV capacity ({} + {additional} > {})",
+                self.pos,
+                self.max_seq
+            );
+        }
+        Ok(())
+    }
+
+    fn write_row(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        self.write(layer, pos, k_row, v_row);
+    }
+
+    fn gather_k(&self, layer: usize, upto: usize, out: &mut [f32]) {
+        let base = layer * self.max_seq * self.d_model;
+        out[..upto * self.d_model].copy_from_slice(&self.k[base..base + upto * self.d_model]);
+    }
+
+    fn gather_v(&self, layer: usize, upto: usize, out: &mut [f32]) {
+        let base = layer * self.max_seq * self.d_model;
+        out[..upto * self.d_model].copy_from_slice(&self.v[base..base + upto * self.d_model]);
     }
 }
 

@@ -1,0 +1,683 @@
+//! Paged, arbitrary-bit quantized KV cache (the serving-side half of the
+//! paper's memory claim): a shared **block pool** from which sequences
+//! lease fixed-size blocks on demand — vLLM-style — instead of reserving a
+//! dense `n_layers × max_seq × d_model` fp32 slab per session.
+//!
+//! Two levers convert into admission capacity:
+//!
+//! * **paging** — a sequence only holds `ceil(pos / block_size)` blocks,
+//!   so short sequences stop wasting their whole `max_seq` reservation;
+//! * **bit width** — each block stores K/V at [`KvCacheConfig::bits`]
+//!   (fp32 passthrough, int8, or nibble-packed int4) with one symmetric
+//!   scale per `(layer, head)` per block, reusing the `quant` machinery
+//!   ([`QParams`]/[`quantize_value`]/[`dequantize_value`]). int8 KV is
+//!   4× the blocks — and therefore ~4× the concurrently active
+//!   sequences — at a fixed byte budget (asserted in
+//!   `rust/tests/prop_coordinator.rs`).
+//!
+//! Scales grow monotonically: a block's `(layer, head)` scale is set by
+//! the first row written and, when a later row's absmax exceeds it, the
+//! already-written rows of that head slab are requantized in code space
+//! before the new scale takes effect. Rows are only ever appended in
+//! position order, so "already written" is exactly the in-block index.
+//!
+//! The transformer reads pages through [`KvStore::gather_k`] /
+//! [`KvStore::gather_v`] — a dequant-into-scratch view that materializes
+//! the `[0, pos)` prefix of one layer into a caller-owned arena buffer, so
+//! the steady-state decode loop stays allocation-free (`docs/PERF.md`,
+//! `docs/SERVING.md`).
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::quant::{dequantize_value, quantize_value, QParams, QuantSpec};
+
+use super::config::ModelConfig;
+use super::kv_cache::KvStore;
+
+/// KV storage configuration: bit width per element + positions per block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvCacheConfig {
+    /// 32 (fp32 passthrough), 8 (int8) or 4 (nibble-packed int4)
+    pub bits: u8,
+    /// positions per leased block
+    pub block_size: usize,
+}
+
+impl KvCacheConfig {
+    pub const FP32: KvCacheConfig = KvCacheConfig { bits: 32, block_size: 16 };
+
+    pub const fn new(bits: u8, block_size: usize) -> Self {
+        KvCacheConfig { bits, block_size }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !matches!(self.bits, 4 | 8 | 32) {
+            bail!("KvCacheConfig.bits must be 4, 8 or 32 (got {})", self.bits);
+        }
+        if self.block_size == 0 {
+            bail!("KvCacheConfig.block_size must be > 0");
+        }
+        Ok(())
+    }
+
+    /// KV bytes one *position* costs across all layers (codes + the
+    /// amortized per-block scales) — the pool-sizing unit in
+    /// `docs/SERVING.md`.
+    pub fn bytes_per_position(&self, m: &ModelConfig) -> f64 {
+        let layout = KvLayout::from(m, self);
+        layout.block_bytes() as f64 / self.block_size as f64
+    }
+}
+
+impl Default for KvCacheConfig {
+    fn default() -> Self {
+        KvCacheConfig::FP32
+    }
+}
+
+/// Derived per-block geometry (internal).
+#[derive(Clone, Copy, Debug)]
+struct KvLayout {
+    n_layers: usize,
+    d_model: usize,
+    n_heads: usize,
+    head_dim: usize,
+    block_size: usize,
+    bits: u8,
+}
+
+impl KvLayout {
+    fn from(m: &ModelConfig, kv: &KvCacheConfig) -> Self {
+        KvLayout {
+            n_layers: m.n_layers,
+            d_model: m.d_model,
+            n_heads: m.n_heads,
+            head_dim: m.head_dim(),
+            block_size: kv.block_size,
+            bits: kv.bits,
+        }
+    }
+
+    /// Packed code bytes of one K (or V) row.
+    fn row_bytes(&self) -> usize {
+        self.d_model * self.bits as usize / 8
+    }
+
+    /// Resident bytes of one block: K + V codes plus per-(layer, head)
+    /// scales on each side (fp32 blocks carry no scales).
+    fn block_bytes(&self) -> usize {
+        if self.bits == 32 {
+            2 * self.n_layers * self.block_size * self.d_model * 4
+        } else {
+            2 * self.n_layers * self.block_size * self.row_bytes()
+                + 2 * self.n_layers * self.n_heads * 4
+        }
+    }
+
+    /// Byte offset of row (`layer`, `idx`) inside a codes vec.
+    fn row_base(&self, layer: usize, idx: usize) -> usize {
+        (layer * self.block_size + idx) * self.row_bytes()
+    }
+}
+
+#[inline]
+fn get_code(codes: &[u8], bits: u8, row_base: usize, col: usize) -> u8 {
+    if bits == 8 {
+        codes[row_base + col]
+    } else {
+        let b = codes[row_base + col / 2];
+        if col % 2 == 0 {
+            b & 0x0F
+        } else {
+            b >> 4
+        }
+    }
+}
+
+#[inline]
+fn set_code(codes: &mut [u8], bits: u8, row_base: usize, col: usize, q: u8) {
+    if bits == 8 {
+        codes[row_base + col] = q;
+    } else {
+        let b = &mut codes[row_base + col / 2];
+        if col % 2 == 0 {
+            *b = (*b & 0xF0) | (q & 0x0F);
+        } else {
+            *b = (*b & 0x0F) | (q << 4);
+        }
+    }
+}
+
+/// One leased block: `block_size` positions of K/V across all layers.
+pub struct KvBlock {
+    data: BlockData,
+}
+
+enum BlockData {
+    /// passthrough, `[n_layers][block_size][d_model]` per side
+    F32 { k: Vec<f32>, v: Vec<f32> },
+    /// packed codes `[n_layers][block_size][row_bytes]` per side with
+    /// symmetric per-(layer, head) scales `[n_layers][n_heads]`
+    Quant { k: Vec<u8>, v: Vec<u8>, k_scale: Vec<f32>, v_scale: Vec<f32> },
+}
+
+impl KvBlock {
+    fn new(l: &KvLayout) -> Self {
+        let data = if l.bits == 32 {
+            let n = l.n_layers * l.block_size * l.d_model;
+            BlockData::F32 { k: vec![0.0; n], v: vec![0.0; n] }
+        } else {
+            let n = l.n_layers * l.block_size * l.row_bytes();
+            let ns = l.n_layers * l.n_heads;
+            BlockData::Quant {
+                k: vec![0; n],
+                v: vec![0; n],
+                k_scale: vec![0.0; ns],
+                v_scale: vec![0.0; ns],
+            }
+        };
+        KvBlock { data }
+    }
+
+    fn copy_from(&mut self, other: &KvBlock) {
+        match (&mut self.data, &other.data) {
+            (BlockData::F32 { k, v }, BlockData::F32 { k: ok, v: ov }) => {
+                k.copy_from_slice(ok);
+                v.copy_from_slice(ov);
+            }
+            (
+                BlockData::Quant { k, v, k_scale, v_scale },
+                BlockData::Quant { k: ok, v: ov, k_scale: oks, v_scale: ovs },
+            ) => {
+                k.copy_from_slice(ok);
+                v.copy_from_slice(ov);
+                k_scale.copy_from_slice(oks);
+                v_scale.copy_from_slice(ovs);
+            }
+            _ => unreachable!("pool never mixes block storage kinds"),
+        }
+    }
+
+    /// Write one side's row at in-block index `idx`; `idx` is also the
+    /// count of rows already valid in this (block, layer), which bounds
+    /// the requantize-on-scale-growth sweep.
+    fn write_side(
+        l: &KvLayout,
+        codes: &mut [u8],
+        scales: &mut [f32],
+        layer: usize,
+        idx: usize,
+        row: &[f32],
+    ) {
+        let spec = QuantSpec::new(l.bits);
+        let zp = 1i32 << (l.bits - 1);
+        let qmax_mag = (zp - 1) as f32;
+        for h in 0..l.n_heads {
+            let seg = &row[h * l.head_dim..(h + 1) * l.head_dim];
+            let absmax = seg.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            let si = layer * l.n_heads + h;
+            let needed = (absmax / qmax_mag).max(1e-8);
+            let delta = if idx == 0 {
+                scales[si] = needed;
+                needed
+            } else if needed > scales[si] {
+                // scale grew: requantize the rows already in this head slab
+                let old = QParams { delta: scales[si], zp };
+                let new = QParams { delta: needed, zp };
+                for r in 0..idx {
+                    let base = l.row_base(layer, r);
+                    for j in 0..l.head_dim {
+                        let col = h * l.head_dim + j;
+                        let c = get_code(codes, l.bits, base, col);
+                        let rq = quantize_value(dequantize_value(c, old), new, &spec);
+                        set_code(codes, l.bits, base, col, rq);
+                    }
+                }
+                scales[si] = needed;
+                needed
+            } else {
+                scales[si]
+            };
+            let p = QParams { delta, zp };
+            let base = l.row_base(layer, idx);
+            for (j, &x) in seg.iter().enumerate() {
+                set_code(codes, l.bits, base, h * l.head_dim + j, quantize_value(x, p, &spec));
+            }
+        }
+    }
+
+    fn write_row(&mut self, l: &KvLayout, layer: usize, idx: usize, k_row: &[f32], v_row: &[f32]) {
+        match &mut self.data {
+            BlockData::F32 { k, v } => {
+                let off = (layer * l.block_size + idx) * l.d_model;
+                k[off..off + l.d_model].copy_from_slice(k_row);
+                v[off..off + l.d_model].copy_from_slice(v_row);
+            }
+            BlockData::Quant { k, v, k_scale, v_scale } => {
+                Self::write_side(l, k, k_scale, layer, idx, k_row);
+                Self::write_side(l, v, v_scale, layer, idx, v_row);
+            }
+        }
+    }
+
+    fn gather_side(
+        l: &KvLayout,
+        codes: &[u8],
+        scales: &[f32],
+        layer: usize,
+        rows: usize,
+        out: &mut [f32],
+    ) {
+        let zp = 1i32 << (l.bits - 1);
+        for r in 0..rows {
+            let base = l.row_base(layer, r);
+            let orow = &mut out[r * l.d_model..(r + 1) * l.d_model];
+            for h in 0..l.n_heads {
+                let p = QParams { delta: scales[layer * l.n_heads + h], zp };
+                for j in 0..l.head_dim {
+                    let col = h * l.head_dim + j;
+                    orow[col] = dequantize_value(get_code(codes, l.bits, base, col), p);
+                }
+            }
+        }
+    }
+
+    /// Dequantize the first `rows` K rows of `layer` into `out`
+    /// `[rows, d_model]`.
+    fn gather_k(&self, l: &KvLayout, layer: usize, rows: usize, out: &mut [f32]) {
+        match &self.data {
+            BlockData::F32 { k, .. } => {
+                let off = layer * l.block_size * l.d_model;
+                out[..rows * l.d_model].copy_from_slice(&k[off..off + rows * l.d_model]);
+            }
+            BlockData::Quant { k, k_scale, .. } => {
+                Self::gather_side(l, k, k_scale, layer, rows, out)
+            }
+        }
+    }
+
+    fn gather_v(&self, l: &KvLayout, layer: usize, rows: usize, out: &mut [f32]) {
+        match &self.data {
+            BlockData::F32 { v, .. } => {
+                let off = layer * l.block_size * l.d_model;
+                out[..rows * l.d_model].copy_from_slice(&v[off..off + rows * l.d_model]);
+            }
+            BlockData::Quant { v, v_scale, .. } => {
+                Self::gather_side(l, v, v_scale, layer, rows, out)
+            }
+        }
+    }
+}
+
+/// Point-in-time pool occupancy (what the scheduler's block-aware
+/// admission and the serving metrics consume).
+#[derive(Clone, Copy, Debug)]
+pub struct KvPoolStatus {
+    pub total_blocks: usize,
+    pub free_blocks: usize,
+    pub block_size: usize,
+    pub block_bytes: usize,
+    pub bits: u8,
+}
+
+impl KvPoolStatus {
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks - self.free_blocks
+    }
+
+    /// Blocks needed to hold `positions` KV rows.
+    pub fn blocks_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.block_size)
+    }
+}
+
+/// The shared block pool: a capacity budget plus a free list of recycled
+/// block buffers. Handles are cheap clones of one `Arc`; sessions lease
+/// blocks through [`PagedKvCache`] and return them on drop. The lock is
+/// touched only at block granularity (once every `block_size` positions
+/// per sequence), never per row.
+#[derive(Clone)]
+pub struct KvPool {
+    inner: Arc<PoolShared>,
+}
+
+struct PoolShared {
+    layout: KvLayout,
+    max_seq: usize,
+    max_blocks: usize,
+    state: Mutex<PoolState>,
+}
+
+struct PoolState {
+    free: Vec<KvBlock>,
+    leased: usize,
+}
+
+/// Default pool budget when none is configured: enough blocks for this
+/// many full-`max_seq` sequences (block buffers allocate lazily, so an
+/// untouched budget costs nothing).
+const DEFAULT_POOL_SEQS: usize = 64;
+
+impl KvPool {
+    /// `budget_bytes` caps the pool (rounded down to whole blocks, min 1);
+    /// `None` defaults to [`DEFAULT_POOL_SEQS`] full sequences.
+    pub fn new(m: &ModelConfig, kv: &KvCacheConfig, budget_bytes: Option<usize>) -> Result<Self> {
+        kv.validate()?;
+        if kv.bits == 4 && m.d_model % 2 != 0 {
+            bail!("int4 KV pages need an even d_model (got {})", m.d_model);
+        }
+        let layout = KvLayout::from(m, kv);
+        let blocks_per_seq = m.max_seq.div_ceil(kv.block_size);
+        let max_blocks = match budget_bytes {
+            Some(b) => (b / layout.block_bytes()).max(1),
+            None => blocks_per_seq * DEFAULT_POOL_SEQS,
+        };
+        Ok(KvPool {
+            inner: Arc::new(PoolShared {
+                layout,
+                max_seq: m.max_seq,
+                max_blocks,
+                state: Mutex::new(PoolState { free: Vec::new(), leased: 0 }),
+            }),
+        })
+    }
+
+    /// A fresh empty cache leasing from this pool.
+    pub fn new_cache(&self) -> PagedKvCache {
+        PagedKvCache {
+            pool: self.clone(),
+            blocks: Vec::new(),
+            pos: 0,
+            max_seq: self.inner.max_seq,
+        }
+    }
+
+    pub fn status(&self) -> KvPoolStatus {
+        let st = self.inner.state.lock().unwrap();
+        KvPoolStatus {
+            total_blocks: self.inner.max_blocks,
+            free_blocks: self.inner.max_blocks - st.leased,
+            block_size: self.inner.layout.block_size,
+            block_bytes: self.inner.layout.block_bytes(),
+            bits: self.inner.layout.bits,
+        }
+    }
+
+    pub fn block_bytes(&self) -> usize {
+        self.inner.layout.block_bytes()
+    }
+
+    pub fn blocks_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.inner.layout.block_size)
+    }
+
+    fn lease(&self) -> Result<KvBlock> {
+        let mut st = self.inner.state.lock().unwrap();
+        if st.leased >= self.inner.max_blocks {
+            bail!(
+                "KV pool exhausted: {}/{} blocks leased",
+                st.leased,
+                self.inner.max_blocks
+            );
+        }
+        st.leased += 1;
+        Ok(st.free.pop().unwrap_or_else(|| KvBlock::new(&self.inner.layout)))
+    }
+
+    fn release(&self, block: KvBlock) {
+        let mut st = self.inner.state.lock().unwrap();
+        debug_assert!(st.leased > 0, "release without lease");
+        st.leased -= 1;
+        st.free.push(block);
+    }
+}
+
+/// Per-sequence view over pool-leased blocks: the block table plus the
+/// write position. Positions `[0, pos)` are valid; the block covering
+/// position `p` is `blocks[p / block_size]`, row `p % block_size`.
+pub struct PagedKvCache {
+    pool: KvPool,
+    blocks: Vec<KvBlock>,
+    pos: usize,
+    max_seq: usize,
+}
+
+impl PagedKvCache {
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.max_seq - self.pos
+    }
+
+    pub fn leased_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Resident bytes actually leased (the `kv_bytes` a session reports).
+    pub fn bytes(&self) -> usize {
+        self.blocks.len() * self.pool.block_bytes()
+    }
+
+    /// Deep copy for session forking: leases fresh blocks from the pool
+    /// (fails when the pool cannot cover them).
+    pub fn try_clone(&self) -> Result<PagedKvCache> {
+        let mut blocks = Vec::with_capacity(self.blocks.len());
+        for b in &self.blocks {
+            let mut nb = self.pool.lease()?;
+            nb.copy_from(b);
+            blocks.push(nb);
+        }
+        Ok(PagedKvCache { pool: self.pool.clone(), blocks, pos: self.pos, max_seq: self.max_seq })
+    }
+}
+
+impl KvStore for PagedKvCache {
+    fn pos(&self) -> usize {
+        self.pos
+    }
+
+    fn set_pos(&mut self, pos: usize) {
+        debug_assert!(pos <= self.blocks.len() * self.pool.inner.layout.block_size);
+        self.pos = pos;
+    }
+
+    fn remaining(&self) -> usize {
+        self.max_seq - self.pos
+    }
+
+    fn reserve(&mut self, additional: usize) -> Result<()> {
+        if self.pos + additional > self.max_seq {
+            bail!(
+                "sequence would exceed KV capacity ({} + {additional} > {})",
+                self.pos,
+                self.max_seq
+            );
+        }
+        let needed = self.pool.blocks_for(self.pos + additional);
+        while self.blocks.len() < needed {
+            self.blocks.push(self.pool.lease()?);
+        }
+        Ok(())
+    }
+
+    fn write_row(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        let l = self.pool.inner.layout;
+        let (b, idx) = (pos / l.block_size, pos % l.block_size);
+        self.blocks[b].write_row(&l, layer, idx, k_row, v_row);
+    }
+
+    fn gather_k(&self, layer: usize, upto: usize, out: &mut [f32]) {
+        let l = self.pool.inner.layout;
+        let mut p = 0;
+        for block in &self.blocks {
+            if p >= upto {
+                break;
+            }
+            let rows = (upto - p).min(l.block_size);
+            block.gather_k(&l, layer, rows, &mut out[p * l.d_model..(p + rows) * l.d_model]);
+            p += rows;
+        }
+    }
+
+    fn gather_v(&self, layer: usize, upto: usize, out: &mut [f32]) {
+        let l = self.pool.inner.layout;
+        let mut p = 0;
+        for block in &self.blocks {
+            if p >= upto {
+                break;
+            }
+            let rows = (upto - p).min(l.block_size);
+            block.gather_v(&l, layer, rows, &mut out[p * l.d_model..(p + rows) * l.d_model]);
+            p += rows;
+        }
+    }
+}
+
+impl Drop for PagedKvCache {
+    fn drop(&mut self) {
+        for b in self.blocks.drain(..) {
+            self.pool.release(b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::TINY;
+
+    fn kv(bits: u8, block_size: usize) -> KvCacheConfig {
+        KvCacheConfig { bits, block_size }
+    }
+
+    fn row(seed: usize, d: usize, scale: f32) -> Vec<f32> {
+        (0..d).map(|i| (((i * 31 + seed * 17) % 97) as f32 - 48.0) / 48.0 * scale).collect()
+    }
+
+    #[test]
+    fn fp32_roundtrip_is_exact() {
+        let pool = KvPool::new(&TINY, &kv(32, 8), None).unwrap();
+        let mut c = pool.new_cache();
+        c.reserve(20).unwrap();
+        let d = TINY.d_model;
+        for p in 0..20 {
+            let (k, v) = (row(p, d, 1.0), row(p + 100, d, 2.0));
+            c.write_row(2, p, &k, &v);
+        }
+        c.set_pos(20);
+        let mut out = vec![0f32; 20 * d];
+        c.gather_k(2, 20, &mut out);
+        for p in 0..20 {
+            assert_eq!(&out[p * d..(p + 1) * d], &row(p, d, 1.0)[..], "pos {p}");
+        }
+        c.gather_v(2, 20, &mut out);
+        assert_eq!(&out[..d], &row(100, d, 2.0)[..]);
+    }
+
+    #[test]
+    fn quantized_roundtrip_error_bounded() {
+        for bits in [4u8, 8] {
+            let pool = KvPool::new(&TINY, &kv(bits, 8), None).unwrap();
+            let mut c = pool.new_cache();
+            c.reserve(12).unwrap();
+            let d = TINY.d_model;
+            // decreasing magnitude: every per-head scale is fixed by row 0,
+            // so the error bound is exactly one quantization step
+            let base = row(0, d, 1.5);
+            let scaled = |p: usize| -> Vec<f32> {
+                base.iter().map(|x| x * (1.0 - p as f32 * 0.05)).collect()
+            };
+            for p in 0..12 {
+                let r = scaled(p);
+                c.write_row(0, p, &r, &r);
+            }
+            c.set_pos(12);
+            let mut out = vec![0f32; 12 * d];
+            c.gather_k(0, 12, &mut out);
+            let zp = 1i32 << (bits - 1);
+            let hd = TINY.head_dim();
+            for p in 0..12 {
+                let want = scaled(p);
+                for h in 0..TINY.n_heads {
+                    let absmax =
+                        base[h * hd..(h + 1) * hd].iter().fold(0f32, |m, &x| m.max(x.abs()));
+                    let delta = absmax / (zp - 1) as f32;
+                    for j in 0..hd {
+                        let i = h * hd + j;
+                        let err = (out[p * d + i] - want[i]).abs();
+                        assert!(err <= delta * 0.51 + 1e-6, "bits {bits} p {p} i {i} err {err}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scale_growth_requantizes_earlier_rows() {
+        let pool = KvPool::new(&TINY, &kv(8, 16), None).unwrap();
+        let mut c = pool.new_cache();
+        c.reserve(2).unwrap();
+        let d = TINY.d_model;
+        let small = vec![0.01f32; d];
+        let big = vec![1.0f32; d];
+        c.write_row(0, 0, &small, &small);
+        c.write_row(0, 1, &big, &big); // scale jumps 100×
+        c.set_pos(2);
+        let mut out = vec![0f32; 2 * d];
+        c.gather_k(0, 2, &mut out);
+        // the small row survives the rescale (coarser grid, still ~0.01)
+        assert!((out[0] - 0.01).abs() < 1.0 / 127.0 + 1e-4, "{}", out[0]);
+        assert!((out[d] - 1.0).abs() < 2.0 / 127.0, "{}", out[d]);
+    }
+
+    #[test]
+    fn pool_exhaustion_is_an_error_and_release_recycles() {
+        let cfg = kv(8, 8);
+        let layout = KvLayout::from(&TINY, &cfg);
+        let pool = KvPool::new(&TINY, &cfg, Some(layout.block_bytes() * 2)).unwrap();
+        assert_eq!(pool.status().total_blocks, 2);
+        let mut a = pool.new_cache();
+        a.reserve(16).unwrap(); // 2 blocks
+        assert_eq!(pool.status().free_blocks, 0);
+        let mut b = pool.new_cache();
+        assert!(b.reserve(1).is_err(), "lease beyond budget must fail");
+        drop(a);
+        assert_eq!(pool.status().free_blocks, 2);
+        b.reserve(8).unwrap();
+        assert_eq!(pool.status().used_blocks(), 1);
+    }
+
+    #[test]
+    fn fork_copies_blocks_and_leases_independently() {
+        let pool = KvPool::new(&TINY, &kv(8, 8), None).unwrap();
+        let mut a = pool.new_cache();
+        a.reserve(10).unwrap();
+        let d = TINY.d_model;
+        for p in 0..10 {
+            let r = row(p, d, 1.0);
+            a.write_row(1, p, &r, &r);
+        }
+        a.set_pos(10);
+        let b = a.try_clone().unwrap();
+        assert_eq!(pool.status().used_blocks(), 4);
+        let (mut ga, mut gb) = (vec![0f32; 10 * d], vec![0f32; 10 * d]);
+        a.gather_k(1, 10, &mut ga);
+        b.gather_k(1, 10, &mut gb);
+        assert_eq!(ga, gb);
+        drop(b);
+        assert_eq!(pool.status().used_blocks(), 2);
+    }
+
+    #[test]
+    fn block_bytes_compression() {
+        let fp = KvLayout::from(&TINY, &kv(32, 16)).block_bytes();
+        let i8b = KvLayout::from(&TINY, &kv(8, 16)).block_bytes();
+        let i4b = KvLayout::from(&TINY, &kv(4, 16)).block_bytes();
+        assert!(i8b * 3 < fp, "int8 block ({i8b}) ≥ fp32/3 ({fp})");
+        assert!(i4b * 6 < fp, "int4 block ({i4b}) ≥ fp32/6 ({fp})");
+    }
+}

@@ -4,12 +4,14 @@
 
 pub mod config;
 pub mod kv_cache;
+pub mod kv_pool;
 pub mod sampler;
 pub mod transformer;
 pub mod weights;
 
 pub use config::{ModelConfig, LLAMA_13B, LLAMA_30B, LLAMA_7B, TINY};
-pub use kv_cache::KvCache;
+pub use kv_cache::{KvCache, KvStore};
+pub use kv_pool::{KvCacheConfig, KvPool, KvPoolStatus, PagedKvCache};
 pub use sampler::{argmax, log_prob, Sampler, Sampling};
 pub use transformer::{Block, ForwardScratch, Transformer, LINEAR_NAMES};
 pub use weights::{Tensor, WeightPack};

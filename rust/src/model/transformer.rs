@@ -23,7 +23,7 @@ use crate::baselines::gemm_fp32_into;
 use crate::engine::{LinearBackend, LinearOp, LinearScratch, PrepareCtx};
 
 use super::config::ModelConfig;
-use super::kv_cache::KvCache;
+use super::kv_cache::KvStore;
 use super::weights::WeightPack;
 
 pub const LINEAR_NAMES: [&str; 7] = ["wq", "wk", "wv", "wo", "gate", "up", "down"];
@@ -170,6 +170,11 @@ pub struct ForwardScratch {
     act: Vec<f32>,
     /// attention scores for one (token, head) pair, `[max_seq]`
     scores: Vec<f32>,
+    /// gathered (dequantized) K/V pages for one (layer, sequence) — the
+    /// paged read path materializes here; grown on demand to the largest
+    /// attention span seen (≤ `[max_seq, d_model]`), not pre-sized
+    kpage: Vec<f32>,
+    vpage: Vec<f32>,
     /// RoPE tables `[tokens, hd/2]`
     cos: Vec<f32>,
     sin: Vec<f32>,
@@ -311,24 +316,23 @@ impl Transformer {
 
     /// Prefill one sequence, filling `cache` and returning logits `[S, V]`
     /// (fresh scratch; sessions use [`Transformer::prefill_scratch`]).
-    pub fn prefill(&self, tokens: &[u32], cache: &mut KvCache) -> Result<Vec<f32>> {
+    pub fn prefill<C: KvStore>(&self, tokens: &[u32], cache: &mut C) -> Result<Vec<f32>> {
         let mut scratch = ForwardScratch::new();
         self.prefill_scratch(tokens, cache, &mut scratch)
     }
 
     /// [`Transformer::prefill`] over a caller-owned scratch arena.
-    pub fn prefill_scratch(
+    pub fn prefill_scratch<C: KvStore>(
         &self,
         tokens: &[u32],
-        cache: &mut KvCache,
+        cache: &mut C,
         s: &mut ForwardScratch,
     ) -> Result<Vec<f32>> {
         let s_len = tokens.len();
-        if s_len > cache.remaining() {
-            bail!("sequence longer than KV capacity");
-        }
+        // reserve is the single capacity check (max_seq + pool coverage)
+        cache.reserve(s_len)?;
         let (d, hd, nh) = (self.cfg.d_model, self.cfg.head_dim(), self.cfg.n_heads);
-        let pos0 = cache.pos;
+        let pos0 = cache.pos();
         s.ensure(s_len, &self.cfg);
         rope_tables_into(&self.cfg, pos0, s_len, &mut s.cos, &mut s.sin);
         self.embed_into(tokens, &mut s.x);
@@ -342,9 +346,18 @@ impl Transformer {
             apply_rope(&mut s.q, &self.cfg, &s.cos, &s.sin, s_len);
             apply_rope(&mut s.k, &self.cfg, &s.cos, &s.sin, s_len);
             for t in 0..s_len {
-                cache.write(li, pos0 + t, &s.k[t * d..(t + 1) * d], &s.v[t * d..(t + 1) * d]);
+                cache.write_row(li, pos0 + t, &s.k[t * d..(t + 1) * d], &s.v[t * d..(t + 1) * d]);
             }
-            // causal attention over cache [0, pos0+t]
+            // causal attention over the gathered pages [0, pos0+t] —
+            // quantized K/V round-trips through the page codes here, so
+            // attention sees exactly what the cache retains
+            let keys_all = pos0 + s_len;
+            if s.kpage.len() < keys_all * d {
+                s.kpage.resize(keys_all * d, 0.0);
+                s.vpage.resize(keys_all * d, 0.0);
+            }
+            cache.gather_k(li, keys_all, &mut s.kpage[..keys_all * d]);
+            cache.gather_v(li, keys_all, &mut s.vpage[..keys_all * d]);
             s.ctx.fill(0.0);
             for t in 0..s_len {
                 let keys = pos0 + t + 1;
@@ -352,15 +365,13 @@ impl Transformer {
                     let qv = &s.q[t * d + hh * hd..t * d + (hh + 1) * hd];
                     let scores = &mut s.scores[..keys];
                     for (kp, sc) in scores.iter_mut().enumerate() {
-                        let kr = cache.k_row(li, kp);
-                        let kv = &kr[hh * hd..(hh + 1) * hd];
+                        let kv = &s.kpage[kp * d + hh * hd..kp * d + (hh + 1) * hd];
                         *sc = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
                     }
                     softmax_inplace(scores);
                     let crow = &mut s.ctx[t * d + hh * hd..t * d + (hh + 1) * hd];
                     for (kp, &a) in scores.iter().enumerate() {
-                        let vr = cache.v_row(li, kp);
-                        let vv = &vr[hh * hd..(hh + 1) * hd];
+                        let vv = &s.vpage[kp * d + hh * hd..kp * d + (hh + 1) * hd];
                         for i in 0..hd {
                             crow[i] += a * vv[i];
                         }
@@ -382,7 +393,7 @@ impl Transformer {
                 s.x[i] += s.proj[i];
             }
         }
-        cache.pos = pos0 + s_len;
+        cache.set_pos(pos0 + s_len);
         rmsnorm(&s.x, &self.ln_f, &mut s.h);
         let mut logits = vec![0f32; s_len * self.cfg.vocab];
         gemm_fp32_into(&s.h, &self.head, s_len, self.cfg.vocab, d, &mut logits);
@@ -392,18 +403,24 @@ impl Transformer {
     /// One decode step for a batch of sequences (fresh scratch; sessions
     /// use [`Transformer::decode_step_scratch`]). `tokens[i]` extends
     /// `caches[i]`. Returns logits `[B, V]`.
-    pub fn decode_step(&self, tokens: &[u32], caches: &mut [&mut KvCache]) -> Result<Vec<f32>> {
+    pub fn decode_step<C: KvStore>(
+        &self,
+        tokens: &[u32],
+        caches: &mut [&mut C],
+    ) -> Result<Vec<f32>> {
         let mut scratch = ForwardScratch::new();
         self.decode_step_scratch(tokens, caches, &mut scratch)
     }
 
     /// One decode step over a caller-owned scratch arena — the hot path.
     /// Linears are batched over B (the GEMM-vs-GEMV axis the engine
-    /// benches sweep). Steady state allocates only the returned logits.
-    pub fn decode_step_scratch(
+    /// benches sweep). Steady state allocates only the returned logits
+    /// (leasing a fresh KV block every `block_size` steps is the one
+    /// amortized exception on the paged path).
+    pub fn decode_step_scratch<C: KvStore>(
         &self,
         tokens: &[u32],
-        caches: &mut [&mut KvCache],
+        caches: &mut [&mut C],
         s: &mut ForwardScratch,
     ) -> Result<Vec<f32>> {
         let b = tokens.len();
@@ -414,6 +431,9 @@ impl Transformer {
         let half = hd / 2;
         let scale = 1.0 / (hd as f32).sqrt();
         s.ensure(b, &self.cfg);
+        for cache in caches.iter_mut() {
+            cache.reserve(1)?;
+        }
         self.embed_into(tokens, &mut s.x);
         // per-sequence RoPE tables at each sequence's own position —
         // positions are fixed for the whole step, so build once here, not
@@ -421,7 +441,7 @@ impl Transformer {
         for (bi, cache) in caches.iter().enumerate() {
             rope_tables_into(
                 &self.cfg,
-                cache.pos,
+                cache.pos(),
                 1,
                 &mut s.cos[bi * half..(bi + 1) * half],
                 &mut s.sin[bi * half..(bi + 1) * half],
@@ -441,22 +461,26 @@ impl Transformer {
             }
             s.ctx.fill(0.0);
             for (bi, cache) in caches.iter_mut().enumerate() {
-                let pos = cache.pos;
-                cache.write(li, pos, &s.k[bi * d..(bi + 1) * d], &s.v[bi * d..(bi + 1) * d]);
+                let pos = cache.pos();
+                cache.write_row(li, pos, &s.k[bi * d..(bi + 1) * d], &s.v[bi * d..(bi + 1) * d]);
                 let keys = pos + 1;
+                if s.kpage.len() < keys * d {
+                    s.kpage.resize(keys * d, 0.0);
+                    s.vpage.resize(keys * d, 0.0);
+                }
+                cache.gather_k(li, keys, &mut s.kpage[..keys * d]);
+                cache.gather_v(li, keys, &mut s.vpage[..keys * d]);
                 for hh in 0..nh {
                     let qv = &s.q[bi * d + hh * hd..bi * d + (hh + 1) * hd];
                     let scores = &mut s.scores[..keys];
                     for (kp, sc) in scores.iter_mut().enumerate() {
-                        let kr = cache.k_row(li, kp);
-                        let kv = &kr[hh * hd..(hh + 1) * hd];
+                        let kv = &s.kpage[kp * d + hh * hd..kp * d + (hh + 1) * hd];
                         *sc = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
                     }
                     softmax_inplace(scores);
                     let crow = &mut s.ctx[bi * d + hh * hd..bi * d + (hh + 1) * hd];
                     for (kp, &a) in scores.iter().enumerate() {
-                        let vr = cache.v_row(li, kp);
-                        let vv = &vr[hh * hd..(hh + 1) * hd];
+                        let vv = &s.vpage[kp * d + hh * hd..kp * d + (hh + 1) * hd];
                         for i in 0..hd {
                             crow[i] += a * vv[i];
                         }
@@ -479,7 +503,8 @@ impl Transformer {
             }
         }
         for cache in caches.iter_mut() {
-            cache.pos += 1;
+            let p = cache.pos();
+            cache.set_pos(p + 1);
         }
         rmsnorm(&s.x, &self.ln_f, &mut s.h);
         let mut logits = vec![0f32; b * self.cfg.vocab];
@@ -506,6 +531,7 @@ mod tests {
     use super::*;
     use crate::engine::{AbqBackend, Fp32Backend};
     use crate::model::config::ModelConfig;
+    use crate::model::KvCache;
     use crate::quant::WAConfig;
 
     const MICRO: ModelConfig = ModelConfig {

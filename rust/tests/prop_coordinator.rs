@@ -1,12 +1,17 @@
 //! Property tests for the coordinator: batcher FIFO/no-loss/no-dup,
-//! scheduler token-count and capacity invariants under random workloads.
+//! scheduler token-count and capacity invariants under random workloads,
+//! block-aware admission capacity (the bits→concurrency conversion) and
+//! preemption-requeue completeness under a starved KV pool.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use abq_llm::coordinator::request::QueuedRequest;
-use abq_llm::coordinator::{Batcher, BatcherConfig, Request, Scheduler, SchedulerConfig};
-use abq_llm::engine::EngineBuilder;
-use abq_llm::model::ModelConfig;
+use abq_llm::coordinator::{
+    Admission, Batcher, BatcherConfig, Request, Scheduler, SchedulerConfig,
+};
+use abq_llm::engine::{EngineBuilder, InferenceEngine};
+use abq_llm::model::{KvCacheConfig, ModelConfig};
 use abq_llm::util::prop::{check, usize_in};
 
 const MICRO: ModelConfig = ModelConfig {
@@ -76,7 +81,13 @@ fn prop_scheduler_completes_every_request_exactly() {
         while (!backlog.is_empty() || !sched.idle()) && guard < 500 {
             guard += 1;
             while sched.has_capacity() && !backlog.is_empty() {
-                sched.admit(backlog.pop().unwrap(), guard as u64).unwrap();
+                match sched.admit(backlog.pop().unwrap(), guard as u64).unwrap() {
+                    Admission::Admitted => {}
+                    Admission::Deferred(qr) => {
+                        backlog.push(qr);
+                        break;
+                    }
+                }
                 assert!(sched.n_active() <= max_active, "capacity invariant");
             }
             sched.step().unwrap();
@@ -91,6 +102,98 @@ fn prop_scheduler_completes_every_request_exactly() {
             assert!(resp.tokens.iter().all(|&t| (t as usize) < MICRO.vocab));
         }
     });
+}
+
+/// Build a MICRO engine with an explicit KV bit width + pool byte budget.
+fn kv_engine(bits: u8, block_size: usize, budget: usize) -> Arc<dyn InferenceEngine> {
+    EngineBuilder::new()
+        .random_weights(MICRO, 5)
+        .backend("fp32")
+        .kv_cache(KvCacheConfig { bits, block_size })
+        .kv_pool_bytes(budget)
+        .build_arc()
+        .unwrap()
+}
+
+/// Admit identical requests until block-aware admission defers, returning
+/// how many concurrently active sequences the pool sustained.
+fn admitted_at_budget(bits: u8, budget: usize) -> usize {
+    let engine = kv_engine(bits, 8, budget);
+    let mem = engine.memory_report();
+    assert!(mem.kv_pool_bytes <= budget, "pool must respect its byte budget");
+    let mut sched = Scheduler::new(engine.clone(), SchedulerConfig { max_active: 10_000 });
+    let mut n = 0usize;
+    loop {
+        let adm = sched
+            .admit(qr(n as u64, 8, 4), n as u64)
+            .expect("admission under budget never hard-fails");
+        match adm {
+            Admission::Admitted => n += 1,
+            Admission::Deferred(_) => break,
+        }
+        assert!(n <= 10_000, "runaway admission");
+    }
+    let mem = engine.memory_report();
+    assert!(mem.kv_pool_used_bytes <= mem.kv_pool_bytes, "occupancy within budget");
+    assert!(mem.kv_pool_used_bytes > 0);
+    n
+}
+
+#[test]
+fn int8_kv_at_least_doubles_admission_capacity_at_fixed_budget() {
+    // the paper's serving claim, converted into scheduler behavior: at the
+    // same pool byte budget, int8 KV pages must sustain ≥ 2× (actually
+    // ~4×) the concurrently active sequences of fp32 KV pages
+    let budget = 32 * 1024;
+    let n_fp32 = admitted_at_budget(32, budget);
+    let n_int8 = admitted_at_budget(8, budget);
+    assert!(n_fp32 >= 1, "fp32 pool admits at least one sequence");
+    assert!(
+        n_int8 >= 2 * n_fp32,
+        "int8 KV must at least double admission capacity: fp32 {n_fp32}, int8 {n_int8}"
+    );
+}
+
+#[test]
+fn preemption_requeue_completes_all_requests() {
+    // a pool far too small for the offered load: finishing all requests
+    // requires evicting sequences and resuming them later
+    let block_size = 4;
+    let engine = kv_engine(8, block_size, {
+        let probe = kv_engine(8, block_size, usize::MAX);
+        probe.kv_pool_status().unwrap().block_bytes * 10
+    });
+    assert_eq!(engine.kv_pool_status().unwrap().total_blocks, 10);
+    let mut sched = Scheduler::new(engine, SchedulerConfig { max_active: 4 });
+    let n_reqs = 6u64;
+    let (plen, max_new) = (6usize, 8usize);
+    let mut backlog: Vec<QueuedRequest> =
+        (0..n_reqs).map(|id| qr(id, plen, max_new)).collect();
+    backlog.reverse();
+    let mut guard = 0;
+    while (!backlog.is_empty() || !sched.idle()) && guard < 2000 {
+        guard += 1;
+        while sched.has_capacity() && !backlog.is_empty() {
+            match sched.admit(backlog.pop().unwrap(), guard).unwrap() {
+                Admission::Admitted => {}
+                Admission::Deferred(qr) => {
+                    backlog.push(qr);
+                    break;
+                }
+            }
+        }
+        sched.step().unwrap();
+    }
+    assert!(guard < 2000, "scheduler did not converge under preemption churn");
+    assert!(sched.preemption_count() > 0, "this workload must force preemption");
+    let mut done = sched.take_finished();
+    done.sort_by_key(|r| r.id);
+    assert_eq!(done.len(), n_reqs as usize, "every request completes exactly once");
+    for (i, resp) in done.iter().enumerate() {
+        assert_eq!(resp.id, i as u64);
+        assert_eq!(resp.tokens.len(), max_new, "exact token count across preemption");
+        assert!(resp.tokens.iter().all(|&t| (t as usize) < MICRO.vocab));
+    }
 }
 
 #[test]

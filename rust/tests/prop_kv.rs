@@ -1,0 +1,211 @@
+//! Property tests for the paged KV cache subsystem (ISSUE 3 tentpole):
+//! the block pool never leaks or double-counts blocks across
+//! lease/retire/fork churn, the `bits: 32` paged path is bit-identical to
+//! the dense reference cache, and quantized (int8/int4) KV keeps the tiny
+//! model's logits within tolerance of fp32.
+
+use abq_llm::engine::{EngineBuilder, EngineSession, Fp32Backend, InferenceEngine};
+use abq_llm::model::{
+    KvCache, KvCacheConfig, KvPool, KvStore, ModelConfig, PagedKvCache, Transformer,
+};
+use abq_llm::util::prop::{check, usize_in};
+
+const MICRO: ModelConfig = ModelConfig {
+    name: "micro",
+    vocab: 32,
+    d_model: 16,
+    n_layers: 2,
+    n_heads: 2,
+    d_ff: 32,
+    max_seq: 48,
+    rope_base: 10000.0,
+};
+
+#[test]
+fn prop_pool_blocks_never_leak_across_churn() {
+    check("kv-pool-churn", 48, |rng| {
+        let bits = [4u8, 8, 32][usize_in(rng, 0, 2)];
+        let block_size = usize_in(rng, 2, 9);
+        let kv = KvCacheConfig { bits, block_size };
+        let total = usize_in(rng, 4, 24);
+        let pool =
+            KvPool::new(&MICRO, &kv, Some(pool_budget_for(&kv, total))).unwrap();
+        assert_eq!(pool.status().total_blocks, total);
+        let mut caches: Vec<PagedKvCache> = Vec::new();
+        let d = MICRO.d_model;
+        let row: Vec<f32> = (0..d).map(|i| (i as f32 - 8.0) / 8.0).collect();
+        for _ in 0..60 {
+            match usize_in(rng, 0, 2) {
+                // grow an existing or fresh cache by a few positions
+                0 | 1 => {
+                    if caches.is_empty() || usize_in(rng, 0, 3) == 0 {
+                        caches.push(pool.new_cache());
+                    }
+                    let ci = usize_in(rng, 0, caches.len() - 1);
+                    let c = &mut caches[ci];
+                    let grow = usize_in(rng, 1, 2 * block_size).min(c.remaining());
+                    if grow > 0 && c.reserve(grow).is_ok() {
+                        let p0 = c.pos();
+                        for p in p0..p0 + grow {
+                            for l in 0..MICRO.n_layers {
+                                c.write_row(l, p, &row, &row);
+                            }
+                        }
+                        c.set_pos(p0 + grow);
+                    }
+                }
+                // retire (drop) a cache — its blocks must come back
+                _ => {
+                    if !caches.is_empty() {
+                        let ci = usize_in(rng, 0, caches.len() - 1);
+                        caches.swap_remove(ci);
+                    }
+                }
+            }
+            // invariant: leased == sum of live caches' block tables
+            let st = pool.status();
+            let live: usize = caches.iter().map(|c| c.leased_blocks()).sum();
+            assert_eq!(st.used_blocks(), live, "pool accounting drift");
+            assert!(st.free_blocks + live == st.total_blocks);
+        }
+        caches.clear();
+        assert_eq!(pool.status().used_blocks(), 0, "blocks leaked after drop");
+    });
+}
+
+fn pool_budget_for(kv: &KvCacheConfig, blocks: usize) -> usize {
+    // one block's bytes via a probe pool (status reports block_bytes)
+    let probe = KvPool::new(&MICRO, kv, None).unwrap();
+    probe.status().block_bytes * blocks
+}
+
+#[test]
+fn paged_fp32_is_bit_identical_to_dense_reference() {
+    let model = Transformer::random(MICRO, &Fp32Backend, 11).unwrap();
+    check("paged-vs-dense", 16, |rng| {
+        let block_size = usize_in(rng, 1, 20);
+        let pool =
+            KvPool::new(&MICRO, &KvCacheConfig { bits: 32, block_size }, None).unwrap();
+        let prompt: Vec<u32> =
+            (0..usize_in(rng, 1, 12)).map(|i| ((i * 7 + 3) % MICRO.vocab) as u32).collect();
+        let mut dense = KvCache::new(&MICRO);
+        let mut paged = pool.new_cache();
+        let ld = model.prefill(&prompt, &mut dense).unwrap();
+        let lp = model.prefill(&prompt, &mut paged).unwrap();
+        assert_eq!(ld, lp, "prefill logits must be bit-identical (bs {block_size})");
+        for step in 0..usize_in(rng, 1, 8) as u32 {
+            let tok = (step * 5 + 1) % MICRO.vocab as u32;
+            let mut bd = [&mut dense];
+            let sd = model.decode_step(&[tok], &mut bd).unwrap();
+            let mut bp = [&mut paged];
+            let sp = model.decode_step(&[tok], &mut bp).unwrap();
+            assert_eq!(sd, sp, "decode step {step} logits must be bit-identical");
+        }
+        assert_eq!(paged.leased_blocks(), paged.pos().div_ceil(block_size));
+    });
+}
+
+#[test]
+fn paged_engine_matches_direct_dense_path() {
+    // the full engine stack (EngineBuilder → NativeEngine → paged fp32
+    // session) against the dense reference driven by hand
+    let model = Transformer::random(MICRO, &Fp32Backend, 21).unwrap();
+    let engine = EngineBuilder::new()
+        .random_weights(MICRO, 21)
+        .backend("fp32")
+        .kv_cache(KvCacheConfig { bits: 32, block_size: 4 })
+        .build()
+        .unwrap();
+    let prompt = [1u32, 5, 9, 2, 7];
+    let mut dense = KvCache::new(&MICRO);
+    let ld = model.prefill(&prompt, &mut dense).unwrap();
+    let mut sess = engine.new_session().unwrap();
+    let le = engine.prefill(&prompt, sess.as_mut()).unwrap();
+    assert_eq!(ld, le, "engine prefill ≡ dense reference");
+    for step in 0..6u32 {
+        let tok = (step * 3 + 2) % MICRO.vocab as u32;
+        let mut bd = [&mut dense];
+        let sd = model.decode_step(&[tok], &mut bd).unwrap();
+        let mut refs: [&mut dyn EngineSession; 1] = [sess.as_mut()];
+        let se = engine.decode_step(&[tok], &mut refs).unwrap();
+        assert_eq!(sd, se, "engine decode step {step} ≡ dense reference");
+    }
+    // session accounting: bytes reflect leased blocks, not max_seq
+    let st = engine.kv_pool_status().unwrap();
+    assert_eq!(sess.kv_bytes(), st.blocks_for(sess.pos()) * st.block_bytes);
+    let mem = engine.memory_report();
+    assert_eq!(mem.kv_pool_used_bytes, sess.kv_bytes());
+    drop(sess);
+    assert_eq!(engine.memory_report().kv_pool_used_bytes, 0);
+}
+
+#[test]
+fn quantized_kv_logits_within_tolerance_of_fp32() {
+    let model = Transformer::random(MICRO, &Fp32Backend, 31).unwrap();
+    let prompt: Vec<u32> = (0..10).map(|i| ((i * 11 + 2) % MICRO.vocab) as u32).collect();
+    let run = |bits: u8| -> Vec<f32> {
+        let pool =
+            KvPool::new(&MICRO, &KvCacheConfig { bits, block_size: 4 }, None).unwrap();
+        let mut cache = pool.new_cache();
+        let mut logits = model.prefill(&prompt, &mut cache).unwrap();
+        for step in 0..6u32 {
+            let tok = (step * 13 + 3) % MICRO.vocab as u32;
+            let mut b = [&mut cache];
+            logits = model.decode_step(&[tok], &mut b).unwrap();
+        }
+        logits
+    };
+    let fp = run(32);
+    let max_abs = fp.iter().map(|v| v.abs()).fold(0f32, f32::max);
+    let mean_abs = fp.iter().map(|v| v.abs()).sum::<f32>() / fp.len() as f32;
+    let mut prev_mean_err = 0f32;
+    for (bits, max_tol, mean_tol) in [(8u8, 0.15f32, 0.05f32), (4, 0.80, 0.30)] {
+        let q = run(bits);
+        let max_err = fp.iter().zip(&q).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+        let mean_err = fp.iter().zip(&q).map(|(a, b)| (a - b).abs()).sum::<f32>()
+            / fp.len() as f32;
+        assert!(
+            max_err / max_abs < max_tol,
+            "int{bits} KV max rel err {} ≥ {max_tol}",
+            max_err / max_abs
+        );
+        assert!(
+            mean_err / mean_abs < mean_tol,
+            "int{bits} KV mean rel err {} ≥ {mean_tol}",
+            mean_err / mean_abs
+        );
+        // quantization really happened, and int4 is noisier than int8
+        assert!(max_err > 0.0, "int{bits} KV produced bit-identical logits");
+        assert!(mean_err >= prev_mean_err, "int4 should not beat int8");
+        prev_mean_err = mean_err;
+    }
+}
+
+#[test]
+fn session_fork_preserves_paged_state() {
+    // teacher-forced multi-choice scoring forks sessions mid-sequence;
+    // the paged fork must copy blocks, not alias them
+    let engine = EngineBuilder::new()
+        .random_weights(MICRO, 41)
+        .backend("fp32")
+        .kv_cache(KvCacheConfig { bits: 8, block_size: 4 })
+        .build()
+        .unwrap();
+    let mut s1 = engine.new_session().unwrap();
+    engine.prefill(&[3, 1, 4, 1, 5], s1.as_mut()).unwrap();
+    let mut s2 = s1.fork().unwrap();
+    // diverge the two sessions
+    let mut r1: [&mut dyn EngineSession; 1] = [s1.as_mut()];
+    let a = engine.decode_step(&[9], &mut r1).unwrap();
+    let mut r2: [&mut dyn EngineSession; 1] = [s2.as_mut()];
+    let b = engine.decode_step(&[9], &mut r2).unwrap();
+    // same token after identical history → identical logits
+    assert_eq!(a, b);
+    let mut r1: [&mut dyn EngineSession; 1] = [s1.as_mut()];
+    let c = engine.decode_step(&[2], &mut r1).unwrap();
+    let mut r2: [&mut dyn EngineSession; 1] = [s2.as_mut()];
+    let d = engine.decode_step(&[8], &mut r2).unwrap();
+    // different tokens → the forked session did not corrupt the original
+    assert_ne!(c, d);
+    assert_eq!(s1.pos(), s2.pos());
+}

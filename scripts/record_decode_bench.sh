@@ -4,11 +4,21 @@
 # Usage: scripts/record_decode_bench.sh <label>
 #   e.g.  scripts/record_decode_bench.sh pre    # before a perf change
 #         scripts/record_decode_bench.sh post   # after, same machine
+#         scripts/record_decode_bench.sh ci     # the CI bench-smoke job
 #
 # Runs the decode_hotpath bench in release mode with ABQ_RECORD set; the
 # bench appends a labelled entry (per-backend tok/s, ms/step,
 # ns/projection, unix timestamp) to BENCH_decode.json at the repo root.
+# Set ABQ_BENCH_FAST=1 for a short smoke run, ABQ_KV_BITS=8|4 to measure
+# the quantized paged-KV read path.
 set -eu
-label="${1:?usage: record_decode_bench.sh <label (e.g. pre|post)>}"
+label="${1:?usage: record_decode_bench.sh <label (e.g. pre|post|ci)>}"
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found on PATH — install a rust toolchain" >&2
+    echo "       (rustup.rs; the repo pins channel/components in rust-toolchain.toml)." >&2
+    echo "       Without it this script records nothing, and BENCH_decode.json" >&2
+    echo "       stays empty." >&2
+    exit 1
+fi
 cd "$(dirname "$0")/../rust"
 ABQ_RECORD="$label" cargo bench --bench decode_hotpath
