@@ -22,7 +22,7 @@ pub use bitplane::{BitPlanes, PlaneLayout, PlanesRef};
 pub use gemm::{gemm_int, gemm_int_reference, OptLevel};
 pub use tile::TileConfig;
 
-use crate::quant::{quantize_act_per_token_into, QuantSpec, WAConfig};
+use crate::quant::{quantize_act_per_token_into, Correction, QuantSpec, WAConfig};
 
 /// Reusable working memory for one quantized-linear forward — the scratch
 /// arena of the decode hot path. Holds every intermediate the forward
@@ -74,6 +74,11 @@ pub struct QuantizedLinear {
     pub dw: Vec<f32>,
     /// learned balance vector s (activations are divided by it)
     pub balance: Option<Vec<f32>>,
+    /// learned shift vector z (subtracted from activations before the
+    /// balance divide; part of the distribution correction, Eq. 4–6)
+    pub shift: Option<Vec<f32>>,
+    /// per-output offset `W·z` re-added after the dequant epilogue
+    pub offset: Option<Vec<f32>>,
     pub cfg: WAConfig,
     pub out_features: usize,
     pub in_features: usize,
@@ -94,7 +99,17 @@ impl QuantizedLinear {
         let w = BitPlanes::pack(codes, out_features, in_features, planes);
         let act_planes = QuantSpec::new(cfg.act.bits).planes();
         let w = search::choose_weight_layout(w, act_planes);
-        QuantizedLinear { w, zw, dw, balance, cfg, out_features, in_features }
+        QuantizedLinear {
+            w,
+            zw,
+            dw,
+            balance,
+            shift: None,
+            offset: None,
+            cfg,
+            out_features,
+            in_features,
+        }
     }
 
     /// Build by quantizing float weights round-to-nearest (baseline path).
@@ -102,6 +117,41 @@ impl QuantizedLinear {
         let q = crate::quant::quantize_weight_rows(
             wf, out_features, in_features, &cfg.weight, 1.0, 1.0);
         Self::from_codes(&q.codes, out_features, in_features, q.zps(), q.deltas(), None, cfg)
+    }
+
+    /// Build from float weights with a learned distribution correction
+    /// (`docs/CALIBRATION.md`): the balance scale is absorbed into the
+    /// weights before quantization (`Q(W·diag(s))`), the clip ratio
+    /// tightens each row's quantization grid, and the shift's displaced
+    /// `W·z` becomes a per-output fp32 offset. With the identity
+    /// correction every step is bit-exact, so this constructor produces
+    /// an op indistinguishable from [`QuantizedLinear::from_weights_rtn`].
+    pub fn from_weights_corrected(
+        wf: &[f32],
+        out_features: usize,
+        in_features: usize,
+        cfg: WAConfig,
+        corr: &Correction,
+    ) -> Self {
+        assert_eq!(corr.in_features(), in_features, "correction width mismatch");
+        let mut scaled = wf.to_vec();
+        crate::quant::apply_balance_weight(&mut scaled, in_features, &corr.scale);
+        let q = crate::quant::quantize_weight_rows(
+            &scaled, out_features, in_features, &cfg.weight, corr.clip, corr.clip);
+        let mut lin = Self::from_codes(
+            &q.codes,
+            out_features,
+            in_features,
+            q.zps(),
+            q.deltas(),
+            Some(corr.scale.clone()),
+            cfg,
+        );
+        lin.shift = Some(corr.shift.clone());
+        lin.offset = Some(crate::quant::correction_output_offset(
+            wf, out_features, in_features, &corr.shift,
+        ));
+        lin
     }
 
     /// Forward: `x` `[tokens, in]` f32 → `[tokens, out]` f32.
@@ -140,13 +190,29 @@ impl QuantizedLinear {
     ) {
         assert_eq!(x.len(), tokens * self.in_features);
         assert_eq!(out.len(), tokens * self.out_features);
-        let x: &[f32] = if let Some(bal) = &self.balance {
-            s.xb.clear();
-            s.xb.extend_from_slice(x);
-            crate::quant::apply_balance_act(&mut s.xb, self.in_features, bal);
-            &s.xb
-        } else {
-            x
+        let x: &[f32] = match (&self.balance, &self.shift) {
+            (None, None) => x,
+            (bal, sh) => {
+                s.xb.clear();
+                s.xb.extend_from_slice(x);
+                match (bal, sh) {
+                    (Some(bal), Some(z)) => {
+                        crate::quant::apply_correction_act(&mut s.xb, self.in_features, bal, z)
+                    }
+                    (Some(bal), None) => {
+                        crate::quant::apply_balance_act(&mut s.xb, self.in_features, bal)
+                    }
+                    (None, Some(z)) => {
+                        for row in s.xb.chunks_exact_mut(self.in_features) {
+                            for (v, &zi) in row.iter_mut().zip(z) {
+                                *v -= zi;
+                            }
+                        }
+                    }
+                    (None, None) => unreachable!(),
+                }
+                &s.xb
+            }
         };
         let spec = QuantSpec::new(self.cfg.act.bits);
         quantize_act_per_token_into(
@@ -179,12 +245,21 @@ impl QuantizedLinear {
             gemm::gemm_int_into(xp, wv, &s.zx, &self.zw, opt, None, &mut s.acc);
         }
         reduction::dequantize(&s.acc, tokens, self.out_features, &s.dx, &self.dw, out);
+        if let Some(off) = &self.offset {
+            for orow in out.chunks_exact_mut(self.out_features) {
+                for (v, &o) in orow.iter_mut().zip(off) {
+                    *v += o;
+                }
+            }
+        }
     }
 
     /// Packed weight footprint in bytes (memory accounting, Table 12).
     pub fn weight_bytes(&self) -> usize {
         self.w.packed_bytes() + self.zw.len() * 4 + self.dw.len() * 4
             + self.balance.as_ref().map_or(0, |b| b.len() * 4)
+            + self.shift.as_ref().map_or(0, |z| z.len() * 4)
+            + self.offset.as_ref().map_or(0, |o| o.len() * 4)
     }
 }
 
@@ -218,6 +293,50 @@ mod tests {
             }
         }
         assert!(maxerr / maxval < 0.02, "rel err {}", maxerr / maxval);
+    }
+
+    #[test]
+    fn identity_correction_matches_rtn_bitwise() {
+        let (out_f, in_f, tokens) = (12usize, 48usize, 3usize);
+        let w: Vec<f32> = (0..out_f * in_f).map(|i| ((i % 19) as f32 - 9.0) / 23.0).collect();
+        let x: Vec<f32> = (0..tokens * in_f).map(|i| ((i % 11) as f32 - 5.0) / 2.0).collect();
+        for cfg in [WAConfig::balanced(2, 8), WAConfig::new(4, 4), WAConfig::new(8, 8)] {
+            let plain = QuantizedLinear::from_weights_rtn(&w, out_f, in_f, cfg);
+            let ident = QuantizedLinear::from_weights_corrected(
+                &w, out_f, in_f, cfg, &Correction::identity(in_f),
+            );
+            let a = plain.forward(&x, tokens, OptLevel::Auto);
+            let b = ident.forward(&x, tokens, OptLevel::Auto);
+            for (p, q) in a.iter().zip(&b) {
+                assert_eq!(p, q, "cfg {cfg}");
+            }
+        }
+    }
+
+    #[test]
+    fn correction_algebra_tracks_fp_under_fine_quant() {
+        // at w8a8 the quantization error is tiny, so the corrected op
+        // (scale + shift + offset all non-trivial) must still track W·x
+        let (out_f, in_f, tokens) = (8usize, 32usize, 2usize);
+        let w: Vec<f32> = (0..out_f * in_f).map(|i| ((i % 13) as f32 - 6.0) / 17.0).collect();
+        let x: Vec<f32> = (0..tokens * in_f).map(|i| ((i % 9) as f32 - 4.0) / 3.0).collect();
+        let corr = Correction {
+            scale: (0..in_f).map(|i| 0.5 + ((i % 7) as f32) / 4.0).collect(),
+            shift: (0..in_f).map(|i| ((i % 5) as f32 - 2.0) / 10.0).collect(),
+            clip: 0.95,
+        };
+        let lin = QuantizedLinear::from_weights_corrected(&w, out_f, in_f, WAConfig::new(8, 8), &corr);
+        let y = lin.forward(&x, tokens, OptLevel::Auto);
+        let mut max_err = 0f32;
+        let mut max_val = 0f32;
+        for t in 0..tokens {
+            for o in 0..out_f {
+                let fp: f32 = (0..in_f).map(|i| x[t * in_f + i] * w[o * in_f + i]).sum();
+                max_err = max_err.max((fp - y[t * out_f + o]).abs());
+                max_val = max_val.max(fp.abs());
+            }
+        }
+        assert!(max_err / max_val < 0.05, "rel err {}", max_err / max_val);
     }
 
     #[test]

@@ -1,0 +1,373 @@
+//! Block-wise distribution-correction calibration — the paper's DLC
+//! pipeline (§3.2, Eq. 4–6), the algorithm half that complements the
+//! inference engine's bit-plane GEMM:
+//!
+//! 1. **Tap** — the calibration corpus (the deterministic synthetic
+//!    stream, [`crate::eval::corpus`]) runs through the fp32 model with
+//!    [`crate::model::Transformer::prefill_traced`], capturing every
+//!    block's residual in/out, per-projection input activations, and
+//!    pre-softmax attention logits.
+//! 2. **Learn** — per projection, a deterministic coordinate descent
+//!    (weight clip → balance-scale migration → shift → per-channel
+//!    refinement; seeded RNG only for row subsampling, no autograd)
+//!    minimizes the quantized-vs-fp32 reconstruction MSE on the tapped
+//!    activations ([`optimize`]).
+//! 3. **Select** — per block, a coordinate sweep over the 7 projections
+//!    accepts each learned correction only if it lowers the DLC
+//!    objective `‖ŷ − y‖² + λ·‖Â − A‖²` (block output MSE plus
+//!    attention consistency), with a final guard that never ships a
+//!    block configuration worse than the uncorrected one — so calibrated
+//!    total block MSE is ≤ uncalibrated by construction.
+//! 4. **Persist / apply** — the learned
+//!    [`crate::quant::CorrectionSet`] round-trips through `.abqw` packs
+//!    and `manifest.json` `corrections` entries
+//!    ([`crate::runtime::artifacts`]) and is applied at
+//!    `LinearBackend::prepare` time (`EngineBuilder::correction`,
+//!    `abq-llm calibrate`). Identity-initialized corrections are
+//!    bit-exact no-ops (`rust/tests/prop_calib.rs`).
+//!
+//! See `docs/CALIBRATION.md` for the objective, the optimizer schedule,
+//! the artifact format, and a CLI walkthrough.
+
+pub mod optimize;
+pub mod synthetic;
+
+use anyhow::{Context, Result};
+
+use crate::engine::Fp32Backend;
+use crate::eval::corpus;
+use crate::model::{BlockTap, ForwardScratch, KvCache, ModelConfig, Transformer, WeightPack};
+use crate::model::LINEAR_NAMES;
+use crate::quant::{Correction, CorrectionSet, WAConfig};
+use crate::util::rng::SplitMix;
+
+use optimize::{block_forward, BlockWeights, RefLinear};
+
+/// Calibration hyper-parameters. The defaults calibrate the tiny model
+/// in seconds; everything is deterministic given `seed`.
+#[derive(Clone, Copy, Debug)]
+pub struct CalibOptions {
+    /// calibration sequences drawn from the synthetic corpus
+    pub seqs: usize,
+    /// tokens per calibration sequence
+    pub seq_len: usize,
+    /// corpus + subsample seed (the only RNG the pipeline uses)
+    pub seed: u64,
+    /// weight of the attention-consistency term in the DLC objective
+    pub lambda_attn: f64,
+    /// per-channel refinement budget per projection (stage 3)
+    pub refine_channels: usize,
+    /// row cap for candidate scoring (full data is used for reports)
+    pub max_eval_rows: usize,
+    /// block-level coordinate sweeps over the 7 projections
+    pub rounds: usize,
+}
+
+impl Default for CalibOptions {
+    fn default() -> Self {
+        CalibOptions {
+            seqs: 8,
+            seq_len: 32,
+            seed: 0xCA11B,
+            lambda_attn: 1.0,
+            refine_channels: 16,
+            max_eval_rows: 64,
+            rounds: 2,
+        }
+    }
+}
+
+/// Per-projection outcome inside one block.
+#[derive(Clone, Debug)]
+pub struct ProjReport {
+    pub name: &'static str,
+    /// reconstruction MSE of the plain RTN projection on the tap data
+    pub mse_identity: f64,
+    /// reconstruction MSE of the learned correction
+    pub mse_learned: f64,
+    /// whether the block-level sweep kept the learned correction
+    pub accepted: bool,
+}
+
+/// Per-block outcome: the DLC objective and its components, before
+/// (identity) and after (calibrated) correction.
+#[derive(Clone, Debug)]
+pub struct BlockReport {
+    pub block: usize,
+    /// block-output MSE, uncorrected / corrected
+    pub mse_identity: f64,
+    pub mse_calibrated: f64,
+    /// attention-logit MSE, uncorrected / corrected
+    pub attn_identity: f64,
+    pub attn_calibrated: f64,
+    /// full objective `mse + λ·attn`, uncorrected / corrected
+    pub obj_identity: f64,
+    pub obj_calibrated: f64,
+    pub projections: Vec<ProjReport>,
+}
+
+/// The calibration output: learned corrections plus the per-block
+/// before/after evidence.
+#[derive(Clone, Debug)]
+pub struct CalibrationResult {
+    pub set: CorrectionSet,
+    pub blocks: Vec<BlockReport>,
+}
+
+impl CalibrationResult {
+    /// Summed block-output MSE before correction.
+    pub fn total_mse_identity(&self) -> f64 {
+        self.blocks.iter().map(|b| b.mse_identity).sum()
+    }
+
+    /// Summed block-output MSE after correction (≤ identity by
+    /// construction; strictly lower whenever any block improved).
+    pub fn total_mse_calibrated(&self) -> f64 {
+        self.blocks.iter().map(|b| b.mse_calibrated).sum()
+    }
+
+    /// Human-readable per-block table (the `calibrate` CLI report).
+    pub fn report_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{:<6} {:>12} {:>12} {:>12} {:>12}  accepted",
+            "block", "mse(id)", "mse(cal)", "attn(id)", "attn(cal)"
+        );
+        for b in &self.blocks {
+            let acc: Vec<&str> = b
+                .projections
+                .iter()
+                .filter(|p| p.accepted)
+                .map(|p| p.name)
+                .collect();
+            let _ = writeln!(
+                out,
+                "{:<6} {:>12.6e} {:>12.6e} {:>12.6e} {:>12.6e}  [{}]",
+                b.block,
+                b.mse_identity,
+                b.mse_calibrated,
+                b.attn_identity,
+                b.attn_calibrated,
+                acc.join(" ")
+            );
+        }
+        let _ = writeln!(
+            out,
+            "total block-output MSE: {:.6e} -> {:.6e}",
+            self.total_mse_identity(),
+            self.total_mse_calibrated()
+        );
+        out
+    }
+}
+
+/// Calibration corpus for a model: the deterministic synthetic stream,
+/// folded into the model's vocabulary.
+pub fn calibration_tokens(vocab: usize, n_tokens: usize, seed: u64) -> Vec<u32> {
+    let table = corpus::build_transition_table(corpus::TABLE_SEED);
+    corpus::generate_tokens(&table, n_tokens, seed)
+        .into_iter()
+        .map(|t| t % vocab as u32)
+        .collect()
+}
+
+/// Run the full DLC pipeline for one WqAp config against the fp32 model
+/// in `pack` (see module docs). Deterministic: same pack + config +
+/// options → identical corrections.
+pub fn calibrate(
+    pack: &WeightPack,
+    cfg: &ModelConfig,
+    wa: WAConfig,
+    opts: &CalibOptions,
+) -> Result<CalibrationResult> {
+    let fp = Transformer::from_pack(pack, *cfg, &Fp32Backend)
+        .context("calibration needs the fp32 weights in the pack")?;
+    if opts.seq_len + 1 > cfg.max_seq {
+        anyhow::bail!(
+            "calibration seq_len {} exceeds max_seq {}",
+            opts.seq_len,
+            cfg.max_seq
+        );
+    }
+
+    // ---- 1. tap the fp32 model over the calibration corpus -----------
+    let tokens = calibration_tokens(cfg.vocab, opts.seqs * opts.seq_len, opts.seed);
+    let mut taps: Vec<BlockTap> = Vec::with_capacity(opts.seqs);
+    let mut scratch = ForwardScratch::new();
+    for q in 0..opts.seqs {
+        let seq = &tokens[q * opts.seq_len..(q + 1) * opts.seq_len];
+        let mut cache = KvCache::new(cfg);
+        let mut tap = BlockTap::new();
+        fp.prefill_traced(seq, &mut cache, &mut scratch, &mut tap)?;
+        taps.push(tap);
+    }
+
+    // ---- 2./3. learn + select, block by block -------------------------
+    let mut set = CorrectionSet::new(wa.tag());
+    let mut blocks = Vec::with_capacity(cfg.n_layers);
+    for li in 0..cfg.n_layers {
+        let bw = block_weights(pack, li)?;
+        let mut rng = SplitMix::new(opts.seed ^ (0x9E37 + li as u64));
+
+        // per-projection local descent on the tapped activations
+        let mut learned: Vec<optimize::LearnedProjection> = Vec::with_capacity(7);
+        for (pi, &name) in LINEAR_NAMES.iter().enumerate() {
+            let (ref w, out_f, in_f) = bw.linears[pi];
+            let xs: Vec<f32> = taps
+                .iter()
+                .flat_map(|t| t.blocks[li].proj_input(name).iter().copied())
+                .collect();
+            let rows = xs.len() / in_f;
+            learned.push(optimize::learn_projection(
+                w,
+                out_f,
+                in_f,
+                wa,
+                &xs,
+                rows,
+                opts.max_eval_rows,
+                opts.refine_channels,
+                &mut rng,
+            ));
+        }
+
+        // block-level coordinate sweep over {identity, learned} per
+        // projection, scored by the DLC objective
+        let id_ops: Vec<RefLinear> = (0..7)
+            .map(|pi| {
+                let (ref w, out_f, in_f) = bw.linears[pi];
+                RefLinear::new(w, out_f, in_f, wa, &Correction::identity(in_f))
+            })
+            .collect();
+        let ln_ops: Vec<RefLinear> = (0..7)
+            .map(|pi| {
+                let (ref w, out_f, in_f) = bw.linears[pi];
+                RefLinear::new(w, out_f, in_f, wa, &learned[pi].corr)
+            })
+            .collect();
+        let eval = |choice: &[bool; 7]| -> (f64, f64, f64) {
+            block_objective(cfg, &bw, &id_ops, &ln_ops, choice, &taps, li, opts.lambda_attn)
+        };
+        let all_id = [false; 7];
+        let (id_mse, id_attn, id_obj) = eval(&all_id);
+        let mut choice = [true; 7];
+        let (mut mse, mut attn, mut obj) = eval(&choice);
+        for _ in 0..opts.rounds {
+            let mut changed = false;
+            for pi in 0..7 {
+                let mut cand = choice;
+                cand[pi] = !cand[pi];
+                let (m, a, o) = eval(&cand);
+                if o < obj {
+                    choice = cand;
+                    mse = m;
+                    attn = a;
+                    obj = o;
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        // never ship a block worse than the uncorrected one
+        if obj > id_obj {
+            choice = all_id;
+            mse = id_mse;
+            attn = id_attn;
+            obj = id_obj;
+        }
+
+        let mut projections = Vec::with_capacity(7);
+        for (pi, &name) in LINEAR_NAMES.iter().enumerate() {
+            let accepted = choice[pi] && !learned[pi].corr.is_identity();
+            let (_, _, in_f) = bw.linears[pi];
+            set.insert(
+                li,
+                name,
+                if accepted { learned[pi].corr.clone() } else { Correction::identity(in_f) },
+            );
+            projections.push(ProjReport {
+                name,
+                mse_identity: learned[pi].mse_identity,
+                mse_learned: learned[pi].mse_learned,
+                accepted,
+            });
+        }
+        blocks.push(BlockReport {
+            block: li,
+            mse_identity: id_mse,
+            mse_calibrated: mse,
+            attn_identity: id_attn,
+            attn_calibrated: attn,
+            obj_identity: id_obj,
+            obj_calibrated: obj,
+            projections,
+        });
+    }
+    Ok(CalibrationResult { set, blocks })
+}
+
+fn block_weights(pack: &WeightPack, li: usize) -> Result<BlockWeights> {
+    let mut linears = Vec::with_capacity(7);
+    for name in LINEAR_NAMES {
+        let t = pack.get(&format!("blocks.{li}.{name}"))?;
+        let shape = t.shape();
+        anyhow::ensure!(shape.len() == 2, "linear {name} must be 2-D");
+        linears.push((t.as_f32()?.to_vec(), shape[0], shape[1]));
+    }
+    Ok(BlockWeights {
+        ln1: pack.f32(&format!("blocks.{li}.ln1"))?,
+        ln2: pack.f32(&format!("blocks.{li}.ln2"))?,
+        linears,
+    })
+}
+
+/// DLC objective of one block under a per-projection correction choice:
+/// `(block-output MSE, attention-logit MSE, mse + λ·attn)`, averaged
+/// over the tapped sequences.
+#[allow(clippy::too_many_arguments)]
+fn block_objective(
+    cfg: &ModelConfig,
+    bw: &BlockWeights,
+    id_ops: &[RefLinear],
+    ln_ops: &[RefLinear],
+    choice: &[bool; 7],
+    taps: &[BlockTap],
+    li: usize,
+    lambda: f64,
+) -> (f64, f64, f64) {
+    let ops: [&RefLinear; 7] = std::array::from_fn(|pi| {
+        if choice[pi] {
+            &ln_ops[pi]
+        } else {
+            &id_ops[pi]
+        }
+    });
+    let (mut mse_sum, mut attn_sum) = (0f64, 0f64);
+    for tap in taps {
+        let tr = &tap.blocks[li];
+        let t_len = tap.tokens;
+        let (out, attn) = block_forward(cfg, bw, &ops, &tr.input, t_len);
+        mse_sum += mse64(&out, &tr.output);
+        // only the causal lower triangle carries signal; both runs keep
+        // the upper triangle zero so a full-buffer MSE would dilute it
+        let tri = (cfg.n_heads * t_len * (t_len + 1) / 2) as f64;
+        let sq: f64 = attn
+            .iter()
+            .zip(&tr.attn_logits)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum();
+        attn_sum += sq / tri;
+    }
+    let n = taps.len().max(1) as f64;
+    let (m, a) = (mse_sum / n, attn_sum / n);
+    (m, a, m + lambda * a)
+}
+
+fn mse64(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>() / a.len() as f64
+}

@@ -1,0 +1,423 @@
+//! The DLC optimizer: deterministic coordinate descent over a
+//! projection's correction parameters (weight clip ratio → balance-scale
+//! migration strength → shift fraction → per-channel refinement), scored
+//! by exact quantized-reconstruction MSE against the fp32 teacher
+//! output, followed by a block-level coordinate sweep that accepts each
+//! projection's learned correction only if it lowers the paper's DLC
+//! objective: block-output MSE plus the attention-consistency term
+//! (`docs/CALIBRATION.md`).
+//!
+//! Candidate scoring runs on [`RefLinear`], a scalar reference of the
+//! engine's quantized linear that is **numerically identical** to
+//! [`crate::abq::QuantizedLinear`] (same quantizers, same i64
+//! accumulation, same dequant epilogue, same correction algebra; parity
+//! is unit-tested below) but skips bit-plane packing and the kernel
+//! layout search, so the optimizer can afford hundreds of candidate
+//! evaluations per projection.
+
+use crate::model::transformer::{apply_rope, rmsnorm, rope_tables, silu, softmax_inplace};
+use crate::model::ModelConfig;
+use crate::quant::{
+    correction_output_offset, quantize_act_per_token, quantize_weight_rows, smooth_scales,
+    Correction, QuantSpec, WAConfig,
+};
+use crate::util::rng::SplitMix;
+
+/// Scalar reference of the corrected quantized linear (see module docs).
+pub(crate) struct RefLinear {
+    codes: Vec<u8>,
+    zw: Vec<i32>,
+    dw: Vec<f32>,
+    scale: Vec<f32>,
+    shift: Vec<f32>,
+    offset: Vec<f32>,
+    act_spec: QuantSpec,
+    out_f: usize,
+    in_f: usize,
+    identity: bool,
+}
+
+impl RefLinear {
+    pub fn new(w: &[f32], out_f: usize, in_f: usize, wa: WAConfig, corr: &Correction) -> Self {
+        assert_eq!(w.len(), out_f * in_f);
+        assert_eq!(corr.in_features(), in_f);
+        let identity = corr.is_identity();
+        let wq = if identity {
+            quantize_weight_rows(w, out_f, in_f, &wa.weight, 1.0, 1.0)
+        } else {
+            let mut scaled = w.to_vec();
+            crate::quant::apply_balance_weight(&mut scaled, in_f, &corr.scale);
+            quantize_weight_rows(&scaled, out_f, in_f, &wa.weight, corr.clip, corr.clip)
+        };
+        let offset = if identity {
+            vec![0.0; out_f]
+        } else {
+            correction_output_offset(w, out_f, in_f, &corr.shift)
+        };
+        RefLinear {
+            zw: wq.zps(),
+            dw: wq.deltas(),
+            codes: wq.codes,
+            scale: corr.scale.clone(),
+            shift: corr.shift.clone(),
+            offset,
+            act_spec: QuantSpec::new(wa.act.bits),
+            out_f,
+            in_f,
+            identity,
+        }
+    }
+
+    /// `out[rows, out_f] = Q(x)·Q(W)ᵀ + offset` — the same numbers the
+    /// engine's bit-plane path produces for this correction.
+    pub fn forward(&self, x: &[f32], rows: usize, out: &mut [f32]) {
+        assert_eq!(x.len(), rows * self.in_f);
+        assert_eq!(out.len(), rows * self.out_f);
+        let corrected: Vec<f32> = if self.identity {
+            x.to_vec()
+        } else {
+            let mut xc = x.to_vec();
+            crate::quant::apply_correction_act(&mut xc, self.in_f, &self.scale, &self.shift);
+            xc
+        };
+        let xq = quantize_act_per_token(&corrected, rows, self.in_f, &self.act_spec);
+        for r in 0..rows {
+            let (zx, dx) = (xq.params[r].zp as i64, xq.params[r].delta);
+            let xrow = &xq.codes[r * self.in_f..(r + 1) * self.in_f];
+            for o in 0..self.out_f {
+                let zw = self.zw[o] as i64;
+                let wrow = &self.codes[o * self.in_f..(o + 1) * self.in_f];
+                let mut acc = 0i64;
+                for i in 0..self.in_f {
+                    acc += (xrow[i] as i64 - zx) * (wrow[i] as i64 - zw);
+                }
+                out[r * self.out_f + o] = acc as f32 * dx * self.dw[o] + self.offset[o];
+            }
+        }
+    }
+
+    fn forward_alloc(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        let mut out = vec![0.0; rows * self.out_f];
+        self.forward(x, rows, &mut out);
+        out
+    }
+}
+
+fn mse(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>() / a.len() as f64
+}
+
+/// Per-channel column statistics of `x` `[rows, cols]`.
+fn column_stats(x: &[f32], rows: usize, cols: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut absmax = vec![0f32; cols];
+    let mut mean = vec![0f32; cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            let v = x[r * cols + c];
+            absmax[c] = absmax[c].max(v.abs());
+            mean[c] += v;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= rows.max(1) as f32;
+    }
+    (absmax, mean)
+}
+
+fn w_col_absmax(w: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut absmax = vec![0f32; cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            absmax[c] = absmax[c].max(w[r * cols + c].abs());
+        }
+    }
+    absmax
+}
+
+/// Outcome of one projection's local descent.
+pub(crate) struct LearnedProjection {
+    pub corr: Correction,
+    /// full-data reconstruction MSE of the identity (plain RTN) op
+    pub mse_identity: f64,
+    /// full-data reconstruction MSE of the learned correction
+    pub mse_learned: f64,
+}
+
+/// Deterministic coordinate descent for one projection (see module docs
+/// for the schedule). `xs` are the fp32 input activations captured by
+/// the block tap, `[rows, in_f]`; the teacher is `xs · Wᵀ` computed in
+/// fp32. The only RNG use is the seeded row subsample for candidate
+/// scoring; the schedule itself is deterministic.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn learn_projection(
+    w: &[f32],
+    out_f: usize,
+    in_f: usize,
+    wa: WAConfig,
+    xs: &[f32],
+    rows: usize,
+    max_eval_rows: usize,
+    refine_channels: usize,
+    rng: &mut SplitMix,
+) -> LearnedProjection {
+    // -- teacher + seeded row subsample for candidate scoring ----------
+    let teacher = {
+        let mut t = vec![0.0; rows * out_f];
+        crate::baselines::gemm_fp32_into(xs, w, rows, out_f, in_f, &mut t);
+        t
+    };
+    let eval_rows = rows.min(max_eval_rows.max(1));
+    let picked: Vec<usize> = if eval_rows == rows {
+        (0..rows).collect()
+    } else {
+        let mut idx: Vec<usize> = (0..rows).collect();
+        for i in 0..eval_rows {
+            let j = i + rng.next_below((rows - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(eval_rows);
+        idx.sort_unstable();
+        idx
+    };
+    let sub_x: Vec<f32> = picked
+        .iter()
+        .flat_map(|&r| xs[r * in_f..(r + 1) * in_f].iter().copied())
+        .collect();
+    let sub_t: Vec<f32> = picked
+        .iter()
+        .flat_map(|&r| teacher[r * out_f..(r + 1) * out_f].iter().copied())
+        .collect();
+    let score = |corr: &Correction| -> f64 {
+        let lin = RefLinear::new(w, out_f, in_f, wa, corr);
+        mse(&lin.forward_alloc(&sub_x, eval_rows), &sub_t)
+    };
+
+    let (act_absmax, act_mean) = column_stats(xs, rows, in_f);
+    let w_absmax = w_col_absmax(w, out_f, in_f);
+
+    let mut best = Correction::identity(in_f);
+    let mut best_score = score(&best);
+
+    // -- stage 0: weight clip ratio ------------------------------------
+    for clip in [0.9f32, 0.8, 0.7, 0.6, 0.5] {
+        let cand = Correction { clip, ..best.clone() };
+        let sc = score(&cand);
+        if sc < best_score {
+            best = cand;
+            best_score = sc;
+        }
+    }
+    // -- stage 1: balance-scale migration strength ---------------------
+    for m in [0.25f32, 0.5, 0.75, 1.0] {
+        let cand = Correction {
+            scale: smooth_scales(&act_absmax, &w_absmax, m),
+            ..best.clone()
+        };
+        let sc = score(&cand);
+        if sc < best_score {
+            best = cand;
+            best_score = sc;
+        }
+    }
+    // -- stage 2: shift fraction toward the channel mean ---------------
+    for f in [0.5f32, 1.0] {
+        let cand = Correction {
+            shift: act_mean.iter().map(|m| m * f).collect(),
+            ..best.clone()
+        };
+        let sc = score(&cand);
+        if sc < best_score {
+            best = cand;
+            best_score = sc;
+        }
+    }
+    // -- stage 3: per-channel refinement on the heaviest channels ------
+    let mut order: Vec<usize> = (0..in_f).collect();
+    order.sort_by(|&a, &b| {
+        let ka = act_absmax[a] * w_absmax[a];
+        let kb = act_absmax[b] * w_absmax[b];
+        kb.partial_cmp(&ka).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    for &j in order.iter().take(refine_channels.min(in_f)) {
+        for f in [0.5f32, 0.8, 1.25, 2.0] {
+            let mut cand = best.clone();
+            cand.scale[j] = (cand.scale[j] * f).max(1e-5);
+            let sc = score(&cand);
+            if sc < best_score {
+                best = cand;
+                best_score = sc;
+            }
+        }
+        for z in [0.0f32, act_mean[j]] {
+            if best.shift[j] == z {
+                continue;
+            }
+            let mut cand = best.clone();
+            cand.shift[j] = z;
+            let sc = score(&cand);
+            if sc < best_score {
+                best = cand;
+                best_score = sc;
+            }
+        }
+    }
+
+    // -- full-data report numbers --------------------------------------
+    let ident = RefLinear::new(w, out_f, in_f, wa, &Correction::identity(in_f));
+    let mse_identity = mse(&ident.forward_alloc(xs, rows), &teacher);
+    let learned = RefLinear::new(w, out_f, in_f, wa, &best);
+    let mse_learned = mse(&learned.forward_alloc(xs, rows), &teacher);
+    LearnedProjection { corr: best, mse_identity, mse_learned }
+}
+
+/// Float weights + norms of one block, in [`LINEAR_NAMES`] order
+/// (`wq, wk, wv, wo, gate, up, down`).
+pub(crate) struct BlockWeights {
+    pub ln1: Vec<f32>,
+    pub ln2: Vec<f32>,
+    /// `(w, out_features, in_features)` per projection
+    pub linears: Vec<(Vec<f32>, usize, usize)>,
+}
+
+/// One quantized block forward from a tapped fp32 block input, mirroring
+/// `Transformer::prefill` numerics (fresh sequence, positions `0..T`).
+/// Returns the block output `[T, d]` and pre-softmax attention logits
+/// `[H, T, T]` (zero above the causal diagonal).
+pub(crate) fn block_forward(
+    cfg: &ModelConfig,
+    bw: &BlockWeights,
+    ops: &[&RefLinear; 7],
+    x_in: &[f32],
+    t_len: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let (d, hd, nh) = (cfg.d_model, cfg.head_dim(), cfg.n_heads);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut x = x_in.to_vec();
+    let mut h = vec![0.0; t_len * d];
+    rmsnorm(&x, &bw.ln1, &mut h);
+    let [wq, wk, wv, wo, gate, up, down] = *ops;
+    let mut q = wq.forward_alloc(&h, t_len);
+    let mut k = wk.forward_alloc(&h, t_len);
+    let v = wv.forward_alloc(&h, t_len);
+    let (cos, sin) = rope_tables(cfg, 0, t_len);
+    apply_rope(&mut q, cfg, &cos, &sin, t_len);
+    apply_rope(&mut k, cfg, &cos, &sin, t_len);
+    let mut attn_logits = vec![0.0; nh * t_len * t_len];
+    let mut ctx = vec![0.0; t_len * d];
+    let mut scores = vec![0.0; t_len];
+    for t in 0..t_len {
+        let keys = t + 1;
+        for hh in 0..nh {
+            let qv = &q[t * d + hh * hd..t * d + (hh + 1) * hd];
+            let srow = &mut scores[..keys];
+            for (kp, sc) in srow.iter_mut().enumerate() {
+                let kv = &k[kp * d + hh * hd..kp * d + (hh + 1) * hd];
+                *sc = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
+            }
+            let base = (hh * t_len + t) * t_len;
+            attn_logits[base..base + keys].copy_from_slice(srow);
+            softmax_inplace(srow);
+            let crow = &mut ctx[t * d + hh * hd..t * d + (hh + 1) * hd];
+            for (kp, &a) in srow.iter().enumerate() {
+                let vv = &v[kp * d + hh * hd..kp * d + (hh + 1) * hd];
+                for i in 0..hd {
+                    crow[i] += a * vv[i];
+                }
+            }
+        }
+    }
+    let proj = wo.forward_alloc(&ctx, t_len);
+    for i in 0..x.len() {
+        x[i] += proj[i];
+    }
+    rmsnorm(&x, &bw.ln2, &mut h);
+    let g = gate.forward_alloc(&h, t_len);
+    let u = up.forward_alloc(&h, t_len);
+    let mut act = vec![0.0; t_len * cfg.d_ff];
+    for i in 0..act.len() {
+        act[i] = silu(g[i]) * u[i];
+    }
+    let dn = down.forward_alloc(&act, t_len);
+    for i in 0..x.len() {
+        x[i] += dn[i];
+    }
+    (x, attn_logits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abq::{OptLevel, QuantizedLinear};
+
+    fn data(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = SplitMix::new(seed);
+        (0..n).map(|_| r.next_f32_centered() * 2.0).collect()
+    }
+
+    #[test]
+    fn ref_linear_matches_engine_bitwise() {
+        // the optimizer's scoring path and the served engine must agree
+        // exactly — otherwise learned corrections would optimize a proxy
+        for (cfg_str, corr_kind) in [
+            ("w2*a8", 0usize),
+            ("w4a4", 1),
+            ("w8a8", 2),
+        ] {
+            let wa: WAConfig = cfg_str.parse().unwrap();
+            let (out_f, in_f, rows) = (10usize, 24usize, 5usize);
+            let w = data(out_f * in_f, 3);
+            let x = data(rows * in_f, 4);
+            let corr = match corr_kind {
+                0 => Correction::identity(in_f),
+                1 => Correction {
+                    scale: (0..in_f).map(|i| 0.5 + (i % 5) as f32 / 4.0).collect(),
+                    shift: vec![0.0; in_f],
+                    clip: 0.8,
+                },
+                _ => Correction {
+                    scale: (0..in_f).map(|i| 0.75 + (i % 3) as f32 / 4.0).collect(),
+                    shift: (0..in_f).map(|i| ((i % 7) as f32 - 3.0) / 20.0).collect(),
+                    clip: 0.9,
+                },
+            };
+            let reference = RefLinear::new(&w, out_f, in_f, wa, &corr);
+            let engine = QuantizedLinear::from_weights_corrected(&w, out_f, in_f, wa, &corr);
+            let want = engine.forward(&x, rows, OptLevel::Auto);
+            let got = reference.forward_alloc(&x, rows);
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{cfg_str} corr {corr_kind}");
+            }
+        }
+    }
+
+    #[test]
+    fn learn_projection_never_worsens_reconstruction() {
+        let wa: WAConfig = "w2*a8".parse().unwrap();
+        let (out_f, in_f, rows) = (12usize, 16usize, 40usize);
+        let w = data(out_f * in_f, 11);
+        // activations with per-channel spread + offset so scale and shift
+        // both have something to learn
+        let mut x = data(rows * in_f, 12);
+        for r in 0..rows {
+            for c in 0..in_f {
+                x[r * in_f + c] = x[r * in_f + c] * (1.0 + c as f32 / 4.0) + c as f32 / 8.0;
+            }
+        }
+        let mut rng = SplitMix::new(99);
+        let lp = learn_projection(&w, out_f, in_f, wa, &x, rows, 32, 8, &mut rng);
+        assert!(lp.mse_learned <= lp.mse_identity, "{} > {}", lp.mse_learned, lp.mse_identity);
+        // at w2* on skewed channels the descent must find real gains
+        assert!(
+            lp.mse_learned < lp.mse_identity * 0.95,
+            "no measurable gain: {} vs {}",
+            lp.mse_learned,
+            lp.mse_identity
+        );
+        assert!(!lp.corr.is_identity());
+        // determinism: same inputs + seed → identical corrections
+        let mut rng2 = SplitMix::new(99);
+        let lp2 = learn_projection(&w, out_f, in_f, wa, &x, rows, 32, 8, &mut rng2);
+        assert_eq!(lp.corr, lp2.corr);
+    }
+}

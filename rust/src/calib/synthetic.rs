@@ -1,0 +1,159 @@
+//! A deterministic "trained-looking" synthetic model for differential
+//! calibration tests. No checkpoint ships with the repo, and a purely
+//! random transformer scores near-uniform NLL on any corpus — useless
+//! for asserting that calibration *helps* end-to-end. This constructor
+//! builds a model that is genuinely predictive on the synthetic corpus
+//! by design:
+//!
+//! * one-hot token embeddings (`d_model == vocab`), so the residual
+//!   stream carries the current token as its dominant direction;
+//! * transformer blocks with small random weights — a perturbation the
+//!   quantizers then damage (the quantity calibration protects);
+//! * an unembedding whose rows encode the corpus' smoothed bigram
+//!   log-probabilities, scaled so the final RMSNorm maps the one-hot
+//!   component onto `logits ≈ log P̂(next | current)`.
+//!
+//! The fp32 model therefore sits well below the uniform bound, coarse
+//! uncalibrated quantization measurably hurts NLL, and a correction
+//! that tracks fp32 better recovers it — giving `prop_calib.rs` a
+//! deterministic, assertable before/after gap. Embeddings and head stay
+//! fp32 at inference (paper convention), matching this construction.
+
+use anyhow::Result;
+
+use crate::engine::InferenceEngine;
+use crate::eval::sequence_nll;
+use crate::model::{ModelConfig, Tensor, WeightPack};
+use crate::util::rng::SplitMix;
+
+use super::calibration_tokens;
+
+/// Synthetic-model handle: the weight pack plus its config.
+pub struct SyntheticModel {
+    pub pack: WeightPack,
+    pub cfg: ModelConfig,
+}
+
+/// Build the corpus-aligned synthetic model (see module docs).
+/// Deterministic in `(vocab, n_layers, seed)`. `vocab` must be even
+/// (`d_model == vocab` and heads split it in two).
+pub fn synthetic_trained(vocab: usize, n_layers: usize, seed: u64) -> SyntheticModel {
+    assert!(vocab >= 8 && vocab % 4 == 0, "vocab must be >= 8 and divisible by 4");
+    let d = vocab;
+    let cfg = ModelConfig {
+        name: "synthetic",
+        vocab,
+        d_model: d,
+        n_layers,
+        n_heads: 2,
+        d_ff: 2 * d,
+        max_seq: 64,
+        rope_base: 10000.0,
+    };
+    let mut rng = SplitMix::new(seed);
+    let mut pack = WeightPack::default();
+    let mut put = |pack: &mut WeightPack, name: String, v: Vec<f32>, shape: Vec<usize>| {
+        pack.tensors.insert(name, Tensor::F32(v, shape));
+    };
+
+    // one-hot embeddings: token t → e_t
+    let mut tok_emb = vec![0f32; vocab * d];
+    for t in 0..vocab {
+        tok_emb[t * d + t] = 1.0;
+    }
+    put(&mut pack, "tok_emb".into(), tok_emb, vec![vocab, d]);
+
+    // smoothed bigram log-probabilities from a long corpus sample
+    let stream = calibration_tokens(vocab, 20_000, seed ^ 0xB16A);
+    let mut counts = vec![0.5f64; vocab * vocab]; // add-1/2 smoothing
+    for w in stream.windows(2) {
+        counts[w[0] as usize * vocab + w[1] as usize] += 1.0;
+    }
+    // head[u][t] = log P̂(u | t) / sqrt(d): the final RMSNorm maps the
+    // one-hot residual component to ~sqrt(d), so logits ≈ log P̂
+    let root_d = (d as f64).sqrt();
+    let mut head = vec![0f32; vocab * d];
+    for t in 0..vocab {
+        let total: f64 = (0..vocab).map(|u| counts[t * vocab + u]).sum();
+        for u in 0..vocab {
+            head[u * d + t] = ((counts[t * vocab + u] / total).ln() / root_d) as f32;
+        }
+    }
+    put(&mut pack, "head".into(), head, vec![vocab, d]);
+    put(&mut pack, "ln_f".into(), vec![1.0; d], vec![d]);
+
+    // blocks: small random weights — the quantization-sensitive part
+    const BLOCK_SCALE: f32 = 0.3;
+    for li in 0..n_layers {
+        put(&mut pack, format!("blocks.{li}.ln1"), vec![1.0; d], vec![d]);
+        put(&mut pack, format!("blocks.{li}.ln2"), vec![1.0; d], vec![d]);
+        let mut dense = |rng: &mut SplitMix, out_f: usize, in_f: usize| -> Vec<f32> {
+            let scale = BLOCK_SCALE / (in_f as f32).sqrt();
+            (0..out_f * in_f).map(|_| rng.next_f32_centered() * 2.0 * scale).collect()
+        };
+        for (name, out_f, in_f) in [
+            ("wq", d, d),
+            ("wk", d, d),
+            ("wv", d, d),
+            ("wo", d, d),
+            ("gate", cfg.d_ff, d),
+            ("up", cfg.d_ff, d),
+            ("down", d, cfg.d_ff),
+        ] {
+            let w = dense(&mut rng, out_f, in_f);
+            put(&mut pack, format!("blocks.{li}.{name}"), w, vec![out_f, in_f]);
+        }
+    }
+    SyntheticModel { pack, cfg }
+}
+
+/// Mean per-token NLL of an engine on held-out synthetic-corpus
+/// sequences (tokens folded into the engine's vocab). Deterministic in
+/// `(seqs, seq_len, seed)`; `exp()` of it is the perplexity the
+/// differential tests compare.
+pub fn eval_nll(
+    engine: &dyn InferenceEngine,
+    seqs: usize,
+    seq_len: usize,
+    seed: u64,
+) -> Result<f64> {
+    let vocab = engine.spec().model.vocab;
+    let tokens = calibration_tokens(vocab, seqs * (seq_len + 1), seed);
+    let mut total = 0f64;
+    for q in 0..seqs {
+        let seq = &tokens[q * (seq_len + 1)..(q + 1) * (seq_len + 1)];
+        total += sequence_nll(engine, seq)?;
+    }
+    Ok(total / seqs as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Fp32Backend, NativeEngine};
+    use crate::model::Transformer;
+
+    #[test]
+    fn synthetic_model_is_predictive() {
+        let sm = synthetic_trained(32, 2, 5);
+        let model = Transformer::from_pack(&sm.pack, sm.cfg, &Fp32Backend).unwrap();
+        let engine = NativeEngine::new(model);
+        let nll = eval_nll(&engine, 6, 24, 4242).unwrap();
+        let uniform = (32f64).ln();
+        assert!(
+            nll < uniform - 0.3,
+            "synthetic model must beat uniform by a margin: nll {nll} vs uniform {uniform}"
+        );
+    }
+
+    #[test]
+    fn synthetic_model_is_deterministic() {
+        let a = synthetic_trained(16, 1, 9);
+        let b = synthetic_trained(16, 1, 9);
+        assert_eq!(
+            a.pack.get("blocks.0.wq").unwrap(),
+            b.pack.get("blocks.0.wq").unwrap()
+        );
+        assert_eq!(a.pack.get("head").unwrap(), b.pack.get("head").unwrap());
+    }
+}

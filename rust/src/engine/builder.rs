@@ -28,7 +28,8 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::abq::OptLevel;
 use crate::model::{KvCacheConfig, ModelConfig, Transformer, WeightPack};
-use crate::quant::WAConfig;
+use crate::quant::{CorrectionSet, WAConfig};
+use crate::runtime::artifacts::ArtifactManifest;
 use crate::util::json::Json;
 use crate::util::par;
 
@@ -46,6 +47,8 @@ pub struct EngineBuilder {
     random: Option<(ModelConfig, u64)>,
     kv: KvCacheConfig,
     kv_pool_bytes: Option<usize>,
+    correction: Option<CorrectionSet>,
+    auto_correction: bool,
 }
 
 impl Default for EngineBuilder {
@@ -66,7 +69,26 @@ impl EngineBuilder {
             random: None,
             kv: KvCacheConfig::default(),
             kv_pool_bytes: None,
+            correction: None,
+            auto_correction: true,
         }
+    }
+
+    /// Learned distribution corrections to apply at prepare time
+    /// (`docs/CALIBRATION.md`). Explicitly set corrections win over the
+    /// auto-loaded ones from the artifacts manifest.
+    pub fn correction(mut self, set: CorrectionSet) -> Self {
+        self.correction = Some(set);
+        self
+    }
+
+    /// Disable corrections entirely — including the automatic load of a
+    /// manifest-registered correction pack for the backend's config tag
+    /// (before/after comparisons, `--no-correction`).
+    pub fn correction_off(mut self) -> Self {
+        self.correction = None;
+        self.auto_correction = false;
+        self
     }
 
     /// KV page storage: bit width (32/8/4) + positions per pool block
@@ -174,13 +196,19 @@ impl EngineBuilder {
             .resolve_with(&self.backend, &opts)
             .with_context(|| format!("resolve backend '{}'", self.backend))?;
         let model = if let Some((cfg, seed)) = self.random {
-            Transformer::random(cfg, backend.as_ref(), seed)?
+            Transformer::random_corrected(cfg, backend.as_ref(), seed, self.correction.as_ref())?
         } else {
             let dir = self.weights.as_ref().ok_or_else(|| {
                 anyhow!("EngineBuilder: set .weights(dir) or .random_weights(cfg, seed)")
             })?;
-            load_artifacts(dir, backend.as_ref())
-                .with_context(|| format!("load artifacts from {dir:?} (run `make artifacts`)"))?
+            load_artifacts(
+                dir,
+                backend.as_ref(),
+                self.correction.as_ref(),
+                self.auto_correction,
+                &self.backend,
+            )
+            .with_context(|| format!("load artifacts from {dir:?} (run `make artifacts`)"))?
         };
         Ok(Box::new(NativeEngine::with_kv(model, self.kv, self.kv_pool_bytes)?))
     }
@@ -202,14 +230,52 @@ impl EngineBuilder {
 
 /// Load pack + manifest from an artifacts directory and prepare every
 /// projection with `backend` (the native-path loading step, kept inside
-/// `engine/` so model construction has a single home).
-fn load_artifacts(dir: &Path, backend: &dyn super::linear::LinearBackend) -> Result<Transformer> {
+/// `engine/` so model construction has a single home). The manifest is
+/// read and parsed exactly once; correction resolution is explicit set >
+/// manifest auto-load (when enabled) > none.
+fn load_artifacts(
+    dir: &Path,
+    backend: &dyn super::linear::LinearBackend,
+    explicit: Option<&CorrectionSet>,
+    auto_correction: bool,
+    backend_spec: &str,
+) -> Result<Transformer> {
     let pack = WeightPack::load(&dir.join("weights.abqw"))?;
     let manifest =
         std::fs::read_to_string(dir.join("manifest.json")).context("read manifest.json")?;
     let j = Json::parse(&manifest).map_err(|e| anyhow!("manifest parse: {e}"))?;
     let cfg = ModelConfig::from_manifest(&j)?;
-    Transformer::from_pack(&pack, cfg, backend)
+    let auto_set;
+    let correction = match explicit {
+        Some(set) => Some(set),
+        None if auto_correction => {
+            auto_set = load_correction_set(&j, dir, backend_spec)?;
+            auto_set.as_ref()
+        }
+        None => None,
+    };
+    Transformer::from_pack_corrected(&pack, cfg, backend, correction)
+}
+
+/// The auto-load half of correction resolution: when the (already
+/// parsed) artifacts manifest registers a correction pack for the
+/// backend spec's config tag (written by `abq-llm calibrate`), load it.
+/// Backends without an artifact tag (`int8`, `fp32`, custom families)
+/// and manifests without a `corrections` section resolve to `None`
+/// rather than erroring, so the builder stays usable on uncalibrated
+/// artifacts.
+fn load_correction_set(
+    manifest: &Json,
+    dir: &Path,
+    backend_spec: &str,
+) -> Result<Option<CorrectionSet>> {
+    let Ok(tag) = backend_tag(backend_spec) else { return Ok(None) };
+    let m = ArtifactManifest::from_json(manifest, dir)?;
+    let Some(entry) = m.correction_for_tag(&tag) else { return Ok(None) };
+    let pack = WeightPack::load(&entry.path)
+        .with_context(|| format!("correction pack for tag '{tag}'"))?;
+    let set = CorrectionSet::from_pack(&pack, &tag)?;
+    Ok(if set.is_empty() { None } else { Some(set) })
 }
 
 /// Map a backend spec to its artifact / routing tag: `fp32`/`fp16`/`fp` →

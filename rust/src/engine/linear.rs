@@ -16,7 +16,7 @@ use anyhow::{bail, Result};
 use crate::abq::{AbqScratch, OptLevel, QuantizedLinear};
 use crate::baselines::{gemm_fp32_into, Int4Gemm, Int4Scratch, Int8Gemm, Int8Scratch};
 use crate::model::WeightPack;
-use crate::quant::WAConfig;
+use crate::quant::{Correction, WAConfig};
 
 /// Backend-agnostic scratch arena threaded through
 /// [`LinearOp::forward_scratch`]. One instance per engine session serves
@@ -98,12 +98,24 @@ pub struct PrepareCtx<'a> {
     pub layer: usize,
     /// projection name (`wq`, `wk`, `wv`, `wo`, `gate`, `up`, `down`)
     pub name: &'a str,
+    /// learned distribution correction for this projection, already
+    /// resolved by the model loader from the engine's
+    /// [`crate::quant::CorrectionSet`] (see `docs/CALIBRATION.md`).
+    /// Backends that quantize from the float weights apply it; backends
+    /// with no quantization grid to correct (fp32) ignore it.
+    pub correction: Option<&'a Correction>,
 }
 
 impl PrepareCtx<'_> {
     /// Context for weights with no pack behind them (random init, tests).
     pub fn none() -> PrepareCtx<'static> {
-        PrepareCtx { pack: None, layer: 0, name: "" }
+        PrepareCtx { pack: None, layer: 0, name: "", correction: None }
+    }
+
+    /// [`PrepareCtx::none`] with a resolved correction (calibration /
+    /// tests that drive a backend without a full model around it).
+    pub fn with_correction(corr: &Correction) -> PrepareCtx<'_> {
+        PrepareCtx { pack: None, layer: 0, name: "", correction: Some(corr) }
     }
 }
 
@@ -333,9 +345,18 @@ impl LinearBackend for AbqBackend {
         format!("abq:{}", self.cfg)
     }
 
-    /// Calibrated codes for the config's tag are used when present in the
-    /// pack (falling back to RTN from the fp weights otherwise, e.g. for
-    /// sweep configs that were not calibrated offline).
+    /// Weight-state precedence, highest first:
+    ///
+    /// 1. a resolved **non-identity** [`Correction`] in the context —
+    ///    requantize from the float weights with the learned
+    ///    scale/shift/clip (corrections are learned against exactly this
+    ///    requantization, so they supersede any offline-exported codes).
+    ///    Identity corrections are a mathematical no-op, so they fall
+    ///    through: this keeps projections the calibrator rejected on
+    ///    their offline pack codes, and keeps the decode hot path free
+    ///    of the (x − 0) / 1 + 0 busywork;
+    /// 2. calibrated codes for the config's tag in the weight pack;
+    /// 3. RTN from the fp weights (sweep configs never calibrated).
     fn prepare(
         &self,
         w: &[f32],
@@ -343,6 +364,22 @@ impl LinearBackend for AbqBackend {
         in_features: usize,
         ctx: &PrepareCtx,
     ) -> Result<Box<dyn LinearOp>> {
+        if let Some(corr) = ctx.correction {
+            if corr.in_features() != in_features {
+                bail!(
+                    "correction for layer {} '{}' has {} channels, projection has {in_features}",
+                    ctx.layer,
+                    ctx.name,
+                    corr.in_features()
+                );
+            }
+            if !corr.is_identity() {
+                let lin = QuantizedLinear::from_weights_corrected(
+                    w, out_features, in_features, self.cfg, corr,
+                );
+                return Ok(Box::new(AbqOp { lin, opt: self.opt }));
+            }
+        }
         if let Some(pack) = ctx.pack {
             let base = format!("q.{}.{}.{}", self.cfg.tag(), ctx.layer, ctx.name);
             if let Ok(codes_t) = pack.get(&format!("{base}.wq")) {
@@ -393,6 +430,32 @@ mod tests {
     fn int4_rejects_odd_k() {
         let w = vec![0.0f32; 4 * 7];
         assert!(Int4Backend.prepare(&w, 4, 7, &PrepareCtx::none()).is_err());
+    }
+
+    #[test]
+    fn abq_prepare_applies_ctx_correction() {
+        let (out_f, in_f, tokens) = (8usize, 24usize, 2usize);
+        let w: Vec<f32> = (0..out_f * in_f).map(|i| ((i % 13) as f32 - 6.0) / 19.0).collect();
+        let x: Vec<f32> = (0..tokens * in_f).map(|i| ((i % 7) as f32 - 3.0) / 2.0).collect();
+        let be = AbqBackend::new("w2*a8".parse().unwrap());
+        let plain = be.prepare(&w, out_f, in_f, &PrepareCtx::none()).unwrap();
+        // identity correction through the ctx: bit-identical to plain RTN,
+        // and short-circuited — no balance/shift/offset vectors resident
+        let ident = Correction::identity(in_f);
+        let op_id = be.prepare(&w, out_f, in_f, &PrepareCtx::with_correction(&ident)).unwrap();
+        assert_eq!(plain.forward_alloc(&x, tokens), op_id.forward_alloc(&x, tokens));
+        assert_eq!(plain.weight_bytes(), op_id.weight_bytes());
+        // a non-trivial correction changes the op (it is actually applied)
+        let corr = Correction {
+            scale: (0..in_f).map(|i| 1.0 + (i % 3) as f32).collect(),
+            shift: vec![0.0; in_f],
+            clip: 0.7,
+        };
+        let op_c = be.prepare(&w, out_f, in_f, &PrepareCtx::with_correction(&corr)).unwrap();
+        assert_ne!(plain.forward_alloc(&x, tokens), op_c.forward_alloc(&x, tokens));
+        // width mismatch is a hard error, not a silent skip
+        let narrow = Correction::identity(in_f - 1);
+        assert!(be.prepare(&w, out_f, in_f, &PrepareCtx::with_correction(&narrow)).is_err());
     }
 
     #[test]

@@ -42,6 +42,9 @@ pub use api::{generate, EngineSession, EngineSpec, Execution, InferenceEngine, M
 pub use builder::{backend_tag, EngineBuilder};
 // KV paging configuration is part of the construction surface
 pub use crate::model::{KvCacheConfig, KvPoolStatus};
+// learned distribution corrections travel through the builder and
+// `PrepareCtx` (see docs/CALIBRATION.md)
+pub use crate::quant::{Correction, CorrectionSet};
 pub use linear::{
     AbqBackend, Fp32Backend, Int4Backend, Int8Backend, LinearBackend, LinearOp, LinearScratch,
     PrepareCtx,

@@ -40,25 +40,38 @@
 //! * [`abq`] — the arbitrary-bit engine: every WqAp GEMM decomposed into
 //!   p×q 1-bit matmuls (BMMA ≙ AND+POPCNT) with Bit Reduction, GEMV
 //!   elimination, pipelining and auto kernel search (paper §3.4, App. B/D)
-//! * [`quant`] — quantizers, bit-balance strategy, balance vectors
+//! * [`quant`] — quantizers, bit-balance strategy, balance vectors and
+//!   learned distribution corrections ([`quant::Correction`])
+//! * [`calib`] — the paper's distribution-correction (DLC) calibration:
+//!   block taps, seeded coordinate-descent reconstruction against fp32
+//!   block outputs + attention logits, correction persistence
+//!   (`docs/CALIBRATION.md`)
 //! * [`baselines`] — FP16/W8A8/W4A4 comparator engines with MMA padding
 //! * [`model`] — LLaMA-family transformer over registry-prepared
 //!   projections, with a paged arbitrary-bit KV block pool
 //!   (`docs/SERVING.md`)
 //! * [`coordinator`] — serving: router, dynamic batcher, block-aware
 //!   continuous-batching scheduler with preemption
-//! * [`runtime`] — PJRT executor for the AOT HLO artifacts (jax/pallas
-//!   L2+L1); compiled with `--features pjrt`
+//! * [`runtime`] — artifact manifest grammar (always available) plus the
+//!   PJRT executor for the AOT HLO artifacts (jax/pallas L2+L1; the
+//!   executor needs `--features pjrt`)
 //! * [`eval`] — synthetic corpus, perplexity, zero-shot harness
 //! * [`util`] — offline substrates (thread pool, JSON, CLI, bench, proptest)
 
 pub mod abq;
 pub mod baselines;
+pub mod calib;
 pub mod coordinator;
 pub mod engine;
 pub mod eval;
 pub mod model;
 pub mod quant;
-#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod util;
+
+/// Compile-checks the code blocks in `docs/ENGINE_API.md` as doctests
+/// (`cargo test --doc`), so the migration guide cannot drift from the
+/// real API.
+#[cfg(doctest)]
+#[doc = include_str!("../../docs/ENGINE_API.md")]
+pub struct EngineApiDocTests;

@@ -5,12 +5,16 @@
 //!   serve    [--addr HOST:PORT]  TCP line-protocol serving (JSON in/out)
 //!   eval     [--config w2*a8]    perplexity on the held-out corpus
 //!   zeroshot [--config w2*a8]    synthetic zero-shot task suite
+//!   calibrate [--config w2*a8]   learn distribution corrections (DLC)
+//!                                and report before/after perplexity
 //!   gemm     [--m --n --k --w --a] one arbitrary-bit GEMM timing
 //!   pjrt     [--artifact NAME]   run a PJRT artifact end to end
 //!
 //! Backends: `--backend fp32|int8|int4|abq` (abq takes `--config`), or a
 //! full registry spec directly: `--backend abq:w3a8`. All model
-//! construction goes through `engine::EngineBuilder`.
+//! construction goes through `engine::EngineBuilder`; calibrated
+//! corrections registered in the manifest are applied automatically
+//! (disable with `--no-correction`).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
@@ -59,6 +63,9 @@ fn builder_from(args: &Args) -> Result<EngineBuilder> {
     if let Some(mb) = args.get("kv-pool-mb").and_then(|v| v.parse::<usize>().ok()) {
         b = b.kv_pool_bytes(mb * 1024 * 1024);
     }
+    if args.has_flag("no-correction") {
+        b = b.correction_off();
+    }
     Ok(b)
 }
 
@@ -73,12 +80,14 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("eval") => cmd_eval(&args),
         Some("zeroshot") => cmd_zeroshot(&args),
+        Some("calibrate") => cmd_calibrate(&args),
         Some("gemm") => cmd_gemm(&args),
         Some("pjrt") => cmd_pjrt(&args),
         _ => {
             eprintln!(
-                "usage: abq-llm <info|serve|eval|zeroshot|gemm|pjrt> [--artifacts DIR] \
-                 [--backend fp32|int8|int4|abq] [--config w2*a8] [--threads N] ..."
+                "usage: abq-llm <info|serve|eval|zeroshot|calibrate|gemm|pjrt> \
+                 [--artifacts DIR] [--backend fp32|int8|int4|abq] [--config w2*a8] \
+                 [--threads N] [--no-correction] ..."
             );
             Ok(())
         }
@@ -150,6 +159,88 @@ fn cmd_zeroshot(args: &Args) -> Result<()> {
         "  {:<18} {:5.1}%",
         "average",
         total / eval::ALL_TASKS.len() as f64 * 100.0
+    );
+    Ok(())
+}
+
+/// Learn distribution corrections for one WqAp config against the fp32
+/// weights in the artifacts directory, persist them (correction pack +
+/// manifest entry), and report per-block MSE plus before/after held-out
+/// perplexity (`docs/CALIBRATION.md`).
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    use abq_llm::calib::{calibrate, CalibOptions};
+    use abq_llm::model::{ModelConfig, WeightPack};
+    use abq_llm::quant::WAConfig;
+    use abq_llm::runtime::artifacts::{upsert_correction, CorrectionEntry};
+
+    let dir = artifacts_dir(args);
+    let config = args.get_or("config", "w2*a8");
+    let wa: WAConfig = config.parse().map_err(|e| anyhow::anyhow!("--config: {e}"))?;
+    let opts = CalibOptions {
+        seqs: args.get_usize("seqs", CalibOptions::default().seqs),
+        seq_len: args.get_usize("seq-len", CalibOptions::default().seq_len),
+        seed: args.get_usize("seed", 0xCA11B) as u64,
+        lambda_attn: args.get_f64("lambda", CalibOptions::default().lambda_attn),
+        refine_channels: args
+            .get_usize("refine-channels", CalibOptions::default().refine_channels),
+        max_eval_rows: args.get_usize("eval-rows", CalibOptions::default().max_eval_rows),
+        rounds: args.get_usize("rounds", CalibOptions::default().rounds),
+    };
+    if let Some(n) = args.get("threads").and_then(|v| v.parse::<usize>().ok()) {
+        abq_llm::util::par::set_threads(n);
+    }
+
+    let pack = WeightPack::load(&dir.join("weights.abqw"))?;
+    let manifest_path = dir.join("manifest.json");
+    let manifest_text = std::fs::read_to_string(&manifest_path)?;
+    let mut manifest =
+        Json::parse(&manifest_text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+    let cfg = ModelConfig::from_manifest(&manifest)?;
+
+    println!(
+        "calibrating {config} on {} seqs x {} tokens (seed {:#x}, lambda {})",
+        opts.seqs, opts.seq_len, opts.seed, opts.lambda_attn
+    );
+    let result = calibrate(&pack, &cfg, wa, &opts)?;
+    print!("{}", result.report_text());
+
+    // persist: correction pack next to the weights + manifest entry
+    let rel = format!("corrections.{}.abqw", wa.tag());
+    result.set.to_pack().save(&dir.join(&rel))?;
+    let entry = CorrectionEntry {
+        config: config.clone(),
+        tag: wa.tag(),
+        path: dir.join(&rel),
+        seed: opts.seed,
+        seqs: opts.seqs,
+        seq_len: opts.seq_len,
+    };
+    upsert_correction(&mut manifest, &entry, &rel);
+    std::fs::write(&manifest_path, manifest.to_string_pretty())?;
+    println!(
+        "saved {} corrections ({} non-identity) to {rel} + manifest entry",
+        result.set.len(),
+        result.set.non_identity()
+    );
+
+    // eval-integrated before/after report on the held-out corpus
+    let n = args.get_usize("eval-seqs", 8);
+    let len = args.get_usize("eval-seq-len", 64);
+    let spec = format!("abq:{config}");
+    let before = EngineBuilder::new()
+        .weights(&dir)
+        .backend(&spec)
+        .correction_off()
+        .build()?;
+    let ppl_before = eval::perplexity(before.as_ref(), n, len, eval::corpus::EVAL_SEED)?;
+    let after = EngineBuilder::new()
+        .weights(&dir)
+        .backend(&spec)
+        .correction(result.set.clone())
+        .build()?;
+    let ppl_after = eval::perplexity(after.as_ref(), n, len, eval::corpus::EVAL_SEED)?;
+    println!(
+        "held-out perplexity ({n}x{len}): uncalibrated {ppl_before:.3} -> calibrated {ppl_after:.3}"
     );
     Ok(())
 }

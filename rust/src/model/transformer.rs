@@ -21,6 +21,7 @@ use anyhow::{bail, Result};
 
 use crate::baselines::gemm_fp32_into;
 use crate::engine::{LinearBackend, LinearOp, LinearScratch, PrepareCtx};
+use crate::quant::CorrectionSet;
 
 use super::config::ModelConfig;
 use super::kv_cache::KvStore;
@@ -132,11 +133,11 @@ pub fn apply_rope(x: &mut [f32], cfg: &ModelConfig, cos: &[f32], sin: &[f32], le
     }
 }
 
-fn silu(v: f32) -> f32 {
+pub(crate) fn silu(v: f32) -> f32 {
     v / (1.0 + (-v).exp())
 }
 
-fn softmax_inplace(row: &mut [f32]) {
+pub(crate) fn softmax_inplace(row: &mut [f32]) {
     let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
     let mut sum = 0f32;
     for v in row.iter_mut() {
@@ -146,6 +147,67 @@ fn softmax_inplace(row: &mut [f32]) {
     let inv = 1.0 / sum;
     for v in row.iter_mut() {
         *v *= inv;
+    }
+}
+
+/// Everything the calibration pipeline needs to reconstruct one block's
+/// computation offline: the fp32 activations at every projection
+/// boundary plus the pre-softmax attention logits (the paper's
+/// attention-consistency term compares these between the quantized and
+/// fp32 block). Captured by [`Transformer::prefill_traced`].
+#[derive(Clone, Debug, Default)]
+pub struct BlockTrace {
+    /// residual stream entering the block, `[tokens, d_model]`
+    pub input: Vec<f32>,
+    /// residual stream leaving the block, `[tokens, d_model]`
+    pub output: Vec<f32>,
+    /// post-`ln1` activations — the input to `wq`/`wk`/`wv`, `[tokens, d_model]`
+    pub ln1_out: Vec<f32>,
+    /// attention context — the input to `wo`, `[tokens, d_model]`
+    pub attn_ctx: Vec<f32>,
+    /// post-`ln2` activations — the input to `gate`/`up`, `[tokens, d_model]`
+    pub ln2_out: Vec<f32>,
+    /// SwiGLU product — the input to `down`, `[tokens, d_ff]`
+    pub ffn_act: Vec<f32>,
+    /// pre-softmax scaled attention scores, `[n_heads, tokens, tokens]`
+    /// row-major, zero above the causal diagonal
+    pub attn_logits: Vec<f32>,
+}
+
+impl BlockTrace {
+    /// Input to a projection by name (the teacher activations for the
+    /// calibration of that projection).
+    pub fn proj_input(&self, name: &str) -> &[f32] {
+        match name {
+            "wq" | "wk" | "wv" => &self.ln1_out,
+            "wo" => &self.attn_ctx,
+            "gate" | "up" => &self.ln2_out,
+            "down" => &self.ffn_act,
+            _ => panic!("unknown linear {name}"),
+        }
+    }
+}
+
+/// The block tap: one [`BlockTrace`] per layer for one traced prefill.
+#[derive(Clone, Debug, Default)]
+pub struct BlockTap {
+    /// tokens in the traced sequence
+    pub tokens: usize,
+    pub blocks: Vec<BlockTrace>,
+}
+
+impl BlockTap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn reset(&mut self, cfg: &ModelConfig, tokens: usize) {
+        self.tokens = tokens;
+        self.blocks.clear();
+        self.blocks.resize(cfg.n_layers, BlockTrace::default());
+        for tr in &mut self.blocks {
+            tr.attn_logits = vec![0.0; cfg.n_heads * tokens * tokens];
+        }
     }
 }
 
@@ -222,6 +284,19 @@ impl Transformer {
         cfg: ModelConfig,
         backend: &dyn LinearBackend,
     ) -> Result<Self> {
+        Self::from_pack_corrected(pack, cfg, backend, None)
+    }
+
+    /// [`Transformer::from_pack`] with learned distribution corrections:
+    /// each projection's [`crate::quant::Correction`] (when the set has
+    /// one) is resolved into its [`PrepareCtx`] so correction-aware
+    /// backends requantize with it (`docs/CALIBRATION.md`).
+    pub fn from_pack_corrected(
+        pack: &WeightPack,
+        cfg: ModelConfig,
+        backend: &dyn LinearBackend,
+        corrections: Option<&CorrectionSet>,
+    ) -> Result<Self> {
         let tok_emb = pack.f32("tok_emb")?;
         let ln_f = pack.f32("ln_f")?;
         let head = pack.f32("head")?;
@@ -238,7 +313,12 @@ impl Transformer {
                     wt.as_f32()?,
                     out_f,
                     in_f,
-                    &PrepareCtx { pack: Some(pack), layer: i, name },
+                    &PrepareCtx {
+                        pack: Some(pack),
+                        layer: i,
+                        name,
+                        correction: corrections.and_then(|cs| cs.get(i, name)),
+                    },
                 )
             };
             blocks.push(Block {
@@ -265,6 +345,18 @@ impl Transformer {
 
     /// Random-weight model (benches at real LLaMA layer shapes).
     pub fn random(cfg: ModelConfig, backend: &dyn LinearBackend, seed: u64) -> Result<Self> {
+        Self::random_corrected(cfg, backend, seed, None)
+    }
+
+    /// [`Transformer::random`] with learned distribution corrections
+    /// resolved per projection (calibration tests drive random models
+    /// through the same correction-aware prepare path as packed ones).
+    pub fn random_corrected(
+        cfg: ModelConfig,
+        backend: &dyn LinearBackend,
+        seed: u64,
+        corrections: Option<&CorrectionSet>,
+    ) -> Result<Self> {
         let rng = std::cell::RefCell::new(crate::util::rng::SplitMix::new(seed));
         let d = cfg.d_model;
         let dense = |out_f: usize, in_f: usize| -> Vec<f32> {
@@ -275,20 +367,30 @@ impl Transformer {
         let tok_emb: Vec<f32> = dense(cfg.vocab, d).iter().map(|v| v * 0.08).collect();
         let head: Vec<f32> = dense(cfg.vocab, d).iter().map(|v| v * 0.08).collect();
         let mut blocks = Vec::with_capacity(cfg.n_layers);
-        for _ in 0..cfg.n_layers {
-            let mk = |w: Vec<f32>, out_f: usize, in_f: usize| -> Result<Box<dyn LinearOp>> {
-                backend.prepare(&w, out_f, in_f, &PrepareCtx::none())
+        for li in 0..cfg.n_layers {
+            let mk = |w: Vec<f32>, out_f: usize, in_f: usize, name: &str| -> Result<Box<dyn LinearOp>> {
+                backend.prepare(
+                    &w,
+                    out_f,
+                    in_f,
+                    &PrepareCtx {
+                        pack: None,
+                        layer: li,
+                        name,
+                        correction: corrections.and_then(|cs| cs.get(li, name)),
+                    },
+                )
             };
             blocks.push(Block {
                 ln1: vec![1.0; d],
                 ln2: vec![1.0; d],
-                wq: mk(dense(d, d), d, d)?,
-                wk: mk(dense(d, d), d, d)?,
-                wv: mk(dense(d, d), d, d)?,
-                wo: mk(dense(d, d), d, d)?,
-                gate: mk(dense(cfg.d_ff, d), cfg.d_ff, d)?,
-                up: mk(dense(cfg.d_ff, d), cfg.d_ff, d)?,
-                down: mk(dense(d, cfg.d_ff), d, cfg.d_ff)?,
+                wq: mk(dense(d, d), d, d, "wq")?,
+                wk: mk(dense(d, d), d, d, "wk")?,
+                wv: mk(dense(d, d), d, d, "wv")?,
+                wo: mk(dense(d, d), d, d, "wo")?,
+                gate: mk(dense(cfg.d_ff, d), cfg.d_ff, d, "gate")?,
+                up: mk(dense(cfg.d_ff, d), cfg.d_ff, d, "up")?,
+                down: mk(dense(d, cfg.d_ff), d, cfg.d_ff, "down")?,
             });
         }
         Ok(Transformer {
@@ -328,6 +430,36 @@ impl Transformer {
         cache: &mut C,
         s: &mut ForwardScratch,
     ) -> Result<Vec<f32>> {
+        self.prefill_impl(tokens, cache, s, None)
+    }
+
+    /// The calibration block tap: a prefill that runs the *same* code
+    /// path as [`Transformer::prefill_scratch`] while capturing, per
+    /// block, the residual stream in/out, every projection's input
+    /// activations, and the pre-softmax attention logits
+    /// (`docs/CALIBRATION.md`). Requires a fresh cache (`pos() == 0`) so
+    /// each logit matrix is the full `[tokens, tokens]` causal triangle.
+    pub fn prefill_traced<C: KvStore>(
+        &self,
+        tokens: &[u32],
+        cache: &mut C,
+        s: &mut ForwardScratch,
+        tap: &mut BlockTap,
+    ) -> Result<Vec<f32>> {
+        if cache.pos() != 0 {
+            bail!("prefill_traced needs a fresh cache (pos 0), got {}", cache.pos());
+        }
+        tap.reset(&self.cfg, tokens.len());
+        self.prefill_impl(tokens, cache, s, Some(tap))
+    }
+
+    fn prefill_impl<C: KvStore>(
+        &self,
+        tokens: &[u32],
+        cache: &mut C,
+        s: &mut ForwardScratch,
+        mut tap: Option<&mut BlockTap>,
+    ) -> Result<Vec<f32>> {
         let s_len = tokens.len();
         // reserve is the single capacity check (max_seq + pool coverage)
         cache.reserve(s_len)?;
@@ -339,7 +471,17 @@ impl Transformer {
         let scale = 1.0 / (hd as f32).sqrt();
 
         for (li, blk) in self.blocks.iter().enumerate() {
+            if let Some(tp) = tap.as_deref_mut() {
+                let tr = &mut tp.blocks[li];
+                tr.input.clear();
+                tr.input.extend_from_slice(&s.x);
+            }
             rmsnorm(&s.x, &blk.ln1, &mut s.h);
+            if let Some(tp) = tap.as_deref_mut() {
+                let tr = &mut tp.blocks[li];
+                tr.ln1_out.clear();
+                tr.ln1_out.extend_from_slice(&s.h);
+            }
             blk.wq.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.q);
             blk.wk.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.k);
             blk.wv.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.v);
@@ -368,6 +510,12 @@ impl Transformer {
                         let kv = &s.kpage[kp * d + hh * hd..kp * d + (hh + 1) * hd];
                         *sc = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
                     }
+                    if let Some(tp) = tap.as_deref_mut() {
+                        // pos0 == 0 when tapped, so keys <= s_len
+                        let tr = &mut tp.blocks[li];
+                        let base = (hh * s_len + t) * s_len;
+                        tr.attn_logits[base..base + keys].copy_from_slice(scores);
+                    }
                     softmax_inplace(scores);
                     let crow = &mut s.ctx[t * d + hh * hd..t * d + (hh + 1) * hd];
                     for (kp, &a) in scores.iter().enumerate() {
@@ -378,19 +526,39 @@ impl Transformer {
                     }
                 }
             }
+            if let Some(tp) = tap.as_deref_mut() {
+                let tr = &mut tp.blocks[li];
+                tr.attn_ctx.clear();
+                tr.attn_ctx.extend_from_slice(&s.ctx);
+            }
             blk.wo.forward_scratch(&s.ctx, s_len, &mut s.lin, &mut s.proj);
             for i in 0..s.x.len() {
                 s.x[i] += s.proj[i];
             }
             rmsnorm(&s.x, &blk.ln2, &mut s.h);
+            if let Some(tp) = tap.as_deref_mut() {
+                let tr = &mut tp.blocks[li];
+                tr.ln2_out.clear();
+                tr.ln2_out.extend_from_slice(&s.h);
+            }
             blk.gate.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.gate);
             blk.up.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.up);
             for i in 0..s.act.len() {
                 s.act[i] = silu(s.gate[i]) * s.up[i];
             }
+            if let Some(tp) = tap.as_deref_mut() {
+                let tr = &mut tp.blocks[li];
+                tr.ffn_act.clear();
+                tr.ffn_act.extend_from_slice(&s.act);
+            }
             blk.down.forward_scratch(&s.act, s_len, &mut s.lin, &mut s.proj);
             for i in 0..s.x.len() {
                 s.x[i] += s.proj[i];
+            }
+            if let Some(tp) = tap.as_deref_mut() {
+                let tr = &mut tp.blocks[li];
+                tr.output.clear();
+                tr.output.extend_from_slice(&s.x);
             }
         }
         cache.set_pos(pos0 + s_len);
@@ -608,6 +776,47 @@ mod tests {
             let s2 = m.decode_step(&[step + 7], &mut b2).unwrap();
             assert_eq!(s1, s2, "step {step}");
         }
+    }
+
+    #[test]
+    fn traced_prefill_matches_untapped_and_captures_consistently() {
+        let m = Transformer::random(MICRO, &Fp32Backend, 13).unwrap();
+        let toks = [2u32, 9, 4, 17, 1];
+        let t = toks.len();
+        let mut c1 = KvCache::new(&MICRO);
+        let plain = m.prefill(&toks, &mut c1).unwrap();
+        let mut c2 = KvCache::new(&MICRO);
+        let mut scratch = ForwardScratch::new();
+        let mut tap = BlockTap::new();
+        let traced = m.prefill_traced(&toks, &mut c2, &mut scratch, &mut tap).unwrap();
+        assert_eq!(plain, traced, "tap must not perturb the forward");
+        assert_eq!(tap.blocks.len(), MICRO.n_layers);
+        assert_eq!(tap.tokens, t);
+        let d = MICRO.d_model;
+        for (li, tr) in tap.blocks.iter().enumerate() {
+            assert_eq!(tr.input.len(), t * d, "block {li} input");
+            assert_eq!(tr.output.len(), t * d);
+            assert_eq!(tr.ln1_out.len(), t * d);
+            assert_eq!(tr.attn_ctx.len(), t * d);
+            assert_eq!(tr.ln2_out.len(), t * d);
+            assert_eq!(tr.ffn_act.len(), t * MICRO.d_ff);
+            assert_eq!(tr.attn_logits.len(), MICRO.n_heads * t * t);
+            // the causal upper triangle stays zero
+            for h in 0..MICRO.n_heads {
+                for q in 0..t {
+                    for k in (q + 1)..t {
+                        assert_eq!(tr.attn_logits[(h * t + q) * t + k], 0.0);
+                    }
+                }
+            }
+            if li + 1 < tap.blocks.len() {
+                assert_eq!(tr.output, tap.blocks[li + 1].input, "residual chain {li}");
+            }
+        }
+        // a traced cache is as usable as an untapped one
+        assert_eq!(c2.pos, t);
+        // non-fresh cache is rejected
+        assert!(m.prefill_traced(&toks, &mut c2, &mut scratch, &mut tap).is_err());
     }
 
     #[test]

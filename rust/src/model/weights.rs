@@ -130,6 +130,43 @@ impl WeightPack {
         Ok(WeightPack { tensors })
     }
 
+    /// Serialize to the `.abqw` wire format (tensors in sorted name
+    /// order so the bytes are deterministic for a given content).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b: Vec<u8> = b"ABQW1\0".to_vec();
+        b.extend((self.tensors.len() as u32).to_le_bytes());
+        let mut names: Vec<&String> = self.tensors.keys().collect();
+        names.sort();
+        for name in names {
+            let t = &self.tensors[name];
+            b.extend((name.len() as u16).to_le_bytes());
+            b.extend(name.as_bytes());
+            let (dtype, shape): (u8, &[usize]) = match t {
+                Tensor::F32(_, s) => (0, s),
+                Tensor::I32(_, s) => (1, s),
+                Tensor::U8(_, s) => (2, s),
+            };
+            b.push(dtype);
+            b.push(shape.len() as u8);
+            for &d in shape {
+                b.extend((d as u32).to_le_bytes());
+            }
+            match t {
+                Tensor::F32(v, _) => v.iter().for_each(|x| b.extend(x.to_le_bytes())),
+                Tensor::I32(v, _) => v.iter().for_each(|x| b.extend(x.to_le_bytes())),
+                Tensor::U8(v, _) => b.extend(v),
+            }
+        }
+        b
+    }
+
+    /// Write the pack to disk in the `.abqw` format (what
+    /// `WeightPack::load` reads back).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("write weight pack {path:?}"))
+    }
+
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         self.tensors
             .get(name)
@@ -190,6 +227,21 @@ mod tests {
         assert_eq!(p.get("a").unwrap().shape(), &[2, 2]);
         assert_eq!(p.get("q.w2sa8.0.wq").unwrap().as_u8().unwrap(), &[7, 8, 9]);
         assert_eq!(p.quant_tags(), vec!["w2sa8".to_string()]);
+    }
+
+    #[test]
+    fn save_roundtrips_every_dtype() {
+        let mut p = WeightPack::default();
+        p.tensors.insert("f".into(), Tensor::F32(vec![1.5, -2.25, 0.0], vec![3]));
+        p.tensors.insert("i".into(), Tensor::I32(vec![-7, 0, 1 << 20], vec![3, 1]));
+        p.tensors.insert("u".into(), Tensor::U8(vec![0, 255, 17, 3], vec![2, 2]));
+        let back = WeightPack::parse(&p.to_bytes()).unwrap();
+        assert_eq!(back.tensors.len(), 3);
+        assert_eq!(back.get("f").unwrap(), p.get("f").unwrap());
+        assert_eq!(back.get("i").unwrap(), p.get("i").unwrap());
+        assert_eq!(back.get("u").unwrap(), p.get("u").unwrap());
+        // deterministic bytes
+        assert_eq!(p.to_bytes(), back.to_bytes());
     }
 
     #[test]

@@ -157,7 +157,19 @@ impl FromStr for WAConfig {
         };
         let w_bits: u8 = wspec.parse().map_err(|_| ParseError(s.clone()))?;
         let a_bits: u8 = abits_str.parse().map_err(|_| ParseError(s.clone()))?;
-        if w_bits == 0 || w_bits > 16 || a_bits == 0 || a_bits > 16 {
+        // the engine's plane decomposition covers 1..=8 bits per side;
+        // 16 is the explicit keep-float marker, valid only as `w16a16`
+        // (≡ `fp16`) — no engine path implements one quantized side
+        // against one kept-float side, so mixed specs are rejected
+        // rather than silently saturating 16-bit codes into u8
+        let bits_ok = |b: u8| (1..=8).contains(&b) || b == 16;
+        if !bits_ok(w_bits) || !bits_ok(a_bits) {
+            return Err(ParseError(s));
+        }
+        if (w_bits == 16) != (a_bits == 16) {
+            return Err(ParseError(s));
+        }
+        if balanced && w_bits == 16 {
             return Err(ParseError(s));
         }
         let (w_group, a_group) = match (wg_explicit, ag_explicit) {
@@ -246,6 +258,83 @@ mod tests {
             "w4gXa4", "w4a4gX",
         ] {
             assert!(s.parse::<WAConfig>().is_err(), "{s}");
+        }
+    }
+
+    /// Table-driven accept cases: spec → (w_bits, balanced, w_group,
+    /// a_bits, a_group), plus the canonical `Display` form each one
+    /// normalizes to.
+    #[test]
+    fn table_driven_accept_and_normalize() {
+        #[rustfmt::skip]
+        let table: &[(&str, (u8, bool, u32, u8, u32), &str)] = &[
+            ("w2a8",          (2, false,   0, 8,   0), "w2a8"),
+            ("w2*a8",         (2, true,    0, 8,   0), "w2*a8"),
+            ("w2sa8",         (2, true,    0, 8,   0), "w2*a8"),
+            ("W2*A8",         (2, true,    0, 8,   0), "w2*a8"),   // case-folded
+            (" w4a4 ",        (4, false,   0, 4,   0), "w4a4"),    // trimmed
+            ("w1a1",          (1, false,   0, 1,   0), "w1a1"),    // extremes
+            ("w8a8",          (8, false,   0, 8,   0), "w8a8"),
+            ("w4a4g128",      (4, false, 128, 4, 128), "w4a4g128"),
+            ("w4g128a4",      (4, false, 128, 4,   0), "w4g128a4"),
+            ("w4g64a4g128",   (4, false,  64, 4, 128), "w4g64a4g128"),
+            ("w4g0a4",        (4, false,   0, 4,   0), "w4a4"),    // explicit no-group
+            ("w4g0a4g128",    (4, false,   0, 4, 128), "w4g0a4g128"),
+            ("w2*g64a8",      (2, true,   64, 8,   0), "w2*g64a8"),
+        ];
+        for &(spec, (wb, bal, wg, ab, ag), canon) in table {
+            let cfg: WAConfig = spec.parse().unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert_eq!(cfg.weight.bits, wb, "{spec} w_bits");
+            assert_eq!(cfg.weight.balanced, bal, "{spec} balanced");
+            assert_eq!(cfg.weight.group, wg, "{spec} w_group");
+            assert_eq!(cfg.act.bits, ab, "{spec} a_bits");
+            assert_eq!(cfg.act.group, ag, "{spec} a_group");
+            assert_eq!(cfg.to_string(), canon, "{spec} canonical form");
+            // every accepted spec re-parses from its Display form to an
+            // identical config (print → parse is the identity)
+            let back: WAConfig = cfg.to_string().parse().unwrap();
+            assert_eq!(back, cfg, "{spec} display round-trip");
+        }
+        // the fp strings normalize to the FP16 constant
+        for fp in ["fp16", "fp32", "fp", "w16a16", "FP16"] {
+            let cfg: WAConfig = fp.parse().unwrap();
+            assert_eq!(cfg, WAConfig::FP16, "{fp}");
+            assert_eq!(cfg.to_string(), "fp16");
+        }
+    }
+
+    /// Table-driven reject cases (the ISSUE-4 negative list plus edge
+    /// grammar): zero/out-of-range bits, doubled balance markers, empty
+    /// group digits, trailing garbage.
+    #[test]
+    fn table_driven_reject() {
+        #[rustfmt::skip]
+        let table: &[(&str, &str)] = &[
+            ("w0a4",       "zero weight bits"),
+            ("w4a0",       "zero act bits"),
+            ("w9a8",       "9 weight bits exceeds the 8-bit plane engine"),
+            ("w4a12",      "12 act bits exceeds the 8-bit plane engine"),
+            ("w15a15",     "15 bits is not the fp marker"),
+            ("w17a4",      "beyond the fp marker"),
+            ("w16a8",      "mixed fp/quantized sides have no engine path"),
+            ("w4a16",      "mixed quantized/fp sides have no engine path"),
+            ("w2**a8",     "doubled balance marker"),
+            ("w2*sa8",     "mixed balance markers"),
+            ("w16*a8",     "balance marker on the fp side"),
+            ("w4ga4",      "empty weight group digits"),
+            ("w4a4g",      "empty act group digits"),
+            ("w4g a4",     "whitespace inside the group"),
+            ("w4a4x",      "trailing garbage after act bits"),
+            ("w4a4g128x",  "trailing garbage after act group"),
+            ("w4g128xa4",  "trailing garbage after weight group"),
+            ("w4a4 extra", "trailing token"),
+            ("w-2a8",      "negative bits"),
+            ("w2a8*",      "balance marker on the act side"),
+            ("ww2a8",      "doubled prefix"),
+            ("w2aa8",      "doubled act marker parses as garbage bits"),
+        ];
+        for (spec, why) in table {
+            assert!(spec.parse::<WAConfig>().is_err(), "'{spec}' must be rejected ({why})");
         }
     }
 }

@@ -1,0 +1,237 @@
+//! Learned distribution-correction state (paper §3.2, Eq. 4–6 — the DLC
+//! half of ABQ's accuracy story). One [`Correction`] per projection holds
+//! the per-input-channel **balance scale** `s`, the per-input-channel
+//! **shift** `z`, and a scalar weight **clip** ratio. At inference the
+//! corrected linear computes
+//!
+//! ```text
+//!   y = Q_w(W·diag(s); clip) · Q_a((x − z) ⊘ s) + W·z
+//! ```
+//!
+//! which is numerically the original `W·x` when quantization is exact:
+//! `W·diag(s)·diag(s)⁻¹·(x − z) + W·z = W·x`. Identity parameters
+//! (`s = 1, z = 0, clip = 1`) make every step a bit-exact no-op, so the
+//! disabled path is indistinguishable from an uncorrected engine
+//! (property-tested in `rust/tests/prop_calib.rs`).
+//!
+//! [`CorrectionSet`] maps `(layer, projection name)` to corrections for
+//! one WqAp config (keyed by its filesystem tag, e.g. `w2sa8`) and
+//! round-trips through the `.abqw` weight-pack format under
+//! `corr.<tag>.<layer>.<name>.{s,z,c}` so the `calibrate` CLI can persist
+//! learned vectors next to the exported weights (`docs/CALIBRATION.md`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::model::weights::{Tensor, WeightPack};
+
+/// Learned correction vectors for one projection.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Correction {
+    /// per-input-channel balance scale `s` (activations divided by it)
+    pub scale: Vec<f32>,
+    /// per-input-channel shift `z` (subtracted from activations; the
+    /// displaced `W·z` is re-added as a per-output offset)
+    pub shift: Vec<f32>,
+    /// weight clip ratio applied symmetrically to each row's min/max
+    /// before the quantization grid is fit (`1.0` = plain min-max)
+    pub clip: f32,
+}
+
+impl Correction {
+    /// Identity correction for `in_features` channels: bit-exact no-op.
+    pub fn identity(in_features: usize) -> Self {
+        Correction {
+            scale: vec![1.0; in_features],
+            shift: vec![0.0; in_features],
+            clip: 1.0,
+        }
+    }
+
+    pub fn in_features(&self) -> usize {
+        self.scale.len()
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.clip == 1.0
+            && self.scale.iter().all(|&s| s == 1.0)
+            && self.shift.iter().all(|&z| z == 0.0)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.scale.len() != self.shift.len() {
+            bail!(
+                "correction scale/shift length mismatch: {} vs {}",
+                self.scale.len(),
+                self.shift.len()
+            );
+        }
+        if !self.scale.iter().all(|s| s.is_finite() && *s > 0.0) {
+            bail!("correction scales must be finite and > 0");
+        }
+        if !self.shift.iter().all(|z| z.is_finite()) {
+            bail!("correction shifts must be finite");
+        }
+        if !(self.clip.is_finite() && self.clip > 0.0 && self.clip <= 1.0) {
+            bail!("correction clip must be in (0, 1], got {}", self.clip);
+        }
+        Ok(())
+    }
+}
+
+/// All corrections learned for one WqAp config: `(layer, name)` →
+/// [`Correction`].
+#[derive(Clone, Debug, Default)]
+pub struct CorrectionSet {
+    /// filesystem-safe tag of the config the set was learned for
+    /// ([`crate::quant::WAConfig::tag`], e.g. `w2sa8`)
+    pub tag: String,
+    entries: BTreeMap<(usize, String), Correction>,
+}
+
+impl CorrectionSet {
+    pub fn new(tag: impl Into<String>) -> Self {
+        CorrectionSet { tag: tag.into(), entries: BTreeMap::new() }
+    }
+
+    pub fn insert(&mut self, layer: usize, name: &str, corr: Correction) {
+        self.entries.insert((layer, name.to_string()), corr);
+    }
+
+    pub fn get(&self, layer: usize, name: &str) -> Option<&Correction> {
+        self.entries.get(&(layer, name.to_string()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&(usize, String), &Correction)> {
+        self.entries.iter()
+    }
+
+    /// Corrections that are not the identity. Persistence stores every
+    /// entry (identity included, to keep the set total), but identity
+    /// entries are skipped at prepare time — they are mathematical
+    /// no-ops, so correction-aware backends fall through to their pack
+    /// codes / RTN path.
+    pub fn non_identity(&self) -> usize {
+        self.entries.values().filter(|c| !c.is_identity()).count()
+    }
+
+    fn tensor_base(&self, layer: usize, name: &str) -> String {
+        format!("corr.{}.{layer}.{name}", self.tag)
+    }
+
+    /// Serialize into a weight pack (`corr.<tag>.<layer>.<name>.{s,z,c}`).
+    pub fn to_pack(&self) -> WeightPack {
+        let mut pack = WeightPack::default();
+        for ((layer, name), c) in &self.entries {
+            let base = self.tensor_base(*layer, name);
+            let n = c.scale.len();
+            pack.tensors
+                .insert(format!("{base}.s"), Tensor::F32(c.scale.clone(), vec![n]));
+            pack.tensors
+                .insert(format!("{base}.z"), Tensor::F32(c.shift.clone(), vec![n]));
+            pack.tensors
+                .insert(format!("{base}.c"), Tensor::F32(vec![c.clip], vec![1]));
+        }
+        pack
+    }
+
+    /// Load every `corr.<tag>.*` entry from a pack. Unknown tensors are
+    /// ignored, so a correction pack can live inside a full weight pack.
+    pub fn from_pack(pack: &WeightPack, tag: &str) -> Result<Self> {
+        let mut set = CorrectionSet::new(tag);
+        let prefix = format!("corr.{tag}.");
+        for key in pack.tensors.keys() {
+            let Some(rest) = key.strip_prefix(&prefix) else { continue };
+            let Some(base) = rest.strip_suffix(".s") else { continue };
+            let mut parts = base.splitn(2, '.');
+            let (Some(layer_s), Some(name)) = (parts.next(), parts.next()) else {
+                bail!("malformed correction tensor name '{key}'");
+            };
+            let layer: usize = layer_s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad layer index in '{key}'"))?;
+            let full = format!("{prefix}{base}");
+            let scale = pack.get(&format!("{full}.s"))?.as_f32()?.to_vec();
+            let shift = pack.get(&format!("{full}.z"))?.as_f32()?.to_vec();
+            let clip = *pack
+                .get(&format!("{full}.c"))?
+                .as_f32()?
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("empty clip tensor '{full}.c'"))?;
+            let corr = Correction { scale, shift, clip };
+            corr.validate()?;
+            set.insert(layer, name, corr);
+        }
+        Ok(set)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_identity() {
+        let c = Correction::identity(8);
+        assert!(c.is_identity());
+        let mut c2 = c.clone();
+        c2.scale[3] = 2.0;
+        assert!(!c2.is_identity());
+        let mut c3 = c.clone();
+        c3.clip = 0.8;
+        assert!(!c3.is_identity());
+    }
+
+    #[test]
+    fn pack_roundtrip() {
+        let mut set = CorrectionSet::new("w2sa8");
+        set.insert(0, "wq", Correction {
+            scale: vec![1.0, 2.0, 0.5],
+            shift: vec![0.0, -0.25, 0.75],
+            clip: 0.8,
+        });
+        set.insert(3, "down", Correction::identity(4));
+        let pack = set.to_pack();
+        let back = CorrectionSet::from_pack(&pack, "w2sa8").unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.get(0, "wq"), set.get(0, "wq"));
+        assert_eq!(back.get(3, "down"), set.get(3, "down"));
+        assert!(back.get(1, "wq").is_none());
+        // a different tag sees nothing
+        let other = CorrectionSet::from_pack(&pack, "w4a4").unwrap();
+        assert!(other.is_empty());
+    }
+
+    #[test]
+    fn pack_roundtrip_through_bytes() {
+        let mut set = CorrectionSet::new("w4a4");
+        set.insert(1, "gate", Correction {
+            scale: vec![1.5; 6],
+            shift: vec![0.1; 6],
+            clip: 0.7,
+        });
+        let bytes = set.to_pack().to_bytes();
+        let pack = WeightPack::parse(&bytes).unwrap();
+        let back = CorrectionSet::from_pack(&pack, "w4a4").unwrap();
+        assert_eq!(back.get(1, "gate"), set.get(1, "gate"));
+    }
+
+    #[test]
+    fn from_pack_rejects_bad_vectors() {
+        let mut set = CorrectionSet::new("w2sa8");
+        set.insert(0, "wq", Correction { scale: vec![0.0; 2], shift: vec![0.0; 2], clip: 1.0 });
+        assert!(CorrectionSet::from_pack(&set.to_pack(), "w2sa8").is_err(), "zero scale");
+        let mut set = CorrectionSet::new("w2sa8");
+        set.insert(0, "wq", Correction { scale: vec![1.0; 2], shift: vec![0.0; 2], clip: 1.5 });
+        assert!(CorrectionSet::from_pack(&set.to_pack(), "w2sa8").is_err(), "clip > 1");
+    }
+}

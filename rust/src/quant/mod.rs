@@ -2,12 +2,17 @@
 //! vectors (rust mirror of python `compile/quantizers.py`; DESIGN.md §5).
 
 pub mod config;
+pub mod correction;
 pub mod quantizer;
 pub mod smooth;
 
 pub use config::{QuantSpec, WAConfig};
+pub use correction::{Correction, CorrectionSet};
 pub use quantizer::{
     dequantize_value, qparams_minmax, quantize_act_per_token, quantize_act_per_token_into,
     quantize_value, quantize_weight_rows, QParams, QuantizedRows,
 };
-pub use smooth::{apply_balance_act, apply_balance_weight, smooth_scales};
+pub use smooth::{
+    apply_balance_act, apply_balance_weight, apply_correction_act, correction_output_offset,
+    smooth_scales,
+};

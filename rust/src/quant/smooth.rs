@@ -39,6 +39,35 @@ pub fn apply_balance_weight(w: &mut [f32], cols: usize, s: &[f32]) {
     }
 }
 
+/// Full distribution correction on activations (row-major
+/// `[tokens, features]`), in place: `x ← (x − z) ⊘ s`. With `s = 1` and
+/// `z = 0` every element is bit-identical to the input (`x - 0.0` and
+/// `x / 1.0` are exact), which is what makes the identity-initialized
+/// correction path indistinguishable from the uncorrected engine.
+pub fn apply_correction_act(x: &mut [f32], features: usize, s: &[f32], z: &[f32]) {
+    assert_eq!(s.len(), features);
+    assert_eq!(z.len(), features);
+    for row in x.chunks_exact_mut(features) {
+        for i in 0..features {
+            row[i] = (row[i] - z[i]) / s[i];
+        }
+    }
+}
+
+/// Per-output offset displaced by the activation shift: `off = W·z` for
+/// `w` row-major `[rows, cols]`. Added back after the quantized GEMM so
+/// `Q(W·s)·((x−z)/s) + W·z ≈ W·x`.
+pub fn correction_output_offset(w: &[f32], rows: usize, cols: usize, z: &[f32]) -> Vec<f32> {
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(z.len(), cols);
+    (0..rows)
+        .map(|r| {
+            let row = &w[r * cols..(r + 1) * cols];
+            row.iter().zip(z).map(|(a, b)| a * b).sum()
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -60,6 +89,40 @@ mod tests {
             .collect();
         for (a, b) in y0.iter().zip(&y1) {
             assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn correction_preserves_product() {
+        // Q-free algebra: W·diag(s)·((x−z)/s) + W·z == W·x
+        let (rows, cols) = (3usize, 4usize);
+        let w: Vec<f32> = (0..rows * cols).map(|i| (i as f32 - 5.0) / 3.0).collect();
+        let x: Vec<f32> = vec![0.5, -1.25, 2.0, 0.0];
+        let s = vec![2.0f32, 0.5, 1.0, 4.0];
+        let z = vec![0.25f32, -0.5, 0.0, 1.0];
+        let y0: Vec<f32> = (0..rows)
+            .map(|r| (0..cols).map(|c| w[r * cols + c] * x[c]).sum())
+            .collect();
+        let mut wb = w.clone();
+        apply_balance_weight(&mut wb, cols, &s);
+        let mut xb = x.clone();
+        apply_correction_act(&mut xb, cols, &s, &z);
+        let off = correction_output_offset(&w, rows, cols, &z);
+        let y1: Vec<f32> = (0..rows)
+            .map(|r| (0..cols).map(|c| wb[r * cols + c] * xb[c]).sum::<f32>() + off[r])
+            .collect();
+        for (a, b) in y0.iter().zip(&y1) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn identity_correction_is_bit_exact() {
+        let x0: Vec<f32> = vec![1.5, -0.0, 3.25, f32::MIN_POSITIVE];
+        let mut x = x0.clone();
+        apply_correction_act(&mut x, 4, &[1.0; 4], &[0.0; 4]);
+        for (a, b) in x.iter().zip(&x0) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

@@ -32,6 +32,24 @@ pub struct QuantConfigEntry {
     pub balanced: bool,
 }
 
+/// One learned distribution-correction pack registered in the manifest
+/// (written by `abq-llm calibrate`; see `docs/CALIBRATION.md`). The pack
+/// at `path` holds `corr.<tag>.<layer>.<name>.{s,z,c}` tensors that
+/// correction-aware backends apply at prepare time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CorrectionEntry {
+    /// WqAp config the set was learned for (display form, e.g. `w2*a8`)
+    pub config: String,
+    /// filesystem-safe tag (`w2sa8`) — the lookup key
+    pub tag: String,
+    /// correction pack, resolved against the manifest directory
+    pub path: PathBuf,
+    /// calibration corpus provenance
+    pub seed: u64,
+    pub seqs: usize,
+    pub seq_len: usize,
+}
+
 #[derive(Clone, Debug)]
 pub struct ArtifactManifest {
     pub vocab: usize,
@@ -45,6 +63,7 @@ pub struct ArtifactManifest {
     pub fp_ppl: f64,
     pub quant_configs: Vec<QuantConfigEntry>,
     pub artifacts: Vec<ArtifactEntry>,
+    pub corrections: Vec<CorrectionEntry>,
 }
 
 impl ArtifactManifest {
@@ -86,6 +105,27 @@ impl ArtifactManifest {
                 });
             }
         }
+        let mut corrections = Vec::new();
+        if let Some(arr) = j.get("corrections").and_then(|a| a.as_arr()) {
+            for e in arr {
+                let rel = e
+                    .get("path")
+                    .and_then(|v| v.as_str())
+                    .context("correction path")?;
+                corrections.push(CorrectionEntry {
+                    config: e.get("config").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                    tag: e
+                        .get("tag")
+                        .and_then(|v| v.as_str())
+                        .context("correction tag")?
+                        .to_string(),
+                    path: dir.join(rel),
+                    seed: e.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+                    seqs: e.get("seqs").and_then(|v| v.as_usize()).unwrap_or(0),
+                    seq_len: e.get("seq_len").and_then(|v| v.as_usize()).unwrap_or(0),
+                });
+            }
+        }
         Ok(ArtifactManifest {
             vocab: need(&["model", "vocab"])? as usize,
             d_model: need(&["model", "d_model"])? as usize,
@@ -98,7 +138,13 @@ impl ArtifactManifest {
             fp_ppl: need(&["fp_ppl"]).unwrap_or(0.0),
             quant_configs,
             artifacts,
+            corrections,
         })
+    }
+
+    /// The manifest's correction entry for a config tag, when one exists.
+    pub fn correction_for_tag(&self, tag: &str) -> Option<&CorrectionEntry> {
+        self.corrections.iter().find(|c| c.tag == tag)
     }
 
     /// Which quant tag an artifact name refers to (e.g. `model_w2sa8_decode`
@@ -112,6 +158,27 @@ impl ArtifactManifest {
             Some(tag)
         }
     }
+}
+
+/// Insert or replace the `corrections` manifest entry for `entry.tag` in
+/// a parsed manifest object, storing `rel_path` as the pack path (the
+/// `calibrate` CLI rewrites `manifest.json` through this, leaving every
+/// other field untouched). No-op on a non-object root.
+pub fn upsert_correction(manifest: &mut Json, entry: &CorrectionEntry, rel_path: &str) {
+    let Json::Obj(m) = manifest else { return };
+    let arr = m
+        .entry("corrections".to_string())
+        .or_insert_with(|| Json::Arr(Vec::new()));
+    let Json::Arr(a) = arr else { return };
+    a.retain(|e| e.get("tag").and_then(|v| v.as_str()) != Some(entry.tag.as_str()));
+    a.push(crate::util::json::obj(vec![
+        ("config", crate::util::json::s(&entry.config)),
+        ("tag", crate::util::json::s(&entry.tag)),
+        ("path", crate::util::json::s(rel_path)),
+        ("seed", crate::util::json::num(entry.seed as f64)),
+        ("seqs", crate::util::json::num(entry.seqs as f64)),
+        ("seq_len", crate::util::json::num(entry.seq_len as f64)),
+    ]));
 }
 
 /// Classified artifact input.
@@ -238,6 +305,42 @@ mod tests {
             input_spec("tokens", &m).unwrap(),
             InputKind::Tokens { shape: vec![1, 128] }
         );
+    }
+
+    #[test]
+    fn corrections_parse_and_upsert_roundtrip() {
+        // a manifest without the section parses to an empty list
+        let m = manifest();
+        assert!(m.corrections.is_empty());
+        assert!(m.correction_for_tag("w2sa8").is_none());
+        // upsert into the raw json, reparse, find it
+        let text = r#"{
+            "model": {"vocab": 512, "d_model": 256, "n_layers": 4,
+                      "n_heads": 8, "d_ff": 704, "max_seq": 256,
+                      "rope_base": 10000.0},
+            "prefill_seq": 128, "decode_batch": 1, "fp_ppl": 10.0
+        }"#;
+        let mut j = Json::parse(text).unwrap();
+        let entry = CorrectionEntry {
+            config: "w2*a8".into(),
+            tag: "w2sa8".into(),
+            path: PathBuf::new(),
+            seed: 7,
+            seqs: 8,
+            seq_len: 64,
+        };
+        upsert_correction(&mut j, &entry, "corrections.w2sa8.abqw");
+        // replacing the same tag does not duplicate
+        upsert_correction(&mut j, &entry, "corrections.w2sa8.abqw");
+        let reparsed = Json::parse(&j.to_string_pretty()).unwrap();
+        let m2 = ArtifactManifest::from_json(&reparsed, Path::new("/tmp/art")).unwrap();
+        assert_eq!(m2.corrections.len(), 1);
+        let got = m2.correction_for_tag("w2sa8").unwrap();
+        assert_eq!(got.config, "w2*a8");
+        assert_eq!(got.seed, 7);
+        assert_eq!(got.seqs, 8);
+        assert_eq!(got.seq_len, 64);
+        assert_eq!(got.path, Path::new("/tmp/art").join("corrections.w2sa8.abqw"));
     }
 
     #[test]

@@ -2,13 +2,19 @@
 //! with the pallas L1 kernel lowered in). See /opt/xla-example/README.md
 //! for the HLO-text interchange rationale.
 
+// The manifest grammar (artifacts, quant configs, calibration
+// corrections) is shared with the pure-Rust native path, so it compiles
+// unconditionally; only the executor binds to xla-rs.
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 
-pub use artifacts::{ArtifactManifest, InputKind};
+pub use artifacts::{ArtifactManifest, CorrectionEntry, InputKind};
+#[cfg(feature = "pjrt")]
 pub use engine::{KvState, PjrtEngine, Program};
 
 /// Quick health check used by `abq-llm info`.
+#[cfg(feature = "pjrt")]
 pub fn pjrt_cpu_ok() -> bool {
     xla::PjRtClient::cpu().is_ok()
 }

@@ -2,12 +2,30 @@
 //! build). No shrinking — on failure it reports the failing case number and
 //! seed so the case can be replayed deterministically.
 
+use std::sync::OnceLock;
+
 use super::rng::SplitMix;
 
 pub const DEFAULT_CASES: usize = 64;
 
-/// Run `f(rng)` for `cases` deterministic cases; panic with seed on failure.
+/// Case-count override from `ABQ_PROP_CASES`: when the variable holds a
+/// positive integer, every [`check`] runs that many cases instead of its
+/// compiled-in default (unset / unparsable → defaults unchanged). CI's
+/// deep-property job sets it high; local `cargo test` stays fast.
+fn case_override() -> Option<usize> {
+    static OVERRIDE: OnceLock<Option<usize>> = OnceLock::new();
+    *OVERRIDE.get_or_init(|| {
+        std::env::var("ABQ_PROP_CASES")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+    })
+}
+
+/// Run `f(rng)` for `cases` deterministic cases (or the `ABQ_PROP_CASES`
+/// override); panic with seed on failure.
 pub fn check<F: FnMut(&mut SplitMix)>(name: &str, cases: usize, mut f: F) {
+    let cases = case_override().unwrap_or(cases);
     for case in 0..cases {
         let seed = 0x5EED_0000u64 + case as u64;
         let mut rng = SplitMix::new(seed);

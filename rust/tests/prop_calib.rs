@@ -1,0 +1,222 @@
+//! Differential golden-reference harness for the DLC calibration
+//! pipeline (ISSUE 4 tentpole):
+//!
+//! * identity-initialized corrections are **bit-identical** to the
+//!   uncorrected engine across w2*a8 / w4a4 / w8a8 × dense / paged
+//!   (fp32 and int8) KV, at the model layer and through the full
+//!   `EngineBuilder` stack;
+//! * calibrated w2*a8 strictly reduces block-output MSE on the
+//!   calibration corpus **and** end-to-end NLL / perplexity on the
+//!   seeded synthetic model, vs the uncalibrated engine — asserted, not
+//!   eyeballed;
+//! * learned corrections survive the persistence round-trip (pack bytes
+//!   → reload) with bit-identical engine output.
+
+use abq_llm::calib::synthetic::{eval_nll, synthetic_trained};
+use abq_llm::calib::{calibrate, CalibOptions};
+use abq_llm::engine::{
+    AbqBackend, EngineBuilder, EngineSession, Fp32Backend, InferenceEngine, KvCacheConfig,
+    NativeEngine,
+};
+use abq_llm::model::{
+    KvCache, ModelConfig, Transformer, WeightPack, LINEAR_NAMES,
+};
+use abq_llm::quant::{Correction, CorrectionSet, WAConfig};
+
+const MICRO: ModelConfig = ModelConfig {
+    name: "micro",
+    vocab: 32,
+    d_model: 16,
+    n_layers: 2,
+    n_heads: 2,
+    d_ff: 32,
+    max_seq: 32,
+    rope_base: 10000.0,
+};
+
+/// Identity corrections for every projection of `cfg`.
+fn identity_set(cfg: &ModelConfig, tag: &str) -> CorrectionSet {
+    let mut set = CorrectionSet::new(tag);
+    for li in 0..cfg.n_layers {
+        for name in LINEAR_NAMES {
+            let in_f = if name == "down" { cfg.d_ff } else { cfg.d_model };
+            set.insert(li, name, Correction::identity(in_f));
+        }
+    }
+    set
+}
+
+#[test]
+fn identity_correction_is_bit_identical_at_the_model_layer_dense_kv() {
+    // dense KV: drive the Transformer directly with the reference cache
+    for cfg_str in ["w2*a8", "w4a4", "w8a8"] {
+        let wa: WAConfig = cfg_str.parse().unwrap();
+        let backend = AbqBackend::new(wa);
+        let plain = Transformer::random(MICRO, &backend, 31).unwrap();
+        let set = identity_set(&MICRO, &wa.tag());
+        let ident = Transformer::random_corrected(MICRO, &backend, 31, Some(&set)).unwrap();
+        let prompt = [1u32, 7, 13, 2, 28, 9];
+        let mut c1 = KvCache::new(&MICRO);
+        let mut c2 = KvCache::new(&MICRO);
+        let l1 = plain.prefill(&prompt, &mut c1).unwrap();
+        let l2 = ident.prefill(&prompt, &mut c2).unwrap();
+        assert_eq!(l1, l2, "{cfg_str} dense prefill");
+        for step in 0..5u32 {
+            let tok = (step * 11 + 3) % MICRO.vocab as u32;
+            let mut b1 = [&mut c1];
+            let s1 = plain.decode_step(&[tok], &mut b1).unwrap();
+            let mut b2 = [&mut c2];
+            let s2 = ident.decode_step(&[tok], &mut b2).unwrap();
+            assert_eq!(s1, s2, "{cfg_str} dense decode step {step}");
+        }
+    }
+}
+
+#[test]
+fn identity_correction_is_bit_identical_through_the_engine_paged_kv() {
+    // paged KV (fp32 passthrough and quantized int8 pages) through the
+    // full EngineBuilder → NativeEngine → session stack
+    for cfg_str in ["w2*a8", "w4a4", "w8a8"] {
+        let wa: WAConfig = cfg_str.parse().unwrap();
+        for kv_bits in [32u8, 8] {
+            let kv = KvCacheConfig { bits: kv_bits, block_size: 4 };
+            let plain = EngineBuilder::new()
+                .random_weights(MICRO, 47)
+                .backend(format!("abq:{cfg_str}"))
+                .kv_cache(kv)
+                .build()
+                .unwrap();
+            let ident = EngineBuilder::new()
+                .random_weights(MICRO, 47)
+                .backend(format!("abq:{cfg_str}"))
+                .kv_cache(kv)
+                .correction(identity_set(&MICRO, &wa.tag()))
+                .build()
+                .unwrap();
+            let prompt = [3u32, 19, 4, 11];
+            let mut s1 = plain.new_session().unwrap();
+            let mut s2 = ident.new_session().unwrap();
+            let l1 = plain.prefill(&prompt, s1.as_mut()).unwrap();
+            let l2 = ident.prefill(&prompt, s2.as_mut()).unwrap();
+            assert_eq!(l1, l2, "{cfg_str} kv{kv_bits} prefill");
+            for step in 0..6u32 {
+                let tok = (step * 7 + 2) % MICRO.vocab as u32;
+                let mut r1: [&mut dyn EngineSession; 1] = [s1.as_mut()];
+                let a = plain.decode_step(&[tok], &mut r1).unwrap();
+                let mut r2: [&mut dyn EngineSession; 1] = [s2.as_mut()];
+                let b = ident.decode_step(&[tok], &mut r2).unwrap();
+                assert_eq!(a, b, "{cfg_str} kv{kv_bits} decode step {step}");
+            }
+        }
+    }
+}
+
+fn calib_opts() -> CalibOptions {
+    CalibOptions {
+        seqs: 6,
+        seq_len: 24,
+        seed: 0xCA11B,
+        lambda_attn: 1.0,
+        refine_channels: 8,
+        max_eval_rows: 48,
+        rounds: 2,
+    }
+}
+
+#[test]
+fn calibrated_w2sa8_strictly_reduces_block_mse_and_nll() {
+    let wa: WAConfig = "w2*a8".parse().unwrap();
+    let sm = synthetic_trained(32, 2, 7);
+    let result = calibrate(&sm.pack, &sm.cfg, wa, &calib_opts()).unwrap();
+
+    // block-output MSE: never worse per block (the selection guard), and
+    // strictly better in total — the acceptance-criterion assertion
+    for b in &result.blocks {
+        assert!(
+            b.obj_calibrated <= b.obj_identity,
+            "block {} objective regressed: {} > {}",
+            b.block,
+            b.obj_calibrated,
+            b.obj_identity
+        );
+    }
+    let (before, after) = (result.total_mse_identity(), result.total_mse_calibrated());
+    assert!(
+        after < before,
+        "calibration must strictly reduce total block-output MSE ({after} !< {before})"
+    );
+    assert!(result.set.non_identity() > 0, "no correction was learned at w2*");
+
+    // end-to-end: NLL / perplexity on held-out synthetic sequences
+    let backend = AbqBackend::new(wa);
+    let uncal = NativeEngine::new(
+        Transformer::from_pack(&sm.pack, sm.cfg, &backend).unwrap(),
+    );
+    let cal = NativeEngine::new(
+        Transformer::from_pack_corrected(&sm.pack, sm.cfg, &backend, Some(&result.set))
+            .unwrap(),
+    );
+    let fp = NativeEngine::new(
+        Transformer::from_pack(&sm.pack, sm.cfg, &Fp32Backend).unwrap(),
+    );
+    let (seqs, len, seed) = (16usize, 24usize, 0xE7A1u64);
+    let nll_fp = eval_nll(&fp, seqs, len, seed).unwrap();
+    let nll_uncal = eval_nll(&uncal, seqs, len, seed).unwrap();
+    let nll_cal = eval_nll(&cal, seqs, len, seed).unwrap();
+    // sanity: coarse quantization hurts the fp model at all
+    assert!(nll_uncal > nll_fp, "w2* should cost NLL: {nll_uncal} vs fp {nll_fp}");
+    // the acceptance-criterion assertion: calibrated beats uncalibrated
+    assert!(
+        nll_cal < nll_uncal,
+        "calibrated w2*a8 must beat uncalibrated: NLL {nll_cal} !< {nll_uncal}"
+    );
+    let (ppl_cal, ppl_uncal) = (nll_cal.exp(), nll_uncal.exp());
+    assert!(
+        ppl_cal < ppl_uncal,
+        "calibrated perplexity {ppl_cal} !< uncalibrated {ppl_uncal}"
+    );
+}
+
+#[test]
+fn calibration_is_deterministic() {
+    let wa: WAConfig = "w2*a8".parse().unwrap();
+    let sm = synthetic_trained(16, 1, 3);
+    let opts = CalibOptions { seqs: 4, seq_len: 16, refine_channels: 4, ..calib_opts() };
+    let a = calibrate(&sm.pack, &sm.cfg, wa, &opts).unwrap();
+    let b = calibrate(&sm.pack, &sm.cfg, wa, &opts).unwrap();
+    assert_eq!(a.set.len(), b.set.len());
+    for ((key, ca), (_, cb)) in a.set.iter().zip(b.set.iter()) {
+        assert_eq!(ca, cb, "correction {key:?} differs across identical runs");
+    }
+    assert_eq!(a.total_mse_calibrated(), b.total_mse_calibrated());
+}
+
+#[test]
+fn persisted_corrections_reload_bit_identically() {
+    let wa: WAConfig = "w2*a8".parse().unwrap();
+    let sm = synthetic_trained(16, 1, 11);
+    let opts = CalibOptions { seqs: 4, seq_len: 16, refine_channels: 4, ..calib_opts() };
+    let result = calibrate(&sm.pack, &sm.cfg, wa, &opts).unwrap();
+
+    // round-trip through the .abqw wire format
+    let bytes = result.set.to_pack().to_bytes();
+    let reloaded =
+        CorrectionSet::from_pack(&WeightPack::parse(&bytes).unwrap(), &wa.tag()).unwrap();
+    assert_eq!(reloaded.len(), result.set.len());
+
+    let backend = AbqBackend::new(wa);
+    let orig = NativeEngine::new(
+        Transformer::from_pack_corrected(&sm.pack, sm.cfg, &backend, Some(&result.set))
+            .unwrap(),
+    );
+    let back = NativeEngine::new(
+        Transformer::from_pack_corrected(&sm.pack, sm.cfg, &backend, Some(&reloaded))
+            .unwrap(),
+    );
+    let prompt: Vec<u32> = (0..10).map(|i| (i * 3 + 1) % 16).collect();
+    let mut s1 = orig.new_session().unwrap();
+    let mut s2 = back.new_session().unwrap();
+    let l1 = orig.prefill(&prompt, s1.as_mut()).unwrap();
+    let l2 = back.prefill(&prompt, s2.as_mut()).unwrap();
+    assert_eq!(l1, l2, "reloaded corrections must reproduce the engine bit-for-bit");
+}

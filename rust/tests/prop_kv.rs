@@ -4,11 +4,13 @@
 //! the dense reference cache, and quantized (int8/int4) KV keeps the tiny
 //! model's logits within tolerance of fp32.
 
-use abq_llm::engine::{EngineBuilder, EngineSession, Fp32Backend, InferenceEngine};
+use abq_llm::engine::{generate, EngineBuilder, EngineSession, Fp32Backend, InferenceEngine};
 use abq_llm::model::{
     KvCache, KvCacheConfig, KvPool, KvStore, ModelConfig, PagedKvCache, Transformer,
 };
 use abq_llm::util::prop::{check, usize_in};
+use abq_llm::util::rng::SplitMix;
+use anyhow::Result;
 
 const MICRO: ModelConfig = ModelConfig {
     name: "micro",
@@ -139,46 +141,238 @@ fn paged_engine_matches_direct_dense_path() {
     assert_eq!(engine.memory_report().kv_pool_used_bytes, 0);
 }
 
+// ---------------------------------------------------------------------------
+// derived quantized-KV tolerances (ISSUE 4 satellite: replace the magic
+// constants flagged in the PR 3 caveat)
+// ---------------------------------------------------------------------------
+
+/// Dense fp32 cache that records, per `(layer, head, side)`, the max
+/// |value| ever written — the quantity the paged quantizer's per-block
+/// scales are bounded by (`scale = absmax / (2^{b-1} - 1)`, monotone
+/// growth, `kv_pool.rs`).
+struct RecordingKv {
+    inner: KvCache,
+    head_dim: usize,
+    k_absmax: Vec<f32>,
+    v_absmax: Vec<f32>,
+}
+
+impl RecordingKv {
+    fn new(cfg: &ModelConfig) -> Self {
+        RecordingKv {
+            inner: KvCache::new(cfg),
+            head_dim: cfg.head_dim(),
+            k_absmax: vec![0.0; cfg.n_layers * cfg.n_heads],
+            v_absmax: vec![0.0; cfg.n_layers * cfg.n_heads],
+        }
+    }
+}
+
+impl KvStore for RecordingKv {
+    fn pos(&self) -> usize {
+        KvStore::pos(&self.inner)
+    }
+    fn set_pos(&mut self, pos: usize) {
+        self.inner.set_pos(pos)
+    }
+    fn remaining(&self) -> usize {
+        KvStore::remaining(&self.inner)
+    }
+    fn reserve(&mut self, additional: usize) -> Result<()> {
+        self.inner.reserve(additional)
+    }
+    fn write_row(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        let heads = k_row.len() / self.head_dim;
+        for h in 0..heads {
+            let seg = h * self.head_dim..(h + 1) * self.head_dim;
+            let ka = k_row[seg.clone()].iter().fold(0f32, |m, &x| m.max(x.abs()));
+            let va = v_row[seg].iter().fold(0f32, |m, &x| m.max(x.abs()));
+            let si = layer * heads + h;
+            self.k_absmax[si] = self.k_absmax[si].max(ka);
+            self.v_absmax[si] = self.v_absmax[si].max(va);
+        }
+        self.inner.write_row(layer, pos, k_row, v_row);
+    }
+    fn gather_k(&self, layer: usize, upto: usize, out: &mut [f32]) {
+        self.inner.gather_k(layer, upto, out)
+    }
+    fn gather_v(&self, layer: usize, upto: usize, out: &mut [f32]) {
+        self.inner.gather_v(layer, upto, out)
+    }
+}
+
+/// Dense fp32 cache whose reads carry a deterministic per-element
+/// perturbation bounded by the per-`(layer, head)` quantization-step
+/// bound `eps` — the worst case the paged quantizer can inflict on a
+/// stored row (≤ δ/2 rounding + ≤ δ/2 requantization drift). Running
+/// the model over this store measures how KV-storage error of exactly
+/// that magnitude propagates into logits, which is what the quantized
+/// tolerance must be derived from.
+struct PerturbedKv {
+    inner: KvCache,
+    head_dim: usize,
+    k_eps: Vec<f32>,
+    v_eps: Vec<f32>,
+    noise_seed: u64,
+}
+
+impl PerturbedKv {
+    fn noise(&self, side: u64, layer: usize, pos: usize, col: usize) -> f32 {
+        let key = self.noise_seed
+            ^ (side << 61)
+            ^ ((layer as u64) << 42)
+            ^ ((pos as u64) << 21)
+            ^ col as u64;
+        let mut r = SplitMix::new(key);
+        (r.next_f64() as f32) * 2.0 - 1.0
+    }
+
+    fn perturb(&self, side: u64, eps: &[f32], layer: usize, upto: usize, out: &mut [f32]) {
+        let d = self.inner.d_model;
+        for p in 0..upto {
+            for c in 0..d {
+                let e = eps[layer * (d / self.head_dim) + c / self.head_dim];
+                out[p * d + c] += self.noise(side, layer, p, c) * e;
+            }
+        }
+    }
+}
+
+impl KvStore for PerturbedKv {
+    fn pos(&self) -> usize {
+        KvStore::pos(&self.inner)
+    }
+    fn set_pos(&mut self, pos: usize) {
+        self.inner.set_pos(pos)
+    }
+    fn remaining(&self) -> usize {
+        KvStore::remaining(&self.inner)
+    }
+    fn reserve(&mut self, additional: usize) -> Result<()> {
+        self.inner.reserve(additional)
+    }
+    fn write_row(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        self.inner.write_row(layer, pos, k_row, v_row);
+    }
+    fn gather_k(&self, layer: usize, upto: usize, out: &mut [f32]) {
+        self.inner.gather_k(layer, upto, out);
+        self.perturb(0, &self.k_eps, layer, upto, out);
+    }
+    fn gather_v(&self, layer: usize, upto: usize, out: &mut [f32]) {
+        self.inner.gather_v(layer, upto, out);
+        self.perturb(1, &self.v_eps, layer, upto, out);
+    }
+}
+
 #[test]
-fn quantized_kv_logits_within_tolerance_of_fp32() {
+fn quantized_kv_logits_within_derived_tolerance_of_fp32() {
+    // safety factor over the empirical bounded-perturbation response:
+    // the quantizer's error is deterministic and can correlate across
+    // elements where the uniform draws cancel
+    const SAFETY: f32 = 8.0;
+
     let model = Transformer::random(MICRO, &Fp32Backend, 31).unwrap();
     let prompt: Vec<u32> = (0..10).map(|i| ((i * 11 + 2) % MICRO.vocab) as u32).collect();
-    let run = |bits: u8| -> Vec<f32> {
-        let pool =
-            KvPool::new(&MICRO, &KvCacheConfig { bits, block_size: 4 }, None).unwrap();
-        let mut cache = pool.new_cache();
-        let mut logits = model.prefill(&prompt, &mut cache).unwrap();
-        for step in 0..6u32 {
-            let tok = (step * 13 + 3) % MICRO.vocab as u32;
-            let mut b = [&mut cache];
+    let steps: Vec<u32> = (0..6).map(|s| (s * 13 + 3) % MICRO.vocab as u32).collect();
+
+    fn drive<C: KvStore>(model: &Transformer, prompt: &[u32], steps: &[u32], c: &mut C) -> Vec<f32> {
+        let mut logits = model.prefill(prompt, c).unwrap();
+        for &tok in steps {
+            let mut b = [&mut *c];
             logits = model.decode_step(&[tok], &mut b).unwrap();
         }
         logits
+    }
+
+    // fp32 reference + the per-(layer, head) absmax the scales derive from
+    let mut rec = RecordingKv::new(&MICRO);
+    let fp = drive(&model, &prompt, &steps, &mut rec);
+
+    let run_paged = |bits: u8| -> Vec<f32> {
+        let pool =
+            KvPool::new(&MICRO, &KvCacheConfig { bits, block_size: 4 }, None).unwrap();
+        let mut cache = pool.new_cache();
+        drive(&model, &prompt, &steps, &mut cache)
     };
-    let fp = run(32);
-    let max_abs = fp.iter().map(|v| v.abs()).fold(0f32, f32::max);
-    let mean_abs = fp.iter().map(|v| v.abs()).sum::<f32>() / fp.len() as f32;
+
     let mut prev_mean_err = 0f32;
-    for (bits, max_tol, mean_tol) in [(8u8, 0.15f32, 0.05f32), (4, 0.80, 0.30)] {
-        let q = run(bits);
+    for bits in [8u8, 4] {
+        // per-element KV error bound from the quantization-scale bound
+        let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+        let k_eps: Vec<f32> = rec.k_absmax.iter().map(|a| a / qmax).collect();
+        let v_eps: Vec<f32> = rec.v_absmax.iter().map(|a| a / qmax).collect();
+
+        // empirical logit response to eps-bounded KV perturbations
+        let (mut max_resp, mut mean_resp) = (0f32, 0f32);
+        for noise_seed in [0xD1u64, 0xD2, 0xD3] {
+            let mut pert = PerturbedKv {
+                inner: KvCache::new(&MICRO),
+                head_dim: MICRO.head_dim(),
+                k_eps: k_eps.clone(),
+                v_eps: v_eps.clone(),
+                noise_seed,
+            };
+            let pl = drive(&model, &prompt, &steps, &mut pert);
+            let max_d = fp.iter().zip(&pl).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+            let mean_d =
+                fp.iter().zip(&pl).map(|(a, b)| (a - b).abs()).sum::<f32>() / fp.len() as f32;
+            max_resp = max_resp.max(max_d);
+            mean_resp = mean_resp.max(mean_d);
+        }
+        let max_tol = SAFETY * max_resp + 1e-6;
+        let mean_tol = SAFETY * mean_resp + 1e-7;
+
+        let q = run_paged(bits);
         let max_err = fp.iter().zip(&q).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
-        let mean_err = fp.iter().zip(&q).map(|(a, b)| (a - b).abs()).sum::<f32>()
-            / fp.len() as f32;
+        let mean_err =
+            fp.iter().zip(&q).map(|(a, b)| (a - b).abs()).sum::<f32>() / fp.len() as f32;
         assert!(
-            max_err / max_abs < max_tol,
-            "int{bits} KV max rel err {} ≥ {max_tol}",
-            max_err / max_abs
+            max_err <= max_tol,
+            "int{bits} KV max err {max_err} > derived tolerance {max_tol} \
+             (perturbation response {max_resp})"
         );
         assert!(
-            mean_err / mean_abs < mean_tol,
-            "int{bits} KV mean rel err {} ≥ {mean_tol}",
-            mean_err / mean_abs
+            mean_err <= mean_tol,
+            "int{bits} KV mean err {mean_err} > derived tolerance {mean_tol}"
         );
         // quantization really happened, and int4 is noisier than int8
         assert!(max_err > 0.0, "int{bits} KV produced bit-identical logits");
         assert!(mean_err >= prev_mean_err, "int4 should not beat int8");
         prev_mean_err = mean_err;
     }
+}
+
+#[test]
+fn same_seed_and_config_give_identical_token_streams() {
+    // cross-session / cross-engine determinism: two engines built with
+    // the same seed + config, and two sessions of one engine, must emit
+    // identical greedy streams
+    let build = || {
+        EngineBuilder::new()
+            .random_weights(MICRO, 83)
+            .backend("abq:w2*a8")
+            .kv_cache(KvCacheConfig { bits: 8, block_size: 4 })
+            .build()
+            .unwrap()
+    };
+    let e1 = build();
+    let e2 = build();
+    let prompt = [5u32, 12, 3, 27];
+    let a = generate(e1.as_ref(), &prompt, 12).unwrap();
+    let b = generate(e2.as_ref(), &prompt, 12).unwrap();
+    assert_eq!(a, b, "identical seed + config must reproduce the stream");
+    // a second run on the same engine (fresh session) reproduces too
+    let c = generate(e1.as_ref(), &prompt, 12).unwrap();
+    assert_eq!(a, c, "fresh session on the same engine must reproduce the stream");
+    // a different seed genuinely changes the stream (the test has teeth)
+    let other = EngineBuilder::new()
+        .random_weights(MICRO, 84)
+        .backend("abq:w2*a8")
+        .kv_cache(KvCacheConfig { bits: 8, block_size: 4 })
+        .build()
+        .unwrap();
+    let d = generate(other.as_ref(), &prompt, 12).unwrap();
+    assert_ne!(a, d, "different weight seed should change the greedy stream");
 }
 
 #[test]
