@@ -9,10 +9,16 @@
 //! step). With `ABQ_RECORD=<label>` set, appends a run entry to
 //! `../BENCH_decode.json` so the perf trajectory is recorded in-repo —
 //! `scripts/record_decode_bench.sh pre|post` wraps this.
+//!
+//! `ABQ_SPEC=w2*a8:4` adds a self-speculative rung (draft config : k,
+//! target `ABQ_SPEC_TARGET`, default `abq:w8a8`): greedy speculative
+//! generation measured in tokens/s, with the acceptance rate recorded
+//! alongside the vanilla rows so the artifact shows both
+//! (`docs/SPECULATIVE.md`). CI's bench-smoke job sets it on every PR.
 
 use std::time::Instant;
 
-use abq_llm::engine::{EngineBuilder, EngineSession, InferenceEngine, KvCacheConfig};
+use abq_llm::engine::{EngineBuilder, EngineSession, InferenceEngine, KvCacheConfig, SpecConfig};
 use abq_llm::model::ModelConfig;
 use abq_llm::util::bench::write_results;
 use abq_llm::util::json::{num, obj, s, Json};
@@ -151,6 +157,87 @@ fn main() {
     if let (Some(w2), Some(i8t)) = (w2_tok_s, int8_tok_s) {
         println!("\nabq:w2*a8 vs int8 (SmoothQuant engine): {:.2}x", w2 / i8t);
     }
+
+    // self-speculative rung: ABQ_SPEC=<draft>:<k> (vanilla target rows
+    // above are the baseline the acceptance math compares against)
+    if let Some(spec_str) = std::env::var("ABQ_SPEC").ok().filter(|v| !v.is_empty()) {
+        let sc: SpecConfig = spec_str
+            .parse()
+            .unwrap_or_else(|e| panic!("ABQ_SPEC '{spec_str}': {e}"));
+        let target =
+            std::env::var("ABQ_SPEC_TARGET").unwrap_or_else(|_| "abq:w8a8".to_string());
+        let engine = EngineBuilder::new()
+            .random_weights(BENCH_MODEL, 42)
+            .backend(target.as_str())
+            .kv_cache(kv)
+            .speculative(sc)
+            .build()
+            .unwrap_or_else(|e| panic!("{target}+spec: {e}"));
+        let (tok_s, stats) = measure_spec(engine.as_ref(), steps, samples);
+        let label = format!("{target}+spec({}:{})", sc.draft, sc.k);
+        println!(
+            "\n{:<28} {:>10.1} tok/s  acceptance {:>5.1}% ({} rounds)",
+            label,
+            tok_s,
+            stats.acceptance_rate() * 100.0,
+            stats.rounds
+        );
+        rows.push(obj(vec![
+            ("backend", s(&label)),
+            ("tok_s", num(tok_s)),
+            ("speculative", Json::Bool(true)),
+            ("spec_draft", s(&sc.draft.to_string())),
+            ("spec_k", num(sc.k as f64)),
+            ("accept_rate", num(stats.acceptance_rate())),
+            ("drafted", num(stats.drafted as f64)),
+            ("accepted", num(stats.accepted as f64)),
+        ]));
+    }
+
     write_results("decode_hotpath", &Json::Arr(rows.clone()));
     record(&rows, steps, kv_bits);
+}
+
+/// Speculative counterpart of [`measure`], kept comparable to the
+/// vanilla rows: per sample, a fresh session is prefilled and warmed
+/// (arena growth, kernel search, draft pool) *outside* the timed
+/// region, then only steady-state speculative rounds are timed;
+/// tokens/s is the best of `samples`. Acceptance stats aggregate over
+/// the timed rounds.
+fn measure_spec(
+    engine: &dyn InferenceEngine,
+    steps: usize,
+    samples: usize,
+) -> (f64, abq_llm::spec::SpecStats) {
+    use abq_llm::model::{Sampler, Sampling};
+    let v = engine.spec().model.vocab;
+    let mut best_tok_s = 0f64;
+    let mut stats = abq_llm::spec::SpecStats::default();
+    for _ in 0..samples {
+        let mut sess = engine.new_session().unwrap();
+        let logits = engine.prefill(&PROMPT, sess.as_mut()).unwrap();
+        let mut sampler = Sampler::new(Sampling::Greedy, 0);
+        let mut tok = sampler.sample(&logits[(PROMPT.len() - 1) * v..PROMPT.len() * v]);
+        let round = |tok: u32, sampler: &mut Sampler, sess: &mut Box<dyn EngineSession>| {
+            let mut refs: [&mut dyn EngineSession; 1] = [sess.as_mut()];
+            let mut samplers = [&mut *sampler];
+            engine.spec_round(&[tok], &mut refs, &mut samplers).unwrap().remove(0)
+        };
+        // warm-up rounds, untimed
+        for _ in 0..2 {
+            let o = round(tok, &mut sampler, &mut sess);
+            tok = *o.tokens.last().unwrap();
+        }
+        let t0 = Instant::now();
+        let mut emitted = 0usize;
+        while emitted < steps {
+            let o = round(tok, &mut sampler, &mut sess);
+            tok = *o.tokens.last().unwrap();
+            emitted += o.tokens.len();
+            stats.absorb(&o);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        best_tok_s = best_tok_s.max(emitted as f64 / secs.max(1e-12));
+    }
+    (best_tok_s, stats)
 }

@@ -85,6 +85,25 @@ fn decode_share_us(total: u64, n: u64, i: usize) -> u64 {
     total / n + u64::from((i as u64) < total % n)
 }
 
+/// Sequence `i`'s share of a speculative step's `total` µs, proportional
+/// to `weights[i]` — the tokens that sequence actually *committed* this
+/// step, so a sequence whose drafts were all rejected is not billed as if
+/// it had decoded k + 1 tokens. Exact-sum preserving via cumulative
+/// rounding: `share_i = ⌊total·W_{≤i}/W⌋ − ⌊total·W_{<i}/W⌋`, which
+/// telescopes back to `total`. A zero total weight falls back to the
+/// uniform [`decode_share_us`] split.
+fn decode_share_weighted_us(total: u64, weights: &[u64], i: usize) -> u64 {
+    let w: u64 = weights.iter().sum();
+    if w == 0 {
+        return decode_share_us(total, weights.len().max(1) as u64, i);
+    }
+    let before: u64 = weights[..i].iter().sum();
+    let upto = before + weights[i];
+    // u128: total · W can overflow u64 at large token counts
+    ((total as u128 * upto as u128 / w as u128) - (total as u128 * before as u128 / w as u128))
+        as u64
+}
+
 pub struct SchedulerConfig {
     pub max_active: usize,
 }
@@ -104,6 +123,10 @@ pub struct Scheduler {
     finished: Vec<Response>,
     admit_counter: u64,
     preemptions: u64,
+    /// draft tokens proposed / accepted across all speculative rounds
+    /// (serving metrics: the acceptance-rate gauges)
+    spec_drafted: u64,
+    spec_accepted: u64,
 }
 
 impl Scheduler {
@@ -116,6 +139,8 @@ impl Scheduler {
             finished: Vec::new(),
             admit_counter: 0,
             preemptions: 0,
+            spec_drafted: 0,
+            spec_accepted: 0,
         }
     }
 
@@ -139,8 +164,16 @@ impl Scheduler {
         self.preemptions
     }
 
+    /// `(drafted, accepted)` totals across all speculative rounds (zero
+    /// on non-speculative engines).
+    pub fn spec_counters(&self) -> (u64, u64) {
+        (self.spec_drafted, self.spec_accepted)
+    }
+
     /// Blocks the pool must have free to start a sequence of `tokens`
-    /// positions: the prompt plus one decode step of headroom.
+    /// positions: the prompt plus one decode step of headroom. On
+    /// speculative engines the draft prefill leases the same count from
+    /// the draft's own equal-budget pool, so this one check covers both.
     fn blocks_needed(&self, tokens: usize) -> Option<(usize, usize, usize)> {
         let st = self.engine.kv_pool_status()?;
         Some((st.blocks_for(tokens + 1), st.free_blocks, st.total_blocks))
@@ -244,9 +277,11 @@ impl Scheduler {
         Ok(())
     }
 
-    /// One batched decode step over all active sequences (resuming
-    /// preempted ones first when blocks allow, preempting when they
-    /// don't).
+    /// One batched step over all active sequences (resuming preempted
+    /// ones first when blocks allow, preempting when they don't): a
+    /// single-token decode on plain engines, a full speculative round
+    /// (draft batch + verify) on engines built with
+    /// `EngineBuilder::speculative`.
     pub fn step(&mut self) -> Result<()> {
         self.resume_preempted()?;
         if self.active.is_empty() {
@@ -254,10 +289,21 @@ impl Scheduler {
         }
         // retire sequences that already have enough tokens
         self.retire();
-        self.ensure_step_headroom();
+        // a speculative round writes up to k + 1 positions per sequence
+        // before rolling back, so its headroom lookahead is k + 1
+        let lookahead = self.engine.spec_config().map_or(1, |sc| sc.k + 1);
+        self.ensure_step_headroom(lookahead);
         if self.active.is_empty() {
             return Ok(());
         }
+        if self.engine.spec_config().is_some() {
+            self.spec_step()
+        } else {
+            self.vanilla_step()
+        }
+    }
+
+    fn vanilla_step(&mut self) -> Result<()> {
         let engine = self.engine.clone();
         let t0 = Instant::now();
         let tokens: Vec<u32> = self.active.iter().map(|a| a.last_token).collect();
@@ -274,6 +320,42 @@ impl Scheduler {
             a.generated.push(tok);
             a.last_token = tok;
             a.timing.decode_us += decode_share_us(step_us, n, bi);
+        }
+        self.retire();
+        Ok(())
+    }
+
+    /// One speculative round: every active sequence drafts, verifies and
+    /// commits 1..=k+1 tokens. Step time is attributed by *committed*
+    /// tokens per sequence, not uniformly, preserving the exact-sum
+    /// invariant ([`decode_share_weighted_us`]).
+    fn spec_step(&mut self) -> Result<()> {
+        let engine = self.engine.clone();
+        let t0 = Instant::now();
+        let tokens: Vec<u32> = self.active.iter().map(|a| a.last_token).collect();
+        let mut sessions: Vec<&mut dyn EngineSession> = Vec::with_capacity(self.active.len());
+        let mut samplers: Vec<&mut Sampler> = Vec::with_capacity(self.active.len());
+        for a in self.active.iter_mut() {
+            sessions.push(a.session.as_mut());
+            samplers.push(&mut a.sampler);
+        }
+        let outcomes = engine.spec_round(&tokens, &mut sessions, &mut samplers)?;
+        drop(sessions);
+        drop(samplers);
+        let step_us = t0.elapsed().as_micros() as u64;
+        let weights: Vec<u64> = outcomes.iter().map(|o| o.tokens.len() as u64).collect();
+        for (bi, (a, o)) in self.active.iter_mut().zip(&outcomes).enumerate() {
+            self.spec_drafted += o.drafted as u64;
+            self.spec_accepted += o.accepted as u64;
+            // a round can overshoot max_new by up to k; keep the prefix so
+            // the emitted stream is exactly vanilla's
+            for &tok in &o.tokens {
+                if a.generated.len() < a.max_new {
+                    a.generated.push(tok);
+                }
+            }
+            a.last_token = *o.tokens.last().expect("spec_round commits at least one token");
+            a.timing.decode_us += decode_share_weighted_us(step_us, &weights, bi);
         }
         self.retire();
         Ok(())
@@ -321,11 +403,16 @@ impl Scheduler {
         Ok(())
     }
 
-    /// Make sure the pool can hand a block to every active sequence whose
-    /// next write crosses a block boundary; preempt the youngest sequence
-    /// (releasing its blocks) until it can. A sole sequence that still
-    /// cannot get a block is finished with what it has.
-    fn ensure_step_headroom(&mut self) {
+    /// Make sure the pool can cover every active sequence advancing
+    /// `lookahead` positions (1 for vanilla decode; k + 1 for a
+    /// speculative round, whose verify pass transiently writes the whole
+    /// window); preempt the youngest sequence (releasing its blocks)
+    /// until it can. A sole sequence that still cannot get a block is
+    /// finished with what it has. The draft pool needs no separate
+    /// check: it has the same budget and block geometry, a draft cache
+    /// never runs ahead of its target cache, and the draft writes at
+    /// most `lookahead` rows per round too.
+    fn ensure_step_headroom(&mut self, lookahead: usize) {
         if self.engine.kv_pool_status().is_none() {
             return;
         }
@@ -333,11 +420,14 @@ impl Scheduler {
             // one status read per iteration (free_blocks changes as
             // preempted sessions drop their blocks)
             let Some(st) = self.engine.kv_pool_status() else { return };
-            let needed = self
+            let needed: usize = self
                 .active
                 .iter()
-                .filter(|a| a.session.pos() % st.block_size == 0)
-                .count();
+                .map(|a| {
+                    let pos = a.session.pos();
+                    st.blocks_for(pos + lookahead) - st.blocks_for(pos)
+                })
+                .sum();
             if needed <= st.free_blocks {
                 return;
             }
@@ -541,6 +631,97 @@ mod tests {
             0,
         );
         assert!(r.is_err(), "a prompt larger than the whole pool can never run");
+    }
+
+    #[test]
+    fn weighted_decode_timing_sums_exactly_and_tracks_accepted_tokens() {
+        // satellite: verify-step time is split by committed tokens per
+        // sequence, never uniformly, and the shares always sum back to
+        // the step's wall time exactly
+        let cases: &[(u64, &[u64])] = &[
+            (0, &[1, 1, 1]),
+            (7, &[1]),
+            (100, &[5, 1, 1]),
+            (99, &[2, 3, 4]),
+            (12345, &[1, 0, 7, 2]),
+            (17, &[0, 0, 0]), // degenerate: falls back to the uniform split
+            (u64::MAX / 3, &[3, 5]), // u128 path: no overflow
+        ];
+        for &(total, weights) in cases {
+            let shares: Vec<u64> = (0..weights.len())
+                .map(|i| decode_share_weighted_us(total, weights, i))
+                .collect();
+            assert_eq!(
+                shares.iter().sum::<u64>(),
+                total,
+                "shares of {total}µs over {weights:?} must sum back"
+            );
+            if weights.iter().sum::<u64>() > 0 {
+                // proportionality: a zero-weight sequence pays nothing and
+                // a strictly heavier sequence never pays less
+                for (i, &w) in weights.iter().enumerate() {
+                    if w == 0 {
+                        assert_eq!(shares[i], 0, "zero-commit sequence billed in {shares:?}");
+                    }
+                }
+                // exact proportionality up to 1µs of rounding, checked in
+                // integers: |share_i·W − total·w_i| < W
+                let w: u64 = weights.iter().sum();
+                for (i, &wi) in weights.iter().enumerate() {
+                    let lhs = shares[i] as u128 * w as u128;
+                    let rhs = total as u128 * wi as u128;
+                    assert!(
+                        lhs + w as u128 > rhs && rhs + w as u128 > lhs,
+                        "share {} of {shares:?} drifts from total·w/W",
+                        shares[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn speculative_scheduler_emits_exact_counts_and_counts_acceptance() {
+        // a speculative engine behind the scheduler: same request
+        // behavior as vanilla (exact token counts), acceptance counters
+        // move, and the streams match a vanilla engine at the same seed
+        let spec_engine: Arc<dyn InferenceEngine> = EngineBuilder::new()
+            .random_weights(MICRO, 11)
+            .backend("fp32")
+            .speculative("w2*a8:2".parse().unwrap())
+            .build_arc()
+            .unwrap();
+        let vanilla: Arc<dyn InferenceEngine> =
+            EngineBuilder::new().random_weights(MICRO, 11).backend("fp32").build_arc().unwrap();
+        let run = |engine: Arc<dyn InferenceEngine>| -> (Vec<Response>, (u64, u64)) {
+            let mut s = Scheduler::new(engine, SchedulerConfig { max_active: 3 });
+            for id in 0..3u64 {
+                let adm = s
+                    .admit(
+                        QueuedRequest {
+                            req: Request::new(id, vec![1, 2, 3 + id as u32], 6),
+                            arrived: Instant::now(),
+                        },
+                        id,
+                    )
+                    .unwrap();
+                assert!(matches!(adm, Admission::Admitted));
+            }
+            run_all(&mut s);
+            let mut done = s.take_finished();
+            done.sort_by_key(|r| r.id);
+            (done, s.spec_counters())
+        };
+        let (spec_done, (drafted, accepted)) = run(spec_engine);
+        let (van_done, (v_drafted, _)) = run(vanilla);
+        assert_eq!(spec_done.len(), 3);
+        for (sr, vr) in spec_done.iter().zip(&van_done) {
+            assert_eq!(sr.tokens.len(), 6, "exact token count under speculation");
+            assert_eq!(sr.tokens, vr.tokens, "greedy stream must match vanilla (id {})", sr.id);
+        }
+        assert!(drafted > 0, "speculative steps must draft");
+        assert!(accepted <= drafted);
+        assert_eq!(v_drafted, 0, "vanilla engine never drafts");
     }
 
     #[test]

@@ -260,6 +260,22 @@ fn worker_loop(
             );
             metrics.set_gauge(&format!("worker.{tag}.preemptions"), scheduler.preemption_count());
         }
+        // 3c. speculative-decoding acceptance gauges
+        if model.spec_config().is_some() {
+            let (drafted, accepted) = scheduler.spec_counters();
+            metrics.set_gauge(&format!("worker.{tag}.spec_drafted"), drafted);
+            metrics.set_gauge(&format!("worker.{tag}.spec_accepted"), accepted);
+            metrics.set_gauge(
+                &format!("worker.{tag}.spec_accept_rate_pct"),
+                if drafted > 0 { accepted * 100 / drafted } else { 0 },
+            );
+            if let Some(dp) = model.spec_draft_pool_status() {
+                metrics.set_gauge(
+                    &format!("worker.{tag}.spec_draft_blocks_used"),
+                    dp.used_blocks() as u64,
+                );
+            }
+        }
 
         // 4. deliver finished responses
         for resp in scheduler.take_finished() {
@@ -317,6 +333,38 @@ mod tests {
         // the native engine has a KV pool, so occupancy gauges must exist
         assert!(server.metrics.gauge("worker.fp16.kv_blocks_total") > 0);
         assert_eq!(server.metrics.gauge("worker.fp16.kv_blocks_used"), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn speculative_replica_serves_and_exports_acceptance_gauges() {
+        let engine = EngineBuilder::new()
+            .random_weights(MICRO, 9)
+            .backend("fp32")
+            .speculative("w2*a8:2".parse().unwrap())
+            .build_arc()
+            .unwrap();
+        let server = Server::start(
+            vec![("fp16".to_string(), engine)],
+            ServerConfig::default(),
+        )
+        .unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            let mut req = Request::new(0, vec![1, 2, (i % 30) as u32], 5);
+            req.config = "fp16".to_string();
+            rxs.push(server.submit(req));
+        }
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+            assert_eq!(resp.tokens.len(), 5);
+        }
+        assert_eq!(server.metrics.counter("worker.fp16.completed"), 4);
+        assert!(server.metrics.gauge("worker.fp16.spec_drafted") > 0);
+        assert!(
+            server.metrics.gauge("worker.fp16.spec_accepted")
+                <= server.metrics.gauge("worker.fp16.spec_drafted")
+        );
         server.shutdown();
     }
 

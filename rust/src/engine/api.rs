@@ -10,9 +10,10 @@
 
 use std::any::Any;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::model::{KvCacheConfig, KvPoolStatus, ModelConfig};
+use crate::model::{KvCacheConfig, KvPoolStatus, ModelConfig, Sampler};
+use crate::spec::{SpecConfig, SpecOutcome};
 
 /// Which execution path an engine runs on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -46,6 +47,11 @@ pub struct MemoryReport {
     pub kv_pool_bytes: usize,
     /// KV pool bytes currently leased by live sessions
     pub kv_pool_used_bytes: usize,
+    /// packed weights of the speculative draft instantiation (0 when the
+    /// engine was not built with `EngineBuilder::speculative`)
+    pub spec_draft_weight_bytes: usize,
+    /// total budget of the draft's own KV pool (0 without speculation)
+    pub spec_draft_pool_bytes: usize,
 }
 
 impl MemoryReport {
@@ -102,6 +108,66 @@ pub trait InferenceEngine: Send + Sync {
     /// engines without a host-side pool (PJRT) return `None` and the
     /// coordinator falls back to slot-only admission.
     fn kv_pool_status(&self) -> Option<KvPoolStatus> {
+        None
+    }
+
+    // -- speculative decoding (docs/SPECULATIVE.md) ------------------------
+
+    /// The speculative-decoding configuration, when the engine was built
+    /// with a low-bit draft (`EngineBuilder::speculative`). The scheduler
+    /// keys its step shape (draft batch + verify) off this.
+    fn spec_config(&self) -> Option<&SpecConfig> {
+        None
+    }
+
+    /// Multi-token scoring: append `tokens` to the session speculatively
+    /// and return target logits at every position `[tokens.len(), vocab]`
+    /// (row `j` = next-token distribution after `tokens[..=j]`). Must be
+    /// followed by [`InferenceEngine::commit_verified`] on the same
+    /// session to resolve the open speculation window.
+    fn verify_step(
+        &self,
+        tokens: &[u32],
+        session: &mut dyn EngineSession,
+    ) -> Result<Vec<f32>> {
+        let _ = (tokens, session);
+        bail!("engine '{}' has no speculative verification path", self.spec().backend)
+    }
+
+    /// Keep the first `accepted` positions of the last
+    /// [`InferenceEngine::verify_step`] window and roll the rest back
+    /// (releasing their KV blocks), leaving the session byte-identical to
+    /// one that decoded only the accepted tokens.
+    fn commit_verified(&self, accepted: usize, session: &mut dyn EngineSession) -> Result<()> {
+        let _ = (accepted, session);
+        bail!("engine '{}' has no speculative verification path", self.spec().backend)
+    }
+
+    /// One full speculative round for a batch: `tokens[i]` is sequence
+    /// `i`'s pending token. Drafts up to `SpecConfig.k` tokens per
+    /// sequence with the low-bit instantiation (one batched draft GEMV
+    /// step per proposal), verifies each sequence's proposals in one
+    /// multi-token target pass, commits accepted prefixes and rolls back
+    /// the rest. `samplers[i]` drives sequence `i`'s acceptance /
+    /// resampling (greedy consumes no randomness). Every outcome commits
+    /// at least one token.
+    fn spec_round(
+        &self,
+        tokens: &[u32],
+        sessions: &mut [&mut dyn EngineSession],
+        samplers: &mut [&mut Sampler],
+    ) -> Result<Vec<SpecOutcome>> {
+        let _ = (tokens, sessions, samplers);
+        bail!(
+            "engine '{}' was not built for speculative decoding \
+             (EngineBuilder::speculative)",
+            self.spec().backend
+        )
+    }
+
+    /// Occupancy of the draft instantiation's own KV pool, when the
+    /// engine runs one (leak checks and serving dashboards).
+    fn spec_draft_pool_status(&self) -> Option<KvPoolStatus> {
         None
     }
 }

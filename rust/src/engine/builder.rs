@@ -30,6 +30,7 @@ use crate::abq::OptLevel;
 use crate::model::{KvCacheConfig, ModelConfig, Transformer, WeightPack};
 use crate::quant::{CorrectionSet, WAConfig};
 use crate::runtime::artifacts::ArtifactManifest;
+use crate::spec::SpecConfig;
 use crate::util::json::Json;
 use crate::util::par;
 
@@ -49,6 +50,7 @@ pub struct EngineBuilder {
     kv_pool_bytes: Option<usize>,
     correction: Option<CorrectionSet>,
     auto_correction: bool,
+    speculative: Option<SpecConfig>,
 }
 
 impl Default for EngineBuilder {
@@ -71,7 +73,20 @@ impl EngineBuilder {
             kv_pool_bytes: None,
             correction: None,
             auto_correction: true,
+            speculative: None,
         }
+    }
+
+    /// Self-speculative decoding (`docs/SPECULATIVE.md`): draft
+    /// `cfg.k` tokens per round with a low-bit instantiation of the
+    /// *same* weights at `cfg.draft`, verified in one multi-token pass on
+    /// the target backend. Both instantiations come from one artifacts
+    /// load; the draft resolves its own config tag's calibrated
+    /// corrections (an explicitly set [`EngineBuilder::correction`] set
+    /// is shared by both). Native execution only.
+    pub fn speculative(mut self, cfg: SpecConfig) -> Self {
+        self.speculative = Some(cfg);
+        self
     }
 
     /// Learned distribution corrections to apply at prepare time
@@ -178,6 +193,9 @@ impl EngineBuilder {
         if let Some(n) = self.threads {
             par::set_threads(n);
         }
+        if self.speculative.is_some() && self.execution != Execution::Native {
+            anyhow::bail!("speculative decoding runs on the native execution path only");
+        }
         match self.execution {
             Execution::Native => self.build_native(),
             Execution::Pjrt => self.build_pjrt(),
@@ -195,22 +213,68 @@ impl EngineBuilder {
             .registry
             .resolve_with(&self.backend, &opts)
             .with_context(|| format!("resolve backend '{}'", self.backend))?;
-        let model = if let Some((cfg, seed)) = self.random {
-            Transformer::random_corrected(cfg, backend.as_ref(), seed, self.correction.as_ref())?
+        // the draft instantiation of a speculative engine resolves its
+        // own backend spec through the same registry/options
+        let draft_plan = match &self.speculative {
+            Some(sc) => {
+                sc.validate()?;
+                let spec_str = draft_backend_spec(sc);
+                let be = self
+                    .registry
+                    .resolve_with(&spec_str, &opts)
+                    .with_context(|| format!("resolve draft backend '{spec_str}'"))?;
+                Some((*sc, spec_str, be))
+            }
+            None => None,
+        };
+        let (model, draft) = if let Some((cfg, seed)) = self.random {
+            let m =
+                Transformer::random_corrected(cfg, backend.as_ref(), seed, self.correction.as_ref())?;
+            let d = match &draft_plan {
+                Some((sc, _, be)) => Some((
+                    *sc,
+                    Transformer::random_corrected(cfg, be.as_ref(), seed, self.correction.as_ref())?,
+                )),
+                None => None,
+            };
+            (m, d)
         } else {
             let dir = self.weights.as_ref().ok_or_else(|| {
                 anyhow!("EngineBuilder: set .weights(dir) or .random_weights(cfg, seed)")
             })?;
-            load_artifacts(
+            // one pack + manifest read serves both instantiations
+            let art = read_artifacts(dir)
+                .with_context(|| format!("load artifacts from {dir:?} (run `make artifacts`)"))?;
+            let m = prepare_from_artifacts(
+                &art,
                 dir,
                 backend.as_ref(),
                 self.correction.as_ref(),
                 self.auto_correction,
                 &self.backend,
-            )
-            .with_context(|| format!("load artifacts from {dir:?} (run `make artifacts`)"))?
+            )?;
+            let d = match &draft_plan {
+                Some((sc, spec_str, be)) => Some((
+                    *sc,
+                    prepare_from_artifacts(
+                        &art,
+                        dir,
+                        be.as_ref(),
+                        self.correction.as_ref(),
+                        self.auto_correction,
+                        spec_str,
+                    )?,
+                )),
+                None => None,
+            };
+            (m, d)
         };
-        Ok(Box::new(NativeEngine::with_kv(model, self.kv, self.kv_pool_bytes)?))
+        Ok(Box::new(NativeEngine::with_kv_speculative(
+            model,
+            self.kv,
+            self.kv_pool_bytes,
+            draft,
+        )?))
     }
 
     #[cfg(feature = "pjrt")]
@@ -228,33 +292,57 @@ impl EngineBuilder {
     }
 }
 
-/// Load pack + manifest from an artifacts directory and prepare every
-/// projection with `backend` (the native-path loading step, kept inside
-/// `engine/` so model construction has a single home). The manifest is
-/// read and parsed exactly once; correction resolution is explicit set >
-/// manifest auto-load (when enabled) > none.
-fn load_artifacts(
+/// The backend spec string a speculative draft resolves to: the fp
+/// marker routes to the float comparator, everything else to the
+/// arbitrary-bit engine at the draft's WqAp config.
+fn draft_backend_spec(sc: &SpecConfig) -> String {
+    if sc.draft == WAConfig::FP16 {
+        "fp32".to_string()
+    } else {
+        format!("abq:{}", sc.draft)
+    }
+}
+
+/// One artifacts-directory read: weight pack + parsed manifest + model
+/// config. A speculative build prepares two instantiations from this
+/// single load.
+struct LoadedArtifacts {
+    pack: WeightPack,
+    manifest: Json,
+    cfg: ModelConfig,
+}
+
+fn read_artifacts(dir: &Path) -> Result<LoadedArtifacts> {
+    let pack = WeightPack::load(&dir.join("weights.abqw"))?;
+    let manifest =
+        std::fs::read_to_string(dir.join("manifest.json")).context("read manifest.json")?;
+    let j = Json::parse(&manifest).map_err(|e| anyhow!("manifest parse: {e}"))?;
+    let cfg = ModelConfig::from_manifest(&j)?;
+    Ok(LoadedArtifacts { pack, manifest: j, cfg })
+}
+
+/// Prepare every projection of one instantiation with `backend` (the
+/// native-path loading step, kept inside `engine/` so model construction
+/// has a single home). Correction resolution is explicit set > manifest
+/// auto-load for the spec's tag (when enabled) > none.
+fn prepare_from_artifacts(
+    art: &LoadedArtifacts,
     dir: &Path,
     backend: &dyn super::linear::LinearBackend,
     explicit: Option<&CorrectionSet>,
     auto_correction: bool,
     backend_spec: &str,
 ) -> Result<Transformer> {
-    let pack = WeightPack::load(&dir.join("weights.abqw"))?;
-    let manifest =
-        std::fs::read_to_string(dir.join("manifest.json")).context("read manifest.json")?;
-    let j = Json::parse(&manifest).map_err(|e| anyhow!("manifest parse: {e}"))?;
-    let cfg = ModelConfig::from_manifest(&j)?;
     let auto_set;
     let correction = match explicit {
         Some(set) => Some(set),
         None if auto_correction => {
-            auto_set = load_correction_set(&j, dir, backend_spec)?;
+            auto_set = load_correction_set(&art.manifest, dir, backend_spec)?;
             auto_set.as_ref()
         }
         None => None,
     };
-    Transformer::from_pack_corrected(&pack, cfg, backend, correction)
+    Transformer::from_pack_corrected(&art.pack, art.cfg, backend, correction)
 }
 
 /// The auto-load half of correction resolution: when the (already
@@ -309,6 +397,43 @@ mod tests {
     #[test]
     fn build_requires_a_weight_source() {
         assert!(EngineBuilder::new().build().is_err());
+    }
+
+    #[test]
+    fn speculative_build_exposes_config_draft_pool_and_memory() {
+        const MICRO: ModelConfig = ModelConfig {
+            name: "micro",
+            vocab: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 16,
+            rope_base: 10000.0,
+        };
+        let engine = EngineBuilder::new()
+            .random_weights(MICRO, 3)
+            .backend("abq:w8a8")
+            .speculative("w2*a8:2".parse().unwrap())
+            .build()
+            .unwrap();
+        let sc = engine.spec_config().expect("speculative engine must expose its config");
+        assert_eq!(sc.k, 2);
+        assert_eq!(sc.draft.to_string(), "w2*a8");
+        let dp = engine.spec_draft_pool_status().expect("draft pool");
+        assert_eq!(dp.used_blocks(), 0);
+        let mem = engine.memory_report();
+        assert!(mem.spec_draft_weight_bytes > 0, "draft weights must be accounted");
+        assert!(
+            mem.spec_draft_weight_bytes < mem.weight_bytes,
+            "a w2* draft must be smaller than the w8 target"
+        );
+        assert!(mem.spec_draft_pool_bytes > 0);
+        // a vanilla engine reports neither
+        let plain =
+            EngineBuilder::new().random_weights(MICRO, 3).backend("abq:w8a8").build().unwrap();
+        assert!(plain.spec_config().is_none());
+        assert_eq!(plain.memory_report().spec_draft_weight_bytes, 0);
     }
 
     #[test]

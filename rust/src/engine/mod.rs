@@ -45,6 +45,10 @@ pub use crate::model::{KvCacheConfig, KvPoolStatus};
 // learned distribution corrections travel through the builder and
 // `PrepareCtx` (see docs/CALIBRATION.md)
 pub use crate::quant::{Correction, CorrectionSet};
+// self-speculative decoding configuration travels through the builder;
+// the round outcome/stats types surface through `spec_round`
+// (see docs/SPECULATIVE.md)
+pub use crate::spec::{SpecConfig, SpecOutcome, SpecPolicy, SpecStats};
 pub use linear::{
     AbqBackend, Fp32Backend, Int4Backend, Int8Backend, LinearBackend, LinearOp, LinearScratch,
     PrepareCtx,

@@ -11,21 +11,39 @@
 //! the whole batch. `kv_bytes`/`memory_report` report *real* pooled
 //! usage — blocks actually leased, not the dense `max_seq` reservation
 //! (`docs/SERVING.md`).
+//!
+//! Engines built with `EngineBuilder::speculative` additionally carry a
+//! low-bit **draft instantiation** of the same weights with its own KV
+//! pool; [`InferenceEngine::spec_round`] runs the batched draft loop +
+//! per-sequence verify/commit described in `docs/SPECULATIVE.md`.
 
 use std::any::Any;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::model::{
-    ForwardScratch, KvCacheConfig, KvPool, KvPoolStatus, PagedKvCache, Transformer,
+    ForwardScratch, KvCacheConfig, KvPool, KvPoolStatus, KvStore, PagedKvCache, Sampler,
+    Transformer,
 };
+use crate::spec::{bonus_token, draft_token, verify_token, SpecConfig, SpecOutcome, Verdict};
 
 use super::api::{EngineSession, EngineSpec, Execution, InferenceEngine, MemoryReport};
+
+/// The low-bit draft half of a speculative engine: a second
+/// instantiation of the same weights plus its own block pool (draft KV
+/// is real sequence state, but isolated so target-pool accounting stays
+/// exactly what vanilla decode would lease).
+struct DraftEngine {
+    cfg: SpecConfig,
+    model: Transformer,
+    pool: KvPool,
+}
 
 pub struct NativeEngine {
     model: Transformer,
     spec: EngineSpec,
     pool: KvPool,
+    draft: Option<DraftEngine>,
 }
 
 impl NativeEngine {
@@ -42,14 +60,42 @@ impl NativeEngine {
         kv: KvCacheConfig,
         pool_budget_bytes: Option<usize>,
     ) -> Result<Self> {
+        Self::with_kv_speculative(model, kv, pool_budget_bytes, None)
+    }
+
+    /// [`NativeEngine::with_kv`] plus a speculative draft instantiation.
+    /// The draft gets its own pool with the same budget and KV config, so
+    /// one committed position costs the same blocks on both sides and a
+    /// target-pool admission check covers the draft too.
+    pub fn with_kv_speculative(
+        model: Transformer,
+        kv: KvCacheConfig,
+        pool_budget_bytes: Option<usize>,
+        speculative: Option<(SpecConfig, Transformer)>,
+    ) -> Result<Self> {
         let pool = KvPool::new(&model.cfg, &kv, pool_budget_bytes)?;
+        let draft = match speculative {
+            Some((cfg, draft_model)) => {
+                cfg.validate()?;
+                if draft_model.cfg != model.cfg {
+                    bail!(
+                        "draft model architecture '{}' does not match target '{}'",
+                        draft_model.cfg.name,
+                        model.cfg.name
+                    );
+                }
+                let dpool = KvPool::new(&draft_model.cfg, &kv, pool_budget_bytes)?;
+                Some(DraftEngine { cfg, model: draft_model, pool: dpool })
+            }
+            None => None,
+        };
         let spec = EngineSpec {
             model: model.cfg,
             backend: model.backend_name.clone(),
             execution: Execution::Native,
             kv,
         };
-        Ok(NativeEngine { model, spec, pool })
+        Ok(NativeEngine { model, spec, pool, draft })
     }
 
     /// Escape hatch to the underlying transformer (engine-internal tools).
@@ -58,10 +104,21 @@ impl NativeEngine {
     }
 }
 
+/// Draft-side sequence state of a speculative session.
+struct DraftSession {
+    cache: PagedKvCache,
+    scratch: ForwardScratch,
+    /// committed token the draft cache has not ingested yet — an
+    /// all-accepted round leaves the draft exactly one position behind
+    /// the target (it never fed its own last proposal)
+    catchup: Option<u32>,
+}
+
 struct NativeSession {
     cache: PagedKvCache,
     /// per-session forward arena, reused across prefill and decode steps
     scratch: ForwardScratch,
+    draft: Option<DraftSession>,
 }
 
 impl EngineSession for NativeSession {
@@ -83,6 +140,14 @@ impl EngineSession for NativeSession {
         Ok(Box::new(NativeSession {
             cache: self.cache.try_clone()?,
             scratch: ForwardScratch::new(),
+            draft: match &self.draft {
+                Some(d) => Some(DraftSession {
+                    cache: d.cache.try_clone()?,
+                    scratch: ForwardScratch::new(),
+                    catchup: d.catchup,
+                }),
+                None => None,
+            },
         }))
     }
 
@@ -106,12 +171,24 @@ impl InferenceEngine for NativeEngine {
         Ok(Box::new(NativeSession {
             cache: self.pool.new_cache(),
             scratch: ForwardScratch::new(),
+            draft: self.draft.as_ref().map(|d| DraftSession {
+                cache: d.pool.new_cache(),
+                scratch: ForwardScratch::new(),
+                catchup: None,
+            }),
         }))
     }
 
     fn prefill(&self, tokens: &[u32], session: &mut dyn EngineSession) -> Result<Vec<f32>> {
-        let NativeSession { cache, scratch } = downcast(session)?;
-        self.model.prefill_scratch(tokens, cache, scratch)
+        let NativeSession { cache, scratch, draft } = downcast(session)?;
+        let logits = self.model.prefill_scratch(tokens, cache, scratch)?;
+        if let (Some(de), Some(ds)) = (&self.draft, draft.as_mut()) {
+            // the draft instantiation ingests the same prompt so both
+            // caches describe the same committed prefix
+            de.model.prefill_scratch(tokens, &mut ds.cache, &mut ds.scratch)?;
+            ds.catchup = None;
+        }
+        Ok(logits)
     }
 
     fn decode_step(
@@ -120,11 +197,12 @@ impl InferenceEngine for NativeEngine {
         sessions: &mut [&mut dyn EngineSession],
     ) -> Result<Vec<f32>> {
         // split each session into (cache, scratch); the batch runs on the
-        // first session's arena
+        // first session's arena. Vanilla decode advances only the target
+        // side — `spec_round` detects and rejects a stale draft.
         let mut caches: Vec<&mut PagedKvCache> = Vec::with_capacity(sessions.len());
         let mut scratch: Option<&mut ForwardScratch> = None;
         for s in sessions.iter_mut() {
-            let NativeSession { cache, scratch: sc } = downcast(&mut **s)?;
+            let NativeSession { cache, scratch: sc, .. } = downcast(&mut **s)?;
             caches.push(cache);
             if scratch.is_none() {
                 scratch = Some(sc);
@@ -138,15 +216,221 @@ impl InferenceEngine for NativeEngine {
 
     fn memory_report(&self) -> MemoryReport {
         let st = self.pool.status();
+        let (dw, dp) = match &self.draft {
+            Some(d) => {
+                let ds = d.pool.status();
+                (d.model.weight_bytes(), ds.total_blocks * ds.block_bytes)
+            }
+            None => (0, 0),
+        };
         MemoryReport {
             weight_bytes: self.model.weight_bytes(),
             kv_bytes_per_session: self.pool.blocks_for(self.model.cfg.max_seq) * st.block_bytes,
             kv_pool_bytes: st.total_blocks * st.block_bytes,
             kv_pool_used_bytes: st.used_blocks() * st.block_bytes,
+            spec_draft_weight_bytes: dw,
+            spec_draft_pool_bytes: dp,
         }
     }
 
     fn kv_pool_status(&self) -> Option<KvPoolStatus> {
         Some(self.pool.status())
+    }
+
+    fn spec_config(&self) -> Option<&SpecConfig> {
+        self.draft.as_ref().map(|d| &d.cfg)
+    }
+
+    fn spec_draft_pool_status(&self) -> Option<KvPoolStatus> {
+        self.draft.as_ref().map(|d| d.pool.status())
+    }
+
+    fn verify_step(
+        &self,
+        tokens: &[u32],
+        session: &mut dyn EngineSession,
+    ) -> Result<Vec<f32>> {
+        let NativeSession { cache, scratch, .. } = downcast(session)?;
+        self.model.verify_step(tokens, cache, scratch)
+    }
+
+    fn commit_verified(&self, accepted: usize, session: &mut dyn EngineSession) -> Result<()> {
+        let NativeSession { cache, scratch, .. } = downcast(session)?;
+        self.model.commit_verified(cache, scratch, accepted)
+    }
+
+    fn spec_round(
+        &self,
+        tokens: &[u32],
+        sessions: &mut [&mut dyn EngineSession],
+        samplers: &mut [&mut Sampler],
+    ) -> Result<Vec<SpecOutcome>> {
+        let Some(de) = &self.draft else {
+            bail!("engine was not built for speculative decoding (EngineBuilder::speculative)")
+        };
+        let b = tokens.len();
+        if sessions.len() != b || samplers.len() != b {
+            bail!("spec_round: tokens/sessions/samplers length mismatch");
+        }
+        if b == 0 {
+            return Ok(Vec::new());
+        }
+        let mut parts: Vec<&mut NativeSession> = Vec::with_capacity(b);
+        for s in sessions.iter_mut() {
+            parts.push(downcast(&mut **s)?);
+        }
+        // sync check: the draft cache (plus its stored catch-up token)
+        // must describe exactly the target's committed prefix
+        for p in parts.iter() {
+            let ds = p
+                .draft
+                .as_ref()
+                .ok_or_else(|| anyhow!("session was created before .speculative was set"))?;
+            let have = ds.cache.pos() + usize::from(ds.catchup.is_some());
+            if have != p.cache.pos() {
+                bail!(
+                    "speculative session out of sync (draft covers {have}, target at {}); \
+                     do not mix decode_step and spec_round on one session",
+                    p.cache.pos()
+                );
+            }
+        }
+        // clamp the draft length near the capacity edge: a round commits
+        // up to k+1 positions, and the sequence must stop exactly where
+        // vanilla decode stops (pos ≤ max_seq − 1, i.e. remaining ≥ 1
+        // afterwards) or capacity-bound speculative streams would emit
+        // more tokens than `engine::generate`. k = 0 degenerates to a
+        // vanilla step (verify the pending token only).
+        let min_rem = parts.iter().map(|p| p.cache.remaining()).min().expect("b > 0");
+        let k = de.cfg.k.min(min_rem.saturating_sub(2));
+        let vocab = self.model.cfg.vocab;
+
+        // -- catch-up: draft sessions left one behind by an all-accepted
+        // round ingest that token first (batched over the subset) --------
+        {
+            let mut cu_toks: Vec<u32> = Vec::new();
+            let mut cu_caches: Vec<&mut PagedKvCache> = Vec::new();
+            let mut cu_scratch: Option<&mut ForwardScratch> = None;
+            for p in parts.iter_mut() {
+                let ds = p.draft.as_mut().expect("checked above");
+                if let Some(t) = ds.catchup.take() {
+                    cu_toks.push(t);
+                    cu_caches.push(&mut ds.cache);
+                    if cu_scratch.is_none() {
+                        cu_scratch = Some(&mut ds.scratch);
+                    }
+                }
+            }
+            if !cu_toks.is_empty() {
+                let sc = cu_scratch.expect("non-empty catch-up batch");
+                de.model.decode_step_scratch(&cu_toks, &mut cu_caches, sc)?;
+            }
+        }
+
+        // -- draft loop: k batched GEMV steps over all sequences ---------
+        // proposals[j] holds each sequence's (j+1)-th draft token;
+        // draft_logits[j] the draft's full logits rows at that step (the
+        // stochastic acceptance rule needs q; greedy ignores them)
+        let mut proposals: Vec<Vec<u32>> = vec![Vec::with_capacity(k); b];
+        let mut draft_logits: Vec<Vec<f32>> = Vec::with_capacity(k);
+        {
+            let mut dcaches: Vec<&mut PagedKvCache> = Vec::with_capacity(b);
+            let mut dscratch: Option<&mut ForwardScratch> = None;
+            for p in parts.iter_mut() {
+                let ds = p.draft.as_mut().expect("checked above");
+                dcaches.push(&mut ds.cache);
+                if dscratch.is_none() {
+                    dscratch = Some(&mut ds.scratch);
+                }
+            }
+            let sc = dscratch.expect("b > 0");
+            if k == 0 {
+                // degenerate round: keep the draft in sync by feeding the
+                // pending token, propose nothing
+                de.model.decode_step_scratch(tokens, &mut dcaches, sc)?;
+            } else {
+                // snapshot each draft cache: rejected proposals written
+                // into a quantized page could otherwise grow its tail-
+                // block scales for good (the same pollution the target
+                // rolls back), leaving draft quality path-dependent
+                for c in dcaches.iter_mut() {
+                    c.begin_speculation();
+                }
+                let mut cur: Vec<u32> = tokens.to_vec();
+                for _ in 0..k {
+                    let dl = de.model.decode_step_scratch(&cur, &mut dcaches, sc)?;
+                    for (i, c) in cur.iter_mut().enumerate() {
+                        let row = &dl[i * vocab..(i + 1) * vocab];
+                        *c = draft_token(row, samplers[i].mode, samplers[i].rng_mut());
+                        proposals[i].push(*c);
+                    }
+                    draft_logits.push(dl);
+                }
+            }
+        }
+
+        // -- verify + commit, per sequence -------------------------------
+        let mut outcomes = Vec::with_capacity(b);
+        for (i, p) in parts.iter_mut().enumerate() {
+            let NativeSession { cache, scratch, draft } = &mut **p;
+            let pos0 = cache.pos();
+            let mut vtoks = Vec::with_capacity(k + 1);
+            vtoks.push(tokens[i]);
+            vtoks.extend_from_slice(&proposals[i]);
+            let logits = self.model.verify_step(&vtoks, cache, scratch)?;
+            let mode = samplers[i].mode;
+            let mut accepted = 0usize;
+            let mut carried: Option<u32> = None;
+            for (j, &d) in proposals[i].iter().enumerate() {
+                let trow = &logits[j * vocab..(j + 1) * vocab];
+                let drow = &draft_logits[j][i * vocab..(i + 1) * vocab];
+                match verify_token(trow, Some(drow), d, mode, samplers[i].rng_mut()) {
+                    Verdict::Accepted => accepted += 1,
+                    Verdict::Rejected(t) => {
+                        carried = Some(t);
+                        break;
+                    }
+                }
+            }
+            let closing = match carried {
+                Some(t) => t,
+                None => {
+                    let trow = &logits[k * vocab..(k + 1) * vocab];
+                    bonus_token(trow, mode, samplers[i].rng_mut())
+                }
+            };
+            self.model.commit_verified(cache, scratch, accepted + 1)?;
+
+            // resolve the draft cache against what was committed
+            let ds = draft.as_mut().expect("checked above");
+            if k == 0 {
+                ds.catchup = None; // draft already ingested the pending token
+            } else if accepted < k {
+                // roll the draft back to its snapshot (restoring the tail
+                // block byte-exactly) and replay the kept tokens through
+                // the normal write path, so the draft cache is identical
+                // to one that never saw the rejected proposals
+                ds.cache.truncate(pos0);
+                let mut replay = Vec::with_capacity(accepted + 1);
+                replay.push(tokens[i]);
+                replay.extend_from_slice(&proposals[i][..accepted]);
+                for &t in &replay {
+                    let mut one = [&mut ds.cache];
+                    de.model.decode_step_scratch(&[t], &mut one, &mut ds.scratch)?;
+                }
+                ds.catchup = None;
+            } else {
+                // all accepted: every draft write is a committed token, so
+                // the cache is already clean; the draft just never fed its
+                // last proposal — ingest it at the start of the next round
+                ds.catchup = Some(proposals[i][k - 1]);
+            }
+
+            let mut committed = Vec::with_capacity(accepted + 1);
+            committed.extend_from_slice(&proposals[i][..accepted]);
+            committed.push(closing);
+            outcomes.push(SpecOutcome { tokens: committed, accepted, drafted: k });
+        }
+        Ok(outcomes)
     }
 }

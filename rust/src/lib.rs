@@ -50,8 +50,12 @@
 //! * [`model`] — LLaMA-family transformer over registry-prepared
 //!   projections, with a paged arbitrary-bit KV block pool
 //!   (`docs/SERVING.md`)
+//! * [`spec`] — self-speculative decoding: low-bit draft + target-
+//!   precision verify over one weight pack, lossless under greedy
+//!   decoding (`docs/SPECULATIVE.md`)
 //! * [`coordinator`] — serving: router, dynamic batcher, block-aware
-//!   continuous-batching scheduler with preemption
+//!   continuous-batching scheduler with preemption and per-sequence
+//!   speculation
 //! * [`runtime`] — artifact manifest grammar (always available) plus the
 //!   PJRT executor for the AOT HLO artifacts (jax/pallas L2+L1; the
 //!   executor needs `--features pjrt`)
@@ -67,6 +71,7 @@ pub mod eval;
 pub mod model;
 pub mod quant;
 pub mod runtime;
+pub mod spec;
 pub mod util;
 
 /// Compile-checks the code blocks in `docs/ENGINE_API.md` as doctests

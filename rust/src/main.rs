@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   info                         artifact + engine health report
+//!   run      [--prompt 1,2,3]    greedy generation from a token prompt
 //!   serve    [--addr HOST:PORT]  TCP line-protocol serving (JSON in/out)
 //!   eval     [--config w2*a8]    perplexity on the held-out corpus
 //!   zeroshot [--config w2*a8]    synthetic zero-shot task suite
@@ -15,6 +16,11 @@
 //! construction goes through `engine::EngineBuilder`; calibrated
 //! corrections registered in the manifest are applied automatically
 //! (disable with `--no-correction`).
+//!
+//! Self-speculative decoding (`run` and `serve`, docs/SPECULATIVE.md):
+//! `--spec-draft w2*a8 --spec-k 4` drafts 4 tokens per round with a
+//! w2*a8 instantiation of the same weights and verifies them in one
+//! target-precision pass — lossless under greedy decoding.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
@@ -25,8 +31,9 @@ use anyhow::Result;
 
 use abq_llm::abq::{BitPlanes, OptLevel};
 use abq_llm::coordinator::{Request, Server, ServerConfig};
-use abq_llm::engine::{backend_tag, EngineBuilder, InferenceEngine, KvCacheConfig};
+use abq_llm::engine::{backend_tag, EngineBuilder, InferenceEngine, KvCacheConfig, SpecConfig};
 use abq_llm::eval;
+use abq_llm::quant::WAConfig;
 use abq_llm::util::cli::Args;
 use abq_llm::util::json::{self, Json};
 
@@ -66,6 +73,13 @@ fn builder_from(args: &Args) -> Result<EngineBuilder> {
     if args.has_flag("no-correction") {
         b = b.correction_off();
     }
+    // self-speculative decoding: --spec-draft w2*a8 [--spec-k 4]
+    if let Some(draft) = args.get("spec-draft") {
+        let wa: WAConfig =
+            draft.parse().map_err(|e| anyhow::anyhow!("--spec-draft: {e}"))?;
+        let k = args.get_usize("spec-k", 4);
+        b = b.speculative(SpecConfig::new(wa, k));
+    }
     Ok(b)
 }
 
@@ -77,6 +91,7 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
         Some("info") => cmd_info(&args),
+        Some("run") => cmd_run(&args),
         Some("serve") => cmd_serve(&args),
         Some("eval") => cmd_eval(&args),
         Some("zeroshot") => cmd_zeroshot(&args),
@@ -85,13 +100,61 @@ fn main() -> Result<()> {
         Some("pjrt") => cmd_pjrt(&args),
         _ => {
             eprintln!(
-                "usage: abq-llm <info|serve|eval|zeroshot|calibrate|gemm|pjrt> \
+                "usage: abq-llm <info|run|serve|eval|zeroshot|calibrate|gemm|pjrt> \
                  [--artifacts DIR] [--backend fp32|int8|int4|abq] [--config w2*a8] \
-                 [--threads N] [--no-correction] ..."
+                 [--threads N] [--no-correction] \
+                 [--spec-draft w2*a8 --spec-k 4] ..."
             );
             Ok(())
         }
     }
+}
+
+/// Greedy generation from a token prompt, with optional self-speculative
+/// decoding (`--spec-draft w2*a8 --spec-k 4`). Prints the committed
+/// stream, tokens/s, and — when speculating — the acceptance rate.
+fn cmd_run(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let prompt: Vec<u32> = args
+        .get_or("prompt", "1,2,3,4")
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| s.trim().parse::<u32>().map_err(|e| anyhow::anyhow!("--prompt: {e}")))
+        .collect::<Result<_>>()?;
+    let max_new = args.get_usize("max-new", 32);
+    let t0 = std::time::Instant::now();
+    let (tokens, stats) = match engine.spec_config() {
+        Some(_) => {
+            let (toks, stats) = abq_llm::spec::generate_speculative(engine.as_ref(), &prompt, max_new)?;
+            (toks, Some(stats))
+        }
+        None => (abq_llm::engine::generate(engine.as_ref(), &prompt, max_new)?, None),
+    };
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "backend={} prompt={} tokens -> {} new tokens in {:.3}s ({:.1} tok/s)",
+        engine.spec().backend,
+        prompt.len(),
+        tokens.len(),
+        secs,
+        tokens.len() as f64 / secs.max(1e-9)
+    );
+    if let (Some(stats), Some(sc)) = (stats, engine.spec_config()) {
+        println!(
+            "speculative: draft={} k={} rounds={} drafted={} accepted={} ({:.1}% acceptance)",
+            sc.draft,
+            sc.k,
+            stats.rounds,
+            stats.drafted,
+            stats.accepted,
+            stats.acceptance_rate() * 100.0
+        );
+    }
+    println!(
+        "tokens: {}",
+        tokens.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ")
+    );
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -332,6 +395,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 st.block_size,
                 st.bits,
                 (st.total_blocks * st.block_bytes) as f64 / 1e6
+            );
+        }
+        if let Some(sc) = engine.spec_config() {
+            println!(
+                "    speculative: draft {} × k {} ({:.2} MB draft weights + {:.2} MB draft pool)",
+                sc.draft,
+                sc.k,
+                mem.spec_draft_weight_bytes as f64 / 1e6,
+                mem.spec_draft_pool_bytes as f64 / 1e6
             );
         }
     }

@@ -36,6 +36,27 @@ pub trait KvStore {
 
     /// Materialize V rows `[0, upto)` of `layer` into `out` `[upto, d_model]`.
     fn gather_v(&self, layer: usize, upto: usize, out: &mut [f32]);
+
+    /// Open a speculative window at the current position: capture whatever
+    /// mutable tail state a later [`KvStore::truncate`] back to this
+    /// position must restore byte-exactly. Dense fp32 stores need nothing
+    /// (rows past the watermark are never gathered and are overwritten in
+    /// position order), so the default is a no-op; quantized paged stores
+    /// snapshot the partially filled tail block, whose shared per-head
+    /// scales can be grown — and its committed rows requantized — by
+    /// speculative rows that are later rejected (`docs/SPECULATIVE.md`).
+    fn begin_speculation(&mut self) {}
+
+    /// Rewind the valid prefix to `pos` (≤ the current position),
+    /// discarding everything written past it: storage beyond `pos` is
+    /// released or left to be overwritten, and state captured by
+    /// [`KvStore::begin_speculation`] is restored, so the store is
+    /// byte-identical to one that never saw the rejected rows. The
+    /// default rewinds the watermark, which is exact for dense stores.
+    fn truncate(&mut self, pos: usize) {
+        debug_assert!(pos <= self.pos());
+        self.set_pos(pos);
+    }
 }
 
 /// Contiguous K/V storage for one sequence: `[layer][pos][d_model]`.
@@ -152,6 +173,29 @@ mod tests {
         assert_eq!(c.k_row(2, 5), &k[..]);
         assert_eq!(c.v_row(2, 5), &v[..]);
         assert_eq!(c.k_row(2, 4), vec![0.0; TINY.d_model].as_slice());
+    }
+
+    #[test]
+    fn truncate_rewinds_and_rewrites_cleanly() {
+        // dense stores: truncate is a pure watermark rewind — rows past it
+        // are never gathered and the next writes overwrite them in order
+        let mut c = KvCache::new(&TINY);
+        let a: Vec<f32> = (0..TINY.d_model).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..TINY.d_model).map(|i| -(i as f32)).collect();
+        c.write(0, 0, &a, &a);
+        c.set_pos(1);
+        c.begin_speculation();
+        c.write(0, 1, &b, &b);
+        c.set_pos(2);
+        c.truncate(1);
+        assert_eq!(KvStore::pos(&c), 1);
+        let mut out = vec![0f32; TINY.d_model];
+        c.gather_k(0, 1, &mut out);
+        assert_eq!(out, a);
+        // rewrite position 1 with different data, as a real decode would
+        c.write(0, 1, &a, &b);
+        c.set_pos(2);
+        assert_eq!(c.k_row(0, 1), &a[..]);
     }
 
     #[test]

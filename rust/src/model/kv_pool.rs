@@ -391,6 +391,9 @@ impl KvPool {
             blocks: Vec::new(),
             pos: 0,
             max_seq: self.inner.max_seq,
+            snap_pos: None,
+            snap_block: None,
+            snap_spare: None,
         }
     }
 
@@ -442,6 +445,17 @@ pub struct PagedKvCache {
     blocks: Vec<KvBlock>,
     pos: usize,
     max_seq: usize,
+    /// position at which the open speculative window started, if any
+    snap_pos: Option<usize>,
+    /// copy of the then-partial tail block behind `snap_pos` (`None`
+    /// when the window opened on a block boundary); swapped back in by
+    /// `truncate` so rejected speculative rows cannot leave grown
+    /// quantization scales behind
+    snap_block: Option<KvBlock>,
+    /// retained snapshot buffer so repeated windows allocate nothing —
+    /// session-private scratch, never leased from (or released to) the
+    /// pool, so pool accounting is untouched by speculation
+    snap_spare: Option<KvBlock>,
 }
 
 impl PagedKvCache {
@@ -463,7 +477,8 @@ impl PagedKvCache {
     }
 
     /// Deep copy for session forking: leases fresh blocks from the pool
-    /// (fails when the pool cannot cover them).
+    /// (fails when the pool cannot cover them). Any open speculative
+    /// window stays with the original — the fork starts clean.
     pub fn try_clone(&self) -> Result<PagedKvCache> {
         let mut blocks = Vec::with_capacity(self.blocks.len());
         for b in &self.blocks {
@@ -471,7 +486,15 @@ impl PagedKvCache {
             nb.copy_from(b);
             blocks.push(nb);
         }
-        Ok(PagedKvCache { pool: self.pool.clone(), blocks, pos: self.pos, max_seq: self.max_seq })
+        Ok(PagedKvCache {
+            pool: self.pool.clone(),
+            blocks,
+            pos: self.pos,
+            max_seq: self.max_seq,
+            snap_pos: None,
+            snap_block: None,
+            snap_spare: None,
+        })
     }
 }
 
@@ -534,6 +557,53 @@ impl KvStore for PagedKvCache {
             block.gather_v(&l, layer, rows, &mut out[p * l.d_model..(p + rows) * l.d_model]);
             p += rows;
         }
+    }
+
+    fn begin_speculation(&mut self) {
+        let l = self.pool.inner.layout;
+        // an abandoned earlier window (nothing was rolled back) recycles
+        // its buffer instead of leaking it to the allocator
+        if let Some(b) = self.snap_block.take() {
+            self.snap_spare = Some(b);
+        }
+        self.snap_pos = Some(self.pos);
+        self.snap_block = if self.pos % l.block_size != 0 {
+            // speculative writes into the partial tail block can grow its
+            // per-(layer, head) scales and requantize the committed rows;
+            // keep a byte copy so `truncate` can undo that exactly
+            let src = &self.blocks[self.pos / l.block_size];
+            let mut buf = self.snap_spare.take().unwrap_or_else(|| KvBlock::new(&l));
+            buf.copy_from(src);
+            Some(buf)
+        } else {
+            None
+        };
+    }
+
+    fn truncate(&mut self, pos: usize) {
+        debug_assert!(pos <= self.pos, "truncate({pos}) beyond pos {}", self.pos);
+        let l = self.pool.inner.layout;
+        if let Some(sp) = self.snap_pos.take() {
+            debug_assert_eq!(
+                pos, sp,
+                "paged truncate must return to the speculation snapshot position"
+            );
+            if let Some(buf) = self.snap_block.take() {
+                // only restore when rewinding at/under the snapshot — a
+                // truncate past it means the window was abandoned
+                if pos <= sp {
+                    self.blocks[sp / l.block_size].copy_from(&buf);
+                }
+                self.snap_spare = Some(buf);
+            }
+        }
+        // release whole blocks past the new watermark back to the pool
+        let keep = pos.div_ceil(l.block_size);
+        while self.blocks.len() > keep {
+            let b = self.blocks.pop().expect("len > keep");
+            self.pool.release(b);
+        }
+        self.pos = pos;
     }
 }
 
@@ -670,6 +740,81 @@ mod tests {
         assert_eq!(ga, gb);
         drop(b);
         assert_eq!(pool.status().used_blocks(), 2);
+    }
+
+    #[test]
+    fn truncate_releases_blocks_and_restores_quantized_tail_state() {
+        // rejected speculative rows must leave no trace: neither leased
+        // blocks nor grown tail-block scales (the rollback half of
+        // docs/SPECULATIVE.md)
+        for bits in [32u8, 8, 4] {
+            let pool = KvPool::new(&TINY, &kv(bits, 4), None).unwrap();
+            let mut c = pool.new_cache();
+            let d = TINY.d_model;
+            c.reserve(6).unwrap();
+            for p in 0..6 {
+                let r = row(p, d, 0.05); // small rows → small scales
+                for l in 0..TINY.n_layers {
+                    c.write_row(l, p, &r, &r);
+                }
+            }
+            c.set_pos(6);
+            let mut before = vec![0f32; 6 * d];
+            c.gather_k(0, 6, &mut before);
+            let leased_before = c.leased_blocks();
+
+            // speculative window: 5 big rows (scale grows 20×, spills into
+            // a fresh block), then reject everything
+            c.begin_speculation();
+            c.reserve(5).unwrap();
+            for p in 6..11 {
+                let r = row(p, d, 1.0);
+                for l in 0..TINY.n_layers {
+                    c.write_row(l, p, &r, &r);
+                }
+            }
+            c.set_pos(11);
+            assert!(c.leased_blocks() > leased_before, "window must lease a new block");
+            c.truncate(6);
+
+            assert_eq!(c.pos(), 6, "bits {bits}");
+            assert_eq!(c.leased_blocks(), leased_before, "bits {bits} block leak");
+            let mut after = vec![0f32; 6 * d];
+            c.gather_k(0, 6, &mut after);
+            assert_eq!(before, after, "bits {bits}: tail state not restored byte-exactly");
+
+            // the window costs the pool nothing once resolved
+            drop(c);
+            assert_eq!(pool.status().used_blocks(), 0, "bits {bits}");
+        }
+    }
+
+    #[test]
+    fn repeated_speculation_windows_reuse_the_snapshot_buffer() {
+        let pool = KvPool::new(&TINY, &kv(8, 4), None).unwrap();
+        let mut c = pool.new_cache();
+        let d = TINY.d_model;
+        c.reserve(3).unwrap();
+        for p in 0..3 {
+            let r = row(p, d, 0.1);
+            c.write_row(0, p, &r, &r);
+        }
+        c.set_pos(3);
+        for round in 0..4 {
+            let mut before = vec![0f32; 3 * d];
+            c.gather_k(0, 3, &mut before);
+            c.begin_speculation();
+            c.reserve(2).unwrap();
+            let big = row(90 + round, d, 2.0);
+            c.write_row(0, 3, &big, &big);
+            c.write_row(0, 4, &big, &big);
+            c.set_pos(5);
+            c.truncate(3);
+            let mut after = vec![0f32; 3 * d];
+            c.gather_k(0, 3, &mut after);
+            assert_eq!(before, after, "round {round}");
+        }
+        assert_eq!(pool.status().used_blocks(), c.leased_blocks());
     }
 
     #[test]

@@ -19,6 +19,14 @@ impl Sampler {
         Sampler { mode, rng: SplitMix::new(seed) }
     }
 
+    /// The sampler's own random stream — speculative acceptance and
+    /// residual resampling (`spec::accept`) draw from the same
+    /// per-sequence stream the plain sampling path uses. Greedy decoding
+    /// never draws, so speculative greedy leaves the stream untouched.
+    pub fn rng_mut(&mut self) -> &mut SplitMix {
+        &mut self.rng
+    }
+
     /// Pick the next token from a logits row.
     pub fn sample(&mut self, logits: &[f32]) -> u32 {
         match self.mode {

@@ -240,6 +240,14 @@ pub struct ForwardScratch {
     /// RoPE tables `[tokens, hd/2]`
     cos: Vec<f32>,
     sin: Vec<f32>,
+    /// staged fp32 K/V rows of the last [`Transformer::verify_step`],
+    /// `[n_layers, stage_len, d_model]` — re-committed into the cache by
+    /// [`Transformer::commit_verified`] for the accepted prefix only
+    kstage: Vec<f32>,
+    vstage: Vec<f32>,
+    /// start position and token count of the staged verify window
+    stage_pos0: usize,
+    stage_len: usize,
     /// backend scratch arena threaded through every projection
     lin: LinearScratch,
 }
@@ -680,6 +688,154 @@ impl Transformer {
         Ok(logits)
     }
 
+    /// Multi-token speculative scoring for one sequence: append `tokens`
+    /// (the pending token followed by the draft proposals) in one
+    /// prefill-style pass and return logits at every position `[S, vocab]`
+    /// — row `j` is the next-token distribution after `tokens[..=j]`.
+    ///
+    /// The pass is **bit-identical to feeding the same tokens one
+    /// [`Transformer::decode_step`] at a time**: K/V rows are written to
+    /// the cache one position at a time and each token's attention
+    /// gathers pages only up to its own position, so quantized page
+    /// scales evolve exactly as in sequential decode. (Projection rows
+    /// are independent of the batch shape on every backend: the integer
+    /// GEMMs are exact and the fp32 path accumulates each output element
+    /// in a fixed k-order.)
+    ///
+    /// The cache is left advanced by `tokens.len()` positions with a
+    /// speculation window open ([`KvStore::begin_speculation`]); the
+    /// caller **must** follow with [`Transformer::commit_verified`] to
+    /// keep the accepted prefix and roll the rejected suffix back
+    /// (`docs/SPECULATIVE.md`).
+    pub fn verify_step<C: KvStore>(
+        &self,
+        tokens: &[u32],
+        cache: &mut C,
+        s: &mut ForwardScratch,
+    ) -> Result<Vec<f32>> {
+        let s_len = tokens.len();
+        if s_len == 0 {
+            bail!("verify_step needs at least one token");
+        }
+        cache.reserve(s_len)?;
+        cache.begin_speculation();
+        let (d, hd, nh) = (self.cfg.d_model, self.cfg.head_dim(), self.cfg.n_heads);
+        let pos0 = cache.pos();
+        s.ensure(s_len, &self.cfg);
+        s.kstage.resize(self.cfg.n_layers * s_len * d, 0.0);
+        s.vstage.resize(self.cfg.n_layers * s_len * d, 0.0);
+        s.stage_pos0 = pos0;
+        s.stage_len = s_len;
+        rope_tables_into(&self.cfg, pos0, s_len, &mut s.cos, &mut s.sin);
+        self.embed_into(tokens, &mut s.x);
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        for (li, blk) in self.blocks.iter().enumerate() {
+            rmsnorm(&s.x, &blk.ln1, &mut s.h);
+            blk.wq.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.q);
+            blk.wk.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.k);
+            blk.wv.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.v);
+            apply_rope(&mut s.q, &self.cfg, &s.cos, &s.sin, s_len);
+            apply_rope(&mut s.k, &self.cfg, &s.cos, &s.sin, s_len);
+            let keys_all = pos0 + s_len;
+            if s.kpage.len() < keys_all * d {
+                s.kpage.resize(keys_all * d, 0.0);
+                s.vpage.resize(keys_all * d, 0.0);
+            }
+            s.ctx.fill(0.0);
+            for t in 0..s_len {
+                // write row t *before* gathering, then gather only up to
+                // its own position — the exact write/read interleaving of
+                // sequential decode, so quantized page scales grow (and
+                // requantize) identically
+                let krow = &s.k[t * d..(t + 1) * d];
+                let vrow = &s.v[t * d..(t + 1) * d];
+                let stg = (li * s_len + t) * d;
+                s.kstage[stg..stg + d].copy_from_slice(krow);
+                s.vstage[stg..stg + d].copy_from_slice(vrow);
+                cache.write_row(li, pos0 + t, krow, vrow);
+                let keys = pos0 + t + 1;
+                cache.gather_k(li, keys, &mut s.kpage[..keys * d]);
+                cache.gather_v(li, keys, &mut s.vpage[..keys * d]);
+                for hh in 0..nh {
+                    let qv = &s.q[t * d + hh * hd..t * d + (hh + 1) * hd];
+                    let scores = &mut s.scores[..keys];
+                    for (kp, sc) in scores.iter_mut().enumerate() {
+                        let kv = &s.kpage[kp * d + hh * hd..kp * d + (hh + 1) * hd];
+                        *sc = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
+                    }
+                    softmax_inplace(scores);
+                    let crow = &mut s.ctx[t * d + hh * hd..t * d + (hh + 1) * hd];
+                    for (kp, &a) in scores.iter().enumerate() {
+                        let vv = &s.vpage[kp * d + hh * hd..kp * d + (hh + 1) * hd];
+                        for i in 0..hd {
+                            crow[i] += a * vv[i];
+                        }
+                    }
+                }
+            }
+            blk.wo.forward_scratch(&s.ctx, s_len, &mut s.lin, &mut s.proj);
+            for i in 0..s.x.len() {
+                s.x[i] += s.proj[i];
+            }
+            rmsnorm(&s.x, &blk.ln2, &mut s.h);
+            blk.gate.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.gate);
+            blk.up.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.up);
+            for i in 0..s.act.len() {
+                s.act[i] = silu(s.gate[i]) * s.up[i];
+            }
+            blk.down.forward_scratch(&s.act, s_len, &mut s.lin, &mut s.proj);
+            for i in 0..s.x.len() {
+                s.x[i] += s.proj[i];
+            }
+        }
+        cache.set_pos(pos0 + s_len);
+        rmsnorm(&s.x, &self.ln_f, &mut s.h);
+        let mut logits = vec![0f32; s_len * self.cfg.vocab];
+        gemm_fp32_into(&s.h, &self.head, s_len, self.cfg.vocab, d, &mut logits);
+        Ok(logits)
+    }
+
+    /// Resolve the speculative window opened by
+    /// [`Transformer::verify_step`]: roll the cache back to the window
+    /// start — restoring quantized tail-block state byte-exactly — and
+    /// re-commit the first `accepted` staged rows through the normal
+    /// sequential write path. The cache ends byte-identical to one that
+    /// decoded exactly those `accepted` tokens one step at a time and
+    /// never saw the rejected suffix; the suffix's blocks return to the
+    /// pool through the ordinary lease machinery (`KvStore::truncate`).
+    pub fn commit_verified<C: KvStore>(
+        &self,
+        cache: &mut C,
+        s: &ForwardScratch,
+        accepted: usize,
+    ) -> Result<()> {
+        let (pos0, slen) = (s.stage_pos0, s.stage_len);
+        if accepted > slen {
+            bail!("commit_verified: accepted {accepted} > staged window of {slen}");
+        }
+        if cache.pos() != pos0 + slen {
+            bail!(
+                "commit_verified: cache at {} does not match the staged window [{pos0}, {})",
+                cache.pos(),
+                pos0 + slen
+            );
+        }
+        let d = self.cfg.d_model;
+        cache.truncate(pos0);
+        cache.reserve(accepted)?;
+        for t in 0..accepted {
+            // per position, layers in order — the exact write order of one
+            // sequential decode step
+            for li in 0..self.cfg.n_layers {
+                let off = (li * slen + t) * d;
+                cache.write_row(li, pos0 + t, &s.kstage[off..off + d], &s.vstage[off..off + d]);
+            }
+        }
+        cache.set_pos(pos0 + accepted);
+        Ok(())
+    }
+
     /// Total block-weight bytes (Table 12 memory accounting).
     pub fn weight_bytes(&self) -> usize {
         let blocks: usize = self
@@ -817,6 +973,73 @@ mod tests {
         assert_eq!(c2.pos, t);
         // non-fresh cache is rejected
         assert!(m.prefill_traced(&toks, &mut c2, &mut scratch, &mut tap).is_err());
+    }
+
+    #[test]
+    fn verify_step_is_bitwise_sequential_decode_on_dense_kv() {
+        // the lossless-speculation cornerstone: a k-token verify pass must
+        // reproduce k sequential decode steps bit-for-bit (logits AND
+        // cache state), for both the fp comparator and a quantized engine
+        let abq = AbqBackend::new(WAConfig::new(8, 8));
+        let backends: [&dyn crate::engine::LinearBackend; 2] = [&Fp32Backend, &abq];
+        for backend in backends {
+            let m = Transformer::random(MICRO, backend, 17).unwrap();
+            let prompt = [2u32, 9, 4];
+            let steps = [7u32, 1, 12];
+            let mut seq_cache = KvCache::new(&MICRO);
+            m.prefill(&prompt, &mut seq_cache).unwrap();
+            let mut ver_cache = seq_cache.clone();
+            // sequential reference
+            let mut seq_rows = Vec::new();
+            for &tok in &steps {
+                let mut b = [&mut seq_cache];
+                seq_rows.push(m.decode_step(&[tok], &mut b).unwrap());
+            }
+            // one verify pass + full commit
+            let mut scratch = ForwardScratch::new();
+            let logits = m.verify_step(&steps, &mut ver_cache, &mut scratch).unwrap();
+            for (j, want) in seq_rows.iter().enumerate() {
+                let row = &logits[j * MICRO.vocab..(j + 1) * MICRO.vocab];
+                assert_eq!(row, &want[..], "row {j}");
+            }
+            m.commit_verified(&mut ver_cache, &scratch, steps.len()).unwrap();
+            assert_eq!(ver_cache.pos, seq_cache.pos);
+            assert_eq!(ver_cache.k, seq_cache.k, "committed K state must match");
+            assert_eq!(ver_cache.v, seq_cache.v);
+            // both caches keep decoding identically
+            let mut b1 = [&mut seq_cache];
+            let a = m.decode_step(&[3], &mut b1).unwrap();
+            let mut b2 = [&mut ver_cache];
+            let b = m.decode_step(&[3], &mut b2).unwrap();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn partial_commit_equals_never_having_speculated() {
+        let m = Transformer::random(MICRO, &Fp32Backend, 23).unwrap();
+        let prompt = [1u32, 6, 11];
+        let mut plain = KvCache::new(&MICRO);
+        m.prefill(&prompt, &mut plain).unwrap();
+        let mut spec = plain.clone();
+        // speculate 4 tokens, keep only 2
+        let mut scratch = ForwardScratch::new();
+        m.verify_step(&[5, 8, 2, 9], &mut spec, &mut scratch).unwrap();
+        m.commit_verified(&mut spec, &scratch, 2).unwrap();
+        // vanilla path decodes the same 2 kept tokens
+        for &tok in &[5u32, 8] {
+            let mut b = [&mut plain];
+            m.decode_step(&[tok], &mut b).unwrap();
+        }
+        assert_eq!(spec.pos, plain.pos);
+        // logits after the next shared token must be bit-identical
+        let mut b1 = [&mut plain];
+        let a = m.decode_step(&[4], &mut b1).unwrap();
+        let mut b2 = [&mut spec];
+        let b = m.decode_step(&[4], &mut b2).unwrap();
+        assert_eq!(a, b, "rejected suffix left a trace in the cache");
+        // stale commit / oversized accept are hard errors
+        assert!(m.commit_verified(&mut spec, &scratch, 1).is_err());
     }
 
     #[test]

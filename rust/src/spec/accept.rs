@@ -1,0 +1,252 @@
+//! The speculative acceptance rule (draft-token verification).
+//!
+//! For each draft token the target model scored, [`verify_token`] decides
+//! accept vs reject under the sequence's [`Sampling`] mode:
+//!
+//! * **Greedy** — accept iff the draft token is the target argmax;
+//!   otherwise reject and emit the argmax. No randomness is consumed, and
+//!   the emitted stream is *exactly* vanilla greedy decode (the
+//!   lossless-greedy guarantee `rust/tests/prop_spec.rs` asserts
+//!   bit-for-bit).
+//! * **TopK { k, temperature }** — classic speculative rejection sampling
+//!   (Leviathan et al. / Chen et al.) over the temperature-`T`, top-`k`
+//!   truncated distributions the plain [`crate::model::Sampler`] would
+//!   sample from: accept the draft token `d` with probability
+//!   `min(1, p(d)/q(d))`; on rejection, resample from the normalized
+//!   residual `max(p − q, 0)`. Marginally the emitted token is
+//!   distributed exactly as `p` — in particular a token with zero target
+//!   probability can never be emitted (unit-tested below).
+//!
+//! [`bonus_token`] samples the free extra token of an all-accepted round
+//! and [`draft_token`] draws the proposal from the draft distribution, so
+//! the whole rule set lives in one place.
+
+use crate::model::{argmax, Sampling};
+use crate::util::rng::SplitMix;
+
+/// Outcome of verifying one draft token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// the draft token is kept; verification moves to the next position
+    Accepted,
+    /// the draft token is rejected; the carried token (argmax or residual
+    /// resample) is emitted instead and the round ends
+    Rejected(u32),
+}
+
+/// The target's sampling distribution as the plain sampler would build
+/// it: softmax at `temperature` over the `top_k` highest logits, zero
+/// elsewhere. Entries at `-inf` stay exactly zero even inside the top-k.
+fn topk_probs(logits: &[f32], top_k: usize, temperature: f32) -> Vec<f32> {
+    let top_k = top_k.max(1).min(logits.len());
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    idx.truncate(top_k);
+    let t = temperature.max(1e-3);
+    let mx = logits[idx[0]];
+    let mut p = vec![0f32; logits.len()];
+    let mut total = 0f32;
+    for &i in &idx {
+        let e = ((logits[i] - mx) / t).exp();
+        p[i] = e;
+        total += e;
+    }
+    let inv = 1.0 / total;
+    for v in &mut p {
+        *v *= inv;
+    }
+    p
+}
+
+/// Sample an index from non-negative weights `w` summing to `total`.
+/// Always lands on a strictly positive weight (the last positive entry
+/// absorbs floating-point remainder), so zero-weight tokens are
+/// unreachable.
+fn sample_weighted(w: &[f32], total: f32, rng: &mut SplitMix) -> u32 {
+    let mut u = rng.next_f64() as f32 * total;
+    let mut last = None;
+    for (i, &wi) in w.iter().enumerate() {
+        if wi > 0.0 {
+            last = Some(i);
+            if u < wi {
+                return i as u32;
+            }
+            u -= wi;
+        }
+    }
+    last.expect("sample_weighted needs at least one positive weight") as u32
+}
+
+/// Decide one draft token's fate against the target's logits row at the
+/// same position. `draft_row` is the draft model's logits at that
+/// position; greedy verification never looks at it (`None` is fine), the
+/// stochastic rule needs it for `q`.
+pub fn verify_token(
+    target_row: &[f32],
+    draft_row: Option<&[f32]>,
+    draft_tok: u32,
+    mode: Sampling,
+    rng: &mut SplitMix,
+) -> Verdict {
+    match mode {
+        Sampling::Greedy => {
+            let best = argmax(target_row) as u32;
+            if best == draft_tok {
+                Verdict::Accepted
+            } else {
+                Verdict::Rejected(best)
+            }
+        }
+        Sampling::TopK { k, temperature } => {
+            let p = topk_probs(target_row, k, temperature);
+            let q = topk_probs(
+                draft_row.expect("stochastic verification needs the draft distribution"),
+                k,
+                temperature,
+            );
+            let d = draft_tok as usize;
+            let (pd, qd) = (p[d], q[d]);
+            // accept with probability min(1, pd/qd); the strict `<` makes
+            // pd == 0 unacceptable even at u == 0
+            if rng.next_f64() as f32 * qd < pd {
+                return Verdict::Accepted;
+            }
+            // resample from the residual max(p − q, 0); when the residual
+            // vanishes (q covers p), fall back to p itself — either way
+            // only tokens with pd > 0 carry weight
+            let mut total = 0f32;
+            let residual: Vec<f32> = p
+                .iter()
+                .zip(&q)
+                .map(|(&pi, &qi)| {
+                    let r = (pi - qi).max(0.0);
+                    total += r;
+                    r
+                })
+                .collect();
+            if total > 0.0 {
+                Verdict::Rejected(sample_weighted(&residual, total, rng))
+            } else {
+                Verdict::Rejected(sample_weighted(&p, 1.0, rng))
+            }
+        }
+    }
+}
+
+/// The extra token of an all-accepted round (and the k = 0 degenerate
+/// round, which is exactly one vanilla step): sample the target's
+/// distribution at the position after the last accepted token.
+pub fn bonus_token(target_row: &[f32], mode: Sampling, rng: &mut SplitMix) -> u32 {
+    match mode {
+        Sampling::Greedy => argmax(target_row) as u32,
+        Sampling::TopK { k, temperature } => {
+            let p = topk_probs(target_row, k, temperature);
+            sample_weighted(&p, 1.0, rng)
+        }
+    }
+}
+
+/// The draft model's proposal from its own logits row.
+pub fn draft_token(draft_row: &[f32], mode: Sampling, rng: &mut SplitMix) -> u32 {
+    match mode {
+        Sampling::Greedy => argmax(draft_row) as u32,
+        Sampling::TopK { k, temperature } => {
+            let q = topk_probs(draft_row, k, temperature);
+            sample_weighted(&q, 1.0, rng)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NEG: f32 = f32::NEG_INFINITY;
+
+    #[test]
+    fn greedy_degenerates_to_exact_argmax_agreement() {
+        // satellite: at temperature 0 (greedy) the rule is exactly "draft
+        // == target argmax", the reject token is the argmax, and no
+        // randomness is consumed
+        let mut rng = SplitMix::new(1);
+        let before = rng.clone();
+        let row = [0.3f32, 2.5, -1.0, 2.4];
+        assert_eq!(verify_token(&row, None, 1, Sampling::Greedy, &mut rng), Verdict::Accepted);
+        assert_eq!(
+            verify_token(&row, None, 3, Sampling::Greedy, &mut rng),
+            Verdict::Rejected(1)
+        );
+        assert_eq!(bonus_token(&row, Sampling::Greedy, &mut rng), 1);
+        assert_eq!(draft_token(&row, Sampling::Greedy, &mut rng), 1);
+        // the stream is untouched — greedy speculation cannot perturb a
+        // sequence's sampler state across preemption/resume
+        assert_eq!(rng.next_u64(), before.clone().next_u64());
+    }
+
+    #[test]
+    fn identical_distributions_always_accept() {
+        let mode = Sampling::TopK { k: 4, temperature: 0.8 };
+        let row = [1.0f32, 0.5, -0.5, 2.0, -3.0];
+        let mut rng = SplitMix::new(7);
+        for _ in 0..200 {
+            let d = draft_token(&row, mode, &mut rng);
+            assert_eq!(verify_token(&row, Some(&row), d, mode, &mut rng), Verdict::Accepted);
+        }
+    }
+
+    #[test]
+    fn never_emits_a_token_with_zero_target_probability() {
+        // satellite: seeded stochastic verification — the draft loves
+        // tokens the target gives exactly zero probability (−inf logits);
+        // neither acceptance nor residual resampling may emit one
+        let mode = Sampling::TopK { k: 4, temperature: 1.0 };
+        // target: only tokens 0 and 1 are possible
+        let target = [2.0f32, 1.5, NEG, NEG, NEG];
+        // draft: loves the impossible tokens (but proposes the possible
+        // ones often enough that both verdicts are exercised)
+        let draft = [0.0f32, -1.0, 3.0, 2.5, 2.0];
+        let mut rng = SplitMix::new(0xACCE57);
+        let mut accepted_any = false;
+        let mut rejected_any = false;
+        for _ in 0..500 {
+            let d = draft_token(&draft, mode, &mut rng);
+            let emitted = match verify_token(&target, Some(&draft), d, mode, &mut rng) {
+                Verdict::Accepted => {
+                    accepted_any = true;
+                    d
+                }
+                Verdict::Rejected(t) => {
+                    rejected_any = true;
+                    t
+                }
+            };
+            assert!(emitted <= 1, "emitted token {emitted} has zero target probability");
+            let bonus = bonus_token(&target, mode, &mut rng);
+            assert!(bonus <= 1, "bonus token {bonus} has zero target probability");
+        }
+        // the test has teeth: both branches were exercised
+        assert!(rejected_any, "the draft's impossible proposals must be rejected");
+        assert!(accepted_any, "some possible proposals should be accepted");
+    }
+
+    #[test]
+    fn rejection_resamples_only_where_target_exceeds_draft() {
+        // residual = max(p − q, 0): when the draft under-proposes token 0
+        // and over-proposes token 2, every rejection must land on 0 or 1
+        let mode = Sampling::TopK { k: 3, temperature: 1.0 };
+        let target = [3.0f32, 1.0, -2.0];
+        let draft = [-2.0f32, 1.0, 3.0];
+        let mut rng = SplitMix::new(42);
+        let mut saw_reject = false;
+        for _ in 0..300 {
+            match verify_token(&target, Some(&draft), 2, mode, &mut rng) {
+                Verdict::Accepted => {}
+                Verdict::Rejected(t) => {
+                    saw_reject = true;
+                    assert!(t != 2, "resample landed on the over-proposed token");
+                }
+            }
+        }
+        assert!(saw_reject);
+    }
+}

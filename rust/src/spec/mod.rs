@@ -1,0 +1,201 @@
+//! Self-speculative decoding (docs/SPECULATIVE.md): draft `k` tokens per
+//! round with a cheap low-bit instantiation of the *same* weights, then
+//! verify all of them in one multi-token pass on the target-precision
+//! model — converting the arbitrary-bit engine's bit-width gap directly
+//! into decode tokens/s, in the spirit of draft-free self-speculation
+//! over one weight pack.
+//!
+//! The pieces:
+//!
+//! * [`SpecConfig`] — draft WqAp config + draft length `k` + policy,
+//!   handed to `EngineBuilder::speculative`, which instantiates the draft
+//!   from the same pack/corrections load as the target;
+//! * [`accept`] — the acceptance rule: exact argmax agreement under
+//!   greedy decoding (the stream is bit-identical to vanilla greedy —
+//!   asserted in `rust/tests/prop_spec.rs`), rejection + residual
+//!   resampling at temperature > 0 (the emitted marginal is exactly the
+//!   target distribution);
+//! * `InferenceEngine::spec_round` (implemented by the native engine) —
+//!   one batched draft loop + per-sequence verify/commit with KV rollback
+//!   of the rejected suffix;
+//! * [`generate_speculative`] — the single-sequence driver used by the
+//!   CLI `run` command, the `decode_hotpath` bench rung and the tests.
+//!   The continuous-batching scheduler has its own multi-sequence driver.
+
+pub mod accept;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::engine::{EngineSession, InferenceEngine};
+use crate::model::{Sampler, Sampling};
+use crate::quant::WAConfig;
+
+pub use accept::{bonus_token, draft_token, verify_token, Verdict};
+
+/// How rejected draft tokens are resolved.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SpecPolicy {
+    /// Exactness-preserving acceptance: greedy streams are bit-identical
+    /// to vanilla greedy decode; stochastic sampling keeps the target
+    /// distribution via rejection + residual resampling.
+    #[default]
+    Lossless,
+}
+
+/// Speculative-decoding configuration (`EngineBuilder::speculative`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpecConfig {
+    /// WqAp config of the draft instantiation; it shares the target's
+    /// weight pack (and, when calibrated, its own tag's corrections)
+    pub draft: WAConfig,
+    /// draft tokens proposed per round (the verify pass scores k + 1)
+    pub k: usize,
+    pub policy: SpecPolicy,
+}
+
+/// Hard ceiling on `k` — far past the point where acceptance decay makes
+/// longer drafts useless, and it bounds the verify window's KV lookahead.
+pub const MAX_SPEC_K: usize = 32;
+
+impl SpecConfig {
+    pub fn new(draft: WAConfig, k: usize) -> Self {
+        SpecConfig { draft, k, policy: SpecPolicy::Lossless }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.k == 0 || self.k > MAX_SPEC_K {
+            bail!("SpecConfig.k must be in 1..={MAX_SPEC_K} (got {})", self.k);
+        }
+        Ok(())
+    }
+}
+
+impl std::str::FromStr for SpecConfig {
+    type Err = anyhow::Error;
+
+    /// `"w2*a8:4"` → draft config + k (k defaults to 4) — the grammar the
+    /// CLI flags and the bench's `ABQ_SPEC` env var share.
+    fn from_str(s: &str) -> Result<Self> {
+        let (cfg_str, k) = match s.split_once(':') {
+            Some((c, kk)) => {
+                (c, kk.trim().parse::<usize>().map_err(|_| anyhow!("bad spec k '{kk}'"))?)
+            }
+            None => (s, 4),
+        };
+        let draft: WAConfig =
+            cfg_str.trim().parse().map_err(|e| anyhow!("bad draft config '{cfg_str}': {e}"))?;
+        let sc = SpecConfig::new(draft, k);
+        sc.validate()?;
+        Ok(sc)
+    }
+}
+
+/// What one sequence got out of one speculative round.
+#[derive(Clone, Debug)]
+pub struct SpecOutcome {
+    /// tokens committed this round: the accepted draft prefix plus the
+    /// closing target token (correction or bonus) — never empty
+    pub tokens: Vec<u32>,
+    /// draft tokens accepted (0..=drafted)
+    pub accepted: usize,
+    /// draft tokens proposed this round (≤ `SpecConfig.k`; clamped near
+    /// the KV capacity edge)
+    pub drafted: usize,
+}
+
+/// Running acceptance accounting (bench rung, CLI `run`, tests).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpecStats {
+    pub rounds: u64,
+    pub drafted: u64,
+    pub accepted: u64,
+}
+
+impl SpecStats {
+    pub fn absorb(&mut self, o: &SpecOutcome) {
+        self.rounds += 1;
+        self.drafted += o.drafted as u64;
+        self.accepted += o.accepted as u64;
+    }
+
+    /// Fraction of proposed draft tokens the target accepted.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+}
+
+/// Greedy speculative generation over an engine built with
+/// `EngineBuilder::speculative`: prefill the prompt, then run speculative
+/// rounds until `max_new` tokens are produced or KV capacity runs out.
+/// The token stream is bit-identical to [`crate::engine::generate`] on
+/// the same engine's target path (asserted in `rust/tests/prop_spec.rs`);
+/// the stats say how much drafting paid for it.
+pub fn generate_speculative(
+    engine: &dyn InferenceEngine,
+    prompt: &[u32],
+    max_new: usize,
+) -> Result<(Vec<u32>, SpecStats)> {
+    if prompt.is_empty() {
+        bail!("generate_speculative needs a non-empty prompt");
+    }
+    let mut stats = SpecStats::default();
+    if max_new == 0 {
+        return Ok((Vec::new(), stats));
+    }
+    let mut session = engine.new_session()?;
+    let v = engine.spec().model.vocab;
+    let logits = engine.prefill(prompt, session.as_mut())?;
+    let mut sampler = Sampler::new(Sampling::Greedy, 0);
+    let mut tok = sampler.sample(&logits[(prompt.len() - 1) * v..prompt.len() * v]);
+    let mut out = vec![tok];
+    while out.len() < max_new && session.remaining() > 1 {
+        let mut refs: [&mut dyn EngineSession; 1] = [session.as_mut()];
+        let mut samplers = [&mut sampler];
+        let outcomes = engine.spec_round(&[tok], &mut refs, &mut samplers)?;
+        let o = &outcomes[0];
+        stats.absorb(o);
+        for &t in &o.tokens {
+            if out.len() < max_new {
+                out.push(t);
+            }
+        }
+        tok = *o.tokens.last().expect("spec_round always commits at least one token");
+    }
+    Ok((out, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_config_parses_the_cli_grammar() {
+        let sc: SpecConfig = "w2*a8:4".parse().unwrap();
+        assert_eq!(sc.draft.to_string(), "w2*a8");
+        assert_eq!(sc.k, 4);
+        assert_eq!(sc.policy, SpecPolicy::Lossless);
+        let default_k: SpecConfig = "w4a4".parse().unwrap();
+        assert_eq!(default_k.k, 4);
+        let sc8: SpecConfig = "w2sa8:8".parse().unwrap();
+        assert_eq!(sc8.draft, "w2*a8".parse::<WAConfig>().unwrap());
+        assert_eq!(sc8.k, 8);
+        for bad in ["", "w2*a8:", "w2*a8:0", "w2*a8:99", "w0a4:2", ":4"] {
+            assert!(bad.parse::<SpecConfig>().is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn stats_accounting() {
+        let mut s = SpecStats::default();
+        s.absorb(&SpecOutcome { tokens: vec![1, 2, 3], accepted: 2, drafted: 4 });
+        s.absorb(&SpecOutcome { tokens: vec![9], accepted: 0, drafted: 4 });
+        assert_eq!(s.rounds, 2);
+        assert_eq!((s.drafted, s.accepted), (8, 2));
+        assert!((s.acceptance_rate() - 0.25).abs() < 1e-12);
+        assert_eq!(SpecStats::default().acceptance_rate(), 0.0);
+    }
+}

@@ -1,0 +1,316 @@
+//! Differential conformance suite for self-speculative decoding
+//! (ISSUE 5 tentpole, `docs/SPECULATIVE.md`):
+//!
+//! * greedy self-speculative decode produces a token stream
+//!   **bit-identical** to vanilla greedy decode across
+//!   draft (w2*a8, w4a4) × target (w8a8, fp32) × paged KV at 32 and 8
+//!   bits × k ∈ {1, 2, 4} — including through mid-stream
+//!   preemption/resume inside the continuous-batching scheduler;
+//! * acceptance-rate sanity: draft == target ⇒ every draft token of
+//!   every round is accepted;
+//! * KV-rollback leak check: after every speculative round the target
+//!   pool holds exactly the blocks a vanilla session at the same
+//!   committed length would hold, and the draft pool never runs ahead;
+//! * the engine-level verify/commit path is bitwise equal to sequential
+//!   decode on quantized paged KV at random block sizes.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use abq_llm::coordinator::{
+    Admission, QueuedRequest, Request, Response, Scheduler, SchedulerConfig,
+};
+use abq_llm::engine::{
+    generate, EngineBuilder, EngineSession, InferenceEngine, KvCacheConfig, SpecConfig,
+};
+use abq_llm::model::{Sampler, Sampling};
+use abq_llm::spec::generate_speculative;
+use abq_llm::util::prop::{check, usize_in};
+
+const MICRO: abq_llm::model::ModelConfig = abq_llm::model::ModelConfig {
+    name: "micro",
+    vocab: 32,
+    d_model: 16,
+    n_layers: 2,
+    n_heads: 2,
+    d_ff: 32,
+    max_seq: 48,
+    rope_base: 10000.0,
+};
+
+fn build(
+    target: &str,
+    kv_bits: u8,
+    spec: Option<SpecConfig>,
+    seed: u64,
+) -> Box<dyn InferenceEngine> {
+    let mut b = EngineBuilder::new()
+        .random_weights(MICRO, seed)
+        .backend(target)
+        .kv_cache(KvCacheConfig { bits: kv_bits, block_size: 4 });
+    if let Some(sc) = spec {
+        b = b.speculative(sc);
+    }
+    b.build().unwrap_or_else(|e| panic!("{target} kv{kv_bits}: {e}"))
+}
+
+#[test]
+fn greedy_speculative_stream_is_bit_identical_to_vanilla_greedy() {
+    // the acceptance criterion: every cell of the draft × target × KV ×
+    // k matrix reproduces vanilla greedy exactly, token for token
+    let prompt = [3u32, 17, 9, 4, 26];
+    let max_new = 24;
+    for target in ["abq:w8a8", "fp32"] {
+        for kv_bits in [32u8, 8] {
+            let vanilla = build(target, kv_bits, None, 71);
+            let want = generate(vanilla.as_ref(), &prompt, max_new).unwrap();
+            assert_eq!(want.len(), max_new, "baseline must fill its budget");
+            for draft in ["w2*a8", "w4a4"] {
+                for k in [1usize, 2, 4] {
+                    let sc = SpecConfig::new(draft.parse().unwrap(), k);
+                    let engine = build(target, kv_bits, Some(sc), 71);
+                    let (got, stats) =
+                        generate_speculative(engine.as_ref(), &prompt, max_new).unwrap();
+                    assert_eq!(
+                        got, want,
+                        "stream diverged: target {target} kv{kv_bits} draft {draft} k {k}"
+                    );
+                    assert!(stats.rounds > 0 && stats.drafted > 0, "{target} {draft} k{k}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn capacity_bound_speculative_stream_stops_exactly_where_vanilla_stops() {
+    // the KV-capacity edge: when max_new exceeds what the cache can
+    // hold, vanilla generate stops at remaining() == 1 — a speculative
+    // round must neither overshoot that position nor emit extra tokens
+    let prompt = [3u32, 17, 9, 4, 26];
+    let max_new = 2 * MICRO.max_seq; // far beyond capacity
+    for k in [1usize, 4] {
+        let vanilla = build("abq:w8a8", 8, None, 71);
+        let want = generate(vanilla.as_ref(), &prompt, max_new).unwrap();
+        assert_eq!(
+            want.len(),
+            MICRO.max_seq - prompt.len(),
+            "baseline fills the cache to max_seq - 1"
+        );
+        let sc = SpecConfig::new("w2*a8".parse().unwrap(), k);
+        let engine = build("abq:w8a8", 8, Some(sc), 71);
+        let (got, _) = generate_speculative(engine.as_ref(), &prompt, max_new).unwrap();
+        assert_eq!(got, want, "k {k}: capacity-bound stream diverged from vanilla");
+    }
+}
+
+#[test]
+fn draft_equal_to_target_accepts_every_draft_token() {
+    // acceptance-rate sanity: the draft instantiation is the *same*
+    // config as the target, built from the same seed — every proposal
+    // must match the target argmax, so acceptance is total
+    for kv_bits in [32u8, 8] {
+        let sc = SpecConfig::new("w8a8".parse().unwrap(), 3);
+        let engine = build("abq:w8a8", kv_bits, Some(sc), 29);
+        let (toks, stats) =
+            generate_speculative(engine.as_ref(), &[5, 12, 3, 27], 20).unwrap();
+        assert_eq!(toks.len(), 20);
+        assert!(stats.drafted > 0);
+        assert_eq!(
+            stats.accepted, stats.drafted,
+            "kv{kv_bits}: identical draft/target must accept all drafts \
+             ({}/{} accepted)",
+            stats.accepted, stats.drafted
+        );
+    }
+}
+
+#[test]
+fn rollback_leaves_pool_block_counts_identical_to_vanilla() {
+    // KV-rollback leak check, asserted after EVERY round: the target
+    // pool holds exactly what a vanilla session at the same committed
+    // length holds (ceil((pos)/block_size) blocks), and the draft cache
+    // never runs ahead of the target
+    let sc = SpecConfig::new("w2*a8".parse().unwrap(), 4);
+    let engine = build("abq:w8a8", 8, Some(sc), 53);
+    let st = engine.kv_pool_status().unwrap();
+    let prompt = [1u32, 8, 19, 2];
+    let mut session = engine.new_session().unwrap();
+    let v = engine.spec().model.vocab;
+    let logits = engine.prefill(&prompt, session.as_mut()).unwrap();
+    let mut sampler = Sampler::new(Sampling::Greedy, 0);
+    let mut tok = sampler.sample(&logits[(prompt.len() - 1) * v..prompt.len() * v]);
+    for round in 0..8 {
+        let mut refs: [&mut dyn EngineSession; 1] = [session.as_mut()];
+        let mut samplers = [&mut sampler];
+        let outs = engine.spec_round(&[tok], &mut refs, &mut samplers).unwrap();
+        tok = *outs[0].tokens.last().unwrap();
+        let pos = session.pos();
+        let used = engine.kv_pool_status().unwrap().used_blocks();
+        assert_eq!(
+            used,
+            st.blocks_for(pos),
+            "round {round}: target pool holds {used} blocks, vanilla at pos {pos} would \
+             hold {}",
+            st.blocks_for(pos)
+        );
+        let dused = engine.spec_draft_pool_status().unwrap().used_blocks();
+        assert!(
+            dused <= st.blocks_for(pos),
+            "round {round}: draft pool ({dused} blocks) ran ahead of the target ({pos} \
+             positions)"
+        );
+    }
+    drop(session);
+    assert_eq!(engine.kv_pool_status().unwrap().used_blocks(), 0, "target pool leak");
+    assert_eq!(engine.spec_draft_pool_status().unwrap().used_blocks(), 0, "draft pool leak");
+}
+
+#[test]
+fn prop_engine_verify_commit_is_bitwise_sequential_decode_on_quantized_kv() {
+    // engine-level half of the transformer's verify tests: random block
+    // sizes, random window lengths, random split points — verify +
+    // partial commit must equal having decoded only the kept tokens
+    check("spec-verify-commit", 24, |rng| {
+        let block_size = usize_in(rng, 1, 6);
+        let kv_bits = [32u8, 8][usize_in(rng, 0, 1)];
+        let engine = EngineBuilder::new()
+            .random_weights(MICRO, 37)
+            .backend("abq:w8a8")
+            .kv_cache(KvCacheConfig { bits: kv_bits, block_size })
+            .build()
+            .unwrap();
+        let reference = EngineBuilder::new()
+            .random_weights(MICRO, 37)
+            .backend("abq:w8a8")
+            .kv_cache(KvCacheConfig { bits: kv_bits, block_size })
+            .build()
+            .unwrap();
+        let prompt: Vec<u32> =
+            (0..usize_in(rng, 1, 6)).map(|i| ((i * 13 + 5) % MICRO.vocab) as u32).collect();
+        let window: Vec<u32> = (0..usize_in(rng, 1, 5))
+            .map(|i| ((i * 7 + 2) % MICRO.vocab) as u32)
+            .collect();
+        let keep = usize_in(rng, 1, window.len());
+
+        let mut spec_sess = engine.new_session().unwrap();
+        engine.prefill(&prompt, spec_sess.as_mut()).unwrap();
+        let v = MICRO.vocab;
+        let logits = engine.verify_step(&window, spec_sess.as_mut()).unwrap();
+        engine.commit_verified(keep, spec_sess.as_mut()).unwrap();
+
+        let mut ref_sess = reference.new_session().unwrap();
+        reference.prefill(&prompt, ref_sess.as_mut()).unwrap();
+        for (j, &tok) in window.iter().enumerate() {
+            let mut refs: [&mut dyn EngineSession; 1] = [ref_sess.as_mut()];
+            let step = reference.decode_step(&[tok], &mut refs).unwrap();
+            if j < keep {
+                // verify rows match sequential decode bitwise
+                assert_eq!(
+                    &logits[j * v..(j + 1) * v],
+                    &step[..],
+                    "bs {block_size} kv{kv_bits} row {j}"
+                );
+            }
+            if j + 1 == keep {
+                break;
+            }
+        }
+        assert_eq!(spec_sess.pos(), ref_sess.pos());
+        // both sessions continue identically: the rejected suffix left
+        // nothing behind, on codes or scales
+        let mut r1: [&mut dyn EngineSession; 1] = [spec_sess.as_mut()];
+        let a = engine.decode_step(&[9], &mut r1).unwrap();
+        let mut r2: [&mut dyn EngineSession; 1] = [ref_sess.as_mut()];
+        let b = reference.decode_step(&[9], &mut r2).unwrap();
+        assert_eq!(a, b, "bs {block_size} kv{kv_bits} post-commit divergence");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// mid-stream preemption/resume inside the continuous batch
+// ---------------------------------------------------------------------------
+
+fn run_scheduler_to_completion(
+    engine: Arc<dyn InferenceEngine>,
+    n_requests: u64,
+    max_new: usize,
+    max_active: usize,
+) -> (Vec<Response>, u64) {
+    let mut s = Scheduler::new(engine, SchedulerConfig { max_active });
+    let mut waiting: Vec<QueuedRequest> = (0..n_requests)
+        .map(|id| QueuedRequest {
+            req: Request::new(id, vec![1, 2, (3 + id % 20) as u32, 7], max_new),
+            arrived: Instant::now(),
+        })
+        .collect();
+    waiting.reverse(); // pop() serves in id order
+    for _ in 0..600 {
+        while let Some(qr) = waiting.pop() {
+            match s.admit(qr, 0).unwrap() {
+                Admission::Admitted => {}
+                Admission::Deferred(back) => {
+                    waiting.push(back);
+                    break;
+                }
+            }
+        }
+        if s.idle() && waiting.is_empty() {
+            break;
+        }
+        s.step().unwrap();
+    }
+    assert!(s.idle() && waiting.is_empty(), "scheduler did not drain");
+    let mut done = s.take_finished();
+    done.sort_by_key(|r| r.id);
+    (done, s.preemption_count())
+}
+
+#[test]
+fn speculative_streams_survive_mid_stream_preemption_and_resume() {
+    // a pool small enough to force preemption churn: the speculative
+    // scheduler must still complete every request with exactly the
+    // vanilla greedy stream (resume replays prompt ++ generated through
+    // prefill on both the target and the draft instantiation)
+    let kv = KvCacheConfig { bits: 32, block_size: 8 };
+    let budget = {
+        // 6 blocks: each sequence peaks at 2 blocks (4 prompt + 12
+        // generated = 16 positions), so 4 concurrent sequences need 8 —
+        // somebody must be evicted mid-stream
+        let probe = EngineBuilder::new()
+            .random_weights(MICRO, 61)
+            .backend("fp32")
+            .kv_cache(kv)
+            .build()
+            .unwrap();
+        probe.kv_pool_status().unwrap().block_bytes * 6
+    };
+    let mk = |spec: Option<SpecConfig>| -> Arc<dyn InferenceEngine> {
+        let mut b = EngineBuilder::new()
+            .random_weights(MICRO, 61)
+            .backend("fp32")
+            .kv_cache(kv)
+            .kv_pool_bytes(budget);
+        if let Some(sc) = spec {
+            b = b.speculative(sc);
+        }
+        b.build_arc().unwrap()
+    };
+    let (vanilla_done, _) = run_scheduler_to_completion(mk(None), 4, 12, 4);
+    let sc = SpecConfig::new("w2*a8".parse().unwrap(), 2);
+    let (spec_done, spec_preempts) = run_scheduler_to_completion(mk(Some(sc)), 4, 12, 4);
+    assert!(
+        spec_preempts > 0,
+        "pool was sized to force preemption; the test lost its teeth"
+    );
+    assert_eq!(spec_done.len(), 4);
+    for (sr, vr) in spec_done.iter().zip(&vanilla_done) {
+        assert_eq!(sr.id, vr.id);
+        assert_eq!(sr.tokens.len(), 12, "id {}: exact token count across preemption", sr.id);
+        assert_eq!(
+            sr.tokens, vr.tokens,
+            "id {}: speculative stream diverged from vanilla across preemption/resume",
+            sr.id
+        );
+    }
+}
