@@ -15,6 +15,12 @@
 //! generation measured in tokens/s, with the acceptance rate recorded
 //! alongside the vanilla rows so the artifact shows both
 //! (`docs/SPECULATIVE.md`). CI's bench-smoke job sets it on every PR.
+//!
+//! `ABQ_PREFIX=1` adds a prefix-cache rung (`docs/SERVING.md` §prefix
+//! cache): TTFT for a shared-system-prompt request cold (full prefill)
+//! vs warm (copy-on-write attach + tail prefill), and how many such
+//! requests a fixed 4-sequence pool budget admits with sharing off vs
+//! on. CI's bench-smoke job sets this too.
 
 use std::time::Instant;
 
@@ -194,8 +200,113 @@ fn main() {
         ]));
     }
 
+    // prefix-cache rung: ABQ_PREFIX=1 (serve-level shared-system-prompt
+    // workload — docs/SERVING.md §prefix cache)
+    if std::env::var("ABQ_PREFIX").is_ok_and(|v| v == "1") {
+        run_prefix_rung(kv, &mut rows);
+    }
+
     write_results("decode_hotpath", &Json::Arr(rows.clone()));
     record(&rows, steps, kv_bits);
+}
+
+/// The prefix-cache rung: one system prompt shared by every request.
+///
+/// * **TTFT** — prefill the whole prompt cold, then again warm via
+///   `attach_prefix` + tail-only prefill of the last token;
+/// * **admission capacity** — at a pool budget of exactly 4 cold
+///   sequences, count how many requests a scheduler admits with the
+///   prefix cache off vs on (shared whole blocks are billed once, so
+///   each extra request only pays its unshared tail).
+fn run_prefix_rung(kv: KvCacheConfig, rows: &mut Vec<Json>) {
+    use abq_llm::coordinator::{Admission, QueuedRequest, Request, Scheduler, SchedulerConfig};
+
+    let build = |budget: Option<usize>| {
+        let mut b = EngineBuilder::new()
+            .random_weights(BENCH_MODEL, 42)
+            .backend("abq:w2*a8")
+            .kv_cache(kv);
+        if let Some(bytes) = budget {
+            b = b.kv_pool_bytes(bytes);
+        }
+        b.build_arc().unwrap_or_else(|e| panic!("prefix rung: {e}"))
+    };
+
+    // 4 whole blocks of system prompt + a 1-token per-request tail
+    let sys_len = kv.block_size * 4;
+    let mut prompt: Vec<u32> =
+        (0..sys_len as u32).map(|i| i % (BENCH_MODEL.vocab as u32 - 1)).collect();
+    prompt.push(7);
+
+    let engine = build(None);
+    let mut ttft_cold_us = f64::INFINITY;
+    let mut donor = engine.new_session().unwrap();
+    for _ in 0..2 {
+        let mut sess = engine.new_session().unwrap();
+        let t0 = Instant::now();
+        let logits = engine.prefill(&prompt, sess.as_mut()).unwrap();
+        std::hint::black_box(&logits);
+        ttft_cold_us = ttft_cold_us.min(t0.elapsed().as_micros() as f64);
+        donor = sess;
+    }
+    let pfx = engine.export_prefix(sys_len, donor.as_mut()).unwrap();
+    let mut ttft_warm_us = f64::INFINITY;
+    for _ in 0..2 {
+        let t0 = Instant::now();
+        let mut sess = engine.new_session().unwrap();
+        let attached = engine.attach_prefix(pfx.as_ref(), sess.as_mut()).unwrap();
+        let logits = engine.prefill(&prompt[attached..], sess.as_mut()).unwrap();
+        std::hint::black_box(&logits);
+        ttft_warm_us = ttft_warm_us.min(t0.elapsed().as_micros() as f64);
+    }
+
+    // admission capacity at a fixed budget of exactly 4 cold sequences
+    let st = engine.kv_pool_status().expect("native engine has a pool");
+    let per_seq = st.blocks_for(prompt.len() + 1);
+    let budget = st.block_bytes * per_seq * 4;
+    drop(pfx);
+    drop(donor);
+    drop(engine);
+    let admitted_at = |prefix_cache: bool| -> usize {
+        let engine = build(Some(budget));
+        let mut sched = Scheduler::new(
+            engine,
+            SchedulerConfig { max_active: 10_000, prefix_cache },
+        );
+        let mut n = 0usize;
+        for id in 0..64u64 {
+            let mut p: Vec<u32> = prompt[..sys_len].to_vec();
+            p.push(7 + (id % 50) as u32);
+            let qr = QueuedRequest { req: Request::new(id, p, 1), arrived: Instant::now() };
+            match sched.admit(qr, id) {
+                Ok(Admission::Admitted) => n += 1,
+                _ => break,
+            }
+        }
+        n
+    };
+    let admitted_no_sharing = admitted_at(false);
+    let admitted_sharing = admitted_at(true);
+
+    let speedup = ttft_cold_us / ttft_warm_us.max(1.0);
+    let ratio = admitted_sharing as f64 / admitted_no_sharing.max(1) as f64;
+    println!(
+        "\nprefix cache ({} sys tokens): TTFT {:.0}us cold -> {:.0}us warm ({:.2}x); \
+         admitted at 4-seq budget: {} cold vs {} shared ({:.2}x)",
+        sys_len, ttft_cold_us, ttft_warm_us, speedup, admitted_no_sharing, admitted_sharing,
+        ratio
+    );
+    rows.push(obj(vec![
+        ("backend", s("abq:w2*a8+prefix")),
+        ("prefix", Json::Bool(true)),
+        ("sys_tokens", num(sys_len as f64)),
+        ("ttft_cold_us", num(ttft_cold_us)),
+        ("ttft_warm_us", num(ttft_warm_us)),
+        ("ttft_speedup", num(speedup)),
+        ("admitted_no_sharing", num(admitted_no_sharing as f64)),
+        ("admitted_sharing", num(admitted_sharing as f64)),
+        ("capacity_ratio", num(ratio)),
+    ]));
 }
 
 /// Speculative counterpart of [`measure`], kept comparable to the

@@ -21,11 +21,18 @@
 //!     **youngest** sequence is preempted: its session (and blocks) are
 //!     released and the sequence is requeued internally, to be resumed by
 //!     re-prefilling `prompt ++ generated` once blocks free up;
-//!   * finished sequences release their blocks back to the pool.
+//!   * finished sequences release their blocks back to the pool;
+//!   * with [`SchedulerConfig::prefix_cache`] on (and an engine that
+//!     supports it), admitted prompts are matched against a radix
+//!     [`PrefixIndex`] of resident prefix KV: matched whole blocks are
+//!     *attached* by reference (copy-on-write — `docs/SERVING.md`
+//!     §prefix cache) and only the unshared tail is prefilled. Cold
+//!     index entries are evicted before live sequences are preempted.
 //!
 //! Invariants (property-tested): active ≤ max_active; every admitted
 //! request completes with exactly `max_new_tokens` tokens (or capacity
-//! truncation) even across preemption churn; pool blocks never leak.
+//! truncation) even across preemption churn; pool blocks never leak;
+//! prefix sharing never changes a greedy stream.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -33,8 +40,9 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::engine::{EngineSession, InferenceEngine};
+use crate::engine::{EngineSession, InferenceEngine, KvPrefix};
 use crate::model::Sampler;
+use crate::prefix::{PrefixIndex, PrefixStats, SessionStore};
 
 use super::request::{QueuedRequest, Response, Timing};
 
@@ -106,11 +114,15 @@ fn decode_share_weighted_us(total: u64, weights: &[u64], i: usize) -> u64 {
 
 pub struct SchedulerConfig {
     pub max_active: usize,
+    /// Enable the prefix cache (radix index + copy-on-write attach).
+    /// Silently inert on engines without prefix support — speculative
+    /// engines and engines without a paged pool.
+    pub prefix_cache: bool,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { max_active: 8 }
+        SchedulerConfig { max_active: 8, prefix_cache: false }
     }
 }
 
@@ -127,10 +139,17 @@ pub struct Scheduler {
     /// (serving metrics: the acceptance-rate gauges)
     spec_drafted: u64,
     spec_accepted: u64,
+    /// radix index over resident prefix KV (`Some` iff the config asks
+    /// for it and the engine supports attach)
+    prefix: Option<PrefixIndex>,
+    /// session-file directory fresh prefixes are persisted to
+    store: Option<SessionStore>,
 }
 
 impl Scheduler {
     pub fn new(engine: Arc<dyn InferenceEngine>, cfg: SchedulerConfig) -> Self {
+        let prefix =
+            (cfg.prefix_cache && engine.supports_prefix_cache()).then(PrefixIndex::new);
         Scheduler {
             engine,
             cfg,
@@ -141,6 +160,8 @@ impl Scheduler {
             preemptions: 0,
             spec_drafted: 0,
             spec_accepted: 0,
+            prefix,
+            store: None,
         }
     }
 
@@ -170,13 +191,45 @@ impl Scheduler {
         (self.spec_drafted, self.spec_accepted)
     }
 
-    /// Blocks the pool must have free to start a sequence of `tokens`
-    /// positions: the prompt plus one decode step of headroom. On
-    /// speculative engines the draft prefill leases the same count from
-    /// the draft's own equal-budget pool, so this one check covers both.
-    fn blocks_needed(&self, tokens: usize) -> Option<(usize, usize, usize)> {
-        let st = self.engine.kv_pool_status()?;
-        Some((st.blocks_for(tokens + 1), st.free_blocks, st.total_blocks))
+    /// Prefix-cache gauges; `None` when the cache is disabled or the
+    /// engine cannot attach prefixes.
+    pub fn prefix_stats(&self) -> Option<PrefixStats> {
+        self.prefix.as_ref().map(|ix| ix.stats())
+    }
+
+    /// Warm the prefix index from a `.abqs` session directory and keep
+    /// the store around so freshly registered prefixes persist into it.
+    /// Returns how many session files were restored (0 when the prefix
+    /// cache is disabled — the store is then dropped, not kept).
+    pub fn attach_session_store(&mut self, store: SessionStore) -> usize {
+        if self.prefix.is_none() {
+            return 0;
+        }
+        let (restored, _skipped) = store.load_all(self.engine.as_ref());
+        let n = restored.len();
+        for (tokens, pfx) in restored {
+            self.prefix.as_mut().expect("prefix checked above").insert(&tokens, pfx);
+        }
+        self.store = Some(store);
+        n
+    }
+
+    /// Make `needed` blocks free, evicting cold prefix entries if that
+    /// is what it takes (an entry still shared by a live session frees
+    /// nothing, so the loop keeps evicting until the bill is covered or
+    /// the index drains). Engines without a pool trivially cover any
+    /// bill. Returns whether `needed` blocks are now free.
+    fn free_blocks_for(&mut self, needed: usize) -> bool {
+        loop {
+            let Some(st) = self.engine.kv_pool_status() else { return true };
+            if needed <= st.free_blocks {
+                return true;
+            }
+            let Some(ix) = self.prefix.as_mut() else { return false };
+            if !ix.evict_lru() {
+                return false;
+            }
+        }
     }
 
     /// Admit + prefill one request, or hand it back as
@@ -193,14 +246,33 @@ impl Scheduler {
         if !self.preempted.is_empty() {
             return Ok(Admission::Deferred(qr));
         }
-        if let Some((needed, free, total)) = self.blocks_needed(qr.req.prompt.len()) {
-            if needed > total {
+        // one real index lookup (LRU-bumping) per admission attempt: the
+        // match both discounts the block bill below and rides into
+        // `activate` as the attach hint, so an eviction between the two
+        // cannot invalidate it — the Arc pins the pages
+        let cap = qr.req.prompt.len().saturating_sub(1);
+        let hint = match self.prefix.as_mut() {
+            Some(ix) => ix.lookup(&qr.req.prompt, cap),
+            None => None,
+        };
+        if let Some(st) = self.engine.kv_pool_status() {
+            // blocks to start a sequence: prompt plus one decode step of
+            // headroom. On speculative engines the draft prefill leases
+            // the same count from its own equal-budget pool, so this one
+            // check covers both.
+            let needed = st.blocks_for(qr.req.prompt.len() + 1);
+            if needed > st.total_blocks {
                 bail!(
-                    "request {} needs {needed} KV blocks but the pool holds only {total}",
-                    qr.req.id
+                    "request {} needs {needed} KV blocks but the pool holds only {}",
+                    qr.req.id,
+                    st.total_blocks
                 );
             }
-            if needed > free {
+            // matched whole blocks are already resident — the request
+            // only bills the unshared tail
+            let matched = hint.as_ref().map_or(0, |(n, _)| *n);
+            let discounted = needed.saturating_sub(st.blocks_for(matched));
+            if !self.free_blocks_for(discounted) {
                 return Ok(Admission::Deferred(qr));
             }
         }
@@ -225,14 +297,18 @@ impl Scheduler {
             Timing { queue_us, prefill_us: 0, decode_us: 0 },
             now,
             stamp,
+            hint,
         )?;
         Ok(Admission::Admitted)
     }
 
     /// Shared activation path for fresh admissions (`generated` empty) and
-    /// preemption resumes (`generated` carried): prefill
+    /// preemption resumes (`generated` carried): attach any matched
+    /// prefix by reference, prefill the unshared tail of
     /// `prompt ++ generated` into a fresh session, sample the next token,
-    /// and push the sequence onto the active batch.
+    /// and push the sequence onto the active batch. Fresh admissions
+    /// carry the admit-time match as `hint`; resumes pass `None` and
+    /// re-match here, so replay-after-preemption rides the same path.
     #[allow(clippy::too_many_arguments)]
     fn activate(
         &mut self,
@@ -245,21 +321,30 @@ impl Scheduler {
         mut timing: Timing,
         started: Instant,
         admitted_seq: u64,
+        hint: Option<(usize, Arc<dyn KvPrefix>)>,
     ) -> Result<()> {
         let mut session = self.engine.new_session()?;
         let t0 = Instant::now();
-        let logits = if generated.is_empty() {
-            self.engine.prefill(&prompt, session.as_mut())?
-        } else {
-            let mut replay = prompt.clone();
-            replay.extend_from_slice(&generated);
-            self.engine.prefill(&replay, session.as_mut())?
-        };
+        let mut feed = prompt.clone();
+        feed.extend_from_slice(&generated);
+        let hint = hint.or_else(|| match self.prefix.as_mut() {
+            Some(ix) => ix.lookup(&feed, feed.len().saturating_sub(1)),
+            None => None,
+        });
+        let mut attached = 0usize;
+        if let Some((_, pfx)) = &hint {
+            attached = self.engine.attach_prefix(pfx.as_ref(), session.as_mut())?;
+        }
+        let logits = self.engine.prefill(&feed[attached..], session.as_mut())?;
         timing.prefill_us += t0.elapsed().as_micros() as u64;
         let v = self.engine.spec().model.vocab;
-        let fed = prompt.len() + generated.len();
+        let fed = feed.len() - attached;
         let last = &logits[(fed - 1) * v..fed * v];
         let tok = sampler.sample(last);
+        // a freshly prefilled prompt is the next request's prefix
+        if generated.is_empty() {
+            self.register_prefix(&prompt, session.as_mut());
+        }
         generated.push(tok);
         self.active.push(Active {
             id,
@@ -275,6 +360,35 @@ impl Scheduler {
             admitted_seq,
         });
         Ok(())
+    }
+
+    /// Register the session's whole-block coverage of `prompt` in the
+    /// index (and the session store, when one is attached and the path
+    /// is fresh). Best-effort: a failure only means the next identical
+    /// prompt re-prefills.
+    fn register_prefix(&mut self, prompt: &[u32], session: &mut dyn EngineSession) {
+        if self.prefix.is_none() {
+            return;
+        }
+        let Ok(pfx) = self.engine.export_prefix(prompt.len(), session) else { return };
+        let shared = pfx.token_count();
+        if shared == 0 {
+            return;
+        }
+        let fresh = self
+            .prefix
+            .as_mut()
+            .expect("prefix checked above")
+            .insert(&prompt[..shared], Arc::clone(&pfx));
+        if fresh {
+            if let Some(store) = &self.store {
+                if let Err(e) =
+                    store.persist(self.engine.as_ref(), &prompt[..shared], pfx.as_ref())
+                {
+                    eprintln!("[prefix] failed to persist session file: {e:#}");
+                }
+            }
+        }
     }
 
     /// One batched step over all active sequences (resuming preempted
@@ -367,13 +481,30 @@ impl Scheduler {
     /// replayed length can no longer fit the pool at all is finished with
     /// the tokens it has (capacity truncation).
     fn resume_preempted(&mut self) -> Result<()> {
-        while let Some(front) = self.preempted.front() {
+        loop {
             if self.active.len() >= self.cfg.max_active {
                 break;
             }
-            let replay_len = front.prompt.len() + front.generated.len();
-            if let Some((needed, free, total)) = self.blocks_needed(replay_len) {
-                if needed > total {
+            // the replay's admission math gets the same whole-block
+            // prefix discount a fresh prompt would (stateless peek; the
+            // LRU-bumping match happens in `activate`)
+            let Some((replay_len, matched)) = self.preempted.front().map(|front| {
+                let replay_len = front.prompt.len() + front.generated.len();
+                let matched = match &self.prefix {
+                    Some(ix) => {
+                        let mut replay = front.prompt.clone();
+                        replay.extend_from_slice(&front.generated);
+                        ix.peek_len(&replay, replay.len().saturating_sub(1))
+                    }
+                    None => 0,
+                };
+                (replay_len, matched)
+            }) else {
+                break;
+            };
+            if let Some(st) = self.engine.kv_pool_status() {
+                let needed = st.blocks_for(replay_len + 1);
+                if needed > st.total_blocks {
                     let p = self.preempted.pop_front().unwrap();
                     self.finished.push(Response {
                         id: p.id,
@@ -383,7 +514,8 @@ impl Scheduler {
                     });
                     continue;
                 }
-                if needed > free {
+                let discounted = needed.saturating_sub(st.blocks_for(matched));
+                if !self.free_blocks_for(discounted) {
                     break;
                 }
             }
@@ -398,6 +530,7 @@ impl Scheduler {
                 p.timing,
                 p.started,
                 p.admitted_seq,
+                None,
             )?;
         }
         Ok(())
@@ -430,6 +563,11 @@ impl Scheduler {
                 .sum();
             if needed <= st.free_blocks {
                 return;
+            }
+            // cold prefix entries go before live sequences: evicting one
+            // may free whole blocks without losing any computed tokens
+            if self.prefix.as_mut().is_some_and(|ix| ix.evict_lru()) {
+                continue;
             }
             if self.active.len() <= 1 {
                 // nothing left to evict: finish the lone sequence early
@@ -529,7 +667,8 @@ mod tests {
 
     #[test]
     fn generates_exact_token_counts() {
-        let mut s = Scheduler::new(micro_engine(1), SchedulerConfig { max_active: 4 });
+        let mut s =
+            Scheduler::new(micro_engine(1), SchedulerConfig { max_active: 4, ..Default::default() });
         for id in 0..3u64 {
             let adm = s
                 .admit(
@@ -573,7 +712,8 @@ mod tests {
 
     #[test]
     fn capacity_bound() {
-        let mut s = Scheduler::new(micro_engine(3), SchedulerConfig { max_active: 2 });
+        let mut s =
+            Scheduler::new(micro_engine(3), SchedulerConfig { max_active: 2, ..Default::default() });
         for id in 0..2u64 {
             s.admit(
                 QueuedRequest {
@@ -589,7 +729,8 @@ mod tests {
 
     #[test]
     fn admit_without_capacity_defers_instead_of_panicking() {
-        let mut s = Scheduler::new(micro_engine(4), SchedulerConfig { max_active: 1 });
+        let mut s =
+            Scheduler::new(micro_engine(4), SchedulerConfig { max_active: 1, ..Default::default() });
         s.admit(
             QueuedRequest { req: Request::new(0, vec![1], 2), arrived: Instant::now() },
             0,
@@ -694,7 +835,8 @@ mod tests {
         let vanilla: Arc<dyn InferenceEngine> =
             EngineBuilder::new().random_weights(MICRO, 11).backend("fp32").build_arc().unwrap();
         let run = |engine: Arc<dyn InferenceEngine>| -> (Vec<Response>, (u64, u64)) {
-            let mut s = Scheduler::new(engine, SchedulerConfig { max_active: 3 });
+            let mut s =
+                Scheduler::new(engine, SchedulerConfig { max_active: 3, ..Default::default() });
             for id in 0..3u64 {
                 let adm = s
                     .admit(
@@ -722,6 +864,57 @@ mod tests {
         assert!(drafted > 0, "speculative steps must draft");
         assert!(accepted <= drafted);
         assert_eq!(v_drafted, 0, "vanilla engine never drafts");
+    }
+
+    #[test]
+    fn prefix_cache_reuses_shared_prompts_without_changing_streams() {
+        // three requests sharing an 8-token system prompt: the first
+        // registers it, the next two attach it (two hits, 8 positions
+        // reused each) — and every greedy stream matches the cold run
+        let build = || {
+            EngineBuilder::new()
+                .random_weights(MICRO, 21)
+                .backend("fp32")
+                .kv_cache(KvCacheConfig { bits: 32, block_size: 4 })
+                .build_arc()
+                .unwrap()
+        };
+        let sys: Vec<u32> = (0..8u32).map(|i| i % 60).collect();
+        let run = |prefix_cache: bool| {
+            let mut s = Scheduler::new(
+                build(),
+                SchedulerConfig { max_active: 4, prefix_cache },
+            );
+            for id in 0..3u64 {
+                let mut prompt = sys.clone();
+                prompt.push(60 + id as u32);
+                let adm = s
+                    .admit(
+                        QueuedRequest {
+                            req: Request::new(id, prompt, 4),
+                            arrived: Instant::now(),
+                        },
+                        id,
+                    )
+                    .unwrap();
+                assert!(matches!(adm, Admission::Admitted));
+            }
+            run_all(&mut s);
+            let mut done = s.take_finished();
+            done.sort_by_key(|r| r.id);
+            (done, s.prefix_stats())
+        };
+        let (shared, stats) = run(true);
+        let (cold, cold_stats) = run(false);
+        assert!(cold_stats.is_none(), "disabled cache must report no stats");
+        let stats = stats.expect("prefix cache enabled");
+        assert_eq!(stats.hits, 2, "requests 2 and 3 hit the registered prefix");
+        assert_eq!(stats.tokens_reused, 16, "8 whole-block positions each");
+        assert!(stats.entries >= 1);
+        assert_eq!(shared.len(), 3);
+        for (sr, cr) in shared.iter().zip(&cold) {
+            assert_eq!(sr.tokens, cr.tokens, "sharing must not change stream {}", sr.id);
+        }
     }
 
     #[test]

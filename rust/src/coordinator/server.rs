@@ -10,6 +10,7 @@
 //! ```
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -19,6 +20,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::engine::InferenceEngine;
+use crate::prefix::SessionStore;
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
@@ -40,6 +42,14 @@ pub struct ServerConfig {
     pub batcher: BatcherConfig,
     pub max_active: usize,
     pub default_tag: String,
+    /// Enable the per-worker prefix cache (`--prefix-cache`); inert on
+    /// engines without prefix support.
+    pub prefix_cache: bool,
+    /// Directory for persistent `.abqs` session files
+    /// (`--session-dir`); each worker uses a per-tag subdirectory so
+    /// replicas with different configs never collide. Implies nothing
+    /// unless `prefix_cache` is on.
+    pub session_dir: Option<PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -48,8 +58,19 @@ impl Default for ServerConfig {
             batcher: BatcherConfig::default(),
             max_active: 8,
             default_tag: "fp16".to_string(),
+            prefix_cache: false,
+            session_dir: None,
         }
     }
+}
+
+/// Per-worker slice of [`ServerConfig`] (bundled so the worker entry
+/// point keeps a short signature).
+struct WorkerOpts {
+    bcfg: BatcherConfig,
+    max_active: usize,
+    prefix_cache: bool,
+    session_dir: Option<PathBuf>,
 }
 
 /// A running server over one or more engine replicas.
@@ -78,11 +99,15 @@ impl Server {
             let (tx, rx) = channel::<WorkerMsg>();
             worker_txs.push(tx);
             let m = metrics.clone();
-            let bcfg = cfg.batcher;
-            let max_active = cfg.max_active;
+            let opts = WorkerOpts {
+                bcfg: cfg.batcher,
+                max_active: cfg.max_active,
+                prefix_cache: cfg.prefix_cache,
+                session_dir: cfg.session_dir.clone(),
+            };
             let tag_owned = tag.clone();
             handles.push(std::thread::spawn(move || {
-                worker_loop(model, rx, bcfg, max_active, m, &tag_owned);
+                worker_loop(model, rx, opts, m, &tag_owned);
             }));
         }
 
@@ -147,14 +172,30 @@ fn dispatcher_loop(
 fn worker_loop(
     model: Arc<dyn InferenceEngine>,
     rx: Receiver<WorkerMsg>,
-    bcfg: BatcherConfig,
-    max_active: usize,
+    opts: WorkerOpts,
     metrics: Arc<Metrics>,
     tag: &str,
 ) {
-    let mut batcher = Batcher::new(bcfg);
+    let max_active = opts.max_active;
+    let mut batcher = Batcher::new(opts.bcfg);
     // the worker keeps its own handle for pool-occupancy gauges (3b)
-    let mut scheduler = Scheduler::new(model.clone(), SchedulerConfig { max_active });
+    let mut scheduler = Scheduler::new(
+        model.clone(),
+        SchedulerConfig { max_active, prefix_cache: opts.prefix_cache },
+    );
+    // warm the prefix index from persisted session files (per-tag
+    // subdirectory: replicas with different configs never collide)
+    if let Some(dir) = &opts.session_dir {
+        match SessionStore::new(dir.join(tag)) {
+            Ok(store) => {
+                let restored = scheduler.attach_session_store(store);
+                if restored > 0 {
+                    println!("[{tag}] prefix cache warmed from {restored} session file(s)");
+                }
+            }
+            Err(e) => eprintln!("[{tag}] session dir unavailable: {e:#}"),
+        }
+    }
     let mut pending: HashMap<u64, Sender<Response>> = HashMap::new();
     let mut seed = 0xC0FFEEu64;
     let mut shutdown = false;
@@ -254,6 +295,9 @@ fn worker_loop(
         if let Some(st) = model.kv_pool_status() {
             metrics.set_gauge(&format!("worker.{tag}.kv_blocks_used"), st.used_blocks() as u64);
             metrics.set_gauge(&format!("worker.{tag}.kv_blocks_total"), st.total_blocks as u64);
+            // extra handles onto leased blocks (prefix/fork sharing) —
+            // each physical block is billed once in kv_blocks_used
+            metrics.set_gauge(&format!("worker.{tag}.kv_blocks_shared"), st.shared_refs as u64);
             metrics.set_gauge(
                 &format!("worker.{tag}.kv_preempted_waiting"),
                 scheduler.n_preempted() as u64,
@@ -275,6 +319,14 @@ fn worker_loop(
                     dp.used_blocks() as u64,
                 );
             }
+        }
+
+        // 3d. prefix-cache gauges (present only when the cache is live)
+        if let Some(ps) = scheduler.prefix_stats() {
+            metrics.set_gauge(&format!("worker.{tag}.prefix_hits"), ps.hits);
+            metrics.set_gauge(&format!("worker.{tag}.prefix_tokens_reused"), ps.tokens_reused);
+            metrics.set_gauge(&format!("worker.{tag}.prefix_entries"), ps.entries as u64);
+            metrics.set_gauge(&format!("worker.{tag}.prefix_evictions"), ps.evictions);
         }
 
         // 4. deliver finished responses
@@ -365,6 +417,40 @@ mod tests {
             server.metrics.gauge("worker.fp16.spec_accepted")
                 <= server.metrics.gauge("worker.fp16.spec_drafted")
         );
+        server.shutdown();
+    }
+
+    #[test]
+    fn prefix_cache_serves_shared_system_prompts_and_exports_gauges() {
+        // one system prompt shared by every request: after the first
+        // prefill the rest attach its blocks, so the hit/reuse gauges
+        // move and the shared-refs gauge is exported alongside occupancy
+        let server = Server::start(
+            vec![("fp16".to_string(), micro_engine(13))],
+            ServerConfig { prefix_cache: true, ..Default::default() },
+        )
+        .unwrap();
+        // one whole block at the default 16-position block size
+        let sys: Vec<u32> = (0..16u32).map(|i| i % 60).collect();
+        let mut rxs = Vec::new();
+        for i in 0..5u32 {
+            let mut prompt = sys.clone();
+            prompt.push(60 + (i % 3));
+            let mut req = Request::new(0, prompt, 4);
+            req.config = "fp16".to_string();
+            rxs.push(server.submit(req));
+        }
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+            assert_eq!(resp.tokens.len(), 4);
+        }
+        assert_eq!(server.metrics.counter("worker.fp16.completed"), 5);
+        assert!(
+            server.metrics.gauge("worker.fp16.prefix_hits") >= 4,
+            "every request after the first shares the system prompt"
+        );
+        assert!(server.metrics.gauge("worker.fp16.prefix_tokens_reused") >= 4 * 16);
+        assert!(server.metrics.gauge("worker.fp16.prefix_entries") >= 1);
         server.shutdown();
     }
 

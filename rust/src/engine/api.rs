@@ -9,10 +9,12 @@
 //! internally, so callers never see the concrete cache type.
 
 use std::any::Any;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::model::{KvCacheConfig, KvPoolStatus, ModelConfig, Sampler};
+use crate::runtime::SessionFile;
 use crate::spec::{SpecConfig, SpecOutcome};
 
 /// Which execution path an engine runs on.
@@ -80,6 +82,23 @@ pub trait EngineSession: Send {
     fn as_any_mut(&mut self) -> &mut dyn Any;
 }
 
+/// An engine-owned handle to a shared, immutable KV prefix: whole blocks
+/// of some session's cache, pinned by refcount. The prefix index holds
+/// these; attaching one to a fresh session makes prefill skip the covered
+/// positions entirely (`docs/SERVING.md` §prefix cache). Dropping the
+/// handle unpins the blocks — they return to the pool once no session
+/// references them either.
+pub trait KvPrefix: Send + Sync {
+    /// Positions the prefix covers (always a whole-block multiple).
+    fn token_count(&self) -> usize;
+
+    /// Blocks pinned by this handle.
+    fn block_count(&self) -> usize;
+
+    /// Downcast hook for the owning engine.
+    fn as_any(&self) -> &dyn Any;
+}
+
 /// A built inference engine: the only interface the coordinator, the eval
 /// harnesses, and the benches consume. Construct via
 /// [`super::EngineBuilder`].
@@ -109,6 +128,59 @@ pub trait InferenceEngine: Send + Sync {
     /// coordinator falls back to slot-only admission.
     fn kv_pool_status(&self) -> Option<KvPoolStatus> {
         None
+    }
+
+    // -- prefix cache (docs/SERVING.md §prefix cache) ----------------------
+
+    /// Whether this engine can share KV prefixes across sessions. The
+    /// scheduler only builds its radix index when this is true; engines
+    /// that can't (PJRT device caches, speculative engines whose draft
+    /// cache would fall out of sync with an attached target prefix)
+    /// silently degrade to full prefill.
+    fn supports_prefix_cache(&self) -> bool {
+        false
+    }
+
+    /// Pin the leading whole blocks of `session`'s cache covering at most
+    /// `upto_tokens` positions as a shareable prefix. The handle may
+    /// cover 0 tokens (prompt shorter than one block) — callers skip
+    /// registering those.
+    fn export_prefix(
+        &self,
+        upto_tokens: usize,
+        session: &mut dyn EngineSession,
+    ) -> Result<Arc<dyn KvPrefix>> {
+        let _ = (upto_tokens, session);
+        bail!("engine '{}' has no prefix cache support", self.spec().backend)
+    }
+
+    /// Attach a previously exported prefix to a *fresh* session by
+    /// reference (copy-on-write — no blocks are copied) and return the
+    /// number of positions now resident; prefill the remaining prompt
+    /// tail only. Fails if the prefix belongs to another engine's pool.
+    fn attach_prefix(
+        &self,
+        prefix: &dyn KvPrefix,
+        session: &mut dyn EngineSession,
+    ) -> Result<usize> {
+        let _ = (prefix, session);
+        bail!("engine '{}' has no prefix cache support", self.spec().backend)
+    }
+
+    /// Serialize a prefix (with `tokens`, the ids its pages encode) into
+    /// an `.abqs` session file carrying this engine's fingerprint.
+    fn save_prefix(&self, tokens: &[u32], prefix: &dyn KvPrefix) -> Result<SessionFile> {
+        let _ = (tokens, prefix);
+        bail!("engine '{}' has no prefix cache support", self.spec().backend)
+    }
+
+    /// Load an `.abqs` session file back into pool blocks, returning the
+    /// prefix tokens and an attachable handle. Rejects files whose
+    /// fingerprint (model config, backend tag, KV config) does not match
+    /// this engine exactly.
+    fn restore_prefix(&self, file: &SessionFile) -> Result<(Vec<u32>, Arc<dyn KvPrefix>)> {
+        let _ = file;
+        bail!("engine '{}' has no prefix cache support", self.spec().backend)
     }
 
     // -- speculative decoding (docs/SPECULATIVE.md) ------------------------

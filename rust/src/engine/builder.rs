@@ -382,6 +382,15 @@ pub fn backend_tag(spec: &str) -> Result<String> {
     }
 }
 
+/// [`backend_tag`] with a total fallback: backends without an artifact
+/// tag (`int8`, `fp32`-family-free custom specs) use the trimmed spec
+/// string itself. This is the tag `.abqs` session-file fingerprints
+/// carry — it only has to be *stable and distinct* per quant config, not
+/// filesystem-pretty.
+pub fn session_tag(spec: &str) -> String {
+    backend_tag(spec).unwrap_or_else(|_| spec.trim().to_string())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -392,6 +401,13 @@ mod tests {
         assert_eq!(backend_tag("abq:w2*a8").unwrap(), "w2sa8");
         assert_eq!(backend_tag("w2sa8").unwrap(), "w2sa8");
         assert!(backend_tag("int8").is_err());
+    }
+
+    #[test]
+    fn session_tags_are_total() {
+        assert_eq!(session_tag("abq:w2*a8"), "w2sa8");
+        assert_eq!(session_tag("fp32"), "fp16");
+        assert_eq!(session_tag("int8"), "int8");
     }
 
     #[test]

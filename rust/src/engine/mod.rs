@@ -38,10 +38,15 @@ pub mod native;
 pub mod pjrt;
 pub mod registry;
 
-pub use api::{generate, EngineSession, EngineSpec, Execution, InferenceEngine, MemoryReport};
-pub use builder::{backend_tag, EngineBuilder};
+pub use api::{
+    generate, EngineSession, EngineSpec, Execution, InferenceEngine, KvPrefix, MemoryReport,
+};
+pub use builder::{backend_tag, session_tag, EngineBuilder};
 // KV paging configuration is part of the construction surface
 pub use crate::model::{KvCacheConfig, KvPoolStatus};
+// `.abqs` prefix session files travel through the engine's
+// save_prefix/restore_prefix (see docs/SERVING.md §prefix cache)
+pub use crate::runtime::{SessionFile, SessionFingerprint};
 // learned distribution corrections travel through the builder and
 // `PrepareCtx` (see docs/CALIBRATION.md)
 pub use crate::quant::{Correction, CorrectionSet};

@@ -18,16 +18,21 @@
 //! per-sequence verify/commit described in `docs/SPECULATIVE.md`.
 
 use std::any::Any;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::model::{
-    ForwardScratch, KvCacheConfig, KvPool, KvPoolStatus, KvStore, PagedKvCache, Sampler,
-    Transformer,
+    BlockRef, ForwardScratch, KvCacheConfig, KvPool, KvPoolStatus, KvStore, PagedKvCache,
+    Sampler, Transformer,
 };
+use crate::runtime::{SessionFile, SessionFingerprint};
 use crate::spec::{bonus_token, draft_token, verify_token, SpecConfig, SpecOutcome, Verdict};
 
-use super::api::{EngineSession, EngineSpec, Execution, InferenceEngine, MemoryReport};
+use super::api::{
+    EngineSession, EngineSpec, Execution, InferenceEngine, KvPrefix, MemoryReport,
+};
+use super::builder::session_tag;
 
 /// The low-bit draft half of a speculative engine: a second
 /// instantiation of the same weights plus its own block pool (draft KV
@@ -102,6 +107,46 @@ impl NativeEngine {
     pub fn model(&self) -> &Transformer {
         &self.model
     }
+
+    /// What `.abqs` files written by this engine carry, and what loaded
+    /// files must match exactly.
+    fn session_fingerprint(&self) -> SessionFingerprint {
+        SessionFingerprint::of(&self.spec.model, &session_tag(&self.spec.backend), &self.spec.kv)
+    }
+
+    fn reject_draft(&self, what: &str) -> Result<()> {
+        if self.draft.is_some() {
+            bail!(
+                "{what} is not supported on speculative engines \
+                 (the draft pool holds no shareable prefix, so an attached \
+                 target prefix would desynchronize the draft cache)"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Refcount-pinned whole blocks of one session's cache (see
+/// [`KvPrefix`]). Holding this keeps the blocks leased; sessions attach
+/// them by reference and copy-on-write on divergence.
+struct NativePrefix {
+    pool: KvPool,
+    blocks: Vec<BlockRef>,
+    tokens: usize,
+}
+
+impl KvPrefix for NativePrefix {
+    fn token_count(&self) -> usize {
+        self.tokens
+    }
+
+    fn block_count(&self) -> usize {
+        self.blocks.len()
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
 }
 
 /// Draft-side sequence state of a speculative session.
@@ -135,8 +180,9 @@ impl EngineSession for NativeSession {
     }
 
     fn fork(&self) -> Result<Box<dyn EngineSession>> {
-        // the fork gets copies of the leased blocks and its own (cold)
-        // arena; it warms on first use
+        // O(1): the fork shares the leased blocks by reference and only
+        // copies a block when one side first writes to it (COW); the fork
+        // gets its own (cold) arena that warms on first use
         Ok(Box::new(NativeSession {
             cache: self.cache.try_clone()?,
             scratch: ForwardScratch::new(),
@@ -235,6 +281,78 @@ impl InferenceEngine for NativeEngine {
 
     fn kv_pool_status(&self) -> Option<KvPoolStatus> {
         Some(self.pool.status())
+    }
+
+    fn supports_prefix_cache(&self) -> bool {
+        // speculative engines are excluded: an attached target prefix has
+        // no draft-side KV, so the first spec_round would be out of sync
+        self.draft.is_none()
+    }
+
+    fn export_prefix(
+        &self,
+        upto_tokens: usize,
+        session: &mut dyn EngineSession,
+    ) -> Result<Arc<dyn KvPrefix>> {
+        self.reject_draft("prefix export")?;
+        let s = downcast(session)?;
+        let (tokens, blocks) = s.cache.share_prefix(upto_tokens);
+        Ok(Arc::new(NativePrefix { pool: self.pool.clone(), blocks, tokens }))
+    }
+
+    fn attach_prefix(
+        &self,
+        prefix: &dyn KvPrefix,
+        session: &mut dyn EngineSession,
+    ) -> Result<usize> {
+        self.reject_draft("prefix attach")?;
+        let p = prefix
+            .as_any()
+            .downcast_ref::<NativePrefix>()
+            .ok_or_else(|| anyhow!("prefix does not belong to a native engine"))?;
+        if !self.pool.same_pool(&p.pool) {
+            bail!("prefix belongs to a different engine's KV pool");
+        }
+        let s = downcast(session)?;
+        s.cache.attach_prefix(p.blocks.clone(), p.tokens)?;
+        Ok(p.tokens)
+    }
+
+    fn save_prefix(&self, tokens: &[u32], prefix: &dyn KvPrefix) -> Result<SessionFile> {
+        let p = prefix
+            .as_any()
+            .downcast_ref::<NativePrefix>()
+            .ok_or_else(|| anyhow!("prefix does not belong to a native engine"))?;
+        if tokens.len() != p.tokens {
+            bail!(
+                "token stream ({}) does not cover the prefix ({} positions)",
+                tokens.len(),
+                p.tokens
+            );
+        }
+        Ok(SessionFile {
+            fingerprint: self.session_fingerprint(),
+            tokens: tokens.to_vec(),
+            pages: p.blocks.iter().map(|b| self.pool.block_to_bytes(b)).collect(),
+        })
+    }
+
+    fn restore_prefix(&self, file: &SessionFile) -> Result<(Vec<u32>, Arc<dyn KvPrefix>)> {
+        self.reject_draft("prefix restore")?;
+        let want = self.session_fingerprint();
+        if file.fingerprint != want {
+            bail!(
+                "session file fingerprint mismatch:\n  file:   {:?}\n  engine: {:?}",
+                file.fingerprint,
+                want
+            );
+        }
+        let mut blocks = Vec::with_capacity(file.pages.len());
+        for page in &file.pages {
+            blocks.push(self.pool.block_from_bytes(page)?);
+        }
+        let prefix = NativePrefix { pool: self.pool.clone(), blocks, tokens: file.tokens.len() };
+        Ok((file.tokens.clone(), Arc::new(prefix)))
     }
 
     fn spec_config(&self) -> Option<&SpecConfig> {

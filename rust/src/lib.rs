@@ -56,9 +56,12 @@
 //! * [`coordinator`] — serving: router, dynamic batcher, block-aware
 //!   continuous-batching scheduler with preemption and per-sequence
 //!   speculation
-//! * [`runtime`] — artifact manifest grammar (always available) plus the
-//!   PJRT executor for the AOT HLO artifacts (jax/pallas L2+L1; the
-//!   executor needs `--features pjrt`)
+//! * [`prefix`] — prefix cache subsystem: radix token-trie over resident
+//!   prefix KV + persistent `.abqs` session store, riding the pool's
+//!   copy-on-write block sharing (`docs/SERVING.md` §prefix cache)
+//! * [`runtime`] — artifact manifest grammar and `.abqs` session files
+//!   (always available) plus the PJRT executor for the AOT HLO artifacts
+//!   (jax/pallas L2+L1; the executor needs `--features pjrt`)
 //! * [`eval`] — synthetic corpus, perplexity, zero-shot harness
 //! * [`util`] — offline substrates (thread pool, JSON, CLI, bench, proptest)
 
@@ -69,6 +72,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod eval;
 pub mod model;
+pub mod prefix;
 pub mod quant;
 pub mod runtime;
 pub mod spec;

@@ -21,6 +21,11 @@
 //! `--spec-draft w2*a8 --spec-k 4` drafts 4 tokens per round with a
 //! w2*a8 instantiation of the same weights and verifies them in one
 //! target-precision pass — lossless under greedy decoding.
+//!
+//! Prefix cache (`serve`, docs/SERVING.md §prefix cache):
+//! `--prefix-cache` shares the KV of common prompt prefixes across
+//! requests via copy-on-write block attach; `--session-dir DIR` also
+//! persists them as `.abqs` session files, warm across restarts.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
@@ -103,7 +108,8 @@ fn main() -> Result<()> {
                 "usage: abq-llm <info|run|serve|eval|zeroshot|calibrate|gemm|pjrt> \
                  [--artifacts DIR] [--backend fp32|int8|int4|abq] [--config w2*a8] \
                  [--threads N] [--no-correction] \
-                 [--spec-draft w2*a8 --spec-k 4] ..."
+                 [--spec-draft w2*a8 --spec-k 4] \
+                 [--prefix-cache [--session-dir DIR]] ..."
             );
             Ok(())
         }
@@ -377,10 +383,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         replicas.push(("fp16".to_string(), fp));
     }
     let default_tag = replicas[0].0.clone();
+    // prefix cache: --prefix-cache [--session-dir DIR]
+    // (docs/SERVING.md §prefix cache)
+    let prefix_cache = args.has_flag("prefix-cache");
+    let session_dir = args.get("session-dir").map(PathBuf::from);
+    if session_dir.is_some() && !prefix_cache {
+        eprintln!("note: --session-dir has no effect without --prefix-cache");
+    }
     println!(
         "serving {} on {addr} (default config {default_tag})",
         replicas.iter().map(|(t, _)| t.as_str()).collect::<Vec<_>>().join(", ")
     );
+    if prefix_cache {
+        match &session_dir {
+            Some(d) => println!("  prefix cache: on (sessions persisted under {d:?})"),
+            None => println!("  prefix cache: on (in-memory only)"),
+        }
+    }
     for (tag, engine) in &replicas {
         let mem = engine.memory_report();
         println!(
@@ -407,7 +426,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
         }
     }
-    let server = Server::start(replicas, ServerConfig { default_tag, ..Default::default() })?;
+    let server = Server::start(
+        replicas,
+        ServerConfig { default_tag, prefix_cache, session_dir, ..Default::default() },
+    )?;
 
     let listener = TcpListener::bind(&addr)?;
     for stream in listener.incoming() {

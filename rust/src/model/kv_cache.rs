@@ -13,6 +13,13 @@ use super::config::ModelConfig;
 /// position order per layer; reads go through a gather (dequant-into-
 /// scratch for quantized pages, plain copy for fp32) so the attention
 /// inner loops always run over contiguous rows.
+///
+/// Implementations may share physical storage between stores (the paged
+/// store leases refcounted blocks, shared by `fork` and by prefix-cache
+/// attach). The contract is copy-on-write: a write through one store is
+/// never observable through another, and `gather_*` results depend only
+/// on what was written through *this* store's positions — sharing is an
+/// invisible optimization (`docs/SERVING.md` §prefix cache).
 pub trait KvStore {
     /// Tokens stored so far (positions `[0, pos)` are valid).
     fn pos(&self) -> usize;

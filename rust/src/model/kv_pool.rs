@@ -15,6 +15,16 @@
 //!   sequences — at a fixed byte budget (asserted in
 //!   `rust/tests/prop_coordinator.rs`).
 //!
+//! A third lever, **sharing**, stacks on top: blocks are leased through
+//! refcounted [`BlockRef`] handles, so a session fork or a prefix-cache
+//! attach adds *references* to resident blocks instead of copying them.
+//! Shared blocks are strictly read-only through the block table — the
+//! first write a session directs at one (decode append, in-block
+//! requantize on scale growth, speculative rollback) transparently
+//! materializes a private copy first (copy-on-write). The pool counts
+//! each physical block once no matter how many tables reference it, which
+//! is what [`KvPoolStatus`] and the serving metrics report.
+//!
 //! Scales grow monotonically: a block's `(layer, head)` scale is set by
 //! the first row written and, when a later row's absmax exceeds it, the
 //! already-written rows of that head slab are requantized in code space
@@ -27,6 +37,7 @@
 //! the steady-state decode loop stays allocation-free (`docs/PERF.md`,
 //! `docs/SERVING.md`).
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
@@ -181,6 +192,12 @@ impl KvBlock {
         KvBlock { data }
     }
 
+    /// Zero-capacity placeholder used when moving the real buffer out of
+    /// a dropped [`BlockSlot`]; never enters the pool's free list.
+    fn empty() -> Self {
+        KvBlock { data: BlockData::F32 { k: Vec::new(), v: Vec::new() } }
+    }
+
     fn copy_from(&mut self, other: &KvBlock) {
         match (&mut self.data, &other.data) {
             (BlockData::F32 { k, v }, BlockData::F32 { k: ok, v: ov }) => {
@@ -198,6 +215,68 @@ impl KvBlock {
             }
             _ => unreachable!("pool never mixes block storage kinds"),
         }
+    }
+
+    /// Serialize to the `.abqs` page payload: exact little-endian bit
+    /// patterns, `K codes | V codes | K scales | V scales` (fp32 blocks
+    /// are `K rows | V rows`). Always [`KvLayout::block_bytes`] long.
+    fn to_bytes(&self) -> Vec<u8> {
+        match &self.data {
+            BlockData::F32 { k, v } => {
+                let mut b = Vec::with_capacity((k.len() + v.len()) * 4);
+                for x in k.iter().chain(v.iter()) {
+                    b.extend_from_slice(&x.to_le_bytes());
+                }
+                b
+            }
+            BlockData::Quant { k, v, k_scale, v_scale } => {
+                let mut b = Vec::with_capacity(
+                    k.len() + v.len() + (k_scale.len() + v_scale.len()) * 4,
+                );
+                b.extend_from_slice(k);
+                b.extend_from_slice(v);
+                for x in k_scale.iter().chain(v_scale.iter()) {
+                    b.extend_from_slice(&x.to_le_bytes());
+                }
+                b
+            }
+        }
+    }
+
+    /// Inverse of [`to_bytes`](Self::to_bytes) for this layout; rejects
+    /// payloads whose byte count does not match the layout exactly.
+    fn from_bytes(l: &KvLayout, buf: &[u8]) -> Result<KvBlock> {
+        if buf.len() != l.block_bytes() {
+            bail!(
+                "KV page payload is {} bytes, layout needs {}",
+                buf.len(),
+                l.block_bytes()
+            );
+        }
+        let mut block = KvBlock::new(l);
+        let mut off = 0usize;
+        let take_f32 = |dst: &mut [f32], buf: &[u8], off: &mut usize| {
+            for x in dst.iter_mut() {
+                *x = f32::from_le_bytes(buf[*off..*off + 4].try_into().unwrap());
+                *off += 4;
+            }
+        };
+        match &mut block.data {
+            BlockData::F32 { k, v } => {
+                take_f32(k, buf, &mut off);
+                take_f32(v, buf, &mut off);
+            }
+            BlockData::Quant { k, v, k_scale, v_scale } => {
+                k.copy_from_slice(&buf[off..off + k.len()]);
+                off += k.len();
+                v.copy_from_slice(&buf[off..off + v.len()]);
+                off += v.len();
+                take_f32(k_scale, buf, &mut off);
+                take_f32(v_scale, buf, &mut off);
+            }
+        }
+        debug_assert_eq!(off, buf.len());
+        Ok(block)
     }
 
     /// Write one side's row at in-block index `idx`; `idx` is also the
@@ -311,6 +390,56 @@ impl KvBlock {
     }
 }
 
+/// A refcounted lease of one pool block. Clones share the same physical
+/// block (and are what `fork` and prefix attach hand out); the buffer
+/// returns to the pool's free list when the last reference drops. The
+/// block is writable only while the reference is exclusive — writers go
+/// through [`PagedKvCache`]'s copy-on-write path, never through a shared
+/// handle.
+pub struct BlockRef(Arc<BlockSlot>);
+
+struct BlockSlot {
+    pool: KvPool,
+    block: KvBlock,
+}
+
+impl Drop for BlockSlot {
+    fn drop(&mut self) {
+        // last reference gone: move the real buffer back to the free list
+        let block = std::mem::replace(&mut self.block, KvBlock::empty());
+        self.pool.release(block);
+    }
+}
+
+impl BlockRef {
+    fn block(&self) -> &KvBlock {
+        &self.0.block
+    }
+
+    /// No other session or prefix-index entry references this block?
+    fn is_exclusive(&self) -> bool {
+        Arc::strong_count(&self.0) == 1
+    }
+
+    /// Mutable access, granted only while exclusive.
+    fn block_mut(&mut self) -> Option<&mut KvBlock> {
+        Arc::get_mut(&mut self.0).map(|slot| &mut slot.block)
+    }
+}
+
+impl Clone for BlockRef {
+    fn clone(&self) -> Self {
+        self.0.pool.inner.refs.fetch_add(1, Ordering::Relaxed);
+        BlockRef(Arc::clone(&self.0))
+    }
+}
+
+impl Drop for BlockRef {
+    fn drop(&mut self) {
+        self.0.pool.inner.refs.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
 /// Point-in-time pool occupancy (what the scheduler's block-aware
 /// admission and the serving metrics consume).
 #[derive(Clone, Copy, Debug)]
@@ -320,9 +449,20 @@ pub struct KvPoolStatus {
     pub block_size: usize,
     pub block_bytes: usize,
     pub bits: u8,
+    /// block-table references resolved by sharing instead of a new lease
+    /// (0 when nothing is shared; each extra reference to an
+    /// already-leased block counts once)
+    pub shared_refs: usize,
+    /// KV rows written through any session of this pool since
+    /// construction — the prefill/decode op counter the tail-only-prefill
+    /// tests assert on
+    pub rows_written: u64,
+    /// shared blocks privatized by a first write (copy-on-write copies)
+    pub cow_copies: u64,
 }
 
 impl KvPoolStatus {
+    /// Unique physical blocks leased; shared blocks count once.
     pub fn used_blocks(&self) -> usize {
         self.total_blocks - self.free_blocks
     }
@@ -348,10 +488,16 @@ struct PoolShared {
     max_seq: usize,
     max_blocks: usize,
     state: Mutex<PoolState>,
+    /// total [`BlockRef`] handles alive across all block tables; minus
+    /// `leased` this is the sharing win the metrics report
+    refs: AtomicUsize,
+    rows_written: AtomicU64,
+    cow_copies: AtomicU64,
 }
 
 struct PoolState {
     free: Vec<KvBlock>,
+    /// unique physical blocks out on lease (shared blocks count once)
     leased: usize,
 }
 
@@ -380,6 +526,9 @@ impl KvPool {
                 max_seq: m.max_seq,
                 max_blocks,
                 state: Mutex::new(PoolState { free: Vec::new(), leased: 0 }),
+                refs: AtomicUsize::new(0),
+                rows_written: AtomicU64::new(0),
+                cow_copies: AtomicU64::new(0),
             }),
         })
     }
@@ -405,6 +554,9 @@ impl KvPool {
             block_size: self.inner.layout.block_size,
             block_bytes: self.inner.layout.block_bytes(),
             bits: self.inner.layout.bits,
+            shared_refs: self.inner.refs.load(Ordering::Relaxed).saturating_sub(st.leased),
+            rows_written: self.inner.rows_written.load(Ordering::Relaxed),
+            cow_copies: self.inner.cow_copies.load(Ordering::Relaxed),
         }
     }
 
@@ -414,6 +566,43 @@ impl KvPool {
 
     pub fn blocks_for(&self, positions: usize) -> usize {
         positions.div_ceil(self.inner.layout.block_size)
+    }
+
+    /// Two handles on the same physical pool? (Prefix blocks can only be
+    /// attached to sessions of the pool that leased them.)
+    pub fn same_pool(&self, other: &KvPool) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
+    }
+
+    /// Serialize a leased block to its `.abqs` page payload.
+    pub fn block_to_bytes(&self, b: &BlockRef) -> Vec<u8> {
+        b.block().to_bytes()
+    }
+
+    /// Lease a fresh block and fill it from an `.abqs` page payload
+    /// (byte count must match this pool's layout exactly).
+    pub fn block_from_bytes(&self, buf: &[u8]) -> Result<BlockRef> {
+        let block = KvBlock::from_bytes(&self.inner.layout, buf)?;
+        // adopt the parsed buffer under lease accounting (the free-list
+        // buffer a plain lease would have reused stays in the free list)
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            if st.leased >= self.inner.max_blocks {
+                bail!(
+                    "KV pool exhausted: {}/{} blocks leased",
+                    st.leased,
+                    self.inner.max_blocks
+                );
+            }
+            st.leased += 1;
+        }
+        self.inner.refs.fetch_add(1, Ordering::Relaxed);
+        Ok(BlockRef(Arc::new(BlockSlot { pool: self.clone(), block })))
+    }
+
+    /// Serialized size of one page payload for this pool's layout.
+    pub fn page_bytes(&self) -> usize {
+        self.inner.layout.block_bytes()
     }
 
     fn lease(&self) -> Result<KvBlock> {
@@ -429,6 +618,12 @@ impl KvPool {
         Ok(st.free.pop().unwrap_or_else(|| KvBlock::new(&self.inner.layout)))
     }
 
+    fn lease_ref(&self) -> Result<BlockRef> {
+        let block = self.lease()?;
+        self.inner.refs.fetch_add(1, Ordering::Relaxed);
+        Ok(BlockRef(Arc::new(BlockSlot { pool: self.clone(), block })))
+    }
+
     fn release(&self, block: KvBlock) {
         let mut st = self.inner.state.lock().unwrap();
         debug_assert!(st.leased > 0, "release without lease");
@@ -440,9 +635,14 @@ impl KvPool {
 /// Per-sequence view over pool-leased blocks: the block table plus the
 /// write position. Positions `[0, pos)` are valid; the block covering
 /// position `p` is `blocks[p / block_size]`, row `p % block_size`.
+///
+/// Entries in `blocks` may be shared with other sessions (after a fork)
+/// or with the prefix index (after an attach). Reads go straight through;
+/// the first write to a shared block materializes a private copy
+/// (copy-on-write), so no session ever observes another session's writes.
 pub struct PagedKvCache {
     pool: KvPool,
-    blocks: Vec<KvBlock>,
+    blocks: Vec<BlockRef>,
     pos: usize,
     max_seq: usize,
     /// position at which the open speculative window started, if any
@@ -471,30 +671,78 @@ impl PagedKvCache {
         self.blocks.len()
     }
 
-    /// Resident bytes actually leased (the `kv_bytes` a session reports).
+    /// Resident bytes this session's block table references (each sharer
+    /// reports shared blocks; pool-level accounting counts them once).
     pub fn bytes(&self) -> usize {
         self.blocks.len() * self.pool.block_bytes()
     }
 
-    /// Deep copy for session forking: leases fresh blocks from the pool
-    /// (fails when the pool cannot cover them). Any open speculative
+    /// Copy-on-write fork: shares every block by reference — O(1), no new
+    /// leases. The first write either side directs at a shared block
+    /// materializes a private copy for that side. Any open speculative
     /// window stays with the original — the fork starts clean.
+    ///
+    /// Kept fallible for call-site compatibility (it cannot currently
+    /// fail; divergence cost is paid later, at first write).
     pub fn try_clone(&self) -> Result<PagedKvCache> {
-        let mut blocks = Vec::with_capacity(self.blocks.len());
-        for b in &self.blocks {
-            let mut nb = self.pool.lease()?;
-            nb.copy_from(b);
-            blocks.push(nb);
-        }
         Ok(PagedKvCache {
             pool: self.pool.clone(),
-            blocks,
+            blocks: self.blocks.clone(),
             pos: self.pos,
             max_seq: self.max_seq,
             snap_pos: None,
             snap_block: None,
             snap_spare: None,
         })
+    }
+
+    /// Share the leading whole blocks covering at most `upto` positions:
+    /// returns the shared position count (a block multiple, possibly 0)
+    /// and one reference per shared block. Partial tail blocks are never
+    /// shared — their scales are still mutable.
+    pub fn share_prefix(&self, upto: usize) -> (usize, Vec<BlockRef>) {
+        let bs = self.pool.inner.layout.block_size;
+        let n = upto.min(self.pos) / bs;
+        (n * bs, self.blocks[..n].to_vec())
+    }
+
+    /// Adopt shared prefix blocks into a fresh session and move the write
+    /// position past them; prefill then continues from `positions` with
+    /// only the unshared tail.
+    pub fn attach_prefix(&mut self, blocks: Vec<BlockRef>, positions: usize) -> Result<()> {
+        if self.pos != 0 || !self.blocks.is_empty() {
+            bail!("prefix attach needs a fresh session (pos {})", self.pos);
+        }
+        let bs = self.pool.inner.layout.block_size;
+        if positions != blocks.len() * bs {
+            bail!(
+                "prefix covers {positions} positions but {} blocks × {bs} were attached",
+                blocks.len()
+            );
+        }
+        if positions > self.max_seq {
+            bail!("prefix ({positions} positions) exceeds max_seq {}", self.max_seq);
+        }
+        self.blocks = blocks;
+        self.pos = positions;
+        Ok(())
+    }
+
+    /// Materialize a private copy of block `i` when it is shared: leases
+    /// a fresh block, copies the bytes, and swaps the reference; peers
+    /// keep the original (copy-on-write).
+    fn privatize(&mut self, i: usize) -> Result<()> {
+        if self.blocks[i].is_exclusive() {
+            return Ok(());
+        }
+        let mut fresh = self.pool.lease_ref()?;
+        fresh
+            .block_mut()
+            .expect("fresh lease is exclusive")
+            .copy_from(self.blocks[i].block());
+        self.pool.inner.cow_copies.fetch_add(1, Ordering::Relaxed);
+        self.blocks[i] = fresh;
+        Ok(())
     }
 }
 
@@ -520,9 +768,20 @@ impl KvStore for PagedKvCache {
                 self.max_seq
             );
         }
+        if additional == 0 {
+            return Ok(());
+        }
         let needed = self.pool.blocks_for(self.pos + additional);
+        // copy-on-write: the coming writes land in [pos, pos+additional),
+        // so privatize any shared block that window touches up front —
+        // here pool exhaustion is still a clean, recoverable error (in
+        // practice only a partial tail left by fork/attach is affected)
+        let first = self.pos / self.pool.inner.layout.block_size;
+        for i in first..self.blocks.len().min(needed) {
+            self.privatize(i)?;
+        }
         while self.blocks.len() < needed {
-            self.blocks.push(self.pool.lease()?);
+            self.blocks.push(self.pool.lease_ref()?);
         }
         Ok(())
     }
@@ -530,7 +789,17 @@ impl KvStore for PagedKvCache {
     fn write_row(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
         let l = self.pool.inner.layout;
         let (b, idx) = (pos / l.block_size, pos % l.block_size);
-        self.blocks[b].write_row(&l, layer, idx, k_row, v_row);
+        if !self.blocks[b].is_exclusive() {
+            // a write that bypassed `reserve` still honours copy-on-write;
+            // exhaustion here is an invariant breach (reserve() is the
+            // fallible path that must precede writes)
+            self.privatize(b).expect("KV pool exhausted during copy-on-write");
+        }
+        self.pool.inner.rows_written.fetch_add(1, Ordering::Relaxed);
+        self.blocks[b]
+            .block_mut()
+            .expect("privatized above")
+            .write_row(&l, layer, idx, k_row, v_row);
     }
 
     fn gather_k(&self, layer: usize, upto: usize, out: &mut [f32]) {
@@ -541,7 +810,7 @@ impl KvStore for PagedKvCache {
                 break;
             }
             let rows = (upto - p).min(l.block_size);
-            block.gather_k(&l, layer, rows, &mut out[p * l.d_model..(p + rows) * l.d_model]);
+            block.block().gather_k(&l, layer, rows, &mut out[p * l.d_model..(p + rows) * l.d_model]);
             p += rows;
         }
     }
@@ -554,7 +823,7 @@ impl KvStore for PagedKvCache {
                 break;
             }
             let rows = (upto - p).min(l.block_size);
-            block.gather_v(&l, layer, rows, &mut out[p * l.d_model..(p + rows) * l.d_model]);
+            block.block().gather_v(&l, layer, rows, &mut out[p * l.d_model..(p + rows) * l.d_model]);
             p += rows;
         }
     }
@@ -571,7 +840,7 @@ impl KvStore for PagedKvCache {
             // speculative writes into the partial tail block can grow its
             // per-(layer, head) scales and requantize the committed rows;
             // keep a byte copy so `truncate` can undo that exactly
-            let src = &self.blocks[self.pos / l.block_size];
+            let src = self.blocks[self.pos / l.block_size].block();
             let mut buf = self.snap_spare.take().unwrap_or_else(|| KvBlock::new(&l));
             buf.copy_from(src);
             Some(buf)
@@ -592,26 +861,29 @@ impl KvStore for PagedKvCache {
                 // only restore when rewinding at/under the snapshot — a
                 // truncate past it means the window was abandoned
                 if pos <= sp {
-                    self.blocks[sp / l.block_size].copy_from(&buf);
+                    let bi = sp / l.block_size;
+                    match self.blocks[bi].block_mut() {
+                        Some(b) => b.copy_from(&buf),
+                        None => {
+                            // still shared ⇒ no speculative row reached this
+                            // block (writes privatize first), so its bytes
+                            // already equal the snapshot — nothing to undo
+                            debug_assert_eq!(
+                                self.blocks[bi].block().to_bytes(),
+                                buf.to_bytes(),
+                                "shared tail diverged from its speculation snapshot"
+                            );
+                        }
+                    }
                 }
                 self.snap_spare = Some(buf);
             }
         }
-        // release whole blocks past the new watermark back to the pool
+        // drop whole blocks past the new watermark (each returns to the
+        // pool only when its last sharer lets go)
         let keep = pos.div_ceil(l.block_size);
-        while self.blocks.len() > keep {
-            let b = self.blocks.pop().expect("len > keep");
-            self.pool.release(b);
-        }
+        self.blocks.truncate(keep);
         self.pos = pos;
-    }
-}
-
-impl Drop for PagedKvCache {
-    fn drop(&mut self) {
-        for b in self.blocks.drain(..) {
-            self.pool.release(b);
-        }
     }
 }
 
@@ -722,7 +994,7 @@ mod tests {
     }
 
     #[test]
-    fn fork_copies_blocks_and_leases_independently() {
+    fn fork_is_copy_on_write_and_counts_shared_blocks_once() {
         let pool = KvPool::new(&TINY, &kv(8, 8), None).unwrap();
         let mut a = pool.new_cache();
         a.reserve(10).unwrap();
@@ -732,14 +1004,105 @@ mod tests {
             a.write_row(1, p, &r, &r);
         }
         a.set_pos(10);
-        let b = a.try_clone().unwrap();
-        assert_eq!(pool.status().used_blocks(), 4);
+        let mut b = a.try_clone().unwrap();
+        // O(1) fork: no new physical blocks, 2 extra shared references
+        let st = pool.status();
+        assert_eq!(st.used_blocks(), 2, "fork must not lease");
+        assert_eq!(st.shared_refs, 2);
         let (mut ga, mut gb) = (vec![0f32; 10 * d], vec![0f32; 10 * d]);
         a.gather_k(1, 10, &mut ga);
         b.gather_k(1, 10, &mut gb);
         assert_eq!(ga, gb);
+
+        // first divergent write privatizes exactly the touched tail block
+        b.reserve(1).unwrap();
+        let burst = row(99, d, 3.0); // grows b's tail scales
+        b.write_row(1, 10, &burst, &burst);
+        b.set_pos(11);
+        let st = pool.status();
+        assert_eq!(st.used_blocks(), 3, "one private copy of the shared tail");
+        assert_eq!(st.cow_copies, 1);
+        // the original never sees the fork's write or its requantization
+        let mut ga2 = vec![0f32; 10 * d];
+        a.gather_k(1, 10, &mut ga2);
+        assert_eq!(ga, ga2, "fork write aliased into the original");
+
         drop(b);
         assert_eq!(pool.status().used_blocks(), 2);
+        assert_eq!(pool.status().shared_refs, 0);
+        drop(a);
+        assert_eq!(pool.status().used_blocks(), 0, "block leak after COW churn");
+    }
+
+    #[test]
+    fn prefix_share_and_attach_reuse_whole_blocks() {
+        let pool = KvPool::new(&TINY, &kv(8, 4), None).unwrap();
+        let d = TINY.d_model;
+        let mut donor = pool.new_cache();
+        donor.reserve(10).unwrap();
+        for p in 0..10 {
+            let r = row(p, d, 1.0);
+            donor.write_row(0, p, &r, &r);
+        }
+        donor.set_pos(10);
+        // only whole blocks are shareable: 10 positions at block 4 → 8
+        let (shared, blocks) = donor.share_prefix(10);
+        assert_eq!(shared, 8);
+        assert_eq!(blocks.len(), 2);
+
+        let mut c = pool.new_cache();
+        c.attach_prefix(blocks, shared).unwrap();
+        assert_eq!(c.pos(), 8);
+        assert_eq!(pool.status().used_blocks(), 3, "attach must not copy");
+        // attached prefix reads back the donor's rows…
+        let mut out = vec![0f32; 8 * d];
+        c.gather_k(0, 8, &mut out);
+        let mut want = vec![0f32; 8 * d];
+        donor.gather_k(0, 8, &mut want);
+        assert_eq!(out, want);
+        // …and the continuation write copies, never aliases
+        c.reserve(1).unwrap();
+        let burst = row(77, d, 4.0);
+        c.write_row(0, 8, &burst, &burst);
+        c.set_pos(9);
+        let mut donor_after = vec![0f32; 8 * d];
+        donor.gather_k(0, 8, &mut donor_after);
+        assert_eq!(want, donor_after);
+
+        // attach onto a non-fresh session is rejected
+        let (s2, b2) = donor.share_prefix(8);
+        assert!(c.attach_prefix(b2, s2).is_err());
+        drop(c);
+        drop(donor);
+        assert_eq!(pool.status().used_blocks(), 0);
+        assert_eq!(pool.status().shared_refs, 0);
+    }
+
+    #[test]
+    fn block_serialization_roundtrips_byte_exactly() {
+        for bits in [32u8, 8, 4] {
+            let pool = KvPool::new(&TINY, &kv(bits, 4), None).unwrap();
+            let d = TINY.d_model;
+            let mut c = pool.new_cache();
+            c.reserve(4).unwrap();
+            for p in 0..4 {
+                let r = row(p, d, 0.8);
+                for l in 0..TINY.n_layers {
+                    c.write_row(l, p, &r, &r);
+                }
+            }
+            c.set_pos(4);
+            let (_, blocks) = c.share_prefix(4);
+            let payload = pool.block_to_bytes(&blocks[0]);
+            assert_eq!(payload.len(), pool.page_bytes(), "bits {bits}");
+            let restored = pool.block_from_bytes(&payload).unwrap();
+            assert_eq!(
+                pool.block_to_bytes(&restored),
+                payload,
+                "bits {bits}: page payload not byte-stable"
+            );
+            assert!(pool.block_from_bytes(&payload[1..]).is_err(), "length check");
+        }
     }
 
     #[test]

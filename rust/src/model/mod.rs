@@ -11,7 +11,7 @@ pub mod weights;
 
 pub use config::{ModelConfig, LLAMA_13B, LLAMA_30B, LLAMA_7B, TINY};
 pub use kv_cache::{KvCache, KvStore};
-pub use kv_pool::{KvCacheConfig, KvPool, KvPoolStatus, PagedKvCache};
+pub use kv_pool::{BlockRef, KvCacheConfig, KvPool, KvPoolStatus, PagedKvCache};
 pub use sampler::{argmax, log_prob, Sampler, Sampling};
 pub use transformer::{Block, BlockTap, BlockTrace, ForwardScratch, Transformer, LINEAR_NAMES};
 pub use weights::{Tensor, WeightPack};

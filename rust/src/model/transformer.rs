@@ -426,6 +426,10 @@ impl Transformer {
 
     /// Prefill one sequence, filling `cache` and returning logits `[S, V]`
     /// (fresh scratch; sessions use [`Transformer::prefill_scratch`]).
+    /// The cache need not be fresh: prefill continues from `cache.pos()`
+    /// (positions/RoPE angles follow the watermark), which is what lets
+    /// prefix-cache attach feed only the unshared prompt tail and makes a
+    /// continuation bit-identical to one uninterrupted prefill.
     pub fn prefill<C: KvStore>(&self, tokens: &[u32], cache: &mut C) -> Result<Vec<f32>> {
         let mut scratch = ForwardScratch::new();
         self.prefill_scratch(tokens, cache, &mut scratch)

@@ -1,0 +1,333 @@
+//! Radix (token-trie) index over resident prefix KV.
+//!
+//! Each node is one token; an entry pins a [`KvPrefix`] whose pages cover
+//! the path from the root to that node. `lookup` walks an incoming
+//! prompt down the trie and returns the **deepest** entry not exceeding
+//! the caller's cap — longest-prefix-wins, at whole-block granularity
+//! (entries only ever cover whole blocks, because that is all
+//! `export_prefix` pins).
+//!
+//! Eviction is LRU over entries, driven two ways: a capacity cap at
+//! insert time, and explicit [`PrefixIndex::evict_lru`] calls from the
+//! scheduler under pool pressure. Evicting an entry drops its pin; the
+//! physical blocks return to the pool only when no live session shares
+//! them, so eviction is always safe — a session holding a match keeps
+//! its blocks alive via its own references.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::engine::KvPrefix;
+
+/// Counters the serving gauges (`prefix_hits`, `prefix_tokens_reused`,
+/// …) and the tests consume.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefixStats {
+    /// lookups that found a usable entry
+    pub hits: u64,
+    /// lookups that found nothing
+    pub misses: u64,
+    /// positions whose prefill was skipped thanks to a hit
+    pub tokens_reused: u64,
+    /// entries evicted (LRU capacity or pool pressure)
+    pub evictions: u64,
+    /// live entries
+    pub entries: usize,
+    /// blocks currently pinned by live entries (shared with sessions)
+    pub blocks_pinned: usize,
+}
+
+struct Entry {
+    prefix: Arc<dyn KvPrefix>,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Node {
+    children: HashMap<u32, Node>,
+    entry: Option<Entry>,
+}
+
+/// The trie. Not thread-safe by itself — the scheduler owns one per
+/// worker.
+pub struct PrefixIndex {
+    root: Node,
+    /// logical LRU clock, bumped on every insert/hit
+    clock: u64,
+    max_entries: usize,
+    entries: usize,
+    hits: u64,
+    misses: u64,
+    tokens_reused: u64,
+    evictions: u64,
+}
+
+impl PrefixIndex {
+    /// Default entry cap: system prompts are few; this bounds trie walk
+    /// cost and pinned blocks, not correctness.
+    pub const DEFAULT_MAX_ENTRIES: usize = 64;
+
+    pub fn new() -> Self {
+        Self::with_capacity(Self::DEFAULT_MAX_ENTRIES)
+    }
+
+    pub fn with_capacity(max_entries: usize) -> Self {
+        PrefixIndex {
+            root: Node::default(),
+            clock: 0,
+            max_entries: max_entries.max(1),
+            entries: 0,
+            hits: 0,
+            misses: 0,
+            tokens_reused: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries == 0
+    }
+
+    /// Register `prefix` under its token path. Returns `true` for a new
+    /// entry, `false` when the path was already registered (the fresher
+    /// pin replaces the old one — same bytes, newer LRU stamp). May evict
+    /// the LRU entry to respect the capacity cap.
+    pub fn insert(&mut self, tokens: &[u32], prefix: Arc<dyn KvPrefix>) -> bool {
+        debug_assert_eq!(tokens.len(), prefix.token_count(), "path must cover the pages");
+        if tokens.is_empty() {
+            return false;
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        let mut node = &mut self.root;
+        for &t in tokens {
+            node = node.children.entry(t).or_default();
+        }
+        let fresh = node.entry.is_none();
+        node.entry = Some(Entry { prefix, last_used: clock });
+        if fresh {
+            self.entries += 1;
+            while self.entries > self.max_entries {
+                if !self.evict_lru() {
+                    break;
+                }
+            }
+        }
+        fresh
+    }
+
+    /// Longest registered prefix of `prompt` covering at most
+    /// `max_tokens` positions; bumps the entry's LRU stamp and the
+    /// hit/miss/reuse counters. Callers cap at `prompt.len() - 1` so the
+    /// tail prefill always has at least one token to produce logits from.
+    pub fn lookup(&mut self, prompt: &[u32], max_tokens: usize) -> Option<(usize, Arc<dyn KvPrefix>)> {
+        let depth = self.best_depth(prompt, max_tokens);
+        let Some(depth) = depth else {
+            self.misses += 1;
+            return None;
+        };
+        self.clock += 1;
+        let clock = self.clock;
+        let mut node = &mut self.root;
+        for &t in &prompt[..depth] {
+            node = node.children.get_mut(&t).expect("path found by best_depth");
+        }
+        let entry = node.entry.as_mut().expect("entry found by best_depth");
+        entry.last_used = clock;
+        self.hits += 1;
+        self.tokens_reused += depth as u64;
+        Some((depth, Arc::clone(&entry.prefix)))
+    }
+
+    /// [`lookup`](Self::lookup) without touching LRU state or counters —
+    /// what admission math uses for "would this request hit?".
+    pub fn peek_len(&self, prompt: &[u32], max_tokens: usize) -> usize {
+        self.best_depth(prompt, max_tokens).unwrap_or(0)
+    }
+
+    fn best_depth(&self, prompt: &[u32], max_tokens: usize) -> Option<usize> {
+        let mut best = None;
+        let mut node = &self.root;
+        for (d, t) in prompt.iter().enumerate() {
+            match node.children.get(t) {
+                Some(child) => node = child,
+                None => break,
+            }
+            let depth = d + 1;
+            if depth > max_tokens {
+                break;
+            }
+            if node.entry.is_some() {
+                best = Some(depth);
+            }
+        }
+        best
+    }
+
+    /// Drop the least-recently-used entry (unpinning its blocks) and
+    /// prune now-empty trie branches. Returns `false` when empty.
+    pub fn evict_lru(&mut self) -> bool {
+        let Some(path) = self.lru_path() else { return false };
+        Self::remove_path(&mut self.root, &path);
+        self.entries -= 1;
+        self.evictions += 1;
+        true
+    }
+
+    /// Token path of the entry with the oldest LRU stamp.
+    fn lru_path(&self) -> Option<Vec<u32>> {
+        fn walk(node: &Node, path: &mut Vec<u32>, best: &mut Option<(u64, Vec<u32>)>) {
+            if let Some(e) = &node.entry {
+                if best.as_ref().map_or(true, |(t, _)| e.last_used < *t) {
+                    *best = Some((e.last_used, path.clone()));
+                }
+            }
+            for (&t, child) in &node.children {
+                path.push(t);
+                walk(child, path, best);
+                path.pop();
+            }
+        }
+        let mut best = None;
+        walk(&self.root, &mut Vec::new(), &mut best);
+        best.map(|(_, p)| p)
+    }
+
+    /// Remove the entry at `path`; returns whether `node` itself became
+    /// prunable (no entry, no children).
+    fn remove_path(node: &mut Node, path: &[u32]) -> bool {
+        match path.split_first() {
+            None => {
+                node.entry = None;
+            }
+            Some((&t, rest)) => {
+                if let Some(child) = node.children.get_mut(&t) {
+                    if Self::remove_path(child, rest) {
+                        node.children.remove(&t);
+                    }
+                }
+            }
+        }
+        node.entry.is_none() && node.children.is_empty()
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        fn pinned(node: &Node) -> usize {
+            node.entry.as_ref().map_or(0, |e| e.prefix.block_count())
+                + node.children.values().map(pinned).sum::<usize>()
+        }
+        PrefixStats {
+            hits: self.hits,
+            misses: self.misses,
+            tokens_reused: self.tokens_reused,
+            evictions: self.evictions,
+            entries: self.entries,
+            blocks_pinned: pinned(&self.root),
+        }
+    }
+}
+
+impl Default for PrefixIndex {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::any::Any;
+
+    struct Stub {
+        tokens: usize,
+        blocks: usize,
+    }
+
+    impl KvPrefix for Stub {
+        fn token_count(&self) -> usize {
+            self.tokens
+        }
+        fn block_count(&self) -> usize {
+            self.blocks
+        }
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+    }
+
+    fn stub(tokens: usize) -> Arc<dyn KvPrefix> {
+        Arc::new(Stub { tokens, blocks: tokens / 4 })
+    }
+
+    #[test]
+    fn longest_match_wins_and_respects_the_cap() {
+        let mut ix = PrefixIndex::new();
+        assert!(ix.insert(&[1, 2, 3, 4], stub(4)));
+        assert!(ix.insert(&[1, 2, 3, 4, 5, 6, 7, 8], stub(8)));
+        let prompt = [1, 2, 3, 4, 5, 6, 7, 8, 9];
+        let (n, p) = ix.lookup(&prompt, prompt.len() - 1).unwrap();
+        assert_eq!((n, p.token_count()), (8, 8));
+        // cap below the deep entry falls back to the shallow one
+        let (n, _) = ix.lookup(&prompt, 7).unwrap();
+        assert_eq!(n, 4);
+        // a whole-prompt entry is unusable when capped at len-1
+        let exact = [1, 2, 3, 4];
+        let (n, _) = ix.lookup(&exact, exact.len() - 1).unwrap_or((0, stub(0)));
+        assert_eq!(n, 0, "must not match the entire prompt");
+        assert!(ix.lookup(&[9, 9], 1).is_none());
+        let st = ix.stats();
+        assert_eq!(st.entries, 2);
+        assert_eq!(st.hits, 2);
+        assert_eq!(st.misses, 2);
+        assert_eq!(st.tokens_reused, 12);
+    }
+
+    #[test]
+    fn reinsert_is_not_fresh_and_peek_is_stateless() {
+        let mut ix = PrefixIndex::new();
+        assert!(ix.insert(&[5, 6], stub(2)));
+        assert!(!ix.insert(&[5, 6], stub(2)));
+        assert_eq!(ix.len(), 1);
+        let before = ix.stats();
+        assert_eq!(ix.peek_len(&[5, 6, 7], 2), 2);
+        assert_eq!(ix.peek_len(&[5, 9], 1), 0);
+        let after = ix.stats();
+        assert_eq!(before.hits, after.hits);
+        assert_eq!(before.misses, after.misses);
+    }
+
+    #[test]
+    fn lru_eviction_prefers_cold_entries_and_prunes_branches() {
+        let mut ix = PrefixIndex::with_capacity(8);
+        ix.insert(&[1, 1], stub(2));
+        ix.insert(&[2, 2], stub(2));
+        ix.insert(&[3, 3], stub(2));
+        // touch 1 and 3; 2 is now coldest
+        ix.lookup(&[1, 1, 9], 2).unwrap();
+        ix.lookup(&[3, 3, 9], 2).unwrap();
+        assert!(ix.evict_lru());
+        assert!(ix.lookup(&[2, 2, 9], 2).is_none(), "cold entry evicted");
+        assert!(ix.lookup(&[1, 1, 9], 2).is_some());
+        assert!(ix.lookup(&[3, 3, 9], 2).is_some());
+        assert_eq!(ix.stats().entries, 2);
+        assert_eq!(ix.stats().evictions, 1);
+        while ix.evict_lru() {}
+        assert!(ix.is_empty());
+        assert_eq!(ix.stats().blocks_pinned, 0);
+    }
+
+    #[test]
+    fn capacity_cap_evicts_on_insert() {
+        let mut ix = PrefixIndex::with_capacity(2);
+        ix.insert(&[1], stub(1));
+        ix.insert(&[2], stub(1));
+        ix.insert(&[3], stub(1)); // evicts [1], the coldest
+        assert_eq!(ix.len(), 2);
+        assert!(ix.lookup(&[1, 9], 1).is_none());
+        assert!(ix.lookup(&[3, 9], 1).is_some());
+    }
+}

@@ -1,0 +1,26 @@
+//! Prefix cache subsystem (`docs/SERVING.md` §prefix cache): share the
+//! KV of common prompt prefixes across requests instead of re-prefilling
+//! them.
+//!
+//! Three cooperating pieces, spanning the stack:
+//!
+//! * **copy-on-write block sharing** lives in the pool
+//!   (`model::kv_pool`): refcounted [`BlockRef`](crate::model::BlockRef)
+//!   leases make sharing free and writes safe;
+//! * **[`PrefixIndex`]** — the radix token-trie the scheduler matches
+//!   incoming prompts against (longest whole-block prefix wins, LRU
+//!   eviction under pool pressure);
+//! * **[`SessionStore`]** — the `.abqs` session-file directory
+//!   (`runtime::session`) that makes the index warm across restarts.
+//!
+//! The quantized pages from PR 3 are what make this subsystem pay off:
+//! at 4-bit KV a pinned system prompt costs an eighth of its fp32 bytes,
+//! so the same pool holds 8× the prefix entries — bit width converts
+//! into *prefix capacity*, the serving lever the ABQ paper's memory
+//! claim feeds.
+
+pub mod index;
+pub mod store;
+
+pub use index::{PrefixIndex, PrefixStats};
+pub use store::SessionStore;

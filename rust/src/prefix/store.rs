@@ -1,0 +1,119 @@
+//! Persistent session store: a directory of `.abqs` files backing the
+//! in-memory prefix index, so a warm system-prompt cache survives a
+//! server restart (`--session-dir`).
+//!
+//! The store is deliberately dumb: one file per registered prefix, named
+//! by a content hash of its token stream, written once and never
+//! rewritten. On startup every file is offered to the engine's
+//! `restore_prefix` — files whose fingerprint doesn't match the serving
+//! config are *skipped with a note*, not errors, so one directory can
+//! serve several configs across restarts.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::engine::{InferenceEngine, KvPrefix};
+use crate::runtime::SessionFile;
+
+pub struct SessionStore {
+    dir: PathBuf,
+}
+
+impl SessionStore {
+    /// Open (creating if needed) a session directory.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create session dir {dir:?}"))?;
+        Ok(SessionStore { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Restore every loadable `.abqs` file into engine-attachable
+    /// prefixes (deterministic path order). Returns the restored
+    /// `(tokens, prefix)` pairs plus how many files were skipped
+    /// (unparseable or fingerprint-mismatched).
+    pub fn load_all(
+        &self,
+        engine: &dyn InferenceEngine,
+    ) -> (Vec<(Vec<u32>, std::sync::Arc<dyn KvPrefix>)>, usize) {
+        let mut out = Vec::new();
+        let mut skipped = 0usize;
+        let Ok(rd) = std::fs::read_dir(&self.dir) else {
+            return (out, 0);
+        };
+        let mut paths: Vec<PathBuf> = rd
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|e| e == "abqs"))
+            .collect();
+        paths.sort();
+        for path in paths {
+            match SessionFile::load(&path).and_then(|f| engine.restore_prefix(&f)) {
+                Ok(pair) => out.push(pair),
+                Err(e) => {
+                    skipped += 1;
+                    eprintln!("[prefix] skipping session file {path:?}: {e:#}");
+                }
+            }
+        }
+        (out, skipped)
+    }
+
+    /// Persist a freshly registered prefix. Returns `Ok(None)` when an
+    /// identically named file already exists (same token stream — the
+    /// pages are deterministic given the engine, so there is nothing to
+    /// update).
+    pub fn persist(
+        &self,
+        engine: &dyn InferenceEngine,
+        tokens: &[u32],
+        prefix: &dyn KvPrefix,
+    ) -> Result<Option<PathBuf>> {
+        let path = self.path_for(tokens);
+        if path.exists() {
+            return Ok(None);
+        }
+        let file = engine.save_prefix(tokens, prefix)?;
+        file.save(&path)?;
+        Ok(Some(path))
+    }
+
+    /// Deterministic file name: token count + FNV-1a of the stream, so
+    /// distinct prefixes of one conversation get distinct files.
+    fn path_for(&self, tokens: &[u32]) -> PathBuf {
+        self.dir.join(format!("{}-{:016x}.abqs", tokens.len(), fnv1a(tokens)))
+    }
+}
+
+fn fnv1a(tokens: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn file_names_are_deterministic_and_distinct() {
+        let dir = std::env::temp_dir().join(format!("abqs-store-{}", std::process::id()));
+        let st = SessionStore::new(&dir).unwrap();
+        let a = st.path_for(&[1, 2, 3]);
+        assert_eq!(a, st.path_for(&[1, 2, 3]));
+        assert_ne!(a, st.path_for(&[1, 2, 4]));
+        assert_ne!(a, st.path_for(&[1, 2]));
+        assert!(a.to_string_lossy().ends_with(".abqs"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,6 +1,8 @@
-//! PJRT runtime: load + execute the AOT HLO artifacts (the jax L2 model
-//! with the pallas L1 kernel lowered in). See /opt/xla-example/README.md
-//! for the HLO-text interchange rationale.
+//! Runtime artifacts: the PJRT executor for AOT HLO artifacts (the jax
+//! L2 model with the pallas L1 kernel lowered in — see
+//! /opt/xla-example/README.md for the HLO-text interchange rationale),
+//! plus the on-disk artifact formats shared with the native path: the
+//! artifact manifest grammar and the `.abqs` prefix session files.
 
 // The manifest grammar (artifacts, quant configs, calibration
 // corrections) is shared with the pure-Rust native path, so it compiles
@@ -8,8 +10,10 @@
 pub mod artifacts;
 #[cfg(feature = "pjrt")]
 pub mod engine;
+pub mod session;
 
 pub use artifacts::{ArtifactManifest, CorrectionEntry, InputKind};
+pub use session::{SessionFile, SessionFingerprint};
 #[cfg(feature = "pjrt")]
 pub use engine::{KvState, PjrtEngine, Program};
 

@@ -1,0 +1,246 @@
+//! `.abqs` session files: a prefix's quantized KV pages persisted to
+//! disk (llama.cpp-style), so a warm system-prompt cache survives a
+//! server restart. Reader/writer live beside the `.abqw` weight pack and
+//! follow the same conventions: little-endian wire format, deterministic
+//! `to_bytes`, strict magic/truncation checks.
+//!
+//! ```text
+//! magic  b"ABQS1\0"
+//! u16    model_len, model name (utf-8)
+//! u32    vocab, d_model, n_layers, n_heads, d_ff, max_seq
+//! f32    rope_base
+//! u16    tag_len, backend tag (utf-8, e.g. "w2sa8")
+//! u8     kv_bits
+//! u32    kv_block (positions per page)
+//! u32    n_tokens, u32×n_tokens prefix token ids
+//! u32    n_pages, u32 page_bytes, n_pages × page payloads
+//! ```
+//!
+//! The header up to `kv_block` is the **fingerprint**: a session file is
+//! only loadable into an engine whose model config, backend tag and KV
+//! cache config match it exactly — pages are raw quantized bytes, so any
+//! mismatch would silently corrupt attention. Token/page consistency
+//! (`n_tokens == n_pages × kv_block`, i.e. whole pages only) is a format
+//! invariant enforced by the parser.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{KvCacheConfig, ModelConfig};
+
+/// Everything that must match between the writing and the reading engine
+/// before `.abqs` pages may be attached (`docs/SERVING.md`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionFingerprint {
+    pub model: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_base: f32,
+    /// serving tag of the quant config that produced the pages
+    pub backend_tag: String,
+    pub kv_bits: u8,
+    pub kv_block: usize,
+}
+
+impl SessionFingerprint {
+    pub fn of(m: &ModelConfig, backend_tag: &str, kv: &KvCacheConfig) -> Self {
+        SessionFingerprint {
+            model: m.name.to_string(),
+            vocab: m.vocab,
+            d_model: m.d_model,
+            n_layers: m.n_layers,
+            n_heads: m.n_heads,
+            d_ff: m.d_ff,
+            max_seq: m.max_seq,
+            rope_base: m.rope_base,
+            backend_tag: backend_tag.to_string(),
+            kv_bits: kv.bits,
+            kv_block: kv.block_size,
+        }
+    }
+}
+
+/// One persisted prefix: fingerprint + the token ids the pages encode +
+/// the raw page payloads (whole blocks only, in position order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionFile {
+    pub fingerprint: SessionFingerprint,
+    pub tokens: Vec<u32>,
+    pub pages: Vec<Vec<u8>>,
+}
+
+impl SessionFile {
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f =
+            std::fs::File::open(path).with_context(|| format!("open session file {path:?}"))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::parse(&buf)
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > buf.len() {
+                bail!("truncated session file at byte {}", *pos);
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let take_u32 = |pos: &mut usize| -> Result<u32> {
+            Ok(u32::from_le_bytes(take(pos, 4)?.try_into()?))
+        };
+        let take_str = |pos: &mut usize| -> Result<String> {
+            let n = u16::from_le_bytes(take(pos, 2)?.try_into()?) as usize;
+            Ok(String::from_utf8(take(pos, n)?.to_vec())?)
+        };
+        if take(&mut pos, 6)? != b"ABQS1\0" {
+            bail!("bad magic (not an .abqs session file)");
+        }
+        let model = take_str(&mut pos)?;
+        let vocab = take_u32(&mut pos)? as usize;
+        let d_model = take_u32(&mut pos)? as usize;
+        let n_layers = take_u32(&mut pos)? as usize;
+        let n_heads = take_u32(&mut pos)? as usize;
+        let d_ff = take_u32(&mut pos)? as usize;
+        let max_seq = take_u32(&mut pos)? as usize;
+        let rope_base = f32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+        let backend_tag = take_str(&mut pos)?;
+        let kv_bits = take(&mut pos, 1)?[0];
+        let kv_block = take_u32(&mut pos)? as usize;
+        let fingerprint = SessionFingerprint {
+            model,
+            vocab,
+            d_model,
+            n_layers,
+            n_heads,
+            d_ff,
+            max_seq,
+            rope_base,
+            backend_tag,
+            kv_bits,
+            kv_block,
+        };
+        let n_tokens = take_u32(&mut pos)? as usize;
+        let mut tokens = Vec::with_capacity(n_tokens);
+        for _ in 0..n_tokens {
+            tokens.push(take_u32(&mut pos)?);
+        }
+        let n_pages = take_u32(&mut pos)? as usize;
+        let page_bytes = take_u32(&mut pos)? as usize;
+        if kv_block == 0 || n_tokens != n_pages * kv_block {
+            bail!(
+                "inconsistent session file: {n_tokens} tokens vs {n_pages} pages × {kv_block} \
+                 positions (prefixes persist whole pages only)"
+            );
+        }
+        let mut pages = Vec::with_capacity(n_pages);
+        for _ in 0..n_pages {
+            pages.push(take(&mut pos, page_bytes)?.to_vec());
+        }
+        if pos != buf.len() {
+            bail!("trailing garbage after session file payload ({} bytes)", buf.len() - pos);
+        }
+        Ok(SessionFile { fingerprint, tokens, pages })
+    }
+
+    /// Serialize to the `.abqs` wire format (byte-deterministic for a
+    /// given content — the round-trip tests compare these bytes).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let fp = &self.fingerprint;
+        let mut b: Vec<u8> = b"ABQS1\0".to_vec();
+        let put_str = |b: &mut Vec<u8>, s: &str| {
+            b.extend((s.len() as u16).to_le_bytes());
+            b.extend(s.as_bytes());
+        };
+        put_str(&mut b, &fp.model);
+        for d in [fp.vocab, fp.d_model, fp.n_layers, fp.n_heads, fp.d_ff, fp.max_seq] {
+            b.extend((d as u32).to_le_bytes());
+        }
+        b.extend(fp.rope_base.to_le_bytes());
+        put_str(&mut b, &fp.backend_tag);
+        b.push(fp.kv_bits);
+        b.extend((fp.kv_block as u32).to_le_bytes());
+        b.extend((self.tokens.len() as u32).to_le_bytes());
+        for t in &self.tokens {
+            b.extend(t.to_le_bytes());
+        }
+        b.extend((self.pages.len() as u32).to_le_bytes());
+        let page_bytes = self.pages.first().map_or(0, Vec::len);
+        b.extend((page_bytes as u32).to_le_bytes());
+        for p in &self.pages {
+            debug_assert_eq!(p.len(), page_bytes, "pages of one layout are same-sized");
+            b.extend_from_slice(p);
+        }
+        b
+    }
+
+    /// Write the session to disk (what [`SessionFile::load`] reads back).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("write session file {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TINY;
+
+    fn sample() -> SessionFile {
+        let kv = KvCacheConfig { bits: 8, block_size: 4 };
+        SessionFile {
+            fingerprint: SessionFingerprint::of(&TINY, "w2sa8", &kv),
+            tokens: vec![5, 6, 7, 8, 9, 10, 11, 12],
+            pages: vec![vec![1u8; 24], vec![2u8; 24]],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_byte_exact_and_deterministic() {
+        let s = sample();
+        let bytes = s.to_bytes();
+        let back = SessionFile::parse(&bytes).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn rejects_bad_magic_truncation_and_trailing_garbage() {
+        assert!(SessionFile::parse(b"ABQW1\0rest").is_err(), "weight-pack magic");
+        let bytes = sample().to_bytes();
+        assert!(SessionFile::parse(&bytes[..bytes.len() - 3]).is_err(), "truncation");
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(SessionFile::parse(&long).is_err(), "trailing garbage");
+    }
+
+    #[test]
+    fn rejects_token_page_mismatch() {
+        let mut s = sample();
+        s.tokens.pop(); // 7 tokens can't cover 2 whole 4-position pages
+        assert!(SessionFile::parse(&s.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn fingerprint_equality_is_field_exact() {
+        let kv = KvCacheConfig { bits: 8, block_size: 4 };
+        let a = SessionFingerprint::of(&TINY, "w2sa8", &kv);
+        assert_eq!(a, SessionFingerprint::of(&TINY, "w2sa8", &kv));
+        assert_ne!(a, SessionFingerprint::of(&TINY, "w4a4", &kv));
+        assert_ne!(
+            a,
+            SessionFingerprint::of(&TINY, "w2sa8", &KvCacheConfig { bits: 4, block_size: 4 })
+        );
+        let mut other = TINY;
+        other.n_layers += 1;
+        assert_ne!(a, SessionFingerprint::of(&other, "w2sa8", &kv));
+    }
+}

@@ -65,7 +65,8 @@ fn prop_scheduler_completes_every_request_exactly() {
         .unwrap();
     check("scheduler", 10, |rng| {
         let max_active = usize_in(rng, 1, 5);
-        let mut sched = Scheduler::new(engine.clone(), SchedulerConfig { max_active });
+        let mut sched =
+            Scheduler::new(engine.clone(), SchedulerConfig { max_active, ..Default::default() });
         let n_reqs = usize_in(rng, 1, 7);
         let mut want: Vec<(u64, usize)> = Vec::new();
         let mut backlog: Vec<QueuedRequest> = (0..n_reqs as u64)
@@ -121,7 +122,10 @@ fn admitted_at_budget(bits: u8, budget: usize) -> usize {
     let engine = kv_engine(bits, 8, budget);
     let mem = engine.memory_report();
     assert!(mem.kv_pool_bytes <= budget, "pool must respect its byte budget");
-    let mut sched = Scheduler::new(engine.clone(), SchedulerConfig { max_active: 10_000 });
+    let mut sched = Scheduler::new(
+        engine.clone(),
+        SchedulerConfig { max_active: 10_000, ..Default::default() },
+    );
     let mut n = 0usize;
     loop {
         let adm = sched
@@ -164,7 +168,8 @@ fn preemption_requeue_completes_all_requests() {
         probe.kv_pool_status().unwrap().block_bytes * 10
     });
     assert_eq!(engine.kv_pool_status().unwrap().total_blocks, 10);
-    let mut sched = Scheduler::new(engine, SchedulerConfig { max_active: 4 });
+    let mut sched =
+        Scheduler::new(engine, SchedulerConfig { max_active: 4, ..Default::default() });
     let n_reqs = 6u64;
     let (plen, max_new) = (6usize, 8usize);
     let mut backlog: Vec<QueuedRequest> =

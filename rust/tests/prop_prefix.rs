@@ -1,0 +1,428 @@
+//! Property + differential tests for the prefix cache subsystem
+//! (`docs/SERVING.md` §prefix cache): copy-on-write block sharing in the
+//! pool, engine-level export/attach, the scheduler's radix index, and
+//! `.abqs` session-file persistence.
+//!
+//! The load-bearing claims:
+//!   * sharing is invisible — greedy streams and logits with prefix
+//!     sharing are bit-identical to full prefill, across quantized
+//!     backends and KV bit widths;
+//!   * attach really skips work — the tail-only prefill writes exactly
+//!     the unshared positions into the pool;
+//!   * nothing leaks and nothing aliases under random fork/attach/
+//!     write/preempt/drop churn;
+//!   * a shared system prompt at a fixed pool budget at least doubles
+//!     admission capacity;
+//!   * session files round-trip byte-exactly and reject mismatched
+//!     configs.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use abq_llm::coordinator::request::QueuedRequest;
+use abq_llm::coordinator::{Admission, Request, Scheduler, SchedulerConfig};
+use abq_llm::engine::{
+    EngineBuilder, EngineSession, InferenceEngine, KvCacheConfig, SessionFile, SpecConfig,
+};
+use abq_llm::model::ModelConfig;
+use abq_llm::prefix::SessionStore;
+use abq_llm::util::prop::{check, usize_in};
+
+const MICRO: ModelConfig = ModelConfig {
+    name: "micro",
+    vocab: 64,
+    d_model: 16,
+    n_layers: 1,
+    n_heads: 2,
+    d_ff: 32,
+    max_seq: 48,
+    rope_base: 10000.0,
+};
+
+/// MICRO engine with an explicit backend + KV config (+ optional pool
+/// byte budget). Same seed everywhere so engines are interchangeable.
+fn engine_with(
+    backend: &str,
+    kv: KvCacheConfig,
+    budget: Option<usize>,
+) -> Arc<dyn InferenceEngine> {
+    let mut b = EngineBuilder::new().random_weights(MICRO, 7).backend(backend).kv_cache(kv);
+    if let Some(bytes) = budget {
+        b = b.kv_pool_bytes(bytes);
+    }
+    b.build_arc().unwrap()
+}
+
+fn qr(id: u64, prompt: Vec<u32>, max_new: usize) -> QueuedRequest {
+    QueuedRequest { req: Request::new(id, prompt, max_new), arrived: Instant::now() }
+}
+
+fn argmax(row: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+fn decode_greedy(
+    engine: &dyn InferenceEngine,
+    sess: &mut Box<dyn EngineSession>,
+    mut tok: u32,
+    steps: usize,
+) -> (Vec<u32>, Vec<f32>) {
+    let mut toks = Vec::new();
+    let mut all_logits = Vec::new();
+    for _ in 0..steps {
+        let mut refs: [&mut dyn EngineSession; 1] = [sess.as_mut()];
+        let logits = engine.decode_step(&[tok], &mut refs).unwrap();
+        tok = argmax(&logits);
+        toks.push(tok);
+        all_logits.extend_from_slice(&logits);
+    }
+    (toks, all_logits)
+}
+
+#[test]
+fn fork_is_copy_on_write_at_the_engine_level() {
+    // a fork leases nothing until it diverges, and divergence never
+    // bleeds into the parent: the parent's continuation is bit-identical
+    // to a reference engine that never forked
+    let engine = engine_with("fp32", KvCacheConfig::new(32, 4), None);
+    let reference = engine_with("fp32", KvCacheConfig::new(32, 4), None);
+    let prompt: Vec<u32> = (1..=6).collect();
+
+    let mut parent = engine.new_session().unwrap();
+    let plogits = engine.prefill(&prompt, parent.as_mut()).unwrap();
+    let st0 = engine.kv_pool_status().unwrap();
+    let mut fork = parent.fork().unwrap();
+    let st1 = engine.kv_pool_status().unwrap();
+    assert_eq!(
+        st1.used_blocks(),
+        st0.used_blocks(),
+        "fork must lease no new blocks (O(1) copy-on-write)"
+    );
+    assert!(st1.shared_refs > st0.shared_refs, "fork adds shared references");
+
+    // diverge the fork: its writes must privatize, not alias
+    let v = MICRO.vocab;
+    let first = argmax(&plogits[(prompt.len() - 1) * v..prompt.len() * v]);
+    let (_fork_toks, _) =
+        decode_greedy(engine.as_ref(), &mut fork, first.wrapping_add(1) % 60, 4);
+    let st2 = engine.kv_pool_status().unwrap();
+    assert!(st2.cow_copies > st1.cow_copies, "divergent write must copy-on-write");
+
+    // the parent stream is exactly the never-forked reference stream
+    let (parent_toks, parent_logits) = decode_greedy(engine.as_ref(), &mut parent, first, 6);
+    let mut ref_sess = reference.new_session().unwrap();
+    let rlogits = reference.prefill(&prompt, ref_sess.as_mut()).unwrap();
+    assert_eq!(plogits, rlogits, "same-seed engines must agree before forking");
+    let (ref_toks, ref_logits) = decode_greedy(reference.as_ref(), &mut ref_sess, first, 6);
+    assert_eq!(parent_toks, ref_toks, "fork divergence leaked into the parent");
+    assert_eq!(parent_logits, ref_logits, "parent logits must stay bit-identical");
+
+    drop(parent);
+    drop(fork);
+    drop(ref_sess);
+    assert_eq!(engine.kv_pool_status().unwrap().used_blocks(), 0, "fork churn leaked");
+}
+
+#[test]
+fn prefix_attach_is_bit_identical_across_backends_and_kv_bits() {
+    // the acceptance matrix: w2*a8 and w4a4 × KV 32/8/4 — a session
+    // built by attach + tail prefill must produce logits and greedy
+    // streams bit-identical to full prefill on the same engine
+    let sys: Vec<u32> = (0..8u32).map(|i| i % 60 + 1).collect();
+    for backend in ["abq:w2*a8", "abq:w4a4"] {
+        for kv_bits in [32u8, 8, 4] {
+            let engine = engine_with(backend, KvCacheConfig::new(kv_bits, 4), None);
+            assert!(engine.supports_prefix_cache());
+
+            // donor conversation registers the shared prefix
+            let mut donor = engine.new_session().unwrap();
+            let mut donor_prompt = sys.clone();
+            donor_prompt.push(61);
+            engine.prefill(&donor_prompt, donor.as_mut()).unwrap();
+            let pfx = engine.export_prefix(sys.len(), donor.as_mut()).unwrap();
+            assert_eq!(pfx.token_count(), 8, "8 positions = 2 whole blocks");
+            assert_eq!(pfx.block_count(), 2);
+
+            // warm path: attach + tail-only prefill
+            let mut full = sys.clone();
+            full.push(62);
+            let mut warm = engine.new_session().unwrap();
+            let attached = engine.attach_prefix(pfx.as_ref(), warm.as_mut()).unwrap();
+            assert_eq!(attached, 8);
+            let wlogits = engine.prefill(&full[attached..], warm.as_mut()).unwrap();
+
+            // cold path: full prefill of the same prompt
+            let mut cold = engine.new_session().unwrap();
+            let clogits = engine.prefill(&full, cold.as_mut()).unwrap();
+
+            let v = MICRO.vocab;
+            assert_eq!(
+                wlogits,
+                clogits[attached * v..],
+                "{backend} kv{kv_bits}: tail logits must be bit-identical"
+            );
+            let first = argmax(&clogits[(full.len() - 1) * v..full.len() * v]);
+            let (wt, wl) = decode_greedy(engine.as_ref(), &mut warm, first, 8);
+            let (ct, cl) = decode_greedy(engine.as_ref(), &mut cold, first, 8);
+            assert_eq!(wt, ct, "{backend} kv{kv_bits}: greedy streams must match");
+            assert_eq!(wl, cl, "{backend} kv{kv_bits}: decode logits must be bit-identical");
+
+            drop(donor);
+            drop(warm);
+            drop(cold);
+            drop(pfx);
+            assert_eq!(
+                engine.kv_pool_status().unwrap().used_blocks(),
+                0,
+                "{backend} kv{kv_bits}: prefix sharing leaked blocks"
+            );
+        }
+    }
+}
+
+#[test]
+fn attach_skips_exactly_the_shared_positions() {
+    // `rows_written` counts pool writes; the warm prefill must write
+    // only the unshared tail — position-for-position what a cold prefill
+    // writes for the same span, and nothing for the attached blocks
+    let engine = engine_with("fp32", KvCacheConfig::new(32, 4), None);
+    let full: Vec<u32> = (1..=11).collect(); // 2 whole blocks + 3-token tail
+
+    let rows0 = engine.kv_pool_status().unwrap().rows_written;
+    let mut donor = engine.new_session().unwrap();
+    engine.prefill(&full, donor.as_mut()).unwrap();
+    let rows_cold = engine.kv_pool_status().unwrap().rows_written - rows0;
+    assert!(rows_cold > 0);
+    assert_eq!(rows_cold % full.len() as u64, 0, "writes scale with positions");
+    let per_pos = rows_cold / full.len() as u64;
+
+    let pfx = engine.export_prefix(8, donor.as_mut()).unwrap();
+    let mut warm = engine.new_session().unwrap();
+    let attached = engine.attach_prefix(pfx.as_ref(), warm.as_mut()).unwrap();
+    assert_eq!(attached, 8);
+    let rows1 = engine.kv_pool_status().unwrap().rows_written;
+    engine.prefill(&full[attached..], warm.as_mut()).unwrap();
+    let rows_warm = engine.kv_pool_status().unwrap().rows_written - rows1;
+    assert_eq!(
+        rows_warm,
+        per_pos * (full.len() - attached) as u64,
+        "tail-only prefill must write exactly the unshared positions"
+    );
+}
+
+#[test]
+fn shared_system_prompt_at_least_doubles_admission_capacity() {
+    // the tentpole's serving claim at MICRO scale: a pool budgeted for
+    // exactly 3 cold sequences admits ≥ 2× the requests when they share
+    // a whole-block system prompt
+    let sys: Vec<u32> = (0..8u32).map(|i| i % 60 + 1).collect();
+    let kv = KvCacheConfig::new(8, 4);
+    let probe = engine_with("fp32", kv, None);
+    let st = probe.kv_pool_status().unwrap();
+    let per_seq = st.blocks_for(sys.len() + 2); // prompt + tail token + headroom
+    let budget = st.block_bytes * per_seq * 3;
+    drop(probe);
+
+    let admitted = |prefix_cache: bool| -> usize {
+        let engine = engine_with("fp32", kv, Some(budget));
+        let mut sched = Scheduler::new(
+            engine,
+            SchedulerConfig { max_active: 10_000, prefix_cache },
+        );
+        let mut n = 0usize;
+        for id in 0..32u64 {
+            let mut p = sys.clone();
+            p.push(61 + (id % 3) as u32);
+            // max_new 4: admitted sequences stay active (no step() runs),
+            // holding their blocks, so admission alone probes capacity
+            match sched.admit(qr(id, p, 4), id).unwrap() {
+                Admission::Admitted => n += 1,
+                Admission::Deferred(_) => break,
+            }
+        }
+        n
+    };
+    let cold = admitted(false);
+    let shared = admitted(true);
+    assert_eq!(cold, 3, "budget sized for exactly 3 cold sequences");
+    assert!(
+        shared >= 2 * cold,
+        "sharing must at least double admission capacity: cold {cold}, shared {shared}"
+    );
+}
+
+#[test]
+fn prop_prefix_churn_never_leaks_or_aliases() {
+    // random admit/decode/preempt/evict churn over a starved pool with
+    // heavily shared prompts: every request's greedy stream must match
+    // the no-sharing scheduler exactly, and dropping the scheduler must
+    // return the pool to empty
+    let kv = KvCacheConfig::new(8, 4);
+    let block_bytes = {
+        let probe = engine_with("fp32", kv, None);
+        probe.kv_pool_status().unwrap().block_bytes
+    };
+    check("prefix-churn", 8, |rng| {
+        let budget = block_bytes * usize_in(rng, 10, 16);
+        let n_reqs = usize_in(rng, 3, 7) as u64;
+        let sys_pick = usize_in(rng, 1, 3); // how many distinct system prompts
+        let reqs: Vec<(u64, Vec<u32>, usize)> = (0..n_reqs)
+            .map(|id| {
+                let which = usize_in(rng, 0, sys_pick - 1) as u32;
+                let mut p: Vec<u32> = (0..8u32).map(|i| (i + which * 8) % 60 + 1).collect();
+                for _ in 0..usize_in(rng, 1, 3) {
+                    p.push(usize_in(rng, 1, 60) as u32);
+                }
+                (id, p, usize_in(rng, 1, 4))
+            })
+            .collect();
+        let run = |prefix_cache: bool| -> Vec<(u64, Vec<u32>)> {
+            let engine = engine_with("fp32", kv, Some(budget));
+            let mut sched = Scheduler::new(
+                engine.clone(),
+                SchedulerConfig { max_active: 3, prefix_cache },
+            );
+            let mut backlog: Vec<QueuedRequest> =
+                reqs.iter().map(|(id, p, m)| qr(*id, p.clone(), *m)).collect();
+            backlog.reverse();
+            let mut guard = 0;
+            while (!backlog.is_empty() || !sched.idle()) && guard < 2000 {
+                guard += 1;
+                while sched.has_capacity() && !backlog.is_empty() {
+                    match sched.admit(backlog.pop().unwrap(), guard).unwrap() {
+                        Admission::Admitted => {}
+                        Admission::Deferred(q) => {
+                            backlog.push(q);
+                            break;
+                        }
+                    }
+                }
+                sched.step().unwrap();
+            }
+            assert!(guard < 2000, "churn did not converge (prefix={prefix_cache})");
+            let mut done: Vec<(u64, Vec<u32>)> =
+                sched.take_finished().into_iter().map(|r| (r.id, r.tokens)).collect();
+            done.sort();
+            drop(sched); // drops the index's pins along with the sessions
+            assert_eq!(
+                engine.kv_pool_status().unwrap().used_blocks(),
+                0,
+                "pool must drain after scheduler drop (prefix={prefix_cache})"
+            );
+            done
+        };
+        let with_sharing = run(true);
+        let without = run(false);
+        assert_eq!(with_sharing.len(), reqs.len(), "every request completes");
+        assert_eq!(
+            with_sharing, without,
+            "sharing must never change any request's greedy stream"
+        );
+    });
+}
+
+#[test]
+fn session_files_roundtrip_byte_exactly_and_reject_mismatches() {
+    let kv = KvCacheConfig::new(8, 4);
+    let sys: Vec<u32> = (0..8u32).map(|i| i % 60 + 1).collect();
+    let dir = std::env::temp_dir().join(format!("abqs-prop-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("sys.abqs");
+
+    // save on engine A
+    let a = engine_with("fp32", kv, None);
+    let mut donor = a.new_session().unwrap();
+    let mut prompt = sys.clone();
+    prompt.push(61);
+    a.prefill(&prompt, donor.as_mut()).unwrap();
+    let pfx = a.export_prefix(sys.len(), donor.as_mut()).unwrap();
+    let file = a.save_prefix(&sys, pfx.as_ref()).unwrap();
+    file.save(&path).unwrap();
+
+    // "restart": an identically configured engine loads it back and
+    // re-saves — the bytes must be exactly what was written
+    let b = engine_with("fp32", kv, None);
+    let loaded = SessionFile::load(&path).unwrap();
+    let (tokens, restored) = b.restore_prefix(&loaded).unwrap();
+    assert_eq!(tokens, sys);
+    assert_eq!(restored.token_count(), sys.len());
+    let resaved = b.save_prefix(&tokens, restored.as_ref()).unwrap();
+    assert_eq!(resaved.to_bytes(), file.to_bytes(), "round-trip must be byte-exact");
+
+    // and the restored pages must actually serve: attach + decode
+    // matches a cold prefill on the same engine
+    let mut warm = b.new_session().unwrap();
+    let attached = b.attach_prefix(restored.as_ref(), warm.as_mut()).unwrap();
+    let wlogits = b.prefill(&prompt[attached..], warm.as_mut()).unwrap();
+    let mut cold = b.new_session().unwrap();
+    let clogits = b.prefill(&prompt, cold.as_mut()).unwrap();
+    assert_eq!(wlogits, clogits[attached * MICRO.vocab..], "restored pages must serve");
+
+    // mismatched KV bit width / backend tag / draft engines are rejected
+    let wrong_kv = engine_with("fp32", KvCacheConfig::new(4, 4), None);
+    assert!(wrong_kv.restore_prefix(&loaded).is_err(), "kv-bits mismatch must be rejected");
+    let wrong_backend = engine_with("abq:w4a4", kv, None);
+    assert!(wrong_backend.restore_prefix(&loaded).is_err(), "tag mismatch must be rejected");
+    let spec = EngineBuilder::new()
+        .random_weights(MICRO, 7)
+        .backend("fp32")
+        .kv_cache(kv)
+        .speculative(SpecConfig::new("w2*a8".parse().unwrap(), 2))
+        .build_arc()
+        .unwrap();
+    assert!(!spec.supports_prefix_cache(), "speculative engines opt out");
+    assert!(spec.restore_prefix(&loaded).is_err());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn scheduler_warm_starts_from_a_session_store() {
+    // serve → restart → serve: the second scheduler restores the first
+    // one's persisted prefix and hits it without ever prefilling the
+    // system prompt itself
+    let kv = KvCacheConfig::new(8, 4);
+    let sys: Vec<u32> = (0..8u32).map(|i| i % 60 + 1).collect();
+    let dir = std::env::temp_dir().join(format!("abqs-warm-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let serve_one = |id: u64, tail: u32, warmed: &mut usize| -> Vec<u32> {
+        let engine = engine_with("fp32", kv, None);
+        let mut sched = Scheduler::new(
+            engine,
+            SchedulerConfig { max_active: 2, prefix_cache: true },
+        );
+        *warmed = sched.attach_session_store(SessionStore::new(&dir).unwrap());
+        let mut p = sys.clone();
+        p.push(tail);
+        assert!(matches!(sched.admit(qr(id, p, 3), id).unwrap(), Admission::Admitted));
+        for _ in 0..50 {
+            if sched.idle() {
+                break;
+            }
+            sched.step().unwrap();
+        }
+        let stats = sched.prefix_stats().expect("cache enabled");
+        if *warmed > 0 {
+            assert_eq!(stats.hits, 1, "restored prefix must be hit on admission");
+            assert_eq!(stats.tokens_reused, sys.len() as u64);
+        }
+        sched.take_finished().remove(0).tokens
+    };
+
+    let mut warmed = 0usize;
+    let first = serve_one(1, 61, &mut warmed);
+    assert_eq!(warmed, 0, "first boot starts cold");
+    let mut warmed2 = 0usize;
+    let second = serve_one(2, 61, &mut warmed2);
+    assert_eq!(warmed2, 1, "restart must restore the persisted session file");
+    assert_eq!(first, second, "warm-started stream must match the cold one");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

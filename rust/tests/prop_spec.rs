@@ -237,7 +237,7 @@ fn run_scheduler_to_completion(
     max_new: usize,
     max_active: usize,
 ) -> (Vec<Response>, u64) {
-    let mut s = Scheduler::new(engine, SchedulerConfig { max_active });
+    let mut s = Scheduler::new(engine, SchedulerConfig { max_active, ..Default::default() });
     let mut waiting: Vec<QueuedRequest> = (0..n_requests)
         .map(|id| QueuedRequest {
             req: Request::new(id, vec![1, 2, (3 + id % 20) as u32, 7], max_new),

@@ -10,7 +10,9 @@
 # bench appends a labelled entry (per-backend tok/s, ms/step,
 # ns/projection, unix timestamp) to BENCH_decode.json at the repo root.
 # Set ABQ_BENCH_FAST=1 for a short smoke run, ABQ_KV_BITS=8|4 to measure
-# the quantized paged-KV read path.
+# the quantized paged-KV read path, ABQ_SPEC=<draft>:<k> for the
+# self-speculative rung, and ABQ_PREFIX=1 for the prefix-cache rung
+# (shared-system-prompt TTFT + admission capacity).
 set -eu
 label="${1:?usage: record_decode_bench.sh <label (e.g. pre|post|ci)>}"
 if ! command -v cargo >/dev/null 2>&1; then
