@@ -24,6 +24,7 @@
 
 use std::time::Instant;
 
+use abq_llm::abq::isa;
 use abq_llm::engine::{EngineBuilder, EngineSession, InferenceEngine, KvCacheConfig, SpecConfig};
 use abq_llm::model::ModelConfig;
 use abq_llm::util::bench::write_results;
@@ -92,6 +93,7 @@ fn record(rows: &[Json], steps: usize, kv_bits: u8) {
         ("prompt_tokens", num(PROMPT.len() as f64)),
         ("steps_per_sample", num(steps as f64)),
         ("kv_bits", num(kv_bits as f64)),
+        ("isa", s(isa::ceiling().name())),
         ("results", Json::Arr(rows.to_vec())),
     ]);
     let mut root = match std::fs::read_to_string(path).ok().and_then(|t| Json::parse(&t).ok()) {
@@ -127,6 +129,11 @@ fn main() {
     println!(
         "=== decode hot path: single-token steps, {} (kv {} bits) ===",
         BENCH_MODEL.name, kv_bits
+    );
+    println!(
+        "kernel ISA: {} (detected best: {}; override with ABQ_ISA=scalar|avx2|avx512|neon)",
+        isa::ceiling(),
+        isa::detect_best()
     );
     println!(
         "{:<12} {:>10} {:>12} {:>16}",

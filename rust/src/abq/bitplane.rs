@@ -17,12 +17,13 @@
 //!   streams one contiguous block per output element. The auto kernel
 //!   search picks this layout per weight shape when it wins.
 //!
-//! Packing is **word-sliced**: each 64-code window is masked once up
-//! front, then each plane's `u64` word is built with branchless shift/mask
-//! accumulation — no per-bit scatter, no data-dependent branches, and the
-//! inner loops are trivially vectorizable. Out-of-range codes are masked
-//! to `planes` bits (uniform debug/release semantics; rowsums use the
-//! masked values so the zero-point correction stays consistent).
+//! Packing is **word-sliced** and dispatched per row through the
+//! `abq::kernels` ISA table (`cmpeq`+`movemask` on AVX2, `tst`+weighted
+//! `addv` on NEON, branchless shift/mask accumulation on the portable
+//! path) — no per-bit scatter, no data-dependent branches, bit-identical
+//! across ISAs. Out-of-range codes are masked to `planes` bits (uniform
+//! debug/release semantics; rowsums use the masked values so the
+//! zero-point correction stays consistent).
 //!
 //! The packer also precomputes per-row code sums, which the Bit Reduction
 //! epilogue needs for the zero-point correction
@@ -106,6 +107,19 @@ impl<'a> PlanesRef<'a> {
         let off = self.layout.row_offset(plane, row, self.rows, self.planes, self.kwords);
         &data[off..off + self.kwords]
     }
+
+    /// `(row_step, plane_step)` word strides of this view: plane `s` of
+    /// row `r` starts at `data[r*row_step + s*plane_step]`. This is the
+    /// operand form the `abq::kernels` sweeps consume — it makes one sweep
+    /// serve both storage layouts (and the staged pipeline buffer, whose
+    /// `[mi][s][kw]` strides coincide with [`PlaneLayout::Interleaved`]).
+    #[inline(always)]
+    pub(crate) fn strides(&self) -> (usize, usize) {
+        match self.layout {
+            PlaneLayout::PlaneMajor => (self.kwords, self.rows * self.kwords),
+            PlaneLayout::Interleaved => (self.planes * self.kwords, self.kwords),
+        }
+    }
 }
 
 impl BitPlanes {
@@ -150,31 +164,19 @@ impl BitPlanes {
         data.resize(planes * rows * kwords, 0);
         rowsum.clear();
         rowsum.resize(rows, 0);
-        let mask: u8 = (((1u16 << planes) - 1) & 0xFF) as u8;
-        // word-sliced stack window: 64 codes masked once, then one u64
-        // built per plane with branchless shift/or accumulation
-        let mut win = [0u8; 64];
+        // per-row pack dispatched to the fastest kernel at the ISA ceiling
+        // (scalar path: 64-code window masked once, then one u64 per plane
+        // with branchless shift/or accumulation; SIMD paths in
+        // `abq::kernels` are bit-identical) — this keeps m=1 decode SIMD
+        // end to end, packing included
+        let ks = super::kernels::active();
+        let plane_step = match layout {
+            PlaneLayout::PlaneMajor => rows * kwords,
+            PlaneLayout::Interleaved => kwords,
+        };
         for r in 0..rows {
-            let row = &codes[r * k..(r + 1) * k];
-            let mut sum = 0i64;
-            for wi in 0..kwords {
-                let lo = wi * 64;
-                let hi = (lo + 64).min(k);
-                let len = hi - lo;
-                for (b, &c) in row[lo..hi].iter().enumerate() {
-                    let m = c & mask;
-                    win[b] = m;
-                    sum += m as i64;
-                }
-                for p in 0..planes {
-                    let mut word = 0u64;
-                    for (b, &c) in win[..len].iter().enumerate() {
-                        word |= (((c >> p) & 1) as u64) << b;
-                    }
-                    data[layout.row_offset(p, r, rows, planes, kwords) + wi] = word;
-                }
-            }
-            rowsum[r] = sum;
+            let off = layout.row_offset(0, r, rows, planes, kwords);
+            rowsum[r] = ks.pack_row(&codes[r * k..(r + 1) * k], planes, data, off, plane_step);
         }
     }
 

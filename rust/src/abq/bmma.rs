@@ -1,89 +1,46 @@
 //! The BMMA primitive (paper §3.4 step ❸): 1-bit matrix multiply-accumulate.
 //!
 //! A Binary TensorCore computes `popcount(AND(a, b))` over 128-bit rows in
-//! one m8n8k128 instruction; the CPU equivalent is `(a & b).count_ones()`
-//! over `u64` words — a 64-wide binary MAC per instruction. All GEMM
-//! variants in `gemm.rs` bottom out here, so this inner loop is the hot
-//! path the §Perf pass optimises.
+//! one m8n8k128 instruction; the CPU equivalent is a wide popcount over
+//! `u64` words. [`bdot`] dispatches to the fastest instruction set the
+//! running CPU supports (`abq::kernels` — AVX2 shuffle-LUT, AVX-512
+//! `vpopcntq`, NEON `cnt`, portable scalar), honouring the `ABQ_ISA`
+//! ceiling. All variants are bit-exact; the GEMM sweeps in `gemm.rs` /
+//! `pipeline.rs` dispatch whole sweeps through the same kernel tables
+//! rather than per-dot, so this entry point mostly serves the ablation
+//! rungs, tests, and benches.
+//!
+//! (The old `popcount_swar` hand-SWAR baseline lives on as a reference
+//! rung inside `benches/t4_ablation.rs` only; the near-duplicate
+//! `bdot_scalar`/`bdot_unrolled`/`bdot2`/`bdot4` entry points are gone —
+//! scalar vs SIMD is now a dispatch-table decision, and the
+//! multi-accumulator fanout chains live in the kernel modules.)
 
-/// Scalar (SWAR) popcount — the *unoptimised* binary MAC, used only by the
-/// `Naive` kernel rung of the Table-4 ablation. A hand-written
-/// Hamming-weight so the compiler does NOT substitute the vectorised
-/// hardware popcount: this is the "Native_kernel" baseline, before the
-/// pipeline/vectorisation optimisation is applied.
-#[inline(always)]
-pub fn popcount_swar(mut x: u64) -> u32 {
-    x = x - ((x >> 1) & 0x5555_5555_5555_5555);
-    x = (x & 0x3333_3333_3333_3333) + ((x >> 2) & 0x3333_3333_3333_3333);
-    x = (x + (x >> 4)) & 0x0F0F_0F0F_0F0F_0F0F;
-    ((x.wrapping_mul(0x0101_0101_0101_0101)) >> 56) as u32
-}
+use super::kernels;
 
-/// Naive binary dot: word-at-a-time SWAR popcount, no SIMD.
-pub fn bdot_scalar(a: &[u64], b: &[u64]) -> u32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0u32;
-    for i in 0..a.len() {
-        acc += popcount_swar(a[i] & b[i]);
-    }
-    acc
-}
-
-/// Optimised binary dot product: Σ popcount(a ∧ b). The simple loop form
-/// lets LLVM vectorise to AVX-512 `vpopcntq` (with `-C target-cpu=native`),
-/// processing 8 words per instruction — the CPU equivalent of keeping the
-/// BMMA pipe saturated (paper Fig. 9's register double-buffering).
-#[inline(always)]
+/// Binary dot product Σ popcount(a ∧ b), dispatched to the fastest kernel
+/// at the current ISA ceiling.
+#[inline]
 pub fn bdot(a: &[u64], b: &[u64]) -> u32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0u32;
-    for i in 0..a.len() {
-        acc += (a[i] & b[i]).count_ones();
-    }
-    acc
-}
-
-/// Pipeline-optimised alias (kept for the ablation ladder naming): the
-/// vectorised dot IS the pipeline optimisation on this substrate.
-#[inline(always)]
-pub fn bdot_unrolled(a: &[u64], b: &[u64]) -> u32 {
-    bdot(a, b)
-}
-
-/// Dual-row binary dot: one A row against two B rows in one call. Each
-/// sub-dot stays a simple vectorisable loop; `a` is re-read from L1.
-#[inline(always)]
-pub fn bdot2(a: &[u64], b0: &[u64], b1: &[u64]) -> (u32, u32) {
-    (bdot(a, b0), bdot(a, b1))
-}
-
-/// Quad-row variant: one A row against four B rows.
-#[inline(always)]
-pub fn bdot4(a: &[u64], b0: &[u64], b1: &[u64], b2: &[u64], b3: &[u64]) -> (u32, u32, u32, u32) {
-    (bdot(a, b0), bdot(a, b1), bdot(a, b2), bdot(a, b3))
+    kernels::active().bdot(a, b) as u32
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::abq::isa::{self, Isa};
 
     fn naive(a: &[u64], b: &[u64]) -> u32 {
         a.iter().zip(b).map(|(x, y)| (x & y).count_ones()).sum()
     }
 
     #[test]
-    fn variants_agree() {
+    fn dispatched_bdot_matches_naive() {
         let a: Vec<u64> = (0..37).map(|i| (i as u64).wrapping_mul(0x9E3779B97F4A7C15)).collect();
         let b: Vec<u64> = (0..37).map(|i| (i as u64).wrapping_mul(0xBF58476D1CE4E5B9)).collect();
-        let want = naive(&a, &b);
-        assert_eq!(bdot(&a, &b), want);
-        assert_eq!(bdot_scalar(&a, &b), want);
-        assert_eq!(bdot_unrolled(&a, &b), want);
-        let (x0, x1) = bdot2(&a, &b, &a);
-        assert_eq!(x0, want);
-        assert_eq!(x1, naive(&a, &a));
-        let (y0, y1, y2, y3) = bdot4(&a, &b, &a, &b, &a);
-        assert_eq!((y0, y1, y2, y3), (want, naive(&a, &a), want, naive(&a, &a)));
+        assert_eq!(bdot(&a, &b), naive(&a, &b));
+        // pinned to scalar, the same entry point runs the portable path
+        isa::pinned(Isa::Scalar, || assert_eq!(bdot(&a, &b), naive(&a, &b)));
     }
 
     #[test]

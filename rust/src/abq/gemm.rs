@@ -3,29 +3,33 @@
 //! Table 4 reproduced as explicit variants:
 //!
 //!   `Naive`      — the unoptimised kernel: plain triple loop, word-wise
-//!                  popcount (the paper's "Native_kernel" row)
-//!   `Pipelined`  — + computational pipeline optimisation: unrolled,
-//!                  multi-accumulator inner loop (register double-buffer
-//!                  analogue, Fig. 9)
+//!                  scalar popcount (the paper's "Native_kernel" row)
+//!   `Pipelined`  — + computational pipeline optimisation: the scalar
+//!                  multi-accumulator sweep (4 popcount chains in flight,
+//!                  the register double-buffer analogue, Fig. 9)
 //!   `GemvElim`   — + GEMV elimination: the p activation planes are treated
 //!                  as extra M rows, each weight plane-row is streamed once
 //!                  and reused across every (m, s) pair, so M=1 runs as a
-//!                  p×(q·N) binary GEMM instead of a padded MMA (Fig. 8)
+//!                  p×(q·N) binary GEMM instead of a padded MMA (Fig. 8) —
+//!                  dispatched to the best kernel ISA at the ceiling
 //!   `Auto`       — + auto kernel search: tile config (n-block, fanout,
-//!                  parallelism, weight layout) picked by micro-benchmark
-//!                  per shape
+//!                  parallelism, weight layout, **kernel ISA**) picked by
+//!                  micro-benchmark per shape
 //!
 //! All variants produce bit-identical integer results for either weight
-//! layout (asserted by unit and property tests); they differ only in
-//! schedule. Every variant has an `_into` form that writes a caller-owned
-//! accumulator and allocates nothing — the decode hot path
+//! layout and any kernel ISA (asserted by unit/property tests — integer
+//! popcount math has no rounding); they differ only in schedule. Every
+//! variant has an `_into` form that writes a caller-owned accumulator and
+//! allocates nothing — the decode hot path
 //! ([`crate::abq::QuantizedLinear::forward_scratch`]) runs exclusively on
-//! those.
+//! those. The inner loops live in `abq::kernels`; this file owns the
+//! tiling/parallel schedule around them.
 
 use crate::util::par::{self, SendPtr};
 
 use super::bitplane::{BitPlanes, PlanesRef};
-use super::bmma::{bdot2, bdot4, bdot_scalar, bdot_unrolled};
+use super::isa;
+use super::kernels::{self, SweepArgs};
 use super::reduction::correct_tile;
 use super::tile::TileConfig;
 
@@ -78,7 +82,8 @@ pub fn gemm_int_into(
         OptLevel::Naive => kernel_naive(x, w, acc),
         OptLevel::Pipelined => kernel_pipelined(x, w, acc),
         OptLevel::GemvElim => {
-            gemv_elim_into(x, w, TileConfig::new(64, 0, 4, false), 0, n, acc)
+            let cfg = TileConfig::new(64, 0, 4, false).with_isa(isa::ceiling());
+            gemv_elim_into(x, w, cfg, 0, n, acc)
         }
         OptLevel::Auto => {
             let cfg = cfg.unwrap_or_default();
@@ -92,17 +97,18 @@ pub fn gemm_int_into(
     correct_tile(acc, m, n, x.k, zx, zw, x.rowsum, w.rowsum);
 }
 
-/// ❶ Native kernel: nothing but the decomposition itself.
+/// ❶ Native kernel: nothing but the decomposition itself — scalar
+/// popcount, no fanout, no dispatch.
 fn kernel_naive(x: PlanesRef, w: PlanesRef, acc: &mut [i64]) {
     let (m, n) = (x.rows, w.rows);
+    let sc = kernels::scalar_set();
     for mi in 0..m {
         for ni in 0..n {
             let mut a = 0i64;
             for s in 0..x.planes {
                 let xr = x.plane_row(s, mi);
                 for t in 0..w.planes {
-                    let d = bdot_scalar(xr, w.plane_row(t, ni)) as i64;
-                    a += d << (s + t);
+                    a += (sc.bdot(xr, w.plane_row(t, ni)) as i64) << (s + t);
                 }
             }
             acc[mi * n + ni] = a;
@@ -110,21 +116,33 @@ fn kernel_naive(x: PlanesRef, w: PlanesRef, acc: &mut [i64]) {
     }
 }
 
-/// ❷ + pipeline optimisation: unrolled inner loop, 4 accumulator chains.
+/// ❷ + pipeline optimisation: the scalar sweep with 4 independent
+/// accumulator chains (fanout 4) over the whole output — multi-issue ILP
+/// without yet re-ordering memory traffic or going wide.
 fn kernel_pipelined(x: PlanesRef, w: PlanesRef, acc: &mut [i64]) {
     let (m, n) = (x.rows, w.rows);
-    for mi in 0..m {
-        for ni in 0..n {
-            let mut a = 0i64;
-            for s in 0..x.planes {
-                let xr = x.plane_row(s, mi);
-                for t in 0..w.planes {
-                    let d = bdot_unrolled(xr, w.plane_row(t, ni)) as i64;
-                    a += d << (s + t);
-                }
-            }
-            acc[mi * n + ni] = a;
-        }
+    let (x_row, x_plane) = x.strides();
+    let (w_row, w_plane) = w.strides();
+    // Safety: exclusive `&mut` access to the full pre-zeroed accumulator;
+    // operand pointers cover the shapes described.
+    unsafe {
+        kernels::scalar_set().gemv(SweepArgs {
+            x: x.data.as_ptr(),
+            x_row,
+            x_plane,
+            p: x.planes,
+            w: w.data.as_ptr(),
+            w_row,
+            w_plane,
+            q: w.planes,
+            kw: x.kwords,
+            m,
+            n0: 0,
+            n1: n,
+            n,
+            acc: acc.as_mut_ptr(),
+            fanout: 4,
+        });
     }
 }
 
@@ -150,7 +168,10 @@ fn gemv_elim_into(
     unsafe { gemv_elim_raw(x, w, cfg, n0, n1, acc.as_mut_ptr()) }
 }
 
-/// Raw-pointer core of the GEMV-elimination sweep.
+/// Raw-pointer core of the GEMV-elimination sweep: resolves `cfg.isa` to
+/// its kernel table (falling back to scalar if this process can't run it)
+/// and walks the `[n0, n1)` range in `nb`-column cache tiles, one
+/// monomorphized sweep call per tile.
 ///
 /// # Safety
 /// `acc` must point to an `[M, N]` i64 buffer (`M = x.rows`, `N = w.rows`)
@@ -166,52 +187,30 @@ unsafe fn gemv_elim_raw(
     acc: *mut i64,
 ) {
     let (m, n) = (x.rows, w.rows);
-    let p = x.planes;
+    let ks = kernels::for_isa(cfg.isa).unwrap_or_else(kernels::scalar_set);
+    let (x_row, x_plane) = x.strides();
+    let (w_row, w_plane) = w.strides();
     let nb = cfg.nb.max(1);
     let mut tile_start = n0;
     while tile_start < n1 {
         let tile_end = (tile_start + nb).min(n1);
-        for ni in tile_start..tile_end {
-            for t in 0..w.planes {
-                let wrow = w.plane_row(t, ni);
-                for mi in 0..m {
-                    let mut a = 0i64;
-                    let mut s = 0usize;
-                    match cfg.fanout {
-                        4 => {
-                            while s + 4 <= p {
-                                let (d0, d1, d2, d3) = bdot4(
-                                    wrow,
-                                    x.plane_row(s, mi),
-                                    x.plane_row(s + 1, mi),
-                                    x.plane_row(s + 2, mi),
-                                    x.plane_row(s + 3, mi),
-                                );
-                                a += ((d0 as i64) << s)
-                                    + ((d1 as i64) << (s + 1))
-                                    + ((d2 as i64) << (s + 2))
-                                    + ((d3 as i64) << (s + 3));
-                                s += 4;
-                            }
-                        }
-                        2 => {
-                            while s + 2 <= p {
-                                let (d0, d1) =
-                                    bdot2(wrow, x.plane_row(s, mi), x.plane_row(s + 1, mi));
-                                a += ((d0 as i64) << s) + ((d1 as i64) << (s + 1));
-                                s += 2;
-                            }
-                        }
-                        _ => {}
-                    }
-                    while s < p {
-                        a += (bdot_unrolled(wrow, x.plane_row(s, mi)) as i64) << s;
-                        s += 1;
-                    }
-                    *acc.add(mi * n + ni) += a << t;
-                }
-            }
-        }
+        ks.gemv(SweepArgs {
+            x: x.data.as_ptr(),
+            x_row,
+            x_plane,
+            p: x.planes,
+            w: w.data.as_ptr(),
+            w_row,
+            w_plane,
+            q: w.planes,
+            kw: x.kwords,
+            m,
+            n0: tile_start,
+            n1: tile_end,
+            n,
+            acc,
+            fanout: cfg.fanout,
+        });
         tile_start = tile_end;
     }
 }
@@ -268,6 +267,7 @@ pub fn gemm_int_reference(
 mod tests {
     use super::*;
     use crate::abq::bitplane::PlaneLayout;
+    use crate::abq::isa::Isa;
 
     fn case(m: usize, n: usize, k: usize, p: usize, q: usize, seed: u64) -> (Vec<u8>, Vec<u8>, Vec<i32>, Vec<i32>) {
         let mut st = seed;
@@ -307,17 +307,22 @@ mod tests {
     }
 
     #[test]
-    fn auto_with_explicit_configs_matches() {
+    fn auto_with_explicit_configs_matches_for_every_supported_isa() {
         let (xc, wc, zx, zw) = case(5, 47, 192, 6, 3, 99);
         let x = BitPlanes::pack(&xc, 5, 192, 6);
         let w = BitPlanes::pack(&wc, 47, 192, 3);
         let want = gemm_int_reference(&xc, &wc, 5, 47, 192, &zx, &zw);
-        for nb in [1usize, 7, 16, 64] {
-            for fanout in [1usize, 2, 4] {
-                for parallel in [false, true] {
-                    let cfg = TileConfig::new(nb, 0, fanout, parallel);
-                    let got = gemm_int(&x, &w, &zx, &zw, OptLevel::Auto, Some(cfg));
-                    assert_eq!(got, want, "cfg {cfg:?}");
+        for &isa in Isa::compiled() {
+            if !isa.supported() {
+                continue;
+            }
+            for nb in [1usize, 7, 16, 64] {
+                for fanout in [1usize, 2, 4] {
+                    for parallel in [false, true] {
+                        let cfg = TileConfig::new(nb, 0, fanout, parallel).with_isa(isa);
+                        let got = gemm_int(&x, &w, &zx, &zw, OptLevel::Auto, Some(cfg));
+                        assert_eq!(got, want, "cfg {cfg:?}");
+                    }
                 }
             }
         }

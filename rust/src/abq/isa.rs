@@ -1,0 +1,294 @@
+//! Runtime ISA selection for the bit-plane kernels (`kernels/`).
+//!
+//! The paper's BTC kernels are compiled per-architecture; our CPU analogue
+//! must run on whatever machine loads the binary, so the SIMD variants are
+//! selected **at runtime** by CPU feature detection
+//! (`is_x86_feature_detected!` / `is_aarch64_feature_detected!`), never by
+//! compile-time `target-cpu` alone. One portable binary carries every
+//! kernel its target architecture can express; the fastest supported one
+//! wins at startup.
+//!
+//! Semantics:
+//!
+//! * [`ceiling`] is the process-wide dispatch **ceiling**: kernels at or
+//!   below it (in [`Isa::rank`] order) are eligible. By default it is the
+//!   best ISA the CPU supports.
+//! * `ABQ_ISA=scalar|avx2|avx512|neon` lowers the ceiling (testing, A/B
+//!   benching). A value the CPU cannot run is ignored with a warning —
+//!   the override can never select an unsupported kernel, so the
+//!   `#[target_feature]` blocks in `kernels/` stay unreachable unless
+//!   their detection guard passed. `ABQ_ISA=auto` (or unset) means full
+//!   detection.
+//! * [`pin`]/[`unpin`] move the ceiling programmatically (tests and the
+//!   per-ISA bench rungs use this); the auto-search cache stays coherent
+//!   because the ceiling is part of its [`crate::abq::tile::ShapeKey`].
+//!
+//! Every kernel is bit-exact against the scalar path (integer popcount
+//! math has no rounding), so the ceiling affects speed only — property
+//! suites assert identical streams across ceilings (`tests/prop_simd.rs`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// One instruction-set variant of the bit-plane kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Isa {
+    /// Portable `u64` AND + `count_ones` loops — the universal fallback
+    /// and the bit-exactness oracle. Always compiled, always supported.
+    Scalar,
+    /// 256-bit AVX2: shuffle-LUT (Muła) popcount with deferred SAD
+    /// accumulation; `movemask`-based activation packing.
+    Avx2,
+    /// 512-bit AVX-512 with native `vpopcntq` (requires `avx512f` +
+    /// `avx512vpopcntdq`, plus `avx2` for the packing kernels).
+    Avx512,
+    /// 128-bit NEON: `cnt` + widening pairwise adds.
+    Neon,
+}
+
+impl Isa {
+    /// All variants compiled into this binary for this architecture.
+    pub fn compiled() -> &'static [Isa] {
+        #[cfg(target_arch = "x86_64")]
+        {
+            &[Isa::Scalar, Isa::Avx2, Isa::Avx512]
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            &[Isa::Scalar, Isa::Neon]
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            &[Isa::Scalar]
+        }
+    }
+
+    /// Does the running CPU support this variant? (`Scalar` always does.)
+    pub fn supported(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx512 => {
+                is_x86_feature_detected!("avx512f")
+                    && is_x86_feature_detected!("avx512vpopcntdq")
+                    && is_x86_feature_detected!("avx2")
+            }
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            // variants for other architecture families are compiled out of
+            // `compiled()` and can never pass detection here
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    /// Dispatch-preference order within an architecture family
+    /// (higher = preferred when supported).
+    pub fn rank(self) -> u8 {
+        match self {
+            Isa::Scalar => 0,
+            Isa::Avx2 => 1,
+            Isa::Neon => 1,
+            Isa::Avx512 => 2,
+        }
+    }
+
+    /// Canonical lower-case name (the `ABQ_ISA` grammar).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+            Isa::Neon => "neon",
+        }
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            Isa::Scalar => 0,
+            Isa::Avx2 => 1,
+            Isa::Avx512 => 2,
+            Isa::Neon => 3,
+        }
+    }
+
+    fn from_u8(v: u8) -> Isa {
+        match v {
+            0 => Isa::Scalar,
+            1 => Isa::Avx2,
+            2 => Isa::Avx512,
+            _ => Isa::Neon,
+        }
+    }
+}
+
+impl std::fmt::Display for Isa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Isa {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Isa, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Ok(Isa::Scalar),
+            "avx2" => Ok(Isa::Avx2),
+            "avx512" | "avx-512" | "avx512vpopcntdq" => Ok(Isa::Avx512),
+            "neon" => Ok(Isa::Neon),
+            other => Err(format!(
+                "unknown ISA '{other}' (expected scalar|avx2|avx512|neon|auto)"
+            )),
+        }
+    }
+}
+
+/// Best ISA the running CPU supports (ignores `ABQ_ISA`).
+pub fn detect_best() -> Isa {
+    *Isa::compiled()
+        .iter()
+        .filter(|i| i.supported())
+        .max_by_key(|i| i.rank())
+        .unwrap_or(&Isa::Scalar)
+}
+
+/// Programmatic pin state: 0 = follow `ABQ_ISA`/auto, else `isa + 1`.
+static PIN: AtomicU8 = AtomicU8::new(0);
+
+/// `ABQ_ISA`-resolved base ceiling (read once per process).
+fn env_ceiling() -> Isa {
+    static BASE: OnceLock<Isa> = OnceLock::new();
+    *BASE.get_or_init(|| {
+        let best = detect_best();
+        match std::env::var("ABQ_ISA").ok().as_deref() {
+            None | Some("") | Some("auto") => best,
+            Some(v) => match v.parse::<Isa>() {
+                Ok(isa) if isa.supported() => isa,
+                Ok(isa) => {
+                    eprintln!(
+                        "warn: ABQ_ISA={isa} not supported on this CPU — using {best}"
+                    );
+                    best
+                }
+                Err(e) => {
+                    eprintln!("warn: {e} — using {best}");
+                    best
+                }
+            },
+        }
+    })
+}
+
+/// The process-wide dispatch ceiling: the pinned ISA if [`pin`] is in
+/// effect, otherwise the `ABQ_ISA`/auto-detected one. Always supported on
+/// the running CPU.
+pub fn ceiling() -> Isa {
+    match PIN.load(Ordering::Relaxed) {
+        0 => env_ceiling(),
+        v => Isa::from_u8(v - 1),
+    }
+}
+
+/// Pin the dispatch ceiling (tests and per-ISA bench rungs). Returns the
+/// previous ceiling so callers can restore it. Panics if the requested
+/// ISA is not supported on this CPU — a pin can never make an
+/// undetected `#[target_feature]` kernel reachable.
+///
+/// Safe to flip mid-process: every kernel is bit-exact, and the
+/// auto-search / layout caches key on the ceiling, so concurrent work
+/// under the old ceiling stays valid.
+pub fn pin(isa: Isa) -> Isa {
+    assert!(isa.supported(), "cannot pin unsupported ISA {isa}");
+    let prev = ceiling();
+    PIN.store(isa.to_u8() + 1, Ordering::Relaxed);
+    prev
+}
+
+/// Undo [`pin`]: back to the `ABQ_ISA`/auto ceiling.
+pub fn unpin() {
+    PIN.store(0, Ordering::Relaxed);
+}
+
+/// Run `f` with the ceiling pinned to `isa`, then restore the previous
+/// pin state (even on panic). Callers are serialized on a process-wide
+/// lock, so concurrently running `pinned` sections — parallel test
+/// threads, per-ISA bench rungs — never observe each other's pins.
+/// Panics (via [`pin`]) if `isa` is not supported on this CPU.
+pub fn pinned<R>(isa: Isa, f: impl FnOnce() -> R) -> R {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    let _serial = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    struct Restore(u8);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            PIN.store(self.0, Ordering::Relaxed);
+        }
+    }
+    let _restore = Restore(PIN.load(Ordering::Relaxed));
+    pin(isa);
+    f()
+}
+
+/// The ISAs the auto-search races for a given ceiling: every *supported*
+/// variant at or below it, scalar first. `Scalar` ceiling ⇒ scalar only
+/// (so `ABQ_ISA=scalar` provably never executes a SIMD kernel).
+pub fn race_set_at(ceil: Isa) -> Vec<Isa> {
+    let mut v: Vec<Isa> = Isa::compiled()
+        .iter()
+        .copied()
+        .filter(|i| i.supported() && i.rank() <= ceil.rank())
+        .collect();
+    v.sort_by_key(|i| i.rank());
+    v
+}
+
+/// [`race_set_at`] at the current [`ceiling`].
+pub fn race_set() -> Vec<Isa> {
+    race_set_at(ceiling())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_always_compiled_and_supported() {
+        assert!(Isa::compiled().contains(&Isa::Scalar));
+        assert!(Isa::Scalar.supported());
+        assert_eq!(Isa::Scalar.rank(), 0);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon] {
+            assert_eq!(isa.name().parse::<Isa>().unwrap(), isa);
+            assert_eq!(Isa::from_u8(isa.to_u8()), isa);
+        }
+        assert!("vliw".parse::<Isa>().is_err());
+    }
+
+    #[test]
+    fn ceiling_is_supported_and_pin_restores() {
+        assert!(ceiling().supported());
+        pinned(Isa::Scalar, || {
+            assert_eq!(ceiling(), Isa::Scalar);
+            assert_eq!(race_set(), vec![Isa::Scalar]);
+        });
+        assert!(ceiling().supported());
+    }
+
+    #[test]
+    fn race_set_contains_scalar_and_respects_ceiling() {
+        for &ceil in Isa::compiled() {
+            if !ceil.supported() {
+                continue;
+            }
+            let set = race_set_at(ceil);
+            assert_eq!(set[0], Isa::Scalar, "scalar is always raced");
+            assert!(set.iter().all(|i| i.rank() <= ceil.rank() && i.supported()));
+        }
+        assert_eq!(race_set_at(Isa::Scalar), vec![Isa::Scalar]);
+    }
+}

@@ -1,0 +1,62 @@
+//! AVX-512 kernels: the binary dot is native — `vpopcntq` counts eight
+//! 64-bit words per instruction (exactly the paper's BMMA shape scaled to
+//! CPU registers), and ragged tails use masked loads instead of a scalar
+//! epilogue. Requires `avx512f` + `avx512vpopcntdq` (Ice Lake / Zen 4 and
+//! later); the activation pack reuses the AVX2 kernel (detection for this
+//! ISA implies AVX2 — see `Isa::supported`).
+//!
+//! Reachable only through `kernels::for_isa` behind its detection guard.
+
+use std::arch::x86_64::*;
+
+/// Binary dot over `kw` words: Σ popcount(aᵢ ∧ bᵢ) with `vpopcntq`,
+/// masked-load tail for `kw % 8 != 0`.
+///
+/// # Safety
+/// `a` and `b` must be readable for `kw` words; CPU must support
+/// AVX-512F + VPOPCNTDQ.
+#[inline]
+#[target_feature(enable = "avx512f,avx512vpopcntdq")]
+pub(crate) unsafe fn bdot_raw(a: *const u64, b: *const u64, kw: usize) -> u64 {
+    let mut acc = _mm512_setzero_si512();
+    let mut i = 0usize;
+    while i + 8 <= kw {
+        let va = _mm512_loadu_epi64(a.add(i) as *const i64);
+        let vb = _mm512_loadu_epi64(b.add(i) as *const i64);
+        acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(_mm512_and_si512(va, vb)));
+        i += 8;
+    }
+    if i < kw {
+        let tail: __mmask8 = (1u8 << (kw - i)) - 1;
+        let va = _mm512_maskz_loadu_epi64(tail, a.add(i) as *const i64);
+        let vb = _mm512_maskz_loadu_epi64(tail, b.add(i) as *const i64);
+        acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(_mm512_and_si512(va, vb)));
+    }
+    _mm512_reduce_add_epi64(acc) as u64
+}
+
+/// Σ_s bdot(x + s·stride, w) ≪ s over `p` activation planes; planes run
+/// sequentially (512-bit K strips already saturate the load ports), the
+/// scalar fanout hint is ignored.
+///
+/// # Safety
+/// `x` readable for `(p-1)·stride + kw` words, `w` for `kw`; CPU must
+/// support AVX-512F + VPOPCNTDQ.
+#[inline]
+#[target_feature(enable = "avx512f,avx512vpopcntdq")]
+pub(crate) unsafe fn plane_acc(
+    x: *const u64,
+    stride: usize,
+    p: usize,
+    kw: usize,
+    w: *const u64,
+    _fanout: usize,
+) -> i64 {
+    let mut a = 0i64;
+    for s in 0..p {
+        a += (bdot_raw(x.add(s * stride), w, kw) as i64) << s;
+    }
+    a
+}
+
+define_sweeps!(#[target_feature(enable = "avx512f,avx512vpopcntdq")]);

@@ -1,0 +1,425 @@
+//! SIMD bit-plane kernels with runtime ISA dispatch (ROADMAP item 1).
+//!
+//! The paper reconstructs arbitrary-precision matmul from 1-bit building
+//! blocks on Binary TensorCores; the CPU analogue bottoms out in
+//! `popcount(AND)` over `u64` words. This module provides that inner loop
+//! in four interchangeable instruction-set variants:
+//!
+//! | module   | ISA            | binary dot                         | activation pack          |
+//! |----------|----------------|------------------------------------|--------------------------|
+//! | `scalar` | portable       | `count_ones` + multi-acc chains    | shift/or window loop     |
+//! | `avx2`   | x86-64 AVX2    | Muła shuffle-LUT popcount + SAD    | `cmpeq`+`movemask`       |
+//! | `avx512` | AVX-512 F+VPOPCNTDQ | native `vpopcntq`, masked tails | AVX2 pack (implied)  |
+//! | `neon`   | aarch64 NEON   | `cnt` + widening pairwise adds     | `tst`+weighted `addv`    |
+//!
+//! Selection is **runtime-only** (`isa::ceiling()` — CPU feature detection
+//! with an `ABQ_ISA` override); a `#[target_feature]` body is reachable
+//! exclusively through [`for_isa`], which refuses undetected ISAs, so the
+//! binary is safe on any CPU of its architecture family.
+//!
+//! Dispatch granularity is the **whole sweep**, not the dot product: each
+//! ISA module monomorphizes `gemv_sweep` (via `define_sweeps!`) so the
+//! plane-accumulate loops inline inside one `#[target_feature]` region and
+//! the indirect call is paid once per tile, not once per word. All
+//! variants are bit-exact — integer popcount math has no rounding, so any
+//! lane reorganization sums to the same integer (property-tested per ISA
+//! in `tests/prop_simd.rs` and the unit tests below).
+
+use super::isa::{self, Isa};
+
+/// Operand description for one GEMV-elimination sweep over weight columns
+/// `[n0, n1)`: raw plane-data base pointers plus the stride arithmetic
+/// that makes one sweep serve both plane layouts *and* the staged
+/// pipeline buffer (for fixed row `r`, plane `s` lives at
+/// `base + r*row + s*plane`).
+#[derive(Clone, Copy)]
+pub(crate) struct SweepArgs {
+    /// activation planes base
+    pub x: *const u64,
+    /// activation row step (words)
+    pub x_row: usize,
+    /// activation plane step (words)
+    pub x_plane: usize,
+    /// activation plane count p
+    pub p: usize,
+    /// weight planes base
+    pub w: *const u64,
+    /// weight row step (words)
+    pub w_row: usize,
+    /// weight plane step (words)
+    pub w_plane: usize,
+    /// weight plane count q
+    pub q: usize,
+    /// words per plane row
+    pub kw: usize,
+    /// activation rows (M)
+    pub m: usize,
+    /// first weight column of this sweep
+    pub n0: usize,
+    /// one past the last weight column
+    pub n1: usize,
+    /// accumulator row stride (N)
+    pub n: usize,
+    /// `[M, N]` i64 accumulator base (added to, not overwritten)
+    pub acc: *mut i64,
+    /// plane-fanout hint for the scalar multi-accumulator chains
+    /// (SIMD variants vectorize over K and ignore it)
+    pub fanout: usize,
+}
+
+/// Expands the sweep kernels inside an ISA module. The module must define
+/// `plane_acc(x, stride, p, kw, w, fanout) -> i64` (Σ_s bdot(x+s·stride, w)
+/// ≪ s); the generated sweep adds `plane_acc ≪ t` for every weight plane t
+/// of every column in `[n0, n1)`. `$(#[$attr])*` carries the
+/// `#[target_feature]` gate so the plane loops inline into one region.
+macro_rules! define_sweeps {
+    ($(#[$attr:meta])*) => {
+        /// GEMV-elimination sweep over weight columns `[n0, n1)`; see
+        /// [`crate::abq::kernels::SweepArgs`] for the operand contract.
+        ///
+        /// # Safety
+        /// All pointers in `a` must cover the shapes its fields describe,
+        /// the caller must have exclusive access to accumulator columns
+        /// `[n0, n1)`, and the CPU must support this module's ISA.
+        $(#[$attr])*
+        pub(crate) unsafe fn gemv_sweep(a: crate::abq::kernels::SweepArgs) {
+            for ni in a.n0..a.n1 {
+                let wr = a.w.add(ni * a.w_row);
+                for t in 0..a.q {
+                    let wp = wr.add(t * a.w_plane);
+                    for mi in 0..a.m {
+                        let d = plane_acc(
+                            a.x.add(mi * a.x_row),
+                            a.x_plane,
+                            a.p,
+                            a.kw,
+                            wp,
+                            a.fanout,
+                        );
+                        *a.acc.add(mi * a.n + ni) += d << t;
+                    }
+                }
+            }
+        }
+    };
+}
+
+mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "x86_64")]
+mod avx512;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+/// One ISA's kernel table: raw function pointers behind safe(ish)
+/// entry points. Obtain via [`for_isa`] / [`active`] / [`scalar_set`] —
+/// a set exists only for ISAs whose CPU detection passed, which is what
+/// makes calling the `#[target_feature]` bodies sound.
+pub struct KernelSet {
+    /// which ISA this table runs
+    pub isa: Isa,
+    bdot: unsafe fn(*const u64, *const u64, usize) -> u64,
+    gemv: unsafe fn(SweepArgs),
+    pack_row: unsafe fn(*const u8, usize, usize, u8, *mut u64, usize) -> i64,
+}
+
+// Safety: the table holds plain function pointers and a Copy enum.
+unsafe impl Sync for KernelSet {}
+
+impl KernelSet {
+    /// Binary dot product Σ popcount(aᵢ ∧ bᵢ) over equal-length words.
+    #[inline]
+    pub fn bdot(&self, a: &[u64], b: &[u64]) -> u64 {
+        assert_eq!(a.len(), b.len(), "bdot operand length mismatch");
+        // Safety: equal lengths checked; this set's ISA passed detection.
+        unsafe { (self.bdot)(a.as_ptr(), b.as_ptr(), a.len()) }
+    }
+
+    /// Pack one row of codes into its bit-planes at
+    /// `out[offset + p*stride ..][..kwords]` for `p in 0..planes`
+    /// (codes are masked to `planes` bits) and return the masked row sum.
+    pub fn pack_row(
+        &self,
+        codes: &[u8],
+        planes: usize,
+        out: &mut [u64],
+        offset: usize,
+        stride: usize,
+    ) -> i64 {
+        assert!((1..=8).contains(&planes));
+        let kwords = codes.len().div_ceil(64);
+        assert!(
+            offset + (planes - 1) * stride + kwords <= out.len(),
+            "pack_row write range out of bounds"
+        );
+        let mask = (((1u16 << planes) - 1) & 0xFF) as u8;
+        // Safety: write range bounds-checked above; ISA passed detection.
+        unsafe {
+            (self.pack_row)(
+                codes.as_ptr(),
+                codes.len(),
+                planes,
+                mask,
+                out.as_mut_ptr().add(offset),
+                stride,
+            )
+        }
+    }
+
+    /// Run the GEMV-elimination sweep.
+    ///
+    /// # Safety
+    /// Same contract as the per-ISA `gemv_sweep`: pointers valid for the
+    /// described shapes, exclusive access to accumulator columns
+    /// `[n0, n1)`.
+    #[inline]
+    pub(crate) unsafe fn gemv(&self, args: SweepArgs) {
+        (self.gemv)(args)
+    }
+}
+
+static SCALAR: KernelSet = KernelSet {
+    isa: Isa::Scalar,
+    bdot: scalar::bdot_raw,
+    gemv: scalar::gemv_sweep,
+    pack_row: scalar::pack_row,
+};
+
+// #[target_feature] bodies go behind plain unsafe-fn shims so the tables
+// hold ordinary fn pointers; the shims inherit the detection obligation.
+
+/// # Safety
+/// CPU must support AVX2 (guaranteed by [`for_isa`]).
+#[cfg(target_arch = "x86_64")]
+unsafe fn avx2_bdot(a: *const u64, b: *const u64, kw: usize) -> u64 {
+    avx2::bdot_raw(a, b, kw)
+}
+
+/// # Safety
+/// CPU must support AVX2; sweep contract as in [`KernelSet::gemv`].
+#[cfg(target_arch = "x86_64")]
+unsafe fn avx2_gemv(args: SweepArgs) {
+    avx2::gemv_sweep(args)
+}
+
+/// # Safety
+/// CPU must support AVX2; write range as in [`KernelSet::pack_row`].
+#[cfg(target_arch = "x86_64")]
+unsafe fn avx2_pack(c: *const u8, k: usize, p: usize, m: u8, o: *mut u64, s: usize) -> i64 {
+    avx2::pack_row(c, k, p, m, o, s)
+}
+
+/// # Safety
+/// CPU must support AVX-512F + VPOPCNTDQ (guaranteed by [`for_isa`]).
+#[cfg(target_arch = "x86_64")]
+unsafe fn avx512_bdot(a: *const u64, b: *const u64, kw: usize) -> u64 {
+    avx512::bdot_raw(a, b, kw)
+}
+
+/// # Safety
+/// CPU must support AVX-512F + VPOPCNTDQ; sweep contract as in
+/// [`KernelSet::gemv`].
+#[cfg(target_arch = "x86_64")]
+unsafe fn avx512_gemv(args: SweepArgs) {
+    avx512::gemv_sweep(args)
+}
+
+/// # Safety
+/// CPU must support NEON (guaranteed by [`for_isa`]).
+#[cfg(target_arch = "aarch64")]
+unsafe fn neon_bdot(a: *const u64, b: *const u64, kw: usize) -> u64 {
+    neon::bdot_raw(a, b, kw)
+}
+
+/// # Safety
+/// CPU must support NEON; sweep contract as in [`KernelSet::gemv`].
+#[cfg(target_arch = "aarch64")]
+unsafe fn neon_gemv(args: SweepArgs) {
+    neon::gemv_sweep(args)
+}
+
+/// # Safety
+/// CPU must support NEON; write range as in [`KernelSet::pack_row`].
+#[cfg(target_arch = "aarch64")]
+unsafe fn neon_pack(c: *const u8, k: usize, p: usize, m: u8, o: *mut u64, s: usize) -> i64 {
+    neon::pack_row(c, k, p, m, o, s)
+}
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: KernelSet = KernelSet {
+    isa: Isa::Avx2,
+    bdot: avx2_bdot,
+    gemv: avx2_gemv,
+    pack_row: avx2_pack,
+};
+
+// Avx512 detection requires avx2, so the AVX2 pack (which saturates the
+// movemask port already) is reused for the activation side.
+#[cfg(target_arch = "x86_64")]
+static AVX512: KernelSet = KernelSet {
+    isa: Isa::Avx512,
+    bdot: avx512_bdot,
+    gemv: avx512_gemv,
+    pack_row: avx2_pack,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: KernelSet = KernelSet {
+    isa: Isa::Neon,
+    bdot: neon_bdot,
+    gemv: neon_gemv,
+    pack_row: neon_pack,
+};
+
+/// The kernel table for `isa`, or `None` when this binary doesn't compile
+/// it or the running CPU doesn't support it. This is the **only** route
+/// to a non-scalar table, which is what keeps every `#[target_feature]`
+/// body behind its detection guard.
+pub fn for_isa(isa: Isa) -> Option<&'static KernelSet> {
+    if !isa.supported() {
+        return None;
+    }
+    match isa {
+        Isa::Scalar => Some(&SCALAR),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => Some(&AVX2),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => Some(&AVX512),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => Some(&NEON),
+        // ISAs of other architecture families never pass `supported()`
+        #[allow(unreachable_patterns)]
+        _ => None,
+    }
+}
+
+/// The kernel table at the current dispatch ceiling
+/// ([`crate::abq::isa::ceiling`]): best detected ISA, `ABQ_ISA` and
+/// [`crate::abq::isa::pin`] respected.
+#[inline]
+pub fn active() -> &'static KernelSet {
+    for_isa(isa::ceiling()).unwrap_or(&SCALAR)
+}
+
+/// The portable scalar table — always available, the bit-exactness oracle.
+#[inline]
+pub fn scalar_set() -> &'static KernelSet {
+    &SCALAR
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abq::bitplane::{BitPlanes, PlaneLayout};
+
+    fn words(n: usize, seed: u64) -> Vec<u64> {
+        (0..n)
+            .map(|i| (seed.wrapping_add(i as u64)).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .collect()
+    }
+
+    fn ref_bdot(a: &[u64], b: &[u64]) -> u64 {
+        a.iter().zip(b).map(|(x, y)| (x & y).count_ones() as u64).sum()
+    }
+
+    fn sets() -> Vec<&'static KernelSet> {
+        Isa::compiled().iter().filter_map(|&i| for_isa(i)).collect()
+    }
+
+    #[test]
+    fn every_supported_isa_bdot_matches_reference() {
+        // lengths cross every vector width and the AVX2 SAD-flush
+        // boundary (31 iterations × 4 words = 124)
+        for &kw in &[0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 31, 33, 63, 64, 123, 124, 125, 130] {
+            let a = words(kw, 11);
+            let b = words(kw, 77);
+            let want = ref_bdot(&a, &b);
+            for ks in sets() {
+                assert_eq!(ks.bdot(&a, &b), want, "{} kw={kw}", ks.isa);
+            }
+        }
+    }
+
+    #[test]
+    fn every_supported_isa_pack_matches_scalar() {
+        for &k in &[1usize, 3, 31, 32, 33, 64, 65, 100, 129] {
+            let codes: Vec<u8> = (0..k).map(|i| (i * 37 + 11) as u8).collect();
+            for planes in 1..=8usize {
+                let kw = k.div_ceil(64);
+                for stride in [kw, 3 * kw] {
+                    let len = (planes - 1) * stride + kw + 2;
+                    let mut want = vec![0u64; len];
+                    let sum_w = scalar_set().pack_row(&codes, planes, &mut want, 1, stride);
+                    for ks in sets() {
+                        let mut got = vec![0u64; len];
+                        let sum = ks.pack_row(&codes, planes, &mut got, 1, stride);
+                        assert_eq!(sum, sum_w, "{} rowsum k={k} p={planes}", ks.isa);
+                        assert_eq!(got, want, "{} words k={k} p={planes} s={stride}", ks.isa);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_supported_isa_sweep_matches_naive() {
+        let (m, n, k, p, q) = (3usize, 5usize, 197usize, 5usize, 3usize);
+        let xc: Vec<u8> = (0..m * k).map(|i| ((i * 13 + 5) % (1 << p)) as u8).collect();
+        let wc: Vec<u8> = (0..n * k).map(|i| ((i * 7 + 2) % (1 << q)) as u8).collect();
+        let x = BitPlanes::pack(&xc, m, k, p);
+        let w = BitPlanes::pack_with_layout(&wc, n, k, q, PlaneLayout::Interleaved);
+        let kw = x.kwords;
+        // naive i64 reference straight off the plane rows
+        let mut want = vec![0i64; m * n];
+        for mi in 0..m {
+            for ni in 0..n {
+                for s in 0..p {
+                    for t in 0..q {
+                        let d = ref_bdot(x.plane_row(s, mi), w.plane_row(t, ni)) as i64;
+                        want[mi * n + ni] += d << (s + t);
+                    }
+                }
+            }
+        }
+        for ks in sets() {
+            for fanout in [1usize, 2, 4] {
+                let mut acc = vec![0i64; m * n];
+                // Safety: operands sized per the args; exclusive acc access.
+                unsafe {
+                    ks.gemv(SweepArgs {
+                        x: x.data.as_ptr(),
+                        x_row: kw,
+                        x_plane: m * kw,
+                        p,
+                        w: w.data.as_ptr(),
+                        w_row: q * kw,
+                        w_plane: kw,
+                        q,
+                        kw,
+                        m,
+                        n0: 0,
+                        n1: n,
+                        n,
+                        acc: acc.as_mut_ptr(),
+                        fanout,
+                    });
+                }
+                assert_eq!(acc, want, "{} fanout={fanout}", ks.isa);
+            }
+        }
+    }
+
+    #[test]
+    fn for_isa_refuses_unsupported_and_active_respects_pin() {
+        for &i in Isa::compiled() {
+            if !i.supported() {
+                assert!(for_isa(i).is_none(), "{i} unsupported yet dispatchable");
+            }
+        }
+        isa::pinned(Isa::Scalar, || assert_eq!(active().isa, Isa::Scalar));
+        isa::pinned(isa::ceiling(), || assert_eq!(active().isa, isa::ceiling()));
+    }
+}

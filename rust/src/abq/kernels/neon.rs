@@ -1,0 +1,112 @@
+//! NEON (aarch64) kernels: binary dot via `cnt` (per-byte popcount) with
+//! the widening pairwise-add chain `vpaddl u8→u16→u32→u64`, two words per
+//! 128-bit vector; activation packing via `vtst` + per-lane weight bytes
+//! + `vaddv` horizontal sums (NEON has no `movemask`, so each 8-lane half
+//! folds its hit mask through weights 1,2,4,…,128 instead).
+//!
+//! Reachable only through `kernels::for_isa` behind
+//! `is_aarch64_feature_detected!("neon")`.
+
+use std::arch::aarch64::*;
+
+/// Binary dot over `kw` words: Σ popcount(aᵢ ∧ bᵢ).
+///
+/// # Safety
+/// `a` and `b` must be readable for `kw` words; CPU must support NEON.
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn bdot_raw(a: *const u64, b: *const u64, kw: usize) -> u64 {
+    let mut acc = vdupq_n_u64(0);
+    let mut i = 0usize;
+    while i + 2 <= kw {
+        let va = vld1q_u64(a.add(i));
+        let vb = vld1q_u64(b.add(i));
+        let cnt = vcntq_u8(vreinterpretq_u8_u64(vandq_u64(va, vb)));
+        acc = vaddq_u64(acc, vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(cnt))));
+        i += 2;
+    }
+    let mut total = vaddvq_u64(acc);
+    if i < kw {
+        total += (*a.add(i) & *b.add(i)).count_ones() as u64;
+    }
+    total
+}
+
+/// Σ_s bdot(x + s·stride, w) ≪ s over `p` activation planes; planes run
+/// sequentially, the scalar fanout hint is ignored.
+///
+/// # Safety
+/// `x` readable for `(p-1)·stride + kw` words, `w` for `kw`; NEON CPU.
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn plane_acc(
+    x: *const u64,
+    stride: usize,
+    p: usize,
+    kw: usize,
+    w: *const u64,
+    _fanout: usize,
+) -> i64 {
+    let mut a = 0i64;
+    for s in 0..p {
+        a += (bdot_raw(x.add(s * stride), w, kw) as i64) << s;
+    }
+    a
+}
+
+/// Pack one row of codes into bit-planes (see `scalar::pack_row` for the
+/// layout contract). Per 64-code window: four 16-byte chunks are masked,
+/// the row sum accumulates via `vaddlv`, and each plane's 16-bit slice is
+/// `vaddv(vtst(codes, bit) & [1,2,4,…,128])` per 8-lane half.
+///
+/// # Safety
+/// `codes` readable for `k` bytes; `out` writable for
+/// `(planes-1)·stride + ⌈k/64⌉` words; CPU must support NEON.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn pack_row(
+    codes: *const u8,
+    k: usize,
+    planes: usize,
+    mask: u8,
+    out: *mut u64,
+    stride: usize,
+) -> i64 {
+    const LANE_BITS: [u8; 16] = [1, 2, 4, 8, 16, 32, 64, 128, 1, 2, 4, 8, 16, 32, 64, 128];
+    let weights = vld1q_u8(LANE_BITS.as_ptr());
+    let vmask = vdupq_n_u8(mask);
+    let kwords = k.div_ceil(64);
+    let mut win = [0u8; 64];
+    let mut sum = 0i64;
+    for wi in 0..kwords {
+        let lo = wi * 64;
+        let len = (k - lo).min(64);
+        // only the final window can be ragged: stage it zero-padded so
+        // the vector path is unconditional (zero codes add nothing)
+        let ptr = if len == 64 {
+            codes.add(lo)
+        } else {
+            win = [0u8; 64];
+            std::ptr::copy_nonoverlapping(codes.add(lo), win.as_mut_ptr(), len);
+            win.as_ptr()
+        };
+        let mut chunks = [vdupq_n_u8(0); 4];
+        for (c, chunk) in chunks.iter_mut().enumerate() {
+            *chunk = vandq_u8(vld1q_u8(ptr.add(c * 16)), vmask);
+            sum += vaddlvq_u8(*chunk) as i64;
+        }
+        for p in 0..planes {
+            let bit = vdupq_n_u8(1u8 << p);
+            let mut word = 0u64;
+            for (c, &chunk) in chunks.iter().enumerate() {
+                let hits = vandq_u8(vtstq_u8(chunk, bit), weights);
+                let lo8 = vaddv_u8(vget_low_u8(hits)) as u64;
+                let hi8 = vaddv_u8(vget_high_u8(hits)) as u64;
+                word |= (lo8 | (hi8 << 8)) << (16 * c);
+            }
+            *out.add(p * stride + wi) = word;
+        }
+    }
+    sum
+}
+
+define_sweeps!(#[target_feature(enable = "neon")]);

@@ -1,0 +1,122 @@
+//! Portable scalar kernels — the universal fallback and the bit-exactness
+//! oracle every SIMD variant is property-tested against. The simple
+//! `count_ones` loop form also lets LLVM auto-vectorize where it can; the
+//! explicit-intrinsic modules exist because the auto-vectorizer cannot be
+//! *relied* on across compilers and `-C target-cpu` settings.
+
+/// Binary dot over `kw` words: Σ popcount(aᵢ ∧ bᵢ).
+///
+/// # Safety
+/// `a` and `b` must be readable for `kw` words.
+#[inline]
+pub(crate) unsafe fn bdot_raw(a: *const u64, b: *const u64, kw: usize) -> u64 {
+    let mut acc = 0u64;
+    for i in 0..kw {
+        acc += (*a.add(i) & *b.add(i)).count_ones() as u64;
+    }
+    acc
+}
+
+/// Σ_s bdot(x + s·stride, w) ≪ s over `p` activation planes, with
+/// `fanout` independent accumulator chains (the paper's Fig. 9 register
+/// double-buffer analogue: 2 or 4 popcount chains in flight hide the
+/// add-chain latency, and the shared `w` word is loaded once per chain
+/// group).
+///
+/// # Safety
+/// `x` must be readable for `(p-1)·stride + kw` words, `w` for `kw`.
+#[inline]
+pub(crate) unsafe fn plane_acc(
+    x: *const u64,
+    stride: usize,
+    p: usize,
+    kw: usize,
+    w: *const u64,
+    fanout: usize,
+) -> i64 {
+    let mut a = 0i64;
+    let mut s = 0usize;
+    match fanout {
+        4 => {
+            while s + 4 <= p {
+                let x0 = x.add(s * stride);
+                let x1 = x.add((s + 1) * stride);
+                let x2 = x.add((s + 2) * stride);
+                let x3 = x.add((s + 3) * stride);
+                let (mut d0, mut d1, mut d2, mut d3) = (0u64, 0u64, 0u64, 0u64);
+                for i in 0..kw {
+                    let wv = *w.add(i);
+                    d0 += (*x0.add(i) & wv).count_ones() as u64;
+                    d1 += (*x1.add(i) & wv).count_ones() as u64;
+                    d2 += (*x2.add(i) & wv).count_ones() as u64;
+                    d3 += (*x3.add(i) & wv).count_ones() as u64;
+                }
+                a += ((d0 as i64) << s)
+                    + ((d1 as i64) << (s + 1))
+                    + ((d2 as i64) << (s + 2))
+                    + ((d3 as i64) << (s + 3));
+                s += 4;
+            }
+        }
+        2 => {
+            while s + 2 <= p {
+                let x0 = x.add(s * stride);
+                let x1 = x.add((s + 1) * stride);
+                let (mut d0, mut d1) = (0u64, 0u64);
+                for i in 0..kw {
+                    let wv = *w.add(i);
+                    d0 += (*x0.add(i) & wv).count_ones() as u64;
+                    d1 += (*x1.add(i) & wv).count_ones() as u64;
+                }
+                a += ((d0 as i64) << s) + ((d1 as i64) << (s + 1));
+                s += 2;
+            }
+        }
+        _ => {}
+    }
+    while s < p {
+        a += (bdot_raw(x.add(s * stride), w, kw) as i64) << s;
+        s += 1;
+    }
+    a
+}
+
+/// Pack one row of codes into bit-planes: plane `p` of 64-code window
+/// `wi` is written to `out[p·stride + wi]`; returns the masked row sum.
+/// Word-sliced: the window is masked once, then each plane word is built
+/// with branchless shift/or accumulation.
+///
+/// # Safety
+/// `codes` must be readable for `k` bytes; `out` writable for
+/// `(planes-1)·stride + ⌈k/64⌉` words.
+pub(crate) unsafe fn pack_row(
+    codes: *const u8,
+    k: usize,
+    planes: usize,
+    mask: u8,
+    out: *mut u64,
+    stride: usize,
+) -> i64 {
+    let kwords = k.div_ceil(64);
+    let mut win = [0u8; 64];
+    let mut sum = 0i64;
+    for wi in 0..kwords {
+        let lo = wi * 64;
+        let len = (k - lo).min(64);
+        for (b, slot) in win[..len].iter_mut().enumerate() {
+            let m = *codes.add(lo + b) & mask;
+            *slot = m;
+            sum += m as i64;
+        }
+        for p in 0..planes {
+            let mut word = 0u64;
+            for (b, &c) in win[..len].iter().enumerate() {
+                word |= (((c >> p) & 1) as u64) << b;
+            }
+            *out.add(p * stride + wi) = word;
+        }
+    }
+    sum
+}
+
+define_sweeps!();

@@ -5,14 +5,18 @@
 //! Submodules follow the paper's kernel structure:
 //! * [`bitplane`] — BitPacking (`[M,K,p] → [p,M,K]`, word-sliced, two layouts)
 //! * [`bmma`]     — the 1-bit MAC primitive (AND+POPCNT)
+//! * [`isa`]      — runtime CPU-feature detection, `ABQ_ISA` dispatch ceiling
+//! * [`kernels`]  — per-ISA SIMD sweeps (scalar / AVX2 / AVX-512 / NEON)
 //! * [`gemm`]     — the p×q superposition with the Table-4 variant ladder
 //! * [`reduction`]— Bit Reduction + zero-point correction + dequant
-//! * [`tile`]/[`search`] — auto kernel search (tile config + weight layout)
+//! * [`tile`]/[`search`] — auto kernel search (tile config × ISA + weight layout)
 //! * [`pipeline`] — staged/pipelined multi-token GEMM
 
 pub mod bitplane;
 pub mod bmma;
 pub mod gemm;
+pub mod isa;
+pub mod kernels;
 pub mod pipeline;
 pub mod reduction;
 pub mod search;
@@ -20,6 +24,7 @@ pub mod tile;
 
 pub use bitplane::{BitPlanes, PlaneLayout, PlanesRef};
 pub use gemm::{gemm_int, gemm_int_reference, OptLevel};
+pub use isa::Isa;
 pub use tile::TileConfig;
 
 use crate::quant::{quantize_act_per_token_into, Correction, QuantSpec, WAConfig};

@@ -8,9 +8,12 @@
 //!    plane-rows of one M tile are copied into one dense, (m,s)-interleaved
 //!    buffer before the weight sweep, so the inner loop reads both operands
 //!    strictly sequentially (hardware prefetchers then do the cp.async job);
-//!  * **ILP double-buffering** — the unrolled multi-accumulator popcount
-//!    chains in `bmma.rs` keep 4 independent dependency chains in flight,
-//!    the register double-buffer analogue.
+//!  * **ILP double-buffering** — the sweep runs on the `abq::kernels`
+//!    dispatch table: multi-accumulator popcount chains on the scalar
+//!    path (the register double-buffer analogue), vector popcounts on the
+//!    SIMD paths. The staged `[mi][s][kwords]` buffer has exactly the
+//!    interleaved-layout stride shape, so the same per-ISA `gemv_sweep`
+//!    serves the staged prefill path with no separate kernel.
 //!
 //! `gemm_staged` is bit-identical to the other variants (tested) and is
 //! what the prefill GEMMs run on. The `_into` form stages into a
@@ -21,7 +24,7 @@
 use crate::util::par::{self, SendPtr};
 
 use super::bitplane::{BitPlanes, PlanesRef};
-use super::bmma::bdot_unrolled;
+use super::kernels::{self, SweepArgs};
 use super::reduction::correct_tile;
 
 /// M-tile size for operand staging (fits p·MB·kwords·8 bytes in L2).
@@ -73,25 +76,36 @@ pub fn gemm_staged_into(
             }
         }
         // ---- sweep: each weight plane-row streams once per tile; pool
-        // workers own disjoint column ranges of the accumulator ----
+        // workers own disjoint column ranges of the accumulator. The
+        // staged buffer's (row, plane) strides are (p·kw, kw) — the
+        // interleaved shape — so the dispatched gemv_sweep runs it
+        // directly at whatever ISA the ceiling allows. ----
         let staged_ro: &[u64] = staged;
+        let ks = kernels::active();
+        let (w_row, w_plane) = w.strides();
         let ptr = SendPtr(acc.as_mut_ptr());
         par::par_for_ranges(n, |n0, n1| {
-            for ni in n0..n1 {
-                for t in 0..q {
-                    let wrow = w.plane_row(t, ni);
-                    for mi in 0..mt {
-                        let base = (mi * p) * kw;
-                        let mut a = 0i64;
-                        for s in 0..p {
-                            let xr = &staged_ro[base + s * kw..base + (s + 1) * kw];
-                            a += (bdot_unrolled(xr, wrow) as i64) << s;
-                        }
-                        // Safety: element (m0+mi, ni) is written only by
-                        // the worker owning column range [n0, n1).
-                        unsafe { *ptr.0.add((m0 + mi) * n + ni) += a << t };
-                    }
-                }
+            // Safety: operand pointers cover the staged tile / weight
+            // planes; accumulator columns [n0, n1) of rows [m0, m1) are
+            // owned exclusively by this worker.
+            unsafe {
+                ks.gemv(SweepArgs {
+                    x: staged_ro.as_ptr(),
+                    x_row: p * kw,
+                    x_plane: kw,
+                    p,
+                    w: w.data.as_ptr(),
+                    w_row,
+                    w_plane,
+                    q,
+                    kw,
+                    m: mt,
+                    n0,
+                    n1,
+                    n,
+                    acc: ptr.0.add(m0 * n),
+                    fanout: 4,
+                });
             }
         });
         m0 = m1;

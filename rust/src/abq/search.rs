@@ -4,8 +4,11 @@
 //!
 //! The GPU search space is (BM, BN, BK, WM, WN) under shared-memory and
 //! register budgets; ours is (n-block, fanout, parallelism, weight plane
-//! layout) under an L1/L2 budget (`tile::candidates`). The search runs
-//! each candidate a few times on the real operands and keeps the fastest —
+//! layout) × **kernel ISA** under an L1/L2 budget (`tile::candidates`).
+//! Every supported ISA at or below the dispatch ceiling — scalar always
+//! included — is raced per shape, so a SIMD kernel only wins where it
+//! actually measures faster on this machine. The search runs each
+//! candidate a few times on the real operands and keeps the fastest —
 //! exactly the paper's "test the operators at various chunk sizes and
 //! adopt the speed-optimised implementation".
 //!
@@ -22,6 +25,7 @@ use std::time::Instant;
 
 use super::bitplane::{BitPlanes, PlaneLayout, PlanesRef};
 use super::gemm::{gemm_int_into, OptLevel};
+use super::isa;
 use super::tile::{candidates, ShapeKey, TileConfig};
 
 /// Process-wide search cache: shape → (best config, its median seconds).
@@ -44,6 +48,9 @@ struct LayoutKey {
     k: usize,
     q_planes: usize,
     p_planes: usize,
+    /// dispatch ceiling the layout race ran under (a layout picked by
+    /// scalar timings need not be the right one for AVX-512 sweeps)
+    isa: crate::abq::isa::Isa,
 }
 
 fn shape_key(x: &PlanesRef, w: &PlanesRef) -> ShapeKey {
@@ -54,6 +61,7 @@ fn shape_key(x: &PlanesRef, w: &PlanesRef) -> ShapeKey {
         p_bits: x.planes,
         q_bits: w.planes,
         interleaved: w.layout == PlaneLayout::Interleaved,
+        isa: isa::ceiling(),
     }
 }
 
@@ -107,19 +115,23 @@ fn search_best(x: PlanesRef, w: PlanesRef) -> (TileConfig, f64) {
     let mut acc = Vec::new();
     let mut best = TileConfig::default();
     let mut best_t = f64::INFINITY;
-    for cand in candidates(x.kwords, w.planes) {
-        let mut times = [0f64; REPS];
-        for t in times.iter_mut() {
-            let t0 = Instant::now();
-            gemm_int_into(x, w, &zx, &zw, OptLevel::Auto, Some(cand), &mut acc);
-            std::hint::black_box(&acc);
-            *t = t0.elapsed().as_secs_f64();
-        }
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let t = times[REPS / 2];
-        if t < best_t {
-            best_t = t;
-            best = cand;
+    // race every supported ISA at or below the ceiling (scalar first);
+    // within each, the tile/fanout/parallelism candidate grid
+    for isa in isa::race_set() {
+        for cand in candidates(x.kwords, w.planes, isa) {
+            let mut times = [0f64; REPS];
+            for t in times.iter_mut() {
+                let t0 = Instant::now();
+                gemm_int_into(x, w, &zx, &zw, OptLevel::Auto, Some(cand), &mut acc);
+                std::hint::black_box(&acc);
+                *t = t0.elapsed().as_secs_f64();
+            }
+            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let t = times[REPS / 2];
+            if t < best_t {
+                best_t = t;
+                best = cand;
+            }
         }
     }
     insert(key, best, best_t);
@@ -169,7 +181,13 @@ pub fn choose_weight_layout(w: BitPlanes, act_planes: usize) -> BitPlanes {
     if w.k < LAYOUT_MIN_K || w.rows < LAYOUT_MIN_N || act_planes == 0 || act_planes > 8 {
         return w;
     }
-    let key = LayoutKey { n: w.rows, k: w.k, q_planes: w.planes, p_planes: act_planes };
+    let key = LayoutKey {
+        n: w.rows,
+        k: w.k,
+        q_planes: w.planes,
+        p_planes: act_planes,
+        isa: isa::ceiling(),
+    };
     if let Some(cached) = layout_lookup(&key) {
         return if w.layout == cached { w } else { w.to_layout(cached) };
     }
@@ -197,6 +215,7 @@ pub fn choose_weight_layout(w: BitPlanes, act_planes: usize) -> BitPlanes {
 mod tests {
     use super::*;
     use crate::abq::gemm::gemm_int_reference;
+    use crate::abq::isa::Isa;
 
     #[test]
     fn search_returns_correct_kernel_and_caches() {
@@ -212,8 +231,47 @@ mod tests {
         let got = gemm_int_auto(&x, &w, &zx, &zw);
         let want = gemm_int_reference(&xc, &wc, m, n, k, &zx, &zw);
         assert_eq!(got, want);
-        let key = ShapeKey { m, n, k, p_bits: 8, q_bits: 2, interleaved: false };
+        let key = ShapeKey {
+            m,
+            n,
+            k,
+            p_bits: 8,
+            q_bits: 2,
+            interleaved: false,
+            isa: isa::ceiling(),
+        };
         assert!(lookup(&key).is_some(), "search result cached");
+    }
+
+    #[test]
+    fn cache_entries_are_keyed_by_dispatch_ceiling() {
+        // a winner raced under one ceiling must never replay under another
+        let natural = isa::ceiling();
+        let (m, n, k) = (1usize, 32usize, 128usize);
+        let xc: Vec<u8> = (0..m * k).map(|i| (i % 64) as u8).collect();
+        let wc: Vec<u8> = (0..n * k).map(|i| (i % 8) as u8).collect();
+        let x = BitPlanes::pack(&xc, m, k, 6);
+        let w = BitPlanes::pack(&wc, n, k, 3);
+        let (scalar_key, scalar_cfg) = isa::pinned(Isa::Scalar, || {
+            let key = shape_key(&x.view(), &w.view());
+            let (cfg, _) = search_best(x.view(), w.view());
+            (key, cfg)
+        });
+        assert_eq!(scalar_key.isa, Isa::Scalar);
+        assert_eq!(scalar_cfg.isa, Isa::Scalar, "scalar ceiling admits only scalar kernels");
+        assert!(lookup(&scalar_key).is_some());
+        if natural != Isa::Scalar {
+            isa::pinned(natural, || {
+                let native_key = shape_key(&x.view(), &w.view());
+                assert_ne!(native_key, scalar_key, "ceiling must be part of the key");
+                let (native_cfg, _) = search_best(x.view(), w.view());
+                // the native race may still crown scalar, but the entry
+                // lives in its own ceiling-keyed slot
+                assert!(lookup(&native_key).is_some());
+                assert!(native_cfg.isa.supported());
+            });
+            assert!(lookup(&scalar_key).is_some(), "scalar-ceiling entry survives");
+        }
     }
 
     #[test]
@@ -239,17 +297,21 @@ mod tests {
 
     #[test]
     fn layout_choice_is_cached_and_preserves_contents() {
-        let (n, k, q, p) = (LAYOUT_MIN_N, LAYOUT_MIN_K, 2usize, 4usize);
-        let wc: Vec<u8> = (0..n * k).map(|i| (i % 4) as u8).collect();
-        let w = BitPlanes::pack(&wc, n, k, q);
-        let chosen = choose_weight_layout(w, p);
-        assert_eq!(chosen.unpack(), wc);
-        let key = LayoutKey { n, k, q_planes: q, p_planes: p };
-        let cached = layout_lookup(&key).expect("layout decision cached");
-        assert_eq!(chosen.layout, cached);
-        // second call must return the cached layout without re-searching
-        let again = choose_weight_layout(BitPlanes::pack(&wc, n, k, q), p);
-        assert_eq!(again.layout, cached);
+        // freeze the dispatch ceiling so the LayoutKey we probe matches the
+        // one choose_weight_layout wrote (other tests pin ISAs in parallel)
+        isa::pinned(isa::ceiling(), || {
+            let (n, k, q, p) = (LAYOUT_MIN_N, LAYOUT_MIN_K, 2usize, 4usize);
+            let wc: Vec<u8> = (0..n * k).map(|i| (i % 4) as u8).collect();
+            let w = BitPlanes::pack(&wc, n, k, q);
+            let chosen = choose_weight_layout(w, p);
+            assert_eq!(chosen.unpack(), wc);
+            let key = LayoutKey { n, k, q_planes: q, p_planes: p, isa: isa::ceiling() };
+            let cached = layout_lookup(&key).expect("layout decision cached");
+            assert_eq!(chosen.layout, cached);
+            // second call must return the cached layout without re-searching
+            let again = choose_weight_layout(BitPlanes::pack(&wc, n, k, q), p);
+            assert_eq!(again.layout, cached);
+        });
     }
 
     #[test]

@@ -3,8 +3,11 @@
 //!
 //! On the GPU the search space is (BM, BN, BK, WM, WN) constrained by
 //! shared memory and register budget; here it is (n-block, k-panel,
-//! B-row fanout, thread count) constrained by L1/L2 capacity. `search.rs`
+//! B-row fanout, thread count) × **kernel ISA** constrained by L1/L2
+//! capacity and the CPU's detected feature set. `search.rs`
 //! micro-benchmarks candidates per (shape, bits) and caches the winner.
+
+use super::isa::{self, Isa};
 
 /// One candidate kernel configuration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -14,49 +17,67 @@ pub struct TileConfig {
     /// K words per panel (BK analogue); 0 = whole K in one panel
     pub kw_panel: usize,
     /// B-row fanout of the inner kernel: 1, 2 or 4 rows per A-word load
+    /// (scalar accumulator-chain tuning; SIMD kernels ignore it)
     pub fanout: usize,
     /// parallelise over weight-row tiles (util::par workers)
     pub parallel: bool,
+    /// which kernel table runs the sweep (see `abq::kernels`); the auto
+    /// search races every supported ISA at or below the dispatch ceiling
+    pub isa: Isa,
 }
 
 impl TileConfig {
+    /// Scalar-ISA config (the portable baseline); chain
+    /// [`TileConfig::with_isa`] to target a detected SIMD variant.
     pub const fn new(nb: usize, kw_panel: usize, fanout: usize, parallel: bool) -> Self {
-        TileConfig { nb, kw_panel, fanout, parallel }
+        TileConfig { nb, kw_panel, fanout, parallel, isa: Isa::Scalar }
+    }
+
+    /// Same config, dispatched to `isa`'s kernel table.
+    pub fn with_isa(self, isa: Isa) -> Self {
+        TileConfig { isa, ..self }
     }
 }
 
 impl Default for TileConfig {
     fn default() -> Self {
-        TileConfig { nb: 64, kw_panel: 0, fanout: 4, parallel: true }
+        TileConfig::new(64, 0, 4, true).with_isa(isa::ceiling())
     }
 }
 
-/// The candidate set explored by auto kernel search. Mirrors the paper's
-/// staged design process: fix the MMA granularity (here the u64 word),
-/// enumerate block tiles, reject configs whose working set overflows the
-/// cache budget (we bound: nb plane-rows × kwords × 8B ≤ 1 MiB).
-pub fn candidates(kwords: usize, q_planes: usize) -> Vec<TileConfig> {
+/// The candidate set explored by auto kernel search for one ISA. Mirrors
+/// the paper's staged design process: fix the MMA granularity (the u64
+/// word / one SIMD vector of them), enumerate block tiles, reject configs
+/// whose working set overflows the cache budget (we bound: nb plane-rows
+/// × kwords × 8B ≤ 1 MiB). Scalar kernels additionally race their
+/// accumulator-chain fanout; SIMD kernels ignore the hint, so emitting
+/// one fanout value keeps their candidate list free of duplicates.
+pub fn candidates(kwords: usize, q_planes: usize, isa: Isa) -> Vec<TileConfig> {
+    let fanouts: &[usize] = if isa == Isa::Scalar { &[1, 2, 4] } else { &[4] };
     let mut out = Vec::new();
     for &nb in &[16usize, 32, 64, 128, 256] {
         let bytes = nb * q_planes * kwords * 8;
         if bytes > (1 << 20) {
             continue;
         }
-        for &fanout in &[1usize, 2, 4] {
+        for &fanout in fanouts {
             for &parallel in &[false, true] {
-                out.push(TileConfig::new(nb, 0, fanout, parallel));
+                out.push(TileConfig::new(nb, 0, fanout, parallel).with_isa(isa));
             }
         }
     }
     if out.is_empty() {
-        out.push(TileConfig::default());
+        out.push(TileConfig::new(64, 0, 4, true).with_isa(isa));
     }
     out
 }
 
 /// Shape key for the search cache. The weight plane layout is part of the
-/// key: the best (nb, fanout, parallel) config generally differs between
-/// the plane-major and interleaved storage orders.
+/// key (the best config generally differs between the plane-major and
+/// interleaved storage orders), and so is the **dispatch ceiling** the
+/// search ran under: a winner raced while `ABQ_ISA`/pinning limited the
+/// ISA set must never be replayed at a different ceiling, where a faster
+/// kernel might exist or the cached one might be out of policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ShapeKey {
     pub m: usize,
@@ -67,6 +88,9 @@ pub struct ShapeKey {
     /// true when the weight operand uses the interleaved `[row][plane]`
     /// layout (see [`crate::abq::PlaneLayout`])
     pub interleaved: bool,
+    /// the dispatch ceiling ([`crate::abq::isa::ceiling`]) the search ran
+    /// under — **not** the winning ISA, which lives in the cached config
+    pub isa: Isa,
 }
 
 #[cfg(test)]
@@ -76,13 +100,36 @@ mod tests {
     #[test]
     fn candidates_respect_cache_budget() {
         let kwords = 4096 / 64;
-        for c in candidates(kwords, 8) {
+        for c in candidates(kwords, 8, Isa::Scalar) {
             assert!(c.nb * 8 * kwords * 8 <= 1 << 20);
+            assert_eq!(c.isa, Isa::Scalar);
         }
     }
 
     #[test]
     fn candidates_nonempty_even_for_huge_k() {
-        assert!(!candidates(1 << 20, 8).is_empty());
+        assert!(!candidates(1 << 20, 8, Isa::Scalar).is_empty());
+    }
+
+    #[test]
+    fn simd_candidates_carry_their_isa_and_skip_fanout_duplicates() {
+        for &i in Isa::compiled() {
+            let cands = candidates(64, 4, i);
+            assert!(cands.iter().all(|c| c.isa == i));
+            if i != Isa::Scalar {
+                let per_nb = cands.iter().filter(|c| c.nb == 64).count();
+                assert_eq!(per_nb, 2, "SIMD races parallel on/off only per nb");
+            }
+        }
+    }
+
+    #[test]
+    fn default_config_targets_the_ceiling() {
+        // pin to the current ceiling so a concurrently pinning test can't
+        // flip it between the two reads
+        isa::pinned(isa::ceiling(), || {
+            assert_eq!(TileConfig::default().isa, isa::ceiling());
+        });
+        assert_eq!(TileConfig::new(64, 0, 4, true).isa, Isa::Scalar);
     }
 }

@@ -39,7 +39,9 @@
 //!   execution paths
 //! * [`abq`] — the arbitrary-bit engine: every WqAp GEMM decomposed into
 //!   p×q 1-bit matmuls (BMMA ≙ AND+POPCNT) with Bit Reduction, GEMV
-//!   elimination, pipelining and auto kernel search (paper §3.4, App. B/D)
+//!   elimination, pipelining, SIMD bit-plane kernels behind runtime ISA
+//!   dispatch ([`abq::isa`], [`abq::kernels`]; AVX2/AVX-512/NEON raced
+//!   against scalar), and auto kernel search (paper §3.4, App. B/D)
 //! * [`quant`] — quantizers, bit-balance strategy, balance vectors and
 //!   learned distribution corrections ([`quant::Correction`])
 //! * [`calib`] — the paper's distribution-correction (DLC) calibration:

@@ -394,6 +394,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "serving {} on {addr} (default config {default_tag})",
         replicas.iter().map(|(t, _)| t.as_str()).collect::<Vec<_>>().join(", ")
     );
+    println!(
+        "  kernel ISA: {} (detected best: {}; override with ABQ_ISA)",
+        abq_llm::abq::isa::ceiling(),
+        abq_llm::abq::isa::detect_best()
+    );
     if prefix_cache {
         match &session_dir {
             Some(d) => println!("  prefix cache: on (sessions persisted under {d:?})"),

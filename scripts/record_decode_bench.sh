@@ -11,8 +11,12 @@
 # ns/projection, unix timestamp) to BENCH_decode.json at the repo root.
 # Set ABQ_BENCH_FAST=1 for a short smoke run, ABQ_KV_BITS=8|4 to measure
 # the quantized paged-KV read path, ABQ_SPEC=<draft>:<k> for the
-# self-speculative rung, and ABQ_PREFIX=1 for the prefix-cache rung
-# (shared-system-prompt TTFT + admission capacity).
+# self-speculative rung, ABQ_PREFIX=1 for the prefix-cache rung
+# (shared-system-prompt TTFT + admission capacity), and
+# ABQ_ISA=scalar|avx2|avx512|neon to lower the SIMD dispatch ceiling —
+# record a `pre` run with ABQ_ISA=scalar and a `post` run without it for
+# a scalar-vs-SIMD pair on the same machine (each entry stores the
+# ceiling it ran at in its `isa` field).
 set -eu
 label="${1:?usage: record_decode_bench.sh <label (e.g. pre|post|ci)>}"
 if ! command -v cargo >/dev/null 2>&1; then
@@ -23,4 +27,5 @@ if ! command -v cargo >/dev/null 2>&1; then
     exit 1
 fi
 cd "$(dirname "$0")/../rust"
+echo "kernel ISA ceiling: ${ABQ_ISA:-auto (detected at runtime; bench prints the resolved ISA)}"
 ABQ_RECORD="$label" cargo bench --bench decode_hotpath
