@@ -21,6 +21,12 @@
 //! vs warm (copy-on-write attach + tail prefill), and how many such
 //! requests a fixed 4-sequence pool budget admits with sharing off vs
 //! on. CI's bench-smoke job sets this too.
+//!
+//! `ABQ_REPLICAS=N` adds a multi-replica saturation rung
+//! (`docs/SERVING.md` §multi-replica): requests/s and p95 TTFT for a
+//! fixed burst against 1 replica vs N replicas sharing one weight set,
+//! at a fixed per-replica concurrency (the latency-SLO proxy). CI sets
+//! `ABQ_REPLICAS=2` on every PR.
 
 use std::time::Instant;
 
@@ -213,8 +219,95 @@ fn main() {
         run_prefix_rung(kv, &mut rows);
     }
 
+    // multi-replica saturation rung: ABQ_REPLICAS=N (requests/s at a
+    // fixed per-replica concurrency SLO, 1 replica vs N sharing one
+    // weight set — docs/SERVING.md §multi-replica). CI sets N=2.
+    if let Some(n) = std::env::var("ABQ_REPLICAS").ok().and_then(|v| v.parse::<usize>().ok())
+    {
+        if n >= 2 {
+            run_replica_rung(kv, n, &mut rows);
+        }
+    }
+
     write_results("decode_hotpath", &Json::Arr(rows.clone()));
     record(&rows, steps, kv_bits);
+}
+
+/// The saturation rung: a fixed burst of requests served by one replica
+/// and by `n` replicas built over one shared weight set
+/// (`EngineBuilder::build_replicas` — replica 1+ report ≈0 incremental
+/// weight bytes). The per-replica `max_active` stays fixed (the latency
+/// SLO proxy: adding replicas must not just deepen one queue), and each
+/// replica gets a small dedicated compute pool so the fleets scale
+/// across cores instead of serializing on the global pool's dispatch
+/// lock. Records requests/s, p95 TTFT (`server.ttft_us`), and the
+/// fleet's incremental weight bytes.
+fn run_replica_rung(kv: KvCacheConfig, n: usize, rows: &mut Vec<Json>) {
+    use abq_llm::coordinator::{Frontend, FrontendConfig, SubmitRequest};
+    use std::sync::Arc;
+
+    let requests = 24usize;
+    let max_new = 8usize;
+    let run = |replicas: usize| -> (f64, u64, usize) {
+        let engines = EngineBuilder::new()
+            .random_weights(BENCH_MODEL, 42)
+            .backend("abq:w2*a8")
+            .kv_cache(kv)
+            .build_replicas(replicas)
+            .unwrap_or_else(|e| panic!("replica rung: {e}"));
+        let incremental: usize = engines
+            .iter()
+            .skip(1)
+            .map(|e| e.memory_report().weight_bytes_incremental)
+            .sum();
+        let fleet: Vec<(String, Arc<dyn InferenceEngine>)> =
+            engines.into_iter().map(|e| ("bench".to_string(), e)).collect();
+        let front = Frontend::start(
+            fleet,
+            FrontendConfig {
+                default_tag: "bench".to_string(),
+                max_active: 4,
+                pool_threads: Some(1),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        let tickets: Vec<_> = (0..requests)
+            .map(|i| {
+                let mut p = PROMPT.to_vec();
+                p.push((i % 50) as u32 + 1);
+                front.submit(SubmitRequest::new(p, max_new)).unwrap()
+            })
+            .collect();
+        for t in tickets {
+            let r = t.wait().unwrap();
+            assert_eq!(r.tokens.len(), max_new, "saturation rung lost tokens");
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let p95 = front.metrics.histogram_quantile_us("server.ttft_us", 0.95);
+        front.shutdown();
+        (requests as f64 / secs.max(1e-12), p95, incremental)
+    };
+    let (rps_1, p95_1, _) = run(1);
+    let (rps_n, p95_n, incremental) = run(n);
+    let scaling = rps_n / rps_1.max(1e-12);
+    println!(
+        "\nreplicas: 1 -> {rps_1:.1} req/s (p95 TTFT {p95_1}us); \
+         {n} -> {rps_n:.1} req/s (p95 TTFT {p95_n}us); scaling {scaling:.2}x; \
+         incremental weight bytes of replicas 1+: {incremental}"
+    );
+    rows.push(obj(vec![
+        ("backend", s("abq:w2*a8+replicas")),
+        ("replicas", num(n as f64)),
+        ("requests", num(requests as f64)),
+        ("req_s_1", num(rps_1)),
+        ("req_s_n", num(rps_n)),
+        ("scaling", num(scaling)),
+        ("p95_ttft_us_1", num(p95_1 as f64)),
+        ("p95_ttft_us_n", num(p95_n as f64)),
+        ("shared_weight_incremental_bytes", num(incremental as f64)),
+    ]));
 }
 
 /// The prefix-cache rung: one system prompt shared by every request.
@@ -226,7 +319,7 @@ fn main() {
 ///   prefix cache off vs on (shared whole blocks are billed once, so
 ///   each extra request only pays its unshared tail).
 fn run_prefix_rung(kv: KvCacheConfig, rows: &mut Vec<Json>) {
-    use abq_llm::coordinator::{Admission, QueuedRequest, Request, Scheduler, SchedulerConfig};
+    use abq_llm::coordinator::{Admission, QueuedRequest, Scheduler, SchedulerConfig, SubmitRequest};
 
     let build = |budget: Option<usize>| {
         let mut b = EngineBuilder::new()
@@ -284,7 +377,7 @@ fn run_prefix_rung(kv: KvCacheConfig, rows: &mut Vec<Json>) {
         for id in 0..64u64 {
             let mut p: Vec<u32> = prompt[..sys_len].to_vec();
             p.push(7 + (id % 50) as u32);
-            let qr = QueuedRequest { req: Request::new(id, p, 1), arrived: Instant::now() };
+            let qr = QueuedRequest::new(id, SubmitRequest::new(p, 1));
             match sched.admit(qr, id) {
                 Ok(Admission::Admitted) => n += 1,
                 _ => break,

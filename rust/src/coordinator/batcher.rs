@@ -79,10 +79,10 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::Request;
+    use crate::coordinator::request::SubmitRequest;
 
     fn qr(id: u64) -> QueuedRequest {
-        QueuedRequest { req: Request::new(id, vec![1, 2], 4), arrived: Instant::now() }
+        QueuedRequest::new(id, SubmitRequest::new(vec![1, 2], 4))
     }
 
     #[test]
@@ -93,7 +93,7 @@ mod tests {
         }
         assert!(b.ready(Instant::now()));
         let batch = b.drain(10);
-        assert_eq!(batch.iter().map(|q| q.req.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(batch.iter().map(|q| q.id).collect::<Vec<_>>(), vec![0, 1, 2]);
         assert_eq!(b.len(), 2);
     }
 
@@ -123,7 +123,8 @@ mod tests {
             max_wait: Duration::from_millis(1),
         });
         b.push(QueuedRequest {
-            req: Request::new(0, vec![1], 1),
+            id: 0,
+            req: SubmitRequest::new(vec![1], 1),
             arrived: Instant::now() - Duration::from_millis(5),
         });
         assert!(b.ready(Instant::now()));

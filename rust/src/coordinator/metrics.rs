@@ -91,6 +91,17 @@ impl Metrics {
         self.inner.lock().unwrap().gauges.get(name).copied().unwrap_or(0)
     }
 
+    /// Approximate quantile of a named histogram (0 when absent) — the
+    /// p95-TTFT axis of the saturation bench.
+    pub fn histogram_quantile_us(&self, name: &str, q: f64) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .histograms
+            .get(name)
+            .map_or(0, |h| h.quantile_us(q))
+    }
+
     pub fn snapshot(&self) -> String {
         let g = self.inner.lock().unwrap();
         let mut out = String::new();

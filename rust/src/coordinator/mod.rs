@@ -1,6 +1,7 @@
-//! L3 serving coordinator (the paper's deployment context): request
+//! L3 serving coordinator (the paper's deployment context): replica
 //! router, dynamic batcher, continuous-batching scheduler with KV-aware
-//! admission, metrics. See `server.rs` for the thread topology.
+//! admission, multi-replica frontend, metrics. See `server.rs` for the
+//! thread topology and `docs/SERVING.md` §multi-replica for the design.
 
 pub mod batcher;
 pub mod metrics;
@@ -11,7 +12,9 @@ pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::Metrics;
-pub use request::{QueuedRequest, Request, Response, Timing};
-pub use router::Router;
-pub use scheduler::{Admission, Scheduler, SchedulerConfig};
-pub use server::{Server, ServerConfig};
+pub use request::{
+    sampling_seed, Admission, QueuedRequest, Response, SubmitRequest, Ticket, Timing,
+};
+pub use router::{ReplicaId, ReplicaState, RequestMeta, Router};
+pub use scheduler::{InFlight, Scheduler, SchedulerConfig};
+pub use server::{Frontend, FrontendConfig, Server, ServerConfig};

@@ -1,29 +1,66 @@
-//! Request/response types for the serving coordinator.
+//! The coordinator request API: one submission type ([`SubmitRequest`]),
+//! one handle type ([`Ticket`]), one admission enum ([`Admission`]) —
+//! shared by the server, the batcher, the scheduler and the CLI alike,
+//! replacing the ad-hoc per-call argument lists the single-engine
+//! coordinator grew.
+//!
+//! Request ids are stamped by the [`super::server::Frontend`] at submit
+//! time, and every stream-visible random choice derives from the id via
+//! [`sampling_seed`] — so a request's output depends only on its id and
+//! content, never on admission order or which replica served it (the
+//! property `tests/prop_replicas.rs` asserts across replica death).
 
+use std::sync::mpsc::Receiver;
 use std::time::Instant;
+
+use anyhow::{Context, Result};
 
 use crate::model::Sampling;
 
-/// A generation request (the unit the router/batcher/scheduler move).
+use super::router::ReplicaId;
+
+/// A generation request as submitted by a client (the unit the router,
+/// batcher and scheduler move). Ids are assigned by the frontend — the
+/// submitter only describes the work.
 #[derive(Clone, Debug)]
-pub struct Request {
-    pub id: u64,
+pub struct SubmitRequest {
     pub prompt: Vec<u32>,
-    pub max_new_tokens: usize,
+    /// cap on generated tokens (the scheduler clamps to KV capacity)
+    pub max_new: usize,
     pub sampling: Sampling,
     /// quant config tag the client asked for ("" = router default)
-    pub config: String,
+    pub config_tag: String,
+    /// session fingerprint for sticky routing: requests sharing it land
+    /// on the same replica while it lives, for KV/prefix-cache locality
+    pub session_affinity: Option<u64>,
 }
 
-impl Request {
-    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
-        Request {
-            id,
+impl SubmitRequest {
+    pub fn new(prompt: Vec<u32>, max_new: usize) -> Self {
+        SubmitRequest {
             prompt,
-            max_new_tokens,
+            max_new,
             sampling: Sampling::Greedy,
-            config: String::new(),
+            config_tag: String::new(),
+            session_affinity: None,
         }
+    }
+
+    /// Request a specific quant config tag (builder-chaining form).
+    pub fn config(mut self, tag: impl Into<String>) -> Self {
+        self.config_tag = tag.into();
+        self
+    }
+
+    /// Sticky-route alongside other requests with the same fingerprint.
+    pub fn affinity(mut self, fingerprint: u64) -> Self {
+        self.session_affinity = Some(fingerprint);
+        self
+    }
+
+    pub fn sampling(mut self, s: Sampling) -> Self {
+        self.sampling = s;
+        self
     }
 }
 
@@ -39,6 +76,12 @@ impl Timing {
     pub fn total_us(&self) -> u64 {
         self.queue_us + self.prefill_us + self.decode_us
     }
+
+    /// Time to first token: queueing plus prefill (the latency-SLO axis
+    /// of the saturation bench).
+    pub fn ttft_us(&self) -> u64 {
+        self.queue_us + self.prefill_us
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -49,11 +92,61 @@ pub struct Response {
     pub timing: Timing,
 }
 
-/// Internal: a request with its arrival timestamp.
+/// An id-stamped request with its arrival timestamp — the form that
+/// moves through batcher queues and scheduler admission.
 #[derive(Debug)]
 pub struct QueuedRequest {
-    pub req: Request,
+    pub id: u64,
+    pub req: SubmitRequest,
     pub arrived: Instant,
+}
+
+impl QueuedRequest {
+    pub fn new(id: u64, req: SubmitRequest) -> Self {
+        QueuedRequest { id, req, arrived: Instant::now() }
+    }
+}
+
+/// What a submission returned: the stamped id, the replica the router
+/// placed it on, and the channel the response arrives on. The replica
+/// is informational — if that replica dies, the frontend re-homes the
+/// request and the response still arrives here.
+#[derive(Debug)]
+pub struct Ticket {
+    pub id: u64,
+    pub replica: ReplicaId,
+    pub rx: Receiver<Response>,
+}
+
+impl Ticket {
+    /// Block until the response arrives (or every sender is gone).
+    pub fn wait(self) -> Result<Response> {
+        self.rx.recv().with_context(|| format!("request {}: response channel closed", self.id))
+    }
+}
+
+/// The one admission enum every coordinator layer speaks:
+/// * [`Admission::Routed`] — the frontend placed the request on a
+///   replica (what [`super::server::Frontend::route_preview`] reports);
+/// * [`Admission::Admitted`] — a replica's scheduler activated it;
+/// * [`Admission::Deferred`] — no KV/slot capacity right now; the
+///   request comes back to be requeued at the head of the batcher.
+#[derive(Debug)]
+pub enum Admission {
+    Routed(ReplicaId),
+    Admitted,
+    Deferred(QueuedRequest),
+}
+
+/// Deterministic per-request sampling seed (splitmix64 finalizer over
+/// the request id). Every replica derives a request's sampler from this,
+/// so streams are independent of admission order and replica assignment
+/// — the bit-identity property multi-replica drain/replay relies on.
+pub fn sampling_seed(id: u64) -> u64 {
+    let mut z = id.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
 }
 
 #[cfg(test)]
@@ -61,8 +154,31 @@ mod tests {
     use super::*;
 
     #[test]
-    fn timing_total() {
+    fn timing_total_and_ttft() {
         let t = Timing { queue_us: 10, prefill_us: 20, decode_us: 30 };
         assert_eq!(t.total_us(), 60);
+        assert_eq!(t.ttft_us(), 30);
+    }
+
+    #[test]
+    fn submit_request_builder_chain() {
+        let r = SubmitRequest::new(vec![1, 2, 3], 8).config("w2sa8").affinity(42);
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.max_new, 8);
+        assert_eq!(r.config_tag, "w2sa8");
+        assert_eq!(r.session_affinity, Some(42));
+        assert!(matches!(r.sampling, Sampling::Greedy));
+    }
+
+    #[test]
+    fn sampling_seeds_are_distinct_and_stable() {
+        let seeds: Vec<u64> = (0..64).map(sampling_seed).collect();
+        let mut uniq = seeds.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len(), "no collisions on small ids");
+        // stable across calls — the determinism contract
+        assert_eq!(sampling_seed(7), sampling_seed(7));
+        assert_ne!(sampling_seed(0), 0, "id 0 must still mix");
     }
 }

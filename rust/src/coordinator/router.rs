@@ -1,43 +1,193 @@
-//! Request router: maps a requested quant config to the engine replica
-//! serving it (the multi-precision deployment the paper's "quantization
-//! freedom" enables — one binary serving fp16 and any WqAp side by side).
+//! Replica router: places each request on one of N engine replicas (the
+//! multi-precision, multi-replica deployment the paper's "quantization
+//! freedom" enables — one binary serving fp16 and any WqAp side by side,
+//! each tag on as many replicas as traffic needs).
+//!
+//! Routing is three-tiered (docs/SERVING.md §multi-replica):
+//! 1. **tag isolation** — only live replicas registered under the
+//!    request's config tag are candidates; an unknown tag is an error,
+//!    never a silent fallback to another precision;
+//! 2. **stickiness** — a request carrying a session-affinity fingerprint
+//!    returns to the replica that served the fingerprint before (KV /
+//!    prefix-cache locality), as long as that replica is alive and
+//!    serves the right tag;
+//! 3. **load score** — otherwise the candidate with the best
+//!    `free_blocks / (queue_depth + 1)` score wins, with the old
+//!    within-tag round-robin kept as the tie-breaker (its cursor now
+//!    bounded: it wraps modulo the candidate count instead of counting
+//!    up forever).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 
 use anyhow::{bail, Result};
 
-/// Routing table: config tag → replica indices (round-robin within a tag).
-#[derive(Debug, Default)]
+/// Index of one worker replica (position in the frontend's replica vec).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ReplicaId(pub usize);
+
+impl std::fmt::Display for ReplicaId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "replica{}", self.0)
+    }
+}
+
+/// Live load signal for one replica, refreshed by the frontend from the
+/// worker's atomics before each routing decision.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaState {
+    /// free KV blocks in the replica's pool (`usize::MAX` = no pool /
+    /// unknown — treated as unconstrained)
+    pub free_blocks: usize,
+    /// queued + active + preempted requests on the replica
+    pub queue_depth: usize,
+    pub alive: bool,
+}
+
+impl Default for ReplicaState {
+    fn default() -> Self {
+        ReplicaState { free_blocks: usize::MAX, queue_depth: 0, alive: true }
+    }
+}
+
+/// What the router needs to know about a request to place it.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestMeta<'a> {
+    /// requested config tag ("" = router default)
+    pub config_tag: &'a str,
+    pub session_affinity: Option<u64>,
+    pub prompt_len: usize,
+}
+
+struct ReplicaEntry {
+    tag: String,
+    state: ReplicaState,
+}
+
+/// Routing table over the frontend's replicas.
 pub struct Router {
-    routes: BTreeMap<String, Vec<usize>>,
+    replicas: Vec<ReplicaEntry>,
+    /// session fingerprint → last replica that served it
+    sticky: HashMap<u64, ReplicaId>,
+    /// per-tag round-robin cursor (tie-breaker); always `< candidates`
     rr: BTreeMap<String, usize>,
     default_tag: String,
 }
 
 impl Router {
     pub fn new(default_tag: &str) -> Self {
-        Router { default_tag: default_tag.to_string(), ..Default::default() }
+        Router {
+            replicas: Vec::new(),
+            sticky: HashMap::new(),
+            rr: BTreeMap::new(),
+            default_tag: default_tag.to_string(),
+        }
     }
 
-    pub fn register(&mut self, tag: &str, replica: usize) {
-        self.routes.entry(tag.to_string()).or_default().push(replica);
+    /// Register the next replica under `tag`, returning its id (ids are
+    /// dense and match the frontend's replica vec order).
+    pub fn register(&mut self, tag: &str) -> ReplicaId {
+        let id = ReplicaId(self.replicas.len());
+        self.replicas
+            .push(ReplicaEntry { tag: tag.to_string(), state: ReplicaState::default() });
+        id
+    }
+
+    /// Refresh one replica's load signal.
+    pub fn update(&mut self, id: ReplicaId, state: ReplicaState) {
+        if let Some(e) = self.replicas.get_mut(id.0) {
+            let alive = e.state.alive && state.alive;
+            e.state = ReplicaState { alive, ..state };
+        }
+    }
+
+    /// Permanently remove a replica from routing (death or retirement).
+    /// Its sticky sessions fail over to the load score on their next
+    /// request.
+    pub fn mark_dead(&mut self, id: ReplicaId) {
+        if let Some(e) = self.replicas.get_mut(id.0) {
+            e.state.alive = false;
+        }
     }
 
     pub fn tags(&self) -> Vec<&str> {
-        self.routes.keys().map(|s| s.as_str()).collect()
+        let mut tags: Vec<&str> = self.replicas.iter().map(|e| e.tag.as_str()).collect();
+        tags.sort_unstable();
+        tags.dedup();
+        tags
     }
 
-    /// Resolve a request's config tag ("" = default) to a replica index.
-    pub fn route(&mut self, tag: &str) -> Result<usize> {
+    /// Live replicas currently serving `tag` ("" = default).
+    pub fn live_replicas(&self, tag: &str) -> Vec<ReplicaId> {
         let tag = if tag.is_empty() { self.default_tag.as_str() } else { tag };
-        let replicas = match self.routes.get(tag) {
-            Some(r) if !r.is_empty() => r,
-            _ => bail!("no replica serves config '{tag}'"),
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.tag == tag && e.state.alive)
+            .map(|(i, _)| ReplicaId(i))
+            .collect()
+    }
+
+    /// Load score — higher is better. Free blocks are the capacity a new
+    /// sequence actually competes for; queue depth discounts a replica
+    /// that is already committed. Clamped so the poolless sentinel
+    /// cannot overflow.
+    fn score(s: &ReplicaState) -> usize {
+        s.free_blocks.min(1_000_000) * 1000 / (s.queue_depth + 1)
+    }
+
+    /// Place a request: tag isolation → sticky hit → best load score,
+    /// round-robin among ties. Records the placement for the request's
+    /// affinity fingerprint, if it carries one.
+    pub fn route(&mut self, meta: &RequestMeta) -> Result<ReplicaId> {
+        let tag =
+            if meta.config_tag.is_empty() { self.default_tag.clone() } else { meta.config_tag.to_string() };
+        let candidates: Vec<ReplicaId> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.tag == tag && e.state.alive)
+            .map(|(i, _)| ReplicaId(i))
+            .collect();
+        if candidates.is_empty() {
+            bail!("no live replica serves config '{tag}'");
+        }
+        // sticky hit: same fingerprint goes back to its replica while
+        // that replica is alive and still serves the right tag
+        if let Some(fp) = meta.session_affinity {
+            if let Some(&prev) = self.sticky.get(&fp) {
+                if candidates.contains(&prev) {
+                    return Ok(prev);
+                }
+            }
+        }
+        let best_score =
+            candidates.iter().map(|id| Self::score(&self.replicas[id.0].state)).max().unwrap();
+        let tied: Vec<ReplicaId> = candidates
+            .iter()
+            .copied()
+            .filter(|id| Self::score(&self.replicas[id.0].state) == best_score)
+            .collect();
+        let chosen = if tied.len() == 1 {
+            tied[0]
+        } else {
+            // bounded round-robin tie-breaker: the cursor wraps modulo
+            // the tie count instead of growing forever
+            let cursor = self.rr.entry(tag).or_insert(0);
+            *cursor %= tied.len();
+            let pick = tied[*cursor];
+            *cursor = (*cursor + 1) % tied.len();
+            pick
         };
-        let cursor = self.rr.entry(tag.to_string()).or_insert(0);
-        let idx = replicas[*cursor % replicas.len()];
-        *cursor += 1;
-        Ok(idx)
+        if let Some(fp) = meta.session_affinity {
+            self.sticky.insert(fp, chosen);
+        }
+        Ok(chosen)
+    }
+
+    /// Re-pin a sticky fingerprint (the frontend calls this when it
+    /// re-homes a drained request to a survivor).
+    pub fn repin(&mut self, fingerprint: u64, to: ReplicaId) {
+        self.sticky.insert(fingerprint, to);
     }
 }
 
@@ -45,22 +195,101 @@ impl Router {
 mod tests {
     use super::*;
 
-    #[test]
-    fn routes_default_and_named() {
-        let mut r = Router::new("w2sa8");
-        r.register("w2sa8", 0);
-        r.register("fp16", 1);
-        assert_eq!(r.route("").unwrap(), 0);
-        assert_eq!(r.route("fp16").unwrap(), 1);
-        assert!(r.route("w9a9").is_err());
+    fn meta(tag: &str) -> RequestMeta<'_> {
+        RequestMeta { config_tag: tag, session_affinity: None, prompt_len: 4 }
     }
 
     #[test]
-    fn round_robin_within_tag() {
+    fn routes_default_and_named_with_tag_isolation() {
+        let mut r = Router::new("w2sa8");
+        let a = r.register("w2sa8");
+        let b = r.register("fp16");
+        assert_eq!(r.route(&meta("")).unwrap(), a);
+        assert_eq!(r.route(&meta("fp16")).unwrap(), b);
+        // unknown tag errors; it never falls back to another precision
+        assert!(r.route(&meta("w9a9")).is_err());
+        assert_eq!(r.tags(), vec!["fp16", "w2sa8"]);
+    }
+
+    #[test]
+    fn round_robin_tie_breaker_is_bounded() {
         let mut r = Router::new("fp16");
-        r.register("fp16", 3);
-        r.register("fp16", 5);
-        let picks: Vec<usize> = (0..4).map(|_| r.route("fp16").unwrap()).collect();
-        assert_eq!(picks, vec![3, 5, 3, 5]);
+        let a = r.register("fp16");
+        let b = r.register("fp16");
+        // equal load → alternate deterministically
+        let picks: Vec<ReplicaId> = (0..4).map(|_| r.route(&meta("fp16")).unwrap()).collect();
+        assert_eq!(picks, vec![a, b, a, b]);
+        // the cursor must stay bounded by the tie count, not count up
+        for _ in 0..1000 {
+            r.route(&meta("fp16")).unwrap();
+        }
+        assert!(*r.rr.get("fp16").unwrap() < 2, "cursor must wrap, not grow");
+    }
+
+    #[test]
+    fn load_score_prefers_free_blocks_and_short_queues() {
+        let mut r = Router::new("fp16");
+        let a = r.register("fp16");
+        let b = r.register("fp16");
+        r.update(a, ReplicaState { free_blocks: 10, queue_depth: 4, alive: true });
+        r.update(b, ReplicaState { free_blocks: 100, queue_depth: 0, alive: true });
+        for _ in 0..3 {
+            assert_eq!(r.route(&meta("")).unwrap(), b, "less loaded replica must win");
+        }
+        // flip the load
+        r.update(b, ReplicaState { free_blocks: 2, queue_depth: 9, alive: true });
+        assert_eq!(r.route(&meta("")).unwrap(), a);
+    }
+
+    #[test]
+    fn sticky_sessions_return_to_their_replica() {
+        let mut r = Router::new("fp16");
+        let a = r.register("fp16");
+        let b = r.register("fp16");
+        let m = RequestMeta { config_tag: "", session_affinity: Some(99), prompt_len: 4 };
+        let first = r.route(&m).unwrap();
+        // skew the load against the sticky replica — it must still win
+        let other = if first == a { b } else { a };
+        r.update(other, ReplicaState { free_blocks: 1_000_000, queue_depth: 0, alive: true });
+        r.update(first, ReplicaState { free_blocks: 1, queue_depth: 50, alive: true });
+        for _ in 0..3 {
+            assert_eq!(r.route(&m).unwrap(), first, "affinity beats load");
+        }
+        // a different fingerprint follows the load instead
+        let m2 = RequestMeta { config_tag: "", session_affinity: Some(100), prompt_len: 4 };
+        assert_eq!(r.route(&m2).unwrap(), other);
+    }
+
+    #[test]
+    fn failover_on_dead_replica() {
+        let mut r = Router::new("fp16");
+        let a = r.register("fp16");
+        let b = r.register("fp16");
+        let m = RequestMeta { config_tag: "", session_affinity: Some(7), prompt_len: 4 };
+        // pin the session to a deterministic replica
+        r.repin(7, a);
+        assert_eq!(r.route(&m).unwrap(), a);
+        r.mark_dead(a);
+        // sticky target is gone: fail over to the survivor and re-pin
+        assert_eq!(r.route(&m).unwrap(), b);
+        r.update(a, ReplicaState { free_blocks: 1_000_000, queue_depth: 0, alive: true });
+        // update() cannot resurrect a dead replica
+        assert_eq!(r.route(&m).unwrap(), b);
+        // killing the last replica of a tag makes the tag unroutable
+        r.mark_dead(b);
+        assert!(r.route(&m).is_err());
+    }
+
+    #[test]
+    fn tag_isolation_survives_death_in_other_tag() {
+        let mut r = Router::new("w2sa8");
+        let a = r.register("w2sa8");
+        let b = r.register("fp16");
+        r.mark_dead(b);
+        // fp16 death must not affect w2sa8 routing
+        assert_eq!(r.route(&meta("")).unwrap(), a);
+        assert!(r.route(&meta("fp16")).is_err());
+        assert_eq!(r.live_replicas(""), vec![a]);
+        assert!(r.live_replicas("fp16").is_empty());
     }
 }

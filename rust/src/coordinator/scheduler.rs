@@ -30,7 +30,7 @@
 //!     index entries are evicted before live sequences are preempted.
 //!
 //! Invariants (property-tested): active ≤ max_active; every admitted
-//! request completes with exactly `max_new_tokens` tokens (or capacity
+//! request completes with exactly `max_new` tokens (or capacity
 //! truncation) even across preemption churn; pool blocks never leak;
 //! prefix sharing never changes a greedy stream.
 
@@ -44,12 +44,14 @@ use crate::engine::{EngineSession, InferenceEngine, KvPrefix};
 use crate::model::Sampler;
 use crate::prefix::{PrefixIndex, PrefixStats, SessionStore};
 
-use super::request::{QueuedRequest, Response, Timing};
+use super::request::{Admission, QueuedRequest, Response, SubmitRequest, Timing};
 
 /// One active sequence.
 struct Active {
     id: u64,
-    prompt: Vec<u32>,
+    /// the original submission (prompt, sampling, tag, affinity) — kept
+    /// whole so a drained sequence can be re-homed with full fidelity
+    req: SubmitRequest,
     prompt_len: usize,
     generated: Vec<u32>,
     max_new: usize,
@@ -62,27 +64,43 @@ struct Active {
     admitted_seq: u64,
 }
 
-/// A sequence evicted from the pool mid-generation, waiting to resume.
-struct Preempted {
-    id: u64,
-    prompt: Vec<u32>,
-    prompt_len: usize,
-    generated: Vec<u32>,
-    max_new: usize,
-    sampler: Sampler,
-    timing: Timing,
-    started: Instant,
+/// A sequence detached from its session mid-generation: the portable form
+/// a preempted sequence waits in, and the unit [`Scheduler::drain_inflight`]
+/// hands to the frontend when a replica retires. Resuming (on this
+/// scheduler or another replica's, via [`Scheduler::inject`]) re-prefills
+/// `req.prompt ++ generated` into a fresh session and continues decoding —
+/// with the sampler state carried along, the resumed greedy/sampled stream
+/// is bit-identical to an uninterrupted run.
+pub struct InFlight {
+    pub id: u64,
+    pub req: SubmitRequest,
+    pub prompt_len: usize,
+    pub generated: Vec<u32>,
+    pub max_new: usize,
+    pub sampler: Sampler,
+    pub timing: Timing,
+    pub started: Instant,
     /// original admission stamp, restored on resume so a resumed veteran
     /// does not become the preferred preemption victim
-    admitted_seq: u64,
+    pub admitted_seq: u64,
 }
 
-/// Outcome of [`Scheduler::admit`].
-pub enum Admission {
-    Admitted,
-    /// No slot or not enough free KV blocks right now; the request is
-    /// handed back untouched for the caller to requeue.
-    Deferred(QueuedRequest),
+impl Active {
+    /// Drop the engine session (releasing its KV blocks back to the pool)
+    /// and keep the portable replay state.
+    fn detach(a: Active) -> InFlight {
+        InFlight {
+            id: a.id,
+            req: a.req,
+            prompt_len: a.prompt_len,
+            generated: a.generated,
+            max_new: a.max_new,
+            sampler: a.sampler,
+            timing: a.timing,
+            started: a.started,
+            admitted_seq: a.admitted_seq,
+        }
+    }
 }
 
 /// Sequence `i`'s share of a batched step's `total` µs: the integer
@@ -131,7 +149,7 @@ pub struct Scheduler {
     engine: Arc<dyn InferenceEngine>,
     cfg: SchedulerConfig,
     active: Vec<Active>,
-    preempted: VecDeque<Preempted>,
+    preempted: VecDeque<InFlight>,
     finished: Vec<Response>,
     admit_counter: u64,
     preemptions: u64,
@@ -264,7 +282,7 @@ impl Scheduler {
             if needed > st.total_blocks {
                 bail!(
                     "request {} needs {needed} KV blocks but the pool holds only {}",
-                    qr.req.id,
+                    qr.id,
                     st.total_blocks
                 );
             }
@@ -280,52 +298,54 @@ impl Scheduler {
         let queue_us = now.duration_since(qr.arrived).as_micros() as u64;
         // clamp generation to KV capacity
         let max_seq = self.engine.spec().model.max_seq;
-        let max_new = qr
-            .req
-            .max_new_tokens
-            .min(max_seq.saturating_sub(qr.req.prompt.len() + 1));
+        let max_new = qr.req.max_new.min(max_seq.saturating_sub(qr.req.prompt.len() + 1));
         let prompt_len = qr.req.prompt.len();
         self.admit_counter += 1;
         let stamp = self.admit_counter;
+        let sampler = Sampler::new(qr.req.sampling, seed);
         self.activate(
-            qr.req.id,
-            qr.req.prompt,
-            prompt_len,
-            Vec::new(),
-            max_new,
-            Sampler::new(qr.req.sampling, seed),
-            Timing { queue_us, prefill_us: 0, decode_us: 0 },
-            now,
-            stamp,
+            InFlight {
+                id: qr.id,
+                req: qr.req,
+                prompt_len,
+                generated: Vec::new(),
+                max_new,
+                sampler,
+                timing: Timing { queue_us, prefill_us: 0, decode_us: 0 },
+                started: now,
+                admitted_seq: stamp,
+            },
             hint,
         )?;
         Ok(Admission::Admitted)
     }
 
     /// Shared activation path for fresh admissions (`generated` empty) and
-    /// preemption resumes (`generated` carried): attach any matched
-    /// prefix by reference, prefill the unshared tail of
+    /// preemption / drain resumes (`generated` carried): attach any
+    /// matched prefix by reference, prefill the unshared tail of
     /// `prompt ++ generated` into a fresh session, sample the next token,
     /// and push the sequence onto the active batch. Fresh admissions
     /// carry the admit-time match as `hint`; resumes pass `None` and
     /// re-match here, so replay-after-preemption rides the same path.
-    #[allow(clippy::too_many_arguments)]
     fn activate(
         &mut self,
-        id: u64,
-        prompt: Vec<u32>,
-        prompt_len: usize,
-        mut generated: Vec<u32>,
-        max_new: usize,
-        mut sampler: Sampler,
-        mut timing: Timing,
-        started: Instant,
-        admitted_seq: u64,
+        f: InFlight,
         hint: Option<(usize, Arc<dyn KvPrefix>)>,
     ) -> Result<()> {
+        let InFlight {
+            id,
+            req,
+            prompt_len,
+            mut generated,
+            max_new,
+            mut sampler,
+            mut timing,
+            started,
+            admitted_seq,
+        } = f;
         let mut session = self.engine.new_session()?;
         let t0 = Instant::now();
-        let mut feed = prompt.clone();
+        let mut feed = req.prompt.clone();
         feed.extend_from_slice(&generated);
         let hint = hint.or_else(|| match self.prefix.as_mut() {
             Some(ix) => ix.lookup(&feed, feed.len().saturating_sub(1)),
@@ -343,12 +363,12 @@ impl Scheduler {
         let tok = sampler.sample(last);
         // a freshly prefilled prompt is the next request's prefix
         if generated.is_empty() {
-            self.register_prefix(&prompt, session.as_mut());
+            self.register_prefix(&req.prompt, session.as_mut());
         }
         generated.push(tok);
         self.active.push(Active {
             id,
-            prompt,
+            req,
             prompt_len,
             generated,
             max_new,
@@ -489,10 +509,10 @@ impl Scheduler {
             // prefix discount a fresh prompt would (stateless peek; the
             // LRU-bumping match happens in `activate`)
             let Some((replay_len, matched)) = self.preempted.front().map(|front| {
-                let replay_len = front.prompt.len() + front.generated.len();
+                let replay_len = front.req.prompt.len() + front.generated.len();
                 let matched = match &self.prefix {
                     Some(ix) => {
-                        let mut replay = front.prompt.clone();
+                        let mut replay = front.req.prompt.clone();
                         replay.extend_from_slice(&front.generated);
                         ix.peek_len(&replay, replay.len().saturating_sub(1))
                     }
@@ -520,18 +540,7 @@ impl Scheduler {
                 }
             }
             let p = self.preempted.pop_front().unwrap();
-            self.activate(
-                p.id,
-                p.prompt,
-                p.prompt_len,
-                p.generated,
-                p.max_new,
-                p.sampler,
-                p.timing,
-                p.started,
-                p.admitted_seq,
-                None,
-            )?;
+            self.activate(p, None)?;
         }
         Ok(())
     }
@@ -591,17 +600,7 @@ impl Scheduler {
             let a = self.active.swap_remove(youngest);
             // dropping the session releases its leased blocks to the pool
             self.preemptions += 1;
-            self.preempted.push_back(Preempted {
-                admitted_seq: a.admitted_seq,
-                id: a.id,
-                prompt: a.prompt,
-                prompt_len: a.prompt_len,
-                generated: a.generated,
-                max_new: a.max_new,
-                sampler: a.sampler,
-                timing: a.timing,
-                started: a.started,
-            });
+            self.preempted.push_back(Active::detach(a));
         }
     }
 
@@ -625,6 +624,40 @@ impl Scheduler {
         }
     }
 
+    /// Detach every in-flight sequence — active (sessions dropped, their
+    /// blocks returned to the pool) and preempted alike — and hand them
+    /// back in admission order, for the frontend to re-home when this
+    /// replica retires or dies. The scheduler is left with no sequence
+    /// state; already-finished responses stay collectable via
+    /// [`Scheduler::take_finished`].
+    pub fn drain_inflight(&mut self) -> Vec<InFlight> {
+        let mut out: Vec<InFlight> =
+            self.active.drain(..).map(Active::detach).collect();
+        out.extend(self.preempted.drain(..));
+        out.sort_by_key(|f| f.admitted_seq);
+        out
+    }
+
+    /// Adopt a sequence drained from another replica: it joins the resume
+    /// queue (which has first claim on freed blocks over fresh
+    /// admissions) and is re-stamped into this scheduler's admission
+    /// order. A sequence that already has all its tokens finishes
+    /// immediately.
+    pub fn inject(&mut self, mut f: InFlight) {
+        if f.generated.len() >= f.max_new {
+            self.finished.push(Response {
+                id: f.id,
+                prompt_len: f.prompt_len,
+                tokens: f.generated,
+                timing: f.timing,
+            });
+            return;
+        }
+        self.admit_counter += 1;
+        f.admitted_seq = self.admit_counter;
+        self.preempted.push_back(f);
+    }
+
     pub fn take_finished(&mut self) -> Vec<Response> {
         std::mem::take(&mut self.finished)
     }
@@ -637,7 +670,7 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::Request;
+    use crate::coordinator::request::SubmitRequest;
     use crate::engine::EngineBuilder;
     use crate::model::{KvCacheConfig, ModelConfig};
 
@@ -672,10 +705,7 @@ mod tests {
         for id in 0..3u64 {
             let adm = s
                 .admit(
-                    QueuedRequest {
-                        req: Request::new(id, vec![1, 2, 3], 5),
-                        arrived: Instant::now(),
-                    },
+                    QueuedRequest::new(id, SubmitRequest::new(vec![1, 2, 3], 5)),
                     id,
                 )
                 .unwrap();
@@ -692,14 +722,65 @@ mod tests {
     }
 
     #[test]
+    fn drain_and_inject_replay_bit_identically() {
+        // the drain path a retiring replica rides: interrupt mid-stream,
+        // move every in-flight sequence to a second scheduler over an
+        // identically-weighted engine, and the streams must match an
+        // uninterrupted run token for token
+        let run_uninterrupted = || {
+            let mut s = Scheduler::new(
+                micro_engine(31),
+                SchedulerConfig { max_active: 4, ..Default::default() },
+            );
+            for id in 0..3u64 {
+                s.admit(QueuedRequest::new(id, SubmitRequest::new(vec![1, 2, 3 + id as u32], 6)), id)
+                    .unwrap();
+            }
+            run_all(&mut s);
+            let mut done = s.take_finished();
+            done.sort_by_key(|r| r.id);
+            done
+        };
+        let expected = run_uninterrupted();
+
+        let mut a = Scheduler::new(
+            micro_engine(31),
+            SchedulerConfig { max_active: 4, ..Default::default() },
+        );
+        for id in 0..3u64 {
+            a.admit(QueuedRequest::new(id, SubmitRequest::new(vec![1, 2, 3 + id as u32], 6)), id)
+                .unwrap();
+        }
+        // a couple of decode steps, then the replica "dies"
+        a.step().unwrap();
+        a.step().unwrap();
+        let moved = a.drain_inflight();
+        assert!(a.idle(), "drained scheduler holds no sequence state");
+        let mut b = Scheduler::new(
+            micro_engine(31),
+            SchedulerConfig { max_active: 4, ..Default::default() },
+        );
+        for f in moved {
+            b.inject(f);
+        }
+        run_all(&mut b);
+        let mut done = a.take_finished();
+        done.extend(b.take_finished());
+        done.sort_by_key(|r| r.id);
+        assert_eq!(done.len(), expected.len());
+        for (d, e) in done.iter().zip(&expected) {
+            assert_eq!(d.id, e.id);
+            assert_eq!(d.tokens, e.tokens, "request {} stream must survive the move", d.id);
+            assert_eq!(d.prompt_len, e.prompt_len);
+        }
+    }
+
+    #[test]
     fn respects_kv_capacity() {
         let mut s = Scheduler::new(micro_engine(2), SchedulerConfig::default());
         // prompt 20 + request 100 new > max_seq 32 → truncated
         s.admit(
-            QueuedRequest {
-                req: Request::new(9, (0..20).map(|i| i as u32 % 64).collect(), 100),
-                arrived: Instant::now(),
-            },
+            QueuedRequest::new(9, SubmitRequest::new((0..20).map(|i| i as u32 % 64).collect(), 100)),
             0,
         )
         .unwrap();
@@ -716,10 +797,7 @@ mod tests {
             Scheduler::new(micro_engine(3), SchedulerConfig { max_active: 2, ..Default::default() });
         for id in 0..2u64 {
             s.admit(
-                QueuedRequest {
-                    req: Request::new(id, vec![1], 3),
-                    arrived: Instant::now(),
-                },
+                QueuedRequest::new(id, SubmitRequest::new(vec![1], 3)),
                 id,
             )
             .unwrap();
@@ -732,23 +810,24 @@ mod tests {
         let mut s =
             Scheduler::new(micro_engine(4), SchedulerConfig { max_active: 1, ..Default::default() });
         s.admit(
-            QueuedRequest { req: Request::new(0, vec![1], 2), arrived: Instant::now() },
+            QueuedRequest::new(0, SubmitRequest::new(vec![1], 2)),
             0,
         )
         .unwrap();
         // second admit: no slot — the request must come back intact
         let adm = s
             .admit(
-                QueuedRequest { req: Request::new(7, vec![1, 2], 2), arrived: Instant::now() },
+                QueuedRequest::new(7, SubmitRequest::new(vec![1, 2], 2)),
                 1,
             )
             .unwrap();
         match adm {
             Admission::Deferred(qr) => {
-                assert_eq!(qr.req.id, 7);
+                assert_eq!(qr.id, 7);
                 assert_eq!(qr.req.prompt, vec![1, 2]);
             }
             Admission::Admitted => panic!("must defer when at max_active"),
+            Admission::Routed(_) => unreachable!("schedulers never route"),
         }
     }
 
@@ -765,10 +844,7 @@ mod tests {
         assert_eq!(engine.kv_pool_status().unwrap().total_blocks, 1);
         let mut s = Scheduler::new(engine, SchedulerConfig::default());
         let r = s.admit(
-            QueuedRequest {
-                req: Request::new(0, (0..20).map(|i| i % 60).collect(), 4),
-                arrived: Instant::now(),
-            },
+            QueuedRequest::new(0, SubmitRequest::new((0..20).map(|i| i % 60).collect(), 4)),
             0,
         );
         assert!(r.is_err(), "a prompt larger than the whole pool can never run");
@@ -840,10 +916,7 @@ mod tests {
             for id in 0..3u64 {
                 let adm = s
                     .admit(
-                        QueuedRequest {
-                            req: Request::new(id, vec![1, 2, 3 + id as u32], 6),
-                            arrived: Instant::now(),
-                        },
+                        QueuedRequest::new(id, SubmitRequest::new(vec![1, 2, 3 + id as u32], 6)),
                         id,
                     )
                     .unwrap();
@@ -890,10 +963,7 @@ mod tests {
                 prompt.push(60 + id as u32);
                 let adm = s
                     .admit(
-                        QueuedRequest {
-                            req: Request::new(id, prompt, 4),
-                            arrived: Instant::now(),
-                        },
+                        QueuedRequest::new(id, SubmitRequest::new(prompt, 4)),
                         id,
                     )
                     .unwrap();

@@ -1,44 +1,73 @@
-//! The serving front end: dispatcher thread (router) + one worker thread
-//! per engine replica (batcher + continuous-batching scheduler). Rust owns
-//! the whole event loop; python never appears on this path.
+//! The serving frontend: one [`Frontend`] owning N worker replicas, each
+//! a thread running its own batcher + continuous-batching scheduler over
+//! its own engine (replicas built by `EngineBuilder::build_replicas`
+//! share one weight mapping — `docs/SERVING.md` §multi-replica). Routing
+//! happens synchronously inside [`Frontend::submit`] — there is no
+//! dispatcher thread to hop through on the submit path.
 //!
 //! ```text
-//! client ──submit()──► dispatcher ──route──► worker[replica]
-//!                                             ├─ Batcher (size/deadline)
-//!                                             ├─ Scheduler (prefill+decode)
-//!                                             └─ responses ──► client rx
+//! client ──submit()──► Frontend ──route──► worker[replica i]
+//!                        │                   ├─ Batcher (size/deadline)
+//!                        │                   ├─ Scheduler (prefill+decode)
+//!                        │                   └─ responses ──► Ticket rx
+//!                        └─ Router: tag → sticky → load score
 //! ```
+//!
+//! When a replica retires (or is declared dead), [`Frontend::retire`]
+//! drains its queued *and* in-flight work and re-homes everything to the
+//! surviving replicas of the same tag: in-flight sequences ride the
+//! scheduler's preempt-and-replay machinery ([`InFlight`]), so their
+//! streams continue bit-identically on the adoptive replica.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
 use crate::engine::InferenceEngine;
 use crate::prefix::SessionStore;
+use crate::util::par;
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
-use super::request::{QueuedRequest, Request, Response};
-use super::router::Router;
-use super::scheduler::{Admission, Scheduler, SchedulerConfig};
+use super::request::{
+    sampling_seed, Admission, QueuedRequest, Response, SubmitRequest, Ticket,
+};
+use super::router::{ReplicaId, ReplicaState, RequestMeta, Router};
+use super::scheduler::{InFlight, Scheduler, SchedulerConfig};
 
 enum WorkerMsg {
     Req(QueuedRequest, Sender<Response>),
+    /// a sequence drained from a retiring replica, adopted here
+    Resume(InFlight, Sender<Response>),
+    /// detach all queued + in-flight work, hand it back, then exit
+    Retire(Sender<Drained>),
     Shutdown,
 }
 
-enum FrontMsg {
-    Req(Request, Sender<Response>),
-    Shutdown,
+/// Everything a retiring worker hands back for re-homing.
+struct Drained {
+    queued: Vec<(QueuedRequest, Sender<Response>)>,
+    inflight: Vec<(InFlight, Sender<Response>)>,
 }
 
-pub struct ServerConfig {
+/// Load signal a worker publishes after every loop iteration; the
+/// frontend reads it (lock-free) to refresh the router before each
+/// placement.
+struct ReplicaStatus {
+    /// free KV blocks (`u64::MAX` = no pool — unconstrained)
+    free_blocks: AtomicU64,
+    /// queued + active + preempted on the replica
+    queue_depth: AtomicU64,
+    alive: AtomicBool,
+}
+
+pub struct FrontendConfig {
     pub batcher: BatcherConfig,
     pub max_active: usize,
     pub default_tag: String,
@@ -50,132 +79,237 @@ pub struct ServerConfig {
     /// replicas with different configs never collide. Implies nothing
     /// unless `prefix_cache` is on.
     pub session_dir: Option<PathBuf>,
+    /// Give each worker its own dedicated compute pool of this many
+    /// threads (`util::par::dedicated_pool`) so replicas never contend
+    /// for the global pool's dispatch lock. `None` = all replicas share
+    /// the process-global pool.
+    pub pool_threads: Option<usize>,
 }
 
-impl Default for ServerConfig {
+impl Default for FrontendConfig {
     fn default() -> Self {
-        ServerConfig {
+        FrontendConfig {
             batcher: BatcherConfig::default(),
             max_active: 8,
             default_tag: "fp16".to_string(),
             prefix_cache: false,
             session_dir: None,
+            pool_threads: None,
         }
     }
 }
 
-/// Per-worker slice of [`ServerConfig`] (bundled so the worker entry
+/// Back-compat aliases from the single-dispatcher era: the old `Server`
+/// *is* a one-replica `Frontend`.
+pub type Server = Frontend;
+pub type ServerConfig = FrontendConfig;
+
+/// Per-worker slice of [`FrontendConfig`] (bundled so the worker entry
 /// point keeps a short signature).
 struct WorkerOpts {
     bcfg: BatcherConfig,
     max_active: usize,
     prefix_cache: bool,
     session_dir: Option<PathBuf>,
+    pool_threads: Option<usize>,
 }
 
-/// A running server over one or more engine replicas.
-pub struct Server {
-    front_tx: Sender<FrontMsg>,
-    handles: Vec<JoinHandle<()>>,
+struct Worker {
+    tx: Sender<WorkerMsg>,
+    status: Arc<ReplicaStatus>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// A running frontend over one or more engine replicas.
+pub struct Frontend {
+    router: Mutex<Router>,
+    workers: Vec<Worker>,
     next_id: AtomicU64,
     pub metrics: Arc<Metrics>,
 }
 
-impl Server {
+impl Frontend {
     /// Start with `(tag, engine)` replicas — any [`InferenceEngine`]
-    /// (native or PJRT), built through `engine::EngineBuilder`.
+    /// (native or PJRT), built through `engine::EngineBuilder`. Replica
+    /// ids are positions in this vec.
     pub fn start(
         replicas: Vec<(String, Arc<dyn InferenceEngine>)>,
-        cfg: ServerConfig,
+        cfg: FrontendConfig,
     ) -> Result<Self> {
-        assert!(!replicas.is_empty());
+        if replicas.is_empty() {
+            bail!("Frontend::start needs at least one replica");
+        }
         let metrics = Arc::new(Metrics::new());
         let mut router = Router::new(&cfg.default_tag);
-        let mut worker_txs = Vec::new();
-        let mut handles = Vec::new();
-
+        let mut workers = Vec::new();
         for (idx, (tag, model)) in replicas.into_iter().enumerate() {
-            router.register(&tag, idx);
+            router.register(&tag);
             let (tx, rx) = channel::<WorkerMsg>();
-            worker_txs.push(tx);
+            let status = Arc::new(ReplicaStatus {
+                free_blocks: AtomicU64::new(u64::MAX),
+                queue_depth: AtomicU64::new(0),
+                alive: AtomicBool::new(true),
+            });
             let m = metrics.clone();
+            let st = status.clone();
             let opts = WorkerOpts {
                 bcfg: cfg.batcher,
                 max_active: cfg.max_active,
                 prefix_cache: cfg.prefix_cache,
                 session_dir: cfg.session_dir.clone(),
+                pool_threads: cfg.pool_threads,
             };
             let tag_owned = tag.clone();
-            handles.push(std::thread::spawn(move || {
-                worker_loop(model, rx, opts, m, &tag_owned);
-            }));
+            let handle = std::thread::Builder::new()
+                .name(format!("abq-replica{idx}"))
+                .spawn(move || worker_loop(idx, model, rx, opts, m, st, &tag_owned))
+                .context("spawning replica worker")?;
+            workers.push(Worker { tx, status, handle: Some(handle) });
         }
-
-        // dispatcher
-        let (front_tx, front_rx) = channel::<FrontMsg>();
-        let m2 = metrics.clone();
-        handles.push(std::thread::spawn(move || {
-            dispatcher_loop(front_rx, router, worker_txs, m2);
-        }));
-
-        Ok(Server { front_tx, handles, next_id: AtomicU64::new(1), metrics })
+        Ok(Frontend { router: Mutex::new(router), workers, next_id: AtomicU64::new(1), metrics })
     }
 
-    /// Submit a request; returns a receiver for its response.
-    pub fn submit(&self, mut req: Request) -> Receiver<Response> {
-        if req.id == 0 {
-            req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        }
-        let (tx, rx) = channel();
-        let _ = self.front_tx.send(FrontMsg::Req(req, tx));
-        rx
+    pub fn replica_count(&self) -> usize {
+        self.workers.len()
     }
 
-    /// Stop all threads (in-flight requests are dropped).
-    pub fn shutdown(self) {
-        let _ = self.front_tx.send(FrontMsg::Shutdown);
-        for h in self.handles {
-            let _ = h.join();
+    /// Refresh the router's view from the workers' published load.
+    fn refresh(&self, router: &mut Router) {
+        for (i, w) in self.workers.iter().enumerate() {
+            let free = w.status.free_blocks.load(Ordering::Relaxed);
+            router.update(
+                ReplicaId(i),
+                ReplicaState {
+                    free_blocks: if free == u64::MAX { usize::MAX } else { free as usize },
+                    queue_depth: w.status.queue_depth.load(Ordering::Relaxed) as usize,
+                    alive: w.status.alive.load(Ordering::Relaxed),
+                },
+            );
         }
     }
-}
 
-fn dispatcher_loop(
-    rx: Receiver<FrontMsg>,
-    mut router: Router,
-    worker_txs: Vec<Sender<WorkerMsg>>,
-    metrics: Arc<Metrics>,
-) {
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            FrontMsg::Req(req, resp_tx) => {
-                metrics.incr("router.requests", 1);
-                match router.route(&req.config) {
-                    Ok(idx) => {
-                        let qr = QueuedRequest { req, arrived: Instant::now() };
-                        let _ = worker_txs[idx].send(WorkerMsg::Req(qr, resp_tx));
-                    }
-                    Err(_) => {
-                        metrics.incr("router.unroutable", 1);
-                        // drop resp_tx: client sees a disconnected channel
-                    }
+    fn meta<'a>(req: &'a SubmitRequest) -> RequestMeta<'a> {
+        RequestMeta {
+            config_tag: &req.config_tag,
+            session_affinity: req.session_affinity,
+            prompt_len: req.prompt.len(),
+        }
+    }
+
+    /// Stamp, route and enqueue one request. Fails when no live replica
+    /// serves the requested tag — the client gets the error immediately
+    /// instead of a dangling channel.
+    pub fn submit(&self, req: SubmitRequest) -> Result<Ticket> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.metrics.incr("server.requests", 1);
+        let replica = {
+            let mut router = self.router.lock().unwrap();
+            self.refresh(&mut router);
+            match router.route(&Self::meta(&req)) {
+                Ok(r) => r,
+                Err(e) => {
+                    self.metrics.incr("server.unroutable", 1);
+                    return Err(e);
                 }
             }
-            FrontMsg::Shutdown => break,
-        }
+        };
+        let (tx, rx) = channel();
+        let qr = QueuedRequest::new(id, req);
+        self.workers[replica.0]
+            .tx
+            .send(WorkerMsg::Req(qr, tx))
+            .map_err(|_| anyhow::anyhow!("{replica} is no longer accepting work"))?;
+        self.workers[replica.0].status.queue_depth.fetch_add(1, Ordering::Relaxed);
+        Ok(Ticket { id, replica, rx })
     }
-    for tx in worker_txs {
-        let _ = tx.send(WorkerMsg::Shutdown);
+
+    /// Where would this request land right now? Same three-tier decision
+    /// as [`Frontend::submit`] (including recording the affinity
+    /// placement), without enqueuing anything.
+    pub fn route_preview(&self, req: &SubmitRequest) -> Result<Admission> {
+        let mut router = self.router.lock().unwrap();
+        self.refresh(&mut router);
+        Ok(Admission::Routed(router.route(&Self::meta(req))?))
+    }
+
+    /// Retire one replica: stop routing to it, drain its queued and
+    /// in-flight work, and re-home everything to surviving replicas of
+    /// the same tag (sticky fingerprints are re-pinned to the adoptive
+    /// replica). Returns how many requests were re-homed. Requests whose
+    /// tag no survivor serves get their channels dropped — the client
+    /// sees a disconnect, never a silent precision switch.
+    pub fn retire(&self, id: ReplicaId) -> Result<usize> {
+        let w = self.workers.get(id.0).with_context(|| format!("unknown {id}"))?;
+        // stop routing first, so submit() cannot race new work in
+        w.status.alive.store(false, Ordering::Relaxed);
+        self.router.lock().unwrap().mark_dead(id);
+        let (tx, rx) = channel();
+        if w.tx.send(WorkerMsg::Retire(tx)).is_err() {
+            return Ok(0); // worker already gone; nothing to drain
+        }
+        let drained = rx.recv().context("retiring replica returned no drain")?;
+        self.metrics.incr("server.replica_retired", 1);
+        let mut moved = 0usize;
+        let mut router = self.router.lock().unwrap();
+        self.refresh(&mut router);
+        for (qr, resp_tx) in drained.queued {
+            match router.route(&Self::meta(&qr.req)) {
+                Ok(to) => {
+                    if self.workers[to.0].tx.send(WorkerMsg::Req(qr, resp_tx)).is_ok() {
+                        self.workers[to.0].status.queue_depth.fetch_add(1, Ordering::Relaxed);
+                        moved += 1;
+                    }
+                }
+                Err(_) => self.metrics.incr("server.unroutable", 1),
+            }
+        }
+        for (f, resp_tx) in drained.inflight {
+            match router.route(&Self::meta(&f.req)) {
+                Ok(to) => {
+                    if let Some(fp) = f.req.session_affinity {
+                        router.repin(fp, to);
+                    }
+                    if self.workers[to.0].tx.send(WorkerMsg::Resume(f, resp_tx)).is_ok() {
+                        self.workers[to.0].status.queue_depth.fetch_add(1, Ordering::Relaxed);
+                        moved += 1;
+                    }
+                }
+                Err(_) => self.metrics.incr("server.unroutable", 1),
+            }
+        }
+        Ok(moved)
+    }
+
+    /// Stop all workers after they finish their queued work.
+    pub fn shutdown(mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(WorkerMsg::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
     }
 }
 
 fn worker_loop(
+    idx: usize,
     model: Arc<dyn InferenceEngine>,
     rx: Receiver<WorkerMsg>,
     opts: WorkerOpts,
     metrics: Arc<Metrics>,
+    status: Arc<ReplicaStatus>,
     tag: &str,
 ) {
+    let pfx = format!("replica.{idx}");
+    // a dedicated compute pool isolates this replica's GEMM fan-out from
+    // the other replicas (and the global pool); torn down on exit so a
+    // retired replica leaves no idle threads behind
+    let pool = opts.pool_threads.map(|n| par::dedicated_pool(n, &format!("replica{idx}")));
+    if let Some(p) = &pool {
+        p.bind_current_thread();
+    }
     let max_active = opts.max_active;
     let mut batcher = Batcher::new(opts.bcfg);
     // the worker keeps its own handle for pool-occupancy gauges (3b)
@@ -190,15 +324,15 @@ fn worker_loop(
             Ok(store) => {
                 let restored = scheduler.attach_session_store(store);
                 if restored > 0 {
-                    println!("[{tag}] prefix cache warmed from {restored} session file(s)");
+                    println!("[{pfx}/{tag}] prefix cache warmed from {restored} session file(s)");
                 }
             }
-            Err(e) => eprintln!("[{tag}] session dir unavailable: {e:#}"),
+            Err(e) => eprintln!("[{pfx}/{tag}] session dir unavailable: {e:#}"),
         }
     }
     let mut pending: HashMap<u64, Sender<Response>> = HashMap::new();
-    let mut seed = 0xC0FFEEu64;
     let mut shutdown = false;
+    let mut retire_reply: Option<Sender<Drained>> = None;
 
     loop {
         // 1. pull new work (block briefly only when fully idle)
@@ -224,15 +358,57 @@ fn worker_loop(
             };
             match msg {
                 WorkerMsg::Req(qr, resp_tx) => {
-                    pending.insert(qr.req.id, resp_tx);
+                    pending.insert(qr.id, resp_tx);
                     batcher.push(qr);
-                    metrics.incr(&format!("worker.{tag}.queued"), 1);
+                    metrics.incr(&format!("{pfx}.queued"), 1);
+                }
+                WorkerMsg::Resume(f, resp_tx) => {
+                    // a sequence drained from a dead/retired sibling:
+                    // joins the resume queue with first claim on blocks
+                    pending.insert(f.id, resp_tx);
+                    scheduler.inject(f);
+                    metrics.incr(&format!("{pfx}.adopted"), 1);
+                }
+                WorkerMsg::Retire(reply) => {
+                    retire_reply = Some(reply);
+                    break;
                 }
                 WorkerMsg::Shutdown => {
                     shutdown = true;
                     break;
                 }
             }
+        }
+
+        // retirement: hand every queued + in-flight request back (with
+        // its response channel) and exit immediately — the frontend
+        // re-homes the work on surviving replicas
+        if let Some(reply) = retire_reply.take() {
+            // anything already finished is still delivered from here
+            for resp in scheduler.take_finished() {
+                deliver(&metrics, &pfx, &mut pending, resp);
+            }
+            let mut queued = Vec::new();
+            while !batcher.is_empty() {
+                for qr in batcher.drain(usize::MAX) {
+                    if let Some(tx) = pending.remove(&qr.id) {
+                        queued.push((qr, tx));
+                    }
+                }
+            }
+            let inflight: Vec<(InFlight, Sender<Response>)> = scheduler
+                .drain_inflight()
+                .into_iter()
+                .filter_map(|f| pending.remove(&f.id).map(|tx| (f, tx)))
+                .collect();
+            // inject()-completed stragglers surface as finished
+            for resp in scheduler.take_finished() {
+                deliver(&metrics, &pfx, &mut pending, resp);
+            }
+            status.alive.store(false, Ordering::Relaxed);
+            status.queue_depth.store(0, Ordering::Relaxed);
+            let _ = reply.send(Drained { queued, inflight });
+            break;
         }
         if shutdown && scheduler.idle() && batcher.is_empty() {
             break;
@@ -248,26 +424,30 @@ fn worker_loop(
             let mut deferred: Vec<_> = Vec::new();
             let mut drained_iter = drained.drain(..);
             for qr in drained_iter.by_ref() {
-                seed = seed.wrapping_add(1);
-                let qid = qr.req.id;
+                let qid = qr.id;
                 let t0 = Instant::now();
-                match scheduler.admit(qr, seed) {
+                // the seed derives from the id alone, so the stream is
+                // independent of admission order and replica assignment
+                match scheduler.admit(qr, sampling_seed(qid)) {
                     Ok(Admission::Admitted) => {
                         metrics.observe_us(
-                            &format!("worker.{tag}.prefill_us"),
+                            &format!("{pfx}.prefill_us"),
                             t0.elapsed().as_micros() as u64,
                         );
                     }
                     Ok(Admission::Deferred(qr)) => {
-                        metrics.incr(&format!("worker.{tag}.admit_deferred"), 1);
+                        metrics.incr(&format!("{pfx}.admit_deferred"), 1);
                         deferred.push(qr);
                         break;
+                    }
+                    Ok(Admission::Routed(_)) => {
+                        unreachable!("schedulers admit or defer; routing happened upstream")
                     }
                     Err(e) => {
                         // unadmittable (e.g. prompt larger than the whole
                         // pool): drop its channel so the client sees a
                         // disconnect instead of hanging
-                        metrics.incr(&format!("worker.{tag}.admit_errors"), 1);
+                        metrics.incr(&format!("{pfx}.admit_errors"), 1);
                         pending.remove(&qid);
                         eprintln!("admit error: {e}");
                     }
@@ -285,37 +465,41 @@ fn worker_loop(
             if let Err(e) = scheduler.step() {
                 eprintln!("step error: {e}");
             }
-            metrics.observe_us(
-                &format!("worker.{tag}.step_us"),
-                t0.elapsed().as_micros() as u64,
-            );
+            metrics.observe_us(&format!("{pfx}.step_us"), t0.elapsed().as_micros() as u64);
         }
 
-        // 3b. export KV pool occupancy + preemption state
+        // 3b. export KV pool occupancy + preemption state, and publish
+        // the router's load signal
+        let free = model.kv_pool_status().map_or(u64::MAX, |st| st.free_blocks as u64);
+        status.free_blocks.store(free, Ordering::Relaxed);
+        status.queue_depth.store(
+            (batcher.len() + scheduler.n_active() + scheduler.n_preempted()) as u64,
+            Ordering::Relaxed,
+        );
         if let Some(st) = model.kv_pool_status() {
-            metrics.set_gauge(&format!("worker.{tag}.kv_blocks_used"), st.used_blocks() as u64);
-            metrics.set_gauge(&format!("worker.{tag}.kv_blocks_total"), st.total_blocks as u64);
+            metrics.set_gauge(&format!("{pfx}.kv_blocks_used"), st.used_blocks() as u64);
+            metrics.set_gauge(&format!("{pfx}.kv_blocks_total"), st.total_blocks as u64);
             // extra handles onto leased blocks (prefix/fork sharing) —
             // each physical block is billed once in kv_blocks_used
-            metrics.set_gauge(&format!("worker.{tag}.kv_blocks_shared"), st.shared_refs as u64);
+            metrics.set_gauge(&format!("{pfx}.kv_blocks_shared"), st.shared_refs as u64);
             metrics.set_gauge(
-                &format!("worker.{tag}.kv_preempted_waiting"),
+                &format!("{pfx}.kv_preempted_waiting"),
                 scheduler.n_preempted() as u64,
             );
-            metrics.set_gauge(&format!("worker.{tag}.preemptions"), scheduler.preemption_count());
+            metrics.set_gauge(&format!("{pfx}.preemptions"), scheduler.preemption_count());
         }
         // 3c. speculative-decoding acceptance gauges
         if model.spec_config().is_some() {
             let (drafted, accepted) = scheduler.spec_counters();
-            metrics.set_gauge(&format!("worker.{tag}.spec_drafted"), drafted);
-            metrics.set_gauge(&format!("worker.{tag}.spec_accepted"), accepted);
+            metrics.set_gauge(&format!("{pfx}.spec_drafted"), drafted);
+            metrics.set_gauge(&format!("{pfx}.spec_accepted"), accepted);
             metrics.set_gauge(
-                &format!("worker.{tag}.spec_accept_rate_pct"),
+                &format!("{pfx}.spec_accept_rate_pct"),
                 if drafted > 0 { accepted * 100 / drafted } else { 0 },
             );
             if let Some(dp) = model.spec_draft_pool_status() {
                 metrics.set_gauge(
-                    &format!("worker.{tag}.spec_draft_blocks_used"),
+                    &format!("{pfx}.spec_draft_blocks_used"),
                     dp.used_blocks() as u64,
                 );
             }
@@ -323,23 +507,40 @@ fn worker_loop(
 
         // 3d. prefix-cache gauges (present only when the cache is live)
         if let Some(ps) = scheduler.prefix_stats() {
-            metrics.set_gauge(&format!("worker.{tag}.prefix_hits"), ps.hits);
-            metrics.set_gauge(&format!("worker.{tag}.prefix_tokens_reused"), ps.tokens_reused);
-            metrics.set_gauge(&format!("worker.{tag}.prefix_entries"), ps.entries as u64);
-            metrics.set_gauge(&format!("worker.{tag}.prefix_evictions"), ps.evictions);
+            metrics.set_gauge(&format!("{pfx}.prefix_hits"), ps.hits);
+            metrics.set_gauge(&format!("{pfx}.prefix_tokens_reused"), ps.tokens_reused);
+            metrics.set_gauge(&format!("{pfx}.prefix_entries"), ps.entries as u64);
+            metrics.set_gauge(&format!("{pfx}.prefix_evictions"), ps.evictions);
         }
 
         // 4. deliver finished responses
         for resp in scheduler.take_finished() {
-            metrics.incr(&format!("worker.{tag}.completed"), 1);
-            metrics.observe_us(
-                &format!("worker.{tag}.e2e_us"),
-                resp.timing.total_us(),
-            );
-            if let Some(tx) = pending.remove(&resp.id) {
-                let _ = tx.send(resp);
-            }
+            deliver(&metrics, &pfx, &mut pending, resp);
         }
+    }
+    status.alive.store(false, Ordering::Relaxed);
+    if let Some(p) = pool {
+        par::unbind_current_thread();
+        p.shutdown();
+    }
+}
+
+/// Send one finished response to its client and record the per-replica
+/// and fleet-wide ("server.") completion metrics — `server.ttft_us` is
+/// the latency-SLO axis of the saturation bench.
+fn deliver(
+    metrics: &Metrics,
+    pfx: &str,
+    pending: &mut HashMap<u64, Sender<Response>>,
+    resp: Response,
+) {
+    metrics.incr(&format!("{pfx}.completed"), 1);
+    metrics.incr("server.completed", 1);
+    metrics.observe_us(&format!("{pfx}.e2e_us"), resp.timing.total_us());
+    metrics.observe_us("server.e2e_us", resp.timing.total_us());
+    metrics.observe_us("server.ttft_us", resp.timing.ttft_us());
+    if let Some(tx) = pending.remove(&resp.id) {
+        let _ = tx.send(resp);
     }
 }
 
@@ -366,25 +567,25 @@ mod tests {
 
     #[test]
     fn end_to_end_serving() {
-        let server = Server::start(
+        let server = Frontend::start(
             vec![("fp16".to_string(), micro_engine(5))],
-            ServerConfig::default(),
+            FrontendConfig::default(),
         )
         .unwrap();
-        let mut rxs = Vec::new();
+        let mut tickets = Vec::new();
         for i in 0..6 {
-            let mut req = Request::new(0, vec![1, 2, (i % 30) as u32], 4);
-            req.config = "fp16".to_string();
-            rxs.push(server.submit(req));
+            let req = SubmitRequest::new(vec![1, 2, (i % 30) as u32], 4).config("fp16");
+            tickets.push(server.submit(req).expect("routable"));
         }
-        for rx in rxs {
-            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        for t in tickets {
+            let resp = t.rx.recv_timeout(Duration::from_secs(30)).expect("response");
             assert_eq!(resp.tokens.len(), 4);
         }
-        assert_eq!(server.metrics.counter("worker.fp16.completed"), 6);
+        assert_eq!(server.metrics.counter("replica.0.completed"), 6);
+        assert_eq!(server.metrics.counter("server.completed"), 6);
         // the native engine has a KV pool, so occupancy gauges must exist
-        assert!(server.metrics.gauge("worker.fp16.kv_blocks_total") > 0);
-        assert_eq!(server.metrics.gauge("worker.fp16.kv_blocks_used"), 0);
+        assert!(server.metrics.gauge("replica.0.kv_blocks_total") > 0);
+        assert_eq!(server.metrics.gauge("replica.0.kv_blocks_used"), 0);
         server.shutdown();
     }
 
@@ -396,26 +597,25 @@ mod tests {
             .speculative("w2*a8:2".parse().unwrap())
             .build_arc()
             .unwrap();
-        let server = Server::start(
+        let server = Frontend::start(
             vec![("fp16".to_string(), engine)],
-            ServerConfig::default(),
+            FrontendConfig::default(),
         )
         .unwrap();
-        let mut rxs = Vec::new();
+        let mut tickets = Vec::new();
         for i in 0..4 {
-            let mut req = Request::new(0, vec![1, 2, (i % 30) as u32], 5);
-            req.config = "fp16".to_string();
-            rxs.push(server.submit(req));
+            let req = SubmitRequest::new(vec![1, 2, (i % 30) as u32], 5).config("fp16");
+            tickets.push(server.submit(req).expect("routable"));
         }
-        for rx in rxs {
-            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        for t in tickets {
+            let resp = t.rx.recv_timeout(Duration::from_secs(30)).expect("response");
             assert_eq!(resp.tokens.len(), 5);
         }
-        assert_eq!(server.metrics.counter("worker.fp16.completed"), 4);
-        assert!(server.metrics.gauge("worker.fp16.spec_drafted") > 0);
+        assert_eq!(server.metrics.counter("replica.0.completed"), 4);
+        assert!(server.metrics.gauge("replica.0.spec_drafted") > 0);
         assert!(
-            server.metrics.gauge("worker.fp16.spec_accepted")
-                <= server.metrics.gauge("worker.fp16.spec_drafted")
+            server.metrics.gauge("replica.0.spec_accepted")
+                <= server.metrics.gauge("replica.0.spec_drafted")
         );
         server.shutdown();
     }
@@ -425,46 +625,99 @@ mod tests {
         // one system prompt shared by every request: after the first
         // prefill the rest attach its blocks, so the hit/reuse gauges
         // move and the shared-refs gauge is exported alongside occupancy
-        let server = Server::start(
+        let server = Frontend::start(
             vec![("fp16".to_string(), micro_engine(13))],
-            ServerConfig { prefix_cache: true, ..Default::default() },
+            FrontendConfig { prefix_cache: true, ..Default::default() },
         )
         .unwrap();
         // one whole block at the default 16-position block size
         let sys: Vec<u32> = (0..16u32).map(|i| i % 60).collect();
-        let mut rxs = Vec::new();
+        let mut tickets = Vec::new();
         for i in 0..5u32 {
             let mut prompt = sys.clone();
             prompt.push(60 + (i % 3));
-            let mut req = Request::new(0, prompt, 4);
-            req.config = "fp16".to_string();
-            rxs.push(server.submit(req));
+            tickets.push(server.submit(SubmitRequest::new(prompt, 4).config("fp16")).unwrap());
         }
-        for rx in rxs {
-            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        for t in tickets {
+            let resp = t.rx.recv_timeout(Duration::from_secs(30)).expect("response");
             assert_eq!(resp.tokens.len(), 4);
         }
-        assert_eq!(server.metrics.counter("worker.fp16.completed"), 5);
+        assert_eq!(server.metrics.counter("replica.0.completed"), 5);
         assert!(
-            server.metrics.gauge("worker.fp16.prefix_hits") >= 4,
+            server.metrics.gauge("replica.0.prefix_hits") >= 4,
             "every request after the first shares the system prompt"
         );
-        assert!(server.metrics.gauge("worker.fp16.prefix_tokens_reused") >= 4 * 16);
-        assert!(server.metrics.gauge("worker.fp16.prefix_entries") >= 1);
+        assert!(server.metrics.gauge("replica.0.prefix_tokens_reused") >= 4 * 16);
+        assert!(server.metrics.gauge("replica.0.prefix_entries") >= 1);
         server.shutdown();
     }
 
     #[test]
-    fn unroutable_config_drops_channel() {
-        let server = Server::start(
+    fn unroutable_config_is_an_immediate_error() {
+        let server = Frontend::start(
             vec![("fp16".to_string(), micro_engine(5))],
-            ServerConfig::default(),
+            FrontendConfig::default(),
         )
         .unwrap();
-        let mut req = Request::new(0, vec![1], 2);
-        req.config = "w99a99".to_string();
-        let rx = server.submit(req);
-        assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
+        let err = server.submit(SubmitRequest::new(vec![1], 2).config("w99a99"));
+        assert!(err.is_err(), "unknown tag must fail at submit, not hang");
+        assert_eq!(server.metrics.counter("server.unroutable"), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn two_replicas_spread_load_and_sticky_affinity_pins() {
+        // identical seeds → identical weights, so any placement gives the
+        // same streams; what's under test is the routing itself
+        let server = Frontend::start(
+            vec![
+                ("fp16".to_string(), micro_engine(5)),
+                ("fp16".to_string(), micro_engine(5)),
+            ],
+            FrontendConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(server.replica_count(), 2);
+        // same affinity fingerprint → same replica, every time
+        let pinned: Vec<ReplicaId> = (0..4)
+            .map(|_| {
+                server
+                    .submit(SubmitRequest::new(vec![1, 2, 3], 2).config("fp16").affinity(42))
+                    .unwrap()
+                    .replica
+            })
+            .collect();
+        assert!(pinned.windows(2).all(|w| w[0] == w[1]), "affinity must pin: {pinned:?}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn retire_rehomes_queued_and_inflight_work() {
+        let server = Frontend::start(
+            vec![
+                ("fp16".to_string(), micro_engine(7)),
+                ("fp16".to_string(), micro_engine(7)),
+            ],
+            FrontendConfig::default(),
+        )
+        .unwrap();
+        let mut tickets = Vec::new();
+        for i in 0..8 {
+            let req = SubmitRequest::new(vec![1, 2, (i % 30) as u32], 6).config("fp16");
+            tickets.push(server.submit(req).expect("routable"));
+        }
+        // kill replica 0 while requests are (likely) still moving
+        server.retire(ReplicaId(0)).unwrap();
+        for t in tickets {
+            let resp = t.rx.recv_timeout(Duration::from_secs(30)).expect(
+                "every response must still arrive after the replica died",
+            );
+            assert_eq!(resp.tokens.len(), 6);
+        }
+        assert_eq!(server.metrics.counter("server.completed"), 8);
+        assert_eq!(server.metrics.counter("server.replica_retired"), 1);
+        // retiring the dead replica again is a no-op, not a panic
+        assert_eq!(server.retire(ReplicaId(0)).unwrap(), 0);
         server.shutdown();
     }
 }

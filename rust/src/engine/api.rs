@@ -43,6 +43,13 @@ pub struct EngineSpec {
 pub struct MemoryReport {
     /// packed weights (+ quant scales / zero points / balance vectors)
     pub weight_bytes: usize,
+    /// weight bytes this engine *added* to the process: equal to
+    /// `weight_bytes` (+ draft weights) for a solo engine or the
+    /// designated weights owner of a shared-model replica fleet, and 0
+    /// for the other replicas, which only hold another `Arc` onto the
+    /// owner's model. Summing reports across replicas therefore counts a
+    /// shared model once (docs/SERVING.md §multi-replica).
+    pub weight_bytes_incremental: usize,
     /// KV cache bytes one session holds at full capacity
     pub kv_bytes_per_session: usize,
     /// total KV pool budget (0 when the engine has no block pool)

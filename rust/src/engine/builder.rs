@@ -27,7 +27,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Context, Result};
 
 use crate::abq::OptLevel;
-use crate::model::{KvCacheConfig, ModelConfig, Transformer, WeightPack};
+use crate::model::{KvCacheConfig, ModelConfig, PackSource, PackView, Transformer, WeightPack};
 use crate::quant::{CorrectionSet, WAConfig};
 use crate::runtime::artifacts::ArtifactManifest;
 use crate::spec::SpecConfig;
@@ -207,7 +207,13 @@ impl EngineBuilder {
         Ok(Arc::from(self.build()?))
     }
 
-    fn build_native(self) -> Result<Box<dyn InferenceEngine>> {
+    /// Prepare the target (and, when configured, draft) instantiations
+    /// once — the step `build_native` and `build_replicas` share. With
+    /// artifacts weights this goes through the mmap'd [`PackView`], so
+    /// float tensors are borrowed from the mapping while backends pack
+    /// them; the mapping drops when this returns (the prepared model
+    /// owns only packed state).
+    fn prepare_models(&self) -> Result<(Transformer, Option<(SpecConfig, Transformer)>)> {
         let opts = BackendOptions { opt_level: self.opt_level };
         let backend = self
             .registry
@@ -227,7 +233,7 @@ impl EngineBuilder {
             }
             None => None,
         };
-        let (model, draft) = if let Some((cfg, seed)) = self.random {
+        if let Some((cfg, seed)) = self.random {
             let m =
                 Transformer::random_corrected(cfg, backend.as_ref(), seed, self.correction.as_ref())?;
             let d = match &draft_plan {
@@ -237,12 +243,12 @@ impl EngineBuilder {
                 )),
                 None => None,
             };
-            (m, d)
+            Ok((m, d))
         } else {
             let dir = self.weights.as_ref().ok_or_else(|| {
                 anyhow!("EngineBuilder: set .weights(dir) or .random_weights(cfg, seed)")
             })?;
-            // one pack + manifest read serves both instantiations
+            // one mmap + manifest read serves both instantiations
             let art = read_artifacts(dir)
                 .with_context(|| format!("load artifacts from {dir:?} (run `make artifacts`)"))?;
             let m = prepare_from_artifacts(
@@ -267,14 +273,54 @@ impl EngineBuilder {
                 )),
                 None => None,
             };
-            (m, d)
-        };
+            Ok((m, d))
+        }
+    }
+
+    fn build_native(self) -> Result<Box<dyn InferenceEngine>> {
+        let (model, draft) = self.prepare_models()?;
         Ok(Box::new(NativeEngine::with_kv_speculative(
             model,
             self.kv,
             self.kv_pool_bytes,
             draft,
         )?))
+    }
+
+    /// Build `n` native engines that **share one prepared model** (and
+    /// draft, when speculative): weights are prepared once — off a
+    /// single mmap'd artifact view when `.weights(dir)` is set — and
+    /// held behind `Arc<Transformer>`, while each replica gets its own
+    /// private `KvPool` sized by the builder's `kv_pool_bytes`. Replica
+    /// 0 is the *weights owner*: its [`super::MemoryReport`] bills the
+    /// full weight bytes under `weight_bytes_incremental`; replicas 1..
+    /// report ≈ 0 incremental weight bytes, so summing the reports
+    /// counts the shared model once (docs/SERVING.md §multi-replica).
+    pub fn build_replicas(self, n: usize) -> Result<Vec<Arc<dyn InferenceEngine>>> {
+        if n == 0 {
+            anyhow::bail!("build_replicas: need at least one replica");
+        }
+        if let Some(t) = self.threads {
+            par::set_threads(t);
+        }
+        if self.execution != Execution::Native {
+            anyhow::bail!("multi-replica serving runs on the native execution path only");
+        }
+        let (model, draft) = self.prepare_models()?;
+        let model = Arc::new(model);
+        let draft = draft.map(|(sc, d)| (sc, Arc::new(d)));
+        (0..n)
+            .map(|i| {
+                let engine = NativeEngine::shared(
+                    Arc::clone(&model),
+                    self.kv,
+                    self.kv_pool_bytes,
+                    draft.as_ref().map(|(sc, d)| (*sc, Arc::clone(d))),
+                    i == 0,
+                )?;
+                Ok(Arc::new(engine) as Arc<dyn InferenceEngine>)
+            })
+            .collect()
     }
 
     #[cfg(feature = "pjrt")]
@@ -303,22 +349,23 @@ fn draft_backend_spec(sc: &SpecConfig) -> String {
     }
 }
 
-/// One artifacts-directory read: weight pack + parsed manifest + model
-/// config. A speculative build prepares two instantiations from this
-/// single load.
+/// One artifacts-directory read: an mmap'd zero-copy view of the weight
+/// pack + parsed manifest + model config. A speculative build prepares
+/// two instantiations from this single mapping; `build_replicas`
+/// prepares once and shares the result across N engines.
 struct LoadedArtifacts {
-    pack: WeightPack,
+    view: PackView,
     manifest: Json,
     cfg: ModelConfig,
 }
 
 fn read_artifacts(dir: &Path) -> Result<LoadedArtifacts> {
-    let pack = WeightPack::load(&dir.join("weights.abqw"))?;
+    let view = PackView::open(&dir.join("weights.abqw"))?;
     let manifest =
         std::fs::read_to_string(dir.join("manifest.json")).context("read manifest.json")?;
     let j = Json::parse(&manifest).map_err(|e| anyhow!("manifest parse: {e}"))?;
     let cfg = ModelConfig::from_manifest(&j)?;
-    Ok(LoadedArtifacts { pack, manifest: j, cfg })
+    Ok(LoadedArtifacts { view, manifest: j, cfg })
 }
 
 /// Prepare every projection of one instantiation with `backend` (the
@@ -342,7 +389,7 @@ fn prepare_from_artifacts(
         }
         None => None,
     };
-    Transformer::from_pack_corrected(&art.pack, art.cfg, backend, correction)
+    Transformer::from_source_corrected(PackSource::View(&art.view), art.cfg, backend, correction)
 }
 
 /// The auto-load half of correction resolution: when the (already

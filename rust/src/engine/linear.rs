@@ -15,7 +15,7 @@ use anyhow::{bail, Result};
 
 use crate::abq::{AbqScratch, OptLevel, QuantizedLinear};
 use crate::baselines::{gemm_fp32_into, Int4Gemm, Int4Scratch, Int8Gemm, Int8Scratch};
-use crate::model::WeightPack;
+use crate::model::PackSource;
 use crate::quant::{Correction, WAConfig};
 
 /// Backend-agnostic scratch arena threaded through
@@ -92,8 +92,10 @@ pub trait LinearOp: Send + Sync {
 /// engine's exported codes) additionally get the pack and the
 /// `blocks.<layer>.<name>` coordinates to look their tensors up.
 pub struct PrepareCtx<'a> {
-    /// weight pack holding calibrated quantized codes, when available
-    pub pack: Option<&'a WeightPack>,
+    /// weight source holding calibrated quantized codes, when available —
+    /// either an owned [`crate::model::WeightPack`] or a zero-copy
+    /// mmap-backed [`crate::model::PackView`]
+    pub pack: Option<PackSource<'a>>,
     /// block index of the projection being prepared
     pub layer: usize,
     /// projection name (`wq`, `wk`, `wv`, `wo`, `gate`, `up`, `down`)
@@ -380,16 +382,13 @@ impl LinearBackend for AbqBackend {
                 return Ok(Box::new(AbqOp { lin, opt: self.opt }));
             }
         }
-        if let Some(pack) = ctx.pack {
+        if let Some(src) = ctx.pack {
             let base = format!("q.{}.{}.{}", self.cfg.tag(), ctx.layer, ctx.name);
-            if let Ok(codes_t) = pack.get(&format!("{base}.wq")) {
-                let codes = codes_t.as_u8()?;
-                let zw = pack.get(&format!("{base}.zw"))?.as_i32()?.to_vec();
-                let dw = pack.get(&format!("{base}.dw"))?.as_f32()?.to_vec();
-                let balance = pack
-                    .get(&format!("{base}.s"))
-                    .ok()
-                    .and_then(|t| t.as_f32().ok().map(|v| v.to_vec()));
+            if src.contains(&format!("{base}.wq")) {
+                let codes = src.u8v(&format!("{base}.wq"))?;
+                let zw = src.i32v(&format!("{base}.zw"))?.into_owned();
+                let dw = src.f32(&format!("{base}.dw"))?.into_owned();
+                let balance = src.f32(&format!("{base}.s")).ok().map(|v| v.into_owned());
                 let lin = QuantizedLinear::from_codes(
                     codes, out_features, in_features, zw, dw, balance, self.cfg,
                 );

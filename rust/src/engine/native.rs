@@ -40,15 +40,20 @@ use super::builder::session_tag;
 /// exactly what vanilla decode would lease).
 struct DraftEngine {
     cfg: SpecConfig,
-    model: Transformer,
+    model: Arc<Transformer>,
     pool: KvPool,
 }
 
 pub struct NativeEngine {
-    model: Transformer,
+    model: Arc<Transformer>,
     spec: EngineSpec,
     pool: KvPool,
     draft: Option<DraftEngine>,
+    /// whether this engine's `MemoryReport` bills the (possibly shared)
+    /// model weights as bytes it added: true for solo engines and for
+    /// replica 0 of a `build_replicas` fleet, false for joiners that
+    /// only hold another `Arc` onto a model a sibling already billed
+    weights_owner: bool,
 }
 
 impl NativeEngine {
@@ -78,6 +83,28 @@ impl NativeEngine {
         pool_budget_bytes: Option<usize>,
         speculative: Option<(SpecConfig, Transformer)>,
     ) -> Result<Self> {
+        Self::shared(
+            Arc::new(model),
+            kv,
+            pool_budget_bytes,
+            speculative.map(|(sc, d)| (sc, Arc::new(d))),
+            true,
+        )
+    }
+
+    /// Engine over an **already-shared** model (and draft): the caller
+    /// holds the `Arc<Transformer>` and may hand clones of it to any
+    /// number of sibling engines — each gets a private `KvPool`, the
+    /// prepared weights exist once. `weights_owner` selects which
+    /// sibling bills the shared weights in its
+    /// [`MemoryReport::weight_bytes_incremental`] (exactly one should).
+    pub fn shared(
+        model: Arc<Transformer>,
+        kv: KvCacheConfig,
+        pool_budget_bytes: Option<usize>,
+        speculative: Option<(SpecConfig, Arc<Transformer>)>,
+        weights_owner: bool,
+    ) -> Result<Self> {
         let pool = KvPool::new(&model.cfg, &kv, pool_budget_bytes)?;
         let draft = match speculative {
             Some((cfg, draft_model)) => {
@@ -100,7 +127,7 @@ impl NativeEngine {
             execution: Execution::Native,
             kv,
         };
-        Ok(NativeEngine { model, spec, pool, draft })
+        Ok(NativeEngine { model, spec, pool, draft, weights_owner })
     }
 
     /// Escape hatch to the underlying transformer (engine-internal tools).
@@ -271,6 +298,11 @@ impl InferenceEngine for NativeEngine {
         };
         MemoryReport {
             weight_bytes: self.model.weight_bytes(),
+            weight_bytes_incremental: if self.weights_owner {
+                self.model.weight_bytes() + dw
+            } else {
+                0
+            },
             kv_bytes_per_session: self.pool.blocks_for(self.model.cfg.max_seq) * st.block_bytes,
             kv_pool_bytes: st.total_blocks * st.block_bytes,
             kv_pool_used_bytes: st.used_blocks() * st.block_bytes,

@@ -4,6 +4,7 @@
 //!   info                         artifact + engine health report
 //!   run      [--prompt 1,2,3]    greedy generation from a token prompt
 //!   serve    [--addr HOST:PORT]  TCP line-protocol serving (JSON in/out)
+//!            [--replicas N]      N workers over one shared weight set
 //!   eval     [--config w2*a8]    perplexity on the held-out corpus
 //!   zeroshot [--config w2*a8]    synthetic zero-shot task suite
 //!   calibrate [--config w2*a8]   learn distribution corrections (DLC)
@@ -35,7 +36,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use abq_llm::abq::{BitPlanes, OptLevel};
-use abq_llm::coordinator::{Request, Server, ServerConfig};
+use abq_llm::coordinator::{Frontend, FrontendConfig, SubmitRequest};
 use abq_llm::engine::{backend_tag, EngineBuilder, InferenceEngine, KvCacheConfig, SpecConfig};
 use abq_llm::eval;
 use abq_llm::quant::WAConfig;
@@ -109,7 +110,7 @@ fn main() -> Result<()> {
                  [--artifacts DIR] [--backend fp32|int8|int4|abq] [--config w2*a8] \
                  [--threads N] [--no-correction] \
                  [--spec-draft w2*a8 --spec-k 4] \
-                 [--prefix-cache [--session-dir DIR]] ..."
+                 [--prefix-cache [--session-dir DIR]] [--replicas N] ..."
             );
             Ok(())
         }
@@ -365,19 +366,28 @@ fn cmd_pjrt(_args: &Args) -> Result<()> {
 }
 
 /// TCP line-protocol server: one JSON object per line.
-/// Request:  `{"prompt": [1,2,3], "max_new": 16, "config": "w2sa8"}`
+/// Request:  `{"prompt": [1,2,3], "max_new": 16, "config": "w2sa8",
+///            "affinity": 42}` (`affinity` optional — sticky routing)
 /// Response: `{"id": 1, "tokens": [...], "queue_us": .., "prefill_us": ..,
 ///            "decode_us": ..}`
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7070");
     // load requested replicas: default = the requested backend + fp16 for
     // A/B. Backends without a WqAp artifact tag (int8, int4) route under
-    // their spec string.
+    // their spec string. `--replicas N` runs N copies of the primary
+    // config over one shared weight set (zero-copy mmap on artifact
+    // engines — docs/SERVING.md §multi-replica).
     let mut replicas: Vec<(String, Arc<dyn InferenceEngine>)> = Vec::new();
     let primary_spec = backend_spec(args)?;
     let primary_tag = backend_tag(&primary_spec).unwrap_or_else(|_| primary_spec.clone());
-    let primary_engine = builder_from(args)?.build_arc()?;
-    replicas.push((primary_tag.clone(), primary_engine));
+    let n_replicas = args.get_usize("replicas", 1).max(1);
+    if n_replicas > 1 {
+        for engine in builder_from(args)?.build_replicas(n_replicas)? {
+            replicas.push((primary_tag.clone(), engine));
+        }
+    } else {
+        replicas.push((primary_tag.clone(), builder_from(args)?.build_arc()?));
+    }
     if !args.has_flag("no-fp16") && primary_tag != "fp16" {
         let fp = builder_from(args)?.backend("fp32").build_arc()?;
         replicas.push(("fp16".to_string(), fp));
@@ -408,8 +418,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for (tag, engine) in &replicas {
         let mem = engine.memory_report();
         println!(
-            "  replica {tag}: {:.2} MB weights, {:.2} MB KV/session (full)",
+            "  replica {tag}: {:.2} MB weights ({:.2} MB incremental), {:.2} MB KV/session (full)",
             mem.weight_bytes as f64 / 1e6,
+            mem.weight_bytes_incremental as f64 / 1e6,
             mem.kv_bytes_per_session as f64 / 1e6
         );
         if let Some(st) = engine.kv_pool_status() {
@@ -431,9 +442,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
         }
     }
-    let server = Server::start(
+    let server = Frontend::start(
         replicas,
-        ServerConfig { default_tag, prefix_cache, session_dir, ..Default::default() },
+        FrontendConfig { default_tag, prefix_cache, session_dir, ..Default::default() },
     )?;
 
     let listener = TcpListener::bind(&addr)?;
@@ -463,12 +474,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 continue;
             }
             let max_new = j.get("max_new").and_then(|v| v.as_usize()).unwrap_or(16);
-            let mut req = Request::new(0, prompt, max_new);
+            let mut req = SubmitRequest::new(prompt, max_new);
             if let Some(c) = j.get("config").and_then(|v| v.as_str()) {
-                req.config = c.to_string();
+                req.config_tag = c.to_string();
             }
-            let rx = server.submit(req);
-            match rx.recv() {
+            if let Some(fp) = j.get("affinity").and_then(|v| v.as_f64()) {
+                req.session_affinity = Some(fp as u64);
+            }
+            let ticket = match server.submit(req) {
+                Ok(t) => t,
+                Err(e) => {
+                    writeln!(stream, "{{\"error\": \"{e}\"}}")?;
+                    continue;
+                }
+            };
+            match ticket.rx.recv() {
                 Ok(resp) => {
                     let out = json::obj(vec![
                         ("id", json::num(resp.id as f64)),
@@ -486,7 +506,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     text.retain(|c| c != '\n');
                     writeln!(stream, "{text}")?;
                 }
-                Err(_) => writeln!(stream, "{{\"error\": \"unroutable config\"}}")?,
+                Err(_) => writeln!(stream, "{{\"error\": \"request dropped\"}}")?,
             }
         }
         println!("client {peer} disconnected; metrics:\n{}", server.metrics.snapshot());

@@ -14,4 +14,4 @@ pub use kv_cache::{KvCache, KvStore};
 pub use kv_pool::{BlockRef, KvCacheConfig, KvPool, KvPoolStatus, PagedKvCache};
 pub use sampler::{argmax, log_prob, Sampler, Sampling};
 pub use transformer::{Block, BlockTap, BlockTrace, ForwardScratch, Transformer, LINEAR_NAMES};
-pub use weights::{Tensor, WeightPack};
+pub use weights::{PackSource, PackView, Tensor, WeightPack};

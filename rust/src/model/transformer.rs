@@ -25,7 +25,7 @@ use crate::quant::CorrectionSet;
 
 use super::config::ModelConfig;
 use super::kv_cache::KvStore;
-use super::weights::WeightPack;
+use super::weights::{PackSource, WeightPack};
 
 pub const LINEAR_NAMES: [&str; 7] = ["wq", "wk", "wv", "wo", "gate", "up", "down"];
 
@@ -305,24 +305,40 @@ impl Transformer {
         backend: &dyn LinearBackend,
         corrections: Option<&CorrectionSet>,
     ) -> Result<Self> {
-        let tok_emb = pack.f32("tok_emb")?;
-        let ln_f = pack.f32("ln_f")?;
-        let head = pack.f32("head")?;
+        Self::from_source_corrected(PackSource::Owned(pack), cfg, backend, corrections)
+    }
+
+    /// [`Transformer::from_pack_corrected`] generalized over a
+    /// [`PackSource`]: an owned pack or a zero-copy mmap-backed
+    /// [`crate::model::PackView`]. With a view, float tensors are
+    /// borrowed straight from the mapping while the backend packs them
+    /// (aligned data never touches the heap until the prepared form),
+    /// so N replicas can be built off one mapping without N
+    /// deserialization copies.
+    pub fn from_source_corrected(
+        src: PackSource<'_>,
+        cfg: ModelConfig,
+        backend: &dyn LinearBackend,
+        corrections: Option<&CorrectionSet>,
+    ) -> Result<Self> {
+        let tok_emb = src.f32("tok_emb")?.into_owned();
+        let ln_f = src.f32("ln_f")?.into_owned();
+        let head = src.f32("head")?.into_owned();
         let mut blocks = Vec::with_capacity(cfg.n_layers);
         for i in 0..cfg.n_layers {
             let get_lin = |name: &str| -> Result<Box<dyn LinearOp>> {
-                let wt = pack.get(&format!("blocks.{i}.{name}"))?;
-                let shape = wt.shape().to_vec();
+                let full = format!("blocks.{i}.{name}");
+                let shape = src.shape(&full)?;
                 if shape.len() != 2 {
                     bail!("linear {name} must be 2-D");
                 }
                 let (out_f, in_f) = (shape[0], shape[1]);
                 backend.prepare(
-                    wt.as_f32()?,
+                    &src.f32(&full)?,
                     out_f,
                     in_f,
                     &PrepareCtx {
-                        pack: Some(pack),
+                        pack: Some(src),
                         layer: i,
                         name,
                         correction: corrections.and_then(|cs| cs.get(i, name)),
@@ -330,8 +346,8 @@ impl Transformer {
                 )
             };
             blocks.push(Block {
-                ln1: pack.f32(&format!("blocks.{i}.ln1"))?,
-                ln2: pack.f32(&format!("blocks.{i}.ln2"))?,
+                ln1: src.f32(&format!("blocks.{i}.ln1"))?.into_owned(),
+                ln2: src.f32(&format!("blocks.{i}.ln2"))?.into_owned(),
                 wq: get_lin("wq")?,
                 wk: get_lin("wk")?,
                 wv: get_lin("wv")?,

@@ -15,11 +15,15 @@
 //! per exported quant config, the calibrated integer codes and scales
 //! (`q.<tag>.<block>.<linear>.{wq,zw,dw,s}`).
 
+use std::borrow::Cow;
 use std::collections::HashMap;
 use std::io::Read;
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
+
+use crate::runtime::mmap::MappedBytes;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Tensor {
@@ -192,6 +196,233 @@ impl WeightPack {
     }
 }
 
+/// Raw dtype tag of an indexed tensor (mirrors the wire encoding).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum RawDtype {
+    F32,
+    I32,
+    U8,
+}
+
+#[derive(Clone, Debug)]
+struct RawEntry {
+    dtype: RawDtype,
+    shape: Vec<usize>,
+    /// byte offset of the tensor data inside the backing buffer
+    offset: usize,
+}
+
+/// A zero-copy view over an `.abqw` buffer: the header is indexed once
+/// (name → dtype/shape/offset), tensor data stays in the backing
+/// [`MappedBytes`] and is borrowed on access.
+///
+/// The wire format does not align tensor data, so `f32`/`i32` accessors
+/// return [`Cow`]: a borrowed slice when the data happens to sit on a
+/// 4-byte boundary of the mapping, a decoded copy otherwise. `u8`
+/// tensors always borrow. Cloning a `PackView` is cheap on the data side
+/// (the `Arc<MappedBytes>` is shared; only the index is copied), so one
+/// mapping can back any number of replica preparations — the lifetime
+/// contract is documented in `docs/ENGINE_API.md` §mmap'd artifacts.
+#[derive(Clone, Debug)]
+pub struct PackView {
+    bytes: Arc<MappedBytes>,
+    entries: HashMap<String, RawEntry>,
+}
+
+impl PackView {
+    /// mmap `path` (heap-read fallback off Linux) and index its header.
+    pub fn open(path: &Path) -> Result<Self> {
+        let bytes = Arc::new(MappedBytes::open(path)?);
+        Self::index(bytes).with_context(|| format!("index weight pack {path:?}"))
+    }
+
+    /// Index an in-memory buffer (tests; in-memory packs).
+    pub fn from_vec(buf: Vec<u8>) -> Result<Self> {
+        Self::index(Arc::new(MappedBytes::from_vec(buf)))
+    }
+
+    fn index(bytes: Arc<MappedBytes>) -> Result<Self> {
+        let buf: &[u8] = &bytes;
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > buf.len() {
+                bail!("truncated weight pack at byte {}", *pos);
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 6)? != b"ABQW1\0" {
+            bail!("bad magic");
+        }
+        let n_tensors = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+        let mut entries = HashMap::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            let name_len = u16::from_le_bytes(take(&mut pos, 2)?.try_into()?) as usize;
+            let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())?;
+            let dtype = match take(&mut pos, 1)?[0] {
+                0 => RawDtype::F32,
+                1 => RawDtype::I32,
+                2 => RawDtype::U8,
+                d => bail!("unknown dtype {d} for {name}"),
+            };
+            let ndim = take(&mut pos, 1)?[0] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize);
+            }
+            let count: usize = shape.iter().product();
+            let elem = match dtype {
+                RawDtype::F32 | RawDtype::I32 => 4,
+                RawDtype::U8 => 1,
+            };
+            let offset = pos;
+            take(&mut pos, count * elem)?; // bounds-check the data region
+            entries.insert(name, RawEntry { dtype, shape, offset });
+        }
+        Ok(PackView { bytes, entries })
+    }
+
+    fn entry(&self, name: &str) -> Result<&RawEntry> {
+        self.entries.get(name).with_context(|| format!("missing tensor '{name}'"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    pub fn shape(&self, name: &str) -> Result<&[usize]> {
+        Ok(&self.entry(name)?.shape)
+    }
+
+    /// Borrow the tensor's f32 data when 4-byte aligned in the backing
+    /// buffer; decode a copy otherwise.
+    pub fn f32(&self, name: &str) -> Result<Cow<'_, [f32]>> {
+        let e = self.entry(name)?;
+        if e.dtype != RawDtype::F32 {
+            bail!("tensor '{name}' is not f32");
+        }
+        Ok(self.word_slice::<f32>(e, |c| f32::from_le_bytes(c.try_into().unwrap())))
+    }
+
+    /// Borrow the tensor's i32 data when aligned; decode otherwise.
+    pub fn i32v(&self, name: &str) -> Result<Cow<'_, [i32]>> {
+        let e = self.entry(name)?;
+        if e.dtype != RawDtype::I32 {
+            bail!("tensor '{name}' is not i32");
+        }
+        Ok(self.word_slice::<i32>(e, |c| i32::from_le_bytes(c.try_into().unwrap())))
+    }
+
+    /// u8 data always borrows straight out of the mapping.
+    pub fn u8v(&self, name: &str) -> Result<&[u8]> {
+        let e = self.entry(name)?;
+        if e.dtype != RawDtype::U8 {
+            bail!("tensor '{name}' is not u8");
+        }
+        let count: usize = e.shape.iter().product();
+        Ok(&self.bytes[e.offset..e.offset + count])
+    }
+
+    fn word_slice<T: Copy>(&self, e: &RawEntry, decode: fn(&[u8]) -> T) -> Cow<'_, [T]> {
+        let count: usize = e.shape.iter().product();
+        let raw = &self.bytes[e.offset..e.offset + count * 4];
+        let ptr = raw.as_ptr();
+        if (ptr as usize) % std::mem::align_of::<T>() == 0 {
+            // Safety: alignment just checked, length bounds-checked at
+            // index time, every bit pattern is a valid f32/i32, and the
+            // borrow is tied to `&self`, which keeps the Arc alive.
+            Cow::Borrowed(unsafe { std::slice::from_raw_parts(ptr as *const T, count) })
+        } else {
+            Cow::Owned(raw.chunks_exact(4).map(decode).collect())
+        }
+    }
+
+    /// Names of quant configs present (tags like `w2sa8`).
+    pub fn quant_tags(&self) -> Vec<String> {
+        let mut tags: Vec<String> = self
+            .entries
+            .keys()
+            .filter_map(|k| k.strip_prefix("q."))
+            .filter_map(|k| k.split('.').next())
+            .map(|s| s.to_string())
+            .collect();
+        tags.sort();
+        tags.dedup();
+        tags
+    }
+
+    /// Total bytes of the backing buffer (the whole `.abqw` file).
+    pub fn mapped_len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Whether the backing buffer is a kernel mapping (shared page-cache
+    /// pages) rather than a private heap read.
+    pub fn is_mapped(&self) -> bool {
+        self.bytes.is_mapped()
+    }
+
+    /// Another handle onto the same mapping (Arc clone + index copy).
+    pub fn share(&self) -> Self {
+        self.clone()
+    }
+}
+
+/// Either an owned [`WeightPack`] or a zero-copy [`PackView`] — the one
+/// argument type `Transformer::from_source_corrected` and backend
+/// `prepare` hooks consume, so model construction is identical for
+/// in-memory packs (calibration, tests) and mmap'd artifacts (serving).
+#[derive(Clone, Copy)]
+pub enum PackSource<'a> {
+    Owned(&'a WeightPack),
+    View(&'a PackView),
+}
+
+impl<'a> PackSource<'a> {
+    pub fn contains(&self, name: &str) -> bool {
+        match self {
+            PackSource::Owned(p) => p.tensors.contains_key(name),
+            PackSource::View(v) => v.contains(name),
+        }
+    }
+
+    pub fn shape(&self, name: &str) -> Result<Vec<usize>> {
+        match self {
+            PackSource::Owned(p) => Ok(p.get(name)?.shape().to_vec()),
+            PackSource::View(v) => Ok(v.shape(name)?.to_vec()),
+        }
+    }
+
+    pub fn f32(&self, name: &str) -> Result<Cow<'a, [f32]>> {
+        match self {
+            PackSource::Owned(p) => Ok(Cow::Borrowed(p.get(name)?.as_f32()?)),
+            PackSource::View(v) => v.f32(name),
+        }
+    }
+
+    pub fn i32v(&self, name: &str) -> Result<Cow<'a, [i32]>> {
+        match self {
+            PackSource::Owned(p) => Ok(Cow::Borrowed(p.get(name)?.as_i32()?)),
+            PackSource::View(v) => v.i32v(name),
+        }
+    }
+
+    pub fn u8v(&self, name: &str) -> Result<&'a [u8]> {
+        match self {
+            PackSource::Owned(p) => p.get(name)?.as_u8(),
+            PackSource::View(v) => v.u8v(name),
+        }
+    }
+
+    pub fn quant_tags(&self) -> Vec<String> {
+        match self {
+            PackSource::Owned(p) => p.quant_tags(),
+            PackSource::View(v) => v.quant_tags(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -250,5 +481,65 @@ mod tests {
         let mut good = sample_pack();
         good.truncate(good.len() - 2);
         assert!(WeightPack::parse(&good).is_err());
+    }
+
+    #[test]
+    fn view_matches_owned_parse() {
+        let bytes = sample_pack();
+        let owned = WeightPack::parse(&bytes).unwrap();
+        let view = PackView::from_vec(bytes).unwrap();
+        assert_eq!(&*view.f32("a").unwrap(), owned.get("a").unwrap().as_f32().unwrap());
+        assert_eq!(view.shape("a").unwrap(), owned.get("a").unwrap().shape());
+        assert_eq!(
+            view.u8v("q.w2sa8.0.wq").unwrap(),
+            owned.get("q.w2sa8.0.wq").unwrap().as_u8().unwrap()
+        );
+        assert_eq!(view.quant_tags(), owned.quant_tags());
+        assert!(view.contains("a") && !view.contains("nope"));
+        assert!(view.f32("q.w2sa8.0.wq").is_err(), "dtype mismatch must error");
+    }
+
+    #[test]
+    fn view_decodes_misaligned_words_correctly() {
+        // Every dtype through the view must match the owned parse even
+        // when the unaligned wire layout forces the Cow::Owned path —
+        // exercised with name lengths that shift data off 4-byte
+        // boundaries.
+        let mut p = WeightPack::default();
+        p.tensors.insert("x".into(), Tensor::F32(vec![0.5, -1.25, 3.75], vec![3]));
+        p.tensors.insert("yy".into(), Tensor::I32(vec![-9, 1 << 24], vec![2]));
+        p.tensors.insert("zzz".into(), Tensor::U8(vec![3, 1, 4, 1, 5], vec![5]));
+        let view = PackView::from_vec(p.to_bytes()).unwrap();
+        assert_eq!(&*view.f32("x").unwrap(), p.get("x").unwrap().as_f32().unwrap());
+        assert_eq!(&*view.i32v("yy").unwrap(), p.get("yy").unwrap().as_i32().unwrap());
+        assert_eq!(view.u8v("zzz").unwrap(), p.get("zzz").unwrap().as_u8().unwrap());
+    }
+
+    #[test]
+    fn view_open_maps_file_and_shares() {
+        let dir = std::env::temp_dir().join("abq_packview_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sample.abqw");
+        std::fs::write(&path, sample_pack()).unwrap();
+        let view = PackView::open(&path).unwrap();
+        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        assert!(view.is_mapped());
+        let twin = view.share();
+        assert_eq!(&*twin.f32("a").unwrap(), &*view.f32("a").unwrap());
+        assert_eq!(twin.mapped_len(), view.mapped_len());
+    }
+
+    #[test]
+    fn pack_source_unifies_owned_and_view() {
+        let bytes = sample_pack();
+        let owned = WeightPack::parse(&bytes).unwrap();
+        let view = PackView::from_vec(bytes).unwrap();
+        for src in [PackSource::Owned(&owned), PackSource::View(&view)] {
+            assert_eq!(&*src.f32("a").unwrap(), &[1.0, 2.0, 3.0, 4.5]);
+            assert_eq!(src.shape("a").unwrap(), vec![2, 2]);
+            assert_eq!(src.u8v("q.w2sa8.0.wq").unwrap(), &[7, 8, 9]);
+            assert_eq!(src.quant_tags(), vec!["w2sa8".to_string()]);
+            assert!(src.contains("a") && !src.contains("nope"));
+        }
     }
 }

@@ -1,0 +1,286 @@
+//! Read-only memory-mapped byte buffers for zero-copy artifact loading.
+//!
+//! [`MappedBytes`] maps a file with `mmap(2)` on Linux (x86_64/aarch64,
+//! via raw syscalls — the crate carries no libc binding) and falls back
+//! to an ordinary heap read everywhere else. Either way the result
+//! derefs to `&[u8]`, is `Send + Sync`, and lives until dropped, so an
+//! `Arc<MappedBytes>` can back any number of borrowed tensor views
+//! (`model::PackView`) across replica threads without copying the
+//! underlying weight artifact.
+//!
+//! Lifetime contract (docs/ENGINE_API.md §mmap'd artifacts): every view
+//! holds its own `Arc`, so the mapping outlives all borrows by
+//! construction; `munmap` happens only when the last `Arc` drops.
+
+use std::fs::File;
+use std::ops::Deref;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+enum Backing {
+    /// mmap'd region: base pointer + mapped length (page-rounded len is
+    /// what munmap needs; `len` below is the file length we expose).
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    Mapped { ptr: *const u8, map_len: usize },
+    Heap(Vec<u8>),
+}
+
+/// An immutable byte buffer backed by an mmap'd file when the platform
+/// supports it, or a heap copy otherwise. Dereferences to `&[u8]`.
+pub struct MappedBytes {
+    backing: Backing,
+    len: usize,
+}
+
+// The mapped region is read-only (PROT_READ, MAP_PRIVATE) and never
+// remapped after construction, so shared references are safe to send.
+unsafe impl Send for MappedBytes {}
+unsafe impl Sync for MappedBytes {}
+
+impl MappedBytes {
+    /// Map `path` read-only. Empty files and non-Linux platforms use a
+    /// heap buffer; mapping failures fall back to a heap read too, so
+    /// `open` only errors when the file itself is unreadable.
+    pub fn open(path: &Path) -> Result<Self> {
+        let file =
+            File::open(path).with_context(|| format!("open {} for mapping", path.display()))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len() as usize;
+        if len == 0 {
+            return Ok(Self { backing: Backing::Heap(Vec::new()), len: 0 });
+        }
+        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            if let Some(mapped) = Self::try_map(&file, len) {
+                return Ok(mapped);
+            }
+        }
+        drop(file);
+        let bytes =
+            std::fs::read(path).with_context(|| format!("read {} (mmap fallback)", path.display()))?;
+        let len = bytes.len();
+        Ok(Self { backing: Backing::Heap(bytes), len })
+    }
+
+    /// Wrap an owned buffer (used by in-memory packs and tests so both
+    /// backings go through the same view types).
+    pub fn from_vec(bytes: Vec<u8>) -> Self {
+        let len = bytes.len();
+        Self { backing: Backing::Heap(bytes), len }
+    }
+
+    /// Whether this buffer is an actual kernel mapping (false for the
+    /// heap fallback). `MemoryReport` uses this to decide whether weight
+    /// bytes are shared page-cache pages or private allocations.
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            #[cfg(all(
+                target_os = "linux",
+                any(target_arch = "x86_64", target_arch = "aarch64")
+            ))]
+            Backing::Mapped { .. } => true,
+            Backing::Heap(_) => false,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    fn try_map(file: &File, len: usize) -> Option<Self> {
+        use std::os::fd::AsRawFd;
+        let fd = file.as_raw_fd();
+        // page-round the mapping length; the tail of the last page reads
+        // as zeros, which we never expose (self.len caps the slice)
+        let page = 4096usize;
+        let map_len = len.div_ceil(page) * page;
+        let addr = unsafe { sys_mmap(map_len, fd) };
+        // MAP_FAILED is -1; any address in the top page is an errno
+        if addr == usize::MAX || addr == 0 || addr > usize::MAX - page {
+            return None;
+        }
+        Some(Self { backing: Backing::Mapped { ptr: addr as *const u8, map_len }, len })
+    }
+}
+
+impl Deref for MappedBytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(all(
+                target_os = "linux",
+                any(target_arch = "x86_64", target_arch = "aarch64")
+            ))]
+            Backing::Mapped { ptr, .. } => unsafe {
+                std::slice::from_raw_parts(*ptr, self.len)
+            },
+            Backing::Heap(v) => v,
+        }
+    }
+}
+
+impl Drop for MappedBytes {
+    fn drop(&mut self) {
+        match &self.backing {
+            #[cfg(all(
+                target_os = "linux",
+                any(target_arch = "x86_64", target_arch = "aarch64")
+            ))]
+            Backing::Mapped { ptr, map_len } => unsafe {
+                sys_munmap(*ptr as usize, *map_len);
+            },
+            Backing::Heap(_) => {}
+        }
+    }
+}
+
+impl std::fmt::Debug for MappedBytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MappedBytes")
+            .field("len", &self.len)
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+// -- raw syscalls (no libc dependency) -----------------------------------
+//
+// mmap(addr=0, len, PROT_READ, MAP_PRIVATE, fd, offset=0) and
+// munmap(addr, len). Only compiled on linux x86_64/aarch64; everything
+// else takes the heap path above.
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+unsafe fn sys_mmap(len: usize, fd: i32) -> usize {
+    const SYS_MMAP: usize = 9;
+    const PROT_READ: usize = 1;
+    const MAP_PRIVATE: usize = 2;
+    let ret: usize;
+    std::arch::asm!(
+        "syscall",
+        inlateout("rax") SYS_MMAP => ret,
+        in("rdi") 0usize,
+        in("rsi") len,
+        in("rdx") PROT_READ,
+        in("r10") MAP_PRIVATE,
+        in("r8") fd as usize,
+        in("r9") 0usize,
+        lateout("rcx") _,
+        lateout("r11") _,
+        options(nostack),
+    );
+    ret
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+unsafe fn sys_munmap(addr: usize, len: usize) {
+    const SYS_MUNMAP: usize = 11;
+    let _ret: usize;
+    std::arch::asm!(
+        "syscall",
+        inlateout("rax") SYS_MUNMAP => _ret,
+        in("rdi") addr,
+        in("rsi") len,
+        lateout("rcx") _,
+        lateout("r11") _,
+        options(nostack),
+    );
+}
+
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+unsafe fn sys_mmap(len: usize, fd: i32) -> usize {
+    const SYS_MMAP: usize = 222;
+    const PROT_READ: usize = 1;
+    const MAP_PRIVATE: usize = 2;
+    let ret: usize;
+    std::arch::asm!(
+        "svc 0",
+        inlateout("x0") 0usize => ret,
+        in("x1") len,
+        in("x2") PROT_READ,
+        in("x3") MAP_PRIVATE,
+        in("x4") fd as usize,
+        in("x5") 0usize,
+        in("x8") SYS_MMAP,
+        options(nostack),
+    );
+    ret
+}
+
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+unsafe fn sys_munmap(addr: usize, len: usize) {
+    const SYS_MUNMAP: usize = 215;
+    let _ret: usize;
+    std::arch::asm!(
+        "svc 0",
+        inlateout("x0") addr => _ret,
+        in("x1") len,
+        in("x8") SYS_MUNMAP,
+        options(nostack),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("abq_mmap_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn roundtrips_file_contents() {
+        let data: Vec<u8> = (0..10_000u32).flat_map(|i| i.to_le_bytes()).collect();
+        let p = tmp("roundtrip.bin", &data);
+        let m = MappedBytes::open(&p).unwrap();
+        assert_eq!(m.len(), data.len());
+        assert_eq!(&m[..], &data[..]);
+        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        assert!(m.is_mapped(), "linux builds should take the mmap path");
+    }
+
+    #[test]
+    fn empty_file_is_heap_backed() {
+        let p = tmp("empty.bin", &[]);
+        let m = MappedBytes::open(&p).unwrap();
+        assert!(m.is_empty());
+        assert!(!m.is_mapped());
+        assert_eq!(&m[..], &[] as &[u8]);
+    }
+
+    #[test]
+    fn from_vec_wraps_without_copy_semantics_change() {
+        let m = MappedBytes::from_vec(vec![1, 2, 3]);
+        assert_eq!(&m[..], &[1, 2, 3]);
+        assert!(!m.is_mapped());
+    }
+
+    #[test]
+    fn survives_many_concurrent_readers() {
+        let data: Vec<u8> = (0..4096u32).flat_map(|i| i.to_le_bytes()).collect();
+        let p = tmp("shared.bin", &data);
+        let m = std::sync::Arc::new(MappedBytes::open(&p).unwrap());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                let want = data.clone();
+                std::thread::spawn(move || assert_eq!(&m[..], &want[..]))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -10,9 +10,11 @@
 pub mod artifacts;
 #[cfg(feature = "pjrt")]
 pub mod engine;
+pub mod mmap;
 pub mod session;
 
 pub use artifacts::{ArtifactManifest, CorrectionEntry, InputKind};
+pub use mmap::MappedBytes;
 pub use session::{SessionFile, SessionFingerprint};
 #[cfg(feature = "pjrt")]
 pub use engine::{KvState, PjrtEngine, Program};

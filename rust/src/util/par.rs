@@ -18,6 +18,15 @@
 //!   its ranges inline on its own core instead of blocking idle, and a
 //!   worker that itself calls into `par` (nested parallelism) runs the
 //!   nested job inline, so the pool can never deadlock on itself.
+//!
+//! Besides the process-global pool there are **dedicated pools**
+//! ([`dedicated_pool`]): a serving replica thread binds one with
+//! [`PoolHandle::bind_current_thread`] so its GEMM dispatches never
+//! contend with sibling replicas on the global dispatch lock (contention
+//! would silently degrade a whole replica to inline execution). Binding
+//! is per-thread and reversible; a retired replica shuts its pool down
+//! ([`PoolHandle::shutdown`]) so the worker threads exit instead of
+//! parking forever.
 
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -92,6 +101,9 @@ struct State {
     job: Option<Job>,
     remaining: usize,
     panicked: bool,
+    /// set by [`PoolHandle::shutdown`]: workers exit their loop, new
+    /// dispatches fall back to inline execution
+    shutdown: bool,
 }
 
 struct Pool {
@@ -111,30 +123,90 @@ thread_local! {
     /// its own slot of a job. Any nested `par` call made while set runs
     /// inline — the pool never waits on itself.
     static IN_PAR_REGION: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+
+    /// The dedicated pool bound to this thread, when any. `None` routes
+    /// dispatches to the process-global pool.
+    static BOUND_POOL: std::cell::Cell<Option<&'static Pool>> =
+        const { std::cell::Cell::new(None) };
 }
 
 fn in_par_region() -> bool {
     IN_PAR_REGION.with(|f| f.get())
 }
 
+fn spawn_pool(workers: usize, name_prefix: String) -> &'static Pool {
+    let p: &'static Pool = Box::leak(Box::new(Pool {
+        state: Mutex::new(State {
+            epoch: 0,
+            job: None,
+            remaining: 0,
+            panicked: false,
+            shutdown: false,
+        }),
+        work_cv: Condvar::new(),
+        done_cv: Condvar::new(),
+        dispatch: Mutex::new(()),
+        workers,
+    }));
+    for slot in 1..=workers {
+        std::thread::Builder::new()
+            .name(format!("{name_prefix}-{slot}"))
+            .spawn(move || worker_loop(p, slot))
+            .expect("spawn abq par worker");
+    }
+    p
+}
+
 fn pool() -> &'static Pool {
-    *POOL.get_or_init(|| {
-        let workers = num_threads().saturating_sub(1);
-        let p: &'static Pool = Box::leak(Box::new(Pool {
-            state: Mutex::new(State { epoch: 0, job: None, remaining: 0, panicked: false }),
-            work_cv: Condvar::new(),
-            done_cv: Condvar::new(),
-            dispatch: Mutex::new(()),
-            workers,
-        }));
-        for slot in 1..=workers {
-            std::thread::Builder::new()
-                .name(format!("abq-par-{slot}"))
-                .spawn(move || worker_loop(p, slot))
-                .expect("spawn abq par worker");
-        }
-        p
-    })
+    *POOL.get_or_init(|| spawn_pool(num_threads().saturating_sub(1), "abq-par".to_string()))
+}
+
+/// The pool a dispatch on this thread should use: the bound dedicated
+/// pool when one is set, the process-global pool otherwise.
+fn current_pool() -> &'static Pool {
+    BOUND_POOL.with(|b| b.get()).unwrap_or_else(pool)
+}
+
+/// Handle to a dedicated worker pool created by [`dedicated_pool`].
+/// Copyable; the pool itself is `'static` (its small control block is
+/// intentionally leaked — worker threads exit on [`PoolHandle::shutdown`],
+/// which is the resource that matters).
+#[derive(Clone, Copy)]
+pub struct PoolHandle {
+    pool: &'static Pool,
+}
+
+impl PoolHandle {
+    /// Route this thread's `par_*` dispatches through this pool instead
+    /// of the process-global one (until [`unbind_current_thread`] or a
+    /// later bind). A serving replica thread binds its own pool once at
+    /// startup.
+    pub fn bind_current_thread(&self) {
+        BOUND_POOL.with(|b| b.set(Some(self.pool)));
+    }
+
+    /// Stop the pool's workers. Threads currently mid-job finish it
+    /// first; afterwards any dispatch through a thread still bound to
+    /// this pool simply runs inline. Idempotent.
+    pub fn shutdown(&self) {
+        let mut g = self.pool.state.lock().unwrap();
+        g.shutdown = true;
+        self.pool.work_cv.notify_all();
+    }
+}
+
+/// Create a dedicated pool with `workers` parked worker threads (the
+/// dispatcher's own slot comes on top, so `workers = n - 1` gives
+/// `n`-way parallelism). `workers = 0` is valid: every dispatch through
+/// it runs inline — useful when replicas should not oversubscribe cores.
+pub fn dedicated_pool(workers: usize, name: &str) -> PoolHandle {
+    PoolHandle { pool: spawn_pool(workers, format!("abq-par-{name}")) }
+}
+
+/// Unbind any dedicated pool from this thread, restoring dispatch to the
+/// process-global pool.
+pub fn unbind_current_thread() {
+    BOUND_POOL.with(|b| b.set(None));
 }
 
 fn worker_loop(p: &'static Pool, slot: usize) {
@@ -144,6 +216,9 @@ fn worker_loop(p: &'static Pool, slot: usize) {
         let job = {
             let mut g = p.state.lock().unwrap();
             loop {
+                if g.shutdown {
+                    return;
+                }
                 if g.epoch != seen {
                     if let Some(j) = g.job {
                         seen = g.epoch;
@@ -175,12 +250,16 @@ fn worker_loop(p: &'static Pool, slot: usize) {
 /// dispatcher currently owns the pool — the caller then computes inline
 /// on its own core instead of blocking idle (concurrent engine threads
 /// each make progress; the pool accelerates the uncontended case).
-fn run_job(f: &(dyn Fn(usize) + Sync), slots: usize) -> bool {
-    let p = pool();
+fn run_job(p: &'static Pool, f: &(dyn Fn(usize) + Sync), slots: usize) -> bool {
     let guard = match p.dispatch.try_lock() {
         Ok(g) => g,
         Err(_) => return false,
     };
+    if p.state.lock().unwrap().shutdown {
+        // a retired dedicated pool: its workers are gone, so publishing a
+        // job would hang — the caller computes every range inline instead
+        return false;
+    }
     // Erase the borrow lifetime (fat pointer reinterpret): workers only
     // dereference while this function is blocked below, so `f` strictly
     // outlives every use.
@@ -237,7 +316,7 @@ where
         f(0, n);
         return;
     }
-    let p = pool();
+    let p = current_pool();
     let slots = (p.workers + 1).min(threads).min(n);
     if slots <= 1 {
         f(0, n);
@@ -252,7 +331,7 @@ where
         let hi = (lo + per).min(n);
         f(lo, hi);
     };
-    if !run_job(&run, slots) {
+    if !run_job(p, &run, slots) {
         // pool owned by a concurrent dispatcher: cover every range inline
         for slot in 0..slots {
             run(slot);
@@ -384,6 +463,59 @@ mod tests {
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, want + i);
         }
+    }
+
+    #[test]
+    fn dedicated_pool_binds_and_computes_correctly() {
+        let h = dedicated_pool(2, "test-ded");
+        let t = std::thread::spawn(move || {
+            h.bind_current_thread();
+            let out = par_map_indexed(300, |i| i * 3);
+            unbind_current_thread();
+            out
+        });
+        assert_eq!(t.join().unwrap(), (0..300).map(|i| i * 3).collect::<Vec<_>>());
+        h.shutdown();
+    }
+
+    #[test]
+    fn shutdown_pool_falls_back_inline() {
+        let h = dedicated_pool(1, "test-shut");
+        h.shutdown();
+        let t = std::thread::spawn(move || {
+            h.bind_current_thread();
+            // workers are gone; dispatch must fall back inline, not hang
+            let out = par_map_indexed(64, |i| i + 1);
+            unbind_current_thread();
+            out
+        });
+        assert_eq!(t.join().unwrap(), (1..=64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn dedicated_pools_are_isolated_across_threads() {
+        // two bound threads dispatch concurrently; with separate pools
+        // neither falls back due to the *other's* dispatch lock, and both
+        // results are exact either way
+        let a = dedicated_pool(1, "test-iso-a");
+        let b = dedicated_pool(1, "test-iso-b");
+        let run = |h: PoolHandle, mult: usize| {
+            std::thread::spawn(move || {
+                h.bind_current_thread();
+                let mut sum = 0usize;
+                for _ in 0..50 {
+                    sum = par_map_indexed(200, |i| i * mult).iter().sum();
+                }
+                unbind_current_thread();
+                sum
+            })
+        };
+        let (ta, tb) = (run(a, 2), run(b, 3));
+        let base: usize = (0..200).sum();
+        assert_eq!(ta.join().unwrap(), base * 2);
+        assert_eq!(tb.join().unwrap(), base * 3);
+        a.shutdown();
+        b.shutdown();
     }
 
     #[test]

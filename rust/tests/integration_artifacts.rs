@@ -12,7 +12,7 @@
 
 use std::path::Path;
 
-use abq_llm::coordinator::{Request, Server, ServerConfig};
+use abq_llm::coordinator::{Server, ServerConfig, SubmitRequest};
 use abq_llm::engine::{EngineBuilder, InferenceEngine};
 use abq_llm::eval;
 
@@ -162,13 +162,13 @@ fn serving_on_calibrated_quant_model() {
     )
     .unwrap();
     let table = eval::corpus::build_transition_table(eval::corpus::TABLE_SEED);
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for i in 0..4 {
         let prompt = eval::corpus::generate_tokens(&table, 12, 100 + i);
-        rxs.push(server.submit(Request::new(0, prompt, 8)));
+        tickets.push(server.submit(SubmitRequest::new(prompt, 8)).unwrap());
     }
-    for rx in rxs {
-        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+    for t in tickets {
+        let resp = t.rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
         assert_eq!(resp.tokens.len(), 8);
     }
     server.shutdown();

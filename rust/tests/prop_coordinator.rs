@@ -4,11 +4,11 @@
 //! preemption-requeue completeness under a starved KV pool.
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use abq_llm::coordinator::request::QueuedRequest;
 use abq_llm::coordinator::{
-    Admission, Batcher, BatcherConfig, Request, Scheduler, SchedulerConfig,
+    Admission, Batcher, BatcherConfig, Scheduler, SchedulerConfig, SubmitRequest,
 };
 use abq_llm::engine::{EngineBuilder, InferenceEngine};
 use abq_llm::model::{KvCacheConfig, ModelConfig};
@@ -26,10 +26,10 @@ const MICRO: ModelConfig = ModelConfig {
 };
 
 fn qr(id: u64, plen: usize, max_new: usize) -> QueuedRequest {
-    QueuedRequest {
-        req: Request::new(id, (0..plen).map(|i| (i % 60) as u32 + 1).collect(), max_new),
-        arrived: Instant::now(),
-    }
+    QueuedRequest::new(
+        id,
+        SubmitRequest::new((0..plen).map(|i| (i % 60) as u32 + 1).collect(), max_new),
+    )
 }
 
 #[test]
@@ -49,7 +49,7 @@ fn prop_batcher_never_loses_duplicates_or_reorders() {
             let cap = usize_in(rng, 1, 12);
             let batch = b.drain(cap);
             assert!(batch.len() <= max_batch.min(cap));
-            drained.extend(batch.into_iter().map(|q| q.req.id));
+            drained.extend(batch.into_iter().map(|q| q.id));
         }
         // exactly the pushed ids, in FIFO order
         assert_eq!(drained, (0..total as u64).collect::<Vec<_>>());
@@ -88,6 +88,7 @@ fn prop_scheduler_completes_every_request_exactly() {
                         backlog.push(qr);
                         break;
                     }
+                    Admission::Routed(_) => unreachable!("schedulers never route"),
                 }
                 assert!(sched.n_active() <= max_active, "capacity invariant");
             }
@@ -134,6 +135,7 @@ fn admitted_at_budget(bits: u8, budget: usize) -> usize {
         match adm {
             Admission::Admitted => n += 1,
             Admission::Deferred(_) => break,
+            Admission::Routed(_) => unreachable!("schedulers never route"),
         }
         assert!(n <= 10_000, "runaway admission");
     }
@@ -185,6 +187,7 @@ fn preemption_requeue_completes_all_requests() {
                     backlog.push(qr);
                     break;
                 }
+                Admission::Routed(_) => unreachable!("schedulers never route"),
             }
         }
         sched.step().unwrap();
@@ -203,18 +206,21 @@ fn preemption_requeue_completes_all_requests() {
 
 #[test]
 fn prop_router_round_robin_is_fair() {
-    use abq_llm::coordinator::Router;
+    use abq_llm::coordinator::{RequestMeta, Router};
     check("router", 32, |rng| {
         let mut r = Router::new("a");
         let n_replicas = usize_in(rng, 1, 5);
-        for i in 0..n_replicas {
-            r.register("a", i);
+        for _ in 0..n_replicas {
+            r.register("a");
         }
         let rounds = usize_in(rng, 1, 8);
         let mut counts = vec![0usize; n_replicas];
+        let m = RequestMeta { config_tag: "a", session_affinity: None, prompt_len: 4 };
         for _ in 0..rounds * n_replicas {
-            counts[r.route("a").unwrap()] += 1;
+            counts[r.route(&m).unwrap().0] += 1;
         }
+        // equal load everywhere → the bounded-cursor tie-breaker must
+        // spread placements perfectly evenly
         assert!(counts.iter().all(|&c| c == rounds), "fair round robin {counts:?}");
     });
 }

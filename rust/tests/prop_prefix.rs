@@ -17,10 +17,9 @@
 //!     configs.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use abq_llm::coordinator::request::QueuedRequest;
-use abq_llm::coordinator::{Admission, Request, Scheduler, SchedulerConfig};
+use abq_llm::coordinator::{Admission, Scheduler, SchedulerConfig, SubmitRequest};
 use abq_llm::engine::{
     EngineBuilder, EngineSession, InferenceEngine, KvCacheConfig, SessionFile, SpecConfig,
 };
@@ -54,7 +53,7 @@ fn engine_with(
 }
 
 fn qr(id: u64, prompt: Vec<u32>, max_new: usize) -> QueuedRequest {
-    QueuedRequest { req: Request::new(id, prompt, max_new), arrived: Instant::now() }
+    QueuedRequest::new(id, SubmitRequest::new(prompt, max_new))
 }
 
 fn argmax(row: &[f32]) -> u32 {
@@ -244,6 +243,7 @@ fn shared_system_prompt_at_least_doubles_admission_capacity() {
             match sched.admit(qr(id, p, 4), id).unwrap() {
                 Admission::Admitted => n += 1,
                 Admission::Deferred(_) => break,
+                Admission::Routed(_) => unreachable!("schedulers never route"),
             }
         }
         n
@@ -301,6 +301,7 @@ fn prop_prefix_churn_never_leaks_or_aliases() {
                             backlog.push(q);
                             break;
                         }
+                        Admission::Routed(_) => unreachable!("schedulers never route"),
                     }
                 }
                 sched.step().unwrap();

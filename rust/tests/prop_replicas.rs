@@ -1,0 +1,141 @@
+//! Property tests for multi-replica serving (docs/SERVING.md
+//! §multi-replica): a fleet of replicas built over one shared weight set
+//! must be **transparent** — kill a random replica mid-stream and every
+//! request still completes, with greedy output bit-identical to a
+//! single-replica run of the same requests; no KV block leaks on any
+//! surviving replica; and the shared weights are counted once
+//! (`MemoryReport::weight_bytes_incremental` ≈ 0 for replica 1+).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use abq_llm::coordinator::{Frontend, FrontendConfig, ReplicaId, SubmitRequest};
+use abq_llm::engine::{EngineBuilder, InferenceEngine};
+use abq_llm::model::ModelConfig;
+use abq_llm::util::prop::{check, usize_in};
+
+const MICRO: ModelConfig = ModelConfig {
+    name: "micro",
+    vocab: 64,
+    d_model: 16,
+    n_layers: 1,
+    n_heads: 2,
+    d_ff: 32,
+    max_seq: 48,
+    rope_base: 10000.0,
+};
+
+fn build_fleet(n: usize) -> Vec<Arc<dyn InferenceEngine>> {
+    EngineBuilder::new()
+        .random_weights(MICRO, 77)
+        .backend("fp32")
+        .build_replicas(n)
+        .unwrap()
+}
+
+fn start(engines: Vec<Arc<dyn InferenceEngine>>) -> Frontend {
+    let fleet = engines.into_iter().map(|e| ("fp16".to_string(), e)).collect();
+    Frontend::start(fleet, FrontendConfig::default()).unwrap()
+}
+
+fn prompts(n_requests: usize) -> Vec<(Vec<u32>, usize)> {
+    (0..n_requests)
+        .map(|i| {
+            let prompt: Vec<u32> = (0..3 + i % 4).map(|t| ((t * 7 + i) % 60) as u32 + 1).collect();
+            (prompt, 4 + i % 3)
+        })
+        .collect()
+}
+
+/// Run every request through `fleet_size` replicas, optionally retiring
+/// one mid-stream, and return tokens keyed by prompt index.
+fn serve(
+    fleet_size: usize,
+    kill: Option<ReplicaId>,
+    reqs: &[(Vec<u32>, usize)],
+) -> HashMap<usize, Vec<u32>> {
+    let engines = build_fleet(fleet_size);
+    let handles: Vec<Arc<dyn InferenceEngine>> = engines.clone();
+    let front = start(engines);
+    let tickets: Vec<_> = reqs
+        .iter()
+        .map(|(p, max_new)| front.submit(SubmitRequest::new(p.clone(), *max_new)).unwrap())
+        .collect();
+    if let Some(id) = kill {
+        front.retire(id).unwrap();
+    }
+    let mut out = HashMap::new();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let resp = t
+            .rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("every request must complete despite replica death");
+        out.insert(i, resp.tokens);
+    }
+    front.shutdown();
+    // no block leaks on any replica that is still around
+    for e in &handles {
+        let st = e.kv_pool_status().expect("native engines have pools");
+        assert_eq!(st.used_blocks(), 0, "KV blocks leaked after serving");
+    }
+    out
+}
+
+#[test]
+fn prop_replica_death_is_lossless_and_bit_identical() {
+    // the greedy streams of a 2-replica fleet that loses a random
+    // replica mid-stream must match a solo replica serving the same
+    // requests (same ids → same sampling seeds → same streams)
+    check("replica-death", 6, |rng| {
+        let reqs = prompts(usize_in(rng, 4, 10));
+        let baseline = serve(1, None, &reqs);
+        let victim = ReplicaId(usize_in(rng, 0, 1));
+        let survived = serve(2, Some(victim), &reqs);
+        assert_eq!(baseline.len(), survived.len());
+        for (i, tokens) in &baseline {
+            assert_eq!(
+                survived.get(i),
+                Some(tokens),
+                "request {i}: stream diverged across replica death"
+            );
+        }
+    });
+}
+
+#[test]
+fn replicas_share_weights_and_report_incremental_bytes_once() {
+    let engines = build_fleet(3);
+    let owner = engines[0].memory_report();
+    assert!(owner.weight_bytes > 0);
+    assert_eq!(
+        owner.weight_bytes_incremental, owner.weight_bytes,
+        "replica 0 owns the (undrafted) model"
+    );
+    for (i, e) in engines.iter().enumerate().skip(1) {
+        let m = e.memory_report();
+        assert_eq!(m.weight_bytes, owner.weight_bytes, "same model, same resident size");
+        assert_eq!(
+            m.weight_bytes_incremental, 0,
+            "replica {i} only holds an Arc onto the shared weights"
+        );
+    }
+    // summing incremental bytes across the fleet counts the model once
+    let fleet_total: usize =
+        engines.iter().map(|e| e.memory_report().weight_bytes_incremental).sum();
+    assert_eq!(fleet_total, owner.weight_bytes);
+}
+
+#[test]
+fn retire_with_no_survivor_drops_channels_instead_of_hanging() {
+    let front = start(build_fleet(1));
+    let t = front.submit(SubmitRequest::new(vec![1, 2, 3], 64)).unwrap();
+    front.retire(ReplicaId(0)).unwrap();
+    // the lone replica is gone: either the response raced out before the
+    // retire landed, or the channel is dropped (a visible disconnect) —
+    // never a hang
+    if let Ok(resp) = t.rx.recv_timeout(Duration::from_secs(30)) {
+        assert!(!resp.tokens.is_empty());
+    }
+    front.shutdown();
+}

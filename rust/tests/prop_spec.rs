@@ -15,10 +15,9 @@
 //!   decode on quantized paged KV at random block sizes.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use abq_llm::coordinator::{
-    Admission, QueuedRequest, Request, Response, Scheduler, SchedulerConfig,
+    Admission, QueuedRequest, Response, Scheduler, SchedulerConfig, SubmitRequest,
 };
 use abq_llm::engine::{
     generate, EngineBuilder, EngineSession, InferenceEngine, KvCacheConfig, SpecConfig,
@@ -239,9 +238,8 @@ fn run_scheduler_to_completion(
 ) -> (Vec<Response>, u64) {
     let mut s = Scheduler::new(engine, SchedulerConfig { max_active, ..Default::default() });
     let mut waiting: Vec<QueuedRequest> = (0..n_requests)
-        .map(|id| QueuedRequest {
-            req: Request::new(id, vec![1, 2, (3 + id % 20) as u32, 7], max_new),
-            arrived: Instant::now(),
+        .map(|id| {
+            QueuedRequest::new(id, SubmitRequest::new(vec![1, 2, (3 + id % 20) as u32, 7], max_new))
         })
         .collect();
     waiting.reverse(); // pop() serves in id order
@@ -253,6 +251,7 @@ fn run_scheduler_to_completion(
                     waiting.push(back);
                     break;
                 }
+                Admission::Routed(_) => unreachable!("schedulers never route"),
             }
         }
         if s.idle() && waiting.is_empty() {

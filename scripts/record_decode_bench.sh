@@ -12,7 +12,9 @@
 # Set ABQ_BENCH_FAST=1 for a short smoke run, ABQ_KV_BITS=8|4 to measure
 # the quantized paged-KV read path, ABQ_SPEC=<draft>:<k> for the
 # self-speculative rung, ABQ_PREFIX=1 for the prefix-cache rung
-# (shared-system-prompt TTFT + admission capacity), and
+# (shared-system-prompt TTFT + admission capacity), ABQ_REPLICAS=N for
+# the multi-replica saturation rung (requests/s + p95 TTFT at 1 vs N
+# replicas over one shared weight set), and
 # ABQ_ISA=scalar|avx2|avx512|neon to lower the SIMD dispatch ceiling —
 # record a `pre` run with ABQ_ISA=scalar and a `post` run without it for
 # a scalar-vs-SIMD pair on the same machine (each entry stores the
