@@ -27,6 +27,12 @@
 //! fixed burst against 1 replica vs N replicas sharing one weight set,
 //! at a fixed per-replica concurrency (the latency-SLO proxy). CI sets
 //! `ABQ_REPLICAS=2` on every PR.
+//!
+//! `ABQ_AUTOPILOT=1` adds an adaptive-precision overload rung
+//! (`docs/SERVING.md` §adaptive precision): the same burst against a
+//! fixed top-rung config vs the default ladder under an unmeetable TTFT
+//! SLO, recording req/s and how many downshifts the autopilot took to
+//! shed the load. CI's bench-smoke job sets this too.
 
 use std::time::Instant;
 
@@ -229,6 +235,13 @@ fn main() {
         }
     }
 
+    // adaptive-precision overload rung: ABQ_AUTOPILOT=1 (fixed top-rung
+    // config vs the default ladder under an unmeetable TTFT SLO —
+    // docs/SERVING.md §adaptive precision). CI sets this on every PR.
+    if std::env::var("ABQ_AUTOPILOT").is_ok_and(|v| v == "1") {
+        run_autopilot_rung(&mut rows);
+    }
+
     write_results("decode_hotpath", &Json::Arr(rows.clone()));
     record(&rows, steps, kv_bits);
 }
@@ -285,7 +298,11 @@ fn run_replica_rung(kv: KvCacheConfig, n: usize, rows: &mut Vec<Json>) {
             assert_eq!(r.tokens.len(), max_new, "saturation rung lost tokens");
         }
         let secs = t0.elapsed().as_secs_f64();
-        let p95 = front.metrics.histogram_quantile_us("server.ttft_us", 0.95);
+        // every request completed above, so the histogram is non-empty
+        let p95 = front
+            .metrics
+            .histogram_quantile_us("server.ttft_us", 0.95)
+            .expect("completed burst must have TTFT observations");
         front.shutdown();
         (requests as f64 / secs.max(1e-12), p95, incremental)
     };
@@ -307,6 +324,91 @@ fn run_replica_rung(kv: KvCacheConfig, n: usize, rows: &mut Vec<Json>) {
         ("p95_ttft_us_1", num(p95_1 as f64)),
         ("p95_ttft_us_n", num(p95_n as f64)),
         ("shared_weight_incremental_bytes", num(incremental as f64)),
+    ]));
+}
+
+/// The adaptive-precision overload rung: the same burst served by (a) a
+/// fixed deployment pinned to the ladder's most precise rung and (b) the
+/// default ladder (`w6a6@kv8 → w4a4@kv8 → w2*a8@kv4`) under a TTFT SLO
+/// the burst cannot meet, so the autopilot sheds precision for
+/// throughput. Records both req/s, the downshift/upshift counts and the
+/// rung the pilot settled on — the overload curve `BENCH_decode.json`
+/// keeps per commit. Every response is still length-checked: migration
+/// must never lose tokens.
+fn run_autopilot_rung(rows: &mut Vec<Json>) {
+    use abq_llm::coordinator::{AutopilotConfig, Frontend, FrontendConfig, SubmitRequest};
+    use abq_llm::engine::Ladder;
+
+    let requests = 24usize;
+    let max_new = 8usize;
+    let fcfg = || FrontendConfig {
+        default_tag: "bench".to_string(),
+        max_active: 4,
+        pool_threads: Some(1),
+        ..Default::default()
+    };
+    let burst = |front: &Frontend| -> f64 {
+        let t0 = Instant::now();
+        let tickets: Vec<_> = (0..requests)
+            .map(|i| {
+                let mut p = PROMPT.to_vec();
+                p.push((i % 50) as u32 + 1);
+                front.submit(SubmitRequest::new(p, max_new)).unwrap()
+            })
+            .collect();
+        for t in tickets {
+            let r = t.wait().unwrap();
+            assert_eq!(r.tokens.len(), max_new, "autopilot rung lost tokens");
+        }
+        requests as f64 / t0.elapsed().as_secs_f64().max(1e-12)
+    };
+
+    // fixed baseline: pinned to the ladder's most precise rung
+    let fixed = EngineBuilder::new()
+        .random_weights(BENCH_MODEL, 42)
+        .backend("abq:w6a6")
+        .kv_cache(KvCacheConfig { bits: 8, ..KvCacheConfig::FP32 })
+        .build_arc()
+        .unwrap_or_else(|e| panic!("autopilot rung: {e}"));
+    let front = Frontend::start(vec![("bench".to_string(), fixed)], fcfg()).unwrap();
+    let rps_fixed = burst(&front);
+    front.shutdown();
+
+    let rungs = EngineBuilder::new()
+        .random_weights(BENCH_MODEL, 42)
+        .build_adaptive(&Ladder::default_ladder())
+        .unwrap_or_else(|e| panic!("autopilot rung: {e}"));
+    // a 1ms TTFT SLO this model cannot meet → the pilot must walk down
+    let pilot = AutopilotConfig {
+        slo_ttft_us: 1_000,
+        min_dwell_ticks: 0,
+        poll_ms: 20,
+        ..Default::default()
+    };
+    let front = Frontend::start_adaptive(rungs, fcfg(), pilot).unwrap();
+    let rps_auto = burst(&front);
+    let downshifts = front.metrics.counter("server.downshifts");
+    let upshifts = front.metrics.counter("server.upshifts");
+    let final_rung = front.active_rung().unwrap_or(0);
+    front.shutdown();
+
+    println!(
+        "\nautopilot overload: fixed w6a6 {rps_fixed:.1} req/s; \
+         adaptive {rps_auto:.1} req/s ({:.2}x) with {downshifts} downshift(s), \
+         {upshifts} upshift(s), final rung {final_rung}",
+        rps_auto / rps_fixed.max(1e-12)
+    );
+    rows.push(obj(vec![
+        ("backend", s("ladder+autopilot")),
+        ("autopilot", Json::Bool(true)),
+        ("requests", num(requests as f64)),
+        ("req_s_fixed", num(rps_fixed)),
+        ("req_s_autopilot", num(rps_auto)),
+        ("overload_gain", num(rps_auto / rps_fixed.max(1e-12))),
+        ("downshifts", num(downshifts as f64)),
+        ("upshifts", num(upshifts as f64)),
+        ("final_rung", num(final_rung as f64)),
+        ("slo_ttft_us", num(pilot.slo_ttft_us as f64)),
     ]));
 }
 

@@ -310,7 +310,10 @@ pub fn calibrate(
     Ok(CalibrationResult { set, blocks })
 }
 
-fn block_weights(pack: &WeightPack, li: usize) -> Result<BlockWeights> {
+/// Collect one block's fp32 weights from the pack (shared with the
+/// precision module's sensitivity search, which scores the same blocks
+/// at many candidate bit widths).
+pub(crate) fn block_weights(pack: &WeightPack, li: usize) -> Result<BlockWeights> {
     let mut linears = Vec::with_capacity(7);
     for name in LINEAR_NAMES {
         let t = pack.get(&format!("blocks.{li}.{name}"))?;

@@ -1,0 +1,177 @@
+//! The serving autopilot's decision policy: when to walk the precision
+//! ladder down (shed quality for capacity) and when to walk it back up
+//! (restore quality when load drops). Pure decision logic — the
+//! migration mechanics (drain/inject between rung workers) live in
+//! [`super::server::Frontend`]; this module owns the *policy* so it can
+//! be unit-tested without threads.
+//!
+//! Signals per tick (`docs/SERVING.md` §adaptive precision):
+//!
+//! * **windowed p95 TTFT** — the `server.ttft_us` histogram delta since
+//!   the previous tick ([`super::metrics::Histogram::delta`]). `None`
+//!   means *no completions this window* — explicitly not "SLO met"
+//!   (the ISSUE-9 bugfix: a `0` sentinel here once made silence look
+//!   like health).
+//! * **KV pool occupancy** of the active rung (percent of pool blocks
+//!   leased). `None` when the rung publishes no pool gauge yet.
+//!
+//! Downshift needs *positive evidence* of distress: a measured p95 over
+//! the SLO, or occupancy at/over the high-water mark. Upshift needs the
+//! *absence of distress*: occupancy at/below the low-water mark and no
+//! measured SLO violation (an empty window counts as idle — that is the
+//! "restore precision when load drops" path). A dwell counter keeps the
+//! two from oscillating.
+
+use super::metrics::Histogram;
+
+/// How the autopilot is allowed to move.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AutopilotPolicy {
+    /// Walk the ladder freely in both directions.
+    Adaptive,
+    /// Never shift — the differential-test mode: a frozen autopilot
+    /// must be bit-identical to a fixed-config deployment
+    /// (`tests/prop_autopilot.rs`).
+    Frozen,
+}
+
+/// SLO knobs for the precision autopilot (`--autopilot`,
+/// `--slo-ttft-ms`).
+#[derive(Clone, Copy, Debug)]
+pub struct AutopilotConfig {
+    /// p95 time-to-first-token target, µs (the latency SLO)
+    pub slo_ttft_us: u64,
+    /// KV occupancy (%) at/above which the active rung downshifts
+    pub high_occupancy_pct: u64,
+    /// KV occupancy (%) at/below which an upshift is allowed
+    pub low_occupancy_pct: u64,
+    /// ticks that must pass after a shift before the next one
+    pub min_dwell_ticks: u32,
+    /// background evaluation period; 0 = no pilot thread, the embedder
+    /// calls `Frontend::autopilot_tick()` itself (tests, benches)
+    pub poll_ms: u64,
+    pub policy: AutopilotPolicy,
+}
+
+impl Default for AutopilotConfig {
+    fn default() -> Self {
+        AutopilotConfig {
+            slo_ttft_us: 250_000,
+            high_occupancy_pct: 85,
+            low_occupancy_pct: 30,
+            min_dwell_ticks: 2,
+            poll_ms: 0,
+            policy: AutopilotPolicy::Adaptive,
+        }
+    }
+}
+
+/// One tick's verdict.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShiftDecision {
+    Hold,
+    /// move to the next-cheaper rung (index + 1)
+    Down,
+    /// move to the next-more-precise rung (index − 1)
+    Up,
+}
+
+/// The pure policy function (see module docs). `p95_ttft_us` is the
+/// windowed quantile (`None` = empty window), `occupancy_pct` the active
+/// rung's pool occupancy (`None` = no pool gauge yet).
+pub fn decide(
+    cfg: &AutopilotConfig,
+    p95_ttft_us: Option<u64>,
+    occupancy_pct: Option<u64>,
+    at_lowest: bool,
+    at_highest: bool,
+    dwell_ok: bool,
+) -> ShiftDecision {
+    if cfg.policy == AutopilotPolicy::Frozen || !dwell_ok {
+        return ShiftDecision::Hold;
+    }
+    let slo_violated = p95_ttft_us.is_some_and(|p| p > cfg.slo_ttft_us);
+    let pool_pressure = occupancy_pct.is_some_and(|o| o >= cfg.high_occupancy_pct);
+    if (slo_violated || pool_pressure) && !at_lowest {
+        return ShiftDecision::Down;
+    }
+    let idle_or_healthy = p95_ttft_us.is_none_or(|p| p <= cfg.slo_ttft_us);
+    let pool_relaxed = occupancy_pct.is_none_or(|o| o <= cfg.low_occupancy_pct);
+    if idle_or_healthy && pool_relaxed && !at_highest {
+        return ShiftDecision::Up;
+    }
+    ShiftDecision::Hold
+}
+
+/// Mutable autopilot state the frontend keeps behind one mutex: the
+/// active rung index plus the signal memory a windowed tick needs.
+pub(crate) struct Autopilot {
+    pub(crate) cfg: AutopilotConfig,
+    /// index into the ladder; 0 = most precise
+    pub(crate) active: usize,
+    pub(crate) ticks_since_shift: u32,
+    /// `server.ttft_us` snapshot at the previous tick — the next tick's
+    /// [`Histogram::delta`] baseline
+    pub(crate) prev_ttft: Histogram,
+}
+
+impl Autopilot {
+    pub(crate) fn new(cfg: AutopilotConfig) -> Self {
+        Autopilot {
+            cfg,
+            active: 0,
+            // start dwell-eligible so the first tick may already shift
+            ticks_since_shift: cfg.min_dwell_ticks,
+            prev_ttft: Histogram::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(policy: AutopilotPolicy) -> AutopilotConfig {
+        AutopilotConfig { slo_ttft_us: 1_000, policy, ..Default::default() }
+    }
+
+    #[test]
+    fn frozen_policy_never_shifts() {
+        let c = cfg(AutopilotPolicy::Frozen);
+        for p95 in [None, Some(0), Some(1_000_000)] {
+            for occ in [None, Some(0), Some(100)] {
+                assert_eq!(decide(&c, p95, occ, false, false, true), ShiftDecision::Hold);
+            }
+        }
+    }
+
+    #[test]
+    fn slo_violation_or_pool_pressure_downshifts() {
+        let c = cfg(AutopilotPolicy::Adaptive);
+        assert_eq!(decide(&c, Some(5_000), Some(50), false, false, true), ShiftDecision::Down);
+        assert_eq!(decide(&c, Some(100), Some(90), false, false, true), ShiftDecision::Down);
+        // already at the cheapest rung: nowhere further down
+        assert_eq!(decide(&c, Some(5_000), Some(90), true, false, true), ShiftDecision::Hold);
+        // dwell gate holds both directions
+        assert_eq!(decide(&c, Some(5_000), Some(90), false, false, false), ShiftDecision::Hold);
+    }
+
+    #[test]
+    fn empty_window_is_not_an_slo_violation_but_idle_restores() {
+        let c = cfg(AutopilotPolicy::Adaptive);
+        // the ISSUE-9 bug shape: no traffic + busy pool must NOT read as
+        // "p95 = 0 → healthy → upshift", nor as a violation
+        assert_eq!(decide(&c, None, Some(60), false, false, true), ShiftDecision::Hold);
+        // genuinely idle (empty window + relaxed pool) restores precision
+        assert_eq!(decide(&c, None, Some(10), false, false, true), ShiftDecision::Up);
+        // already at the most precise rung: hold
+        assert_eq!(decide(&c, None, Some(10), false, true, true), ShiftDecision::Hold);
+    }
+
+    #[test]
+    fn healthy_but_busy_holds() {
+        let c = cfg(AutopilotPolicy::Adaptive);
+        // SLO met but the pool sits between the water marks: no shift
+        assert_eq!(decide(&c, Some(500), Some(60), false, false, true), ShiftDecision::Hold);
+    }
+}

@@ -33,20 +33,42 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile from bucket boundaries.
-    pub fn quantile_us(&self, q: f64) -> u64 {
+    /// Approximate quantile from bucket boundaries. `None` when the
+    /// histogram is empty — an empty window is *no evidence*, not a 0µs
+    /// latency (the distinction the autopilot's SLO check rides on; a
+    /// `0` sentinel here once read "no traffic yet" as "SLO met").
+    pub fn quantile_us(&self, q: f64) -> Option<u64> {
         if self.total == 0 {
-            return 0;
+            return None;
         }
         let target = (self.total as f64 * q).ceil() as u64;
         let mut seen = 0u64;
         for (i, &c) in self.counts.iter().enumerate() {
             seen += c;
             if seen >= target {
-                return 1u64 << i;
+                return Some(1u64 << i);
             }
         }
-        self.max_us
+        Some(self.max_us)
+    }
+
+    /// The observations recorded since `earlier` was snapshotted — the
+    /// windowed view a control loop wants (`earlier` must be a previous
+    /// snapshot of the *same* histogram). `max_us` keeps the all-time
+    /// maximum (bucket counts, not the max, drive the quantiles).
+    pub fn delta(&self, earlier: &Histogram) -> Histogram {
+        let counts = self
+            .counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| c.saturating_sub(earlier.counts.get(i).copied().unwrap_or(0)))
+            .collect();
+        Histogram {
+            counts,
+            total: self.total.saturating_sub(earlier.total),
+            sum_us: self.sum_us.saturating_sub(earlier.sum_us),
+            max_us: self.max_us,
+        }
     }
 }
 
@@ -91,15 +113,25 @@ impl Metrics {
         self.inner.lock().unwrap().gauges.get(name).copied().unwrap_or(0)
     }
 
-    /// Approximate quantile of a named histogram (0 when absent) — the
-    /// p95-TTFT axis of the saturation bench.
-    pub fn histogram_quantile_us(&self, name: &str, q: f64) -> u64 {
+    /// Approximate quantile of a named histogram — the p95-TTFT axis of
+    /// the saturation bench and the autopilot's SLO signal. `None` when
+    /// the histogram is absent or empty: "no traffic yet" must stay
+    /// distinguishable from a real 0µs quantile, otherwise an SLO check
+    /// reads silence as health.
+    pub fn histogram_quantile_us(&self, name: &str, q: f64) -> Option<u64> {
         self.inner
             .lock()
             .unwrap()
             .histograms
             .get(name)
-            .map_or(0, |h| h.quantile_us(q))
+            .and_then(|h| h.quantile_us(q))
+    }
+
+    /// Clone of a named histogram (for windowed deltas via
+    /// [`Histogram::delta`]); `None` when nothing was recorded under
+    /// `name` yet.
+    pub fn histogram_snapshot(&self, name: &str) -> Option<Histogram> {
+        self.inner.lock().unwrap().histograms.get(name).cloned()
     }
 
     pub fn snapshot(&self) -> String {
@@ -112,14 +144,17 @@ impl Metrics {
             out.push_str(&format!("{k}: {v} (gauge)\n"));
         }
         for (k, h) in &g.histograms {
-            out.push_str(&format!(
-                "{k}: n={} mean={:.0}us p50={}us p95={}us max={}us\n",
-                h.total,
-                h.mean_us(),
-                h.quantile_us(0.5),
-                h.quantile_us(0.95),
-                h.max_us
-            ));
+            // an empty histogram renders as empty instead of fabricating
+            // 0µs quantiles
+            match (h.quantile_us(0.5), h.quantile_us(0.95)) {
+                (Some(p50), Some(p95)) => out.push_str(&format!(
+                    "{k}: n={} mean={:.0}us p50={p50}us p95={p95}us max={}us\n",
+                    h.total,
+                    h.mean_us(),
+                    h.max_us
+                )),
+                _ => out.push_str(&format!("{k}: n=0 (empty)\n")),
+            }
         }
         out
     }
@@ -153,8 +188,40 @@ mod tests {
         for us in [10u64, 20, 40, 80, 160, 1000, 5000] {
             h.record(us);
         }
-        assert!(h.quantile_us(0.5) <= h.quantile_us(0.95));
+        assert!(h.quantile_us(0.5).unwrap() <= h.quantile_us(0.95).unwrap());
         assert!(h.mean_us() > 0.0);
         assert_eq!(h.total, 7);
+    }
+
+    #[test]
+    fn empty_histograms_are_none_not_zero() {
+        // the ISSUE-9 bugfix: absent/empty must be distinguishable from
+        // a real 0µs quantile, or an SLO check reads silence as health
+        let m = Metrics::new();
+        assert_eq!(m.histogram_quantile_us("server.ttft_us", 0.95), None);
+        assert!(m.histogram_snapshot("server.ttft_us").is_none());
+        assert_eq!(Histogram::default().quantile_us(0.95), None);
+        m.observe_us("server.ttft_us", 120);
+        assert!(m.histogram_quantile_us("server.ttft_us", 0.95).unwrap() >= 120);
+        assert!(m.snapshot().contains("server.ttft_us: n=1"));
+    }
+
+    #[test]
+    fn histogram_delta_windows_the_recent_observations() {
+        let m = Metrics::new();
+        m.observe_us("lat", 100);
+        m.observe_us("lat", 100);
+        let earlier = m.histogram_snapshot("lat").unwrap();
+        // no traffic since the snapshot → the window is empty → None
+        let idle = m.histogram_snapshot("lat").unwrap().delta(&earlier);
+        assert_eq!(idle.total, 0);
+        assert_eq!(idle.quantile_us(0.95), None);
+        // one slow request in the window dominates its p95 even though
+        // the all-time histogram is still mostly fast
+        m.observe_us("lat", 64_000);
+        let win = m.histogram_snapshot("lat").unwrap().delta(&earlier);
+        assert_eq!(win.total, 1);
+        assert!(win.quantile_us(0.95).unwrap() >= 64_000);
+        assert!(m.histogram_snapshot("lat").unwrap().quantile_us(0.5).unwrap() <= 256);
     }
 }

@@ -3,6 +3,7 @@
 //! admission, multi-replica frontend, metrics. See `server.rs` for the
 //! thread topology and `docs/SERVING.md` §multi-replica for the design.
 
+pub mod autopilot;
 pub mod batcher;
 pub mod metrics;
 pub mod request;
@@ -10,8 +11,9 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 
+pub use autopilot::{AutopilotConfig, AutopilotPolicy, ShiftDecision};
 pub use batcher::{Batcher, BatcherConfig};
-pub use metrics::Metrics;
+pub use metrics::{Histogram, Metrics};
 pub use request::{
     sampling_seed, Admission, QueuedRequest, Response, SubmitRequest, Ticket, Timing,
 };

@@ -189,6 +189,17 @@ impl Router {
     pub fn repin(&mut self, fingerprint: u64, to: ReplicaId) {
         self.sticky.insert(fingerprint, to);
     }
+
+    /// Retarget what "" (no explicit tag) resolves to — how the precision
+    /// autopilot steers default traffic onto the active rung without the
+    /// clients knowing rung names.
+    pub fn set_default_tag(&mut self, tag: &str) {
+        self.default_tag = tag.to_string();
+    }
+
+    pub fn default_tag(&self) -> &str {
+        &self.default_tag
+    }
 }
 
 #[cfg(test)]
@@ -278,6 +289,20 @@ mod tests {
         // killing the last replica of a tag makes the tag unroutable
         r.mark_dead(b);
         assert!(r.route(&m).is_err());
+    }
+
+    #[test]
+    fn default_tag_can_be_retargeted_at_runtime() {
+        let mut r = Router::new("w6a6-kv8");
+        let a = r.register("w6a6-kv8");
+        let b = r.register("w4a4-kv8");
+        assert_eq!(r.route(&meta("")).unwrap(), a);
+        // the autopilot's downshift: "" now resolves to the cheaper rung
+        r.set_default_tag("w4a4-kv8");
+        assert_eq!(r.default_tag(), "w4a4-kv8");
+        assert_eq!(r.route(&meta("")).unwrap(), b);
+        // explicit tags are unaffected by the default retarget
+        assert_eq!(r.route(&meta("w6a6-kv8")).unwrap(), a);
     }
 
     #[test]

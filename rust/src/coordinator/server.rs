@@ -10,7 +10,8 @@
 //!                        │                   ├─ Batcher (size/deadline)
 //!                        │                   ├─ Scheduler (prefill+decode)
 //!                        │                   └─ responses ──► Ticket rx
-//!                        └─ Router: tag → sticky → load score
+//!                        ├─ Router: tag → sticky → load score
+//!                        └─ Autopilot: SLO watch → rung shifts
 //! ```
 //!
 //! When a replica retires (or is declared dead), [`Frontend::retire`]
@@ -18,11 +19,35 @@
 //! surviving replicas of the same tag: in-flight sequences ride the
 //! scheduler's preempt-and-replay machinery ([`InFlight`]), so their
 //! streams continue bit-identically on the adoptive replica.
+//!
+//! ## Ordering invariant (the ISSUE-9 race fix)
+//!
+//! `submit` sends its `Req` **while holding the router lock**, and
+//! `retire`/`shift_to` mark a replica dead / retarget the default tag
+//! and send their `Retire`/`Drain` **under the same lock**. mpsc
+//! channels are FIFO, so any `Req` whose send succeeded is ordered ahead
+//! of the `Retire`/`Drain` in the worker's queue and is therefore
+//! drained and re-homed — never silently swallowed. (Previously the
+//! send happened after the lock was released: a replica retiring in that
+//! window accepted the message into a channel nobody would ever drain.)
+//! A send that fails because the worker already exited bounces: the
+//! message comes back in the `SendError`, the replica is marked dead,
+//! and the request re-routes to a survivor.
+//!
+//! ## Adaptive precision ([`Frontend::start_adaptive`])
+//!
+//! One worker per ladder rung (`precision::Ladder`), each registered
+//! under its rung name; default traffic follows the router's default
+//! tag, which the autopilot retargets as it walks the ladder. A shift
+//! drains the old rung's queued + in-flight work and injects it into the
+//! new rung — the same drain/inject path as retirement, so continuations
+//! are bit-identical under greedy decoding. See
+//! `docs/SERVING.md` §adaptive precision.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, SendError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -30,9 +55,11 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::engine::InferenceEngine;
+use crate::precision::OperatingPoint;
 use crate::prefix::SessionStore;
 use crate::util::par;
 
+use super::autopilot::{decide, Autopilot, AutopilotConfig, ShiftDecision};
 use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::request::{
@@ -43,14 +70,18 @@ use super::scheduler::{InFlight, Scheduler, SchedulerConfig};
 
 enum WorkerMsg {
     Req(QueuedRequest, Sender<Response>),
-    /// a sequence drained from a retiring replica, adopted here
+    /// a sequence drained from another replica, adopted here
     Resume(InFlight, Sender<Response>),
     /// detach all queued + in-flight work, hand it back, then exit
     Retire(Sender<Drained>),
+    /// detach all queued + in-flight work, hand it back, keep running —
+    /// the autopilot's migration primitive (the rung stays warm as an
+    /// upshift target)
+    Drain(Sender<Drained>),
     Shutdown,
 }
 
-/// Everything a retiring worker hands back for re-homing.
+/// Everything a draining worker hands back for re-homing.
 struct Drained {
     queued: Vec<(QueuedRequest, Sender<Response>)>,
     inflight: Vec<(InFlight, Sender<Response>)>,
@@ -117,14 +148,27 @@ struct WorkerOpts {
 struct Worker {
     tx: Sender<WorkerMsg>,
     status: Arc<ReplicaStatus>,
-    handle: Option<JoinHandle<()>>,
+}
+
+/// State shared between the frontend handle, the worker threads'
+/// senders, and the autopilot pilot thread.
+struct Shared {
+    router: Mutex<Router>,
+    workers: Vec<Worker>,
+    next_id: AtomicU64,
+    metrics: Arc<Metrics>,
+    /// present only on adaptive frontends ([`Frontend::start_adaptive`])
+    autopilot: Option<Mutex<Autopilot>>,
+    /// replica tag per worker index (= rung names on adaptive frontends)
+    tags: Vec<String>,
 }
 
 /// A running frontend over one or more engine replicas.
 pub struct Frontend {
-    router: Mutex<Router>,
-    workers: Vec<Worker>,
-    next_id: AtomicU64,
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    pilot: Option<JoinHandle<()>>,
+    pilot_stop: Arc<AtomicBool>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -136,12 +180,63 @@ impl Frontend {
         replicas: Vec<(String, Arc<dyn InferenceEngine>)>,
         cfg: FrontendConfig,
     ) -> Result<Self> {
+        Self::start_inner(replicas, cfg, None)
+    }
+
+    /// Start an adaptive frontend: one worker per precision-ladder rung
+    /// (most precise first — rung 0 is where traffic starts), with the
+    /// autopilot watching `server.ttft_us` p95 and the active rung's KV
+    /// occupancy against `pilot`'s SLOs. With `pilot.poll_ms == 0` no
+    /// pilot thread runs; call [`Frontend::autopilot_tick`] manually
+    /// (tests, benches).
+    pub fn start_adaptive(
+        rungs: Vec<(OperatingPoint, Arc<dyn InferenceEngine>)>,
+        mut cfg: FrontendConfig,
+        pilot: AutopilotConfig,
+    ) -> Result<Self> {
+        if rungs.is_empty() {
+            bail!("start_adaptive needs at least one ladder rung");
+        }
+        // default traffic starts on the most precise rung
+        cfg.default_tag = rungs[0].0.name.clone();
+        let replicas: Vec<(String, Arc<dyn InferenceEngine>)> =
+            rungs.into_iter().map(|(op, engine)| (op.name, engine)).collect();
+        let mut fe = Self::start_inner(replicas, cfg, Some(pilot))?;
+        fe.metrics.set_gauge("server.precision_rung", 0);
+        if pilot.poll_ms > 0 {
+            let shared = fe.shared.clone();
+            let stop = fe.pilot_stop.clone();
+            let period = Duration::from_millis(pilot.poll_ms);
+            let handle = std::thread::Builder::new()
+                .name("abq-autopilot".to_string())
+                .spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        std::thread::sleep(period);
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        shared.autopilot_tick();
+                    }
+                })
+                .context("spawning autopilot thread")?;
+            fe.pilot = Some(handle);
+        }
+        Ok(fe)
+    }
+
+    fn start_inner(
+        replicas: Vec<(String, Arc<dyn InferenceEngine>)>,
+        cfg: FrontendConfig,
+        pilot: Option<AutopilotConfig>,
+    ) -> Result<Self> {
         if replicas.is_empty() {
             bail!("Frontend::start needs at least one replica");
         }
         let metrics = Arc::new(Metrics::new());
         let mut router = Router::new(&cfg.default_tag);
         let mut workers = Vec::new();
+        let mut handles = Vec::new();
+        let mut tags = Vec::new();
         for (idx, (tag, model)) in replicas.into_iter().enumerate() {
             router.register(&tag);
             let (tx, rx) = channel::<WorkerMsg>();
@@ -164,15 +259,91 @@ impl Frontend {
                 .name(format!("abq-replica{idx}"))
                 .spawn(move || worker_loop(idx, model, rx, opts, m, st, &tag_owned))
                 .context("spawning replica worker")?;
-            workers.push(Worker { tx, status, handle: Some(handle) });
+            workers.push(Worker { tx, status });
+            handles.push(handle);
+            tags.push(tag);
         }
-        Ok(Frontend { router: Mutex::new(router), workers, next_id: AtomicU64::new(1), metrics })
+        let shared = Arc::new(Shared {
+            router: Mutex::new(router),
+            workers,
+            next_id: AtomicU64::new(1),
+            metrics: metrics.clone(),
+            autopilot: pilot.map(|c| Mutex::new(Autopilot::new(c))),
+            tags,
+        });
+        Ok(Frontend {
+            shared,
+            handles,
+            pilot: None,
+            pilot_stop: Arc::new(AtomicBool::new(false)),
+            metrics,
+        })
     }
 
     pub fn replica_count(&self) -> usize {
-        self.workers.len()
+        self.shared.workers.len()
     }
 
+    /// Stamp, route and enqueue one request. Fails when no live replica
+    /// serves the requested tag — the client gets the error immediately
+    /// instead of a dangling channel.
+    pub fn submit(&self, req: SubmitRequest) -> Result<Ticket> {
+        self.shared.submit(req)
+    }
+
+    /// Where would this request land right now? Same three-tier decision
+    /// as [`Frontend::submit`] (including recording the affinity
+    /// placement), without enqueuing anything.
+    pub fn route_preview(&self, req: &SubmitRequest) -> Result<Admission> {
+        self.shared.route_preview(req)
+    }
+
+    /// Retire one replica: stop routing to it, drain its queued and
+    /// in-flight work, and re-home everything to surviving replicas of
+    /// the same tag (sticky fingerprints are re-pinned to the adoptive
+    /// replica). Returns how many requests were re-homed. Requests whose
+    /// tag no survivor serves get their channels dropped — the client
+    /// sees a disconnect, never a silent precision switch.
+    pub fn retire(&self, id: ReplicaId) -> Result<usize> {
+        self.shared.retire(id)
+    }
+
+    /// Evaluate the autopilot policy once (the pilot thread calls this
+    /// every `poll_ms`; with `poll_ms == 0` the embedder drives ticks).
+    /// Returns the decision taken; `Hold` on non-adaptive frontends.
+    pub fn autopilot_tick(&self) -> ShiftDecision {
+        self.shared.autopilot_tick()
+    }
+
+    /// Force one rung shift (down = cheaper), bypassing the policy but
+    /// using the exact same drain/inject migration — the test hook for
+    /// mid-stream continuation checks. Errors off the ladder edge or on
+    /// a non-adaptive frontend.
+    pub fn force_shift(&self, down: bool) -> Result<usize> {
+        self.shared.force_shift(down)
+    }
+
+    /// Active rung index (0 = most precise); `None` when not adaptive.
+    pub fn active_rung(&self) -> Option<usize> {
+        self.shared.autopilot.as_ref().map(|ap| ap.lock().unwrap().active)
+    }
+
+    /// Stop all workers after they finish their queued work.
+    pub fn shutdown(mut self) {
+        self.pilot_stop.store(true, Ordering::Relaxed);
+        if let Some(p) = self.pilot.take() {
+            let _ = p.join();
+        }
+        for w in &self.shared.workers {
+            let _ = w.tx.send(WorkerMsg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Shared {
     /// Refresh the router's view from the workers' published load.
     fn refresh(&self, router: &mut Router) {
         for (i, w) in self.workers.iter().enumerate() {
@@ -188,7 +359,7 @@ impl Frontend {
         }
     }
 
-    fn meta<'a>(req: &'a SubmitRequest) -> RequestMeta<'a> {
+    fn meta(req: &SubmitRequest) -> RequestMeta<'_> {
         RequestMeta {
             config_tag: &req.config_tag,
             session_affinity: req.session_affinity,
@@ -196,55 +367,70 @@ impl Frontend {
         }
     }
 
-    /// Stamp, route and enqueue one request. Fails when no live replica
-    /// serves the requested tag — the client gets the error immediately
-    /// instead of a dangling channel.
-    pub fn submit(&self, req: SubmitRequest) -> Result<Ticket> {
+    fn submit(&self, req: SubmitRequest) -> Result<Ticket> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.incr("server.requests", 1);
-        let replica = {
+        let (resp_tx, rx) = channel();
+        let mut qr = QueuedRequest::new(id, req);
+        let mut resp_tx = resp_tx;
+        // bounded retry: each failed send marks one replica dead, so
+        // after workers.len() bounces nothing can be left to try
+        for _ in 0..=self.workers.len() {
             let mut router = self.router.lock().unwrap();
             self.refresh(&mut router);
-            match router.route(&Self::meta(&req)) {
+            let replica = match router.route(&Self::meta(&qr.req)) {
                 Ok(r) => r,
                 Err(e) => {
                     self.metrics.incr("server.unroutable", 1);
                     return Err(e);
                 }
+            };
+            // send while still holding the router lock: retire()/
+            // shift_to() mark replicas dead and send Retire/Drain under
+            // this same lock, so a send that succeeds here is ordered
+            // ahead of any Retire/Drain in the channel FIFO — the worker
+            // either serves the request or hands it back in its drain,
+            // never drops it on the floor
+            match self.workers[replica.0].tx.send(WorkerMsg::Req(qr, resp_tx)) {
+                Ok(()) => {
+                    self.workers[replica.0].status.queue_depth.fetch_add(1, Ordering::Relaxed);
+                    return Ok(Ticket { id, replica, rx });
+                }
+                Err(SendError(WorkerMsg::Req(q, tx))) => {
+                    // the worker exited after its last status publish:
+                    // the send bounced the message back — mark the
+                    // replica dead and re-route to a survivor
+                    self.metrics.incr("server.submit_bounced", 1);
+                    self.workers[replica.0].status.alive.store(false, Ordering::Relaxed);
+                    router.mark_dead(replica);
+                    qr = q;
+                    resp_tx = tx;
+                }
+                Err(_) => unreachable!("send returns the message it was given"),
             }
-        };
-        let (tx, rx) = channel();
-        let qr = QueuedRequest::new(id, req);
-        self.workers[replica.0]
-            .tx
-            .send(WorkerMsg::Req(qr, tx))
-            .map_err(|_| anyhow::anyhow!("{replica} is no longer accepting work"))?;
-        self.workers[replica.0].status.queue_depth.fetch_add(1, Ordering::Relaxed);
-        Ok(Ticket { id, replica, rx })
+        }
+        self.metrics.incr("server.unroutable", 1);
+        bail!("no live replica accepted the request")
     }
 
-    /// Where would this request land right now? Same three-tier decision
-    /// as [`Frontend::submit`] (including recording the affinity
-    /// placement), without enqueuing anything.
-    pub fn route_preview(&self, req: &SubmitRequest) -> Result<Admission> {
+    fn route_preview(&self, req: &SubmitRequest) -> Result<Admission> {
         let mut router = self.router.lock().unwrap();
         self.refresh(&mut router);
         Ok(Admission::Routed(router.route(&Self::meta(req))?))
     }
 
-    /// Retire one replica: stop routing to it, drain its queued and
-    /// in-flight work, and re-home everything to surviving replicas of
-    /// the same tag (sticky fingerprints are re-pinned to the adoptive
-    /// replica). Returns how many requests were re-homed. Requests whose
-    /// tag no survivor serves get their channels dropped — the client
-    /// sees a disconnect, never a silent precision switch.
-    pub fn retire(&self, id: ReplicaId) -> Result<usize> {
+    fn retire(&self, id: ReplicaId) -> Result<usize> {
         let w = self.workers.get(id.0).with_context(|| format!("unknown {id}"))?;
-        // stop routing first, so submit() cannot race new work in
-        w.status.alive.store(false, Ordering::Relaxed);
-        self.router.lock().unwrap().mark_dead(id);
         let (tx, rx) = channel();
-        if w.tx.send(WorkerMsg::Retire(tx)).is_err() {
+        let sent = {
+            // mark dead AND send Retire under the router lock — the
+            // submit-side of the ordering invariant (module docs)
+            let mut router = self.router.lock().unwrap();
+            w.status.alive.store(false, Ordering::Relaxed);
+            router.mark_dead(id);
+            w.tx.send(WorkerMsg::Retire(tx)).is_ok()
+        };
+        if !sent {
             return Ok(0); // worker already gone; nothing to drain
         }
         let drained = rx.recv().context("retiring replica returned no drain")?;
@@ -280,16 +466,134 @@ impl Frontend {
         Ok(moved)
     }
 
-    /// Stop all workers after they finish their queued work.
-    pub fn shutdown(mut self) {
-        for w in &self.workers {
-            let _ = w.tx.send(WorkerMsg::Shutdown);
-        }
-        for w in &mut self.workers {
-            if let Some(h) = w.handle.take() {
-                let _ = h.join();
+    /// One autopilot evaluation: window the TTFT histogram, read the
+    /// active rung's pool occupancy, run the policy, migrate on a shift.
+    fn autopilot_tick(&self) -> ShiftDecision {
+        let Some(ap_mutex) = &self.autopilot else { return ShiftDecision::Hold };
+        let (decision, from, to) = {
+            let mut ap = ap_mutex.lock().unwrap();
+            ap.ticks_since_shift = ap.ticks_since_shift.saturating_add(1);
+            let dwell_ok = ap.ticks_since_shift > ap.cfg.min_dwell_ticks;
+            // p95 over *this window's* completions: cumulative histograms
+            // never recover from an overload spike, so upshifts would
+            // otherwise be blocked forever
+            let snap =
+                self.metrics.histogram_snapshot("server.ttft_us").unwrap_or_default();
+            let p95 = snap.delta(&ap.prev_ttft).quantile_us(0.95);
+            ap.prev_ttft = snap;
+            if let Some(p) = p95 {
+                self.metrics.set_gauge("server.ttft_p95_window_us", p);
+            }
+            let active = ap.active;
+            let total = self.metrics.gauge(&format!("replica.{active}.kv_blocks_total"));
+            let occ = if total == 0 {
+                None // no pool gauge published (yet) — no occupancy signal
+            } else {
+                Some(self.metrics.gauge(&format!("replica.{active}.kv_blocks_used")) * 100 / total)
+            };
+            let d = decide(
+                &ap.cfg,
+                p95,
+                occ,
+                active + 1 == self.workers.len(),
+                active == 0,
+                dwell_ok,
+            );
+            match d {
+                ShiftDecision::Hold => (d, active, active),
+                ShiftDecision::Down => {
+                    ap.active = active + 1;
+                    ap.ticks_since_shift = 0;
+                    (d, active, active + 1)
+                }
+                ShiftDecision::Up => {
+                    ap.active = active - 1;
+                    ap.ticks_since_shift = 0;
+                    (d, active, active - 1)
+                }
+            }
+        };
+        match decision {
+            ShiftDecision::Hold => {}
+            ShiftDecision::Down => {
+                self.metrics.incr("server.downshifts", 1);
+                self.metrics.set_gauge("server.precision_rung", to as u64);
+                self.shift_to(ReplicaId(from), ReplicaId(to));
+            }
+            ShiftDecision::Up => {
+                self.metrics.incr("server.upshifts", 1);
+                self.metrics.set_gauge("server.precision_rung", to as u64);
+                self.shift_to(ReplicaId(from), ReplicaId(to));
             }
         }
+        decision
+    }
+
+    fn force_shift(&self, down: bool) -> Result<usize> {
+        let Some(ap_mutex) = &self.autopilot else {
+            bail!("force_shift on a non-adaptive frontend")
+        };
+        let (from, to) = {
+            let mut ap = ap_mutex.lock().unwrap();
+            let from = ap.active;
+            let to = if down {
+                if from + 1 >= self.workers.len() {
+                    bail!("already at the cheapest rung");
+                }
+                from + 1
+            } else {
+                if from == 0 {
+                    bail!("already at the most precise rung");
+                }
+                from - 1
+            };
+            ap.active = to;
+            ap.ticks_since_shift = 0;
+            (from, to)
+        };
+        self.metrics.incr(if down { "server.downshifts" } else { "server.upshifts" }, 1);
+        self.metrics.set_gauge("server.precision_rung", to as u64);
+        self.shift_to(ReplicaId(from), ReplicaId(to));
+        Ok(to)
+    }
+
+    /// Migrate all of `from`'s work onto `to` (adjacent ladder rungs):
+    /// retarget the default tag, drain `from`, inject into `to`. Unlike
+    /// retirement the source worker keeps running — it stays warm for
+    /// the shift back.
+    fn shift_to(&self, from: ReplicaId, to: ReplicaId) {
+        let (dtx, drx) = channel();
+        let sent = {
+            // retarget + send Drain under the router lock: every Req
+            // routed to the old rung before this point is ahead of the
+            // Drain in the FIFO and comes back in the drain set; every
+            // submit after it routes to the new default
+            let mut router = self.router.lock().unwrap();
+            router.set_default_tag(&self.tags[to.0]);
+            self.workers[from.0].tx.send(WorkerMsg::Drain(dtx)).is_ok()
+        };
+        if !sent {
+            return; // rung worker dead; nothing to migrate
+        }
+        let Ok(drained) = drx.recv() else { return };
+        let mut moved = 0u64;
+        let mut router = self.router.lock().unwrap();
+        for (qr, resp_tx) in drained.queued {
+            if self.workers[to.0].tx.send(WorkerMsg::Req(qr, resp_tx)).is_ok() {
+                self.workers[to.0].status.queue_depth.fetch_add(1, Ordering::Relaxed);
+                moved += 1;
+            }
+        }
+        for (f, resp_tx) in drained.inflight {
+            if let Some(fp) = f.req.session_affinity {
+                router.repin(fp, to);
+            }
+            if self.workers[to.0].tx.send(WorkerMsg::Resume(f, resp_tx)).is_ok() {
+                self.workers[to.0].status.queue_depth.fetch_add(1, Ordering::Relaxed);
+                moved += 1;
+            }
+        }
+        self.metrics.incr("server.migrated", moved);
     }
 }
 
@@ -333,6 +637,7 @@ fn worker_loop(
     let mut pending: HashMap<u64, Sender<Response>> = HashMap::new();
     let mut shutdown = false;
     let mut retire_reply: Option<Sender<Drained>> = None;
+    let mut drain_reply: Option<Sender<Drained>> = None;
 
     loop {
         // 1. pull new work (block briefly only when fully idle)
@@ -363,14 +668,19 @@ fn worker_loop(
                     metrics.incr(&format!("{pfx}.queued"), 1);
                 }
                 WorkerMsg::Resume(f, resp_tx) => {
-                    // a sequence drained from a dead/retired sibling:
-                    // joins the resume queue with first claim on blocks
+                    // a sequence drained from another replica (death,
+                    // retirement or a precision shift): joins the resume
+                    // queue with first claim on blocks
                     pending.insert(f.id, resp_tx);
                     scheduler.inject(f);
                     metrics.incr(&format!("{pfx}.adopted"), 1);
                 }
                 WorkerMsg::Retire(reply) => {
                     retire_reply = Some(reply);
+                    break;
+                }
+                WorkerMsg::Drain(reply) => {
+                    drain_reply = Some(reply);
                     break;
                 }
                 WorkerMsg::Shutdown => {
@@ -380,9 +690,39 @@ fn worker_loop(
             }
         }
 
-        // retirement: hand every queued + in-flight request back (with
-        // its response channel) and exit immediately — the frontend
-        // re-homes the work on surviving replicas
+        // precision-shift drain: hand every queued + in-flight request
+        // back (with its response channel) but KEEP RUNNING — this rung
+        // stays warm as a future shift target; anything already finished
+        // is still delivered from here
+        if let Some(reply) = drain_reply.take() {
+            for resp in scheduler.take_finished() {
+                deliver(&metrics, &pfx, &mut pending, resp);
+            }
+            let mut queued = Vec::new();
+            while !batcher.is_empty() {
+                for qr in batcher.drain(usize::MAX) {
+                    if let Some(tx) = pending.remove(&qr.id) {
+                        queued.push((qr, tx));
+                    }
+                }
+            }
+            let inflight: Vec<(InFlight, Sender<Response>)> = scheduler
+                .drain_inflight()
+                .into_iter()
+                .filter_map(|f| pending.remove(&f.id).map(|tx| (f, tx)))
+                .collect();
+            // inject()-completed stragglers surface as finished
+            for resp in scheduler.take_finished() {
+                deliver(&metrics, &pfx, &mut pending, resp);
+            }
+            status.queue_depth.store(0, Ordering::Relaxed);
+            metrics.incr(&format!("{pfx}.drained"), 1);
+            let _ = reply.send(Drained { queued, inflight });
+            continue;
+        }
+
+        // retirement: like a drain, but the worker exits afterwards —
+        // the frontend re-homes the work on surviving replicas
         if let Some(reply) = retire_reply.take() {
             // anything already finished is still delivered from here
             for resp in scheduler.take_finished() {
@@ -479,6 +819,7 @@ fn worker_loop(
         if let Some(st) = model.kv_pool_status() {
             metrics.set_gauge(&format!("{pfx}.kv_blocks_used"), st.used_blocks() as u64);
             metrics.set_gauge(&format!("{pfx}.kv_blocks_total"), st.total_blocks as u64);
+            metrics.set_gauge(&format!("{pfx}.kv_occupancy_pct"), st.occupancy_pct());
             // extra handles onto leased blocks (prefix/fork sharing) —
             // each physical block is billed once in kv_blocks_used
             metrics.set_gauge(&format!("{pfx}.kv_blocks_shared"), st.shared_refs as u64);
@@ -527,7 +868,7 @@ fn worker_loop(
 
 /// Send one finished response to its client and record the per-replica
 /// and fleet-wide ("server.") completion metrics — `server.ttft_us` is
-/// the latency-SLO axis of the saturation bench.
+/// the latency-SLO axis of the saturation bench and the autopilot.
 fn deliver(
     metrics: &Metrics,
     pfx: &str,
@@ -547,8 +888,9 @@ fn deliver(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::autopilot::AutopilotPolicy;
     use crate::engine::EngineBuilder;
-    use crate::model::ModelConfig;
+    use crate::model::{KvCacheConfig, ModelConfig};
 
     const MICRO: ModelConfig = ModelConfig {
         name: "micro",
@@ -718,6 +1060,45 @@ mod tests {
         assert_eq!(server.metrics.counter("server.replica_retired"), 1);
         // retiring the dead replica again is a no-op, not a panic
         assert_eq!(server.retire(ReplicaId(0)).unwrap(), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn adaptive_frontend_routes_default_traffic_and_force_shift_migrates() {
+        // two rungs over identical fp32 engines: the routing/migration
+        // machinery is under test here, not the numerics (those are the
+        // business of tests/prop_autopilot.rs)
+        let rung = |name: &str| OperatingPoint {
+            name: name.to_string(),
+            backend: "fp32".to_string(),
+            kv: KvCacheConfig::FP32,
+        };
+        let server = Frontend::start_adaptive(
+            vec![(rung("hi"), micro_engine(5)), (rung("lo"), micro_engine(5))],
+            FrontendConfig::default(),
+            AutopilotConfig { policy: AutopilotPolicy::Frozen, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(server.active_rung(), Some(0));
+        // untagged traffic lands on rung 0
+        let t = server.submit(SubmitRequest::new(vec![1, 2, 3], 3)).unwrap();
+        assert_eq!(t.replica, ReplicaId(0));
+        assert_eq!(t.rx.recv_timeout(Duration::from_secs(30)).unwrap().tokens.len(), 3);
+        // a frozen autopilot never shifts on its own
+        assert_eq!(server.autopilot_tick(), ShiftDecision::Hold);
+        assert_eq!(server.active_rung(), Some(0));
+        // forced downshift retargets the default tag; new untagged
+        // traffic lands on rung 1 and still completes
+        assert_eq!(server.force_shift(true).unwrap(), 1);
+        assert_eq!(server.metrics.counter("server.downshifts"), 1);
+        assert_eq!(server.metrics.gauge("server.precision_rung"), 1);
+        let t = server.submit(SubmitRequest::new(vec![1, 2, 3], 3)).unwrap();
+        assert_eq!(t.replica, ReplicaId(1));
+        assert_eq!(t.rx.recv_timeout(Duration::from_secs(30)).unwrap().tokens.len(), 3);
+        // shift back up; the edges error instead of walking off
+        assert_eq!(server.force_shift(false).unwrap(), 0);
+        assert!(server.force_shift(false).is_err(), "already at rung 0");
+        assert_eq!(server.metrics.counter("server.upshifts"), 1);
         server.shutdown();
     }
 }

@@ -21,6 +21,7 @@
 //! # Ok(()) }
 //! ```
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -28,6 +29,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::abq::OptLevel;
 use crate::model::{KvCacheConfig, ModelConfig, PackSource, PackView, Transformer, WeightPack};
+use crate::precision::{Ladder, OperatingPoint};
 use crate::quant::{CorrectionSet, WAConfig};
 use crate::runtime::artifacts::ArtifactManifest;
 use crate::spec::SpecConfig;
@@ -323,6 +325,84 @@ impl EngineBuilder {
             .collect()
     }
 
+    /// Build one engine per rung of a precision [`Ladder`] — the
+    /// adaptive-serving form (`Frontend::start_adaptive`). Every rung is
+    /// prepared from **one** artifacts read; rungs that share a backend
+    /// spec (the same WqAp at two KV widths, say) share one prepared
+    /// `Arc<Transformer>` outright. The first rung to use each prepared
+    /// model is its *weights owner*, so summing the engines'
+    /// [`super::MemoryReport`]s bills every distinct weight pack exactly
+    /// once (`weight_bytes_incremental` ≈ 0 on the sharing rungs).
+    /// Native execution only; speculative decoding does not compose with
+    /// the ladder yet.
+    pub fn build_adaptive(
+        self,
+        ladder: &Ladder,
+    ) -> Result<Vec<(OperatingPoint, Arc<dyn InferenceEngine>)>> {
+        ladder.validate()?;
+        if let Some(t) = self.threads {
+            par::set_threads(t);
+        }
+        if self.execution != Execution::Native {
+            anyhow::bail!("adaptive serving runs on the native execution path only");
+        }
+        if self.speculative.is_some() {
+            anyhow::bail!("adaptive serving and speculative decoding do not compose yet");
+        }
+        let opts = BackendOptions { opt_level: self.opt_level };
+        // one artifacts read serves every rung (None on the random path)
+        let art = match (&self.random, &self.weights) {
+            (Some(_), _) => None,
+            (None, Some(dir)) => {
+                let loaded = read_artifacts(dir).with_context(|| {
+                    format!("load artifacts from {dir:?} (run `make artifacts`)")
+                })?;
+                Some((loaded, dir.clone()))
+            }
+            (None, None) => anyhow::bail!(
+                "EngineBuilder: set .weights(dir) or .random_weights(cfg, seed)"
+            ),
+        };
+        let mut prepared: HashMap<String, Arc<Transformer>> = HashMap::new();
+        let mut out = Vec::new();
+        for rung in &ladder.rungs {
+            let (model, owner) = match prepared.get(&rung.backend) {
+                Some(m) => (Arc::clone(m), false),
+                None => {
+                    let backend = self
+                        .registry
+                        .resolve_with(&rung.backend, &opts)
+                        .with_context(|| format!("resolve backend '{}'", rung.backend))?;
+                    let m = if let Some((cfg, seed)) = self.random {
+                        Transformer::random_corrected(
+                            cfg,
+                            backend.as_ref(),
+                            seed,
+                            self.correction.as_ref(),
+                        )?
+                    } else {
+                        let (loaded, dir) = art.as_ref().expect("checked above");
+                        prepare_from_artifacts(
+                            loaded,
+                            dir,
+                            backend.as_ref(),
+                            self.correction.as_ref(),
+                            self.auto_correction,
+                            &rung.backend,
+                        )?
+                    };
+                    let m = Arc::new(m);
+                    prepared.insert(rung.backend.clone(), Arc::clone(&m));
+                    (m, true)
+                }
+            };
+            let engine =
+                NativeEngine::shared(model, rung.kv, self.kv_pool_bytes, None, owner)?;
+            out.push((rung.clone(), Arc::new(engine) as Arc<dyn InferenceEngine>));
+        }
+        Ok(out)
+    }
+
     #[cfg(feature = "pjrt")]
     fn build_pjrt(self) -> Result<Box<dyn InferenceEngine>> {
         let dir = self.weights.ok_or_else(|| {
@@ -497,6 +577,63 @@ mod tests {
             EngineBuilder::new().random_weights(MICRO, 3).backend("abq:w8a8").build().unwrap();
         assert!(plain.spec_config().is_none());
         assert_eq!(plain.memory_report().spec_draft_weight_bytes, 0);
+    }
+
+    #[test]
+    fn build_adaptive_shares_one_pack_across_rungs_with_the_same_backend() {
+        const MICRO: ModelConfig = ModelConfig {
+            name: "micro",
+            vocab: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 16,
+            rope_base: 10000.0,
+        };
+        // same WqAp at two KV widths: one prepared pack, two engines
+        let ladder = Ladder::parse("w4a4@kv8,w4a4@kv4").unwrap();
+        let rungs =
+            EngineBuilder::new().random_weights(MICRO, 3).build_adaptive(&ladder).unwrap();
+        assert_eq!(rungs.len(), 2);
+        assert_eq!(rungs[0].0.name, "w4a4-kv8");
+        let owner = rungs[0].1.memory_report();
+        let sharer = rungs[1].1.memory_report();
+        assert!(owner.weight_bytes_incremental > 0, "rung 0 owns the pack");
+        assert_eq!(
+            sharer.weight_bytes_incremental, 0,
+            "a rung sharing the backend must not re-bill the pack"
+        );
+        assert_eq!(owner.weight_bytes, sharer.weight_bytes);
+        // the KV width stays per-rung even though the weights are shared
+        assert_eq!(rungs[0].1.kv_pool_status().unwrap().bits, 8);
+        assert_eq!(rungs[1].1.kv_pool_status().unwrap().bits, 4);
+    }
+
+    #[test]
+    fn build_adaptive_prepares_every_default_ladder_rung() {
+        const MICRO: ModelConfig = ModelConfig {
+            name: "micro",
+            vocab: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 16,
+            rope_base: 10000.0,
+        };
+        let rungs = EngineBuilder::new()
+            .random_weights(MICRO, 3)
+            .build_adaptive(&Ladder::default_ladder())
+            .unwrap();
+        assert_eq!(rungs.len(), 3);
+        for (op, engine) in &rungs {
+            let mut s = engine.new_session().unwrap();
+            let logits = engine.prefill(&[1, 2], s.as_mut()).unwrap();
+            assert_eq!(logits.len(), 2 * MICRO.vocab, "{}", op.name);
+        }
+        // distinct backends → each rung owns its own pack
+        assert!(rungs.iter().all(|(_, e)| e.memory_report().weight_bytes_incremental > 0));
     }
 
     #[test]

@@ -50,6 +50,9 @@ pub use crate::runtime::{SessionFile, SessionFingerprint};
 // learned distribution corrections travel through the builder and
 // `PrepareCtx` (see docs/CALIBRATION.md)
 pub use crate::quant::{Correction, CorrectionSet};
+// the precision ladder rides through `EngineBuilder::build_adaptive`
+// into `Frontend::start_adaptive` (see docs/SERVING.md §adaptive)
+pub use crate::precision::{Ladder, OperatingPoint};
 // self-speculative decoding configuration travels through the builder;
 // the round outcome/stats types surface through `spec_round`
 // (see docs/SPECULATIVE.md)

@@ -74,6 +74,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod eval;
 pub mod model;
+pub mod precision;
 pub mod prefix;
 pub mod quant;
 pub mod runtime;

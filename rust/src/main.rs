@@ -5,6 +5,13 @@
 //!   run      [--prompt 1,2,3]    greedy generation from a token prompt
 //!   serve    [--addr HOST:PORT]  TCP line-protocol serving (JSON in/out)
 //!            [--replicas N]      N workers over one shared weight set
+//!            [--autopilot]       SLA-driven adaptive precision: serve a
+//!            [--ladder SPEC]     ladder of operating points (default
+//!            [--slo-ttft-ms N]   w6a6@kv8,w4a4@kv8,w2*a8@kv4), walking
+//!                                down under SLO/pool pressure and back
+//!                                up when load drops
+//!   precision [--budget-mb A,B]  sensitivity-ranked per-layer bit
+//!                                allocation search → ladder plan
 //!   eval     [--config w2*a8]    perplexity on the held-out corpus
 //!   zeroshot [--config w2*a8]    synthetic zero-shot task suite
 //!   calibrate [--config w2*a8]   learn distribution corrections (DLC)
@@ -36,8 +43,10 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use abq_llm::abq::{BitPlanes, OptLevel};
-use abq_llm::coordinator::{Frontend, FrontendConfig, SubmitRequest};
-use abq_llm::engine::{backend_tag, EngineBuilder, InferenceEngine, KvCacheConfig, SpecConfig};
+use abq_llm::coordinator::{AutopilotConfig, Frontend, FrontendConfig, SubmitRequest};
+use abq_llm::engine::{
+    backend_tag, EngineBuilder, InferenceEngine, KvCacheConfig, Ladder, SpecConfig,
+};
 use abq_llm::eval;
 use abq_llm::quant::WAConfig;
 use abq_llm::util::cli::Args;
@@ -102,15 +111,17 @@ fn main() -> Result<()> {
         Some("eval") => cmd_eval(&args),
         Some("zeroshot") => cmd_zeroshot(&args),
         Some("calibrate") => cmd_calibrate(&args),
+        Some("precision") => cmd_precision(&args),
         Some("gemm") => cmd_gemm(&args),
         Some("pjrt") => cmd_pjrt(&args),
         _ => {
             eprintln!(
-                "usage: abq-llm <info|run|serve|eval|zeroshot|calibrate|gemm|pjrt> \
+                "usage: abq-llm <info|run|serve|eval|zeroshot|calibrate|precision|gemm|pjrt> \
                  [--artifacts DIR] [--backend fp32|int8|int4|abq] [--config w2*a8] \
                  [--threads N] [--no-correction] \
                  [--spec-draft w2*a8 --spec-k 4] \
-                 [--prefix-cache [--session-dir DIR]] [--replicas N] ..."
+                 [--prefix-cache [--session-dir DIR]] [--replicas N] \
+                 [--autopilot [--ladder SPEC] [--slo-ttft-ms N]] ..."
             );
             Ok(())
         }
@@ -315,6 +326,60 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Sensitivity-ranked per-layer bit-allocation search
+/// (docs/SERVING.md §adaptive precision): measure each block's output
+/// MSE at every candidate WqAp config against fp32 block taps, greedily
+/// spend a descending byte-budget series where the bytes buy the most
+/// MSE, and print the allocation table plus the projected serving
+/// ladder (`--ladder` input for `serve --autopilot`).
+fn cmd_precision(args: &Args) -> Result<()> {
+    use abq_llm::model::{ModelConfig, WeightPack};
+    use abq_llm::precision::{plan_ladder, sensitivity_profile, SearchOptions};
+
+    let dir = artifacts_dir(args);
+    let pack = WeightPack::load(&dir.join("weights.abqw"))?;
+    let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))?;
+    let manifest =
+        Json::parse(&manifest_text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+    let cfg = ModelConfig::from_manifest(&manifest)?;
+    if let Some(n) = args.get("threads").and_then(|v| v.parse::<usize>().ok()) {
+        abq_llm::util::par::set_threads(n);
+    }
+    let defaults = SearchOptions::default();
+    let opts = SearchOptions {
+        seqs: args.get_usize("seqs", defaults.seqs),
+        seq_len: args.get_usize("seq-len", defaults.seq_len),
+        ..defaults
+    };
+    println!(
+        "profiling per-layer sensitivity on {} seqs x {} tokens ({} candidates)",
+        opts.seqs,
+        opts.seq_len,
+        opts.candidates.len()
+    );
+    let profile = sensitivity_profile(&pack, &cfg, &opts)?;
+    // budget series: --budget-mb A,B,C (descending), or the uniform cost
+    // of every candidate config, densest first
+    let budgets: Vec<usize> = match args.get("budget-mb") {
+        Some(spec) => spec
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .map(|mb| mb * 1024 * 1024)
+                    .map_err(|e| anyhow::anyhow!("--budget-mb: {e}"))
+            })
+            .collect::<Result<_>>()?,
+        None => (0..profile.candidates.len()).rev().map(|ci| profile.uniform_bytes(ci)).collect(),
+    };
+    let (ladder, allocations) = plan_ladder(&profile, &budgets)?;
+    print!("{}", abq_llm::precision::search::report_text(&profile, &allocations));
+    println!("ladder: {}", ladder.names().join(" → "));
+    println!("(pass the rung list to `serve --autopilot --ladder ...`)");
+    Ok(())
+}
+
 fn cmd_gemm(args: &Args) -> Result<()> {
     let m = args.get_usize("m", 1);
     let n = args.get_usize("n", 4096);
@@ -372,27 +437,6 @@ fn cmd_pjrt(_args: &Args) -> Result<()> {
 ///            "decode_us": ..}`
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7070");
-    // load requested replicas: default = the requested backend + fp16 for
-    // A/B. Backends without a WqAp artifact tag (int8, int4) route under
-    // their spec string. `--replicas N` runs N copies of the primary
-    // config over one shared weight set (zero-copy mmap on artifact
-    // engines — docs/SERVING.md §multi-replica).
-    let mut replicas: Vec<(String, Arc<dyn InferenceEngine>)> = Vec::new();
-    let primary_spec = backend_spec(args)?;
-    let primary_tag = backend_tag(&primary_spec).unwrap_or_else(|_| primary_spec.clone());
-    let n_replicas = args.get_usize("replicas", 1).max(1);
-    if n_replicas > 1 {
-        for engine in builder_from(args)?.build_replicas(n_replicas)? {
-            replicas.push((primary_tag.clone(), engine));
-        }
-    } else {
-        replicas.push((primary_tag.clone(), builder_from(args)?.build_arc()?));
-    }
-    if !args.has_flag("no-fp16") && primary_tag != "fp16" {
-        let fp = builder_from(args)?.backend("fp32").build_arc()?;
-        replicas.push(("fp16".to_string(), fp));
-    }
-    let default_tag = replicas[0].0.clone();
     // prefix cache: --prefix-cache [--session-dir DIR]
     // (docs/SERVING.md §prefix cache)
     let prefix_cache = args.has_flag("prefix-cache");
@@ -400,52 +444,116 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if session_dir.is_some() && !prefix_cache {
         eprintln!("note: --session-dir has no effect without --prefix-cache");
     }
-    println!(
-        "serving {} on {addr} (default config {default_tag})",
-        replicas.iter().map(|(t, _)| t.as_str()).collect::<Vec<_>>().join(", ")
-    );
+
+    let server = if args.has_flag("autopilot") {
+        // adaptive precision (docs/SERVING.md §adaptive precision): one
+        // worker per ladder rung, all rungs prepared from one artifacts
+        // read; the autopilot walks the ladder against the TTFT SLO and
+        // KV pool occupancy. Replaces the fixed-config fleet (including
+        // the fp16 A/B replica — add an fp rung to the ladder instead).
+        let mut ladder = match args.get("ladder") {
+            Some(spec) => Ladder::parse(&spec)?,
+            None => Ladder::default_ladder(),
+        };
+        if let Some(bs) = args.get("kv-block").and_then(|v| v.parse::<usize>().ok()) {
+            ladder.set_block_size(bs);
+        }
+        let rungs = builder_from(args)?.build_adaptive(&ladder)?;
+        let pilot = AutopilotConfig {
+            slo_ttft_us: args.get_usize("slo-ttft-ms", 250) as u64 * 1000,
+            poll_ms: args.get_usize("autopilot-poll-ms", 200) as u64,
+            ..Default::default()
+        };
+        println!(
+            "serving adaptive ladder {} on {addr} (TTFT SLO p95 ≤ {} ms, poll {} ms)",
+            ladder.names().join(" → "),
+            pilot.slo_ttft_us / 1000,
+            pilot.poll_ms
+        );
+        for (op, engine) in &rungs {
+            let mem = engine.memory_report();
+            println!(
+                "  rung {}: {:.2} MB weights ({:.2} MB incremental), KV {} bits",
+                op.name,
+                mem.weight_bytes as f64 / 1e6,
+                mem.weight_bytes_incremental as f64 / 1e6,
+                op.kv.bits
+            );
+        }
+        Frontend::start_adaptive(
+            rungs,
+            FrontendConfig { prefix_cache, session_dir, ..Default::default() },
+            pilot,
+        )?
+    } else {
+        // load requested replicas: default = the requested backend + fp16
+        // for A/B. Backends without a WqAp artifact tag (int8, int4)
+        // route under their spec string. `--replicas N` runs N copies of
+        // the primary config over one shared weight set (zero-copy mmap
+        // on artifact engines — docs/SERVING.md §multi-replica).
+        let mut replicas: Vec<(String, Arc<dyn InferenceEngine>)> = Vec::new();
+        let primary_spec = backend_spec(args)?;
+        let primary_tag = backend_tag(&primary_spec).unwrap_or_else(|_| primary_spec.clone());
+        let n_replicas = args.get_usize("replicas", 1).max(1);
+        if n_replicas > 1 {
+            for engine in builder_from(args)?.build_replicas(n_replicas)? {
+                replicas.push((primary_tag.clone(), engine));
+            }
+        } else {
+            replicas.push((primary_tag.clone(), builder_from(args)?.build_arc()?));
+        }
+        if !args.has_flag("no-fp16") && primary_tag != "fp16" {
+            let fp = builder_from(args)?.backend("fp32").build_arc()?;
+            replicas.push(("fp16".to_string(), fp));
+        }
+        let default_tag = replicas[0].0.clone();
+        println!(
+            "serving {} on {addr} (default config {default_tag})",
+            replicas.iter().map(|(t, _)| t.as_str()).collect::<Vec<_>>().join(", ")
+        );
+        for (tag, engine) in &replicas {
+            let mem = engine.memory_report();
+            println!(
+                "  replica {tag}: {:.2} MB weights ({:.2} MB incremental), {:.2} MB KV/session (full)",
+                mem.weight_bytes as f64 / 1e6,
+                mem.weight_bytes_incremental as f64 / 1e6,
+                mem.kv_bytes_per_session as f64 / 1e6
+            );
+            if let Some(st) = engine.kv_pool_status() {
+                println!(
+                    "    KV pool: {} blocks × {} positions @ {} bits ({:.2} MB budget)",
+                    st.total_blocks,
+                    st.block_size,
+                    st.bits,
+                    (st.total_blocks * st.block_bytes) as f64 / 1e6
+                );
+            }
+            if let Some(sc) = engine.spec_config() {
+                println!(
+                    "    speculative: draft {} × k {} ({:.2} MB draft weights + {:.2} MB draft pool)",
+                    sc.draft,
+                    sc.k,
+                    mem.spec_draft_weight_bytes as f64 / 1e6,
+                    mem.spec_draft_pool_bytes as f64 / 1e6
+                );
+            }
+        }
+        Frontend::start(
+            replicas,
+            FrontendConfig { default_tag, prefix_cache, session_dir, ..Default::default() },
+        )?
+    };
     println!(
         "  kernel ISA: {} (detected best: {}; override with ABQ_ISA)",
         abq_llm::abq::isa::ceiling(),
         abq_llm::abq::isa::detect_best()
     );
     if prefix_cache {
-        match &session_dir {
+        match args.get("session-dir") {
             Some(d) => println!("  prefix cache: on (sessions persisted under {d:?})"),
             None => println!("  prefix cache: on (in-memory only)"),
         }
     }
-    for (tag, engine) in &replicas {
-        let mem = engine.memory_report();
-        println!(
-            "  replica {tag}: {:.2} MB weights ({:.2} MB incremental), {:.2} MB KV/session (full)",
-            mem.weight_bytes as f64 / 1e6,
-            mem.weight_bytes_incremental as f64 / 1e6,
-            mem.kv_bytes_per_session as f64 / 1e6
-        );
-        if let Some(st) = engine.kv_pool_status() {
-            println!(
-                "    KV pool: {} blocks × {} positions @ {} bits ({:.2} MB budget)",
-                st.total_blocks,
-                st.block_size,
-                st.bits,
-                (st.total_blocks * st.block_bytes) as f64 / 1e6
-            );
-        }
-        if let Some(sc) = engine.spec_config() {
-            println!(
-                "    speculative: draft {} × k {} ({:.2} MB draft weights + {:.2} MB draft pool)",
-                sc.draft,
-                sc.k,
-                mem.spec_draft_weight_bytes as f64 / 1e6,
-                mem.spec_draft_pool_bytes as f64 / 1e6
-            );
-        }
-    }
-    let server = Frontend::start(
-        replicas,
-        FrontendConfig { default_tag, prefix_cache, session_dir, ..Default::default() },
-    )?;
 
     let listener = TcpListener::bind(&addr)?;
     for stream in listener.incoming() {

@@ -471,6 +471,17 @@ impl KvPoolStatus {
     pub fn blocks_for(&self, positions: usize) -> usize {
         positions.div_ceil(self.block_size)
     }
+
+    /// Pool occupancy as a percentage (0 for an empty-capacity pool) —
+    /// the pressure signal the precision autopilot compares against its
+    /// high/low water marks.
+    pub fn occupancy_pct(&self) -> u64 {
+        if self.total_blocks == 0 {
+            0
+        } else {
+            (self.used_blocks() * 100 / self.total_blocks) as u64
+        }
+    }
 }
 
 /// The shared block pool: a capacity budget plus a free list of recycled

@@ -1,0 +1,197 @@
+//! Runtime precision policy — the layer that turns the paper's
+//! "arbitrary-bit" freedom into a *serving* degree of freedom instead of
+//! a build-time constant.
+//!
+//! Two halves:
+//!
+//! * [`Ladder`] / [`OperatingPoint`] — an ordered list of named
+//!   operating points (backend spec + KV bit width), rung 0 the most
+//!   precise. The serving autopilot walks down this ladder under load
+//!   (pool pressure or latency-SLO violation) and back up when load
+//!   drops ([`crate::coordinator::AutopilotConfig`],
+//!   `docs/SERVING.md` §adaptive precision). `EngineBuilder::
+//!   build_adaptive` prepares every rung from **one** artifacts read,
+//!   de-duplicating prepared weights across rungs that share a backend.
+//! * [`search`] — a sensitivity-ranked per-layer bit-allocation search
+//!   under a global weight-byte budget, scored by the calibration
+//!   subsystem's block-tap MSE machinery (`docs/CALIBRATION.md`):
+//!   [`search::sensitivity_profile`] measures each block's output MSE at
+//!   every candidate WqAp config against the fp32 taps,
+//!   [`search::allocate_under_budget`] greedily spends bytes where they
+//!   buy the most MSE, and [`search::plan_ladder`] projects a descending
+//!   budget series into a [`Ladder`] (FineQuant-style fine-grained
+//!   allocation, uniform-rung projection for the current engine).
+
+pub mod search;
+
+use anyhow::{bail, Result};
+
+use crate::model::KvCacheConfig;
+use crate::quant::WAConfig;
+
+pub use search::{
+    allocate_under_budget, plan_ladder, sensitivity_profile, Allocation, LayerSensitivity,
+    SearchOptions, SensitivityProfile,
+};
+
+/// One rung of the precision ladder: a backend spec the engine registry
+/// resolves, the KV cache storage config the rung serves at, and the
+/// name it routes/gauges under (unique within a ladder).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OperatingPoint {
+    /// routing tag + gauge label, e.g. `w4a4-kv8` (unique per ladder)
+    pub name: String,
+    /// registry spec, e.g. `abq:w4a4` or `fp32`
+    pub backend: String,
+    /// KV page storage for this rung (bits 32/8/4 + block size)
+    pub kv: KvCacheConfig,
+}
+
+impl OperatingPoint {
+    /// Build a rung from a `<config>[@kv<bits>]` fragment: `w6a6@kv8`,
+    /// `abq:w2*a8@kv4`, `fp32@kv32`. Omitted KV defaults to 8-bit.
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        let (cfg_part, kv_part) = match s.split_once('@') {
+            Some((c, k)) => (c.trim(), Some(k.trim())),
+            None => (s, None),
+        };
+        let kv_bits: u8 = match kv_part {
+            None => 8,
+            Some(k) => {
+                let digits = k.strip_prefix("kv").unwrap_or(k);
+                digits
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("operating point '{s}': kv bits: {e}"))?
+            }
+        };
+        if !matches!(kv_bits, 32 | 8 | 4) {
+            bail!("operating point '{s}': kv bits must be 32, 8 or 4");
+        }
+        let (backend, tag) = match cfg_part {
+            "fp32" | "fp16" | "fp" => ("fp32".to_string(), "fp16".to_string()),
+            other => {
+                let bare = other.strip_prefix("abq:").unwrap_or(other);
+                let wa: WAConfig = bare
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("operating point '{s}': {e}"))?;
+                (format!("abq:{wa}"), wa.tag())
+            }
+        };
+        Ok(OperatingPoint {
+            name: format!("{tag}-kv{kv_bits}"),
+            backend,
+            kv: KvCacheConfig { bits: kv_bits, block_size: KvCacheConfig::FP32.block_size },
+        })
+    }
+}
+
+/// An ordered precision ladder: rung 0 is the most precise operating
+/// point (where the autopilot starts and returns to), the last rung the
+/// cheapest the deployment is willing to degrade to.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Ladder {
+    pub rungs: Vec<OperatingPoint>,
+}
+
+impl Ladder {
+    /// Parse a comma-separated rung list, most precise first:
+    /// `w6a6@kv8,w4a4@kv8,w2*a8@kv4` (the `--ladder` flag format).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let rungs: Vec<OperatingPoint> = spec
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(OperatingPoint::parse)
+            .collect::<Result<_>>()?;
+        let ladder = Ladder { rungs };
+        ladder.validate()?;
+        Ok(ladder)
+    }
+
+    /// The ROADMAP's default degradation ladder:
+    /// w6a6 (KV 8) → w4a4 (KV 8) → w2*a8 (KV 4).
+    pub fn default_ladder() -> Self {
+        Ladder::parse("w6a6@kv8,w4a4@kv8,w2*a8@kv4")
+            .expect("the built-in default ladder must parse")
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.rungs.is_empty() {
+            bail!("a precision ladder needs at least one rung");
+        }
+        for (i, r) in self.rungs.iter().enumerate() {
+            if self.rungs[..i].iter().any(|p| p.name == r.name) {
+                bail!("duplicate ladder rung '{}' — rung names route traffic", r.name);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.rungs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rungs.is_empty()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.rungs.iter().map(|r| r.name.as_str()).collect()
+    }
+
+    /// Override the KV block size on every rung (the `--kv-block` flag
+    /// applies fleet-wide; bits stay per-rung).
+    pub fn set_block_size(&mut self, block_size: usize) {
+        for r in &mut self.rungs {
+            r.kv.block_size = block_size;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_rungs_with_and_without_kv() {
+        let p = OperatingPoint::parse("w6a6@kv8").unwrap();
+        assert_eq!(p.name, "w6a6-kv8");
+        assert_eq!(p.backend, "abq:w6a6");
+        assert_eq!(p.kv.bits, 8);
+        let q = OperatingPoint::parse("abq:w2*a8@kv4").unwrap();
+        assert_eq!(q.name, "w2sa8-kv4");
+        assert_eq!(q.backend, "abq:w2*a8");
+        assert_eq!(q.kv.bits, 4);
+        let r = OperatingPoint::parse("w4a4").unwrap();
+        assert_eq!(r.kv.bits, 8, "omitted kv defaults to 8");
+        let fp = OperatingPoint::parse("fp32@kv32").unwrap();
+        assert_eq!(fp.name, "fp16-kv32");
+        assert_eq!(fp.backend, "fp32");
+        assert!(OperatingPoint::parse("w4a4@kv7").is_err(), "kv bits are 32/8/4");
+        assert!(OperatingPoint::parse("w99a99").is_err());
+    }
+
+    #[test]
+    fn default_ladder_matches_the_roadmap_shape() {
+        let l = Ladder::default_ladder();
+        assert_eq!(l.names(), vec!["w6a6-kv8", "w4a4-kv8", "w2sa8-kv4"]);
+        assert_eq!(l.rungs[0].backend, "abq:w6a6");
+        assert_eq!(l.rungs[2].kv.bits, 4);
+    }
+
+    #[test]
+    fn duplicate_rung_names_are_rejected() {
+        assert!(Ladder::parse("w4a4@kv8,w4a4@kv8").is_err());
+        // same config at different KV widths is two distinct rungs
+        assert!(Ladder::parse("w4a4@kv8,w4a4@kv4").is_ok());
+        assert!(Ladder::parse("").is_err());
+    }
+
+    #[test]
+    fn block_size_override_applies_to_every_rung() {
+        let mut l = Ladder::default_ladder();
+        l.set_block_size(32);
+        assert!(l.rungs.iter().all(|r| r.kv.block_size == 32));
+        assert_eq!(l.rungs[2].kv.bits, 4, "bits stay per-rung");
+    }
+}

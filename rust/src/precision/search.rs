@@ -1,0 +1,382 @@
+//! Sensitivity-ranked per-layer bit allocation under a global weight-byte
+//! budget (the FineQuant-style half of the precision autopilot).
+//!
+//! The signal is the calibration subsystem's block-tap machinery
+//! (`crate::calib`): the fp32 model runs the deterministic calibration
+//! corpus once, tapping every block's residual input/output; each block
+//! is then re-run through the scalar reference linears at every
+//! candidate WqAp config (identity corrections — this ranks *bit
+//! widths*, calibration then tunes whichever config ships), and the
+//! block-output MSE against the fp32 tap is that layer's sensitivity at
+//! that width. Everything is deterministic given the seed.
+//!
+//! [`allocate_under_budget`] is a greedy marginal-utility ascent: start
+//! every layer at the cheapest candidate and repeatedly buy the upgrade
+//! with the best MSE-reduction-per-byte until the budget is spent —
+//! sensitive layers (attention projections of early blocks, typically)
+//! climb to high bits first, tolerant layers stay low. A larger budget
+//! only extends the upgrade sequence, so predicted MSE is monotone
+//! non-increasing in the budget (property-tested below).
+//!
+//! [`plan_ladder`] turns a descending budget series into a serving
+//! [`super::Ladder`]: each budget's allocation is projected to the
+//! cheapest *uniform* operating point that dominates it (the engine
+//! currently instantiates one backend for all layers; the per-layer
+//! allocation ships in the report and is the prepare target once
+//! per-layer backends land). KV follows the ROADMAP shape: every rung
+//! serves 8-bit KV except the tightest, which drops to 4-bit.
+
+use anyhow::{bail, Context, Result};
+
+use crate::calib::optimize::{block_forward, RefLinear};
+use crate::calib::{block_weights, calibration_tokens};
+use crate::engine::Fp32Backend;
+use crate::model::{BlockTap, ForwardScratch, KvCache, ModelConfig, Transformer, WeightPack};
+use crate::quant::{Correction, WAConfig};
+
+use super::{Ladder, OperatingPoint};
+
+/// Search hyper-parameters. Defaults profile the tiny models in
+/// milliseconds; everything is deterministic given `seed`.
+#[derive(Clone, Debug)]
+pub struct SearchOptions {
+    /// calibration sequences drawn from the synthetic corpus
+    pub seqs: usize,
+    /// tokens per sequence
+    pub seq_len: usize,
+    /// corpus seed (the only randomness in the search)
+    pub seed: u64,
+    /// candidate WqAp configs, any order (sorted by weight bits inside
+    /// [`sensitivity_profile`])
+    pub candidates: Vec<WAConfig>,
+}
+
+impl Default for SearchOptions {
+    fn default() -> Self {
+        SearchOptions {
+            seqs: 4,
+            seq_len: 16,
+            seed: 0xB17_A110C,
+            candidates: ["w2*a8", "w4a4", "w6a6", "w8a8"]
+                .iter()
+                .map(|s| s.parse().expect("built-in candidates parse"))
+                .collect(),
+        }
+    }
+}
+
+/// One layer's sensitivity curve: block-output MSE vs the fp32 tap and
+/// modelled packed weight bytes, indexed by candidate (same order as
+/// [`SensitivityProfile::candidates`]).
+#[derive(Clone, Debug)]
+pub struct LayerSensitivity {
+    pub layer: usize,
+    pub mse: Vec<f64>,
+    pub bytes: Vec<usize>,
+}
+
+/// The full per-layer × per-candidate sensitivity table.
+#[derive(Clone, Debug)]
+pub struct SensitivityProfile {
+    /// candidates sorted ascending by weight bits (allocation order)
+    pub candidates: Vec<WAConfig>,
+    pub layers: Vec<LayerSensitivity>,
+}
+
+impl SensitivityProfile {
+    /// Total packed weight bytes of a *uniform* deployment at candidate
+    /// `ci` (the budget anchors `plan_ladder` budgets come from).
+    pub fn uniform_bytes(&self, ci: usize) -> usize {
+        self.layers.iter().map(|l| l.bytes[ci]).sum()
+    }
+}
+
+/// A per-layer bit assignment under one budget.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    /// candidate index per layer (into the profile's candidate list)
+    pub per_layer: Vec<usize>,
+    pub total_bytes: usize,
+    /// summed predicted block-output MSE of the assignment
+    pub total_mse: f64,
+    pub budget_bytes: usize,
+}
+
+impl Allocation {
+    /// The assignment as WqAp configs.
+    pub fn configs<'a>(&self, profile: &'a SensitivityProfile) -> Vec<&'a WAConfig> {
+        self.per_layer.iter().map(|&ci| &profile.candidates[ci]).collect()
+    }
+
+    /// Index of the most precise candidate any layer uses — the uniform
+    /// config that dominates this allocation.
+    pub fn uniform_projection(&self) -> usize {
+        self.per_layer.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Modelled packed size of one linear at `bits`: bit-plane rows
+/// (`bits` planes of ⌈in/8⌉ bytes each) plus the per-row dequant
+/// parameters (delta + zero point). A modelling convention shared by
+/// every candidate, not an exact allocator account.
+fn packed_linear_bytes(out_f: usize, in_f: usize, bits: u8) -> usize {
+    out_f * bits as usize * in_f.div_ceil(8) + out_f * 8
+}
+
+/// Tap the fp32 model once, then score every block at every candidate
+/// config (see module docs). Layers are scored independently — the
+/// block's fp32 input is replayed through quantized projections, so a
+/// layer's MSE is its own sensitivity, not an accumulation of upstream
+/// error.
+pub fn sensitivity_profile(
+    pack: &WeightPack,
+    cfg: &ModelConfig,
+    opts: &SearchOptions,
+) -> Result<SensitivityProfile> {
+    if opts.candidates.is_empty() {
+        bail!("sensitivity_profile: need at least one candidate config");
+    }
+    if opts.seq_len + 1 > cfg.max_seq {
+        bail!("sensitivity seq_len {} exceeds max_seq {}", opts.seq_len, cfg.max_seq);
+    }
+    let mut candidates = opts.candidates.clone();
+    candidates.sort_by_key(|c| (c.weight.bits, c.act.bits));
+    candidates.dedup();
+    for c in &candidates {
+        if c.weight.is_fp() {
+            bail!("sensitivity_profile ranks quantized candidates; drop '{c}'");
+        }
+    }
+
+    let fp = Transformer::from_pack(pack, *cfg, &Fp32Backend)
+        .context("the sensitivity search needs the fp32 weights in the pack")?;
+    let tokens = calibration_tokens(cfg.vocab, opts.seqs * opts.seq_len, opts.seed);
+    let mut taps: Vec<BlockTap> = Vec::with_capacity(opts.seqs);
+    let mut scratch = ForwardScratch::new();
+    for q in 0..opts.seqs {
+        let seq = &tokens[q * opts.seq_len..(q + 1) * opts.seq_len];
+        let mut cache = KvCache::new(cfg);
+        let mut tap = BlockTap::new();
+        fp.prefill_traced(seq, &mut cache, &mut scratch, &mut tap)?;
+        taps.push(tap);
+    }
+
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for li in 0..cfg.n_layers {
+        let bw = block_weights(pack, li)?;
+        let mut mse = Vec::with_capacity(candidates.len());
+        let mut bytes = Vec::with_capacity(candidates.len());
+        for wa in &candidates {
+            let ops_vec: Vec<RefLinear> = (0..7)
+                .map(|pi| {
+                    let (ref w, out_f, in_f) = bw.linears[pi];
+                    RefLinear::new(w, out_f, in_f, *wa, &Correction::identity(in_f))
+                })
+                .collect();
+            let ops: [&RefLinear; 7] = std::array::from_fn(|pi| &ops_vec[pi]);
+            let mut sum = 0f64;
+            for tap in &taps {
+                let tr = &tap.blocks[li];
+                let (out, _attn) = block_forward(cfg, &bw, &ops, &tr.input, tap.tokens);
+                sum += mse64(&out, &tr.output);
+            }
+            mse.push(sum / taps.len().max(1) as f64);
+            bytes.push(
+                bw.linears
+                    .iter()
+                    .map(|&(_, out_f, in_f)| packed_linear_bytes(out_f, in_f, wa.weight.bits))
+                    .sum(),
+            );
+        }
+        layers.push(LayerSensitivity { layer: li, mse, bytes });
+    }
+    Ok(SensitivityProfile { candidates, layers })
+}
+
+/// Greedy marginal-utility allocation (see module docs). Starts at the
+/// cheapest candidate everywhere — so an infeasibly small budget still
+/// returns the floor assignment (with `total_bytes > budget_bytes`,
+/// visible to the caller) instead of failing.
+pub fn allocate_under_budget(profile: &SensitivityProfile, budget_bytes: usize) -> Allocation {
+    let n_layers = profile.layers.len();
+    let cheapest = |l: &LayerSensitivity| -> usize {
+        (0..l.bytes.len()).min_by_key(|&ci| (l.bytes[ci], ci)).unwrap_or(0)
+    };
+    let mut per_layer: Vec<usize> = profile.layers.iter().map(cheapest).collect();
+    let mut total_bytes: usize =
+        profile.layers.iter().enumerate().map(|(li, l)| l.bytes[per_layer[li]]).sum();
+    loop {
+        // best single-layer upgrade by MSE reduction per extra byte;
+        // ties break on fewer extra bytes, then lower layer/candidate
+        // index — fully deterministic
+        let mut best: Option<(f64, usize, usize, usize)> = None; // (gain, extra, li, ci)
+        for li in 0..n_layers {
+            let l = &profile.layers[li];
+            let cur = per_layer[li];
+            for ci in 0..profile.candidates.len() {
+                if l.bytes[ci] <= l.bytes[cur] || l.mse[ci] >= l.mse[cur] {
+                    continue;
+                }
+                let extra = l.bytes[ci] - l.bytes[cur];
+                if total_bytes + extra > budget_bytes {
+                    continue;
+                }
+                let gain = (l.mse[cur] - l.mse[ci]) / extra as f64;
+                let better = match &best {
+                    None => true,
+                    Some(&(g, e, bl, bc)) => {
+                        (gain, std::cmp::Reverse(extra), std::cmp::Reverse(li), std::cmp::Reverse(ci))
+                            > (g, std::cmp::Reverse(e), std::cmp::Reverse(bl), std::cmp::Reverse(bc))
+                    }
+                };
+                if better {
+                    best = Some((gain, extra, li, ci));
+                }
+            }
+        }
+        let Some((_, extra, li, ci)) = best else { break };
+        per_layer[li] = ci;
+        total_bytes += extra;
+    }
+    let total_mse =
+        profile.layers.iter().enumerate().map(|(li, l)| l.mse[per_layer[li]]).sum();
+    Allocation { per_layer, total_bytes, total_mse, budget_bytes }
+}
+
+/// Project a descending budget series into a serving [`Ladder`] (see
+/// module docs). Consecutive budgets that project to the same operating
+/// point collapse into one rung. Returns the ladder alongside the raw
+/// per-budget allocations (the mixed-precision evidence behind each
+/// rung).
+pub fn plan_ladder(
+    profile: &SensitivityProfile,
+    budgets_desc: &[usize],
+) -> Result<(Ladder, Vec<Allocation>)> {
+    if budgets_desc.is_empty() {
+        bail!("plan_ladder: need at least one budget");
+    }
+    let allocations: Vec<Allocation> =
+        budgets_desc.iter().map(|&b| allocate_under_budget(profile, b)).collect();
+    let mut rungs: Vec<OperatingPoint> = Vec::new();
+    for (i, alloc) in allocations.iter().enumerate() {
+        let wa = &profile.candidates[alloc.uniform_projection()];
+        let kv_bits = if i + 1 == allocations.len() && allocations.len() > 1 { 4 } else { 8 };
+        let point = OperatingPoint::parse(&format!("{wa}@kv{kv_bits}"))?;
+        if rungs.last() != Some(&point) {
+            rungs.push(point);
+        }
+    }
+    let ladder = Ladder { rungs };
+    ladder.validate()?;
+    Ok((ladder, allocations))
+}
+
+/// Human-readable allocation table (the `precision` CLI report).
+pub fn report_text(profile: &SensitivityProfile, allocations: &[Allocation]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<12} {:>12} {:>12} {:>10}  per-layer bits",
+        "budget", "bytes", "pred. MSE", "uniform"
+    );
+    for a in allocations {
+        let per: Vec<String> =
+            a.configs(profile).iter().map(|c| c.to_string()).collect();
+        let _ = writeln!(
+            out,
+            "{:<12} {:>12} {:>12.4e} {:>10}  [{}]",
+            a.budget_bytes,
+            a.total_bytes,
+            a.total_mse,
+            profile.candidates[a.uniform_projection()].to_string(),
+            per.join(" ")
+        );
+    }
+    out
+}
+
+fn mse64(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>() / a.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::synthetic::synthetic_trained;
+
+    fn profile() -> SensitivityProfile {
+        let sm = synthetic_trained(32, 2, 5);
+        let opts = SearchOptions { seqs: 2, seq_len: 8, ..Default::default() };
+        sensitivity_profile(&sm.pack, &sm.cfg, &opts).unwrap()
+    }
+
+    #[test]
+    fn profile_is_deterministic_and_bytes_grow_with_bits() {
+        let sm = synthetic_trained(32, 2, 5);
+        let opts = SearchOptions { seqs: 2, seq_len: 8, ..Default::default() };
+        let a = sensitivity_profile(&sm.pack, &sm.cfg, &opts).unwrap();
+        let b = sensitivity_profile(&sm.pack, &sm.cfg, &opts).unwrap();
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.mse, lb.mse, "same pack + options must give identical MSE");
+            assert_eq!(la.bytes, lb.bytes);
+        }
+        // candidates sorted by weight bits → bytes strictly increase
+        for l in &a.layers {
+            assert!(l.bytes.windows(2).all(|w| w[0] < w[1]), "bytes monotone in bits");
+        }
+        assert!(a.layers.iter().all(|l| l.mse.iter().all(|m| m.is_finite())));
+    }
+
+    #[test]
+    fn allocation_respects_budget_and_mse_is_monotone_in_budget() {
+        let p = profile();
+        let lo = p.uniform_bytes(0);
+        let hi = p.uniform_bytes(p.candidates.len() - 1);
+        let mut prev_mse = f64::INFINITY;
+        for budget in [lo, (lo + hi) / 2, hi, hi * 2] {
+            let a = allocate_under_budget(&p, budget);
+            assert!(
+                a.total_bytes <= budget,
+                "feasible budget {budget} must be respected (used {})",
+                a.total_bytes
+            );
+            assert!(
+                a.total_mse <= prev_mse + 1e-12,
+                "more bytes must never predict worse MSE"
+            );
+            prev_mse = a.total_mse;
+        }
+        // an unlimited budget buys the most precise candidate everywhere
+        let max = allocate_under_budget(&p, usize::MAX);
+        assert!(max.per_layer.iter().all(|&ci| ci == p.candidates.len() - 1));
+        // an infeasible budget returns the floor instead of failing
+        let floor = allocate_under_budget(&p, 0);
+        assert!(floor.per_layer.iter().all(|&ci| ci == 0));
+        assert!(floor.total_bytes > 0);
+    }
+
+    #[test]
+    fn planned_ladder_is_ordered_named_and_deduped() {
+        let p = profile();
+        let budgets = [
+            p.uniform_bytes(p.candidates.len() - 1),
+            p.uniform_bytes(1),
+            p.uniform_bytes(0),
+        ];
+        let (ladder, allocs) = plan_ladder(&p, &budgets).unwrap();
+        assert_eq!(allocs.len(), budgets.len());
+        assert!(!ladder.is_empty());
+        // rung 0 dominates the tail: uniform projections never get more
+        // precise as budgets shrink
+        let projections: Vec<usize> = allocs.iter().map(|a| a.uniform_projection()).collect();
+        assert!(projections.windows(2).all(|w| w[0] >= w[1]));
+        // the tightest rung drops KV to 4 bits, the rest serve 8
+        assert_eq!(ladder.rungs.last().unwrap().kv.bits, 4);
+        for r in &ladder.rungs[..ladder.len() - 1] {
+            assert_eq!(r.kv.bits, 8);
+        }
+        assert!(!report_text(&p, &allocs).is_empty());
+    }
+}

@@ -1,0 +1,233 @@
+//! Property tests for the adaptive-precision autopilot
+//! (docs/SERVING.md §adaptive precision): a **frozen** autopilot must be
+//! invisible — greedy output bit-identical to a fixed-config engine at
+//! every ladder operating point; a forced mid-stream downshift must
+//! continue every in-flight session bit-identically (each stream is a
+//! rung-0 prefix followed by exactly the rung-1 greedy continuation of
+//! that context); and the adaptive policy must downshift under SLO
+//! pressure and restore precision when load drops.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use abq_llm::coordinator::{
+    AutopilotConfig, AutopilotPolicy, Frontend, FrontendConfig, ReplicaId, ShiftDecision,
+    SubmitRequest,
+};
+use abq_llm::engine::{
+    generate, EngineBuilder, InferenceEngine, Ladder, OperatingPoint,
+};
+use abq_llm::model::ModelConfig;
+
+const MICRO: ModelConfig = ModelConfig {
+    name: "micro",
+    vocab: 64,
+    d_model: 16,
+    n_layers: 1,
+    n_heads: 2,
+    d_ff: 32,
+    max_seq: 48,
+    rope_base: 10000.0,
+};
+
+/// One seed everywhere: the fixed reference engine and the adaptive
+/// ladder rungs instantiate the same random weights, so any output
+/// difference is the autopilot's fault.
+const SEED: u64 = 77;
+
+fn fixed_engine(op: &OperatingPoint) -> Arc<dyn InferenceEngine> {
+    EngineBuilder::new()
+        .random_weights(MICRO, SEED)
+        .backend(&op.backend)
+        .kv_cache(op.kv)
+        .build_arc()
+        .unwrap()
+}
+
+fn adaptive_rungs(ladder: &Ladder) -> Vec<(OperatingPoint, Arc<dyn InferenceEngine>)> {
+    EngineBuilder::new().random_weights(MICRO, SEED).build_adaptive(ladder).unwrap()
+}
+
+fn prompts(n_requests: usize, max_new_base: usize) -> Vec<(Vec<u32>, usize)> {
+    (0..n_requests)
+        .map(|i| {
+            let prompt: Vec<u32> =
+                (0..3 + i % 4).map(|t| ((t * 7 + i) % 60) as u32 + 1).collect();
+            (prompt, max_new_base + i % 3)
+        })
+        .collect()
+}
+
+fn collect(tickets: Vec<abq_llm::coordinator::Ticket>) -> Vec<Vec<u32>> {
+    tickets
+        .into_iter()
+        .map(|t| {
+            t.rx.recv_timeout(Duration::from_secs(60)).expect("response must arrive").tokens
+        })
+        .collect()
+}
+
+/// Serve every request untagged on a single fixed-config replica and
+/// return the greedy streams in submission order.
+fn serve_fixed(op: &OperatingPoint, reqs: &[(Vec<u32>, usize)]) -> Vec<Vec<u32>> {
+    let front = Frontend::start(
+        vec![(op.name.clone(), fixed_engine(op))],
+        FrontendConfig { default_tag: op.name.clone(), ..Default::default() },
+    )
+    .unwrap();
+    let tickets: Vec<_> = reqs
+        .iter()
+        .map(|(p, max_new)| front.submit(SubmitRequest::new(p.clone(), *max_new)).unwrap())
+        .collect();
+    let out = collect(tickets);
+    front.shutdown();
+    out
+}
+
+#[test]
+fn frozen_autopilot_is_bit_identical_to_the_fixed_engine() {
+    // every ladder config × KV width the default ladder draws from: the
+    // frozen autopilot serves from rung 0 and must never shift, even
+    // with a second rung available and an unmeetable SLO goading it —
+    // so its greedy streams must match a plain fixed-config deployment
+    let reqs = prompts(4, 5);
+    for cfg in ["w6a6", "w4a4", "w2*a8"] {
+        for kv in [8u8, 4] {
+            let op = OperatingPoint::parse(&format!("{cfg}@kv{kv}")).unwrap();
+            let baseline = serve_fixed(&op, &reqs);
+            // a real (different) second rung: shifting is possible, the
+            // frozen policy just must not do it
+            let decoy = if op.name == "w4a4-kv8" { "w6a6@kv8" } else { "w4a4@kv8" };
+            let ladder = Ladder {
+                rungs: vec![op.clone(), OperatingPoint::parse(decoy).unwrap()],
+            };
+            let front = Frontend::start_adaptive(
+                adaptive_rungs(&ladder),
+                FrontendConfig::default(),
+                AutopilotConfig {
+                    policy: AutopilotPolicy::Frozen,
+                    slo_ttft_us: 0, // any completion would violate — if the policy looked
+                    min_dwell_ticks: 0,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let tickets: Vec<_> = reqs
+                .iter()
+                .map(|(p, n)| front.submit(SubmitRequest::new(p.clone(), *n)).unwrap())
+                .collect();
+            assert_eq!(front.autopilot_tick(), ShiftDecision::Hold, "{}", op.name);
+            let streams = collect(tickets);
+            // tick again with the burst's TTFT observations in the
+            // window: frozen still holds
+            assert_eq!(front.autopilot_tick(), ShiftDecision::Hold, "{}", op.name);
+            assert_eq!(front.active_rung(), Some(0));
+            assert_eq!(front.metrics.counter("server.downshifts"), 0);
+            assert_eq!(
+                streams, baseline,
+                "{}: frozen autopilot changed the greedy output",
+                op.name
+            );
+            front.shutdown();
+        }
+    }
+}
+
+#[test]
+fn forced_downshift_continues_every_in_flight_session_bit_identically() {
+    // submit a burst, force one downshift while it is (likely) still in
+    // flight, and check every stream decomposes as
+    //   rung0_greedy[..j] ++ rung1_greedy(prompt ++ rung0_greedy[..j])
+    // for some split j — i.e. the migration replays each session's
+    // context on the cheaper rung and continues it greedily, with no
+    // invented or dropped tokens at the seam. j = max_new (finished
+    // before the shift) and j = 0 (still queued) are both legal splits.
+    let ladder = Ladder::parse("w6a6@kv8,w4a4@kv8").unwrap();
+    let r0 = fixed_engine(&ladder.rungs[0]);
+    let r1 = fixed_engine(&ladder.rungs[1]);
+    let front = Frontend::start_adaptive(
+        adaptive_rungs(&ladder),
+        FrontendConfig::default(),
+        AutopilotConfig { policy: AutopilotPolicy::Frozen, ..Default::default() },
+    )
+    .unwrap();
+    let reqs = prompts(5, 10);
+    let tickets: Vec<_> = reqs
+        .iter()
+        .map(|(p, n)| front.submit(SubmitRequest::new(p.clone(), *n)).unwrap())
+        .collect();
+    assert_eq!(front.force_shift(true).unwrap(), 1);
+    assert_eq!(front.metrics.counter("server.downshifts"), 1);
+    assert_eq!(front.active_rung(), Some(1));
+    let streams = collect(tickets);
+    for (i, tokens) in streams.iter().enumerate() {
+        let (prompt, max_new) = &reqs[i];
+        assert_eq!(tokens.len(), *max_new, "request {i} lost tokens across the shift");
+        let full0 = generate(r0.as_ref(), prompt, *max_new).unwrap();
+        let legal = (0..=*max_new).any(|j| {
+            if tokens[..j] != full0[..j] {
+                return false;
+            }
+            if j == *max_new {
+                return true; // finished on rung 0 before the shift
+            }
+            let mut ctx = prompt.clone();
+            ctx.extend_from_slice(&tokens[..j]);
+            let cont = generate(r1.as_ref(), &ctx, max_new - j).unwrap();
+            tokens[j..] == cont[..]
+        });
+        assert!(
+            legal,
+            "request {i}: stream {tokens:?} is not a rung-0 prefix plus the \
+             bit-exact rung-1 continuation (rung-0 full stream: {full0:?})"
+        );
+    }
+    front.shutdown();
+}
+
+#[test]
+fn adaptive_policy_downshifts_under_pressure_and_restores_when_idle() {
+    let ladder = Ladder::parse("w6a6@kv8,w4a4@kv8").unwrap();
+    let front = Frontend::start_adaptive(
+        adaptive_rungs(&ladder),
+        FrontendConfig::default(),
+        // unmeetable SLO (1µs TTFT), no dwell, embedder-driven ticks
+        AutopilotConfig {
+            slo_ttft_us: 1,
+            min_dwell_ticks: 0,
+            poll_ms: 0,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // a burst completes → its TTFT observations land in the window
+    let reqs = prompts(4, 4);
+    let tickets: Vec<_> = reqs
+        .iter()
+        .map(|(p, n)| front.submit(SubmitRequest::new(p.clone(), *n)).unwrap())
+        .collect();
+    collect(tickets);
+    assert_eq!(
+        front.autopilot_tick(),
+        ShiftDecision::Down,
+        "a windowed p95 above the SLO must downshift"
+    );
+    assert_eq!(front.active_rung(), Some(1));
+    assert_eq!(front.metrics.counter("server.downshifts"), 1);
+    assert!(front.metrics.gauge("server.ttft_p95_window_us") > 1);
+    // next window: no completions (p95 = None) and an empty pool — idle
+    // is not an SLO violation, so precision is restored
+    assert_eq!(
+        front.autopilot_tick(),
+        ShiftDecision::Up,
+        "an idle window must restore precision, not stay degraded"
+    );
+    assert_eq!(front.active_rung(), Some(0));
+    assert_eq!(front.metrics.counter("server.upshifts"), 1);
+    assert_eq!(front.metrics.gauge("server.precision_rung"), 0);
+    // untagged traffic follows the restored rung and still completes
+    let t = front.submit(SubmitRequest::new(vec![1, 2, 3], 3)).unwrap();
+    assert_eq!(t.replica, ReplicaId(0));
+    assert_eq!(t.rx.recv_timeout(Duration::from_secs(60)).unwrap().tokens.len(), 3);
+    front.shutdown();
+}

@@ -127,6 +127,49 @@ fn replicas_share_weights_and_report_incremental_bytes_once() {
 }
 
 #[test]
+fn prop_submit_retire_race_never_swallows_accepted_requests() {
+    // the ISSUE-9 race: submit routes under the router lock and sends on
+    // the chosen replica's channel *while still holding it*; retire marks
+    // the replica dead and sends Retire under the same lock. FIFO channel
+    // order therefore guarantees any successfully-submitted request is
+    // either served or drained and re-homed — so racing a retire against
+    // a submission burst, every Ok ticket must still produce a full
+    // response (before the fix, a request accepted in the
+    // snapshot-to-enqueue window of a dying replica hung forever)
+    check("submit-retire-race", 4, |rng| {
+        let front = start(build_fleet(2));
+        let n = usize_in(rng, 30, 60);
+        let victim = ReplicaId(usize_in(rng, 0, 1));
+        let delay_us = usize_in(rng, 0, 500) as u64;
+        std::thread::scope(|s| {
+            let fr = &front;
+            let submitter = s.spawn(move || {
+                let mut tickets = Vec::new();
+                for i in 0..n {
+                    let prompt: Vec<u32> =
+                        (0..3 + i % 3).map(|t| ((t * 5 + i) % 60) as u32 + 1).collect();
+                    if let Ok(t) = fr.submit(SubmitRequest::new(prompt, 3)) {
+                        tickets.push(t);
+                    }
+                }
+                tickets
+            });
+            // retire mid-burst (the randomized delay slides the retire
+            // across different points of the submission stream)
+            std::thread::sleep(Duration::from_micros(delay_us));
+            fr.retire(victim).unwrap();
+            for t in submitter.join().unwrap() {
+                let resp = t.rx.recv_timeout(Duration::from_secs(60)).expect(
+                    "an accepted request must never be swallowed by a concurrent retire",
+                );
+                assert_eq!(resp.tokens.len(), 3);
+            }
+        });
+        front.shutdown();
+    });
+}
+
+#[test]
 fn retire_with_no_survivor_drops_channels_instead_of_hanging() {
     let front = start(build_fleet(1));
     let t = front.submit(SubmitRequest::new(vec![1, 2, 3], 64)).unwrap();

@@ -14,7 +14,11 @@
 # self-speculative rung, ABQ_PREFIX=1 for the prefix-cache rung
 # (shared-system-prompt TTFT + admission capacity), ABQ_REPLICAS=N for
 # the multi-replica saturation rung (requests/s + p95 TTFT at 1 vs N
-# replicas over one shared weight set), and
+# replicas over one shared weight set), ABQ_AUTOPILOT=1 for the
+# adaptive-precision overload rung (the same burst served by a fixed
+# w6a6 deployment vs the default ladder under an SLA-driven autopilot;
+# records req/s for both, the overload gain, and the shift counters —
+# docs/SERVING.md §adaptive precision), and
 # ABQ_ISA=scalar|avx2|avx512|neon to lower the SIMD dispatch ceiling —
 # record a `pre` run with ABQ_ISA=scalar and a `post` run without it for
 # a scalar-vs-SIMD pair on the same machine (each entry stores the
