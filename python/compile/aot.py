@@ -282,10 +282,14 @@ def main():
 
     manifest = {
         "model": {
+            "name": TINY.name,
             "vocab": TINY.vocab, "d_model": TINY.d_model,
             "n_layers": TINY.n_layers, "n_heads": TINY.n_heads,
+            "n_kv_heads": TINY.n_kv_heads,
             "d_ff": TINY.d_ff, "max_seq": TINY.max_seq,
             "rope_base": TINY.rope_base,
+            "norm": TINY.norm, "act": TINY.act,
+            "tied_embeddings": TINY.tied_embeddings,
             "param_count": TINY.param_count(),
         },
         "fp_ppl": fp_ppl,

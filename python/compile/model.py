@@ -34,22 +34,41 @@ LINEARS = ("wq", "wk", "wv", "wo", "gate", "up", "down")
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
+    name: str = "tiny-llama"
     vocab: int = 512
     d_model: int = 256
     n_layers: int = 4
     n_heads: int = 8
+    # KV heads (GQA): == n_heads is MHA, 1 is MQA. Mirrors the rust
+    # ModelConfig; wk/wv become (kv_dim, d_model) and query head h reads
+    # KV head h // (n_heads // n_kv_heads).
+    n_kv_heads: int = 8
     d_ff: int = 704          # ~ 8/3 * d, multiple of 64
     max_seq: int = 256
     rope_base: float = 10000.0
+    # architecture variant knobs (manifest grammar; the jax trainer only
+    # exercises the LLaMA defaults, rust serves the others)
+    norm: str = "rmsnorm"            # or "layernorm"
+    act: str = "silu"                # or "gelu"
+    tied_embeddings: bool = False
 
     @property
     def head_dim(self) -> int:
         return self.d_model // self.n_heads
 
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def groups(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
     def param_count(self) -> int:
-        d, f, v = self.d_model, self.d_ff, self.vocab
-        per_block = 4 * d * d + 3 * d * f + 2 * d
-        return v * d + self.n_layers * per_block + d + d * v
+        d, f, v, kd = self.d_model, self.d_ff, self.vocab, self.kv_dim
+        per_block = 2 * d * d + 2 * kd * d + 3 * d * f + 2 * d
+        head = 0 if self.tied_embeddings else d * v
+        return v * d + self.n_layers * per_block + d + head
 
 
 TINY = ModelConfig()
@@ -80,8 +99,8 @@ def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
             "ln1": jnp.ones(d, jnp.float32),
             "ln2": jnp.ones(d, jnp.float32),
             "wq": dense(ks[i + 0], (d, d)),
-            "wk": dense(ks[i + 1], (d, d)),
-            "wv": dense(ks[i + 2], (d, d)),
+            "wk": dense(ks[i + 1], (cfg.kv_dim, d)),
+            "wv": dense(ks[i + 2], (cfg.kv_dim, d)),
             "wo": dense(ks[i + 3], (d, d)),
             "gate": dense(ks[i + 4], (f, d)),
             "up": dense(ks[i + 5], (f, d)),
@@ -212,6 +231,7 @@ def block_forward(blk, x, cos, sin, cfg: ModelConfig, *, mode="fp",
     """
     B, S, D = x.shape
     H, hd = cfg.n_heads, cfg.head_dim
+    Hkv = cfg.n_kv_heads
 
     def lin(name, inp):
         if capture is not None:
@@ -221,8 +241,8 @@ def block_forward(blk, x, cos, sin, cfg: ModelConfig, *, mode="fp",
 
     h = rmsnorm(x, blk["ln1"])
     q = lin("wq", h).reshape(B, S, H, hd)
-    k = lin("wk", h).reshape(B, S, H, hd)
-    v = lin("wv", h).reshape(B, S, H, hd)
+    k = lin("wk", h).reshape(B, S, Hkv, hd)
+    v = lin("wv", h).reshape(B, S, Hkv, hd)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
 
@@ -236,6 +256,11 @@ def block_forward(blk, x, cos, sin, cfg: ModelConfig, *, mode="fp",
         k_all, v_all = k, v
         new_kv = None
 
+    if Hkv != H:
+        # GQA head-group broadcast: repeat each KV head over its group of
+        # query heads (query head h reads KV head h // groups)
+        k_all = jnp.repeat(k_all, cfg.groups, axis=2)
+        v_all = jnp.repeat(v_all, cfg.groups, axis=2)
     scores = jnp.einsum("bshd,bthd->bhst", q, k_all) / math.sqrt(hd)
     if mask is not None:
         scores = scores + mask
@@ -305,7 +330,7 @@ def forward_decode(params, tokens, kv_caches, pos, cfg: ModelConfig, *,
 
 
 def init_kv_caches(cfg: ModelConfig, batch: int):
-    shape = (batch, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+    shape = (batch, cfg.max_seq, cfg.n_kv_heads, cfg.head_dim)
     return [(jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32))
             for _ in range(cfg.n_layers)]
 

@@ -48,9 +48,11 @@ const BENCH_MODEL: ModelConfig = ModelConfig {
     d_model: 768,
     n_layers: 2,
     n_heads: 12,
+    n_kv_heads: 12,
     d_ff: 2048,
     max_seq: 256,
     rope_base: 10000.0,
+    arch: abq_llm::model::ArchVariant::LLAMA,
 };
 
 const PROMPT: [u32; 8] = [1, 2, 3, 5, 8, 13, 21, 34];

@@ -15,7 +15,7 @@
 //! layout search, so the optimizer can afford hundreds of candidate
 //! evaluations per projection.
 
-use crate::model::transformer::{apply_rope, rmsnorm, rope_tables, silu, softmax_inplace};
+use crate::model::transformer::{act_gate, apply_rope, norm_into, rope_tables, softmax_inplace};
 use crate::model::ModelConfig;
 use crate::quant::{
     correction_output_offset, quantize_act_per_token, quantize_weight_rows, smooth_scales,
@@ -292,27 +292,31 @@ pub(crate) fn block_forward(
     t_len: usize,
 ) -> (Vec<f32>, Vec<f32>) {
     let (d, hd, nh) = (cfg.d_model, cfg.head_dim(), cfg.n_heads);
+    let (kd, group) = (cfg.kv_dim(), cfg.group_size());
+    let norm = cfg.arch.norm;
     let scale = 1.0 / (hd as f32).sqrt();
     let mut x = x_in.to_vec();
     let mut h = vec![0.0; t_len * d];
-    rmsnorm(&x, &bw.ln1, &mut h);
+    norm_into(norm, &x, &bw.ln1, &mut h);
     let [wq, wk, wv, wo, gate, up, down] = *ops;
     let mut q = wq.forward_alloc(&h, t_len);
     let mut k = wk.forward_alloc(&h, t_len);
     let v = wv.forward_alloc(&h, t_len);
     let (cos, sin) = rope_tables(cfg, 0, t_len);
-    apply_rope(&mut q, cfg, &cos, &sin, t_len);
-    apply_rope(&mut k, cfg, &cos, &sin, t_len);
+    apply_rope(&mut q, cfg, &cos, &sin, t_len, nh);
+    apply_rope(&mut k, cfg, &cos, &sin, t_len, cfg.n_kv_heads);
     let mut attn_logits = vec![0.0; nh * t_len * t_len];
     let mut ctx = vec![0.0; t_len * d];
     let mut scores = vec![0.0; t_len];
     for t in 0..t_len {
         let keys = t + 1;
         for hh in 0..nh {
+            // same head-group broadcast as the transformer's attention
+            let kvh = hh / group;
             let qv = &q[t * d + hh * hd..t * d + (hh + 1) * hd];
             let srow = &mut scores[..keys];
             for (kp, sc) in srow.iter_mut().enumerate() {
-                let kv = &k[kp * d + hh * hd..kp * d + (hh + 1) * hd];
+                let kv = &k[kp * kd + kvh * hd..kp * kd + (kvh + 1) * hd];
                 *sc = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
             }
             let base = (hh * t_len + t) * t_len;
@@ -320,7 +324,7 @@ pub(crate) fn block_forward(
             softmax_inplace(srow);
             let crow = &mut ctx[t * d + hh * hd..t * d + (hh + 1) * hd];
             for (kp, &a) in srow.iter().enumerate() {
-                let vv = &v[kp * d + hh * hd..kp * d + (hh + 1) * hd];
+                let vv = &v[kp * kd + kvh * hd..kp * kd + (kvh + 1) * hd];
                 for i in 0..hd {
                     crow[i] += a * vv[i];
                 }
@@ -331,12 +335,12 @@ pub(crate) fn block_forward(
     for i in 0..x.len() {
         x[i] += proj[i];
     }
-    rmsnorm(&x, &bw.ln2, &mut h);
+    norm_into(norm, &x, &bw.ln2, &mut h);
     let g = gate.forward_alloc(&h, t_len);
     let u = up.forward_alloc(&h, t_len);
     let mut act = vec![0.0; t_len * cfg.d_ff];
     for i in 0..act.len() {
-        act[i] = silu(g[i]) * u[i];
+        act[i] = act_gate(cfg.arch.act, g[i]) * u[i];
     }
     let dn = down.forward_alloc(&act, t_len);
     for i in 0..x.len() {

@@ -46,9 +46,11 @@ pub fn synthetic_trained(vocab: usize, n_layers: usize, seed: u64) -> SyntheticM
         d_model: d,
         n_layers,
         n_heads: 2,
+        n_kv_heads: 2,
         d_ff: 2 * d,
         max_seq: 64,
         rope_base: 10000.0,
+        arch: crate::model::ArchVariant::LLAMA,
     };
     let mut rng = SplitMix::new(seed);
     let mut pack = WeightPack::default();

@@ -680,9 +680,11 @@ mod tests {
         d_model: 16,
         n_layers: 1,
         n_heads: 2,
+        n_kv_heads: 2,
         d_ff: 32,
         max_seq: 32,
         rope_base: 10000.0,
+        arch: crate::model::ArchVariant::LLAMA,
     };
 
     fn micro_engine(seed: u64) -> Arc<dyn InferenceEngine> {

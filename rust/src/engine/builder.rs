@@ -9,7 +9,8 @@
 //! # fn main() -> anyhow::Result<()> {
 //! const MICRO: ModelConfig = ModelConfig {
 //!     name: "micro", vocab: 32, d_model: 16, n_layers: 1, n_heads: 2,
-//!     d_ff: 32, max_seq: 16, rope_base: 10000.0,
+//!     n_kv_heads: 2, d_ff: 32, max_seq: 16, rope_base: 10000.0,
+//!     arch: abq_llm::model::ArchVariant::LLAMA,
 //! };
 //! let engine = EngineBuilder::new()
 //!     .random_weights(MICRO, 7)   // or .weights("artifacts")
@@ -550,9 +551,11 @@ mod tests {
             d_model: 16,
             n_layers: 1,
             n_heads: 2,
+            n_kv_heads: 2,
             d_ff: 32,
             max_seq: 16,
             rope_base: 10000.0,
+            arch: crate::model::ArchVariant::LLAMA,
         };
         let engine = EngineBuilder::new()
             .random_weights(MICRO, 3)
@@ -587,9 +590,11 @@ mod tests {
             d_model: 16,
             n_layers: 1,
             n_heads: 2,
+            n_kv_heads: 2,
             d_ff: 32,
             max_seq: 16,
             rope_base: 10000.0,
+            arch: crate::model::ArchVariant::LLAMA,
         };
         // same WqAp at two KV widths: one prepared pack, two engines
         let ladder = Ladder::parse("w4a4@kv8,w4a4@kv4").unwrap();
@@ -618,9 +623,11 @@ mod tests {
             d_model: 16,
             n_layers: 1,
             n_heads: 2,
+            n_kv_heads: 2,
             d_ff: 32,
             max_seq: 16,
             rope_base: 10000.0,
+            arch: crate::model::ArchVariant::LLAMA,
         };
         let rungs = EngineBuilder::new()
             .random_weights(MICRO, 3)
@@ -644,9 +651,11 @@ mod tests {
             d_model: 16,
             n_layers: 1,
             n_heads: 2,
+            n_kv_heads: 2,
             d_ff: 32,
             max_seq: 16,
             rope_base: 10000.0,
+            arch: crate::model::ArchVariant::LLAMA,
         };
         for spec in ["fp32", "int8", "int4", "abq:w8a8"] {
             let engine = EngineBuilder::new()

@@ -57,9 +57,11 @@ mod tests {
         d_model: 16,
         n_layers: 1,
         n_heads: 2,
+        n_kv_heads: 2,
         d_ff: 32,
         max_seq: 64,
         rope_base: 10000.0,
+        arch: crate::model::ArchVariant::LLAMA,
     };
 
     #[test]

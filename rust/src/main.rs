@@ -70,7 +70,27 @@ fn backend_spec(args: &Args) -> Result<String> {
 }
 
 fn builder_from(args: &Args) -> Result<EngineBuilder> {
-    let mut b = EngineBuilder::new().weights(artifacts_dir(args)).backend(backend_spec(args)?);
+    // --arch <zoo name> serves a registry architecture with random
+    // weights (seeded by --seed) instead of loading artifacts — how
+    // GQA/variant entries run end-to-end before a checkpoint exists
+    let mut b = match args.get("arch") {
+        Some(name) => {
+            let entry = abq_llm::model::zoo::lookup(&name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--arch {name:?} is not in the model zoo (known: {})",
+                    abq_llm::model::zoo::entries()
+                        .iter()
+                        .map(|e| e.name())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?;
+            let seed = args.get_usize("seed", 7) as u64;
+            EngineBuilder::new().random_weights(entry.cfg, seed)
+        }
+        None => EngineBuilder::new().weights(artifacts_dir(args)),
+    }
+    .backend(backend_spec(args)?);
     if let Some(n) = args.get("threads").and_then(|v| v.parse::<usize>().ok()) {
         b = b.threads(n);
     }
@@ -117,7 +137,8 @@ fn main() -> Result<()> {
         _ => {
             eprintln!(
                 "usage: abq-llm <info|run|serve|eval|zeroshot|calibrate|precision|gemm|pjrt> \
-                 [--artifacts DIR] [--backend fp32|int8|int4|abq] [--config w2*a8] \
+                 [--artifacts DIR | --arch ZOO_NAME [--seed N]] \
+                 [--backend fp32|int8|int4|abq] [--config w2*a8] \
                  [--threads N] [--no-correction] \
                  [--spec-draft w2*a8 --spec-k 4] \
                  [--prefix-cache [--session-dir DIR]] [--replicas N] \
@@ -188,6 +209,22 @@ fn cmd_info(args: &Args) -> Result<()> {
         "registered backends: {}",
         abq_llm::engine::BackendRegistry::with_defaults().families().join(", ")
     );
+    println!("model zoo (serve any with --arch NAME):");
+    for e in abq_llm::model::zoo::entries() {
+        let c = &e.cfg;
+        println!(
+            "  - {}: {:.1}M params, {}L x {}d, {}q/{}kv heads (kv_dim {}), {:?} — {}",
+            c.name,
+            c.param_count() as f64 / 1e6,
+            c.n_layers,
+            c.d_model,
+            c.n_heads,
+            c.n_kv_heads,
+            c.kv_dim(),
+            e.family,
+            e.description
+        );
+    }
     let dir = artifacts_dir(args);
     match std::fs::read_to_string(dir.join("manifest.json")) {
         Ok(text) => {
@@ -507,8 +544,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             replicas.push(("fp16".to_string(), fp));
         }
         let default_tag = replicas[0].0.clone();
+        let m = replicas[0].1.spec().model;
         println!(
-            "serving {} on {addr} (default config {default_tag})",
+            "serving {} [{} heads over {} kv, kv_dim {}] — {} on {addr} (default config {default_tag})",
+            m.name,
+            m.n_heads,
+            m.n_kv_heads,
+            m.kv_dim(),
             replicas.iter().map(|(t, _)| t.as_str()).collect::<Vec<_>>().join(", ")
         );
         for (tag, engine) in &replicas {

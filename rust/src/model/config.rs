@@ -1,8 +1,55 @@
 //! Model configurations: the tiny trained model (served end-to-end) and
 //! the real LLaMA-family dimensions (used *analytically* and for
 //! real-shape kernel benches — Tables 12/13/14 run GEMMs at these shapes).
+//!
+//! Since PR 10 a config is no longer implicitly LLaMA-shaped: `n_kv_heads`
+//! decouples the K/V projection width from `d_model` (GQA/MQA), and
+//! [`ArchVariant`] names the norm / activation / embedding-tying choices
+//! that distinguish model families. The registry of known architectures
+//! lives in [`crate::model::zoo`].
 
-/// LLaMA-family architecture description.
+/// Normalisation used before attention / FFN and at the final layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Norm {
+    /// RMSNorm (LLaMA family): `x / rms(x) * g`, no mean subtraction, no bias.
+    RmsNorm,
+    /// Bias-free LayerNorm (GPT-NeoX-likes): `(x - mean) / std * g`.
+    LayerNorm,
+}
+
+/// Gate activation of the GLU feed-forward (`down(act(gate(x)) * up(x))`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    /// SwiGLU gate: `x * sigmoid(x)`.
+    SiLu,
+    /// GeGLU gate: tanh-approximated GELU.
+    Gelu,
+}
+
+/// The architecture knobs that vary across model families but do not
+/// change tensor *names* — every variant keeps the seven-projection
+/// block layout (`LINEAR_NAMES`), so calibration, precision search, and
+/// the `.abqw` grammar apply uniformly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArchVariant {
+    pub norm: Norm,
+    pub act: Activation,
+    /// Tied embeddings: the LM head reuses `tok_emb` (no separate `head`
+    /// tensor in the pack; `weight_bytes`/`param_count` count it once).
+    pub tied_embeddings: bool,
+}
+
+impl ArchVariant {
+    /// LLaMA-family defaults: RMSNorm + SwiGLU + untied head.
+    pub const LLAMA: ArchVariant = ArchVariant {
+        norm: Norm::RmsNorm,
+        act: Activation::SiLu,
+        tied_embeddings: false,
+    };
+}
+
+/// Architecture description. `Copy` on purpose: configs are tiny and
+/// passed by value throughout the engine.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ModelConfig {
     pub name: &'static str,
@@ -10,9 +57,14 @@ pub struct ModelConfig {
     pub d_model: usize,
     pub n_layers: usize,
     pub n_heads: usize,
+    /// Number of K/V heads. `== n_heads` is classic MHA, `1` is MQA,
+    /// anything in between is GQA: query head `h` attends to KV head
+    /// `h / (n_heads / n_kv_heads)`.
+    pub n_kv_heads: usize,
     pub d_ff: usize,
     pub max_seq: usize,
     pub rope_base: f32,
+    pub arch: ArchVariant,
 }
 
 impl ModelConfig {
@@ -20,21 +72,52 @@ impl ModelConfig {
         self.d_model / self.n_heads
     }
 
+    /// Width of one K (or V) row: `n_kv_heads * head_dim`. Equals
+    /// `d_model` for MHA; smaller by the group factor under GQA — this is
+    /// the number that sizes KV caches, pool blocks, and `wk`/`wv`.
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+
+    /// Query heads per KV head (`1` for MHA).
+    pub fn group_size(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    /// Structural invariants every config must satisfy before it reaches
+    /// the engine. Zoo entries and manifest loads both pass through this.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_heads > 0 && self.d_model % self.n_heads == 0,
+            "{}: d_model {} not divisible by n_heads {}", self.name, self.d_model, self.n_heads);
+        anyhow::ensure!(self.n_kv_heads > 0 && self.n_kv_heads <= self.n_heads,
+            "{}: n_kv_heads {} out of range (1..={})", self.name, self.n_kv_heads, self.n_heads);
+        anyhow::ensure!(self.n_heads % self.n_kv_heads == 0,
+            "{}: n_heads {} not divisible by n_kv_heads {} (head groups must be uniform)",
+            self.name, self.n_heads, self.n_kv_heads);
+        anyhow::ensure!(self.head_dim() % 2 == 0,
+            "{}: head_dim {} must be even for RoPE", self.name, self.head_dim());
+        Ok(())
+    }
+
     /// Parameters in the transformer blocks + embeddings.
     pub fn param_count(&self) -> usize {
-        let per_block = 4 * self.d_model * self.d_model + 3 * self.d_model * self.d_ff
-            + 2 * self.d_model;
-        self.vocab * self.d_model + self.n_layers * per_block + self.d_model
-            + self.d_model * self.vocab
+        let kd = self.kv_dim();
+        let per_block = 2 * self.d_model * self.d_model   // wq, wo
+            + 2 * kd * self.d_model                       // wk, wv (GQA-narrow)
+            + 3 * self.d_model * self.d_ff
+            + 2 * self.d_model;                           // two norm gains
+        let head = if self.arch.tied_embeddings { 0 } else { self.d_model * self.vocab };
+        self.vocab * self.d_model + self.n_layers * per_block + self.d_model + head
     }
 
     /// Per-layer GEMM shapes (N, K): q/k/v/o + gate/up/down — the shapes
-    /// the paper's kernel tables sweep.
+    /// the paper's kernel tables sweep. Under GQA `wk`/`wv` are
+    /// `kv_dim × d_model`.
     pub fn layer_shapes(&self) -> Vec<(&'static str, usize, usize)> {
         vec![
             ("wq", self.d_model, self.d_model),
-            ("wk", self.d_model, self.d_model),
-            ("wv", self.d_model, self.d_model),
+            ("wk", self.kv_dim(), self.d_model),
+            ("wv", self.kv_dim(), self.d_model),
             ("wo", self.d_model, self.d_model),
             ("gate", self.d_ff, self.d_model),
             ("up", self.d_ff, self.d_model),
@@ -43,39 +126,77 @@ impl ModelConfig {
     }
 
     /// Weight bytes at `bits_per_weight` (planes for ABQ), for the Table 12
-    /// memory model. Embedding + head stay fp16 as in the paper's engine.
+    /// memory model. Embedding + head stay fp16 as in the paper's engine;
+    /// a tied head is counted once.
     pub fn weight_bytes(&self, block_bits: f64) -> f64 {
         let per_block: usize = self.layer_shapes().iter().map(|(_, n, k)| n * k).sum();
         let block_bytes = self.n_layers as f64 * per_block as f64 * block_bits / 8.0;
-        let embed_bytes = (2 * self.vocab * self.d_model + self.d_model) as f64 * 2.0;
-        block_bytes + embed_bytes
+        let embed_params = if self.arch.tied_embeddings {
+            self.vocab * self.d_model + self.d_model
+        } else {
+            2 * self.vocab * self.d_model + self.d_model
+        };
+        block_bytes + embed_params as f64 * 2.0
     }
 
     /// KV cache bytes for one sequence of `seq` tokens (fp16 cache).
+    /// Rows are `kv_dim` wide, so GQA divides this by the group factor —
+    /// which is exactly the admission-capacity multiplier the paged pool
+    /// realises on top of KV quantization.
     pub fn kv_bytes(&self, seq: usize) -> f64 {
-        (2 * self.n_layers * seq * self.d_model) as f64 * 2.0
+        (2 * self.n_layers * seq * self.kv_dim()) as f64 * 2.0
     }
 
     /// Parse the `model` block of an artifacts `manifest.json` (shared by
-    /// the native and PJRT loaders in `engine/`).
+    /// the native and PJRT loaders in `engine/`). Architecture fields
+    /// beyond the LLaMA defaults are optional so old manifests still load.
     pub fn from_manifest(j: &crate::util::json::Json) -> anyhow::Result<Self> {
         use anyhow::Context;
         let need = |field: &'static str| {
             j.at(&["model", field]).and_then(|v| v.as_usize()).context(field)
         };
-        Ok(ModelConfig {
-            name: "tiny-llama",
+        // Checkpoint name travels in the manifest; `&'static str` keeps
+        // ModelConfig `Copy`, so leak the (one, small) string per load.
+        let name: &'static str = match j.at(&["model", "name"]).and_then(|v| v.as_str()) {
+            Some(s) => Box::leak(s.to_string().into_boxed_str()),
+            None => "tiny-llama", // legacy manifests predate the field
+        };
+        let n_heads = need("n_heads")?;
+        let n_kv_heads = match j.at(&["model", "n_kv_heads"]) {
+            Some(v) => v.as_usize().context("n_kv_heads")?,
+            None => n_heads, // MHA default
+        };
+        let norm = match j.at(&["model", "norm"]).and_then(|v| v.as_str()) {
+            None | Some("rmsnorm") => Norm::RmsNorm,
+            Some("layernorm") => Norm::LayerNorm,
+            Some(other) => anyhow::bail!("unknown norm {other:?} in manifest"),
+        };
+        let act = match j.at(&["model", "act"]).and_then(|v| v.as_str()) {
+            None | Some("silu") => Activation::SiLu,
+            Some("gelu") => Activation::Gelu,
+            Some(other) => anyhow::bail!("unknown act {other:?} in manifest"),
+        };
+        let tied = j
+            .at(&["model", "tied_embeddings"])
+            .and_then(|v| v.as_bool())
+            .unwrap_or(false);
+        let cfg = ModelConfig {
+            name,
             vocab: need("vocab")?,
             d_model: need("d_model")?,
             n_layers: need("n_layers")?,
-            n_heads: need("n_heads")?,
+            n_heads,
+            n_kv_heads,
             d_ff: need("d_ff")?,
             max_seq: need("max_seq")?,
             rope_base: j
                 .at(&["model", "rope_base"])
                 .and_then(|v| v.as_f64())
                 .context("rope_base")? as f32,
-        })
+            arch: ArchVariant { norm, act, tied_embeddings: tied },
+        };
+        cfg.validate()?;
+        Ok(cfg)
     }
 }
 
@@ -87,9 +208,11 @@ pub const TINY: ModelConfig = ModelConfig {
     d_model: 256,
     n_layers: 4,
     n_heads: 8,
+    n_kv_heads: 8,
     d_ff: 704,
     max_seq: 256,
     rope_base: 10000.0,
+    arch: ArchVariant::LLAMA,
 };
 
 /// Real LLaMA dims (analytic / bench shapes only — no checkpoints here).
@@ -99,9 +222,11 @@ pub const LLAMA_7B: ModelConfig = ModelConfig {
     d_model: 4096,
     n_layers: 32,
     n_heads: 32,
+    n_kv_heads: 32,
     d_ff: 11008,
     max_seq: 2048,
     rope_base: 10000.0,
+    arch: ArchVariant::LLAMA,
 };
 
 pub const LLAMA_13B: ModelConfig = ModelConfig {
@@ -110,9 +235,11 @@ pub const LLAMA_13B: ModelConfig = ModelConfig {
     d_model: 5120,
     n_layers: 40,
     n_heads: 40,
+    n_kv_heads: 40,
     d_ff: 13824,
     max_seq: 2048,
     rope_base: 10000.0,
+    arch: ArchVariant::LLAMA,
 };
 
 pub const LLAMA_30B: ModelConfig = ModelConfig {
@@ -121,9 +248,11 @@ pub const LLAMA_30B: ModelConfig = ModelConfig {
     d_model: 6656,
     n_layers: 60,
     n_heads: 52,
+    n_kv_heads: 52,
     d_ff: 17920,
     max_seq: 2048,
     rope_base: 10000.0,
+    arch: ArchVariant::LLAMA,
 };
 
 #[cfg(test)]
@@ -134,6 +263,9 @@ mod tests {
     fn tiny_matches_python() {
         assert_eq!(TINY.param_count(), 3_475_712); // compile/model.py TINY
         assert_eq!(TINY.head_dim(), 32);
+        assert_eq!(TINY.kv_dim(), TINY.d_model); // MHA: no narrowing
+        assert_eq!(TINY.group_size(), 1);
+        TINY.validate().unwrap();
     }
 
     #[test]
@@ -150,5 +282,71 @@ mod tests {
         // w2 packed ≈ 1/8 of that for the blocks
         let w2 = LLAMA_7B.weight_bytes(2.0);
         assert!(w2 < LLAMA_7B.weight_bytes(16.0) / 6.0);
+    }
+
+    #[test]
+    fn memory_model_pins_llama7b_and_scales_with_gqa() {
+        // Satellite 3 regression: MHA numbers must be *unchanged* by the
+        // kv_dim rewrite. 2 (K+V) * 32 layers * 2048 * 4096 * 2 bytes.
+        assert_eq!(LLAMA_7B.kv_bytes(2048) as u64, 1_073_741_824);
+        // And a GQA sibling divides KV exactly by the group factor while
+        // only shrinking wk/wv in the weight model.
+        let gqa = ModelConfig { name: "llama-7b-gqa8", n_kv_heads: 8, ..LLAMA_7B };
+        gqa.validate().unwrap();
+        assert_eq!(gqa.group_size(), 4);
+        assert_eq!(gqa.kv_bytes(2048) * 4.0, LLAMA_7B.kv_bytes(2048));
+        let shrink = LLAMA_7B.weight_bytes(16.0) - gqa.weight_bytes(16.0);
+        let expect = (2 * (LLAMA_7B.d_model - gqa.kv_dim()) * LLAMA_7B.d_model
+            * LLAMA_7B.n_layers) as f64 * 2.0;
+        assert!((shrink - expect).abs() < 1.0, "{shrink} vs {expect}");
+    }
+
+    #[test]
+    fn tied_embeddings_counted_once() {
+        let tied = ModelConfig {
+            arch: ArchVariant { tied_embeddings: true, ..ArchVariant::LLAMA },
+            ..TINY
+        };
+        assert_eq!(TINY.param_count() - tied.param_count(), TINY.d_model * TINY.vocab);
+        let diff = TINY.weight_bytes(16.0) - tied.weight_bytes(16.0);
+        assert_eq!(diff as u64, (TINY.vocab * TINY.d_model * 2) as u64);
+    }
+
+    #[test]
+    fn manifest_name_round_trip() {
+        // Satellite 1 regression: the name must come from the manifest,
+        // not the old hardcoded "tiny-llama".
+        let man = r#"{"model": {"name": "tiny-gqa", "vocab": 512, "d_model": 256,
+            "n_layers": 4, "n_heads": 8, "n_kv_heads": 2, "d_ff": 704,
+            "max_seq": 256, "rope_base": 10000.0, "norm": "rmsnorm",
+            "act": "silu", "tied_embeddings": false}}"#;
+        let j = crate::util::json::Json::parse(man).unwrap();
+        let cfg = ModelConfig::from_manifest(&j).unwrap();
+        assert_eq!(cfg.name, "tiny-gqa");
+        assert_eq!(cfg.n_kv_heads, 2);
+        assert_eq!(cfg.kv_dim(), 64);
+        assert_eq!(cfg.arch, ArchVariant::LLAMA);
+    }
+
+    #[test]
+    fn manifest_legacy_defaults() {
+        // Old manifests (no name / n_kv_heads / variant fields) must still
+        // load as the MHA LLaMA shape they were written for.
+        let man = r#"{"model": {"vocab": 512, "d_model": 256, "n_layers": 4,
+            "n_heads": 8, "d_ff": 704, "max_seq": 256, "rope_base": 10000.0}}"#;
+        let j = crate::util::json::Json::parse(man).unwrap();
+        let cfg = ModelConfig::from_manifest(&j).unwrap();
+        assert_eq!(cfg.name, "tiny-llama");
+        assert_eq!(cfg, TINY);
+    }
+
+    #[test]
+    fn manifest_rejects_bad_geometry() {
+        let man = r#"{"model": {"vocab": 512, "d_model": 256, "n_layers": 4,
+            "n_heads": 8, "n_kv_heads": 3, "d_ff": 704, "max_seq": 256,
+            "rope_base": 10000.0}}"#;
+        let j = crate::util::json::Json::parse(man).unwrap();
+        let err = ModelConfig::from_manifest(&j).unwrap_err().to_string();
+        assert!(err.contains("not divisible by n_kv_heads"), "{err}");
     }
 }

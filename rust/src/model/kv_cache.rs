@@ -38,10 +38,10 @@ pub trait KvStore {
     /// reserved).
     fn write_row(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]);
 
-    /// Materialize K rows `[0, upto)` of `layer` into `out` `[upto, d_model]`.
+    /// Materialize K rows `[0, upto)` of `layer` into `out` `[upto, kv_dim]`.
     fn gather_k(&self, layer: usize, upto: usize, out: &mut [f32]);
 
-    /// Materialize V rows `[0, upto)` of `layer` into `out` `[upto, d_model]`.
+    /// Materialize V rows `[0, upto)` of `layer` into `out` `[upto, kv_dim]`.
     fn gather_v(&self, layer: usize, upto: usize, out: &mut [f32]);
 
     /// Open a speculative window at the current position: capture whatever
@@ -66,7 +66,9 @@ pub trait KvStore {
     }
 }
 
-/// Contiguous K/V storage for one sequence: `[layer][pos][d_model]`.
+/// Contiguous K/V storage for one sequence: `[layer][pos][kv_dim]`.
+/// Rows are `kv_dim = n_kv_heads * head_dim` wide — equal to `d_model`
+/// for MHA, narrower by the group factor under GQA.
 #[derive(Clone, Debug)]
 pub struct KvCache {
     pub k: Vec<f32>,
@@ -74,43 +76,43 @@ pub struct KvCache {
     pub pos: usize,
     pub n_layers: usize,
     pub max_seq: usize,
-    pub d_model: usize,
+    pub kv_dim: usize,
 }
 
 impl KvCache {
     pub fn new(cfg: &ModelConfig) -> Self {
-        let n = cfg.n_layers * cfg.max_seq * cfg.d_model;
+        let n = cfg.n_layers * cfg.max_seq * cfg.kv_dim();
         KvCache {
             k: vec![0.0; n],
             v: vec![0.0; n],
             pos: 0,
             n_layers: cfg.n_layers,
             max_seq: cfg.max_seq,
-            d_model: cfg.d_model,
+            kv_dim: cfg.kv_dim(),
         }
     }
 
     #[inline]
     pub fn offset(&self, layer: usize, pos: usize) -> usize {
-        (layer * self.max_seq + pos) * self.d_model
+        (layer * self.max_seq + pos) * self.kv_dim
     }
 
     /// Write one position's K/V row for a layer.
     pub fn write(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
         debug_assert!(pos < self.max_seq, "kv overflow");
         let off = self.offset(layer, pos);
-        self.k[off..off + self.d_model].copy_from_slice(k_row);
-        self.v[off..off + self.d_model].copy_from_slice(v_row);
+        self.k[off..off + self.kv_dim].copy_from_slice(k_row);
+        self.v[off..off + self.kv_dim].copy_from_slice(v_row);
     }
 
     pub fn k_row(&self, layer: usize, pos: usize) -> &[f32] {
         let off = self.offset(layer, pos);
-        &self.k[off..off + self.d_model]
+        &self.k[off..off + self.kv_dim]
     }
 
     pub fn v_row(&self, layer: usize, pos: usize) -> &[f32] {
         let off = self.offset(layer, pos);
-        &self.v[off..off + self.d_model]
+        &self.v[off..off + self.kv_dim]
     }
 
     pub fn reset(&mut self) {
@@ -156,13 +158,13 @@ impl KvStore for KvCache {
     }
 
     fn gather_k(&self, layer: usize, upto: usize, out: &mut [f32]) {
-        let base = layer * self.max_seq * self.d_model;
-        out[..upto * self.d_model].copy_from_slice(&self.k[base..base + upto * self.d_model]);
+        let base = layer * self.max_seq * self.kv_dim;
+        out[..upto * self.kv_dim].copy_from_slice(&self.k[base..base + upto * self.kv_dim]);
     }
 
     fn gather_v(&self, layer: usize, upto: usize, out: &mut [f32]) {
-        let base = layer * self.max_seq * self.d_model;
-        out[..upto * self.d_model].copy_from_slice(&self.v[base..base + upto * self.d_model]);
+        let base = layer * self.max_seq * self.kv_dim;
+        out[..upto * self.kv_dim].copy_from_slice(&self.v[base..base + upto * self.kv_dim]);
     }
 }
 
@@ -174,12 +176,12 @@ mod tests {
     #[test]
     fn write_read_roundtrip() {
         let mut c = KvCache::new(&TINY);
-        let k: Vec<f32> = (0..TINY.d_model).map(|i| i as f32).collect();
-        let v: Vec<f32> = (0..TINY.d_model).map(|i| -(i as f32)).collect();
+        let k: Vec<f32> = (0..TINY.kv_dim()).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..TINY.kv_dim()).map(|i| -(i as f32)).collect();
         c.write(2, 5, &k, &v);
         assert_eq!(c.k_row(2, 5), &k[..]);
         assert_eq!(c.v_row(2, 5), &v[..]);
-        assert_eq!(c.k_row(2, 4), vec![0.0; TINY.d_model].as_slice());
+        assert_eq!(c.k_row(2, 4), vec![0.0; TINY.kv_dim()].as_slice());
     }
 
     #[test]
@@ -187,8 +189,8 @@ mod tests {
         // dense stores: truncate is a pure watermark rewind — rows past it
         // are never gathered and the next writes overwrite them in order
         let mut c = KvCache::new(&TINY);
-        let a: Vec<f32> = (0..TINY.d_model).map(|i| i as f32).collect();
-        let b: Vec<f32> = (0..TINY.d_model).map(|i| -(i as f32)).collect();
+        let a: Vec<f32> = (0..TINY.kv_dim()).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..TINY.kv_dim()).map(|i| -(i as f32)).collect();
         c.write(0, 0, &a, &a);
         c.set_pos(1);
         c.begin_speculation();
@@ -196,7 +198,7 @@ mod tests {
         c.set_pos(2);
         c.truncate(1);
         assert_eq!(KvStore::pos(&c), 1);
-        let mut out = vec![0f32; TINY.d_model];
+        let mut out = vec![0f32; TINY.kv_dim()];
         c.gather_k(0, 1, &mut out);
         assert_eq!(out, a);
         // rewrite position 1 with different data, as a real decode would

@@ -1,7 +1,7 @@
 //! Paged, arbitrary-bit quantized KV cache (the serving-side half of the
 //! paper's memory claim): a shared **block pool** from which sequences
 //! lease fixed-size blocks on demand — vLLM-style — instead of reserving a
-//! dense `n_layers × max_seq × d_model` fp32 slab per session.
+//! dense `n_layers × max_seq × kv_dim` fp32 slab per session.
 //!
 //! Two levers convert into admission capacity:
 //!
@@ -92,8 +92,8 @@ impl Default for KvCacheConfig {
 #[derive(Clone, Copy, Debug)]
 struct KvLayout {
     n_layers: usize,
-    d_model: usize,
-    n_heads: usize,
+    kv_dim: usize,
+    n_kv_heads: usize,
     head_dim: usize,
     block_size: usize,
     bits: u8,
@@ -103,8 +103,8 @@ impl KvLayout {
     fn from(m: &ModelConfig, kv: &KvCacheConfig) -> Self {
         KvLayout {
             n_layers: m.n_layers,
-            d_model: m.d_model,
-            n_heads: m.n_heads,
+            kv_dim: m.kv_dim(),
+            n_kv_heads: m.n_kv_heads,
             head_dim: m.head_dim(),
             block_size: kv.block_size,
             bits: kv.bits,
@@ -113,17 +113,17 @@ impl KvLayout {
 
     /// Packed code bytes of one K (or V) row.
     fn row_bytes(&self) -> usize {
-        self.d_model * self.bits as usize / 8
+        self.kv_dim * self.bits as usize / 8
     }
 
     /// Resident bytes of one block: K + V codes plus per-(layer, head)
     /// scales on each side (fp32 blocks carry no scales).
     fn block_bytes(&self) -> usize {
         if self.bits == 32 {
-            2 * self.n_layers * self.block_size * self.d_model * 4
+            2 * self.n_layers * self.block_size * self.kv_dim * 4
         } else {
             2 * self.n_layers * self.block_size * self.row_bytes()
-                + 2 * self.n_layers * self.n_heads * 4
+                + 2 * self.n_layers * self.n_kv_heads * 4
         }
     }
 
@@ -167,21 +167,21 @@ pub struct KvBlock {
 }
 
 enum BlockData {
-    /// passthrough, `[n_layers][block_size][d_model]` per side
+    /// passthrough, `[n_layers][block_size][kv_dim]` per side
     F32 { k: Vec<f32>, v: Vec<f32> },
     /// packed codes `[n_layers][block_size][row_bytes]` per side with
-    /// symmetric per-(layer, head) scales `[n_layers][n_heads]`
+    /// symmetric per-(layer, head) scales `[n_layers][n_kv_heads]`
     Quant { k: Vec<u8>, v: Vec<u8>, k_scale: Vec<f32>, v_scale: Vec<f32> },
 }
 
 impl KvBlock {
     fn new(l: &KvLayout) -> Self {
         let data = if l.bits == 32 {
-            let n = l.n_layers * l.block_size * l.d_model;
+            let n = l.n_layers * l.block_size * l.kv_dim;
             BlockData::F32 { k: vec![0.0; n], v: vec![0.0; n] }
         } else {
             let n = l.n_layers * l.block_size * l.row_bytes();
-            let ns = l.n_layers * l.n_heads;
+            let ns = l.n_layers * l.n_kv_heads;
             BlockData::Quant {
                 k: vec![0; n],
                 v: vec![0; n],
@@ -293,10 +293,10 @@ impl KvBlock {
         let spec = QuantSpec::new(l.bits);
         let zp = 1i32 << (l.bits - 1);
         let qmax_mag = (zp - 1) as f32;
-        for h in 0..l.n_heads {
+        for h in 0..l.n_kv_heads {
             let seg = &row[h * l.head_dim..(h + 1) * l.head_dim];
             let absmax = seg.iter().fold(0f32, |m, &x| m.max(x.abs()));
-            let si = layer * l.n_heads + h;
+            let si = layer * l.n_kv_heads + h;
             let needed = (absmax / qmax_mag).max(1e-8);
             let delta = if idx == 0 {
                 scales[si] = needed;
@@ -330,9 +330,9 @@ impl KvBlock {
     fn write_row(&mut self, l: &KvLayout, layer: usize, idx: usize, k_row: &[f32], v_row: &[f32]) {
         match &mut self.data {
             BlockData::F32 { k, v } => {
-                let off = (layer * l.block_size + idx) * l.d_model;
-                k[off..off + l.d_model].copy_from_slice(k_row);
-                v[off..off + l.d_model].copy_from_slice(v_row);
+                let off = (layer * l.block_size + idx) * l.kv_dim;
+                k[off..off + l.kv_dim].copy_from_slice(k_row);
+                v[off..off + l.kv_dim].copy_from_slice(v_row);
             }
             BlockData::Quant { k, v, k_scale, v_scale } => {
                 Self::write_side(l, k, k_scale, layer, idx, k_row);
@@ -352,9 +352,9 @@ impl KvBlock {
         let zp = 1i32 << (l.bits - 1);
         for r in 0..rows {
             let base = l.row_base(layer, r);
-            let orow = &mut out[r * l.d_model..(r + 1) * l.d_model];
-            for h in 0..l.n_heads {
-                let p = QParams { delta: scales[layer * l.n_heads + h], zp };
+            let orow = &mut out[r * l.kv_dim..(r + 1) * l.kv_dim];
+            for h in 0..l.n_kv_heads {
+                let p = QParams { delta: scales[layer * l.n_kv_heads + h], zp };
                 for j in 0..l.head_dim {
                     let col = h * l.head_dim + j;
                     orow[col] = dequantize_value(get_code(codes, l.bits, base, col), p);
@@ -364,12 +364,12 @@ impl KvBlock {
     }
 
     /// Dequantize the first `rows` K rows of `layer` into `out`
-    /// `[rows, d_model]`.
+    /// `[rows, kv_dim]`.
     fn gather_k(&self, l: &KvLayout, layer: usize, rows: usize, out: &mut [f32]) {
         match &self.data {
             BlockData::F32 { k, .. } => {
-                let off = layer * l.block_size * l.d_model;
-                out[..rows * l.d_model].copy_from_slice(&k[off..off + rows * l.d_model]);
+                let off = layer * l.block_size * l.kv_dim;
+                out[..rows * l.kv_dim].copy_from_slice(&k[off..off + rows * l.kv_dim]);
             }
             BlockData::Quant { k, k_scale, .. } => {
                 Self::gather_side(l, k, k_scale, layer, rows, out)
@@ -380,8 +380,8 @@ impl KvBlock {
     fn gather_v(&self, l: &KvLayout, layer: usize, rows: usize, out: &mut [f32]) {
         match &self.data {
             BlockData::F32 { v, .. } => {
-                let off = layer * l.block_size * l.d_model;
-                out[..rows * l.d_model].copy_from_slice(&v[off..off + rows * l.d_model]);
+                let off = layer * l.block_size * l.kv_dim;
+                out[..rows * l.kv_dim].copy_from_slice(&v[off..off + rows * l.kv_dim]);
             }
             BlockData::Quant { v, v_scale, .. } => {
                 Self::gather_side(l, v, v_scale, layer, rows, out)
@@ -522,8 +522,8 @@ impl KvPool {
     /// `None` defaults to [`DEFAULT_POOL_SEQS`] full sequences.
     pub fn new(m: &ModelConfig, kv: &KvCacheConfig, budget_bytes: Option<usize>) -> Result<Self> {
         kv.validate()?;
-        if kv.bits == 4 && m.d_model % 2 != 0 {
-            bail!("int4 KV pages need an even d_model (got {})", m.d_model);
+        if kv.bits == 4 && m.kv_dim() % 2 != 0 {
+            bail!("int4 KV pages need an even kv_dim (got {})", m.kv_dim());
         }
         let layout = KvLayout::from(m, kv);
         let blocks_per_seq = m.max_seq.div_ceil(kv.block_size);
@@ -821,7 +821,7 @@ impl KvStore for PagedKvCache {
                 break;
             }
             let rows = (upto - p).min(l.block_size);
-            block.block().gather_k(&l, layer, rows, &mut out[p * l.d_model..(p + rows) * l.d_model]);
+            block.block().gather_k(&l, layer, rows, &mut out[p * l.kv_dim..(p + rows) * l.kv_dim]);
             p += rows;
         }
     }
@@ -834,7 +834,7 @@ impl KvStore for PagedKvCache {
                 break;
             }
             let rows = (upto - p).min(l.block_size);
-            block.block().gather_v(&l, layer, rows, &mut out[p * l.d_model..(p + rows) * l.d_model]);
+            block.block().gather_v(&l, layer, rows, &mut out[p * l.kv_dim..(p + rows) * l.kv_dim]);
             p += rows;
         }
     }
@@ -916,7 +916,7 @@ mod tests {
         let pool = KvPool::new(&TINY, &kv(32, 8), None).unwrap();
         let mut c = pool.new_cache();
         c.reserve(20).unwrap();
-        let d = TINY.d_model;
+        let d = TINY.kv_dim();
         for p in 0..20 {
             let (k, v) = (row(p, d, 1.0), row(p + 100, d, 2.0));
             c.write_row(2, p, &k, &v);
@@ -937,7 +937,7 @@ mod tests {
             let pool = KvPool::new(&TINY, &kv(bits, 8), None).unwrap();
             let mut c = pool.new_cache();
             c.reserve(12).unwrap();
-            let d = TINY.d_model;
+            let d = TINY.kv_dim();
             // decreasing magnitude: every per-head scale is fixed by row 0,
             // so the error bound is exactly one quantization step
             let base = row(0, d, 1.5);
@@ -974,7 +974,7 @@ mod tests {
         let pool = KvPool::new(&TINY, &kv(8, 16), None).unwrap();
         let mut c = pool.new_cache();
         c.reserve(2).unwrap();
-        let d = TINY.d_model;
+        let d = TINY.kv_dim();
         let small = vec![0.01f32; d];
         let big = vec![1.0f32; d];
         c.write_row(0, 0, &small, &small);
@@ -1009,7 +1009,7 @@ mod tests {
         let pool = KvPool::new(&TINY, &kv(8, 8), None).unwrap();
         let mut a = pool.new_cache();
         a.reserve(10).unwrap();
-        let d = TINY.d_model;
+        let d = TINY.kv_dim();
         for p in 0..10 {
             let r = row(p, d, 1.0);
             a.write_row(1, p, &r, &r);
@@ -1048,7 +1048,7 @@ mod tests {
     #[test]
     fn prefix_share_and_attach_reuse_whole_blocks() {
         let pool = KvPool::new(&TINY, &kv(8, 4), None).unwrap();
-        let d = TINY.d_model;
+        let d = TINY.kv_dim();
         let mut donor = pool.new_cache();
         donor.reserve(10).unwrap();
         for p in 0..10 {
@@ -1093,7 +1093,7 @@ mod tests {
     fn block_serialization_roundtrips_byte_exactly() {
         for bits in [32u8, 8, 4] {
             let pool = KvPool::new(&TINY, &kv(bits, 4), None).unwrap();
-            let d = TINY.d_model;
+            let d = TINY.kv_dim();
             let mut c = pool.new_cache();
             c.reserve(4).unwrap();
             for p in 0..4 {
@@ -1124,7 +1124,7 @@ mod tests {
         for bits in [32u8, 8, 4] {
             let pool = KvPool::new(&TINY, &kv(bits, 4), None).unwrap();
             let mut c = pool.new_cache();
-            let d = TINY.d_model;
+            let d = TINY.kv_dim();
             c.reserve(6).unwrap();
             for p in 0..6 {
                 let r = row(p, d, 0.05); // small rows → small scales
@@ -1167,7 +1167,7 @@ mod tests {
     fn repeated_speculation_windows_reuse_the_snapshot_buffer() {
         let pool = KvPool::new(&TINY, &kv(8, 4), None).unwrap();
         let mut c = pool.new_cache();
-        let d = TINY.d_model;
+        let d = TINY.kv_dim();
         c.reserve(3).unwrap();
         for p in 0..3 {
             let r = row(p, d, 0.1);

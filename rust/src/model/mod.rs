@@ -1,6 +1,6 @@
-//! Model substrate: LLaMA-family configs, weight loading, the rust-native
-//! transformer over pluggable GEMM backends, KV cache and sampling
-//! (DESIGN.md §5).
+//! Model substrate: architecture configs and the registry of known
+//! families (`zoo`), weight loading, the rust-native transformer over
+//! pluggable GEMM backends, KV cache and sampling (DESIGN.md §5).
 
 pub mod config;
 pub mod kv_cache;
@@ -8,8 +8,9 @@ pub mod kv_pool;
 pub mod sampler;
 pub mod transformer;
 pub mod weights;
+pub mod zoo;
 
-pub use config::{ModelConfig, LLAMA_13B, LLAMA_30B, LLAMA_7B, TINY};
+pub use config::{Activation, ArchVariant, ModelConfig, Norm, LLAMA_13B, LLAMA_30B, LLAMA_7B, TINY};
 pub use kv_cache::{KvCache, KvStore};
 pub use kv_pool::{BlockRef, KvCacheConfig, KvPool, KvPoolStatus, PagedKvCache};
 pub use sampler::{argmax, log_prob, Sampler, Sampling};

@@ -1,8 +1,15 @@
-//! Rust-native LLaMA-family transformer forward over pluggable GEMM
-//! backends. Numerics mirror python `compile/model.py` exactly (RMSNorm
-//! eps, RoPE pairing, SwiGLU, causal softmax), so the fp32 path reproduces
-//! the jax model's perplexity and the ABQ path reproduces the calibrated
+//! Rust-native transformer forward over pluggable GEMM backends.
+//! Numerics mirror python `compile/model.py` exactly (RMSNorm eps, RoPE
+//! pairing, SwiGLU, causal softmax), so the fp32 path reproduces the jax
+//! model's perplexity and the ABQ path reproduces the calibrated
 //! quantized model (parity asserted in rust/tests/).
+//!
+//! Since PR 10 the forward is architecture-parametric, not LLaMA-only:
+//! [`ModelConfig::n_kv_heads`] narrows the K/V projections to
+//! `kv_dim = n_kv_heads * head_dim` (GQA/MQA — query head `h` attends to
+//! KV head `h / group_size`), and [`crate::model::ArchVariant`] selects
+//! RMSNorm vs bias-free LayerNorm, SwiGLU vs GeGLU, and tied vs untied
+//! unembedding. Registry entries live in [`crate::model::zoo`].
 //!
 //! Every projection is a [`crate::engine::LinearOp`] prepared by a
 //! [`crate::engine::LinearBackend`] from the registry — the axis the
@@ -23,7 +30,7 @@ use crate::baselines::gemm_fp32_into;
 use crate::engine::{LinearBackend, LinearOp, LinearScratch, PrepareCtx};
 use crate::quant::CorrectionSet;
 
-use super::config::ModelConfig;
+use super::config::{Activation, ModelConfig, Norm};
 use super::kv_cache::KvStore;
 use super::weights::{PackSource, WeightPack};
 
@@ -63,7 +70,8 @@ pub struct Transformer {
     pub tok_emb: Vec<f32>,
     pub blocks: Vec<Block>,
     pub ln_f: Vec<f32>,
-    /// unembedding stays fp (paper convention: embeddings not quantized)
+    /// unembedding stays fp (paper convention: embeddings not quantized);
+    /// empty when `cfg.arch.tied_embeddings` — see [`Transformer::head_weights`]
     pub head: Vec<f32>,
 }
 
@@ -79,6 +87,29 @@ pub fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32]) {
         for i in 0..d {
             orow[i] = row[i] * r * g[i];
         }
+    }
+}
+
+/// Bias-free LayerNorm (GPT-NeoX-likes): mean-subtract, then the same
+/// rsqrt + gain shape as [`rmsnorm`] (shared 1e-5 eps).
+pub fn layernorm(x: &[f32], g: &[f32], out: &mut [f32]) {
+    let d = g.len();
+    for (row, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let mean: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let r = 1.0 / (var + 1e-5).sqrt();
+        for i in 0..d {
+            orow[i] = (row[i] - mean) * r * g[i];
+        }
+    }
+}
+
+/// Dispatch one normalisation over rows of `x` by the config's [`Norm`].
+#[inline]
+pub fn norm_into(norm: Norm, x: &[f32], g: &[f32], out: &mut [f32]) {
+    match norm {
+        Norm::RmsNorm => rmsnorm(x, g, out),
+        Norm::LayerNorm => layernorm(x, g, out),
     }
 }
 
@@ -114,12 +145,22 @@ pub fn rope_tables_into(
     }
 }
 
-/// Apply RoPE in place to `x` `[len, d_model]` seen as `[len, H, hd]`.
-pub fn apply_rope(x: &mut [f32], cfg: &ModelConfig, cos: &[f32], sin: &[f32], len: usize) {
-    let (d, hd) = (cfg.d_model, cfg.head_dim());
+/// Apply RoPE in place to `x` `[len, heads * hd]` seen as `[len, heads, hd]`.
+/// `heads` is explicit because Q rows carry `n_heads` heads while K rows
+/// carry only `n_kv_heads` under GQA — the row stride follows it.
+pub fn apply_rope(
+    x: &mut [f32],
+    cfg: &ModelConfig,
+    cos: &[f32],
+    sin: &[f32],
+    len: usize,
+    heads: usize,
+) {
+    let hd = cfg.head_dim();
+    let d = heads * hd;
     let half = hd / 2;
     for p in 0..len {
-        for h in 0..cfg.n_heads {
+        for h in 0..heads {
             let base = p * d + h * hd;
             for i in 0..half {
                 let c = cos[p * half + i];
@@ -135,6 +176,20 @@ pub fn apply_rope(x: &mut [f32], cfg: &ModelConfig, cos: &[f32], sin: &[f32], le
 
 pub(crate) fn silu(v: f32) -> f32 {
     v / (1.0 + (-v).exp())
+}
+
+/// Tanh-approximated GELU (the GeGLU gate of NeoX-style variants).
+pub(crate) fn gelu(v: f32) -> f32 {
+    0.5 * v * (1.0 + (0.7978845608f32 * (v + 0.044715 * v * v * v)).tanh())
+}
+
+/// Dispatch the GLU gate activation by the config's [`Activation`].
+#[inline]
+pub(crate) fn act_gate(act: Activation, v: f32) -> f32 {
+    match act {
+        Activation::SiLu => silu(v),
+        Activation::Gelu => gelu(v),
+    }
 }
 
 pub(crate) fn softmax_inplace(row: &mut [f32]) {
@@ -234,14 +289,14 @@ pub struct ForwardScratch {
     scores: Vec<f32>,
     /// gathered (dequantized) K/V pages for one (layer, sequence) — the
     /// paged read path materializes here; grown on demand to the largest
-    /// attention span seen (≤ `[max_seq, d_model]`), not pre-sized
+    /// attention span seen (≤ `[max_seq, kv_dim]`), not pre-sized
     kpage: Vec<f32>,
     vpage: Vec<f32>,
     /// RoPE tables `[tokens, hd/2]`
     cos: Vec<f32>,
     sin: Vec<f32>,
     /// staged fp32 K/V rows of the last [`Transformer::verify_step`],
-    /// `[n_layers, stage_len, d_model]` — re-committed into the cache by
+    /// `[n_layers, stage_len, kv_dim]` — re-committed into the cache by
     /// [`Transformer::commit_verified`] for the accepted prefix only
     kstage: Vec<f32>,
     vstage: Vec<f32>,
@@ -262,12 +317,13 @@ impl ForwardScratch {
     /// arena has seen the largest shape this allocates nothing.
     fn ensure(&mut self, tokens: usize, cfg: &ModelConfig) {
         let (d, d_ff) = (cfg.d_model, cfg.d_ff);
+        let kd = cfg.kv_dim();
         let half = cfg.head_dim() / 2;
         self.x.resize(tokens * d, 0.0);
         self.h.resize(tokens * d, 0.0);
         self.q.resize(tokens * d, 0.0);
-        self.k.resize(tokens * d, 0.0);
-        self.v.resize(tokens * d, 0.0);
+        self.k.resize(tokens * kd, 0.0);
+        self.v.resize(tokens * kd, 0.0);
         self.ctx.resize(tokens * d, 0.0);
         self.proj.resize(tokens * d, 0.0);
         self.gate.resize(tokens * d_ff, 0.0);
@@ -321,9 +377,16 @@ impl Transformer {
         backend: &dyn LinearBackend,
         corrections: Option<&CorrectionSet>,
     ) -> Result<Self> {
+        cfg.validate()?;
         let tok_emb = src.f32("tok_emb")?.into_owned();
         let ln_f = src.f32("ln_f")?.into_owned();
-        let head = src.f32("head")?.into_owned();
+        // tied-embedding packs carry no `head` tensor; the unembedding
+        // reads `tok_emb` through `head_weights()`
+        let head = if cfg.arch.tied_embeddings {
+            Vec::new()
+        } else {
+            src.f32("head")?.into_owned()
+        };
         let mut blocks = Vec::with_capacity(cfg.n_layers);
         for i in 0..cfg.n_layers {
             let get_lin = |name: &str| -> Result<Box<dyn LinearOp>> {
@@ -381,15 +444,21 @@ impl Transformer {
         seed: u64,
         corrections: Option<&CorrectionSet>,
     ) -> Result<Self> {
+        cfg.validate()?;
         let rng = std::cell::RefCell::new(crate::util::rng::SplitMix::new(seed));
         let d = cfg.d_model;
+        let kd = cfg.kv_dim();
         let dense = |out_f: usize, in_f: usize| -> Vec<f32> {
             let scale = 1.0 / (in_f as f32).sqrt();
             let mut r = rng.borrow_mut();
             (0..out_f * in_f).map(|_| r.next_f32_centered() * 2.0 * scale).collect()
         };
         let tok_emb: Vec<f32> = dense(cfg.vocab, d).iter().map(|v| v * 0.08).collect();
-        let head: Vec<f32> = dense(cfg.vocab, d).iter().map(|v| v * 0.08).collect();
+        let head: Vec<f32> = if cfg.arch.tied_embeddings {
+            Vec::new()
+        } else {
+            dense(cfg.vocab, d).iter().map(|v| v * 0.08).collect()
+        };
         let mut blocks = Vec::with_capacity(cfg.n_layers);
         for li in 0..cfg.n_layers {
             let mk = |w: Vec<f32>, out_f: usize, in_f: usize, name: &str| -> Result<Box<dyn LinearOp>> {
@@ -409,8 +478,8 @@ impl Transformer {
                 ln1: vec![1.0; d],
                 ln2: vec![1.0; d],
                 wq: mk(dense(d, d), d, d, "wq")?,
-                wk: mk(dense(d, d), d, d, "wk")?,
-                wv: mk(dense(d, d), d, d, "wv")?,
+                wk: mk(dense(kd, d), kd, d, "wk")?,
+                wv: mk(dense(kd, d), kd, d, "wv")?,
                 wo: mk(dense(d, d), d, d, "wo")?,
                 gate: mk(dense(cfg.d_ff, d), cfg.d_ff, d, "gate")?,
                 up: mk(dense(cfg.d_ff, d), cfg.d_ff, d, "up")?,
@@ -492,6 +561,8 @@ impl Transformer {
         // reserve is the single capacity check (max_seq + pool coverage)
         cache.reserve(s_len)?;
         let (d, hd, nh) = (self.cfg.d_model, self.cfg.head_dim(), self.cfg.n_heads);
+        let (kd, group) = (self.cfg.kv_dim(), self.cfg.group_size());
+        let norm = self.cfg.arch.norm;
         let pos0 = cache.pos();
         s.ensure(s_len, &self.cfg);
         rope_tables_into(&self.cfg, pos0, s_len, &mut s.cos, &mut s.sin);
@@ -504,7 +575,7 @@ impl Transformer {
                 tr.input.clear();
                 tr.input.extend_from_slice(&s.x);
             }
-            rmsnorm(&s.x, &blk.ln1, &mut s.h);
+            norm_into(norm, &s.x, &blk.ln1, &mut s.h);
             if let Some(tp) = tap.as_deref_mut() {
                 let tr = &mut tp.blocks[li];
                 tr.ln1_out.clear();
@@ -513,29 +584,31 @@ impl Transformer {
             blk.wq.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.q);
             blk.wk.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.k);
             blk.wv.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.v);
-            apply_rope(&mut s.q, &self.cfg, &s.cos, &s.sin, s_len);
-            apply_rope(&mut s.k, &self.cfg, &s.cos, &s.sin, s_len);
+            apply_rope(&mut s.q, &self.cfg, &s.cos, &s.sin, s_len, nh);
+            apply_rope(&mut s.k, &self.cfg, &s.cos, &s.sin, s_len, self.cfg.n_kv_heads);
             for t in 0..s_len {
-                cache.write_row(li, pos0 + t, &s.k[t * d..(t + 1) * d], &s.v[t * d..(t + 1) * d]);
+                cache.write_row(li, pos0 + t, &s.k[t * kd..(t + 1) * kd], &s.v[t * kd..(t + 1) * kd]);
             }
             // causal attention over the gathered pages [0, pos0+t] —
             // quantized K/V round-trips through the page codes here, so
             // attention sees exactly what the cache retains
             let keys_all = pos0 + s_len;
-            if s.kpage.len() < keys_all * d {
-                s.kpage.resize(keys_all * d, 0.0);
-                s.vpage.resize(keys_all * d, 0.0);
+            if s.kpage.len() < keys_all * kd {
+                s.kpage.resize(keys_all * kd, 0.0);
+                s.vpage.resize(keys_all * kd, 0.0);
             }
-            cache.gather_k(li, keys_all, &mut s.kpage[..keys_all * d]);
-            cache.gather_v(li, keys_all, &mut s.vpage[..keys_all * d]);
+            cache.gather_k(li, keys_all, &mut s.kpage[..keys_all * kd]);
+            cache.gather_v(li, keys_all, &mut s.vpage[..keys_all * kd]);
             s.ctx.fill(0.0);
             for t in 0..s_len {
                 let keys = pos0 + t + 1;
                 for hh in 0..nh {
+                    // GQA head-group broadcast: query head hh reads KV head hh/group
+                    let kvh = hh / group;
                     let qv = &s.q[t * d + hh * hd..t * d + (hh + 1) * hd];
                     let scores = &mut s.scores[..keys];
                     for (kp, sc) in scores.iter_mut().enumerate() {
-                        let kv = &s.kpage[kp * d + hh * hd..kp * d + (hh + 1) * hd];
+                        let kv = &s.kpage[kp * kd + kvh * hd..kp * kd + (kvh + 1) * hd];
                         *sc = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
                     }
                     if let Some(tp) = tap.as_deref_mut() {
@@ -547,7 +620,7 @@ impl Transformer {
                     softmax_inplace(scores);
                     let crow = &mut s.ctx[t * d + hh * hd..t * d + (hh + 1) * hd];
                     for (kp, &a) in scores.iter().enumerate() {
-                        let vv = &s.vpage[kp * d + hh * hd..kp * d + (hh + 1) * hd];
+                        let vv = &s.vpage[kp * kd + kvh * hd..kp * kd + (kvh + 1) * hd];
                         for i in 0..hd {
                             crow[i] += a * vv[i];
                         }
@@ -563,7 +636,7 @@ impl Transformer {
             for i in 0..s.x.len() {
                 s.x[i] += s.proj[i];
             }
-            rmsnorm(&s.x, &blk.ln2, &mut s.h);
+            norm_into(norm, &s.x, &blk.ln2, &mut s.h);
             if let Some(tp) = tap.as_deref_mut() {
                 let tr = &mut tp.blocks[li];
                 tr.ln2_out.clear();
@@ -572,7 +645,7 @@ impl Transformer {
             blk.gate.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.gate);
             blk.up.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.up);
             for i in 0..s.act.len() {
-                s.act[i] = silu(s.gate[i]) * s.up[i];
+                s.act[i] = act_gate(self.cfg.arch.act, s.gate[i]) * s.up[i];
             }
             if let Some(tp) = tap.as_deref_mut() {
                 let tr = &mut tp.blocks[li];
@@ -590,9 +663,9 @@ impl Transformer {
             }
         }
         cache.set_pos(pos0 + s_len);
-        rmsnorm(&s.x, &self.ln_f, &mut s.h);
+        norm_into(norm, &s.x, &self.ln_f, &mut s.h);
         let mut logits = vec![0f32; s_len * self.cfg.vocab];
-        gemm_fp32_into(&s.h, &self.head, s_len, self.cfg.vocab, d, &mut logits);
+        gemm_fp32_into(&s.h, self.head_weights(), s_len, self.cfg.vocab, d, &mut logits);
         Ok(logits)
     }
 
@@ -624,6 +697,8 @@ impl Transformer {
             bail!("batch size mismatch");
         }
         let (d, hd, nh) = (self.cfg.d_model, self.cfg.head_dim(), self.cfg.n_heads);
+        let (kd, group) = (self.cfg.kv_dim(), self.cfg.group_size());
+        let norm = self.cfg.arch.norm;
         let half = hd / 2;
         let scale = 1.0 / (hd as f32).sqrt();
         s.ensure(b, &self.cfg);
@@ -645,38 +720,46 @@ impl Transformer {
         }
 
         for (li, blk) in self.blocks.iter().enumerate() {
-            rmsnorm(&s.x, &blk.ln1, &mut s.h);
+            norm_into(norm, &s.x, &blk.ln1, &mut s.h);
             blk.wq.forward_scratch(&s.h, b, &mut s.lin, &mut s.q);
             blk.wk.forward_scratch(&s.h, b, &mut s.lin, &mut s.k);
             blk.wv.forward_scratch(&s.h, b, &mut s.lin, &mut s.v);
             for bi in 0..b {
                 let (cos, sin) =
                     (&s.cos[bi * half..(bi + 1) * half], &s.sin[bi * half..(bi + 1) * half]);
-                apply_rope(&mut s.q[bi * d..(bi + 1) * d], &self.cfg, cos, sin, 1);
-                apply_rope(&mut s.k[bi * d..(bi + 1) * d], &self.cfg, cos, sin, 1);
+                apply_rope(&mut s.q[bi * d..(bi + 1) * d], &self.cfg, cos, sin, 1, nh);
+                apply_rope(
+                    &mut s.k[bi * kd..(bi + 1) * kd],
+                    &self.cfg,
+                    cos,
+                    sin,
+                    1,
+                    self.cfg.n_kv_heads,
+                );
             }
             s.ctx.fill(0.0);
             for (bi, cache) in caches.iter_mut().enumerate() {
                 let pos = cache.pos();
-                cache.write_row(li, pos, &s.k[bi * d..(bi + 1) * d], &s.v[bi * d..(bi + 1) * d]);
+                cache.write_row(li, pos, &s.k[bi * kd..(bi + 1) * kd], &s.v[bi * kd..(bi + 1) * kd]);
                 let keys = pos + 1;
-                if s.kpage.len() < keys * d {
-                    s.kpage.resize(keys * d, 0.0);
-                    s.vpage.resize(keys * d, 0.0);
+                if s.kpage.len() < keys * kd {
+                    s.kpage.resize(keys * kd, 0.0);
+                    s.vpage.resize(keys * kd, 0.0);
                 }
-                cache.gather_k(li, keys, &mut s.kpage[..keys * d]);
-                cache.gather_v(li, keys, &mut s.vpage[..keys * d]);
+                cache.gather_k(li, keys, &mut s.kpage[..keys * kd]);
+                cache.gather_v(li, keys, &mut s.vpage[..keys * kd]);
                 for hh in 0..nh {
+                    let kvh = hh / group;
                     let qv = &s.q[bi * d + hh * hd..bi * d + (hh + 1) * hd];
                     let scores = &mut s.scores[..keys];
                     for (kp, sc) in scores.iter_mut().enumerate() {
-                        let kv = &s.kpage[kp * d + hh * hd..kp * d + (hh + 1) * hd];
+                        let kv = &s.kpage[kp * kd + kvh * hd..kp * kd + (kvh + 1) * hd];
                         *sc = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
                     }
                     softmax_inplace(scores);
                     let crow = &mut s.ctx[bi * d + hh * hd..bi * d + (hh + 1) * hd];
                     for (kp, &a) in scores.iter().enumerate() {
-                        let vv = &s.vpage[kp * d + hh * hd..kp * d + (hh + 1) * hd];
+                        let vv = &s.vpage[kp * kd + kvh * hd..kp * kd + (kvh + 1) * hd];
                         for i in 0..hd {
                             crow[i] += a * vv[i];
                         }
@@ -687,11 +770,11 @@ impl Transformer {
             for i in 0..s.x.len() {
                 s.x[i] += s.proj[i];
             }
-            rmsnorm(&s.x, &blk.ln2, &mut s.h);
+            norm_into(norm, &s.x, &blk.ln2, &mut s.h);
             blk.gate.forward_scratch(&s.h, b, &mut s.lin, &mut s.gate);
             blk.up.forward_scratch(&s.h, b, &mut s.lin, &mut s.up);
             for i in 0..s.act.len() {
-                s.act[i] = silu(s.gate[i]) * s.up[i];
+                s.act[i] = act_gate(self.cfg.arch.act, s.gate[i]) * s.up[i];
             }
             blk.down.forward_scratch(&s.act, b, &mut s.lin, &mut s.proj);
             for i in 0..s.x.len() {
@@ -702,9 +785,9 @@ impl Transformer {
             let p = cache.pos();
             cache.set_pos(p + 1);
         }
-        rmsnorm(&s.x, &self.ln_f, &mut s.h);
+        norm_into(norm, &s.x, &self.ln_f, &mut s.h);
         let mut logits = vec![0f32; b * self.cfg.vocab];
-        gemm_fp32_into(&s.h, &self.head, b, self.cfg.vocab, d, &mut logits);
+        gemm_fp32_into(&s.h, self.head_weights(), b, self.cfg.vocab, d, &mut logits);
         Ok(logits)
     }
 
@@ -740,10 +823,12 @@ impl Transformer {
         cache.reserve(s_len)?;
         cache.begin_speculation();
         let (d, hd, nh) = (self.cfg.d_model, self.cfg.head_dim(), self.cfg.n_heads);
+        let (kd, group) = (self.cfg.kv_dim(), self.cfg.group_size());
+        let norm = self.cfg.arch.norm;
         let pos0 = cache.pos();
         s.ensure(s_len, &self.cfg);
-        s.kstage.resize(self.cfg.n_layers * s_len * d, 0.0);
-        s.vstage.resize(self.cfg.n_layers * s_len * d, 0.0);
+        s.kstage.resize(self.cfg.n_layers * s_len * kd, 0.0);
+        s.vstage.resize(self.cfg.n_layers * s_len * kd, 0.0);
         s.stage_pos0 = pos0;
         s.stage_len = s_len;
         rope_tables_into(&self.cfg, pos0, s_len, &mut s.cos, &mut s.sin);
@@ -751,16 +836,16 @@ impl Transformer {
         let scale = 1.0 / (hd as f32).sqrt();
 
         for (li, blk) in self.blocks.iter().enumerate() {
-            rmsnorm(&s.x, &blk.ln1, &mut s.h);
+            norm_into(norm, &s.x, &blk.ln1, &mut s.h);
             blk.wq.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.q);
             blk.wk.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.k);
             blk.wv.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.v);
-            apply_rope(&mut s.q, &self.cfg, &s.cos, &s.sin, s_len);
-            apply_rope(&mut s.k, &self.cfg, &s.cos, &s.sin, s_len);
+            apply_rope(&mut s.q, &self.cfg, &s.cos, &s.sin, s_len, nh);
+            apply_rope(&mut s.k, &self.cfg, &s.cos, &s.sin, s_len, self.cfg.n_kv_heads);
             let keys_all = pos0 + s_len;
-            if s.kpage.len() < keys_all * d {
-                s.kpage.resize(keys_all * d, 0.0);
-                s.vpage.resize(keys_all * d, 0.0);
+            if s.kpage.len() < keys_all * kd {
+                s.kpage.resize(keys_all * kd, 0.0);
+                s.vpage.resize(keys_all * kd, 0.0);
             }
             s.ctx.fill(0.0);
             for t in 0..s_len {
@@ -768,26 +853,27 @@ impl Transformer {
                 // its own position — the exact write/read interleaving of
                 // sequential decode, so quantized page scales grow (and
                 // requantize) identically
-                let krow = &s.k[t * d..(t + 1) * d];
-                let vrow = &s.v[t * d..(t + 1) * d];
-                let stg = (li * s_len + t) * d;
-                s.kstage[stg..stg + d].copy_from_slice(krow);
-                s.vstage[stg..stg + d].copy_from_slice(vrow);
+                let krow = &s.k[t * kd..(t + 1) * kd];
+                let vrow = &s.v[t * kd..(t + 1) * kd];
+                let stg = (li * s_len + t) * kd;
+                s.kstage[stg..stg + kd].copy_from_slice(krow);
+                s.vstage[stg..stg + kd].copy_from_slice(vrow);
                 cache.write_row(li, pos0 + t, krow, vrow);
                 let keys = pos0 + t + 1;
-                cache.gather_k(li, keys, &mut s.kpage[..keys * d]);
-                cache.gather_v(li, keys, &mut s.vpage[..keys * d]);
+                cache.gather_k(li, keys, &mut s.kpage[..keys * kd]);
+                cache.gather_v(li, keys, &mut s.vpage[..keys * kd]);
                 for hh in 0..nh {
+                    let kvh = hh / group;
                     let qv = &s.q[t * d + hh * hd..t * d + (hh + 1) * hd];
                     let scores = &mut s.scores[..keys];
                     for (kp, sc) in scores.iter_mut().enumerate() {
-                        let kv = &s.kpage[kp * d + hh * hd..kp * d + (hh + 1) * hd];
+                        let kv = &s.kpage[kp * kd + kvh * hd..kp * kd + (kvh + 1) * hd];
                         *sc = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
                     }
                     softmax_inplace(scores);
                     let crow = &mut s.ctx[t * d + hh * hd..t * d + (hh + 1) * hd];
                     for (kp, &a) in scores.iter().enumerate() {
-                        let vv = &s.vpage[kp * d + hh * hd..kp * d + (hh + 1) * hd];
+                        let vv = &s.vpage[kp * kd + kvh * hd..kp * kd + (kvh + 1) * hd];
                         for i in 0..hd {
                             crow[i] += a * vv[i];
                         }
@@ -798,11 +884,11 @@ impl Transformer {
             for i in 0..s.x.len() {
                 s.x[i] += s.proj[i];
             }
-            rmsnorm(&s.x, &blk.ln2, &mut s.h);
+            norm_into(norm, &s.x, &blk.ln2, &mut s.h);
             blk.gate.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.gate);
             blk.up.forward_scratch(&s.h, s_len, &mut s.lin, &mut s.up);
             for i in 0..s.act.len() {
-                s.act[i] = silu(s.gate[i]) * s.up[i];
+                s.act[i] = act_gate(self.cfg.arch.act, s.gate[i]) * s.up[i];
             }
             blk.down.forward_scratch(&s.act, s_len, &mut s.lin, &mut s.proj);
             for i in 0..s.x.len() {
@@ -810,9 +896,9 @@ impl Transformer {
             }
         }
         cache.set_pos(pos0 + s_len);
-        rmsnorm(&s.x, &self.ln_f, &mut s.h);
+        norm_into(norm, &s.x, &self.ln_f, &mut s.h);
         let mut logits = vec![0f32; s_len * self.cfg.vocab];
-        gemm_fp32_into(&s.h, &self.head, s_len, self.cfg.vocab, d, &mut logits);
+        gemm_fp32_into(&s.h, self.head_weights(), s_len, self.cfg.vocab, d, &mut logits);
         Ok(logits)
     }
 
@@ -841,22 +927,34 @@ impl Transformer {
                 pos0 + slen
             );
         }
-        let d = self.cfg.d_model;
+        let kd = self.cfg.kv_dim();
         cache.truncate(pos0);
         cache.reserve(accepted)?;
         for t in 0..accepted {
             // per position, layers in order — the exact write order of one
             // sequential decode step
             for li in 0..self.cfg.n_layers {
-                let off = (li * slen + t) * d;
-                cache.write_row(li, pos0 + t, &s.kstage[off..off + d], &s.vstage[off..off + d]);
+                let off = (li * slen + t) * kd;
+                cache.write_row(li, pos0 + t, &s.kstage[off..off + kd], &s.vstage[off..off + kd]);
             }
         }
         cache.set_pos(pos0 + accepted);
         Ok(())
     }
 
-    /// Total block-weight bytes (Table 12 memory accounting).
+    /// The unembedding matrix `[vocab, d_model]`: the dedicated `head`
+    /// tensor, or `tok_emb` when the architecture ties them.
+    #[inline]
+    pub fn head_weights(&self) -> &[f32] {
+        if self.cfg.arch.tied_embeddings {
+            &self.tok_emb
+        } else {
+            &self.head
+        }
+    }
+
+    /// Total block-weight bytes (Table 12 memory accounting). A tied
+    /// embedding is counted once (`head` is empty then).
     pub fn weight_bytes(&self) -> usize {
         let blocks: usize = self
             .blocks
@@ -884,9 +982,11 @@ mod tests {
         d_model: 16,
         n_layers: 2,
         n_heads: 2,
+        n_kv_heads: 2,
         d_ff: 32,
         max_seq: 16,
         rope_base: 10000.0,
+        arch: crate::model::config::ArchVariant::LLAMA,
     };
 
     #[test]

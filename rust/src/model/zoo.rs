@@ -1,0 +1,213 @@
+//! The model zoo: a registry of known architectures, the way precision
+//! backends are registered in `engine/` (ROADMAP item 1). Each entry is a
+//! complete [`ModelConfig`] — servable end-to-end with random weights via
+//! `--arch <name>`, or matched against a checkpoint manifest by name —
+//! plus the family metadata the CLI reports.
+//!
+//! Entries span the axes the forward is parametric over:
+//!
+//! * **attention** — MHA (`n_kv_heads == n_heads`), GQA, MQA
+//!   (`n_kv_heads == 1`); GQA divides KV bytes per token by
+//!   `group_size()`, which multiplies paged-pool admission capacity on
+//!   top of KV quantization (`tests/prop_zoo.rs` pins the floor);
+//! * **variant** — RMSNorm/LayerNorm, SwiGLU/GeGLU, tied/untied
+//!   unembedding ([`crate::model::ArchVariant`]).
+//!
+//! Adding an architecture = adding one [`ZooEntry`] here (and, for real
+//! checkpoints, emitting the same fields from the Python manifest
+//! writer). `docs/ENGINE_API.md` §"Model zoo" walks through it.
+
+use super::config::{ArchVariant, Activation, ModelConfig, Norm};
+
+/// Model family, for reporting and for loader-side expectations (a
+/// `NeoxLike` entry has no `head` tensor in its pack, etc.).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// RMSNorm + SwiGLU + untied head (LLaMA, Mistral, …)
+    LlamaLike,
+    /// LayerNorm + GeGLU + tied embeddings (GPT-NeoX-likes)
+    NeoxLike,
+}
+
+/// One registry entry: a servable architecture description.
+#[derive(Clone, Copy, Debug)]
+pub struct ZooEntry {
+    pub cfg: ModelConfig,
+    pub family: Family,
+    /// one-line description for `abq-llm info` / serve banners
+    pub description: &'static str,
+}
+
+impl ZooEntry {
+    pub fn name(&self) -> &'static str {
+        self.cfg.name
+    }
+}
+
+/// Tiny GQA sibling of [`super::config::TINY`]: same residual width and
+/// depth, but 8 query heads share 2 KV heads (group factor 4), so KV rows
+/// are `kv_dim = 64` instead of 256. Servable end-to-end with random
+/// weights; the parity/admission tests in `tests/prop_zoo.rs` run on it.
+pub const TINY_GQA: ModelConfig = ModelConfig {
+    name: "tiny-gqa",
+    vocab: 512,
+    d_model: 256,
+    n_layers: 4,
+    n_heads: 8,
+    n_kv_heads: 2,
+    d_ff: 704,
+    max_seq: 256,
+    rope_base: 10000.0,
+    arch: ArchVariant::LLAMA,
+};
+
+/// Tiny MQA extreme: all 8 query heads share one KV head (`kv_dim = 32`).
+pub const TINY_MQA: ModelConfig = ModelConfig {
+    name: "tiny-mqa",
+    vocab: 512,
+    d_model: 256,
+    n_layers: 4,
+    n_heads: 8,
+    n_kv_heads: 1,
+    d_ff: 704,
+    max_seq: 256,
+    rope_base: 10000.0,
+    arch: ArchVariant::LLAMA,
+};
+
+/// Tiny GPT-NeoX-like: bias-free LayerNorm, GeGLU gate, tied embeddings —
+/// the non-LLaMA variant exercising every [`ArchVariant`] axis at once,
+/// with GQA attention on top.
+pub const TINY_NEOX: ModelConfig = ModelConfig {
+    name: "tiny-neox",
+    vocab: 512,
+    d_model: 256,
+    n_layers: 4,
+    n_heads: 8,
+    n_kv_heads: 2,
+    d_ff: 704,
+    max_seq: 256,
+    rope_base: 10000.0,
+    arch: ArchVariant {
+        norm: Norm::LayerNorm,
+        act: Activation::Gelu,
+        tied_embeddings: true,
+    },
+};
+
+/// LLaMA-2-70B dims (GQA in production: 64 query heads over 8 KV heads) —
+/// analytic/bench shapes only, like the other `LLAMA_*` consts.
+pub const LLAMA2_70B: ModelConfig = ModelConfig {
+    name: "llama2-70b",
+    vocab: 32000,
+    d_model: 8192,
+    n_layers: 80,
+    n_heads: 64,
+    n_kv_heads: 8,
+    d_ff: 28672,
+    max_seq: 4096,
+    rope_base: 10000.0,
+    arch: ArchVariant::LLAMA,
+};
+
+/// Every registered architecture. Order is stable (CLI listings).
+pub fn entries() -> &'static [ZooEntry] {
+    const ENTRIES: &[ZooEntry] = &[
+        ZooEntry {
+            cfg: super::config::TINY,
+            family: Family::LlamaLike,
+            description: "tiny trained LLaMA-shape (MHA), the end-to-end checkpoint",
+        },
+        ZooEntry {
+            cfg: TINY_GQA,
+            family: Family::LlamaLike,
+            description: "tiny GQA: 8 query heads over 2 KV heads (4x KV shrink)",
+        },
+        ZooEntry {
+            cfg: TINY_MQA,
+            family: Family::LlamaLike,
+            description: "tiny MQA: 8 query heads over 1 KV head (8x KV shrink)",
+        },
+        ZooEntry {
+            cfg: TINY_NEOX,
+            family: Family::NeoxLike,
+            description: "tiny GPT-NeoX-like: LayerNorm + GeGLU + tied embeddings, GQA",
+        },
+        ZooEntry {
+            cfg: super::config::LLAMA_7B,
+            family: Family::LlamaLike,
+            description: "LLaMA-7B dims (analytic / bench shapes)",
+        },
+        ZooEntry {
+            cfg: super::config::LLAMA_13B,
+            family: Family::LlamaLike,
+            description: "LLaMA-13B dims (analytic / bench shapes)",
+        },
+        ZooEntry {
+            cfg: super::config::LLAMA_30B,
+            family: Family::LlamaLike,
+            description: "LLaMA-30B dims (analytic / bench shapes)",
+        },
+        ZooEntry {
+            cfg: LLAMA2_70B,
+            family: Family::LlamaLike,
+            description: "LLaMA-2-70B dims with production GQA (64q over 8kv)",
+        },
+    ];
+    ENTRIES
+}
+
+/// Look an architecture up by name.
+pub fn lookup(name: &str) -> Option<&'static ZooEntry> {
+    entries().iter().find(|e| e.cfg.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_validates_and_names_are_unique() {
+        let es = entries();
+        for e in es {
+            e.cfg.validate().unwrap_or_else(|err| panic!("{}: {err}", e.name()));
+        }
+        for (i, a) in es.iter().enumerate() {
+            for b in &es[i + 1..] {
+                assert_ne!(a.name(), b.name(), "duplicate zoo name");
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_finds_registered_and_rejects_unknown() {
+        assert_eq!(lookup("tiny-gqa").unwrap().cfg, TINY_GQA);
+        assert_eq!(lookup("tiny-gqa").unwrap().cfg.group_size(), 4);
+        assert!(lookup("no-such-model").is_none());
+    }
+
+    #[test]
+    fn gqa_entries_shrink_kv_by_group_factor() {
+        let mha = lookup("tiny-llama").unwrap().cfg;
+        let gqa = TINY_GQA;
+        let mqa = TINY_MQA;
+        assert_eq!(mha.kv_bytes(128) / gqa.kv_bytes(128), 4.0);
+        assert_eq!(mha.kv_bytes(128) / mqa.kv_bytes(128), 8.0);
+        // llama2-70b: 64/8 = 8x narrower KV than an MHA model of its width
+        assert_eq!(LLAMA2_70B.group_size(), 8);
+        assert_eq!(LLAMA2_70B.kv_dim(), 1024);
+    }
+
+    #[test]
+    fn family_matches_variant() {
+        for e in entries() {
+            match e.family {
+                Family::LlamaLike => assert_eq!(e.cfg.arch, ArchVariant::LLAMA, "{}", e.name()),
+                Family::NeoxLike => {
+                    assert_eq!(e.cfg.arch.norm, Norm::LayerNorm, "{}", e.name());
+                    assert!(e.cfg.arch.tied_embeddings, "{}", e.name());
+                }
+            }
+        }
+    }
+}

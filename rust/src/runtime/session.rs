@@ -5,9 +5,9 @@
 //! `to_bytes`, strict magic/truncation checks.
 //!
 //! ```text
-//! magic  b"ABQS1\0"
+//! magic  b"ABQS2\0"
 //! u16    model_len, model name (utf-8)
-//! u32    vocab, d_model, n_layers, n_heads, d_ff, max_seq
+//! u32    vocab, d_model, n_layers, n_heads, n_kv_heads, d_ff, max_seq
 //! f32    rope_base
 //! u16    tag_len, backend tag (utf-8, e.g. "w2sa8")
 //! u8     kv_bits
@@ -22,6 +22,11 @@
 //! mismatch would silently corrupt attention. Token/page consistency
 //! (`n_tokens == n_pages × kv_block`, i.e. whole pages only) is a format
 //! invariant enforced by the parser.
+//!
+//! Version history: `ABQS1` predates GQA and has no `n_kv_heads` field —
+//! its page geometry is ambiguous for any model with `n_kv_heads <
+//! n_heads`, so v1 files are rejected with an explicit version error
+//! (re-export the prefix to upgrade) rather than guessed at.
 
 use std::io::Read;
 use std::path::Path;
@@ -39,6 +44,9 @@ pub struct SessionFingerprint {
     pub d_model: usize,
     pub n_layers: usize,
     pub n_heads: usize,
+    /// KV heads (GQA): sizes the page rows (`kv_dim = n_kv_heads * head_dim`),
+    /// so two checkpoints differing only here must never false-match
+    pub n_kv_heads: usize,
     pub d_ff: usize,
     pub max_seq: usize,
     pub rope_base: f32,
@@ -56,6 +64,7 @@ impl SessionFingerprint {
             d_model: m.d_model,
             n_layers: m.n_layers,
             n_heads: m.n_heads,
+            n_kv_heads: m.n_kv_heads,
             d_ff: m.d_ff,
             max_seq: m.max_seq,
             rope_base: m.rope_base,
@@ -101,7 +110,14 @@ impl SessionFile {
             let n = u16::from_le_bytes(take(pos, 2)?.try_into()?) as usize;
             Ok(String::from_utf8(take(pos, n)?.to_vec())?)
         };
-        if take(&mut pos, 6)? != b"ABQS1\0" {
+        let magic = take(&mut pos, 6)?;
+        if magic == b"ABQS1\0" {
+            bail!(
+                "old .abqs version ABQS1 (pre-GQA, no n_kv_heads in the fingerprint): \
+                 re-export the session with this engine to upgrade"
+            );
+        }
+        if magic != b"ABQS2\0" {
             bail!("bad magic (not an .abqs session file)");
         }
         let model = take_str(&mut pos)?;
@@ -109,6 +125,7 @@ impl SessionFile {
         let d_model = take_u32(&mut pos)? as usize;
         let n_layers = take_u32(&mut pos)? as usize;
         let n_heads = take_u32(&mut pos)? as usize;
+        let n_kv_heads = take_u32(&mut pos)? as usize;
         let d_ff = take_u32(&mut pos)? as usize;
         let max_seq = take_u32(&mut pos)? as usize;
         let rope_base = f32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
@@ -121,6 +138,7 @@ impl SessionFile {
             d_model,
             n_layers,
             n_heads,
+            n_kv_heads,
             d_ff,
             max_seq,
             rope_base,
@@ -155,13 +173,13 @@ impl SessionFile {
     /// given content — the round-trip tests compare these bytes).
     pub fn to_bytes(&self) -> Vec<u8> {
         let fp = &self.fingerprint;
-        let mut b: Vec<u8> = b"ABQS1\0".to_vec();
+        let mut b: Vec<u8> = b"ABQS2\0".to_vec();
         let put_str = |b: &mut Vec<u8>, s: &str| {
             b.extend((s.len() as u16).to_le_bytes());
             b.extend(s.as_bytes());
         };
         put_str(&mut b, &fp.model);
-        for d in [fp.vocab, fp.d_model, fp.n_layers, fp.n_heads, fp.d_ff, fp.max_seq] {
+        for d in [fp.vocab, fp.d_model, fp.n_layers, fp.n_heads, fp.n_kv_heads, fp.d_ff, fp.max_seq] {
             b.extend((d as u32).to_le_bytes());
         }
         b.extend(fp.rope_base.to_le_bytes());
@@ -210,6 +228,29 @@ mod tests {
         let back = SessionFile::parse(&bytes).unwrap();
         assert_eq!(back, s);
         assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn rejects_old_version_with_explicit_error() {
+        // a v1 file (same layout minus n_kv_heads) must fail on its magic
+        // with a message naming the version, not a generic parse error
+        let mut v1 = sample().to_bytes();
+        v1[..6].copy_from_slice(b"ABQS1\0");
+        let err = SessionFile::parse(&v1).unwrap_err().to_string();
+        assert!(err.contains("ABQS1"), "{err}");
+        assert!(err.contains("re-export"), "{err}");
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_kv_heads() {
+        // two checkpoints differing only in n_kv_heads write different
+        // page geometry — they must never false-match
+        let kv = KvCacheConfig { bits: 8, block_size: 4 };
+        let mha = SessionFingerprint::of(&TINY, "w2sa8", &kv);
+        let mut gqa_cfg = TINY;
+        gqa_cfg.n_kv_heads = 2;
+        let gqa = SessionFingerprint::of(&gqa_cfg, "w2sa8", &kv);
+        assert_ne!(mha, gqa);
     }
 
     #[test]

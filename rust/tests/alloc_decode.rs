@@ -88,9 +88,11 @@ fn steady_state_decode_does_not_allocate() {
         d_model: 32,
         n_layers: 2,
         n_heads: 4,
+        n_kv_heads: 4,
         d_ff: 64,
         max_seq: 128,
         rope_base: 10000.0,
+        arch: abq_llm::model::ArchVariant::LLAMA,
     };
     let engine = EngineBuilder::new()
         .random_weights(MICRO, 9)

@@ -20,9 +20,11 @@ const MICRO: ModelConfig = ModelConfig {
     d_model: 16,
     n_layers: 1,
     n_heads: 2,
+    n_kv_heads: 2,
     d_ff: 32,
     max_seq: 48,
     rope_base: 10000.0,
+    arch: abq_llm::model::ArchVariant::LLAMA,
 };
 
 fn qr(id: u64, plen: usize, max_new: usize) -> QueuedRequest {

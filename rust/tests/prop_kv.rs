@@ -18,9 +18,11 @@ const MICRO: ModelConfig = ModelConfig {
     d_model: 16,
     n_layers: 2,
     n_heads: 2,
+    n_kv_heads: 2,
     d_ff: 32,
     max_seq: 48,
     rope_base: 10000.0,
+    arch: abq_llm::model::ArchVariant::LLAMA,
 };
 
 #[test]
@@ -228,7 +230,7 @@ impl PerturbedKv {
     }
 
     fn perturb(&self, side: u64, eps: &[f32], layer: usize, upto: usize, out: &mut [f32]) {
-        let d = self.inner.d_model;
+        let d = self.inner.kv_dim;
         for p in 0..upto {
             for c in 0..d {
                 let e = eps[layer * (d / self.head_dim) + c / self.head_dim];

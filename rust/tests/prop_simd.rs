@@ -156,9 +156,11 @@ const MICRO: ModelConfig = ModelConfig {
     d_model: 16,
     n_layers: 2,
     n_heads: 2,
+    n_kv_heads: 2,
     d_ff: 32,
     max_seq: 16,
     rope_base: 10000.0,
+    arch: abq_llm::model::ArchVariant::LLAMA,
 };
 
 fn micro_engine(spec: &str) -> Box<dyn InferenceEngine> {
